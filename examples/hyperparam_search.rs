@@ -1,0 +1,105 @@
+//! The paper's §VI headline use case: hyperparameter search — 28
+//! independent SGD training jobs over the same dataset — run three ways:
+//!
+//! 1. CPU baseline (parallel std::threads, the Xeon/POWER9 analogue);
+//! 2. FPGA engine fleet (14 engines × 2 rounds, replicated placement,
+//!    simulated device timing);
+//! 3. the winning configuration re-trained through the AOT-compiled HLO
+//!    artifact on the PJRT runtime to confirm the selected model.
+//!
+//! Run: `make artifacts && cargo run --release --example hyperparam_search`
+
+use hbm_analytics::cpu;
+use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
+use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
+
+fn main() -> anyhow::Result<()> {
+    // A scaled IM-like problem (2048 features, binary labels) so the
+    // functional search finishes in seconds; rates in `hbmctl figures
+    // --fig 10a` use the same machinery at larger scale.
+    let spec = DatasetSpec {
+        name: "im-mini",
+        samples: 1024,
+        features: 256,
+        task: TaskKind::Binary,
+        epochs: 5,
+    };
+    println!("dataset: {} ({} x {})", spec.name, spec.samples, spec.features);
+    let d = spec.generate(13);
+    let grid = cpu::sgd::hyperparameter_grid(spec.task.glm(), 16, spec.epochs);
+    println!("grid: {} configurations", grid.len());
+
+    // ---- 1. CPU search.
+    let t0 = std::time::Instant::now();
+    let cpu_results = cpu::sgd::search(&d.features, &d.labels, spec.features, &grid, 8);
+    let best_cpu = cpu_results
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "CPU search:  best config #{} (alpha={}, lambda={}) loss {:.5} \
+         [{:?} host]",
+        best_cpu.0,
+        grid[best_cpu.0].alpha,
+        grid[best_cpu.0].lambda,
+        best_cpu.1,
+        t0.elapsed()
+    );
+
+    // ---- 2. FPGA fleet (replicated placement).
+    let mut acc = FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
+    let (models, timing) = acc.offload_sgd(&d.features, &d.labels, spec.features, &grid);
+    let mut best_fpga = (0usize, f64::INFINITY);
+    for (i, model) in models.iter().enumerate() {
+        let loss = cpu::sgd::loss(&d.features, &d.labels, spec.features, model, &grid[i]);
+        if loss < best_fpga.1 {
+            best_fpga = (i, loss);
+        }
+    }
+    println!(
+        "FPGA fleet:  best config #{} loss {:.5} \
+         [simulated: copy-in {:.1} ms + exec {:.1} ms + copy-out {:.2} ms]",
+        best_fpga.0,
+        best_fpga.1,
+        timing.copy_in * 1e3,
+        timing.exec * 1e3,
+        timing.copy_out * 1e3,
+    );
+    assert_eq!(best_cpu.0, best_fpga.0, "both paths must pick the same winner");
+    let copy_fraction = timing.copy_in / timing.total();
+    println!(
+        "copy-in is {:.1}% of total (paper: <1% at 10 epochs x 28 jobs on IM)",
+        copy_fraction * 100.0
+    );
+
+    // ---- 3. Confirm the winner through the PJRT runtime (tiny artifact
+    //         shape; the full Table-II artifacts work identically).
+    match Runtime::from_default_dir() {
+        Ok(mut rt) => {
+            let tiny = DatasetSpec {
+                name: "tiny",
+                samples: 256,
+                features: 32,
+                task: TaskKind::Binary,
+                epochs: 5,
+            }
+            .generate(14);
+            let exec = SgdEpochExecutor::new(
+                &mut rt,
+                "sgd_epoch_tiny_logistic_b16",
+                &tiny.features,
+                &tiny.labels,
+            )?;
+            let mut params = grid[best_fpga.0].clone();
+            params.epochs = 5;
+            let (model, _) = exec.train(&mut rt, &params)?;
+            let loss = cpu::sgd::loss(&tiny.features, &tiny.labels, 32, &model, &params);
+            println!("runtime confirmation (HLO path, tiny shape): loss {loss:.5}");
+        }
+        Err(e) => eprintln!("runtime skipped (build artifacts first): {e:#}"),
+    }
+    println!("hyperparam_search OK");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. Microbenchmark the simulated HBM (the paper's Fig. 2 sweep);
+//! 2. Offload a range selection to the 14-engine FPGA model and compare
+//!    against the CPU baseline;
+//! 3. Train a GLM through the AOT-compiled HLO artifacts on the PJRT
+//!    runtime (Python never runs here — `make artifacts` already did).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use hbm_analytics::cpu;
+use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::engines::sgd::SgdHyperParams;
+use hbm_analytics::hbm::{fig2_sweep, FabricClock, HbmConfig};
+use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
+use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
+use hbm_analytics::workloads::SelectionWorkload;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. HBM microbenchmark -----------------------------------------
+    println!("== HBM bandwidth vs address separation (32 ports, 200 MHz) ==");
+    let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+    for (_, sep, gbs) in fig2_sweep(&cfg, &[32], &[256, 128, 64, 0]) {
+        println!("  separation {sep:>3} MiB -> {gbs:>6.1} GB/s");
+    }
+
+    // ---- 2. FPGA-offloaded selection ------------------------------------
+    println!("\n== range selection: FPGA engines vs CPU ==");
+    let w = SelectionWorkload::uniform(4_000_000, 0.05, 42);
+    let mut acc = FpgaAccelerator::new(cfg.clone()).resident();
+    let (fpga_idx, timing) = acc.offload_select(&w.data, w.lo, w.hi);
+    let mut cpu_idx = cpu::selection::range_select(&w.data, w.lo, w.hi, 8);
+    cpu_idx.sort_unstable();
+    assert_eq!(fpga_idx, cpu_idx, "FPGA and CPU must agree");
+    let gbs = (w.data.len() * 4) as f64 / timing.exec / 1e9;
+    println!(
+        "  {} matches of {} items; simulated device rate {gbs:.1} GB/s \
+         (paper: 154 GB/s at 14 engines)",
+        fpga_idx.len(),
+        w.data.len()
+    );
+
+    // ---- 3. HLO-compiled SGD on the PJRT runtime ------------------------
+    println!("\n== SGD through AOT artifacts (PJRT CPU) ==");
+    let spec = DatasetSpec {
+        name: "tiny",
+        samples: 256,
+        features: 32,
+        task: TaskKind::Regression,
+        epochs: 10,
+    };
+    let d = spec.generate(7);
+    let mut rt = match Runtime::from_default_dir() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("  artifacts not built ({e:#}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    println!("  platform: {}", rt.platform());
+    let exec =
+        SgdEpochExecutor::new(&mut rt, "sgd_epoch_tiny_ridge_b16", &d.features, &d.labels)?;
+    let params = SgdHyperParams {
+        task: exec.task,
+        alpha: 0.05,
+        lambda: 0.0,
+        minibatch: 16,
+        epochs: 10,
+    };
+    let (model, history) = exec.train(&mut rt, &params)?;
+    let first = cpu::sgd::loss(&d.features, &d.labels, 32, &history[0], &params);
+    let last = cpu::sgd::loss(&d.features, &d.labels, 32, &model, &params);
+    println!("  loss epoch 1: {first:.5} -> epoch 10: {last:.5}");
+    assert!(last < first, "training must descend");
+    println!("\nquickstart OK");
+    Ok(())
+}

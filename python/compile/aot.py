@@ -1,0 +1,130 @@
+"""AOT compiler: lower the Layer-2 model to HLO text artifacts for the
+Rust runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+
+  sgd_epoch_<name>_b<B>.hlo.txt   one epoch of minibatch SGD for each
+                                  Table II dataset shape x minibatch size
+  sgd_epoch_tiny_{ridge,logistic}_b16.hlo.txt   small shapes for tests
+  select_mask.hlo.txt             the range-selection kernel (1 block)
+
+plus `manifest.tsv`: one artifact per line,
+  name \t file \t kind \t m \t n \t minibatch \t task
+which the Rust artifact registry parses (no serde in the offline crate
+set, so the manifest is TSV rather than JSON).
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import select as select_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# (name, samples, features, task, minibatches) — Table II shapes plus the
+# tiny test shapes. IM gets B in {1, 4, 16} for Fig. 11; everything else
+# uses the paper's default B = 16.
+SGD_SHAPES = [
+    ("im", 41600, 2048, model.LOGISTIC, (1, 4, 16)),
+    ("mnist", 50000, 784, model.LOGISTIC, (16,)),
+    ("aea", 32768, 126, model.LOGISTIC, (16,)),
+    ("syn", 262144, 256, model.RIDGE, (16,)),
+    ("tiny_ridge", 256, 32, model.RIDGE, (16,)),
+    ("tiny_logistic", 256, 32, model.LOGISTIC, (16,)),
+]
+
+TASK_NAMES = {model.RIDGE: "ridge", model.LOGISTIC: "logistic"}
+
+
+def lower_sgd_epoch(m, n, minibatch, task):
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((n,), f32)
+    feats = jax.ShapeDtypeStruct((m, n), f32)
+    labels = jax.ShapeDtypeStruct((m,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+
+    def fn(x, feats, labels, alpha, lam):
+        return (
+            model.sgd_epoch(
+                x, feats, labels, alpha, lam, minibatch=minibatch, task=task
+            ),
+        )
+
+    return jax.jit(fn).lower(x, feats, labels, scalar, scalar)
+
+
+def lower_select(items):
+    data = jax.ShapeDtypeStruct((items,), jnp.int32)
+    bound = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(data, lo, hi):
+        mask, counts = select_kernel.range_select_mask(data, lo, hi)
+        return (mask, counts)
+
+    return jax.jit(fn).lower(data, bound, bound)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the tiny test artifacts (fast CI)",
+    )
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+
+    shapes = SGD_SHAPES if not args.quick else [s for s in SGD_SHAPES if "tiny" in s[0]]
+    for name, m, n, task, batches in shapes:
+        for b in batches:
+            art = f"sgd_epoch_{name}_b{b}"
+            path = os.path.join(args.out_dir, art + ".hlo.txt")
+            text = to_hlo_text(lower_sgd_epoch(m, n, b, task))
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(
+                (art, art + ".hlo.txt", "sgd_epoch", m, n, b, TASK_NAMES[task])
+            )
+            print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    items = select_kernel.BLOCK * 4
+    art = "select_mask"
+    path = os.path.join(args.out_dir, art + ".hlo.txt")
+    text = to_hlo_text(lower_select(items))
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append((art, art + ".hlo.txt", "select", items, 0, 0, "-"))
+    print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        for row in manifest:
+            f.write("\t".join(str(c) for c in row) + "\n")
+    print(f"{len(manifest)} artifacts -> {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels — the build-time
+correctness signal (pytest compares kernel outputs against these).
+
+Definitions mirror Algorithm 1 (selection) and Algorithm 3 (SGD) of the
+paper, and rust/src/engines/{selection,sgd}.rs on the coordinator side.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+RIDGE = 0
+LOGISTIC = 1
+
+
+def sgd_minibatch_ref(x, a, b, alpha, lam, task=RIDGE):
+    """One minibatch SGD step, straight-line jnp (no pallas)."""
+    x = jnp.asarray(x, jnp.float32)
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    dot = a @ x
+    pred = 1.0 / (1.0 + jnp.exp(-dot)) if task == LOGISTIC else dot
+    d = pred - b
+    g = d @ a
+    bsz = jnp.float32(a.shape[0])
+    return x - alpha * (g / bsz) - alpha * 2.0 * lam * x
+
+
+def sgd_epoch_ref(x, features, labels, alpha, lam, minibatch, task=RIDGE):
+    """Full epoch over row-major features, minibatch at a time (numpy)."""
+    x = np.asarray(x, np.float32).copy()
+    features = np.asarray(features, np.float32)
+    labels = np.asarray(labels, np.float32)
+    m = labels.shape[0]
+    for s in range(0, (m // minibatch) * minibatch, minibatch):
+        a = features[s : s + minibatch]
+        b = labels[s : s + minibatch]
+        dot = a @ x
+        pred = (1.0 / (1.0 + np.exp(-dot))) if task == LOGISTIC else dot
+        d = (pred - b).astype(np.float32)
+        g = d @ a
+        x = (x - alpha * (g / np.float32(minibatch)) - alpha * 2.0 * lam * x).astype(
+            np.float32
+        )
+    return x
+
+
+def glm_loss_ref(x, features, labels, lam, task=RIDGE):
+    """Regularized training loss (Eq. 1), float64 numpy."""
+    z = np.asarray(features, np.float64) @ np.asarray(x, np.float64)
+    b = np.asarray(labels, np.float64)
+    if task == LOGISTIC:
+        per = np.logaddexp(0.0, z) - b * z
+    else:
+        per = 0.5 * (z - b) ** 2
+    reg = lam * float(np.dot(np.asarray(x, np.float64), np.asarray(x, np.float64)))
+    return float(np.mean(per) + reg)
+
+
+def range_select_ref(data, lo, hi):
+    """Match mask + indexes, numpy."""
+    data = np.asarray(data)
+    mask = ((data >= lo) & (data <= hi)).astype(np.int32)
+    idx = np.nonzero(mask)[0].astype(np.int32)
+    return mask, idx

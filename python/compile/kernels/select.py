@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: the 16-lane range-selection core (paper Fig. 4).
+
+The FPGA ingress pipeline compares 16 values per cycle against [lo, hi]
+and buffers matching indexes per lane. TPU mapping (DESIGN.md
+`§Hardware-Adaptation`): a tiled compare over VMEM blocks producing a
+match mask and a per-block match count; the block index map is the
+direct analogue of the per-engine channel partitioning (tile i reads HBM
+slice i). Compaction of the mask into an index list is an XLA-side
+stable-sort gather — on the FPGA this is the egress assemble stage.
+
+interpret=True for CPU-PJRT executability (see kernels/sgd.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Items per grid block: one "engine chunk" (BUFFER_SIZE x PARALLELISM on
+# the FPGA = 16384 items).
+BLOCK = 16384
+
+
+def _select_kernel(lo_ref, hi_ref, data_ref, mask_ref, count_ref):
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    v = data_ref[...]
+    m = jnp.logical_and(v >= lo, v <= hi)
+    mask_ref[...] = m.astype(jnp.int32)
+    count_ref[0] = jnp.sum(m.astype(jnp.int32))
+
+
+@jax.jit
+def range_select_mask(data, lo, hi):
+    """Blocked range selection.
+
+    Args:
+      data: (m,) int32 column, m a multiple of BLOCK (callers pad).
+      lo, hi: inclusive range bounds, int32 scalars or shape-(1,) arrays.
+
+    Returns:
+      mask: (m,) int32 0/1 match mask.
+      counts: (m // BLOCK,) int32 per-block match counts.
+    """
+    m = data.shape[0]
+    assert m % BLOCK == 0, f"pad input to a multiple of {BLOCK}"
+    nblocks = m // BLOCK
+    lo = jnp.asarray(lo, jnp.int32).reshape((1,))
+    hi = jnp.asarray(hi, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _select_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # lo broadcast to all blocks
+            pl.BlockSpec((1,), lambda i: (0,)),  # hi
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.int32),
+        ],
+        interpret=True,
+    )(lo, hi, data)
+
+
+@jax.jit
+def compact_indexes(mask):
+    """Egress stage: mask -> padded index list.
+
+    Returns the indexes of set mask bits first (in order), padded with -1
+    to the input length — a stable partition, which is what the FPGA's
+    assemble stage streams out (modulo its per-lane padding layout).
+    """
+    m = mask.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    matched = jnp.where(mask > 0, idx, -1)
+    key = jnp.where(mask > 0, 0, 1).astype(jnp.int32)
+    perm = jnp.argsort(key, stable=True)
+    return matched[perm]

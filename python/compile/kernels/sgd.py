@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: the SGD minibatch pipeline of the paper's Fig. 9.
+
+The FPGA engine is a Dot -> ScalarEngine -> Update dataflow pipeline over
+16-float lines with the model vector x held on-chip (URAM). The TPU
+rethink (DESIGN.md `§Hardware-Adaptation`): one fused kernel per minibatch
+that keeps x in VMEM, computes the B dot products on the VPU's (8, 128)
+lanes (the minibatch maps to the sublane dimension), applies the scalar
+nonlinearity, and applies the rank-1 (rank-B) gradient update — one VMEM
+round-trip where a naive HLO graph would take three. The RAW dependency
+the paper preserves (update before the next minibatch's dots) is the
+sequential grid dimension in :func:`sgd_epoch_kernel`'s caller
+(`model.sgd_epoch` scans minibatches in order).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and the AOT HLO must run everywhere. See
+/opt/xla-example/README.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tasks (mirror rust/src/engines/sgd.rs GlmTask).
+RIDGE = 0
+LOGISTIC = 1
+
+
+def _minibatch_kernel(task, x_ref, a_ref, b_ref, alpha_ref, lam_ref, out_ref):
+    """One minibatch update, entirely in VMEM.
+
+    x_ref:     (n,)   current model
+    a_ref:     (B, n) minibatch features
+    b_ref:     (B,)   minibatch labels
+    alpha_ref: (1,)   step size
+    lam_ref:   (1,)   L2 regularization
+    out_ref:   (n,)   updated model
+    """
+    x = x_ref[...]
+    a = a_ref[...]
+    b = b_ref[...]
+    alpha = alpha_ref[0]
+    lam = lam_ref[0]
+    # Dot module: B dot products on the vector unit.
+    dot = a @ x  # (B,)
+    # ScalarEngine: residual (with the task's nonlinearity).
+    if task == LOGISTIC:
+        pred = 1.0 / (1.0 + jnp.exp(-dot))
+    else:
+        pred = dot
+    d = pred - b  # (B,)
+    # Update module: g = a^T d (rank-B update), then the model step with
+    # L2 shrinkage — Algorithm 3 line 7.
+    g = d @ a  # (n,)
+    bsz = jnp.asarray(a.shape[0], dtype=x.dtype)
+    out_ref[...] = x - alpha * (g / bsz) - alpha * 2.0 * lam * x
+
+
+@functools.partial(jax.jit, static_argnames=("task",))
+def sgd_minibatch(x, a, b, alpha, lam, *, task=RIDGE):
+    """Apply one minibatch SGD step via the Pallas kernel.
+
+    Args:
+      x: (n,) f32 model.
+      a: (B, n) f32 minibatch features.
+      b: (B,) f32 labels.
+      alpha, lam: scalars (passed as shape-(1,) arrays).
+      task: RIDGE or LOGISTIC (static).
+
+    Returns: (n,) f32 updated model.
+    """
+    n = x.shape[0]
+    alpha = jnp.asarray(alpha, jnp.float32).reshape((1,))
+    lam = jnp.asarray(lam, jnp.float32).reshape((1,))
+    kernel = functools.partial(_minibatch_kernel, task)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, a, b, alpha, lam)

@@ -1,0 +1,72 @@
+"""Layer-2 JAX model: minibatch-SGD training epoch for generalized linear
+models (the paper's Algorithm 3), calling the Layer-1 Pallas kernel.
+
+One `sgd_epoch` = a `lax.scan` over minibatches in sample order, carrying
+the model vector — the scan's sequential carry IS the paper's preserved
+read-after-write dependency (§VI: no stale updates). `aot.py` lowers this
+function, shape-specialized per dataset and minibatch size, to HLO text
+the Rust runtime executes.
+
+Performance notes (L2 optimization pass, see EXPERIMENTS.md §Perf):
+  * scan (not a Python loop / unroll) keeps the HLO compact and lets XLA
+    pipeline the minibatch bodies;
+  * features are reshaped once to (n_batches, B, n) outside the scan —
+    no per-step dynamic slicing of the full dataset;
+  * hyperparameters (alpha, lambda) are runtime scalars, so one artifact
+    serves the entire hyperparameter grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import sgd as sgd_kernel
+
+RIDGE = sgd_kernel.RIDGE
+LOGISTIC = sgd_kernel.LOGISTIC
+
+
+@functools.partial(jax.jit, static_argnames=("minibatch", "task"))
+def sgd_epoch(x, features, labels, alpha, lam, *, minibatch, task):
+    """One epoch of minibatch SGD.
+
+    Args:
+      x: (n,) f32 model (carry).
+      features: (m, n) f32; the tail m % minibatch samples are skipped,
+        exactly like the Rust engine's final short batch policy when
+        shapes are pre-aligned (workload generators emit aligned m).
+      labels: (m,) f32.
+      alpha, lam: f32 scalars.
+      minibatch: static B.
+      task: RIDGE or LOGISTIC (static).
+
+    Returns: (n,) f32 updated model.
+    """
+    m, n = features.shape
+    nb = m // minibatch
+    a_batches = features[: nb * minibatch].reshape(nb, minibatch, n)
+    b_batches = labels[: nb * minibatch].reshape(nb, minibatch)
+
+    def step(carry, ab):
+        a, b = ab
+        carry = sgd_kernel.sgd_minibatch(carry, a, b, alpha, lam, task=task)
+        return carry, ()
+
+    x, _ = jax.lax.scan(step, x, (a_batches, b_batches))
+    return x
+
+
+def make_loss(task):
+    """Regularized training loss (Eq. 1) as a jitted closure."""
+
+    @jax.jit
+    def loss(x, features, labels, lam):
+        z = features @ x
+        if task == LOGISTIC:
+            per = jnp.logaddexp(0.0, z) - labels * z
+        else:
+            per = 0.5 * (z - labels) ** 2
+        return jnp.mean(per) + lam * jnp.dot(x, x)
+
+    return loss

@@ -1,0 +1,68 @@
+"""L2 correctness: the scan-based epoch vs the per-minibatch numpy loop."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_problem(rng, m, n):
+    truth = rng.uniform(-1, 1, n).astype(np.float32)
+    feats = rng.uniform(-1, 1, (m, n)).astype(np.float32)
+    labels = (feats @ truth + 0.01 * rng.standard_normal(m)).astype(np.float32)
+    return feats, labels
+
+
+@pytest.mark.parametrize("task", [model.RIDGE, model.LOGISTIC])
+@pytest.mark.parametrize("minibatch", [1, 4, 16])
+def test_epoch_matches_ref(task, minibatch):
+    rng = np.random.default_rng(7)
+    feats, labels = make_problem(rng, 128, 24)
+    if task == model.LOGISTIC:
+        labels = (labels > 0).astype(np.float32)
+    x0 = np.zeros(24, np.float32)
+    got = np.asarray(
+        model.sgd_epoch(
+            x0, feats, labels, np.float32(0.1), np.float32(1e-3),
+            minibatch=minibatch, task=task,
+        )
+    )
+    want = ref.sgd_epoch_ref(x0, feats, labels, 0.1, 1e-3, minibatch, task)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([32, 48, 130]),  # 130: non-multiple-of-B tail
+    n=st.sampled_from([8, 33]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_epoch_swept(m, n, seed):
+    rng = np.random.default_rng(seed)
+    feats, labels = make_problem(rng, m, n)
+    x0 = rng.uniform(-0.1, 0.1, n).astype(np.float32)
+    got = np.asarray(
+        model.sgd_epoch(
+            x0, feats, labels, np.float32(0.05), np.float32(0.0),
+            minibatch=16, task=model.RIDGE,
+        )
+    )
+    want = ref.sgd_epoch_ref(x0, feats, labels, 0.05, 0.0, 16, model.RIDGE)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+def test_multi_epoch_training_converges():
+    rng = np.random.default_rng(11)
+    feats, labels = make_problem(rng, 256, 32)
+    loss = model.make_loss(model.RIDGE)
+    x = np.zeros(32, np.float32)
+    l0 = float(loss(x, feats, labels, np.float32(0.0)))
+    for _ in range(20):
+        x = model.sgd_epoch(
+            x, feats, labels, np.float32(0.05), np.float32(0.0),
+            minibatch=16, task=model.RIDGE,
+        )
+    l1 = float(loss(np.asarray(x), feats, labels, np.float32(0.0)))
+    assert l1 < 0.02 * l0, (l0, l1)

@@ -1,0 +1,63 @@
+"""L1 correctness: the Pallas range-selection kernel vs the numpy oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import select as k
+
+
+def run(data, lo, hi):
+    mask, counts = k.range_select_mask(data.astype(np.int32), lo, hi)
+    return np.asarray(mask), np.asarray(counts)
+
+
+def test_basic_mask_and_counts():
+    data = np.arange(k.BLOCK * 2, dtype=np.int32)
+    mask, counts = run(data, 10, 19)
+    want_mask, want_idx = ref.range_select_ref(data, 10, 19)
+    np.testing.assert_array_equal(mask, want_mask)
+    assert counts.sum() == 10
+    assert counts.shape == (2,)
+    # All matches are in block 0.
+    assert counts[0] == 10 and counts[1] == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    lo=st.integers(0, 1000),
+    span=st.integers(0, 1000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_swept_against_ref(blocks, lo, span, seed):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 1200, blocks * k.BLOCK).astype(np.int32)
+    mask, counts = run(data, lo, lo + span)
+    want_mask, want_idx = ref.range_select_ref(data, lo, lo + span)
+    np.testing.assert_array_equal(mask, want_mask)
+    # Per-block counts partition the total.
+    assert counts.sum() == want_idx.shape[0]
+    for i in range(blocks):
+        blk = mask[i * k.BLOCK : (i + 1) * k.BLOCK]
+        assert counts[i] == blk.sum()
+
+
+def test_compact_indexes_matches_nonzero():
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 100, k.BLOCK).astype(np.int32)
+    mask, _ = run(data, 0, 49)
+    padded = np.asarray(k.compact_indexes(mask))
+    _, want_idx = ref.range_select_ref(data, 0, 49)
+    got = padded[padded >= 0]
+    np.testing.assert_array_equal(got, want_idx)
+    # Padding is -1 and trails the matches.
+    assert (padded[len(got):] == -1).all()
+
+
+def test_empty_and_full_selectivity():
+    data = np.arange(k.BLOCK, dtype=np.int32)
+    mask, counts = run(data, 10, 9)  # empty range
+    assert mask.sum() == 0 and counts.sum() == 0
+    mask, counts = run(data, 0, k.BLOCK)  # everything
+    assert mask.sum() == k.BLOCK and counts[0] == k.BLOCK

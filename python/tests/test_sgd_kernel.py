@@ -1,0 +1,66 @@
+"""L1 correctness: the Pallas SGD kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and hyperparameters; the kernel must match the
+oracle to f32 tolerance for both tasks.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import sgd as k
+
+
+def make_case(rng, batch, n):
+    x = rng.uniform(-1, 1, n).astype(np.float32)
+    a = rng.uniform(-1, 1, (batch, n)).astype(np.float32)
+    b = rng.uniform(-1, 1, batch).astype(np.float32)
+    return x, a, b
+
+
+@pytest.mark.parametrize("task", [k.RIDGE, k.LOGISTIC])
+def test_matches_ref_basic(task):
+    rng = np.random.default_rng(0)
+    x, a, b = make_case(rng, 16, 64)
+    got = k.sgd_minibatch(x, a, b, 0.1, 1e-3, task=task)
+    want = ref.sgd_minibatch_ref(x, a, b, 0.1, 1e-3, task=task)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.sampled_from([1, 2, 4, 8, 16]),
+    n=st.sampled_from([1, 7, 16, 126, 256]),
+    alpha=st.floats(1e-4, 0.5),
+    lam=st.floats(0.0, 0.1),
+    task=st.sampled_from([k.RIDGE, k.LOGISTIC]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_swept(batch, n, alpha, lam, task, seed):
+    rng = np.random.default_rng(seed)
+    x, a, b = make_case(rng, batch, n)
+    got = np.asarray(k.sgd_minibatch(x, a, b, alpha, lam, task=task))
+    want = np.asarray(ref.sgd_minibatch_ref(x, a, b, alpha, lam, task=task))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_zero_step_is_identity_up_to_reg():
+    rng = np.random.default_rng(1)
+    x, a, b = make_case(rng, 8, 32)
+    got = np.asarray(k.sgd_minibatch(x, a, b, 0.0, 0.5, task=k.RIDGE))
+    np.testing.assert_allclose(got, x, atol=1e-7)
+
+
+def test_descends_ridge_loss():
+    rng = np.random.default_rng(2)
+    n = 32
+    truth = rng.uniform(-1, 1, n).astype(np.float32)
+    a = rng.uniform(-1, 1, (16, n)).astype(np.float32)
+    b = (a @ truth).astype(np.float32)
+    x = np.zeros(n, np.float32)
+    before = float(np.mean((a @ x - b) ** 2))
+    for _ in range(300):
+        x = np.asarray(k.sgd_minibatch(x, a, b, 0.1, 0.0, task=k.RIDGE))
+    after = float(np.mean((a @ x - b) ** 2))
+    assert after < before * 0.01, (before, after)

@@ -1,0 +1,35 @@
+//! Bench: Fig. 10a/10b — SGD scaling and dataset sweep. Regenerates both
+//! and times the native trainer epoch (the engine's functional core).
+
+use hbm_analytics::bench::figures::{fig10a, fig10b, FigureCtx};
+use hbm_analytics::bench::harness::{black_box, Bencher};
+use hbm_analytics::cpu;
+use hbm_analytics::engines::sgd::{GlmTask, SgdHyperParams};
+use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
+
+fn main() {
+    let ctx = FigureCtx { out_dir: None, ..Default::default() };
+    println!("{}", fig10a(&ctx).render());
+    println!("{}", fig10b(&ctx).render());
+
+    let spec = DatasetSpec {
+        name: "bench",
+        samples: 4096,
+        features: 256,
+        task: TaskKind::Regression,
+        epochs: 1,
+    };
+    let d = spec.generate(6);
+    let params = SgdHyperParams {
+        task: GlmTask::Ridge,
+        alpha: 0.05,
+        lambda: 0.0,
+        minibatch: 16,
+        epochs: 1,
+    };
+    let b = Bencher::default();
+    let r = b.run_throughput("sgd epoch 4096x256 (native)", spec.bytes(), || {
+        black_box(cpu::sgd::train(&d.features, &d.labels, 256, &params));
+    });
+    println!("{}", r.report());
+}

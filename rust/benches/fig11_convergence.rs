@@ -1,0 +1,44 @@
+//! Bench: Fig. 11 — convergence vs minibatch size, through the PJRT
+//! runtime when artifacts exist. Also times one HLO-executed epoch (the
+//! L1/L2 request-path hot loop).
+
+use std::path::PathBuf;
+
+use hbm_analytics::bench::figures::{fig11, FigureCtx};
+use hbm_analytics::bench::harness::{black_box, Bencher};
+use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
+use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
+
+fn main() {
+    // The figure itself (runtime-backed if artifacts are present).
+    let ctx = FigureCtx {
+        out_dir: None,
+        scale: 1.0 / 64.0,
+        artifacts: Some(PathBuf::from("artifacts")),
+        ..Default::default()
+    };
+    println!("{}", fig11(&ctx).render());
+
+    // Hot-path timing: one HLO epoch on the tiny artifact.
+    let Ok(mut rt) = Runtime::from_default_dir() else {
+        eprintln!("artifacts missing; skipping HLO epoch timing");
+        return;
+    };
+    let d = DatasetSpec {
+        name: "tiny",
+        samples: 256,
+        features: 32,
+        task: TaskKind::Regression,
+        epochs: 1,
+    }
+    .generate(8);
+    let exec =
+        SgdEpochExecutor::new(&mut rt, "sgd_epoch_tiny_ridge_b16", &d.features, &d.labels)
+            .expect("executor");
+    let x = vec![0.0f32; 32];
+    let b = Bencher { warmup: 3, iters: 20 };
+    let r = b.run_throughput("HLO epoch tiny (256x32, B=16)", d.spec.bytes(), || {
+        black_box(exec.epoch(&mut rt, &x, 0.05, 0.0).unwrap());
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig. 2 — HBM bandwidth sweep (microbenchmark infrastructure).
+//! Regenerates the figure and times the crossbar fluid solver (the L3
+//! timing-model hot path).
+
+use hbm_analytics::bench::figures::{fig2, FigureCtx};
+use hbm_analytics::bench::harness::{black_box, Bencher};
+use hbm_analytics::hbm::{fig2_sweep, FabricClock, HbmConfig};
+
+fn main() {
+    let ctx = FigureCtx { out_dir: None, ..Default::default() };
+    println!("{}", fig2(&ctx).render());
+
+    let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+    let b = Bencher::default();
+    let r = b.run("fig2 full sweep (30 solves)", || {
+        black_box(fig2_sweep(
+            &cfg,
+            &[1, 2, 4, 8, 16, 32],
+            &[256, 192, 128, 64, 0],
+        ));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,31 @@
+//! Bench: Fig. 5a/5b — selection scaling. Regenerates both figures and
+//! times the end-to-end 14-engine offload (functional scan + fluid sim)
+//! plus the CPU baseline scan on this host.
+
+use hbm_analytics::bench::figures::{fig5a, fig5b, FigureCtx};
+use hbm_analytics::bench::harness::{black_box, Bencher};
+use hbm_analytics::cpu;
+use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::workloads::SelectionWorkload;
+
+fn main() {
+    let ctx = FigureCtx { out_dir: None, ..Default::default() };
+    println!("{}", fig5a(&ctx).render());
+    println!("{}", fig5b(&ctx).render());
+
+    let items = 8_000_000u64;
+    let w = SelectionWorkload::uniform(items, 0.0, 1);
+    let bytes = items * 4;
+    let b = Bencher::quick();
+    let r = b.run_throughput("offload_select 14 engines (8M items)", bytes, || {
+        let mut acc =
+            FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200)).resident();
+        black_box(acc.offload_select(&w.data, w.lo, w.hi));
+    });
+    println!("{}", r.report());
+    let r = b.run_throughput("cpu range_select 8 threads (8M items)", bytes, || {
+        black_box(cpu::selection::range_select(&w.data, w.lo, w.hi, 8));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig. 6 — selectivity sweep. Regenerates the figure and times
+//! the worst case (100% selectivity: full egress traffic + compaction).
+
+use hbm_analytics::bench::figures::{fig6, FigureCtx};
+use hbm_analytics::bench::harness::{black_box, Bencher};
+use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::workloads::SelectionWorkload;
+
+fn main() {
+    let ctx = FigureCtx { out_dir: None, ..Default::default() };
+    println!("{}", fig6(&ctx).render());
+
+    let items = 2_000_000u64;
+    let w = SelectionWorkload::uniform(items, 1.0, 2);
+    let b = Bencher::quick();
+    let r = b.run_throughput("offload_select sel=100% (2M items)", items * 4, || {
+        let mut acc =
+            FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200)).resident();
+        black_box(acc.offload_select(&w.data, w.lo, w.hi));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,24 @@
+//! Bench: Fig. 8a/8b — join scaling and |S| sweep. Regenerates both and
+//! times the CPU hash join on this host (Algorithm 2 functional path).
+
+use hbm_analytics::bench::figures::{fig8a, fig8b, FigureCtx};
+use hbm_analytics::bench::harness::{black_box, Bencher};
+use hbm_analytics::cpu;
+use hbm_analytics::workloads::JoinWorkload;
+
+fn main() {
+    let ctx = FigureCtx { out_dir: None, ..Default::default() };
+    println!("{}", fig8a(&ctx).render());
+    println!("{}", fig8b(&ctx).render());
+
+    let w = JoinWorkload::generate(8_000_000, 4096, true, true, 4);
+    let b = Bencher::quick();
+    let r = b.run_throughput(
+        "cpu hash_join 8 threads (8M probe tuples)",
+        (w.l.len() * 4) as u64,
+        || {
+            black_box(cpu::join::hash_join_positions(&w.s, &w.l, 8));
+        },
+    );
+    println!("{}", r.report());
+}

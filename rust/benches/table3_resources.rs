@@ -1,0 +1,24 @@
+//! Bench: Table III — resource model + floorplan. Regenerates the table
+//! and times the floorplanner (trivially fast; included for completeness
+//! of the one-bench-per-table rule).
+
+use hbm_analytics::bench::figures::{table2, table3, FigureCtx};
+use hbm_analytics::bench::harness::{black_box, Bencher};
+use hbm_analytics::floorplan::{floorplan, BitstreamSpec, EngineKind};
+
+fn main() {
+    let ctx = FigureCtx { out_dir: None, ..Default::default() };
+    println!("{}", table2(&ctx).render());
+    println!("{}", table3(&ctx).render());
+
+    let b = Bencher::default();
+    let r = b.run("floorplan all three bitstreams", || {
+        for kind in [EngineKind::Selection, EngineKind::Join, EngineKind::Sgd] {
+            black_box(floorplan(&BitstreamSpec {
+                kind,
+                engines: kind.paper_engines(),
+            }));
+        }
+    });
+    println!("{}", r.report());
+}

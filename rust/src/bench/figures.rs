@@ -1,0 +1,856 @@
+//! One driver per table/figure of the paper's evaluation section.
+//!
+//! Each driver regenerates the corresponding result as an ASCII table
+//! (and CSV under `--out`), at a workload scale that keeps functional
+//! runs tractable — all reported numbers are *rates* or *model times*,
+//! which are scale-invariant (DESIGN.md §4). EXPERIMENTS.md records the
+//! paper-vs-measured comparison for every driver here.
+
+use std::path::PathBuf;
+
+use crate::cpu::{CpuPlatform, POWER9, XEON_E5};
+use crate::db::udf::FpgaAccelerator;
+use crate::engines::join::HT_TUPLES;
+use crate::engines::sgd::{engine_rate, GlmTask, SgdEngine, SgdHyperParams, SgdJob};
+use crate::engines::{sim, Engine};
+use crate::floorplan::{floorplan, BitstreamSpec, EngineKind};
+use crate::hbm::shim::ENGINE_PORTS;
+use crate::hbm::{fig2_sweep, FabricClock, HbmConfig, HbmMemory, Shim};
+use crate::interconnect::opencapi::OpenCapiLink;
+use crate::util::table::{fnum, Table};
+use crate::workloads::{datasets, JoinWorkload, SelectionWorkload};
+
+/// Shared context for all drivers.
+#[derive(Debug, Clone)]
+pub struct FigureCtx {
+    /// Workload scale relative to the paper (functional tractability).
+    pub scale: f64,
+    /// Output directory for CSVs (None = don't write).
+    pub out_dir: Option<PathBuf>,
+    /// Seed for all generators.
+    pub seed: u64,
+    /// Artifacts directory for runtime-backed drivers (Fig. 11).
+    pub artifacts: Option<PathBuf>,
+}
+
+impl Default for FigureCtx {
+    fn default() -> Self {
+        Self {
+            scale: 1.0 / 16.0,
+            out_dir: Some(PathBuf::from("results")),
+            seed: 0xB00,
+            artifacts: Some(PathBuf::from("artifacts")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FigureOutput {
+    pub id: &'static str,
+    pub tables: Vec<Table>,
+    pub notes: Vec<String>,
+}
+
+impl FigureOutput {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for t in &self.tables {
+            s.push_str(&t.render());
+            s.push('\n');
+        }
+        for n in &self.notes {
+            s.push_str(&format!("note: {n}\n"));
+        }
+        s
+    }
+
+    fn emit(&self, ctx: &FigureCtx) {
+        if let Some(dir) = &ctx.out_dir {
+            for (i, t) in self.tables.iter().enumerate() {
+                let name = if self.tables.len() == 1 {
+                    self.id.to_string()
+                } else {
+                    format!("{}_{}", self.id, i)
+                };
+                let _ = t.write_csv(dir, &name);
+            }
+        }
+    }
+}
+
+fn cfg200() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+// ---------------------------------------------------------------- Fig. 2
+
+/// HBM read bandwidth over #ports and address separation (§II).
+pub fn fig2(ctx: &FigureCtx) -> FigureOutput {
+    let mut t = Table::new(
+        "Fig. 2 — HBM read bandwidth (GB/s) vs ports / separation",
+        &["ports", "sep MiB", "200 MHz", "300 MHz"],
+    );
+    let ports = [1usize, 2, 4, 8, 16, 32];
+    let seps = [256u64, 192, 128, 64, 0];
+    let c200 = cfg200();
+    let c300 = HbmConfig::at_clock(FabricClock::Mhz300);
+    let s200 = fig2_sweep(&c200, &ports, &seps);
+    let s300 = fig2_sweep(&c300, &ports, &seps);
+    for (a, b) in s200.iter().zip(&s300) {
+        t.row(vec![
+            a.0.to_string(),
+            a.1.to_string(),
+            fnum(a.2),
+            fnum(b.2),
+        ]);
+    }
+    let out = FigureOutput {
+        id: "fig2",
+        tables: vec![t],
+        notes: vec![
+            "paper anchors: 190/282 GB/s ideal, worst-case collapse when all \
+             ports share one channel (paper's 1/32 rule; measured point in \
+             the paper is 14/21 GB/s — see EXPERIMENTS.md)"
+                .into(),
+        ],
+    };
+    out.emit(ctx);
+    out
+}
+
+// ------------------------------------------------------------- Fig. 5a/b
+
+fn fpga_selection_rate(engines: usize, items: u64, selectivity: f64, seed: u64) -> f64 {
+    let w = SelectionWorkload::uniform(items, selectivity, seed);
+    let mut acc = FpgaAccelerator::new(cfg200()).with_engines(engines).resident();
+    let (_, timing) = acc.offload_select(&w.data, w.lo, w.hi);
+    (items * 4) as f64 / timing.exec
+}
+
+/// Selection strong scaling (Fig. 5a): 128·10⁶ items, 0% selectivity.
+pub fn fig5a(ctx: &FigureCtx) -> FigureOutput {
+    let items = ((128_000_000f64 * ctx.scale) as u64).max(1 << 20);
+    let mut t = Table::new(
+        "Fig. 5a — selection strong scaling (GB/s), sel=0%",
+        &["threads/engines", "FPGA", "XeonE5", "POWER9"],
+    );
+    for &k in &[1usize, 2, 4, 8, 14, 28, 64, 128, 256] {
+        let fpga = if k <= ENGINE_PORTS {
+            fnum(fpga_selection_rate(k, items, 0.0, ctx.seed) / 1e9)
+        } else {
+            "-".into()
+        };
+        t.row(vec![
+            k.to_string(),
+            fpga,
+            fnum(XEON_E5.selection_rate(k) / 1e9),
+            fnum(POWER9.selection_rate(k) / 1e9),
+        ]);
+    }
+    let out = FigureOutput {
+        id: "fig5a",
+        tables: vec![t],
+        notes: vec![format!(
+            "items scaled to {items} (rates are size-invariant); paper: FPGA \
+             154 GB/s @14 engines, Xeon 57, POWER9 94"
+        )],
+    };
+    out.emit(ctx);
+    out
+}
+
+/// Selection weak scaling (Fig. 5b): base 16·10⁶ × threads.
+pub fn fig5b(ctx: &FigureCtx) -> FigureOutput {
+    let base = ((16_000_000f64 * ctx.scale) as u64).max(1 << 18);
+    let mut t = Table::new(
+        "Fig. 5b — selection weak scaling (GB/s), sel=0%",
+        &["threads/engines", "items", "FPGA", "XeonE5", "POWER9"],
+    );
+    for &k in &[1usize, 2, 4, 8, 14, 28, 64, 256] {
+        let items = base * k as u64;
+        let fpga = if k <= ENGINE_PORTS {
+            fnum(fpga_selection_rate(k, items.min(base * 14), 0.0, ctx.seed) / 1e9)
+        } else {
+            "-".into()
+        };
+        t.row(vec![
+            k.to_string(),
+            items.to_string(),
+            fpga,
+            fnum(XEON_E5.selection_rate(k) / 1e9),
+            fnum(POWER9.selection_rate(k) / 1e9),
+        ]);
+    }
+    let out = FigureOutput { id: "fig5b", tables: vec![t], notes: vec![] };
+    out.emit(ctx);
+    out
+}
+
+// ---------------------------------------------------------------- Fig. 6
+
+/// Effect of selectivity on the consumption rate, ± output copy.
+pub fn fig6(ctx: &FigureCtx) -> FigureOutput {
+    let items = ((128_000_000f64 * ctx.scale) as u64).max(1 << 20);
+    let link = OpenCapiLink::default();
+    let mut t = Table::new(
+        "Fig. 6 — selection rate (GB/s) vs selectivity",
+        &["sel %", "FPGA", "FPGA(copy)", "XeonE5", "XeonE5(copy)", "POWER9", "POWER9(copy)"],
+    );
+    for &sel in &[0.0f64, 0.01, 0.10, 0.25, 0.50, 0.75, 1.00] {
+        let w = SelectionWorkload::uniform(items, sel, ctx.seed + (sel * 100.0) as u64);
+        let mut acc =
+            FpgaAccelerator::new(cfg200()).with_engines(ENGINE_PORTS).resident();
+        let (idx, timing) = acc.offload_select(&w.data, w.lo, w.hi);
+        let in_bytes = (items * 4) as f64;
+        let fpga = in_bytes / timing.exec / 1e9;
+        let fpga_copy = in_bytes / (timing.exec + timing.copy_out) / 1e9;
+        // CPU model: output writes share the memory bus; copy to a result
+        // buffer costs one more pass over the output.
+        let cpu = |p: &CpuPlatform, copy: bool| {
+            let r = p.selection_rate(p.max_threads());
+            let write_share = 1.0 + sel * if copy { 2.0 } else { 1.0 };
+            r / write_share / 1e9
+        };
+        let _ = idx.len();
+        t.row(vec![
+            format!("{:.0}", sel * 100.0),
+            fnum(fpga),
+            fnum(fpga_copy),
+            fnum(cpu(&XEON_E5, false)),
+            fnum(cpu(&XEON_E5, true)),
+            fnum(cpu(&POWER9, false)),
+            fnum(cpu(&POWER9, true)),
+        ]);
+    }
+    let out = FigureOutput {
+        id: "fig6",
+        tables: vec![t],
+        notes: vec![
+            format!("link = {:.1} GB/s for the copy term", link.bandwidth / 1e9),
+            "paper: FPGA 154 GB/s at 0% → 80 GB/s at 100%".into(),
+        ],
+    };
+    out.emit(ctx);
+    out
+}
+
+// --------------------------------------------------------------- Table I
+
+/// Join processing rate under the six Table I configurations.
+pub fn table1(ctx: &FigureCtx) -> FigureOutput {
+    let mut t = Table::new(
+        "Table I — join processing rate (GB/s); |L| = 512M (scaled), |S| = 4096",
+        &["L uniq", "S uniq", "L load", "handle col", "1 engine", "7 engines"],
+    );
+    // (s_unique, load_l, handle_collisions) per paper row order.
+    let configs = [
+        (true, true, true),
+        (true, false, true),
+        (true, true, false),
+        (true, false, false),
+        (false, true, true),
+        (false, false, true),
+    ];
+    for (s_unique, load_l, handle) in configs {
+        let w = JoinWorkload::table1(true, s_unique, ctx.scale / 4.0, ctx.seed);
+        let l_bytes = (w.l.len() * 4) as f64;
+        let mut rates = Vec::new();
+        for engines in [1usize, 7] {
+            let mut acc = FpgaAccelerator::new(cfg200()).with_engines(engines);
+            acc.data_resident = !load_l;
+            let (_, timing) = acc.offload_join_cfg(&w.s, &w.l, handle);
+            rates.push(l_bytes / timing.total() / 1e9);
+        }
+        t.row(vec![
+            "1".into(),
+            if s_unique { "1" } else { "0" }.into(),
+            if load_l { "1" } else { "0" }.into(),
+            if handle { "1" } else { "0" }.into(),
+            fnum(rates[0]),
+            fnum(rates[1]),
+        ]);
+    }
+    let out = FigureOutput {
+        id: "table1",
+        tables: vec![t],
+        notes: vec![
+            "paper rows: 1.81/6.48, 2.13/14.68, 6.07/10.25, 12.77/80.95, \
+             1.61/6.09, 1.86/12.79"
+                .into(),
+        ],
+    };
+    out.emit(ctx);
+    out
+}
+
+// ---------------------------------------------------------------- Fig. 8
+
+/// Join rate over thread/engine count (Fig. 8a).
+pub fn fig8a(ctx: &FigureCtx) -> FigureOutput {
+    let w = JoinWorkload::table1(true, true, ctx.scale / 4.0, ctx.seed);
+    let l_bytes = (w.l.len() * 4) as f64;
+    let l_paper = 512_000_000u64;
+    let mut t = Table::new(
+        "Fig. 8a — join rate (GB/s) vs threads/engines",
+        &["threads/engines", "FPGA best", "FPGA worst", "XeonE5", "POWER9"],
+    );
+    for &k in &[1usize, 2, 4, 7, 16, 32, 64] {
+        let (fb, fw) = if k <= 7 {
+            let mut best = FpgaAccelerator::new(cfg200()).with_engines(k).resident();
+            let (_, tb) = best.offload_join_cfg(&w.s, &w.l, false);
+            let mut worst = FpgaAccelerator::new(cfg200()).with_engines(k);
+            let (_, tw) = worst.offload_join_cfg(&w.s, &w.l, true);
+            (
+                fnum(l_bytes / tb.total() / 1e9),
+                fnum(l_bytes / tw.total() / 1e9),
+            )
+        } else {
+            ("-".into(), "-".into())
+        };
+        t.row(vec![
+            k.to_string(),
+            fb,
+            fw,
+            fnum(XEON_E5.join_rate(k, l_paper, 4096) / 1e9),
+            fnum(POWER9.join_rate(k, l_paper, 4096) / 1e9),
+        ]);
+    }
+    let out = FigureOutput {
+        id: "fig8a",
+        tables: vec![t],
+        notes: vec![
+            "paper: FPGA best 12.8x Xeon's best; FPGA worst still beats both \
+             CPUs at 64 threads"
+                .into(),
+        ],
+    };
+    out.emit(ctx);
+    out
+}
+
+/// End-to-end join runtime over |S| (Fig. 8b) — analytic timing model
+/// (passes × port-bound scan for the FPGA; cache-dependent probe cost for
+/// the CPUs), validated functionally at small |S| by `table1`.
+pub fn fig8b(ctx: &FigureCtx) -> FigureOutput {
+    let l_items = 512_000_000u64;
+    let l_bytes = (l_items * 4) as f64;
+    let cfg = cfg200();
+    let shim = Shim::new(cfg.clone());
+    let per_engine = shim.logical_port_effective(); // read port bound
+    let engines = 7.0;
+    let mut t = Table::new(
+        "Fig. 8b — end-to-end join runtime (s) vs |S| (L=512M)",
+        &["|S| x1000", "FPGA (7 eng)", "XeonE5 (64 thr)", "POWER9 (64 thr)"],
+    );
+    let mut crossover: Option<u64> = None;
+    let mut prev_fpga_wins = true;
+    for &s_k in &[1u64, 2, 4, 8, 16, 32, 64, 125, 250, 500, 1000] {
+        let s_items = s_k * 1000;
+        let passes = (s_items as f64 / HT_TUPLES as f64).ceil();
+        let fpga = passes * l_bytes / (engines * per_engine)
+            + s_items as f64 * passes * 5e-9; // build per pass
+        let cpu_time = |p: &CpuPlatform| {
+            l_items as f64 * p.probe_cost_ns(s_items * 16) * 1e-9
+                / p.effective_parallelism(64)
+                + s_items as f64 * 20e-9
+        };
+        let xeon = cpu_time(&XEON_E5);
+        let p9 = cpu_time(&POWER9);
+        let fpga_wins = fpga < xeon.min(p9);
+        if prev_fpga_wins && !fpga_wins && crossover.is_none() {
+            crossover = Some(s_k);
+        }
+        prev_fpga_wins = fpga_wins;
+        t.row(vec![s_k.to_string(), fnum(fpga), fnum(xeon), fnum(p9)]);
+    }
+    let out = FigureOutput {
+        id: "fig8b",
+        tables: vec![t],
+        notes: vec![format!(
+            "crossover at |S| ≈ {}k (paper: 125k); FPGA linear in passes \
+             (HT capacity {} tuples)",
+            crossover.map(|c| c.to_string()).unwrap_or("none".into()),
+            HT_TUPLES
+        )],
+    };
+    let _ = ctx;
+    out.emit(ctx);
+    out
+}
+
+// --------------------------------------------------------------- Fig. 10
+
+/// SGD processing rate over parallel jobs (Fig. 10a), IM dataset,
+/// replicated vs non-replicated placement.
+pub fn fig10a(ctx: &FigureCtx) -> FigureOutput {
+    let spec = datasets::by_name("IM").unwrap().scaled(ctx.scale);
+    let d = spec.generate(ctx.seed);
+    let flat = d.flat();
+    let bytes = (flat.len() * 4) as u64;
+    let cfg = cfg200();
+    let epochs = 2usize;
+
+    let run = |jobs: usize, replicated: bool| -> f64 {
+        let mut mem = HbmMemory::new();
+        let mut shim = Shim::new(cfg.clone());
+        let shared = if replicated {
+            None
+        } else {
+            let b = shim.alloc(0, bytes).unwrap();
+            b.write_f32s(&mut mem, 0, &flat);
+            Some(b)
+        };
+        let mut total_time = 0.0f64;
+        let mut total_bytes = 0u64;
+        for round in (0..jobs).collect::<Vec<_>>().chunks(ENGINE_PORTS) {
+            let mut engines: Vec<Box<dyn Engine>> = Vec::new();
+            for (e, _) in round.iter().enumerate() {
+                let data = match shared {
+                    Some(b) => b,
+                    None => {
+                        let b = shim.alloc(e, bytes).unwrap();
+                        b.write_f32s(&mut mem, 0, &flat);
+                        b
+                    }
+                };
+                let model_out = shim.alloc(e, (spec.features * 4) as u64 + 64).unwrap();
+                engines.push(Box::new(SgdEngine::new(
+                    cfg.clone(),
+                    SgdJob {
+                        data,
+                        n_samples: spec.samples,
+                        n_features: spec.features,
+                        params: SgdHyperParams {
+                            task: GlmTask::Logistic,
+                            alpha: 0.05,
+                            lambda: 1e-4,
+                            minibatch: 16,
+                            epochs,
+                        },
+                        model_out,
+                    },
+                )));
+            }
+            let report = sim::run(&cfg, &mut mem, &mut engines);
+            total_time += report.makespan;
+            total_bytes += round.len() as u64 * bytes * epochs as u64;
+            // Fresh placement per round when replicated (home reuse).
+            if replicated {
+                shim.reset();
+            }
+        }
+        total_bytes as f64 / total_time
+    };
+
+    let mut t = Table::new(
+        "Fig. 10a — SGD rate (GB/s) vs parallel jobs (IM)",
+        &["jobs", "FPGA repl.", "FPGA non-repl.", "XeonE5", "POWER9"],
+    );
+    for &jobs in &[1usize, 2, 4, 8, 14, 28] {
+        t.row(vec![
+            jobs.to_string(),
+            fnum(run(jobs, true) / 1e9),
+            fnum(run(jobs.min(ENGINE_PORTS), false) / 1e9),
+            fnum(XEON_E5.sgd_rate(jobs) / 1e9),
+            fnum(POWER9.sgd_rate(jobs) / 1e9),
+        ]);
+    }
+    let out = FigureOutput {
+        id: "fig10a",
+        tables: vec![t],
+        notes: vec![
+            "paper: replicated peaks at 156 GB/s @14 engines; non-replicated \
+             flat at ~12.8 GB/s; Xeon 34; POWER9 49"
+                .into(),
+        ],
+    };
+    out.emit(ctx);
+    out
+}
+
+/// SGD rate per dataset at 28 jobs (Fig. 10b).
+pub fn fig10b(ctx: &FigureCtx) -> FigureOutput {
+    let cfg = cfg200();
+    let mut t = Table::new(
+        "Fig. 10b — SGD rate (GB/s) per dataset (28 jobs)",
+        &["dataset", "n", "FPGA", "XeonE5", "POWER9"],
+    );
+    for spec in datasets::TABLE2 {
+        // 14 engines, 2 rounds of 14 jobs; per-engine rate is the
+        // utilization model (validated in engines::sgd tests).
+        let per_engine = engine_rate(&cfg, spec.features, 16);
+        let fpga = per_engine * ENGINE_PORTS as f64;
+        t.row(vec![
+            spec.name.to_string(),
+            spec.features.to_string(),
+            fnum(fpga / 1e9),
+            fnum(XEON_E5.sgd_rate(28) / 1e9),
+            fnum(POWER9.sgd_rate(28) / 1e9),
+        ]);
+    }
+    let out = FigureOutput {
+        id: "fig10b",
+        tables: vec![t],
+        notes: vec![
+            "low-dimensional AEA pays the RAW-dependency bubble (paper §VI)".into(),
+        ],
+    };
+    out.emit(ctx);
+    out
+}
+
+// --------------------------------------------------------------- Fig. 11
+
+/// Logistic loss over time for minibatch sizes (Fig. 11), executing the
+/// AOT-compiled HLO epochs through the PJRT runtime (the L1/L2 path) when
+/// artifacts are available, with the engine timing model supplying the
+/// time axis.
+pub fn fig11(ctx: &FigureCtx) -> FigureOutput {
+    let cfg = cfg200();
+    let mut t = Table::new(
+        "Fig. 11 — logistic loss over time vs minibatch (IM, 1 engine)",
+        &["B", "epoch", "time (s)", "loss"],
+    );
+    let mut notes = Vec::new();
+
+    // Runtime path needs the full IM shape the artifacts are built for.
+    let use_runtime = ctx
+        .artifacts
+        .as_ref()
+        .map(|d| d.join("manifest.tsv").exists())
+        .unwrap_or(false);
+
+    let spec = if use_runtime {
+        *datasets::TABLE2.iter().find(|s| s.name == "IM").unwrap()
+    } else {
+        datasets::by_name("IM").unwrap().scaled(ctx.scale)
+    };
+    let d = spec.generate(ctx.seed);
+    // Time-normalized epoch counts: the paper plots loss over *time*, so
+    // each series runs to roughly the same wall-clock budget — larger B
+    // is faster per epoch, hence more epochs in the window.
+    let base_epochs = if use_runtime { 8usize } else { 12 };
+    let u1 = crate::engines::sgd::utilization(spec.features, 1);
+    let epochs_for = |b: usize| -> usize {
+        let ub = crate::engines::sgd::utilization(spec.features, b);
+        ((base_epochs as f64) * ub / u1).ceil() as usize
+    };
+
+    if use_runtime {
+        notes.push("losses computed from HLO-executed epochs (PJRT runtime)".into());
+        let mut rt = crate::runtime::Runtime::new(ctx.artifacts.as_ref().unwrap())
+            .expect("runtime");
+        for &b in &[1usize, 4, 16] {
+            let artifact = format!("sgd_epoch_im_b{b}");
+            let exec = crate::runtime::SgdEpochExecutor::new(
+                &mut rt,
+                &artifact,
+                &d.features,
+                &d.labels,
+            )
+            .expect("executor");
+            let t_epoch =
+                spec.bytes() as f64 / engine_rate(&cfg, spec.features, b);
+            let epochs = epochs_for(b);
+            let mut x = vec![0.0f32; spec.features];
+            for e in 1..=epochs {
+                x = exec.epoch(&mut rt, &x, 0.1, 0.0).expect("epoch");
+                let params = SgdHyperParams {
+                    task: GlmTask::Logistic,
+                    alpha: 0.1,
+                    lambda: 0.0,
+                    minibatch: b,
+                    epochs,
+                };
+                let loss =
+                    crate::cpu::sgd::loss(&d.features, &d.labels, spec.features, &x, &params);
+                t.row(vec![
+                    b.to_string(),
+                    e.to_string(),
+                    fnum(t_epoch * e as f64),
+                    format!("{loss:.5}"),
+                ]);
+            }
+        }
+    } else {
+        notes.push("artifacts missing: native Rust engine path (same updates)".into());
+        for &b in &[1usize, 4, 16] {
+            let params = SgdHyperParams {
+                task: GlmTask::Logistic,
+                alpha: 0.1,
+                lambda: 0.0,
+                minibatch: b,
+                epochs: epochs_for(b),
+            };
+            let (_, losses) =
+                crate::cpu::sgd::train(&d.features, &d.labels, spec.features, &params);
+            let t_epoch = spec.bytes() as f64 / engine_rate(&cfg, spec.features, b);
+            for (e, loss) in losses.iter().enumerate() {
+                t.row(vec![
+                    b.to_string(),
+                    (e + 1).to_string(),
+                    fnum(t_epoch * (e + 1) as f64),
+                    format!("{loss:.5}"),
+                ]);
+            }
+        }
+    }
+    notes.push(
+        "paper's claim: all B converge to the same loss; larger B gets there \
+         faster in wall-clock (pipeline utilization)"
+            .into(),
+    );
+    let out = FigureOutput { id: "fig11", tables: vec![t], notes };
+    out.emit(ctx);
+    out
+}
+
+// -------------------------------------------------------------- Table III
+
+/// Resource consumption per bitstream (Table III) + floorplan/timing.
+pub fn table3(ctx: &FigureCtx) -> FigureOutput {
+    let mut t = Table::new(
+        "Table III — consumption on XCVU37P-2E (%)",
+        &["bitstream", "#engines", "LUT", "LUTRAM", "FF", "BRAM", "URAM", "DSP", "clock"],
+    );
+    for kind in [EngineKind::Selection, EngineKind::Join, EngineKind::Sgd] {
+        let spec = BitstreamSpec { kind, engines: kind.paper_engines() };
+        let rep = spec.report();
+        let fp = floorplan(&spec);
+        let u = rep.util;
+        t.row(vec![
+            kind.name().to_string(),
+            spec.engines.to_string(),
+            format!("{:.2}", u.lut * 100.0),
+            format!("{:.2}", u.lutram * 100.0),
+            format!("{:.2}", u.ff * 100.0),
+            format!("{:.2}", u.bram * 100.0),
+            format!("{:.2}", u.uram * 100.0),
+            format!("{:.2}", u.dsp * 100.0),
+            format!("{:.0} MHz", fp.achieved_clock.mhz()),
+        ]);
+    }
+    // Scale-out ceiling ablation (paper §VII: "resource consumption will
+    // be the determining factor").
+    let mut t2 = Table::new(
+        "Table III-b — scale-out ceilings (max engines that fit)",
+        &["bitstream", "paper engines", "max engines"],
+    );
+    for kind in [EngineKind::Selection, EngineKind::Join, EngineKind::Sgd] {
+        t2.row(vec![
+            kind.name().to_string(),
+            kind.paper_engines().to_string(),
+            BitstreamSpec::max_engines(kind).to_string(),
+        ]);
+    }
+    let out = FigureOutput { id: "table3", tables: vec![t, t2], notes: vec![] };
+    out.emit(ctx);
+    out
+}
+
+// ------------------------------------------------------------- latency µb
+
+/// Short-access latency microbenchmark (§II infrastructure).
+pub fn latency(ctx: &FigureCtx) -> FigureOutput {
+    let cfg = cfg200();
+    let mut t = Table::new(
+        "§II — single-access read latency vs sharers",
+        &["sharers", "latency (ns)"],
+    );
+    for &k in &[1usize, 2, 4, 8, 16, 32] {
+        t.row(vec![k.to_string(), fnum(cfg.access_latency(k) * 1e9)]);
+    }
+    let out = FigureOutput { id: "latency", tables: vec![t], notes: vec![] };
+    out.emit(ctx);
+    out
+}
+
+/// All drivers, in paper order.
+pub fn all_ids() -> &'static [&'static str] {
+    &[
+        "fig2", "fig5a", "fig5b", "fig6", "table1", "fig8a", "fig8b",
+        "fig10a", "fig10b", "fig11", "table2", "table3", "latency",
+    ]
+}
+
+/// Table II is the dataset inventory — regenerate it from the specs.
+pub fn table2(ctx: &FigureCtx) -> FigureOutput {
+    let mut t = Table::new(
+        "Table II — datasets",
+        &["name", "#samples", "#features", "task", "#epochs", "size (MB)"],
+    );
+    for s in datasets::TABLE2 {
+        t.row(vec![
+            s.name.to_string(),
+            s.samples.to_string(),
+            s.features.to_string(),
+            format!("{:?}", s.task),
+            s.epochs.to_string(),
+            fnum(s.size_mb()),
+        ]);
+    }
+    let out = FigureOutput { id: "table2", tables: vec![t], notes: vec![] };
+    out.emit(ctx);
+    out
+}
+
+/// Run one driver by id.
+pub fn run(id: &str, ctx: &FigureCtx) -> Option<FigureOutput> {
+    Some(match id {
+        "fig2" => fig2(ctx),
+        "fig5a" => fig5a(ctx),
+        "fig5b" => fig5b(ctx),
+        "fig6" => fig6(ctx),
+        "table1" => table1(ctx),
+        "fig8a" => fig8a(ctx),
+        "fig8b" => fig8b(ctx),
+        "fig10a" => fig10a(ctx),
+        "fig10b" => fig10b(ctx),
+        "fig11" => fig11(ctx),
+        "table2" => table2(ctx),
+        "table3" => table3(ctx),
+        "latency" => latency(ctx),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_ctx() -> FigureCtx {
+        FigureCtx {
+            scale: 1.0 / 256.0,
+            out_dir: None,
+            seed: 1,
+            artifacts: None, // fig11 falls back to the native path
+        }
+    }
+
+    #[test]
+    fn fig2_shape_holds() {
+        let out = fig2(&quick_ctx());
+        let t = &out.tables[0];
+        // Ideal 32-port row ~190 GB/s @200, ~282 @300.
+        let row = t
+            .rows()
+            .iter()
+            .find(|r| r[0] == "32" && r[1] == "256")
+            .unwrap();
+        let v200: f64 = row[2].parse().unwrap();
+        let v300: f64 = row[3].parse().unwrap();
+        assert!((v200 - 190.0).abs() < 2.0, "{v200}");
+        assert!((v300 - 282.0).abs() < 4.0, "{v300}");
+        // Worst case collapses by >10x.
+        let worst = t.rows().iter().find(|r| r[0] == "32" && r[1] == "0").unwrap();
+        let w200: f64 = worst[2].parse().unwrap();
+        assert!(w200 < v200 / 10.0);
+    }
+
+    #[test]
+    fn fig5a_winner_and_saturation() {
+        let out = fig5a(&quick_ctx());
+        let t = &out.tables[0];
+        let fpga14: f64 = t
+            .rows()
+            .iter()
+            .find(|r| r[0] == "14")
+            .unwrap()[1]
+            .parse()
+            .unwrap();
+        assert!((fpga14 - 154.0).abs() < 8.0, "fpga14={fpga14}");
+        let xeon256: f64 = t.rows().last().unwrap()[2].parse().unwrap();
+        let p9_256: f64 = t.rows().last().unwrap()[3].parse().unwrap();
+        // Paper: 2.7x over Xeon, 1.6x over POWER9.
+        assert!(fpga14 / xeon256 > 2.2 && fpga14 / xeon256 < 3.2);
+        assert!(fpga14 / p9_256 > 1.3 && fpga14 / p9_256 < 2.0);
+    }
+
+    #[test]
+    fn table1_shape_holds() {
+        let out = table1(&quick_ctx());
+        let rows = out.tables[0].rows();
+        let get = |i: usize, j: usize| -> f64 { rows[i][j].parse().unwrap() };
+        // Row 4 (no load, no collisions) is the best 7-engine config.
+        let best7 = get(3, 5);
+        assert!(best7 > 70.0 && best7 < 90.0, "best7={best7}");
+        // Collision handling costs ~6x on one engine (rows 2 vs 4).
+        assert!(get(3, 4) / get(1, 4) > 4.0);
+        // Loading L degrades every config (rows 1 vs 2).
+        assert!(get(0, 4) < get(1, 4));
+        // Non-unique S is the slowest family (row 5 ≤ row 1).
+        assert!(get(4, 4) <= get(0, 4) + 0.2);
+    }
+
+    #[test]
+    fn fig8b_crossover_near_125k() {
+        let out = fig8b(&quick_ctx());
+        let note = &out.notes[0];
+        // Extract the crossover value from the note.
+        assert!(
+            note.contains("125k") || note.contains("250k") || note.contains("64k"),
+            "crossover note: {note}"
+        );
+    }
+
+    #[test]
+    fn fig10a_replication_matters() {
+        let ctx = quick_ctx();
+        let out = fig10a(&ctx);
+        let rows = out.tables[0].rows();
+        let last = rows.last().unwrap();
+        let repl: f64 = last[1].parse().unwrap();
+        let nonrepl: f64 = last[2].parse().unwrap();
+        assert!(
+            (repl - 156.0).abs() < 10.0,
+            "replicated 28-job rate={repl}"
+        );
+        assert!(nonrepl < 16.0, "non-replicated must collapse: {nonrepl}");
+        let xeon: f64 = last[3].parse().unwrap();
+        assert!(repl / xeon > 3.0, "paper: 156 vs 34");
+    }
+
+    #[test]
+    fn fig10b_low_dim_penalty() {
+        let out = fig10b(&quick_ctx());
+        let rows = out.tables[0].rows();
+        let rate = |name: &str| -> f64 {
+            rows.iter().find(|r| r[0] == name).unwrap()[2].parse().unwrap()
+        };
+        assert!(rate("AEA") < rate("IM"), "RAW bubble penalty");
+        assert!((rate("IM") - 155.0).abs() < 8.0);
+    }
+
+    #[test]
+    fn fig11_native_converges_similarly_across_b() {
+        let out = fig11(&quick_ctx());
+        let rows = out.tables[0].rows();
+        let final_loss = |b: &str| -> f64 {
+            rows.iter()
+                .filter(|r| r[0] == b)
+                .last()
+                .unwrap()[3]
+                .parse()
+                .unwrap()
+        };
+        let l1 = final_loss("1");
+        let l16 = final_loss("16");
+        assert!((l1 - l16).abs() < 0.15, "l1={l1} l16={l16}");
+        // Larger B is faster per epoch.
+        let time = |b: &str| -> f64 {
+            rows.iter().find(|r| r[0] == b).unwrap()[2].parse().unwrap()
+        };
+        assert!(time("16") < time("1"));
+    }
+
+    #[test]
+    fn all_ids_run() {
+        let ctx = quick_ctx();
+        for id in all_ids() {
+            let out = run(id, &ctx).unwrap_or_else(|| panic!("missing driver {id}"));
+            assert!(!out.tables.is_empty(), "{id}");
+            assert!(out.tables.iter().all(|t| t.n_rows() > 0), "{id}");
+        }
+        assert!(run("nope", &ctx).is_none());
+    }
+}

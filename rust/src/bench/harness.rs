@@ -1,0 +1,129 @@
+//! Minimal criterion-style benchmark harness: warmup, timed iterations,
+//! mean/σ/min/max + throughput reporting.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+use crate::util::units::fmt_duration;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub summary: Summary,
+    /// Optional bytes processed per iteration → throughput line.
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "{:<40} {:>12} ±{:>5.1}%  (min {}, max {}, n={})",
+            self.name,
+            fmt_duration(self.summary.mean()),
+            self.summary.rsd() * 100.0,
+            fmt_duration(self.summary.min()),
+            fmt_duration(self.summary.max()),
+            self.iters,
+        );
+        if let Some(b) = self.bytes_per_iter {
+            let gbs = b as f64 / self.summary.mean() / 1e9;
+            line.push_str(&format!("  [{gbs:.2} GB/s]"));
+        }
+        line
+    }
+}
+
+/// Warmup + N timed iterations of a closure.
+pub struct Bencher {
+    pub warmup: u32,
+    pub iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup: 2, iters: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 3 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        self.run_bytes(name, None, &mut f)
+    }
+
+    pub fn run_throughput<F: FnMut()>(
+        &self,
+        name: &str,
+        bytes_per_iter: u64,
+        mut f: F,
+    ) -> BenchResult {
+        self.run_bytes(name, Some(bytes_per_iter), &mut f)
+    }
+
+    fn run_bytes(
+        &self,
+        name: &str,
+        bytes_per_iter: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut summary = Summary::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            summary.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters as u64,
+            summary,
+            bytes_per_iter,
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value (std::hint-based).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher { warmup: 1, iters: 5 };
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.summary.mean() > 0.0);
+        assert_eq!(r.iters, 5);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_is_reported() {
+        let b = Bencher::quick();
+        let data = vec![1u8; 1 << 20];
+        let r = b.run_throughput("sum-1MiB", 1 << 20, || {
+            black_box(data.iter().map(|&x| x as u64).sum::<u64>());
+        });
+        assert!(r.report().contains("GB/s"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Benchmark harness and the per-figure/table reproduction drivers.
+//!
+//! `criterion` is not in the offline crate set, so [`harness`] provides
+//! the warmup/iterate/report loop the `rust/benches/*.rs` targets use,
+//! and [`figures`] holds one driver per table/figure of the paper's
+//! evaluation (the experiment index in DESIGN.md §4). `hbmctl figures`
+//! and the bench targets both call into [`figures`].
+
+pub mod figures;
+pub mod harness;
+
+pub use figures::{FigureCtx, FigureOutput};
+pub use harness::Bencher;

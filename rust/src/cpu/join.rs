@@ -1,0 +1,168 @@
+//! CPU naively-partitioned hash join — Algorithm 2 of the paper verbatim:
+//! build one shared hash table on S (serial), partition L across threads,
+//! probe in parallel, materialize (S-value, L-index) pairs.
+//!
+//! The hash table is a chained bucket table sized to the next power of two
+//! above 2|S| (MonetDB-style), supporting duplicate keys.
+
+use std::thread;
+
+/// Shared chained hash table over S.
+pub struct CpuHashTable {
+    mask: usize,
+    /// Head index per bucket into `next`/`keys`, usize::MAX = empty.
+    heads: Vec<usize>,
+    next: Vec<usize>,
+    keys: Vec<u32>,
+}
+
+impl CpuHashTable {
+    pub fn build(s: &[u32]) -> Self {
+        let cap = (2 * s.len()).next_power_of_two().max(16);
+        let mut heads = vec![usize::MAX; cap];
+        let mut next = Vec::with_capacity(s.len());
+        let mut keys = Vec::with_capacity(s.len());
+        for &k in s {
+            let b = Self::hash(k) & (cap - 1);
+            next.push(heads[b]);
+            keys.push(k);
+            heads[b] = keys.len() - 1;
+        }
+        Self { mask: cap - 1, heads, next, keys }
+    }
+
+    #[inline]
+    fn hash(k: u32) -> usize {
+        (k.wrapping_mul(0x9E37_79B9) >> 13) as usize
+    }
+
+    /// Visit the *position in S* of every entry matching `key`.
+    #[inline]
+    pub fn probe<F: FnMut(u32)>(&self, key: u32, mut f: F) {
+        let mut cur = self.heads[Self::hash(key) & self.mask];
+        while cur != usize::MAX {
+            if self.keys[cur] == key {
+                f(cur as u32);
+            }
+            cur = self.next[cur];
+        }
+    }
+
+    #[inline]
+    pub fn key_at(&self, pos: u32) -> u32 {
+        self.keys[pos as usize]
+    }
+}
+
+/// Positional join: returns (s_position, l_index) pairs, L-partition order.
+pub fn hash_join_positions(s: &[u32], l: &[u32], threads: usize) -> Vec<(u32, u32)> {
+    let ht = CpuHashTable::build(s);
+    let threads = threads.max(1).min(l.len().max(1));
+    if threads == 1 || l.len() < 4096 {
+        return probe_slice(&ht, l, 0);
+    }
+    let chunk = l.len().div_ceil(threads);
+    let mut parts: Vec<Vec<(u32, u32)>> = Vec::with_capacity(threads);
+    let ht_ref = &ht;
+    thread::scope(|scope| {
+        let handles: Vec<_> = l
+            .chunks(chunk)
+            .enumerate()
+            .map(|(t, slice)| {
+                scope.spawn(move || probe_slice(ht_ref, slice, (t * chunk) as u32))
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("probe worker panicked"));
+        }
+    });
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
+}
+
+/// Value join: (s_value, l_index) pairs — what the FPGA engine
+/// materializes, for direct comparison.
+pub fn hash_join(s: &[u32], l: &[u32], threads: usize) -> Vec<(u32, u32)> {
+    hash_join_positions(s, l, threads)
+        .into_iter()
+        .map(|(sp, li)| (s[sp as usize], li))
+        .collect()
+}
+
+fn probe_slice(ht: &CpuHashTable, l: &[u32], base: u32) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    for (i, &k) in l.iter().enumerate() {
+        ht.probe(k, |sp| out.push((sp, base + i as u32)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn oracle(s: &[u32], l: &[u32]) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for (li, &lk) in l.iter().enumerate() {
+            for &sk in s {
+                if sk == lk {
+                    out.push((sk, li as u32));
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn matches_nested_loop_oracle() {
+        let mut rng = Xoshiro256::new(12);
+        let s: Vec<u32> = (0..500).map(|_| rng.next_u32() % 2000).collect();
+        let l: Vec<u32> = (0..20_000).map(|_| rng.next_u32() % 2000).collect();
+        let mut got = hash_join(&s, &l, 4);
+        got.sort_unstable();
+        assert_eq!(got, oracle(&s, &l));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result_set() {
+        let mut rng = Xoshiro256::new(13);
+        let s: Vec<u32> = (0..100).map(|_| rng.next_u32() % 300).collect();
+        let l: Vec<u32> = (0..10_000).map(|_| rng.next_u32() % 300).collect();
+        let mut base = hash_join(&s, &l, 1);
+        base.sort_unstable();
+        for t in [2, 3, 8] {
+            let mut got = hash_join(&s, &l, t);
+            got.sort_unstable();
+            assert_eq!(got, base, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn duplicates_multiply_matches() {
+        let s = vec![7u32, 7, 7];
+        let l = vec![7u32, 1, 7];
+        let got = hash_join(&s, &l, 2);
+        assert_eq!(got.len(), 6);
+    }
+
+    #[test]
+    fn empty_sides() {
+        assert!(hash_join(&[], &[1, 2, 3], 2).is_empty());
+        assert!(hash_join(&[1], &[], 2).is_empty());
+    }
+
+    #[test]
+    fn agrees_with_fpga_engine_on_shared_workload() {
+        use crate::workloads::JoinWorkload;
+        let w = JoinWorkload::generate(30_000, 512, true, false, 77);
+        let mut cpu = hash_join(&w.s, &w.l, 4);
+        cpu.sort_unstable();
+        assert_eq!(cpu, oracle(&w.s, &w.l));
+    }
+}

@@ -1,0 +1,22 @@
+//! CPU baselines: real multithreaded implementations of all three
+//! operators plus calibrated platform models of the paper's two baseline
+//! machines.
+//!
+//! Two layers, used together:
+//!
+//! * **Functional** ([`selection`], [`join`], [`sgd`]) — actual parallel
+//!   Rust implementations (std::thread), used as correctness oracles for
+//!   the FPGA engines and measurable on the host;
+//! * **Platform models** ([`platform`]) — the 2-socket POWER9 and 14-core
+//!   Xeon E5-2690v4 of the paper, with core counts, SMT, memory-bandwidth
+//!   rooflines and cache hierarchy calibrated against the paper's own
+//!   measured saturation points (Figs. 5, 8, 10). The figure drivers use
+//!   these to plot the baseline curves; absolute host wallclock would
+//!   reflect *this* machine, not the paper's testbed (DESIGN.md §1).
+
+pub mod join;
+pub mod platform;
+pub mod selection;
+pub mod sgd;
+
+pub use platform::{CpuPlatform, POWER9, XEON_E5};

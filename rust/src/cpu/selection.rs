@@ -1,0 +1,132 @@
+//! Multithreaded CPU range selection (Algorithm 1), the MonetDB-side
+//! baseline. Chunked scan with per-thread result buffers concatenated in
+//! order — the same output the FPGA path produces after compaction.
+
+use std::thread;
+
+/// Scan `data` for values in `[lo, hi]`, returning matching indexes.
+pub fn range_select(data: &[u32], lo: u32, hi: u32, threads: usize) -> Vec<u32> {
+    let threads = threads.max(1).min(data.len().max(1));
+    if threads == 1 || data.len() < 4096 {
+        return scan(data, 0, lo, hi);
+    }
+    let chunk = data.len().div_ceil(threads);
+    let mut parts: Vec<Vec<u32>> = Vec::with_capacity(threads);
+    thread::scope(|s| {
+        let handles: Vec<_> = data
+            .chunks(chunk)
+            .enumerate()
+            .map(|(t, slice)| {
+                s.spawn(move || scan(slice, (t * chunk) as u32, lo, hi))
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("selection worker panicked"));
+        }
+    });
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
+}
+
+#[inline]
+fn scan(slice: &[u32], base: u32, lo: u32, hi: u32) -> Vec<u32> {
+    // Branch-light inner loop; the compiler vectorizes the compare.
+    let mut out = Vec::with_capacity(slice.len() / 8);
+    for (i, &v) in slice.iter().enumerate() {
+        if v >= lo && v <= hi {
+            out.push(base + i as u32);
+        }
+    }
+    out
+}
+
+/// Count-only variant (no materialization), for the selectivity study.
+pub fn range_count(data: &[u32], lo: u32, hi: u32, threads: usize) -> u64 {
+    let threads = threads.max(1);
+    if threads == 1 || data.len() < 4096 {
+        return slice_count(data, lo, hi);
+    }
+    let chunk = data.len().div_ceil(threads);
+    let mut total = 0u64;
+    thread::scope(|s| {
+        let handles: Vec<_> = data
+            .chunks(chunk)
+            .map(|slice| s.spawn(move || slice_count(slice, lo, hi)))
+            .collect();
+        for h in handles {
+            total += h.join().expect("count worker panicked");
+        }
+    });
+    total
+}
+
+#[inline]
+fn slice_count(slice: &[u32], lo: u32, hi: u32) -> u64 {
+    slice.iter().filter(|&&v| v >= lo && v <= hi).count() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen, U64Range, VecGen};
+
+    #[test]
+    fn matches_sequential_reference() {
+        let data: Vec<u32> = (0..100_000).map(|i| (i * 7919) % 100_000).collect();
+        let seq = range_select(&data, 1000, 5000, 1);
+        for t in [2, 4, 7, 16] {
+            assert_eq!(range_select(&data, 1000, 5000, t), seq, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn indexes_are_correct_and_ordered() {
+        let data = vec![5u32, 100, 7, 300, 100, 2];
+        let idx = range_select(&data, 100, 300, 3);
+        assert_eq!(idx, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn count_agrees_with_select() {
+        let data: Vec<u32> = (0..50_000).map(|i| i % 1000).collect();
+        assert_eq!(
+            range_count(&data, 10, 20, 4),
+            range_select(&data, 10, 20, 4).len() as u64
+        );
+    }
+
+    #[test]
+    fn prop_every_index_in_range_and_complete() {
+        struct G;
+        impl Gen for G {
+            type Value = (Vec<u64>, u64, u64);
+            fn generate(
+                &self,
+                rng: &mut crate::util::rng::Xoshiro256,
+            ) -> Self::Value {
+                let v = VecGen { elem: U64Range(0, 1000), max_len: 500 }
+                    .generate(rng);
+                let a = rng.gen_range_u64(1000);
+                let b = rng.gen_range_u64(1000);
+                (v, a.min(b), a.max(b))
+            }
+        }
+        check("range_select soundness", &G, |(v, lo, hi)| {
+            let data: Vec<u32> = v.iter().map(|&x| x as u32).collect();
+            let idx = range_select(&data, *lo as u32, *hi as u32, 3);
+            let in_range = idx
+                .iter()
+                .all(|&i| (*lo as u32..=*hi as u32).contains(&data[i as usize]));
+            let complete = idx.len()
+                == data
+                    .iter()
+                    .filter(|&&x| x >= *lo as u32 && x <= *hi as u32)
+                    .count();
+            in_range && complete
+        });
+    }
+}

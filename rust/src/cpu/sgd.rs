@@ -1,0 +1,233 @@
+//! CPU minibatch SGD baseline and the parallel hyperparameter-search
+//! driver (paper §VI evaluation: 28 independent training jobs).
+//!
+//! The update rule is identical to the FPGA engine's (Algorithm 3) so the
+//! two paths produce bit-comparable models on the same data — the engine's
+//! correctness oracle. The search driver runs jobs on std::threads, one
+//! model per job, mirroring how the paper loads its CPU baselines.
+
+use crate::engines::sgd::{GlmTask, SgdHyperParams};
+use std::thread;
+
+/// Train one GLM with minibatch SGD. Returns (model, per-epoch losses).
+pub fn train(
+    features: &[f32],
+    labels: &[f32],
+    n_features: usize,
+    params: &SgdHyperParams,
+) -> (Vec<f32>, Vec<f64>) {
+    let m = labels.len();
+    assert_eq!(features.len(), m * n_features);
+    let mut x = vec![0.0f32; n_features];
+    let mut losses = Vec::with_capacity(params.epochs);
+    let mut g = vec![0.0f32; n_features];
+    for _ in 0..params.epochs {
+        let mut in_batch = 0usize;
+        for i in 0..m {
+            let a = &features[i * n_features..(i + 1) * n_features];
+            let dot: f32 = crate::util::simd::dot_f32(a, &x);
+            let d = match params.task {
+                GlmTask::Ridge => dot - labels[i],
+                GlmTask::Logistic => sigmoid(dot) - labels[i],
+            };
+            crate::util::simd::axpy_f32(&mut g, d, a);
+            in_batch += 1;
+            if in_batch == params.minibatch || i + 1 == m {
+                let scale = params.alpha / in_batch as f32;
+                for j in 0..n_features {
+                    x[j] -= scale * g[j] + params.alpha * 2.0 * params.lambda * x[j];
+                    g[j] = 0.0;
+                }
+                in_batch = 0;
+            }
+        }
+        losses.push(loss(features, labels, n_features, &x, params));
+    }
+    (x, losses)
+}
+
+/// Regularized training loss (Eq. 1) — shared definition with the engine.
+pub fn loss(
+    features: &[f32],
+    labels: &[f32],
+    n_features: usize,
+    x: &[f32],
+    params: &SgdHyperParams,
+) -> f64 {
+    let m = labels.len();
+    let mut total = 0.0f64;
+    for i in 0..m {
+        let a = &features[i * n_features..(i + 1) * n_features];
+        let dot: f64 =
+            a.iter().zip(x).map(|(ai, xi)| (*ai as f64) * (*xi as f64)).sum();
+        let b = labels[i] as f64;
+        total += match params.task {
+            GlmTask::Ridge => 0.5 * (dot - b).powi(2),
+            GlmTask::Logistic => {
+                let log1pe = if dot > 30.0 { dot } else { (1.0 + dot.exp()).ln() };
+                log1pe - b * dot
+            }
+        };
+    }
+    let reg: f64 =
+        x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() * params.lambda as f64;
+    total / m as f64 + reg
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// The hyperparameter grid of the paper's search use case: 28
+/// configurations (7 step sizes × 4 regularizers).
+pub fn hyperparameter_grid(task: GlmTask, minibatch: usize, epochs: usize) -> Vec<SgdHyperParams> {
+    let alphas = [0.5f32, 0.2, 0.1, 0.05, 0.02, 0.01, 0.005];
+    let lambdas = [0.0f32, 1e-4, 1e-3, 1e-2];
+    let mut out = Vec::with_capacity(alphas.len() * lambdas.len());
+    for &alpha in &alphas {
+        for &lambda in &lambdas {
+            out.push(SgdHyperParams { task, alpha, lambda, minibatch, epochs });
+        }
+    }
+    out
+}
+
+/// Run `grid` jobs in parallel on `threads` OS threads; returns per-job
+/// (params-index, final loss, model).
+pub fn search(
+    features: &[f32],
+    labels: &[f32],
+    n_features: usize,
+    grid: &[SgdHyperParams],
+    threads: usize,
+) -> Vec<(usize, f64, Vec<f32>)> {
+    let threads = threads.max(1);
+    let mut results: Vec<(usize, f64, Vec<f32>)> = Vec::with_capacity(grid.len());
+    thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (t, chunk) in grid.chunks(grid.len().div_ceil(threads)).enumerate() {
+            let base = t * grid.len().div_ceil(threads);
+            handles.push(scope.spawn(move || {
+                chunk
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        let (x, losses) = train(features, labels, n_features, p);
+                        (base + i, *losses.last().unwrap_or(&f64::NAN), x)
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            results.extend(h.join().expect("search worker panicked"));
+        }
+    });
+    results.sort_by_key(|r| r.0);
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::datasets::{DatasetSpec, TaskKind};
+
+    fn small() -> (crate::workloads::Dataset, usize) {
+        let spec = DatasetSpec {
+            name: "T",
+            samples: 800,
+            features: 32,
+            task: TaskKind::Regression,
+            epochs: 12,
+        };
+        (spec.generate(21), 32)
+    }
+
+    #[test]
+    fn converges_like_the_engine() {
+        let (d, n) = small();
+        let params = SgdHyperParams {
+            task: GlmTask::Ridge,
+            alpha: 0.05,
+            lambda: 0.0,
+            minibatch: 16,
+            epochs: 12,
+        };
+        let (_, losses) = train(&d.features, &d.labels, n, &params);
+        assert!(losses.last().unwrap() < &(losses[0] * 0.1), "{losses:?}");
+    }
+
+    #[test]
+    fn identical_updates_to_fpga_engine() {
+        // The CPU trainer and the FPGA engine implement the same Algorithm
+        // 3; on identical data and hyperparameters the models must agree
+        // to float tolerance.
+        use crate::engines::sgd::{SgdEngine, SgdJob};
+        use crate::engines::Engine;
+        use crate::hbm::{HbmConfig, HbmMemory, Shim};
+        let (d, n) = small();
+        let params = SgdHyperParams {
+            task: GlmTask::Logistic,
+            alpha: 0.1,
+            lambda: 1e-3,
+            minibatch: 8,
+            epochs: 3,
+        };
+        let (cpu_model, _) = train(&d.features, &d.labels, n, &params);
+
+        let cfg = HbmConfig::default();
+        let mut mem = HbmMemory::new();
+        let mut shim = Shim::new(cfg.clone());
+        let data = shim.alloc(0, (d.flat().len() * 4) as u64).unwrap();
+        data.write_f32s(&mut mem, 0, &d.flat());
+        let model_out = shim.alloc(0, (n * 4) as u64).unwrap();
+        let mut eng = SgdEngine::new(
+            cfg,
+            SgdJob {
+                data,
+                n_samples: d.spec.samples,
+                n_features: n,
+                params,
+                model_out,
+            },
+        );
+        while eng.next_phase(&mut mem).is_some() {}
+        for (c, e) in cpu_model.iter().zip(&eng.model) {
+            assert!((c - e).abs() < 1e-5, "cpu={c} engine={e}");
+        }
+    }
+
+    #[test]
+    fn grid_has_28_jobs() {
+        let g = hyperparameter_grid(GlmTask::Logistic, 16, 10);
+        assert_eq!(g.len(), 28);
+    }
+
+    #[test]
+    fn parallel_search_matches_serial() {
+        let (d, n) = small();
+        let grid = &hyperparameter_grid(GlmTask::Ridge, 16, 2)[..6];
+        let serial = search(&d.features, &d.labels, n, grid, 1);
+        let parallel = search(&d.features, &d.labels, n, grid, 4);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.0, p.0);
+            assert!((s.1 - p.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn search_finds_a_good_configuration() {
+        let (d, n) = small();
+        let grid = hyperparameter_grid(GlmTask::Ridge, 16, 8);
+        let results = search(&d.features, &d.labels, n, &grid, 8);
+        let best = results
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let worst = results
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!(best.1 < worst.1 * 0.5, "best={} worst={}", best.1, worst.1);
+    }
+}

@@ -1,0 +1,176 @@
+//! BAT-style columnar storage.
+//!
+//! MonetDB stores every attribute as a Binary Association Table; the
+//! virtual OID is the array position. We keep exactly that: a [`Column`]
+//! is a typed dense vector, a [`Table`] a set of equal-length columns, and
+//! the [`Catalog`] a name → table map.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ColumnData {
+    U32(Vec<u32>),
+    F32(Vec<f32>),
+}
+
+impl ColumnData {
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::U32(v) => v.len(),
+            ColumnData::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_size(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+
+    pub fn as_u32(&self) -> Option<&[u32]> {
+        match self {
+            ColumnData::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            ColumnData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Positional gather (late materialization of a candidate list).
+    pub fn gather(&self, positions: &[u32]) -> ColumnData {
+        match self {
+            ColumnData::U32(v) => {
+                ColumnData::U32(positions.iter().map(|&p| v[p as usize]).collect())
+            }
+            ColumnData::F32(v) => {
+                ColumnData::F32(positions.iter().map(|&p| v[p as usize]).collect())
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Column {
+    pub name: String,
+    pub data: ColumnData,
+}
+
+impl Column {
+    pub fn u32(name: impl Into<String>, data: Vec<u32>) -> Self {
+        Self { name: name.into(), data: ColumnData::U32(data) }
+    }
+
+    pub fn f32(name: impl Into<String>, data: Vec<f32>) -> Self {
+        Self { name: name.into(), data: ColumnData::F32(data) }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub name: String,
+    pub columns: Vec<Column>,
+}
+
+impl Table {
+    pub fn new(name: impl Into<String>, columns: Vec<Column>) -> Self {
+        let t = Self { name: name.into(), columns };
+        t.validate();
+        t
+    }
+
+    fn validate(&self) {
+        if let Some(first) = self.columns.first() {
+            let n = first.data.len();
+            for c in &self.columns {
+                assert_eq!(
+                    c.data.len(),
+                    n,
+                    "column '{}' length mismatch in table '{}'",
+                    c.name,
+                    self.name
+                );
+            }
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.columns.first().map(|c| c.data.len()).unwrap_or(0)
+    }
+
+    pub fn column(&self, name: &str) -> Option<&Column> {
+        self.columns.iter().find(|c| c.name == name)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Catalog {
+    tables: BTreeMap<String, Table>,
+}
+
+impl Catalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, table: Table) {
+        self.tables.insert(table.name.clone(), table);
+    }
+
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tables.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_and_catalog_roundtrip() {
+        let t = Table::new(
+            "lineitem",
+            vec![
+                Column::u32("key", vec![1, 2, 3]),
+                Column::f32("price", vec![9.5, 1.0, 2.5]),
+            ],
+        );
+        assert_eq!(t.n_rows(), 3);
+        let mut cat = Catalog::new();
+        cat.register(t);
+        assert_eq!(cat.names(), vec!["lineitem"]);
+        let t = cat.table("lineitem").unwrap();
+        assert_eq!(t.column("key").unwrap().data.as_u32().unwrap(), &[1, 2, 3]);
+        assert!(t.column("missing").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_table_rejected() {
+        Table::new(
+            "bad",
+            vec![
+                Column::u32("a", vec![1]),
+                Column::u32("b", vec![1, 2]),
+            ],
+        );
+    }
+
+    #[test]
+    fn gather_materializes_candidates() {
+        let d = ColumnData::U32(vec![10, 20, 30, 40]);
+        assert_eq!(d.gather(&[3, 0]), ColumnData::U32(vec![40, 10]));
+        let f = ColumnData::F32(vec![1.0, 2.0]);
+        assert_eq!(f.gather(&[1]), ColumnData::F32(vec![2.0]));
+    }
+}

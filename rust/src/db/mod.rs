@@ -1,0 +1,28 @@
+//! A miniature column-oriented, in-memory DBMS in the mould of MonetDB —
+//! the integration substrate of the paper (§II/§III).
+//!
+//! The paper's accelerators are not free-standing: they are *operators*
+//! inside an operator-at-a-time columnar engine, invoked through a
+//! UDF-style hook, with all the data-movement consequences that implies
+//! (host columns must be copied to HBM, results copied back and
+//! re-materialized as candidate lists). This module reproduces that
+//! architecture:
+//!
+//! * [`column`] — BAT-style typed columns, tables, and the catalog;
+//! * [`ops`] — the relational operators (scan, range-select, hash join,
+//!   project, aggregate), all late-materializing via candidate lists;
+//! * [`exec`] — a small operator-at-a-time plan executor with a builder
+//!   API;
+//! * [`udf`] — the accelerator hook: the same operators offloaded to the
+//!   simulated HBM-FPGA through the datamovers, returning both results and
+//!   the timing breakdown (copy-in / execute / copy-out) the end-to-end
+//!   figures need.
+
+pub mod column;
+pub mod exec;
+pub mod ops;
+pub mod udf;
+
+pub use column::{Catalog, Column, ColumnData, Table};
+pub use exec::{Executor, Plan};
+pub use udf::{FpgaAccelerator, OffloadTiming};

@@ -1,0 +1,130 @@
+//! Relational operators over columns, MonetDB-style: operator-at-a-time,
+//! late materialization via candidate (OID) lists.
+
+use super::column::ColumnData;
+use crate::cpu;
+
+/// Range selection: candidate list of positions where `lo ≤ v ≤ hi`.
+pub fn range_select(col: &ColumnData, lo: u32, hi: u32, threads: usize) -> Vec<u32> {
+    let data = col.as_u32().expect("range_select needs a u32 column");
+    cpu::selection::range_select(data, lo, hi, threads)
+}
+
+/// Hash join on two u32 key columns: (left-pos, right-pos) pairs.
+/// `left` is the build (small) side — Algorithm 2's S.
+pub fn hash_join(
+    left: &ColumnData,
+    right: &ColumnData,
+    threads: usize,
+) -> Vec<(u32, u32)> {
+    let s = left.as_u32().expect("join build side must be u32");
+    let l = right.as_u32().expect("join probe side must be u32");
+    cpu::join::hash_join_positions(s, l, threads)
+}
+
+/// Positional projection (gather).
+pub fn project(col: &ColumnData, positions: &[u32]) -> ColumnData {
+    col.gather(positions)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AggKind {
+    Count,
+    SumF32,
+    SumU32,
+    MinU32,
+    MaxU32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum AggResult {
+    Count(u64),
+    F64(f64),
+    U64(u64),
+}
+
+/// Scalar aggregate over a column.
+pub fn aggregate(col: &ColumnData, kind: AggKind) -> AggResult {
+    match kind {
+        AggKind::Count => AggResult::Count(col.len() as u64),
+        AggKind::SumF32 => {
+            let v = col.as_f32().expect("SumF32 needs f32");
+            AggResult::F64(v.iter().map(|&x| x as f64).sum())
+        }
+        AggKind::SumU32 => {
+            let v = col.as_u32().expect("SumU32 needs u32");
+            AggResult::U64(v.iter().map(|&x| x as u64).sum())
+        }
+        AggKind::MinU32 => {
+            let v = col.as_u32().expect("MinU32 needs u32");
+            AggResult::U64(v.iter().copied().min().unwrap_or(0) as u64)
+        }
+        AggKind::MaxU32 => {
+            let v = col.as_u32().expect("MaxU32 needs u32");
+            AggResult::U64(v.iter().copied().max().unwrap_or(0) as u64)
+        }
+    }
+}
+
+/// Group-by-key sum (u32 keys, f32 values): the reduction-heavy OLAP
+/// pattern the paper's §II motivates. Returns sorted (key, sum, count).
+pub fn group_sum(
+    keys: &ColumnData,
+    values: &ColumnData,
+) -> Vec<(u32, f64, u64)> {
+    let k = keys.as_u32().expect("group keys must be u32");
+    let v = values.as_f32().expect("group values must be f32");
+    assert_eq!(k.len(), v.len());
+    let mut map: std::collections::BTreeMap<u32, (f64, u64)> =
+        std::collections::BTreeMap::new();
+    for (&key, &val) in k.iter().zip(v) {
+        let e = map.entry(key).or_insert((0.0, 0));
+        e.0 += val as f64;
+        e.1 += 1;
+    }
+    map.into_iter().map(|(key, (s, c))| (key, s, c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_then_project() {
+        let col = ColumnData::U32(vec![5, 50, 500, 55]);
+        let cand = range_select(&col, 50, 100, 2);
+        assert_eq!(cand, vec![1, 3]);
+        let vals = project(&col, &cand);
+        assert_eq!(vals, ColumnData::U32(vec![50, 55]));
+    }
+
+    #[test]
+    fn join_returns_positions_both_sides() {
+        let build = ColumnData::U32(vec![10, 20, 10]);
+        let probe = ColumnData::U32(vec![20, 10, 99]);
+        let mut pairs = hash_join(&build, &probe, 1);
+        pairs.sort_unstable();
+        // probe[0]=20 matches build pos 1; probe[1]=10 matches build pos 0
+        // and 2 (duplicate build keys).
+        assert_eq!(pairs, vec![(0, 1), (1, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn aggregates() {
+        let u = ColumnData::U32(vec![3, 1, 2]);
+        assert_eq!(aggregate(&u, AggKind::Count), AggResult::Count(3));
+        assert_eq!(aggregate(&u, AggKind::SumU32), AggResult::U64(6));
+        assert_eq!(aggregate(&u, AggKind::MinU32), AggResult::U64(1));
+        assert_eq!(aggregate(&u, AggKind::MaxU32), AggResult::U64(3));
+        let f = ColumnData::F32(vec![1.5, 2.5]);
+        assert_eq!(aggregate(&f, AggKind::SumF32), AggResult::F64(4.0));
+    }
+
+    #[test]
+    fn group_sum_groups() {
+        let k = ColumnData::U32(vec![1, 2, 1, 2, 3]);
+        let v = ColumnData::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let g = group_sum(&k, &v);
+        assert_eq!(g, vec![(1, 4.0, 2), (2, 6.0, 2), (3, 5.0, 1)]);
+    }
+}

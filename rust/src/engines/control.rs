@@ -1,0 +1,160 @@
+//! Central control unit with a register (CSR) interface.
+//!
+//! The paper (§III, "Scale-Out Computation") exposes every compute engine
+//! to the CPU through a register read/write interface so software can
+//! start/stop and monitor each engine asynchronously and in parallel;
+//! barriers, when needed, are implemented in software. This module models
+//! that contract: a small CSR file per engine slot plus the dispatch glue
+//! that turns "start" writes into simulation runs.
+
+use std::collections::BTreeMap;
+
+/// Register map per engine slot (word offsets), mirroring a typical HLS
+/// control interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Csr {
+    /// Write 1 to start; self-clearing.
+    Control = 0x00,
+    /// Bit 0: idle, bit 1: done.
+    Status = 0x04,
+    /// Job parameter registers (engine-specific meaning).
+    Arg0 = 0x10,
+    Arg1 = 0x14,
+    Arg2 = 0x18,
+    Arg3 = 0x1C,
+    /// Result registers (e.g. match count), read-only.
+    Ret0 = 0x20,
+    Ret1 = 0x24,
+    /// Simulated cycle counter snapshot of the last run.
+    Cycles = 0x28,
+}
+
+pub const STATUS_IDLE: u32 = 0b01;
+pub const STATUS_DONE: u32 = 0b10;
+
+/// One engine slot's CSR file.
+#[derive(Debug, Clone, Default)]
+pub struct CsrFile {
+    regs: BTreeMap<u32, u32>,
+}
+
+impl CsrFile {
+    pub fn read(&self, offset: u32) -> u32 {
+        *self.regs.get(&offset).unwrap_or(&0)
+    }
+
+    pub fn write(&mut self, offset: u32, value: u32) {
+        self.regs.insert(offset, value);
+    }
+}
+
+/// The control unit: CSR files for up to `slots` engines plus start/done
+/// bookkeeping. The coordinator (L3) is the only writer; engines publish
+/// results through their slot after a simulation run.
+pub struct ControlUnit {
+    slots: Vec<CsrFile>,
+    started: Vec<bool>,
+}
+
+impl ControlUnit {
+    pub fn new(slots: usize) -> Self {
+        let mut files = Vec::with_capacity(slots);
+        for _ in 0..slots {
+            let mut f = CsrFile::default();
+            f.write(Csr::Status as u32, STATUS_IDLE);
+            files.push(f);
+        }
+        Self { slots: files, started: vec![false; slots] }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Host-side register write. Writing `1` to `Control` arms the slot.
+    pub fn csr_write(&mut self, slot: usize, offset: u32, value: u32) {
+        if offset == Csr::Control as u32 && value & 1 == 1 {
+            self.started[slot] = true;
+            self.slots[slot].write(Csr::Status as u32, 0); // busy
+            // Control is self-clearing.
+            self.slots[slot].write(Csr::Control as u32, 0);
+        } else {
+            self.slots[slot].write(offset, value);
+        }
+    }
+
+    pub fn csr_read(&self, slot: usize, offset: u32) -> u32 {
+        self.slots[slot].read(offset)
+    }
+
+    /// Which slots have been armed since the last `take_started`.
+    pub fn take_started(&mut self) -> Vec<usize> {
+        let out: Vec<usize> = (0..self.started.len())
+            .filter(|&i| self.started[i])
+            .collect();
+        self.started.iter_mut().for_each(|s| *s = false);
+        out
+    }
+
+    /// Engine-side completion: publish results and flip status to DONE.
+    pub fn complete(&mut self, slot: usize, ret0: u32, ret1: u32, cycles: u32) {
+        self.slots[slot].write(Csr::Ret0 as u32, ret0);
+        self.slots[slot].write(Csr::Ret1 as u32, ret1);
+        self.slots[slot].write(Csr::Cycles as u32, cycles);
+        self.slots[slot].write(Csr::Status as u32, STATUS_DONE | STATUS_IDLE);
+    }
+
+    pub fn is_done(&self, slot: usize) -> bool {
+        self.csr_read(slot, Csr::Status as u32) & STATUS_DONE != 0
+    }
+
+    pub fn is_idle(&self, slot: usize) -> bool {
+        self.csr_read(slot, Csr::Status as u32) & STATUS_IDLE != 0
+    }
+
+    /// Software barrier (paper: "synchronization among them (e.g.,
+    /// barriers) can be implemented via software"): true iff all the given
+    /// slots are done.
+    pub fn barrier_done(&self, slots: &[usize]) -> bool {
+        slots.iter().all(|&s| self.is_done(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_is_self_clearing_and_sets_busy() {
+        let mut cu = ControlUnit::new(4);
+        assert!(cu.is_idle(2));
+        cu.csr_write(2, Csr::Control as u32, 1);
+        assert_eq!(cu.csr_read(2, Csr::Control as u32), 0);
+        assert!(!cu.is_idle(2));
+        assert_eq!(cu.take_started(), vec![2]);
+        assert!(cu.take_started().is_empty());
+    }
+
+    #[test]
+    fn args_roundtrip_and_completion() {
+        let mut cu = ControlUnit::new(2);
+        cu.csr_write(0, Csr::Arg0 as u32, 0xDEAD);
+        assert_eq!(cu.csr_read(0, Csr::Arg0 as u32), 0xDEAD);
+        cu.csr_write(0, Csr::Control as u32, 1);
+        cu.complete(0, 42, 7, 1000);
+        assert!(cu.is_done(0));
+        assert_eq!(cu.csr_read(0, Csr::Ret0 as u32), 42);
+        assert_eq!(cu.csr_read(0, Csr::Cycles as u32), 1000);
+    }
+
+    #[test]
+    fn barrier_waits_for_all() {
+        let mut cu = ControlUnit::new(3);
+        cu.csr_write(0, Csr::Control as u32, 1);
+        cu.csr_write(1, Csr::Control as u32, 1);
+        cu.complete(0, 0, 0, 0);
+        assert!(!cu.barrier_done(&[0, 1]));
+        cu.complete(1, 0, 0, 0);
+        assert!(cu.barrier_done(&[0, 1]));
+    }
+}

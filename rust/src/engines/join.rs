@@ -1,0 +1,462 @@
+//! Hash-join compute engine (paper §V, Figure 7 / Algorithm 2).
+//!
+//! Implements MonetDB's naively-partitioned hash join: the smaller side S
+//! builds a hash table, the larger side L is partitioned across engines and
+//! probed. The FPGA engine is probe-optimized:
+//!
+//! * **Build** is serial (1 tuple/cycle through a 16-to-1 multiplexer) —
+//!   insertions depend on each other through collisions, so SIMD does not
+//!   apply (paper §V);
+//! * **Probe** keeps 16 replicas of the hash table in Ultra-RAM so 16
+//!   probes complete per cycle — initiation interval II = 1 — *when the
+//!   engine is synthesized without collision handling* (legal only if S is
+//!   unique). With the collision-handling datapath the non-deterministic
+//!   chain walk breaks the pipeline; calibrated against Table I this costs
+//!   [`II_COLLISION_BASE`]× per probe, plus the measured chain-walk steps;
+//! * the hash table capacity is [`HT_TUPLES`] (8192) — replication burns
+//!   URAM — so larger S forces ⌈|S|/8192⌉ complete passes over L
+//!   (the linear growth of Fig. 8b);
+//! * each engine drives **two** shim ports (read L / write results), hence
+//!   7 engines in the join bitstream.
+//!
+//! Matches are materialized as (S-position, L-index) OID pairs —
+//! Algorithm 2's `S_out`/`L_out`, what the DBMS consumes — padded per
+//! lane with a dummy element exactly like the selection egress.
+
+use super::pipeline::{cycles_to_secs, rate_at_ii, LINE_BYTES, PARALLELISM};
+use super::{Engine, Phase};
+use crate::hbm::memory::HbmMemory;
+use crate::hbm::shim::ShimBuffer;
+use crate::hbm::HbmConfig;
+
+/// Hash-table capacity in tuples (16 KiB of key+payload per replica).
+pub const HT_TUPLES: usize = 8192;
+/// Calibrated initiation-interval multiplier of the collision-handling
+/// probe datapath (Table I: 12.77 GB/s without vs 2.13 GB/s with, S
+/// unique → II ≈ 6).
+pub const II_COLLISION_BASE: f64 = 6.0;
+/// Dummy padding value in materialized output lines.
+pub const DUMMY: u32 = u32::MAX;
+
+/// Job description for one join engine: probe its partition of L against
+/// all of S (the build side is broadcast — every engine builds its own
+/// replica set).
+#[derive(Debug, Clone)]
+pub struct JoinJob {
+    /// Build side (keys), shared by all engines.
+    pub s: ShimBuffer,
+    pub s_items: u64,
+    /// Whether S may contain duplicate keys. Decides whether the
+    /// collision-handling datapath must be synthesized.
+    pub handle_collisions: bool,
+    /// This engine's partition of the probe side.
+    pub l: ShimBuffer,
+    pub l_items: u64,
+    /// Global index of the first L item in this partition.
+    pub l_index_base: u32,
+    /// Output buffer (padded (s_value, l_index) pairs).
+    pub output: ShimBuffer,
+}
+
+/// Open-addressing hash table with linear probing — the functional model
+/// of the engine's URAM table (one logical copy; the 16 hardware replicas
+/// are identical). Stores (key, payload) where the payload is the S tuple's
+/// global position, so materialized matches are OID pairs — what the DBMS
+/// consumes (Algorithm 2's `S_out`/`L_out`).
+struct HashTable {
+    keys: Vec<u32>,
+    payloads: Vec<u32>,
+    occupied: Vec<bool>,
+}
+
+impl HashTable {
+    fn new() -> Self {
+        Self {
+            keys: vec![0; HT_TUPLES],
+            payloads: vec![0; HT_TUPLES],
+            occupied: vec![false; HT_TUPLES],
+        }
+    }
+
+    #[inline]
+    fn hash(key: u32) -> usize {
+        // Multiplicative (Fibonacci) hashing — cheap in LUTs, good spread.
+        ((key.wrapping_mul(0x9E37_79B9)) >> 19) as usize & (HT_TUPLES - 1)
+    }
+
+    /// Insert; returns probe steps used (build cost).
+    fn insert(&mut self, key: u32, payload: u32) -> usize {
+        let mut slot = Self::hash(key);
+        let mut steps = 1;
+        while self.occupied[slot] {
+            slot = (slot + 1) & (HT_TUPLES - 1);
+            steps += 1;
+            assert!(steps <= HT_TUPLES, "hash table overfull");
+        }
+        self.keys[slot] = key;
+        self.payloads[slot] = payload;
+        self.occupied[slot] = true;
+        steps
+    }
+
+    /// Probe for all matches of `key`, pushing matching payloads.
+    /// Returns chain steps walked (the collision-handling cost). With
+    /// linear probing the walk continues to the first empty slot.
+    fn probe(&self, key: u32, out: &mut Vec<u32>) -> usize {
+        let mut slot = Self::hash(key);
+        let mut steps = 0;
+        loop {
+            if !self.occupied[slot] {
+                return steps.max(1);
+            }
+            steps += 1;
+            if self.keys[slot] == key {
+                out.push(self.payloads[slot]);
+            }
+            slot = (slot + 1) & (HT_TUPLES - 1);
+            if steps >= HT_TUPLES {
+                return steps;
+            }
+        }
+    }
+}
+
+/// Per-pass statistics produced by the functional probe, consumed by the
+/// timing model.
+#[derive(Debug, Clone, Default)]
+pub struct PassStats {
+    pub build_steps: u64,
+    pub probe_steps: u64,
+    pub probes: u64,
+    pub matches: u64,
+    pub out_lines: u64,
+}
+
+pub struct JoinEngine {
+    cfg: HbmConfig,
+    job: JoinJob,
+    /// Remaining passes: each covers HT_TUPLES tuples of S.
+    pass: usize,
+    n_passes: usize,
+    /// Pending timing phases for the current pass (build, then probe).
+    queued: Vec<Phase>,
+    out_words: Vec<u32>,
+    pub total_matches: u64,
+    pub out_bytes: u64,
+    pub stats: Vec<PassStats>,
+}
+
+impl JoinEngine {
+    pub fn new(cfg: HbmConfig, job: JoinJob) -> Self {
+        let n_passes = (job.s_items as usize).div_ceil(HT_TUPLES).max(1);
+        Self {
+            cfg,
+            job,
+            pass: 0,
+            n_passes,
+            queued: Vec::new(),
+            out_words: Vec::new(),
+            total_matches: 0,
+            out_bytes: 0,
+            stats: Vec::new(),
+        }
+    }
+
+    pub fn n_passes(&self) -> usize {
+        self.n_passes
+    }
+
+    /// Functionally execute pass `p` and queue its build+probe phases.
+    fn run_pass(&mut self, mem: &mut HbmMemory, p: usize) {
+        let s_all = self.job.s.read_u32s(mem, 0, self.job.s_items as usize);
+        let lo = p * HT_TUPLES;
+        let hi = ((p + 1) * HT_TUPLES).min(s_all.len());
+        let s_part = &s_all[lo..hi];
+
+        // ---- build (serial, 1 tuple/cycle + probe steps for collisions)
+        let mut ht = HashTable::new();
+        let mut st = PassStats::default();
+        for (j, &k) in s_part.iter().enumerate() {
+            st.build_steps += ht.insert(k, (lo + j) as u32) as u64;
+        }
+
+        // ---- probe (16 lanes; emit padded pairs)
+        let l = self.job.l.read_u32s(mem, 0, self.job.l_items as usize);
+        let mut lane_bufs: Vec<Vec<(u32, u32)>> = vec![Vec::new(); PARALLELISM];
+        let mut scratch: Vec<u32> = Vec::new();
+        for (i, &key) in l.iter().enumerate() {
+            let lane = i % PARALLELISM;
+            let l_idx = self.job.l_index_base + i as u32;
+            // Functionally the probe is always exact (full chain walk);
+            // `handle_collisions` decides only the *timing* datapath. A
+            // hardware build without collision handling is only deployed
+            // when S is unique and the table is sparse, where the chain
+            // walk degenerates to the single inspection the II=1 pipeline
+            // performs.
+            scratch.clear();
+            st.probe_steps += ht.probe(key, &mut scratch) as u64;
+            for &s_pos in &scratch {
+                lane_bufs[lane].push((s_pos, l_idx));
+                st.matches += 1;
+            }
+            st.probes += 1;
+        }
+        // Assemble padded 512-bit lines: 8 (s,l) pairs per line; a line is
+        // emitted whenever any lane has a pending pair (dummy elsewhere).
+        // Per-lane row r across 16 lanes → 2 lines of 8 pairs.
+        let max_rows = lane_bufs.iter().map(|b| b.len()).max().unwrap_or(0);
+        for row in 0..max_rows {
+            for lane_buf in lane_bufs.iter() {
+                let (sv, li) = *lane_buf.get(row).unwrap_or(&(DUMMY, DUMMY));
+                self.out_words.push(sv);
+                self.out_words.push(li);
+            }
+        }
+        st.out_lines = (max_rows as u64) * 2; // 16 pairs = 128 B = 2 lines
+        self.total_matches += st.matches;
+
+        // ---- timing phases
+        // Build: serial at 1 tuple/cycle (plus collision walk steps); S is
+        // tiny so its HBM traffic is folded into the fixed time.
+        let build_secs = cycles_to_secs(&self.cfg, st.build_steps as f64);
+        self.queued.push(Phase::compute(format!("build[{p}]"), build_secs));
+
+        // Probe: paced by reading L; writes ride along on the second port.
+        // Collision datapath: calibrated fixed II of 6 (Table I rows 2/4)
+        // plus one extra cycle per measured chain-walk step beyond the
+        // first — the actual non-determinism cost on this workload.
+        let ii = if self.job.handle_collisions {
+            let avg_steps = st.probe_steps as f64 / st.probes.max(1) as f64;
+            II_COLLISION_BASE + (avg_steps - 1.0).max(0.0)
+        } else {
+            1.0
+        };
+        let in_bytes = self.job.l_items * 4;
+        let out_bytes = st.out_lines * LINE_BYTES;
+        let out_ratio = out_bytes as f64 / in_bytes.max(1) as f64;
+        let mut phase = Phase::new(format!("probe[{p}]"), in_bytes)
+            .with_buffer(&self.job.l, 0, 1.0)
+            .with_rate_cap(rate_at_ii(&self.cfg, ii.max(1.0)));
+        if out_ratio > 0.0 {
+            phase = phase.with_buffer(&self.job.output, 2, out_ratio);
+        }
+        self.queued.push(phase);
+        self.stats.push(st);
+    }
+
+    fn finalize(&mut self, mem: &mut HbmMemory) {
+        self.job.output.write_u32s(mem, 0, &self.out_words);
+        self.out_bytes = self.out_words.len() as u64 * 4;
+    }
+}
+
+impl Engine for JoinEngine {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> String {
+        format!("join[base={}]", self.job.l_index_base)
+    }
+
+    fn next_phase(&mut self, mem: &mut HbmMemory) -> Option<Phase> {
+        if let Some(p) = if self.queued.is_empty() { None } else { Some(self.queued.remove(0)) } {
+            return Some(p);
+        }
+        if self.pass < self.n_passes {
+            let p = self.pass;
+            self.pass += 1;
+            self.run_pass(mem, p);
+            if self.pass == self.n_passes {
+                self.finalize(mem);
+            }
+            return Some(self.queued.remove(0));
+        }
+        None
+    }
+}
+
+/// Decode a padded output buffer into (s_position, l_index) match pairs.
+pub fn compact_matches(
+    mem: &HbmMemory,
+    out: &ShimBuffer,
+    out_bytes: u64,
+) -> Vec<(u32, u32)> {
+    let words = out.read_u32s(mem, 0, (out_bytes / 4) as usize);
+    words
+        .chunks_exact(2)
+        .filter(|c| c[0] != DUMMY || c[1] != DUMMY)
+        .map(|c| (c[0], c[1]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::sim;
+    use crate::hbm::config::FabricClock;
+    use crate::hbm::shim::Shim;
+    use crate::util::rng::Xoshiro256;
+
+    struct Fixture {
+        cfg: HbmConfig,
+        mem: HbmMemory,
+        shim: Shim,
+    }
+
+    fn fixture() -> Fixture {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        Fixture { cfg: cfg.clone(), mem: HbmMemory::new(), shim: Shim::new(cfg) }
+    }
+
+    fn run_join(
+        f: &mut Fixture,
+        s: &[u32],
+        l: &[u32],
+        handle_collisions: bool,
+    ) -> (sim::SimReport, Vec<(u32, u32)>, u64) {
+        let s_buf = f.shim.alloc(0, (s.len() * 4) as u64).unwrap();
+        let l_buf = f.shim.alloc(0, (l.len() * 4) as u64).unwrap();
+        // Worst case output: every probe matches every duplicate.
+        let out_buf = f.shim.alloc(1, (l.len() * 64) as u64 + 128).unwrap();
+        s_buf.write_u32s(&mut f.mem, 0, s);
+        l_buf.write_u32s(&mut f.mem, 0, l);
+        let job = JoinJob {
+            s: s_buf,
+            s_items: s.len() as u64,
+            handle_collisions,
+            l: l_buf,
+            l_items: l.len() as u64,
+            l_index_base: 0,
+            output: out_buf,
+        };
+        let mut engine = JoinEngine::new(f.cfg.clone(), job);
+        // Drive manually so we can inspect the engine afterwards.
+        let mut engines: Vec<Box<dyn Engine>> = Vec::new();
+        // Run functional+timing by temporarily boxing a fresh engine; use
+        // the original for assertions after simulating the same job.
+        let report = {
+            let job2 = JoinJob {
+                s: s_buf,
+                s_items: s.len() as u64,
+                handle_collisions,
+                l: l_buf,
+                l_items: l.len() as u64,
+                l_index_base: 0,
+                output: out_buf,
+            };
+            engines.push(Box::new(JoinEngine::new(f.cfg.clone(), job2)));
+            sim::run(&f.cfg, &mut f.mem, &mut engines)
+        };
+        // Re-execute functionally for the pair list.
+        while engine.next_phase(&mut f.mem).is_some() {}
+        let pairs = compact_matches(&f.mem, &out_buf, engine.out_bytes);
+        (report, pairs, engine.total_matches)
+    }
+
+    /// Oracle: nested-loop join over positions.
+    fn oracle(s: &[u32], l: &[u32]) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for (li, &lk) in l.iter().enumerate() {
+            for (si, &sk) in s.iter().enumerate() {
+                if sk == lk {
+                    out.push((si as u32, li as u32));
+                }
+            }
+        }
+        out
+    }
+
+    fn normalized(mut v: Vec<(u32, u32)>) -> Vec<(u32, u32)> {
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn unique_s_matches_oracle() {
+        let mut f = fixture();
+        let s: Vec<u32> = (1..=1000u32).map(|k| k * 7).collect();
+        let mut rng = Xoshiro256::new(2);
+        let l: Vec<u32> = (0..50_000).map(|_| rng.next_u32() % 10_000).collect();
+        let (_, pairs, matches) = run_join(&mut f, &s, &l, false);
+        let want = oracle(&s, &l);
+        assert_eq!(matches as usize, want.len());
+        assert_eq!(normalized(pairs), normalized(want));
+    }
+
+    #[test]
+    fn collision_path_matches_oracle_too() {
+        let mut f = fixture();
+        let s: Vec<u32> = (0..500u32).map(|k| k * 101 + 3).collect();
+        let l: Vec<u32> = (0..20_000u32).collect();
+        let (_, pairs, _) = run_join(&mut f, &s, &l, true);
+        let want = oracle(&s, &l);
+        assert_eq!(normalized(pairs), normalized(want));
+    }
+
+    #[test]
+    fn duplicate_s_emits_all_matches() {
+        let mut f = fixture();
+        // Every key appears twice in S.
+        let mut s: Vec<u32> = (1..=200u32).flat_map(|k| [k, k]).collect();
+        s.sort_unstable();
+        let l: Vec<u32> = (1..=400u32).collect();
+        let (_, pairs, matches) = run_join(&mut f, &s, &l, true);
+        let want = oracle(&s, &l);
+        assert_eq!(matches as usize, want.len());
+        assert_eq!(normalized(pairs), normalized(want));
+        // 200 L keys hit twice each.
+        assert_eq!(matches, 400);
+    }
+
+    #[test]
+    fn large_s_takes_multiple_passes() {
+        let mut f = fixture();
+        let s: Vec<u32> = (1..=20_000u32).collect(); // 3 passes of 8192
+        let l: Vec<u32> = (1..=30_000u32).collect();
+        let s_items = s.len() as u64;
+        let job_passes = (s_items as usize).div_ceil(HT_TUPLES);
+        assert_eq!(job_passes, 3);
+        let (report, pairs, _) = run_join(&mut f, &s, &l, false);
+        assert_eq!(pairs.len(), 20_000);
+        // Each pass reads all of L: at least 3 probe phases + 3 builds.
+        assert!(report.engines[0].phases >= 6);
+    }
+
+    #[test]
+    fn ii1_probe_rate_approaches_port_rate() {
+        // Table I row 4 (1 engine): S unique, no collision handling, L in
+        // HBM → ~12.8 GB/s measured; our port model sustains ~11.9.
+        let mut f = fixture();
+        let s: Vec<u32> = (1..=4096u32).map(|k| k * 31) .collect();
+        let l: Vec<u32> = (0..8_000_000u32).collect();
+        let (report, ..) = run_join(&mut f, &s, &l, false);
+        let rate = (l.len() * 4) as f64 / report.makespan / 1e9;
+        assert!(rate > 11.0 && rate < 13.0, "rate={rate}");
+    }
+
+    #[test]
+    fn collision_datapath_costs_about_6x() {
+        // Table I rows 2 vs 4 (1 engine): 12.77 → 2.13 GB/s with the
+        // collision-handling datapath, S still unique.
+        let mut f = fixture();
+        let s: Vec<u32> = (1..=4096u32).map(|k| k * 31).collect();
+        let l: Vec<u32> = (0..4_000_000u32).collect();
+        let (fast, ..) = run_join(&mut f, &s, &l, false);
+        let mut f2 = fixture();
+        let (slow, ..) = run_join(&mut f2, &s, &l, true);
+        let ratio = slow.makespan / fast.makespan;
+        assert!(
+            ratio > 5.0 && ratio < 8.0,
+            "collision handling should cost ~6x, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn empty_l_or_s_behaves() {
+        let mut f = fixture();
+        let (_, pairs, matches) = run_join(&mut f, &[42], &[1, 2, 3], false);
+        assert_eq!(matches, 0);
+        assert!(pairs.is_empty());
+    }
+}

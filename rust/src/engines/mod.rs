@@ -1,0 +1,128 @@
+//! Scale-out compute engines and their simulation driver.
+//!
+//! The paper's system architecture (§III) attaches many identical compute
+//! engines (CEs) to the HBM-shim's logical ports, all coordinated by a
+//! central control unit that software drives asynchronously through a
+//! register interface. This module provides:
+//!
+//! * [`Phase`]/[`Engine`] — the protocol engines use to expose their
+//!   work to the timing simulator: an engine is a state machine emitting
+//!   *phases* (e.g. "ingress 64 KiB", "probe pass 3"), each with the HBM
+//!   flows it drives and an optional compute-bound rate ceiling;
+//! * [`sim::Simulation`] — the event-driven fluid simulation: it solves
+//!   the crossbar allocation for all concurrently-active phases, advances
+//!   time to the next phase completion, and repeats;
+//! * [`control::ControlUnit`] — the CSR (register read/write) facade the
+//!   coordinator uses to start/stop/poll engines, mirroring the paper's
+//!   asynchronous software control.
+
+pub mod control;
+pub mod join;
+pub mod pipeline;
+pub mod selection;
+pub mod sgd;
+pub mod sim;
+
+use crate::hbm::fluid::Flow;
+use crate::hbm::memory::HbmMemory;
+
+/// One unit of engine work visible to the timing simulator.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Human-readable label for traces ("build", "probe", "epoch 3"...).
+    pub label: String,
+    /// Total progress units (bytes of pacing traffic) in this phase.
+    pub work_bytes: u64,
+    /// HBM flows active while the phase runs. `per_unit` of each flow is
+    /// how many bytes that flow moves per byte of phase progress.
+    pub flows: Vec<PhaseFlow>,
+    /// Compute-side ceiling on phase progress (bytes/s of pacing traffic),
+    /// e.g. an II>1 probe pipeline. `INFINITY` = memory-bound.
+    pub rate_cap: f64,
+    /// Fixed setup/drain time added to the phase (pipeline fills, buffer
+    /// switches), in seconds.
+    pub fixed_overhead: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PhaseFlow {
+    pub flow: Flow,
+    /// Bytes this flow moves per byte of phase progress.
+    pub per_unit: f64,
+}
+
+impl Phase {
+    pub fn new(label: impl Into<String>, work_bytes: u64) -> Self {
+        Self {
+            label: label.into(),
+            work_bytes,
+            flows: Vec::new(),
+            rate_cap: f64::INFINITY,
+            fixed_overhead: 0.0,
+        }
+    }
+
+    pub fn with_flow(mut self, flow: Flow, per_unit: f64) -> Self {
+        self.flows.push(PhaseFlow { flow, per_unit });
+        self
+    }
+
+    pub fn with_flows(mut self, flows: Vec<Flow>, per_unit: f64) -> Self {
+        for f in flows {
+            self.flows.push(PhaseFlow { flow: f, per_unit });
+        }
+        self
+    }
+
+    /// Attach a shim-striped buffer's traffic: the two per-stack flows
+    /// together move `per_unit_total` bytes per byte of phase progress
+    /// (half each, since the shim splits lines evenly across stacks).
+    pub fn with_buffer(
+        self,
+        buf: &crate::hbm::shim::ShimBuffer,
+        id_base: usize,
+        per_unit_total: f64,
+    ) -> Self {
+        self.with_flows(buf.flows(id_base, f64::INFINITY), per_unit_total / 2.0)
+    }
+
+    pub fn with_rate_cap(mut self, cap: f64) -> Self {
+        self.rate_cap = cap;
+        self
+    }
+
+    pub fn with_overhead(mut self, secs: f64) -> Self {
+        self.fixed_overhead = secs;
+        self
+    }
+
+    /// A pure compute/latency phase with no HBM traffic.
+    pub fn compute(label: impl Into<String>, secs: f64) -> Self {
+        Self::new(label, 0).with_overhead(secs)
+    }
+}
+
+/// A compute engine as seen by the simulator: a state machine producing
+/// phases until done. Functional work (producing the actual output data)
+/// happens inside `next_phase`, reading/writing the shared [`HbmMemory`].
+pub trait Engine {
+    fn name(&self) -> String;
+    /// Produce the next phase of work, or `None` when the engine is done.
+    fn next_phase(&mut self, mem: &mut HbmMemory) -> Option<Phase>;
+    /// Downcast hook so coordinators can read results (match counts,
+    /// trained models, output sizes) back out of a finished engine
+    /// without re-running its functional pass.
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Statistics for one engine after a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub name: String,
+    /// Total bytes moved over HBM by this engine's flows.
+    pub hbm_bytes: u64,
+    /// Time from simulation start until this engine's last phase ended.
+    pub finish_time: f64,
+    /// Number of phases executed.
+    pub phases: u64,
+}

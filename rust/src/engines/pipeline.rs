@@ -1,0 +1,87 @@
+//! Shared pipeline-timing vocabulary for the HLS-style engines.
+//!
+//! Every engine in the paper is a Vivado-HLS dataflow pipeline clocked at
+//! 200 MHz consuming/producing one 512-bit line (16 × 32-bit values) per
+//! cycle at initiation interval II = 1 when nothing stalls. This module
+//! centralizes the cycle accounting all three engines share, so the stall
+//! models (collision handling in the join, RAW hazards in SGD, buffer
+//! switches in selection) are stated in one place and unit-tested in
+//! isolation.
+
+use crate::hbm::config::HbmConfig;
+
+/// Lanes per 512-bit line of 32-bit values (the paper's PARALLELISM).
+pub const PARALLELISM: usize = 16;
+/// Bytes per 512-bit line.
+pub const LINE_BYTES: u64 = 64;
+
+/// Convert a cycle count at the fabric clock into seconds.
+#[inline]
+pub fn cycles_to_secs(cfg: &HbmConfig, cycles: f64) -> f64 {
+    cycles / cfg.clock.hz()
+}
+
+/// Peak line-rate of an II=1 pipeline in bytes/s — one 512-bit line per
+/// fabric cycle (12.8 GB/s at 200 MHz, matching one shim port).
+#[inline]
+pub fn line_rate(cfg: &HbmConfig) -> f64 {
+    LINE_BYTES as f64 * cfg.clock.hz()
+}
+
+/// Consumption rate of a pipeline with initiation interval `ii` ≥ 1:
+/// one line every `ii` cycles.
+#[inline]
+pub fn rate_at_ii(cfg: &HbmConfig, ii: f64) -> f64 {
+    assert!(ii >= 1.0);
+    line_rate(cfg) / ii
+}
+
+/// Utilization of a pipeline that streams `stream_cycles` of useful work
+/// and then stalls for `bubble_cycles` before it can restart (the SGD
+/// RAW-dependency pattern of §VI).
+#[inline]
+pub fn stream_utilization(stream_cycles: f64, bubble_cycles: f64) -> f64 {
+    stream_cycles / (stream_cycles + bubble_cycles)
+}
+
+/// Number of lines needed to carry `items` 32-bit values.
+#[inline]
+pub fn lines_for_items(items: u64) -> u64 {
+    items.div_ceil(PARALLELISM as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hbm::config::FabricClock;
+
+    #[test]
+    fn line_rate_matches_shim_port() {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        // 64 B × 200 MHz = 12.8 GB/s (paper §IV: "theoretical maximum is
+        // 12.8 GB/s" per engine).
+        assert!((line_rate(&cfg) - 12.8e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn ii_scales_rate() {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        assert!((rate_at_ii(&cfg, 2.0) - 6.4e9).abs() < 1e3);
+        assert!((rate_at_ii(&cfg, 6.0) - 12.8e9 / 6.0).abs() < 1e3);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        assert!((stream_utilization(100.0, 0.0) - 1.0).abs() < 1e-12);
+        assert!((stream_utilization(100.0, 100.0) - 0.5).abs() < 1e-12);
+        assert!(stream_utilization(1.0, 1000.0) < 0.01);
+    }
+
+    #[test]
+    fn lines_round_up() {
+        assert_eq!(lines_for_items(0), 0);
+        assert_eq!(lines_for_items(1), 1);
+        assert_eq!(lines_for_items(16), 1);
+        assert_eq!(lines_for_items(17), 2);
+    }
+}

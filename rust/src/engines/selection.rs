@@ -1,0 +1,292 @@
+//! Range-selection compute engine (paper §IV, Figure 4 / Algorithm 1).
+//!
+//! Scans a column of 32-bit integers and emits the indexes of values
+//! inside `[lo, hi]`. The hardware engine alternates between an *ingress*
+//! pipeline (DMA-read 512-bit lines → 16 parallel compare/update units →
+//! per-lane on-chip result buffers) and an *egress* pipeline (assemble
+//! 512-bit result lines → DMA-write), switching every `BUFFER_SIZE` input
+//! lines. Because the 16 lanes buffer matches independently, egress lines
+//! are padded with a dummy element wherever a lane produced fewer matches
+//! than the fullest lane — exactly the trick the paper notes is also
+//! needed for SIMD CPUs.
+//!
+//! Timing model: ingress and egress time-share the engine's single shim
+//! port, so consumption rate degrades with selectivity (Fig. 6); each
+//! ingress/egress switch costs [`SWITCH_OVERHEAD_CYCLES`] (pipeline
+//! fill/drain — calibrated so one engine sustains the paper's 11 GB/s at
+//! 0% selectivity against the 12.8 GB/s port).
+
+use super::pipeline::{cycles_to_secs, LINE_BYTES, PARALLELISM};
+use super::{Engine, Phase};
+use crate::hbm::memory::HbmMemory;
+use crate::hbm::shim::ShimBuffer;
+use crate::hbm::HbmConfig;
+
+/// Input lines per ingress/egress switch (paper: 1024 → 64 KiB of
+/// per-lane index buffers).
+pub const BUFFER_SIZE: usize = 1024;
+/// Padding value for unfilled egress lanes.
+pub const DUMMY: u32 = u32::MAX;
+/// Pipeline fill/drain cost per ingress/egress switch, in cycles
+/// (calibrated to the paper's 11 GB/s single-engine rate at 0% selectivity).
+pub const SWITCH_OVERHEAD_CYCLES: f64 = 88.0;
+
+/// Job description for one selection engine.
+#[derive(Debug, Clone)]
+pub struct SelectionJob {
+    /// Column slice this engine scans.
+    pub input: ShimBuffer,
+    /// Number of 32-bit items in `input`.
+    pub items: u64,
+    /// Global index of the first item (partitioned inputs).
+    pub index_base: u32,
+    /// Inclusive range predicate.
+    pub lo: u32,
+    pub hi: u32,
+    /// Output buffer for padded index lines.
+    pub output: ShimBuffer,
+}
+
+/// Functional + timing model of one selection engine.
+pub struct SelectionEngine {
+    cfg: HbmConfig,
+    job: SelectionJob,
+    state: State,
+    /// Filled after the scan: total matches (excluding padding).
+    pub matches: u64,
+    /// Bytes of (padded) output produced.
+    pub out_bytes: u64,
+}
+
+enum State {
+    Pending,
+    Done,
+}
+
+impl SelectionEngine {
+    pub fn new(cfg: HbmConfig, job: SelectionJob) -> Self {
+        Self { cfg, job, state: State::Pending, matches: 0, out_bytes: 0 }
+    }
+
+    /// Run the scan functionally: read the column through the shim, apply
+    /// the predicate per lane, write padded result lines. Returns
+    /// (matches, padded output lines).
+    fn run_functional(&mut self, mem: &mut HbmMemory) -> (u64, u64) {
+        let items = self.job.items as usize;
+        let data = self.job.input.read_u32s(mem, 0, items);
+        let chunk_items = BUFFER_SIZE * PARALLELISM;
+        let mut total_matches = 0u64;
+        let mut out_lines = 0u64;
+        let mut out_words: Vec<u32> = Vec::new();
+
+        for (ci, chunk) in data.chunks(chunk_items).enumerate() {
+            // Per-lane match buffers (lane = item index mod PARALLELISM,
+            // the spatial partitioning of the 16 update units).
+            let mut lanes: Vec<Vec<u32>> = vec![Vec::new(); PARALLELISM];
+            for (i, &v) in chunk.iter().enumerate() {
+                if v >= self.job.lo && v <= self.job.hi {
+                    let global = self.job.index_base
+                        + (ci * chunk_items + i) as u32;
+                    lanes[i % PARALLELISM].push(global);
+                }
+            }
+            let max_lane = lanes.iter().map(|l| l.len()).max().unwrap_or(0);
+            total_matches += lanes.iter().map(|l| l.len() as u64).sum::<u64>();
+            // Egress: one 512-bit line per row of lane buffers, padded.
+            for row in 0..max_lane {
+                for lane in lanes.iter() {
+                    out_words.push(*lane.get(row).unwrap_or(&DUMMY));
+                }
+            }
+            out_lines += max_lane as u64;
+        }
+        self.job.output.write_u32s(mem, 0, &out_words);
+        (total_matches, out_lines)
+    }
+}
+
+impl Engine for SelectionEngine {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> String {
+        format!("selection[base={}]", self.job.index_base)
+    }
+
+    fn next_phase(&mut self, mem: &mut HbmMemory) -> Option<Phase> {
+        match self.state {
+            State::Done => None,
+            State::Pending => {
+                let (matches, out_lines) = self.run_functional(mem);
+                self.matches = matches;
+                self.out_bytes = out_lines * LINE_BYTES;
+                self.state = State::Done;
+
+                let in_bytes = self.job.items * 4;
+                let n_switches =
+                    (self.job.items as f64 / (BUFFER_SIZE * PARALLELISM) as f64)
+                        .ceil();
+                let overhead = cycles_to_secs(
+                    &self.cfg,
+                    n_switches * SWITCH_OVERHEAD_CYCLES,
+                );
+                let out_ratio = self.out_bytes as f64 / in_bytes.max(1) as f64;
+                // Ingress paced by input bytes; egress traffic rides along
+                // at `out_ratio` bytes per input byte on the same port.
+                let mut phase = Phase::new("scan", in_bytes)
+                    .with_buffer(&self.job.input, 0, 1.0)
+                    .with_overhead(overhead);
+                if out_ratio > 0.0 {
+                    phase = phase.with_buffer(&self.job.output, 2, out_ratio);
+                }
+                Some(phase)
+            }
+        }
+    }
+}
+
+/// Decode a padded result buffer back into the compacted index list
+/// (what the DBMS does after copying results to host memory).
+pub fn compact_results(mem: &HbmMemory, out: &ShimBuffer, out_bytes: u64) -> Vec<u32> {
+    let words = out.read_u32s(mem, 0, (out_bytes / 4) as usize);
+    words.into_iter().filter(|&w| w != DUMMY).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::sim;
+    use crate::hbm::config::FabricClock;
+    use crate::hbm::shim::Shim;
+    use crate::util::rng::Xoshiro256;
+
+    fn setup(items: u64) -> (HbmConfig, HbmMemory, Shim) {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let mem = HbmMemory::new();
+        let shim = Shim::new(cfg.clone());
+        let _ = items;
+        (cfg, mem, shim)
+    }
+
+    fn run_one(
+        items: u64,
+        lo: u32,
+        hi: u32,
+        data: &[u32],
+    ) -> (sim::SimReport, u64, Vec<u32>, u64) {
+        let (cfg, mut mem, mut shim) = setup(items);
+        let input = shim.alloc(0, items * 4).unwrap();
+        let output = shim.alloc(0, items * 4 + 64).unwrap();
+        input.write_u32s(&mut mem, 0, data);
+        let job = SelectionJob { input, items, index_base: 0, lo, hi, output };
+        let mut engines: Vec<Box<dyn Engine>> =
+            vec![Box::new(SelectionEngine::new(cfg.clone(), job))];
+        let report = sim::run(&cfg, &mut mem, &mut engines);
+        // Recover engine fields via a fresh functional pass for assertions.
+        let mut probe = SelectionEngine::new(
+            cfg.clone(),
+            SelectionJob { input, items, index_base: 0, lo, hi, output },
+        );
+        let (matches, out_lines) = probe.run_functional(&mut mem);
+        let idx = compact_results(&mem, &output, out_lines * 64);
+        (report, matches, idx, out_lines * 64)
+    }
+
+    #[test]
+    fn finds_exactly_the_in_range_indexes() {
+        let data: Vec<u32> = (0..1000u32).collect();
+        let (_, matches, idx, _) = run_one(1000, 100, 199, &data);
+        assert_eq!(matches, 100);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (100..200).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn zero_selectivity_produces_no_output() {
+        let data: Vec<u32> = vec![5; 100_000];
+        let (_, matches, idx, out_bytes) = run_one(100_000, 100, 200, &data);
+        assert_eq!(matches, 0);
+        assert!(idx.is_empty());
+        assert_eq!(out_bytes, 0);
+    }
+
+    #[test]
+    fn full_selectivity_output_equals_input_size() {
+        let data: Vec<u32> = (0..64_000u32).collect();
+        let (_, matches, _, out_bytes) = run_one(64_000, 0, u32::MAX, &data);
+        assert_eq!(matches, 64_000);
+        // All lanes fill evenly → no padding: output bytes == input bytes.
+        assert_eq!(out_bytes, 64_000 * 4);
+    }
+
+    #[test]
+    fn padding_overhead_is_bounded() {
+        // Random 10% selectivity: padded output exceeds matches, but by a
+        // bounded factor (lane imbalance within 1024-line chunks).
+        let mut rng = Xoshiro256::new(1);
+        let data: Vec<u32> =
+            (0..1_000_000).map(|_| rng.next_u32() % 1000).collect();
+        let (_, matches, idx, out_bytes) = run_one(1_000_000, 0, 99, &data);
+        assert!(matches > 80_000 && matches < 120_000, "matches={matches}");
+        assert_eq!(idx.len() as u64, matches);
+        let padded_items = out_bytes / 4;
+        assert!(padded_items >= matches);
+        assert!(
+            (padded_items as f64) < matches as f64 * 1.25,
+            "padding blowup: {padded_items} vs {matches}"
+        );
+    }
+
+    #[test]
+    fn single_engine_rate_matches_paper_11gbs() {
+        // Fig. 5: 11 GB/s per engine at 0% selectivity (200 MHz).
+        let items = 8_000_000u64;
+        let data: Vec<u32> = vec![0; items as usize];
+        let (report, ..) = run_one(items, 100, 200, &data);
+        let rate = (items * 4) as f64 / report.makespan / 1e9;
+        assert!((rate - 11.0).abs() < 0.3, "rate={rate}");
+    }
+
+    #[test]
+    fn high_selectivity_roughly_halves_consumption() {
+        // Fig. 6: at 100% selectivity the port is shared between reads and
+        // writes → input consumption drops to ~half.
+        let items = 4_000_000u64;
+        let data: Vec<u32> = (0..items as u32).collect();
+        let (r0, ..) = run_one(items, u32::MAX, u32::MAX, &data); // 0%
+        let (r100, ..) = run_one(items, 0, u32::MAX, &data); // 100%
+        let ratio = r100.makespan / r0.makespan;
+        assert!((ratio - 2.0).abs() < 0.15, "ratio={ratio}");
+    }
+
+    #[test]
+    fn fourteen_engines_reach_fig5_aggregate() {
+        // Fig. 5a: 154 GB/s with 14 engines on ideally partitioned data.
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let mut mem = HbmMemory::new();
+        let mut shim = Shim::new(cfg.clone());
+        let per_engine = 2_000_000u64;
+        let mut engines: Vec<Box<dyn Engine>> = Vec::new();
+        for e in 0..14usize {
+            let input = shim.alloc(e, per_engine * 4).unwrap();
+            let output = shim.alloc(e, per_engine * 4 + 64).unwrap();
+            input.write_u32s(&mut mem, 0, &vec![0u32; per_engine as usize]);
+            engines.push(Box::new(SelectionEngine::new(
+                cfg.clone(),
+                SelectionJob {
+                    input,
+                    items: per_engine,
+                    index_base: (e as u32) * per_engine as u32,
+                    lo: 1,
+                    hi: 2,
+                    output,
+                },
+            )));
+        }
+        let report = sim::run(&cfg, &mut mem, &mut engines);
+        let rate = (14 * per_engine * 4) as f64 / report.makespan / 1e9;
+        assert!((rate - 154.0).abs() < 4.0, "aggregate rate={rate}");
+    }
+}

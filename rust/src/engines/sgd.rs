@@ -1,0 +1,424 @@
+//! SGD compute engine for generalized linear models (paper §VI, Figure 9 /
+//! Algorithm 3).
+//!
+//! Trains ridge or logistic regression by minibatch SGD. The hardware is a
+//! dataflow pipeline — Dot (16 floats/cycle), ScalarEngine (step-size ×
+//! nonlinearity), Update (rank-1 gradient accumulation) — that scans the
+//! dataset once per epoch from HBM.
+//!
+//! Unlike Kara et al. [9] the paper *respects* the read-after-write
+//! dependency between the model update (Algorithm 3 line 7) and the next
+//! minibatch's dot products (line 4): the pipeline drains before the next
+//! minibatch starts. The resulting bubble penalizes low-dimensional
+//! datasets and small minibatches (Fig. 10b, Fig. 11):
+//!
+//! ```text
+//! cycles/minibatch = B·⌈n/16⌉            (streaming)
+//!                  + BUBBLE_FIXED + ⌈n/16⌉ (drain: dot tail + scalar + x-update)
+//! ```
+//!
+//! At n=2048, B=16 this gives 93% pipeline utilization → 11.1 GB/s per
+//! engine, matching the paper's best case (1.7× the 6.5 GB/s of [9]).
+
+use super::pipeline::{line_rate, stream_utilization, PARALLELISM};
+use super::{Engine, Phase};
+use crate::hbm::memory::HbmMemory;
+use crate::hbm::shim::ShimBuffer;
+use crate::hbm::HbmConfig;
+
+/// Fixed part of the RAW-dependency bubble in cycles (dot-product adder
+/// tree tail + sigmoid/scale scalar engine latency).
+pub const BUBBLE_FIXED: f64 = 20.0;
+
+/// Loss function selection (Algorithm 3's two instantiations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlmTask {
+    /// Ridge regression: J = ½(⟨x,a⟩ − b)² + λ‖x‖².
+    Ridge,
+    /// L2-regularized logistic regression.
+    Logistic,
+}
+
+/// Hyperparameters of one training job.
+#[derive(Debug, Clone)]
+pub struct SgdHyperParams {
+    pub task: GlmTask,
+    /// Step size α.
+    pub alpha: f32,
+    /// L2 regularization λ.
+    pub lambda: f32,
+    /// Minibatch size B.
+    pub minibatch: usize,
+    pub epochs: usize,
+}
+
+/// Job description: where the dataset lives in HBM and its shape.
+/// Layout: `m × n` row-major f32 features followed by `m` f32 labels.
+#[derive(Debug, Clone)]
+pub struct SgdJob {
+    pub data: ShimBuffer,
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub params: SgdHyperParams,
+    /// Where to write the trained model (n f32s).
+    pub model_out: ShimBuffer,
+}
+
+impl SgdJob {
+    pub fn dataset_bytes(&self) -> u64 {
+        (self.n_samples * (self.n_features + 1) * 4) as u64
+    }
+}
+
+/// Pipeline utilization under the preserved RAW dependency.
+pub fn utilization(n_features: usize, minibatch: usize) -> f64 {
+    let nl = n_features.div_ceil(PARALLELISM) as f64;
+    let stream = minibatch as f64 * nl;
+    let bubble = BUBBLE_FIXED + nl;
+    stream_utilization(stream, bubble)
+}
+
+/// Effective per-engine consumption rate in bytes/s: the pipeline's
+/// utilization applied to what the shim port actually sustains
+/// (line rate × sequential efficiency).
+pub fn engine_rate(cfg: &HbmConfig, n_features: usize, minibatch: usize) -> f64 {
+    line_rate(cfg) * cfg.eta_seq * utilization(n_features, minibatch)
+}
+
+pub struct SgdEngine {
+    cfg: HbmConfig,
+    job: SgdJob,
+    epoch: usize,
+    /// Cached host copy of the dataset (read once through the shim; the
+    /// timing model still charges every epoch's HBM traffic).
+    features: Vec<f32>,
+    labels: Vec<f32>,
+    /// Model vector x (lives in URAM on the device).
+    pub model: Vec<f32>,
+    /// Training loss measured at the END of each epoch.
+    pub loss_history: Vec<f64>,
+    loaded: bool,
+    wrote_model: bool,
+}
+
+impl SgdEngine {
+    pub fn new(cfg: HbmConfig, job: SgdJob) -> Self {
+        let n = job.n_features;
+        Self {
+            cfg,
+            job,
+            epoch: 0,
+            features: Vec::new(),
+            labels: Vec::new(),
+            model: vec![0.0; n],
+            loss_history: Vec::new(),
+            loaded: false,
+            wrote_model: false,
+        }
+    }
+
+    fn load(&mut self, mem: &HbmMemory) {
+        let m = self.job.n_samples;
+        let n = self.job.n_features;
+        let all = self.job.data.read_f32s(mem, 0, m * (n + 1));
+        self.features = all[..m * n].to_vec();
+        self.labels = all[m * n..].to_vec();
+        self.loaded = true;
+    }
+
+    #[inline]
+    fn predict_raw(&self, row: usize) -> f32 {
+        let n = self.job.n_features;
+        let a = &self.features[row * n..(row + 1) * n];
+        crate::util::simd::dot_f32(a, &self.model)
+    }
+
+    /// One full epoch of minibatch SGD (Algorithm 3 lines 2–11).
+    fn run_epoch(&mut self) {
+        let m = self.job.n_samples;
+        let n = self.job.n_features;
+        let p = self.job.params.clone();
+        let mut g = vec![0.0f32; n];
+        let mut in_batch = 0usize;
+        for i in 0..m {
+            let dot = self.predict_raw(i);
+            let b = self.labels[i];
+            // ScalarEngine: scaled residual.
+            let d = match p.task {
+                GlmTask::Ridge => dot - b,
+                GlmTask::Logistic => sigmoid(dot) - b,
+            };
+            let a = &self.features[i * n..(i + 1) * n];
+            crate::util::simd::axpy_f32(&mut g, d, a);
+            in_batch += 1;
+            if in_batch == p.minibatch || i + 1 == m {
+                let scale = p.alpha / in_batch as f32;
+                for j in 0..n {
+                    self.model[j] -=
+                        scale * g[j] + p.alpha * 2.0 * p.lambda * self.model[j];
+                    g[j] = 0.0;
+                }
+                in_batch = 0;
+            }
+        }
+        self.loss_history.push(self.loss());
+    }
+
+    /// Current regularized training loss (Eq. 1).
+    pub fn loss(&self) -> f64 {
+        let m = self.job.n_samples;
+        let p = &self.job.params;
+        let mut total = 0.0f64;
+        for i in 0..m {
+            let dot = self.predict_raw(i);
+            let b = self.labels[i] as f64;
+            total += match p.task {
+                GlmTask::Ridge => 0.5 * (dot as f64 - b).powi(2),
+                GlmTask::Logistic => {
+                    let z = dot as f64;
+                    // Numerically-stable logistic loss:
+                    // log(1+e^z) − b·z.
+                    let log1pe = if z > 30.0 { z } else { (1.0 + z.exp()).ln() };
+                    log1pe - b * z
+                }
+            };
+        }
+        let reg: f64 = self
+            .model
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            * p.lambda as f64;
+        total / m as f64 + reg
+    }
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl Engine for SgdEngine {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> String {
+        format!("sgd[n={},B={}]", self.job.n_features, self.job.params.minibatch)
+    }
+
+    fn next_phase(&mut self, mem: &mut HbmMemory) -> Option<Phase> {
+        if !self.loaded {
+            self.load(mem);
+        }
+        if self.epoch < self.job.params.epochs {
+            self.epoch += 1;
+            self.run_epoch();
+            let rate = engine_rate(
+                &self.cfg,
+                self.job.n_features,
+                self.job.params.minibatch,
+            );
+            return Some(
+                Phase::new(format!("epoch[{}]", self.epoch), self.job.dataset_bytes())
+                    .with_buffer(&self.job.data, 0, 1.0)
+                    .with_rate_cap(rate),
+            );
+        }
+        if !self.wrote_model {
+            self.wrote_model = true;
+            self.job.model_out.write_f32s(mem, 0, &self.model);
+            let bytes = (self.job.n_features * 4) as u64;
+            return Some(
+                Phase::new("writeback", bytes)
+                    .with_buffer(&self.job.model_out, 0, 1.0),
+            );
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::sim;
+    use crate::hbm::config::FabricClock;
+    use crate::hbm::shim::Shim;
+    use crate::util::rng::Xoshiro256;
+
+    /// Build a planted ridge problem: b = ⟨x*, a⟩ (+ optional noise).
+    fn planted(
+        m: usize,
+        n: usize,
+        noise: f32,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256::new(seed);
+        let x_star: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let mut feats = Vec::with_capacity(m * n);
+        let mut labels = Vec::with_capacity(m);
+        for _ in 0..m {
+            let row: Vec<f32> =
+                (0..n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+            let y: f32 = row.iter().zip(&x_star).map(|(a, x)| a * x).sum::<f32>()
+                + noise * rng.normal_f32();
+            feats.extend_from_slice(&row);
+            labels.push(y);
+        }
+        (feats, labels, x_star)
+    }
+
+    fn make_job(
+        shim: &mut Shim,
+        mem: &mut HbmMemory,
+        m: usize,
+        n: usize,
+        params: SgdHyperParams,
+        seed: u64,
+    ) -> SgdJob {
+        let (feats, labels, _) = planted(m, n, 0.01, seed);
+        let data = shim.alloc(0, ((m * (n + 1)) * 4) as u64).unwrap();
+        let model_out = shim.alloc(0, (n * 4) as u64).unwrap();
+        let mut all = feats;
+        all.extend_from_slice(&labels);
+        data.write_f32s(mem, 0, &all);
+        SgdJob { data, n_samples: m, n_features: n, params, model_out }
+    }
+
+    #[test]
+    fn ridge_converges_on_planted_data() {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let mut mem = HbmMemory::new();
+        let mut shim = Shim::new(cfg.clone());
+        let params = SgdHyperParams {
+            task: GlmTask::Ridge,
+            alpha: 0.05,
+            lambda: 0.0,
+            minibatch: 16,
+            epochs: 15,
+        };
+        let job = make_job(&mut shim, &mut mem, 512, 32, params, 7);
+        let mut eng = SgdEngine::new(cfg.clone(), job);
+        let mut engines: Vec<Box<dyn Engine>> = vec![];
+        // Run functionally by driving phases directly.
+        while eng.next_phase(&mut mem).is_some() {}
+        let first = eng.loss_history[0];
+        let last = *eng.loss_history.last().unwrap();
+        assert!(last < first * 0.05, "no convergence: {first} -> {last}");
+        let _ = &mut engines;
+    }
+
+    #[test]
+    fn logistic_converges_and_loss_decreases_monotonically_early() {
+        let cfg = HbmConfig::default();
+        let mut mem = HbmMemory::new();
+        let mut shim = Shim::new(cfg.clone());
+        // Separable-ish classification problem.
+        let mut rng = Xoshiro256::new(3);
+        let m = 600;
+        let n = 24;
+        let x_star: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let mut all = Vec::with_capacity(m * (n + 1));
+        let mut labels = Vec::with_capacity(m);
+        for _ in 0..m {
+            let row: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+            let z: f32 = row.iter().zip(&x_star).map(|(a, x)| a * x).sum();
+            labels.push(if z > 0.0 { 1.0 } else { 0.0 });
+            all.extend_from_slice(&row);
+        }
+        all.extend_from_slice(&labels);
+        let data = shim.alloc(1, (all.len() * 4) as u64).unwrap();
+        data.write_f32s(&mut mem, 0, &all);
+        let model_out = shim.alloc(1, (n * 4) as u64).unwrap();
+        let job = SgdJob {
+            data,
+            n_samples: m,
+            n_features: n,
+            params: SgdHyperParams {
+                task: GlmTask::Logistic,
+                alpha: 0.5,
+                lambda: 0.0,
+                minibatch: 16,
+                epochs: 10,
+            },
+            model_out,
+        };
+        let mut eng = SgdEngine::new(cfg, job);
+        while eng.next_phase(&mut mem).is_some() {}
+        let h = &eng.loss_history;
+        assert!(h.last().unwrap() < &(h[0] * 0.7), "history={h:?}");
+    }
+
+    #[test]
+    fn utilization_model_matches_paper_anchors() {
+        // IM (n=2048, B=16): ~93% → 11.1 GB/s per engine at 200 MHz.
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let r_im = engine_rate(&cfg, 2048, 16) / 1e9;
+        assert!((r_im - 11.1).abs() < 0.2, "IM rate={r_im}");
+        // Low-dimensional AEA (n=126) is visibly worse (Fig. 10b).
+        let r_aea = engine_rate(&cfg, 126, 16) / 1e9;
+        assert!(r_aea < 10.0, "AEA rate={r_aea}");
+        // Minibatch 1 collapses utilization (Fig. 11 motivation).
+        assert!(utilization(2048, 1) < 0.55);
+        assert!(utilization(2048, 16) > 0.9);
+    }
+
+    #[test]
+    fn minibatch_size_preserves_convergence_quality() {
+        // Fig. 11's claim: B=1 and B=16 converge to the same loss, B=16
+        // just gets there faster in wall-clock.
+        let cfg = HbmConfig::default();
+        let mut finals = Vec::new();
+        let mut firsts = Vec::new();
+        for &b in &[1usize, 4, 16] {
+            let mut mem = HbmMemory::new();
+            let mut shim = Shim::new(cfg.clone());
+            let params = SgdHyperParams {
+                task: GlmTask::Ridge,
+                alpha: 0.05,
+                lambda: 0.0,
+                minibatch: b,
+                epochs: 60,
+            };
+            let job = make_job(&mut shim, &mut mem, 512, 32, params, 11);
+            let mut eng = SgdEngine::new(cfg.clone(), job);
+            while eng.next_phase(&mut mem).is_some() {}
+            firsts.push(eng.loss_history[0]);
+            finals.push(*eng.loss_history.last().unwrap());
+        }
+        // All minibatch sizes reach the noise floor (σ=0.01 → ~5e-5).
+        let _ = firsts;
+        for &fl in &finals {
+            assert!(fl < 2e-4, "finals={finals:?}");
+        }
+    }
+
+    #[test]
+    fn timed_run_writes_model_and_charges_epoch_traffic() {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let mut mem = HbmMemory::new();
+        let mut shim = Shim::new(cfg.clone());
+        let params = SgdHyperParams {
+            task: GlmTask::Ridge,
+            alpha: 0.05,
+            lambda: 0.0,
+            minibatch: 16,
+            epochs: 4,
+        };
+        let job = make_job(&mut shim, &mut mem, 256, 64, params, 5);
+        let model_out = job.model_out;
+        let n = job.n_features;
+        let bytes = job.dataset_bytes();
+        let mut engines: Vec<Box<dyn Engine>> =
+            vec![Box::new(SgdEngine::new(cfg.clone(), job))];
+        let report = sim::run(&cfg, &mut mem, &mut engines);
+        // 4 epochs of traffic + model writeback.
+        assert!(report.engines[0].hbm_bytes >= 4 * bytes);
+        let model = model_out.read_f32s(&mem, 0, n);
+        assert!(model.iter().any(|&x| x != 0.0), "model written back");
+        // Rate should be below the n=64 utilization ceiling.
+        let max_rate = engine_rate(&cfg, 64, 16);
+        let achieved = (4 * bytes) as f64 / report.makespan;
+        assert!(achieved <= max_rate * 1.01);
+    }
+}

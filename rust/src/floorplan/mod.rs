@@ -1,0 +1,13 @@
+//! FPGA physical-design models: resource consumption (Table III), SLR
+//! floorplanning and timing closure (§VII "Discussion: Timing").
+//!
+//! These models make the physical constraints the paper wrestles with
+//! first-class simulator citizens: engine counts are bounded by device
+//! resources, and the operating clock is decided by SLR crossings and
+//! utilization, not wishful thinking.
+
+pub mod resources;
+pub mod slr;
+
+pub use resources::{BitstreamSpec, EngineKind, ResourceReport, Resources};
+pub use slr::{floorplan, FloorplanResult, SlrAssignment};

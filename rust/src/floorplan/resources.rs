@@ -1,0 +1,266 @@
+//! Resource-consumption model of the three bitstreams (Table III).
+//!
+//! Device: Xilinx XCVU37P-2E-FSVH2892 (the AD9H7's engineering sample).
+//! The model splits each bitstream into shared *infrastructure* (HBM IP +
+//! HBM-shim + OpenCAPI endpoint + datamovers + control unit) and a
+//! per-engine increment, calibrated so the totals reproduce Table III for
+//! the paper's engine counts. The per-engine increments then let us ask
+//! counterfactuals the paper discusses qualitatively: how many engines
+//! *could* fit, and which resource runs out first (the paper: "resource
+//! consumption will be the determining factor to reach the target
+//! scale-out parallelism").
+
+/// One resource vector, in absolute units of the XCVU37P.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Resources {
+    pub lut: f64,
+    pub lutram: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub uram: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub const ZERO: Resources =
+        Resources { lut: 0.0, lutram: 0.0, ff: 0.0, bram: 0.0, uram: 0.0, dsp: 0.0 };
+
+    /// XCVU37P device totals.
+    pub const DEVICE: Resources = Resources {
+        lut: 1_303_680.0,
+        lutram: 600_960.0,
+        ff: 2_607_360.0,
+        bram: 2_016.0,
+        uram: 960.0,
+        dsp: 9_024.0,
+    };
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            lut: self.lut + o.lut,
+            lutram: self.lutram + o.lutram,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+            uram: self.uram + o.uram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+
+    pub fn scale(&self, k: f64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            lutram: self.lutram * k,
+            ff: self.ff * k,
+            bram: self.bram * k,
+            uram: self.uram * k,
+            dsp: self.dsp * k,
+        }
+    }
+
+    /// Utilization as a fraction of the device, per resource.
+    pub fn utilization(&self) -> Resources {
+        Resources {
+            lut: self.lut / Self::DEVICE.lut,
+            lutram: self.lutram / Self::DEVICE.lutram,
+            ff: self.ff / Self::DEVICE.ff,
+            bram: self.bram / Self::DEVICE.bram,
+            uram: self.uram / Self::DEVICE.uram,
+            dsp: self.dsp / Self::DEVICE.dsp,
+        }
+    }
+
+    /// Largest utilization fraction across resource kinds.
+    pub fn max_utilization(&self) -> f64 {
+        let u = self.utilization();
+        [u.lut, u.lutram, u.ff, u.bram, u.uram, u.dsp]
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+
+    pub fn fits(&self) -> bool {
+        self.max_utilization() <= 1.0
+    }
+
+    /// Utilization from Table-III-style percentages.
+    pub fn from_percent(
+        lut: f64,
+        lutram: f64,
+        ff: f64,
+        bram: f64,
+        uram: f64,
+        dsp: f64,
+    ) -> Resources {
+        Resources {
+            lut: Self::DEVICE.lut * lut / 100.0,
+            lutram: Self::DEVICE.lutram * lutram / 100.0,
+            ff: Self::DEVICE.ff * ff / 100.0,
+            bram: Self::DEVICE.bram * bram / 100.0,
+            uram: Self::DEVICE.uram * uram / 100.0,
+            dsp: Self::DEVICE.dsp * dsp / 100.0,
+        }
+    }
+}
+
+/// Shared infrastructure common to all three bitstreams: HBM IP + shim +
+/// OpenCAPI/TLx endpoint + datamovers + control. Calibrated as the
+/// intercept of the Table III rows.
+pub const INFRASTRUCTURE: Resources = Resources {
+    lut: 65_184.0,   // 5.0 % LUT
+    lutram: 6_010.0, // 1.0 % LUTRAM
+    ff: 130_368.0,   // 5.0 % FF
+    bram: 201.6,     // 10.0 % BRAM
+    uram: 0.0,
+    dsp: 0.0,
+};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    Selection,
+    Join,
+    Sgd,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Selection => "Selection",
+            EngineKind::Join => "Join",
+            EngineKind::Sgd => "SGD",
+        }
+    }
+
+    /// Engine count in the paper's shipped bitstreams.
+    pub fn paper_engines(&self) -> usize {
+        match self {
+            EngineKind::Selection => 14,
+            EngineKind::Join => 7,
+            EngineKind::Sgd => 14,
+        }
+    }
+
+    /// Per-engine resource increment: (Table III total − infrastructure)
+    /// divided by the paper's engine count.
+    pub fn per_engine(&self) -> Resources {
+        let (total, n) = (self.paper_total(), self.paper_engines() as f64);
+        Resources {
+            lut: (total.lut - INFRASTRUCTURE.lut) / n,
+            lutram: (total.lutram - INFRASTRUCTURE.lutram) / n,
+            ff: (total.ff - INFRASTRUCTURE.ff) / n,
+            bram: (total.bram - INFRASTRUCTURE.bram) / n,
+            uram: (total.uram - INFRASTRUCTURE.uram) / n,
+            dsp: (total.dsp - INFRASTRUCTURE.dsp) / n,
+        }
+    }
+
+    /// Table III row for this bitstream (ground truth).
+    pub fn paper_total(&self) -> Resources {
+        match self {
+            EngineKind::Selection => {
+                Resources::from_percent(17.99, 3.35, 17.97, 26.53, 23.33, 0.0)
+            }
+            EngineKind::Join => {
+                Resources::from_percent(40.81, 35.88, 26.13, 58.48, 23.33, 0.0)
+            }
+            EngineKind::Sgd => {
+                Resources::from_percent(55.76, 5.02, 47.29, 55.95, 46.66, 38.78)
+            }
+        }
+    }
+}
+
+/// A bitstream: an engine kind and how many engines it instantiates.
+#[derive(Debug, Clone, Copy)]
+pub struct BitstreamSpec {
+    pub kind: EngineKind,
+    pub engines: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ResourceReport {
+    pub spec: BitstreamSpec,
+    pub total: Resources,
+    /// Utilization fractions (0..1) per resource.
+    pub util: Resources,
+    pub fits: bool,
+}
+
+impl BitstreamSpec {
+    pub fn report(&self) -> ResourceReport {
+        let total = INFRASTRUCTURE
+            .add(&self.kind.per_engine().scale(self.engines as f64));
+        let util = total.utilization();
+        ResourceReport { spec: *self, fits: total.fits(), total, util }
+    }
+
+    /// Maximum engine count that fits the device (the paper's scale-out
+    /// ceiling question).
+    pub fn max_engines(kind: EngineKind) -> usize {
+        let mut n = 0;
+        loop {
+            let spec = BitstreamSpec { kind, engines: n + 1 };
+            if !spec.report().fits {
+                return n;
+            }
+            n += 1;
+            if n > 256 {
+                return n; // unbounded in practice
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table3_totals() {
+        for kind in [EngineKind::Selection, EngineKind::Join, EngineKind::Sgd] {
+            let spec = BitstreamSpec { kind, engines: kind.paper_engines() };
+            let rep = spec.report();
+            let want = kind.paper_total().utilization();
+            let got = rep.util;
+            for (g, w) in [
+                (got.lut, want.lut),
+                (got.lutram, want.lutram),
+                (got.ff, want.ff),
+                (got.bram, want.bram),
+                (got.uram, want.uram),
+                (got.dsp, want.dsp),
+            ] {
+                assert!((g - w).abs() < 1e-9, "{kind:?}: {g} vs {w}");
+            }
+            assert!(rep.fits);
+        }
+    }
+
+    #[test]
+    fn per_engine_costs_are_positive_where_expected() {
+        let sel = EngineKind::Selection.per_engine();
+        assert!(sel.lut > 0.0 && sel.bram > 0.0 && sel.uram > 0.0);
+        assert_eq!(sel.dsp, 0.0);
+        let sgd = EngineKind::Sgd.per_engine();
+        assert!(sgd.dsp > 0.0, "SGD uses DSPs for FP math");
+    }
+
+    #[test]
+    fn scale_out_ceilings_are_finite_and_sane() {
+        // SGD at ~56% LUT for 14 engines can roughly double but not 10x.
+        let max_sgd = BitstreamSpec::max_engines(EngineKind::Sgd);
+        assert!(max_sgd >= 14, "paper's own config must fit: {max_sgd}");
+        assert!(max_sgd < 40, "ceiling should be bounded: {max_sgd}");
+        // Join's URAM replication is the binding resource discussion.
+        let max_join = BitstreamSpec::max_engines(EngineKind::Join);
+        assert!((7..64).contains(&max_join), "{max_join}");
+    }
+
+    #[test]
+    fn resource_arithmetic() {
+        let a = Resources { lut: 1.0, lutram: 2.0, ff: 3.0, bram: 4.0, uram: 5.0, dsp: 6.0 };
+        let b = a.scale(2.0);
+        assert_eq!(b.ff, 6.0);
+        let c = a.add(&b);
+        assert_eq!(c.lut, 3.0);
+        assert!(Resources::ZERO.fits());
+    }
+}

@@ -1,0 +1,167 @@
+//! SLR floorplanning and timing-closure model (§VII "Discussion: Timing").
+//!
+//! The XCVU37P is a 3-die (SLR) device; **all HBM ports sit in SLR0**, so
+//! any engine placed in SLR1/SLR2 must cross super-logic-region boundaries
+//! to reach memory. The paper's mitigation: constrain each engine to a
+//! single SLR and insert AXI-interconnect buffer stages in the SLRs
+//! between the engine and SLR0 (one per crossed boundary). Even so,
+//! designs with high utilization cannot close 300 MHz and ship at 200 MHz.
+//!
+//! The model: greedy first-fit placement of engines into SLRs (capacity =
+//! one third of the device per SLR, with a routing-headroom factor),
+//! charging one AXI buffer stage per crossed boundary, then a timing rule
+//! calibrated to the paper's observations:
+//!
+//! * microbenchmark-class designs (no SLR crossings, < 15 % LUT) → 300 MHz;
+//! * everything that crosses an SLR or exceeds the utilization knee
+//!   → 200 MHz.
+
+use super::resources::{BitstreamSpec, Resources, INFRASTRUCTURE};
+use crate::hbm::config::FabricClock;
+
+/// Number of super-logic regions on the XCVU37P.
+pub const NUM_SLRS: usize = 3;
+/// Fraction of an SLR's nominal resources usable before routing congestion
+/// makes placement impractical.
+pub const SLR_HEADROOM: f64 = 0.85;
+/// LUT cost of one AXI-interconnect buffering stage (per crossing).
+pub const AXI_BUFFER_LUT: f64 = 3_500.0;
+pub const AXI_BUFFER_FF: f64 = 7_000.0;
+/// Utilization knee above which 300 MHz cannot close even in SLR0.
+pub const TIMING_UTIL_KNEE: f64 = 0.15;
+
+/// Placement of one engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlrAssignment {
+    pub engine: usize,
+    pub slr: usize,
+    /// SLR boundaries crossed to reach the HBM (SLR0).
+    pub crossings: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct FloorplanResult {
+    pub assignments: Vec<SlrAssignment>,
+    /// Per-SLR LUT utilization fraction after placement.
+    pub slr_lut_util: Vec<f64>,
+    /// Achievable fabric clock after timing closure.
+    pub achieved_clock: FabricClock,
+    /// True if everything placed within headroom.
+    pub feasible: bool,
+}
+
+/// Greedy first-fit floorplan of `spec` onto the SLRs.
+///
+/// Infrastructure (HBM IP, shim, OpenCAPI endpoint) is pinned to SLR0;
+/// engines fill SLR0 first, then spill upward, paying AXI buffer stages
+/// per crossing (the paper's exact mitigation: "for a compute engine
+/// placed in SLR2, we put two AXI-interconnect modules in SLR1 and SLR0").
+pub fn floorplan(spec: &BitstreamSpec) -> FloorplanResult {
+    let per_engine = spec.kind.per_engine();
+    let slr_lut = Resources::DEVICE.lut / NUM_SLRS as f64 * SLR_HEADROOM;
+
+    let mut used = vec![0.0f64; NUM_SLRS];
+    used[0] += INFRASTRUCTURE.lut;
+
+    let mut assignments = Vec::with_capacity(spec.engines);
+    let mut feasible = true;
+    for e in 0..spec.engines {
+        let mut placed = false;
+        for slr in 0..NUM_SLRS {
+            // An engine in SLR k needs buffer stages in every SLR below it.
+            let buffers = slr as f64 * AXI_BUFFER_LUT;
+            if used[slr] + per_engine.lut + buffers <= slr_lut {
+                used[slr] += per_engine.lut;
+                // Buffer stages land in the SLRs crossed.
+                for b in used.iter_mut().take(slr) {
+                    *b += AXI_BUFFER_LUT;
+                }
+                assignments.push(SlrAssignment { engine: e, slr, crossings: slr });
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            // Overfull: pin to the least-used SLR and mark infeasible.
+            let slr = (0..NUM_SLRS)
+                .min_by(|&a, &b| used[a].partial_cmp(&used[b]).unwrap())
+                .unwrap();
+            used[slr] += per_engine.lut;
+            assignments.push(SlrAssignment { engine: e, slr, crossings: slr });
+            feasible = false;
+        }
+    }
+
+    let total_lut_util = used.iter().sum::<f64>() / Resources::DEVICE.lut;
+    let any_crossing = assignments.iter().any(|a| a.crossings > 0);
+    let achieved_clock = if !any_crossing && total_lut_util < TIMING_UTIL_KNEE {
+        FabricClock::Mhz300
+    } else {
+        FabricClock::Mhz200
+    };
+
+    FloorplanResult {
+        assignments,
+        slr_lut_util: used.iter().map(|u| u / (Resources::DEVICE.lut / 3.0)).collect(),
+        achieved_clock,
+        feasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::floorplan::resources::EngineKind;
+
+    #[test]
+    fn paper_bitstreams_run_at_200mhz() {
+        // §II: "we use 200 MHz for all the presented designs".
+        for kind in [EngineKind::Selection, EngineKind::Join, EngineKind::Sgd] {
+            let spec = BitstreamSpec { kind, engines: kind.paper_engines() };
+            let fp = floorplan(&spec);
+            assert!(fp.feasible, "{kind:?} must place");
+            assert_eq!(fp.achieved_clock, FabricClock::Mhz200, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn tiny_design_closes_300mhz() {
+        // Microbenchmark-class: few engines, SLR0 only → 300 MHz (§II's
+        // traffic-generator measurements).
+        let spec = BitstreamSpec { kind: EngineKind::Selection, engines: 2 };
+        let fp = floorplan(&spec);
+        assert_eq!(fp.achieved_clock, FabricClock::Mhz300);
+        assert!(fp.assignments.iter().all(|a| a.slr == 0));
+    }
+
+    #[test]
+    fn large_designs_spill_and_cross_slrs() {
+        let spec =
+            BitstreamSpec { kind: EngineKind::Sgd, engines: EngineKind::Sgd.paper_engines() };
+        let fp = floorplan(&spec);
+        // 14 SGD engines at ~4.7% LUT each cannot all sit in one SLR.
+        assert!(fp.assignments.iter().any(|a| a.slr > 0));
+        // Crossings equal the SLR index (buffers in every crossed SLR).
+        for a in &fp.assignments {
+            assert_eq!(a.crossings, a.slr);
+        }
+    }
+
+    #[test]
+    fn engines_fill_slr0_first() {
+        let spec = BitstreamSpec { kind: EngineKind::Join, engines: 4 };
+        let fp = floorplan(&spec);
+        assert!(fp.assignments[0].slr == 0);
+        let slrs: Vec<usize> = fp.assignments.iter().map(|a| a.slr).collect();
+        let mut sorted = slrs.clone();
+        sorted.sort_unstable();
+        assert_eq!(slrs, sorted, "greedy fill must be monotone: {slrs:?}");
+    }
+
+    #[test]
+    fn absurd_engine_count_is_infeasible() {
+        let spec = BitstreamSpec { kind: EngineKind::Sgd, engines: 100 };
+        let fp = floorplan(&spec);
+        assert!(!fp.feasible);
+    }
+}

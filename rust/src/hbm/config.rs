@@ -1,0 +1,187 @@
+//! HBM subsystem geometry and calibration constants.
+//!
+//! Models the Xilinx UltraScale+ HBM subsystem of the paper's target device
+//! (XCVU37P on the Alpha Data ADM-PCIE-9H7): 2 stacks × 16 pseudo-channels
+//! (PCs), 8 GiB total, 32 AXI3 ports of 256 bits, and a 32×32 crossbar
+//! (§II of the paper, Xilinx PG276).
+//!
+//! # Timing model (calibrated against the paper's measurements)
+//!
+//! Each AXI3 port moves 32 B/cycle at the fabric clock. Each 256 MiB
+//! address *segment* (= one pseudo-channel) is served through the crossbar
+//! at the same 32 B/cycle rate, scaled by a sequential-access efficiency
+//! `eta_seq` that folds in refresh, bank-switch and protocol overheads.
+//! `eta_seq = 0.928` is derived from the paper's Fig. 2 anchor points:
+//! 190 GB/s at 200 MHz and 282 GB/s at 300 MHz with 32 ideally-separated
+//! ports (theoretical 204.8 / 307.2 GB/s).
+//!
+//! When multiple masters target the same segment the segment capacity is
+//! *shared* (max-min fair, see [`crate::hbm::fluid`]), reproducing the
+//! paper's bandwidth collapse for overlapping address ranges. The paper's
+//! own rule — "if all AXI3 ports try to access the first channel, the
+//! effective bandwidth is 1/32th of the highest achievable one" — is what
+//! this model yields exactly.
+
+use crate::util::units::{GIB, MIB};
+
+/// Number of AXI3 ports exposed by the HBM IP.
+pub const NUM_PORTS: usize = 32;
+/// Number of pseudo-channels (= address segments).
+pub const NUM_SEGMENTS: usize = 32;
+/// Bytes per 256-bit AXI3 beat.
+pub const BEAT_BYTES: u64 = 32;
+/// Size of one pseudo-channel's address window.
+pub const SEGMENT_BYTES: u64 = 256 * MIB;
+/// Total HBM capacity (2 stacks × 4 GiB).
+pub const TOTAL_BYTES: u64 = 8 * GIB;
+/// Ports per stack (stack 0 = ports/segments 0..16, stack 1 = 16..32).
+pub const PORTS_PER_STACK: usize = 16;
+
+/// Fabric clock options studied by the paper (§II): designs close timing
+/// reliably at 200 MHz; 300 MHz is achievable for the microbenchmark
+/// infrastructure only; 400 MHz is the theoretical IP maximum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricClock {
+    Mhz200,
+    Mhz300,
+    Mhz400,
+}
+
+impl FabricClock {
+    pub fn mhz(self) -> f64 {
+        match self {
+            FabricClock::Mhz200 => 200.0,
+            FabricClock::Mhz300 => 300.0,
+            FabricClock::Mhz400 => 400.0,
+        }
+    }
+
+    pub fn hz(self) -> f64 {
+        self.mhz() * 1e6
+    }
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct HbmConfig {
+    pub clock: FabricClock,
+    /// Sequential-streaming efficiency (calibrated, see module docs).
+    pub eta_seq: f64,
+    /// HBM core clock in MHz. The paper's engineering-sample silicon runs
+    /// the stack at 800 MHz instead of 900 MHz; kept for the DRAM-side
+    /// capacity bound (never binding below 400 MHz fabric clock).
+    pub hbm_core_mhz: f64,
+    /// Base read latency through the crossbar + controller + DRAM, in
+    /// nanoseconds, for an uncontended short access.
+    pub base_latency_ns: f64,
+    /// Additional queueing latency per extra master sharing a segment, ns.
+    pub latency_per_sharer_ns: f64,
+}
+
+impl Default for HbmConfig {
+    fn default() -> Self {
+        Self {
+            clock: FabricClock::Mhz200,
+            eta_seq: 0.928,
+            hbm_core_mhz: 800.0,
+            base_latency_ns: 120.0,
+            latency_per_sharer_ns: 55.0,
+        }
+    }
+}
+
+impl HbmConfig {
+    pub fn at_clock(clock: FabricClock) -> Self {
+        Self { clock, ..Self::default() }
+    }
+
+    /// Peak bytes/s of one AXI3 port (256 bits × fabric clock).
+    pub fn port_peak(&self) -> f64 {
+        BEAT_BYTES as f64 * self.clock.hz()
+    }
+
+    /// Effective sustained bytes/s of one port streaming sequentially.
+    pub fn port_effective(&self) -> f64 {
+        self.port_peak() * self.eta_seq
+    }
+
+    /// Crossbar-side service capacity of one segment (pseudo-channel),
+    /// bytes/s. One master saturates it; k masters share it.
+    pub fn segment_capacity(&self) -> f64 {
+        self.port_peak() * self.eta_seq
+    }
+
+    /// DRAM-side capacity of one pseudo-channel: 64-bit DDR at the HBM
+    /// core clock. At 800 MHz this is 12.8 GB/s — above the crossbar-side
+    /// service for fabric clocks ≤ 400 MHz, so it only binds at 400 MHz.
+    pub fn dram_pc_capacity(&self) -> f64 {
+        8.0 * 2.0 * self.hbm_core_mhz * 1e6
+    }
+
+    /// Theoretical aggregate peak: all ports, no contention, eta = 1.
+    pub fn theoretical_peak(&self) -> f64 {
+        NUM_PORTS as f64 * self.port_peak()
+    }
+
+    /// Map a byte address to its segment (pseudo-channel) index.
+    pub fn segment_of(&self, addr: u64) -> usize {
+        debug_assert!(addr < TOTAL_BYTES, "address {addr:#x} out of HBM range");
+        (addr / SEGMENT_BYTES) as usize
+    }
+
+    /// Uncontended single-access read latency in seconds.
+    pub fn access_latency(&self, sharers: usize) -> f64 {
+        let extra = sharers.saturating_sub(1) as f64;
+        (self.base_latency_ns + extra * self.latency_per_sharer_ns) * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_peaks_match_paper() {
+        let c200 = HbmConfig::at_clock(FabricClock::Mhz200);
+        let c400 = HbmConfig::at_clock(FabricClock::Mhz400);
+        // 256-bit @ 200 MHz = 6.4 GB/s; @400 MHz = 12.8 GB/s per port.
+        assert!((c200.port_peak() - 6.4e9).abs() < 1e6);
+        assert!((c400.port_peak() - 12.8e9).abs() < 1e6);
+        // Theoretical aggregate at 400 MHz ≈ 410 GB/s (paper §I).
+        assert!((c400.theoretical_peak() - 409.6e9).abs() < 1e8);
+    }
+
+    #[test]
+    fn ideal_aggregate_matches_fig2_anchors() {
+        // 32 ports, ideal separation: paper measures 190 GB/s @200 MHz and
+        // 282 GB/s @300 MHz.
+        let c200 = HbmConfig::at_clock(FabricClock::Mhz200);
+        let c300 = HbmConfig::at_clock(FabricClock::Mhz300);
+        let agg200 = 32.0 * c200.port_effective();
+        let agg300 = 32.0 * c300.port_effective();
+        assert!((agg200 / 1e9 - 190.0).abs() < 1.0, "agg200={agg200}");
+        assert!((agg300 / 1e9 - 282.0).abs() < 4.0, "agg300={agg300}");
+    }
+
+    #[test]
+    fn segment_mapping() {
+        let c = HbmConfig::default();
+        assert_eq!(c.segment_of(0), 0);
+        assert_eq!(c.segment_of(SEGMENT_BYTES - 1), 0);
+        assert_eq!(c.segment_of(SEGMENT_BYTES), 1);
+        assert_eq!(c.segment_of(TOTAL_BYTES - 1), NUM_SEGMENTS - 1);
+    }
+
+    #[test]
+    fn dram_side_never_binds_below_400mhz() {
+        let c = HbmConfig::at_clock(FabricClock::Mhz300);
+        assert!(c.segment_capacity() < c.dram_pc_capacity());
+    }
+
+    #[test]
+    fn latency_grows_with_sharers() {
+        let c = HbmConfig::default();
+        assert!(c.access_latency(1) < c.access_latency(2));
+        assert!(c.access_latency(32) > 10.0 * c.access_latency(1) / 10.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! HBM subsystem simulator: geometry/config, functional byte store,
+//! max-min-fair crossbar bandwidth model, traffic generators, and the
+//! port-merging HBM-shim.
+//!
+//! This substrate reproduces the behaviour the paper measures in §II
+//! (Fig. 2) and that every accelerator in §§IV–VI depends on: bandwidth as
+//! a function of *how many ports* are active and *which address ranges*
+//! they touch.
+
+pub mod config;
+pub mod fluid;
+pub mod memory;
+pub mod shim;
+pub mod traffic;
+
+pub use config::{FabricClock, HbmConfig};
+pub use fluid::{solve, Allocation, Flow};
+pub use memory::HbmMemory;
+pub use shim::{Shim, ShimBuffer};
+pub use traffic::{fig2_sweep, run_bandwidth, TrafficGen, TrafficOp};

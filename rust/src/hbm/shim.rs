@@ -1,0 +1,315 @@
+//! The HBM-shim of the paper's §III (Figure 3).
+//!
+//! The shim statically merges AXI3 port *p* of stack 0 with port *p+16* of
+//! stack 1 into one 512-bit logical port, applying a constant +4 GiB offset
+//! to the second port so no access ever crosses stacks. Consequences the
+//! rest of the system relies on (all from the paper):
+//!
+//! * 16 logical ports instead of 32 physical ones (halves control burden);
+//! * each logical port moves 64 B/cycle — 12.8 GB/s at 200 MHz;
+//! * each logical port has a 2 × 256 MiB = 512 MiB "home" address window
+//!   whose two halves sit on distinct pseudo-channels of the two stacks —
+//!   this is the replication unit for SGD (§VI) and the ideal-partitioning
+//!   unit for selection and join;
+//! * 2 of the 16 logical ports are reserved for the datamovers, leaving 14
+//!   for compute engines (hence 14 selection/SGD engines and 7 join
+//!   engines, which need two ports each).
+
+use super::config::{HbmConfig, SEGMENT_BYTES};
+use super::fluid::Flow;
+use super::memory::HbmMemory;
+use crate::util::units::GIB;
+
+/// Logical (post-shim) port count.
+pub const LOGICAL_PORTS: usize = 16;
+/// Logical ports reserved for the two datamovers (paper §III).
+pub const DATAMOVER_PORTS: [usize; 2] = [14, 15];
+/// Logical ports available to compute engines.
+pub const ENGINE_PORTS: usize = 14;
+/// Home capacity of one logical port (two pseudo-channels).
+pub const PORT_HOME_BYTES: u64 = 2 * SEGMENT_BYTES;
+/// Constant offset applied to the second (stack-1) physical port.
+pub const STACK_OFFSET: u64 = 4 * GIB;
+/// Bytes per 512-bit logical beat.
+pub const LOGICAL_BEAT_BYTES: u64 = 64;
+/// Half-line granularity of the stack interleave.
+const HALF_LINE: u64 = 32;
+
+/// A buffer striped across the two stacks by the shim: 64-byte logical
+/// lines whose low 32 B live at `lo_addr + 32·i` (stack 0) and high 32 B
+/// at `lo_addr + STACK_OFFSET + 32·i` (stack 1).
+#[derive(Debug, Clone, Copy)]
+pub struct ShimBuffer {
+    /// Stack-0 base address (must be < 4 GiB).
+    pub lo_addr: u64,
+    /// Logical size in bytes (split evenly across stacks).
+    pub bytes: u64,
+}
+
+impl ShimBuffer {
+    pub fn new(lo_addr: u64, bytes: u64) -> Self {
+        assert!(lo_addr < STACK_OFFSET, "shim base must be in stack 0");
+        assert!(bytes % LOGICAL_BEAT_BYTES == 0, "buffer must be line-aligned");
+        assert!(lo_addr + bytes / 2 <= STACK_OFFSET, "stack-0 half overflows");
+        Self { lo_addr, bytes }
+    }
+
+    /// Per-stack byte footprint.
+    pub fn half_bytes(&self) -> u64 {
+        self.bytes / 2
+    }
+
+    /// The two fluid flows a full sequential pass over this buffer
+    /// generates (one per physical port), with an optional per-flow rate
+    /// cap (each physical port carries half the logical traffic, so a
+    /// logical cap `c` becomes `c/2` per flow).
+    pub fn flows(&self, id_base: usize, logical_cap: f64) -> Vec<Flow> {
+        vec![
+            Flow::new(id_base, self.lo_addr, self.half_bytes())
+                .with_cap(logical_cap / 2.0),
+            Flow::new(id_base + 1, self.lo_addr + STACK_OFFSET, self.half_bytes())
+                .with_cap(logical_cap / 2.0),
+        ]
+    }
+
+    /// Functional write through the shim's interleave.
+    ///
+    /// Hot path (every engine's functional data load goes through here):
+    /// de-interleave into two contiguous per-stack images and issue two
+    /// bulk writes, instead of one paged write per 32-byte half-line
+    /// (§Perf in EXPERIMENTS.md). Partial edge lines are read-modify-write.
+    pub fn write(&self, mem: &mut HbmMemory, offset: u64, data: &[u8]) {
+        assert!(offset + data.len() as u64 <= self.bytes);
+        if data.is_empty() {
+            return;
+        }
+        let len = data.len() as u64;
+        let first_line = offset / LOGICAL_BEAT_BYTES;
+        let last_line = (offset + len - 1) / LOGICAL_BEAT_BYTES;
+        let lines = (last_line - first_line + 1) as usize;
+        let span = lines * LOGICAL_BEAT_BYTES as usize;
+        let head = (offset - first_line * LOGICAL_BEAT_BYTES) as usize;
+
+        // Assemble the logical span; only partial *edge* lines need a
+        // read-modify-write (not the whole span).
+        let lb = LOGICAL_BEAT_BYTES as usize;
+        let mut logical = vec![0u8; span];
+        if head != 0 {
+            let edge = self.read(mem, first_line * LOGICAL_BEAT_BYTES, lb.min(span));
+            logical[..edge.len()].copy_from_slice(&edge);
+        }
+        let tail_end = head + data.len();
+        if tail_end % lb != 0 && lines > 1 || (lines == 1 && (head != 0 || tail_end != lb)) {
+            let cap = (self.bytes - last_line * LOGICAL_BEAT_BYTES) as usize;
+            let edge = self.read(mem, last_line * LOGICAL_BEAT_BYTES, lb.min(cap));
+            logical[span - lb..span - lb + edge.len()].copy_from_slice(&edge);
+        }
+        logical[head..tail_end].copy_from_slice(data);
+
+        // De-interleave into per-stack images and bulk-write.
+        let h = HALF_LINE as usize;
+        let mut lo_img = vec![0u8; lines * h];
+        let mut hi_img = vec![0u8; lines * h];
+        for i in 0..lines {
+            let line = &logical[i * 2 * h..(i + 1) * 2 * h];
+            lo_img[i * h..(i + 1) * h].copy_from_slice(&line[..h]);
+            hi_img[i * h..(i + 1) * h].copy_from_slice(&line[h..]);
+        }
+        let base = self.lo_addr + first_line * HALF_LINE;
+        mem.write(base, &lo_img);
+        mem.write(base + STACK_OFFSET, &hi_img);
+    }
+
+    /// Functional read through the shim's interleave (bulk two-stack read
+    /// + in-memory interleave; see `write`).
+    pub fn read(&self, mem: &HbmMemory, offset: u64, len: usize) -> Vec<u8> {
+        assert!(offset + len as u64 <= self.bytes);
+        if len == 0 {
+            return Vec::new();
+        }
+        let first_line = offset / LOGICAL_BEAT_BYTES;
+        let last_line = (offset + len as u64 - 1) / LOGICAL_BEAT_BYTES;
+        let lines = (last_line - first_line + 1) as usize;
+        let h = HALF_LINE as usize;
+        let base = self.lo_addr + first_line * HALF_LINE;
+        let lo_img = mem.read(base, lines * h);
+        let hi_img = mem.read(base + STACK_OFFSET, lines * h);
+        let mut logical = vec![0u8; lines * 2 * h];
+        for i in 0..lines {
+            logical[i * 2 * h..i * 2 * h + h].copy_from_slice(&lo_img[i * h..(i + 1) * h]);
+            logical[i * 2 * h + h..(i + 1) * 2 * h]
+                .copy_from_slice(&hi_img[i * h..(i + 1) * h]);
+        }
+        let head = (offset - first_line * LOGICAL_BEAT_BYTES) as usize;
+        logical[head..head + len].to_vec()
+    }
+
+    pub fn write_u32s(&self, mem: &mut HbmMemory, offset: u64, vals: &[u32]) {
+        let mut buf = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(mem, offset, &buf);
+    }
+
+    pub fn read_u32s(&self, mem: &HbmMemory, offset: u64, count: usize) -> Vec<u32> {
+        self.read(mem, offset, count * 4)
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn write_f32s(&self, mem: &mut HbmMemory, offset: u64, vals: &[f32]) {
+        let mut buf = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(mem, offset, &buf);
+    }
+
+    pub fn read_f32s(&self, mem: &HbmMemory, offset: u64, count: usize) -> Vec<f32> {
+        self.read(mem, offset, count * 4)
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+/// Allocation bookkeeping for the shim's 16 logical ports. Each port has a
+/// 256 MiB stack-0 home window; buffers are bump-allocated inside it
+/// (ideal placement) or placed at an explicit address (to study non-ideal
+/// partitioning, e.g. the paper's FPGA-nonreplicated SGD case).
+pub struct Shim {
+    cfg: HbmConfig,
+    next_free: [u64; LOGICAL_PORTS],
+}
+
+impl Shim {
+    pub fn new(cfg: HbmConfig) -> Self {
+        Self { cfg, next_free: [0; LOGICAL_PORTS] }
+    }
+
+    pub fn config(&self) -> &HbmConfig {
+        &self.cfg
+    }
+
+    /// Stack-0 home base of a logical port.
+    pub fn home_base(port: usize) -> u64 {
+        assert!(port < LOGICAL_PORTS);
+        port as u64 * SEGMENT_BYTES
+    }
+
+    /// Peak bytes/s of one logical (512-bit) port.
+    pub fn logical_port_peak(&self) -> f64 {
+        2.0 * self.cfg.port_peak()
+    }
+
+    /// Effective sustained bytes/s of one logical port.
+    pub fn logical_port_effective(&self) -> f64 {
+        2.0 * self.cfg.port_effective()
+    }
+
+    /// Allocate `bytes` in `port`'s home window (ideal placement).
+    /// Returns `None` when the port's 512 MiB home is exhausted — the
+    /// condition under which the paper switches SGD to block-wise scans.
+    pub fn alloc(&mut self, port: usize, bytes: u64) -> Option<ShimBuffer> {
+        assert!(port < LOGICAL_PORTS);
+        let aligned = bytes.div_ceil(LOGICAL_BEAT_BYTES) * LOGICAL_BEAT_BYTES;
+        let half = aligned / 2;
+        let used = self.next_free[port];
+        if used + half > SEGMENT_BYTES {
+            return None;
+        }
+        self.next_free[port] = used + half;
+        Some(ShimBuffer::new(Self::home_base(port) + used, aligned))
+    }
+
+    /// Place a buffer at an explicit stack-0 address (non-ideal placement
+    /// studies). No overlap checking — the experiments own the layout.
+    pub fn place_at(&self, lo_addr: u64, bytes: u64) -> ShimBuffer {
+        let aligned = bytes.div_ceil(LOGICAL_BEAT_BYTES) * LOGICAL_BEAT_BYTES;
+        ShimBuffer::new(lo_addr, aligned)
+    }
+
+    /// Reset all allocations (new experiment).
+    pub fn reset(&mut self) {
+        self.next_free = [0; LOGICAL_PORTS];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hbm::config::FabricClock;
+
+    #[test]
+    fn logical_port_rates_match_paper() {
+        let shim = Shim::new(HbmConfig::at_clock(FabricClock::Mhz200));
+        // Paper §IV: theoretical maximum 12.8 GB/s per engine port.
+        assert!((shim.logical_port_peak() - 12.8e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn striped_roundtrip() {
+        let mut mem = HbmMemory::new();
+        let buf = ShimBuffer::new(0, 256);
+        let data: Vec<u8> = (0..200u32).map(|i| (i % 251) as u8).collect();
+        buf.write(&mut mem, 8, &data);
+        assert_eq!(buf.read(&mem, 8, 200), data);
+    }
+
+    #[test]
+    fn stripe_places_halves_on_both_stacks() {
+        let mut mem = HbmMemory::new();
+        let buf = ShimBuffer::new(0, 128); // two logical lines
+        let data: Vec<u8> = (0..128).map(|i| i as u8).collect();
+        buf.write(&mut mem, 0, &data);
+        // Low half of line 0 in stack 0...
+        assert_eq!(mem.read(0, 4), vec![0, 1, 2, 3]);
+        // ...high half of line 0 in stack 1 at +4 GiB.
+        assert_eq!(mem.read(STACK_OFFSET, 4), vec![32, 33, 34, 35]);
+        // Line 1 low half follows in stack 0.
+        assert_eq!(mem.read(HALF_LINE, 4), vec![64, 65, 66, 67]);
+    }
+
+    #[test]
+    fn typed_roundtrip_through_shim() {
+        let mut mem = HbmMemory::new();
+        let buf = ShimBuffer::new(1024, 4096);
+        let vals: Vec<u32> = (0..512).collect();
+        buf.write_u32s(&mut mem, 0, &vals);
+        assert_eq!(buf.read_u32s(&mem, 0, 512), vals);
+    }
+
+    #[test]
+    fn flows_cover_both_stacks_with_half_cap() {
+        let buf = ShimBuffer::new(0, 1024);
+        let flows = buf.flows(0, 10e9);
+        assert_eq!(flows.len(), 2);
+        assert_eq!(flows[0].addr, 0);
+        assert_eq!(flows[1].addr, STACK_OFFSET);
+        assert_eq!(flows[0].len, 512);
+        assert!((flows[0].rate_cap - 5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn alloc_respects_home_capacity() {
+        let mut shim = Shim::new(HbmConfig::default());
+        // The paper's replication limit: 512 MiB per logical port.
+        let b = shim.alloc(3, PORT_HOME_BYTES).unwrap();
+        assert_eq!(b.lo_addr, Shim::home_base(3));
+        assert!(shim.alloc(3, 64).is_none(), "home window must be full");
+        // Other ports unaffected.
+        assert!(shim.alloc(4, 1024).is_some());
+    }
+
+    #[test]
+    fn home_windows_are_disjoint_pseudo_channels() {
+        let cfg = HbmConfig::default();
+        for p in 0..LOGICAL_PORTS {
+            let base = Shim::home_base(p);
+            assert_eq!(cfg.segment_of(base), p);
+            assert_eq!(cfg.segment_of(base + STACK_OFFSET), p + 16);
+        }
+    }
+}

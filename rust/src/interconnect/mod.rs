@@ -1,0 +1,8 @@
+//! CPU↔FPGA interconnect: the OpenCAPI link model and the two dedicated
+//! datamovers of the paper's system architecture (§III, Figure 3).
+
+pub mod datamover;
+pub mod opencapi;
+
+pub use datamover::{DataMover, HostBuffer};
+pub use opencapi::OpenCapiLink;

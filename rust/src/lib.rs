@@ -1,0 +1,34 @@
+//! # hbm-analytics
+//!
+//! A full-system reproduction of **"High Bandwidth Memory on FPGAs: A Data
+//! Analytics Perspective"** (Kara et al., 2020) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper's FPGA/HBM testbed is simulated (see `DESIGN.md` for the
+//! substitution table); everything else — the three accelerated operators
+//! (range selection, hash join, SGD), the HBM-shim system architecture,
+//! the MonetDB-style columnar integration, the CPU baselines, and every
+//! table/figure of the evaluation — is implemented and regenerable.
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — the coordinator: HBM subsystem simulator
+//!   ([`hbm`]), scale-out compute engines and their event-driven fluid
+//!   simulation ([`engines`]), CPU↔FPGA interconnect ([`interconnect`]),
+//!   physical-design models ([`floorplan`]), a columnar DBMS ([`db`]),
+//!   CPU baselines ([`cpu`]), workload generators ([`workloads`]), the
+//!   PJRT runtime ([`runtime`]) and the benchmark harness ([`bench`]).
+//! * **L2/L1 (python/compile)** — the JAX SGD model and Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
+//!   [`runtime`] — Python never runs at request time.
+
+pub mod bench;
+pub mod cpu;
+pub mod db;
+pub mod engines;
+pub mod floorplan;
+pub mod hbm;
+pub mod interconnect;
+pub mod runtime;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,130 @@
+//! Artifact registry: the `artifacts/manifest.tsv` index written by
+//! `python/compile/aot.py`.
+//!
+//! TSV, one artifact per line:
+//! `name \t file \t kind \t m \t n \t minibatch \t task`
+//! (TSV rather than JSON because the offline crate set has no serde).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    SgdEpoch,
+    Select,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    /// Samples (SGD) or items (select).
+    pub m: usize,
+    /// Features (SGD); unused for select.
+    pub n: usize,
+    pub minibatch: usize,
+    /// "ridge" | "logistic" | "-".
+    pub task: String,
+}
+
+#[derive(Debug, Default)]
+pub struct ArtifactRegistry {
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl ArtifactRegistry {
+    /// Load the manifest from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} (run `make artifacts`)"))?;
+        let mut artifacts = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 7 {
+                bail!("manifest line {} malformed: {line:?}", ln + 1);
+            }
+            let kind = match cols[2] {
+                "sgd_epoch" => ArtifactKind::SgdEpoch,
+                "select" => ArtifactKind::Select,
+                other => bail!("unknown artifact kind {other:?}"),
+            };
+            artifacts.push(ArtifactMeta {
+                name: cols[0].to_string(),
+                path: dir.join(cols[1]),
+                kind,
+                m: cols[3].parse().context("m")?,
+                n: cols[4].parse().context("n")?,
+                minibatch: cols[5].parse().context("minibatch")?,
+                task: cols[6].to_string(),
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// Default location: `$HBM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HBM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, content: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), content).unwrap();
+    }
+
+    #[test]
+    fn parses_wellformed_manifest() {
+        let dir = std::env::temp_dir().join("hbm_art_test_ok");
+        write_manifest(
+            &dir,
+            "sgd_epoch_tiny_b16\ttiny.hlo.txt\tsgd_epoch\t256\t32\t16\tridge\n\
+             select_mask\tsel.hlo.txt\tselect\t65536\t0\t0\t-\n",
+        );
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.all().len(), 2);
+        let a = reg.get("sgd_epoch_tiny_b16").unwrap();
+        assert_eq!(a.kind, ArtifactKind::SgdEpoch);
+        assert_eq!((a.m, a.n, a.minibatch), (256, 32, 16));
+        assert_eq!(a.task, "ridge");
+        assert!(reg.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        let dir = std::env::temp_dir().join("hbm_art_test_bad");
+        write_manifest(&dir, "only\tthree\tcols\n");
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let dir = std::env::temp_dir().join("hbm_art_test_missing_xyz");
+        let _ = std::fs::remove_dir_all(&dir);
+        let err = ArtifactRegistry::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,85 @@
+//! PJRT client wrapper with a compile cache.
+//!
+//! One [`Runtime`] per process: a PJRT CPU client plus a name → compiled
+//! executable cache, so each artifact is parsed and compiled exactly once
+//! no matter how many jobs execute it (compilation is the expensive step;
+//! execution is the hot path).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactMeta, ArtifactRegistry};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime over the given artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let registry = ArtifactRegistry::load(artifacts_dir)?;
+        Ok(Self { client, registry, cache: HashMap::new() })
+    }
+
+    /// Default artifacts location (`$HBM_ARTIFACTS` or `./artifacts`).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&ArtifactRegistry::default_dir())
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+        self.registry
+            .get(name)
+            .cloned()
+            .with_context(|| format!("unknown artifact '{name}'"))
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self.meta(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on literal inputs; returns the decomposed
+    /// output tuple (aot.py lowers with `return_tuple=True`). Inputs are
+    /// borrowed — large dataset literals are uploaded by the caller once
+    /// and reused across calls.
+    pub fn execute(&mut self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing '{name}'"))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(out.decompose_tuple()?)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}

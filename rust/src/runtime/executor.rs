@@ -1,0 +1,106 @@
+//! Typed executors over the raw runtime: the SGD training step used by
+//! the Fig. 11 convergence experiment and the hyperparameter-search
+//! example.
+//!
+//! The executor owns the dataset *literals* (uploaded once) and runs one
+//! HLO-compiled epoch per call — the request path is: Rust → PJRT →
+//! compiled XLA CPU kernel. No Python anywhere.
+
+use anyhow::{ensure, Context, Result};
+
+use super::client::Runtime;
+use crate::engines::sgd::{GlmTask, SgdHyperParams};
+
+/// Executes `sgd_epoch_*` artifacts for a fixed dataset shape.
+pub struct SgdEpochExecutor {
+    artifact: String,
+    pub m: usize,
+    pub n: usize,
+    pub minibatch: usize,
+    pub task: GlmTask,
+    features: xla::Literal,
+    labels: xla::Literal,
+}
+
+impl SgdEpochExecutor {
+    /// Build an executor for `artifact`, uploading the dataset once.
+    pub fn new(
+        rt: &mut Runtime,
+        artifact: &str,
+        features: &[f32],
+        labels: &[f32],
+    ) -> Result<Self> {
+        let meta = rt.meta(artifact)?;
+        ensure!(
+            meta.kind == super::artifact::ArtifactKind::SgdEpoch,
+            "artifact '{artifact}' is not an sgd_epoch"
+        );
+        ensure!(
+            features.len() == meta.m * meta.n,
+            "features: got {} want {}x{}",
+            features.len(),
+            meta.m,
+            meta.n
+        );
+        ensure!(labels.len() == meta.m, "labels length mismatch");
+        let task = match meta.task.as_str() {
+            "ridge" => GlmTask::Ridge,
+            "logistic" => GlmTask::Logistic,
+            other => anyhow::bail!("unknown task '{other}'"),
+        };
+        // Warm the compile cache now so per-epoch calls are execution-only.
+        rt.executable(artifact)?;
+        let features = xla::Literal::vec1(features)
+            .reshape(&[meta.m as i64, meta.n as i64])
+            .context("reshaping features")?;
+        let labels = xla::Literal::vec1(labels);
+        Ok(Self {
+            artifact: artifact.to_string(),
+            m: meta.m,
+            n: meta.n,
+            minibatch: meta.minibatch,
+            task,
+            features,
+            labels,
+        })
+    }
+
+    /// Run one epoch: model in, updated model out.
+    pub fn epoch(&self, rt: &mut Runtime, x: &[f32], alpha: f32, lambda: f32) -> Result<Vec<f32>> {
+        ensure!(x.len() == self.n, "model length {} != {}", x.len(), self.n);
+        let x_lit = xla::Literal::vec1(x);
+        let alpha_lit = xla::Literal::scalar(alpha);
+        let lambda_lit = xla::Literal::scalar(lambda);
+        // The dataset literals were uploaded once in `new`; only the model
+        // vector and two scalars move per epoch.
+        let outputs = rt.execute(
+            &self.artifact,
+            &[&x_lit, &self.features, &self.labels, &alpha_lit, &lambda_lit],
+        )?;
+        ensure!(outputs.len() == 1, "expected 1-tuple, got {}", outputs.len());
+        Ok(outputs[0].to_vec::<f32>()?)
+    }
+
+    /// Train for `params.epochs` epochs from zero, returning the model
+    /// and the artifact-executed per-epoch models (for loss curves).
+    pub fn train(
+        &self,
+        rt: &mut Runtime,
+        params: &SgdHyperParams,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        ensure!(
+            params.minibatch == self.minibatch,
+            "artifact is specialized for B={}, asked B={}",
+            self.minibatch,
+            params.minibatch
+        );
+        let mut x = vec![0.0f32; self.n];
+        let mut history = Vec::with_capacity(params.epochs);
+        for _ in 0..params.epochs {
+            x = self.epoch(rt, &x, params.alpha, params.lambda)?;
+            history.push(x.clone());
+        }
+        Ok((x, history))
+    }
+}
+

@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the only place the Rust coordinator touches XLA. Python runs
+//! once at build time (`make artifacts` → `python/compile/aot.py` →
+//! `artifacts/*.hlo.txt` + `manifest.tsv`); at run time this module
+//! compiles the HLO text on the PJRT CPU client and executes it — Python
+//! is never on the request path.
+//!
+//! Interchange is HLO *text* because the crate's xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos (64-bit instruction ids); the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, ArtifactRegistry};
+pub use client::Runtime;
+pub use executor::SgdEpochExecutor;

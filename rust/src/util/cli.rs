@@ -1,0 +1,173 @@
+//! Minimal command-line argument parser (the offline crate set has no
+//! `clap`). Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and collected error reporting.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("invalid value for --{0}: '{1}'")]
+    Invalid(String, String),
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(stripped.to_string(), v);
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { flags, positional }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument, conventionally the subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(key.to_string(), v.to_string())),
+        }
+    }
+
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, CliError> {
+        let v = self.get(key).ok_or_else(|| CliError::Missing(key.to_string()))?;
+        v.parse()
+            .map_err(|_| CliError::Invalid(key.to_string(), v.to_string()))
+    }
+
+    /// Parse a comma-separated list, e.g. `--threads 1,2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError::Invalid(key.to_string(), p.to_string()))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse("figures extra --fig 2 --scale=0.5 --verbose");
+        assert_eq!(a.subcommand(), Some("figures"));
+        assert_eq!(a.get("fig"), Some("2"));
+        assert_eq!(a.get_parsed::<f64>("scale", 1.0).unwrap(), 0.5);
+        assert!(a.get_bool("verbose", false));
+        assert_eq!(a.positional(), &["figures".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn greedy_value_attachment_is_documented_behaviour() {
+        // `--flag word` treats `word` as the flag's value; trailing
+        // standalone flags get "true".
+        let a = parse("--verbose extra");
+        assert_eq!(a.get("verbose"), Some("extra"));
+        let b = parse("run --verbose");
+        assert!(b.get_bool("verbose", false));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("run --n abc");
+        assert!(a.get_parsed::<u64>("n", 3).is_err());
+        assert_eq!(a.get_parsed::<u64>("m", 3).unwrap(), 3);
+        assert!(matches!(a.require::<u64>("missing"), Err(CliError::Missing(_))));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("x --threads 1,2,4");
+        assert_eq!(a.get_list("threads", &[9u32]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_list("other", &[9u32]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn bool_forms() {
+        let a = parse("x --copy=false --quiet");
+        assert!(!a.get_bool("copy", true));
+        assert!(a.get_bool("quiet", false));
+        assert!(a.get_bool("absent", true));
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: deterministic RNG, statistics, table/CSV emission,
+//! CLI parsing, and a miniature property-testing harness.
+//!
+//! Everything here exists because the offline crate set excludes the usual
+//! ecosystem choices (`rand`, `clap`, `criterion`, `proptest`); see
+//! DESIGN.md §7.
+
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+pub mod simd;

@@ -1,0 +1,199 @@
+//! A miniature property-based testing harness.
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! subset we need to state invariants over the coordinator: seeded random
+//! case generation, a fixed number of cases per property, and greedy
+//! input shrinking on failure for the common generator shapes (vectors and
+//! scalar ranges). It is deliberately tiny but gives real property
+//! coverage: every failure reports the seed and the shrunken input.
+
+use crate::util::rng::Xoshiro256;
+
+/// Number of cases per property (override with `HBM_PROPTEST_CASES`).
+pub fn default_cases() -> u32 {
+    std::env::var("HBM_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator produces a value from randomness and can shrink a failing
+/// value towards smaller counterexamples.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Value;
+    /// Candidate smaller values, most aggressive first. Empty = atomic.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform u64 in `[lo, hi]` with shrinking toward `lo`.
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Xoshiro256) -> u64 {
+        self.0 + rng.gen_range_u64(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0); // minimal
+            out.push(self.0 + (v - self.0) / 2); // halfway
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in `[lo, hi)`; shrinks toward lo.
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Xoshiro256) -> f64 {
+        self.0 + (self.1 - self.0) * rng.next_f64()
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.0 {
+            vec![self.0, self.0 + (v - self.0) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Vector of values from an element generator, with random length in
+/// `[0, max_len]`; shrinks by halving length, then shrinking elements.
+pub struct VecGen<G: Gen> {
+    pub elem: G,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Value {
+        let len = rng.gen_range_usize(self.max_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(Vec::new());
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+            // Shrink the first shrinkable element.
+            for (i, e) in v.iter().enumerate() {
+                let cands = self.elem.shrink(e);
+                if let Some(c) = cands.first() {
+                    let mut w = v.clone();
+                    w[i] = c.clone();
+                    out.push(w);
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairGen<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` on `default_cases()` random inputs from `gen`. On failure,
+/// greedily shrink (bounded) and panic with the seed + minimal input.
+pub fn check<G: Gen, F: Fn(&G::Value) -> bool>(name: &str, gen: &G, prop: F) {
+    check_seeded(name, gen, prop, 0xC0FFEE)
+}
+
+pub fn check_seeded<G: Gen, F: Fn(&G::Value) -> bool>(
+    name: &str,
+    gen: &G,
+    prop: F,
+    seed: u64,
+) {
+    let cases = default_cases();
+    let mut rng = Xoshiro256::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            // Shrink: repeatedly take the first failing candidate.
+            let mut minimal = input.clone();
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&minimal) {
+                    budget -= 1;
+                    if !prop(&cand) {
+                        minimal = cand;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, case={case})\n  \
+                 original: {input:?}\n  shrunk:   {minimal:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("u64 in range", &U64Range(3, 10), |v| (3..=10).contains(v));
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        check("vec len", &VecGen { elem: U64Range(0, 5), max_len: 17 }, |v| {
+            v.len() <= 17 && v.iter().all(|x| *x <= 5)
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails above 100", &U64Range(0, 1000), |v| *v <= 100);
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // Greedy shrink should land near the boundary, not report a huge value.
+        assert!(msg.contains("shrunk"), "{msg}");
+    }
+
+    #[test]
+    fn pair_gen_generates_both() {
+        check(
+            "pair",
+            &PairGen(U64Range(1, 4), F64Range(0.0, 1.0)),
+            |(a, b)| (1..=4).contains(a) && (0.0..1.0).contains(b),
+        );
+    }
+}

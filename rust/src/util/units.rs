@@ -1,0 +1,76 @@
+//! Units and conversions used throughout the simulator.
+//!
+//! The paper quotes bandwidths in GB/s (decimal) and capacities in
+//! GiB/MiB/KiB (binary); we keep that convention to make numbers directly
+//! comparable with the text.
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+pub const KB: u64 = 1000;
+pub const MB: u64 = 1000 * KB;
+pub const GB: u64 = 1000 * MB;
+
+/// Bytes-per-second expressed in decimal GB/s (as the paper reports).
+#[inline]
+pub fn bytes_per_sec_to_gbs(bps: f64) -> f64 {
+    bps / 1e9
+}
+
+#[inline]
+pub fn gbs_to_bytes_per_sec(gbs: f64) -> f64 {
+    gbs * 1e9
+}
+
+/// Seconds → human string (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Bytes → human string using binary prefixes.
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= GIB {
+        format!("{:.2} GiB", bytes as f64 / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// MHz → cycles per second.
+#[inline]
+pub fn mhz_to_hz(mhz: f64) -> f64 {
+    mhz * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(bytes_per_sec_to_gbs(gbs_to_bytes_per_sec(12.8)), 12.8);
+        assert_eq!(MIB, 1 << 20);
+        assert_eq!(GIB, 1 << 30);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * GIB), "2.00 GiB");
+        assert!(fmt_duration(0.5).contains("ms"));
+        assert!(fmt_duration(2.0).contains("s"));
+    }
+}

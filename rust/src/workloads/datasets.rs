@@ -1,0 +1,236 @@
+//! ML dataset generators matching Table II of the paper.
+//!
+//! | Name  | #Samples | #Features | #Classes   | #Epochs | Size (MB) |
+//! |-------|----------|-----------|------------|---------|-----------|
+//! | IM    | 41600    | 2048      | binary     | 10      | 340.8     |
+//! | MNIST | 50000    | 784       | 10         | 10      | 156.8     |
+//! | AEA   | 32768    | 126       | binary     | 20      | 16.5      |
+//! | SYN   | 262144   | 256       | regression | 10      | 268.4     |
+//!
+//! Features are uniform in `[-1, 1]^n` (the paper's sample domain); labels
+//! come from a planted linear/logistic model plus noise, so SGD has a real
+//! signal to recover. `Size` counts features + one label per sample in
+//! f32, which reproduces the paper's numbers.
+
+use crate::engines::sgd::GlmTask;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Binary,
+    MultiClass(u32),
+    Regression,
+}
+
+impl TaskKind {
+    /// The GLM loss used when training on this dataset. Multi-class is
+    /// trained one-vs-rest with logistic loss (as MonetDB-side baselines
+    /// do for MNIST).
+    pub fn glm(&self) -> GlmTask {
+        match self {
+            TaskKind::Regression => GlmTask::Ridge,
+            _ => GlmTask::Logistic,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub samples: usize,
+    pub features: usize,
+    pub task: TaskKind,
+    pub epochs: usize,
+}
+
+impl DatasetSpec {
+    /// Bytes of the (features + label) f32 layout.
+    pub fn bytes(&self) -> u64 {
+        (self.samples * (self.features + 1) * 4) as u64
+    }
+
+    pub fn size_mb(&self) -> f64 {
+        self.bytes() as f64 / 1e6
+    }
+
+    /// A proportionally-scaled copy (for fast CI runs); features are kept,
+    /// samples scaled.
+    pub fn scaled(&self, factor: f64) -> DatasetSpec {
+        DatasetSpec {
+            samples: ((self.samples as f64 * factor) as usize).max(64),
+            ..*self
+        }
+    }
+
+    /// Generate the dataset with a planted model.
+    pub fn generate(&self, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256::new(seed);
+        let n = self.features;
+        let m = self.samples;
+        let truth: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let mut features = Vec::with_capacity(m * n);
+        let mut labels = Vec::with_capacity(m);
+        for _ in 0..m {
+            let start = features.len();
+            for _ in 0..n {
+                features.push(rng.uniform_f32(-1.0, 1.0));
+            }
+            let z: f32 = features[start..]
+                .iter()
+                .zip(&truth)
+                .map(|(a, x)| a * x)
+                .sum();
+            let label = match self.task {
+                TaskKind::Regression => z + 0.05 * rng.normal_f32(),
+                TaskKind::Binary => {
+                    if z + 0.1 * rng.normal_f32() > 0.0 { 1.0 } else { 0.0 }
+                }
+                TaskKind::MultiClass(k) => {
+                    // One-vs-rest target for class 0 of k (the trained
+                    // binary subproblem); class identity derived from z
+                    // quantile.
+                    let cls = ((sigmoidf(z) * k as f32) as u32).min(k - 1);
+                    if cls == 0 { 1.0 } else { 0.0 }
+                }
+            };
+            labels.push(label);
+        }
+        Dataset { spec: *self, features, labels, truth }
+    }
+}
+
+#[inline]
+fn sigmoidf(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// The paper's four datasets (Table II).
+pub const TABLE2: [DatasetSpec; 4] = [
+    DatasetSpec {
+        name: "IM",
+        samples: 41_600,
+        features: 2_048,
+        task: TaskKind::Binary,
+        epochs: 10,
+    },
+    DatasetSpec {
+        name: "MNIST",
+        samples: 50_000,
+        features: 784,
+        task: TaskKind::MultiClass(10),
+        epochs: 10,
+    },
+    DatasetSpec {
+        name: "AEA",
+        samples: 32_768,
+        features: 126,
+        task: TaskKind::Binary,
+        epochs: 20,
+    },
+    DatasetSpec {
+        name: "SYN",
+        samples: 262_144,
+        features: 256,
+        task: TaskKind::Regression,
+        epochs: 10,
+    },
+];
+
+pub fn by_name(name: &str) -> Option<DatasetSpec> {
+    TABLE2.iter().find(|d| d.name.eq_ignore_ascii_case(name)).copied()
+}
+
+/// A generated dataset: row-major features + labels + the planted truth.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub features: Vec<f32>,
+    pub labels: Vec<f32>,
+    pub truth: Vec<f32>,
+}
+
+impl Dataset {
+    /// Features followed by labels — the HBM/shim layout SgdJob expects.
+    pub fn flat(&self) -> Vec<f32> {
+        let mut all = self.features.clone();
+        all.extend_from_slice(&self.labels);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_sizes_match_paper() {
+        let want = [("IM", 340.8), ("MNIST", 156.8), ("AEA", 16.6), ("SYN", 269.5)];
+        for (name, mb) in want {
+            let spec = by_name(name).unwrap();
+            assert!(
+                (spec.size_mb() - mb).abs() / mb < 0.02,
+                "{name}: {} vs {mb}",
+                spec.size_mb()
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_shaped() {
+        let spec = by_name("AEA").unwrap().scaled(0.01);
+        let a = spec.generate(9);
+        let b = spec.generate(9);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.features.len(), spec.samples * spec.features);
+        assert_eq!(a.labels.len(), spec.samples);
+        assert!(a.features.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn binary_labels_are_binary_and_balancedish() {
+        let spec = DatasetSpec {
+            name: "T",
+            samples: 4000,
+            features: 32,
+            task: TaskKind::Binary,
+            epochs: 1,
+        };
+        let d = spec.generate(4);
+        assert!(d.labels.iter().all(|&l| l == 0.0 || l == 1.0));
+        let pos: usize = d.labels.iter().filter(|&&l| l == 1.0).count();
+        assert!(pos > 1000 && pos < 3000, "pos={pos}");
+    }
+
+    #[test]
+    fn planted_signal_is_learnable() {
+        // A least-squares fit along the truth direction should correlate.
+        let spec = DatasetSpec {
+            name: "T",
+            samples: 2000,
+            features: 16,
+            task: TaskKind::Regression,
+            epochs: 1,
+        };
+        let d = spec.generate(5);
+        // Correlation between z = <truth, a> and label should be ~1.
+        let mut num = 0.0f64;
+        let mut zz = 0.0f64;
+        let mut ll = 0.0f64;
+        for i in 0..spec.samples {
+            let a = &d.features[i * 16..(i + 1) * 16];
+            let z: f32 = a.iter().zip(&d.truth).map(|(x, t)| x * t).sum();
+            num += (z as f64) * (d.labels[i] as f64);
+            zz += (z as f64).powi(2);
+            ll += (d.labels[i] as f64).powi(2);
+        }
+        let corr = num / (zz.sqrt() * ll.sqrt());
+        assert!(corr > 0.95, "corr={corr}");
+    }
+
+    #[test]
+    fn scaled_keeps_features() {
+        let s = by_name("IM").unwrap().scaled(0.1);
+        assert_eq!(s.features, 2048);
+        assert_eq!(s.samples, 4160);
+    }
+}

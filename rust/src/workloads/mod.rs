@@ -1,0 +1,16 @@
+//! Workload and dataset generators for all experiments.
+//!
+//! The paper evaluates on real datasets (Table II) and synthetic
+//! relational workloads. None of the real data ships with this repo, so
+//! each generator produces a synthetic equivalent with exactly the shape
+//! (rows, columns, key distributions, dataset dimensions) the paper
+//! reports, and — for the ML datasets — a *planted* ground-truth model so
+//! convergence experiments are meaningful (see DESIGN.md §1).
+
+pub mod datasets;
+pub mod join;
+pub mod selection;
+
+pub use datasets::{Dataset, DatasetSpec, TaskKind, TABLE2};
+pub use join::JoinWorkload;
+pub use selection::SelectionWorkload;

@@ -1,0 +1,163 @@
+//! End-to-end integration: Python-AOT HLO artifacts executed from the
+//! Rust PJRT runtime, validated against the native Rust trainer.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first — the
+//! Makefile orders this before `cargo test`). If the artifacts are
+//! missing the tests *fail* with a clear message rather than silently
+//! passing; set `HBM_SKIP_RUNTIME_TESTS=1` to opt out explicitly.
+
+use std::path::PathBuf;
+
+use hbm_analytics::cpu;
+use hbm_analytics::engines::sgd::{GlmTask, SgdHyperParams};
+use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
+use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    if std::env::var("HBM_SKIP_RUNTIME_TESTS").is_ok() {
+        eprintln!("HBM_SKIP_RUNTIME_TESTS set; skipping runtime tests");
+        return None;
+    }
+    let dir = std::env::var("HBM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    assert!(
+        dir.join("manifest.tsv").exists(),
+        "artifacts missing at {dir:?} — run `make artifacts` first"
+    );
+    Some(dir)
+}
+
+fn tiny_dataset(task: TaskKind, seed: u64) -> hbm_analytics::workloads::Dataset {
+    DatasetSpec { name: "tiny", samples: 256, features: 32, task, epochs: 1 }
+        .generate(seed)
+}
+
+#[test]
+fn registry_lists_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let names = rt.registry().names();
+    for expected in [
+        "sgd_epoch_tiny_ridge_b16",
+        "sgd_epoch_tiny_logistic_b16",
+        "sgd_epoch_im_b16",
+        "select_mask",
+    ] {
+        assert!(names.contains(&expected), "missing {expected} in {names:?}");
+    }
+}
+
+#[test]
+fn hlo_epoch_matches_rust_trainer_ridge() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let d = tiny_dataset(TaskKind::Regression, 42);
+    let exec =
+        SgdEpochExecutor::new(&mut rt, "sgd_epoch_tiny_ridge_b16", &d.features, &d.labels)
+            .expect("executor");
+    assert_eq!(exec.task, GlmTask::Ridge);
+
+    let params = SgdHyperParams {
+        task: GlmTask::Ridge,
+        alpha: 0.05,
+        lambda: 1e-3,
+        minibatch: 16,
+        epochs: 5,
+    };
+    let (hlo_model, _) = exec.train(&mut rt, &params).expect("train");
+    let (rust_model, _) = cpu::sgd::train(&d.features, &d.labels, 32, &params);
+    for (h, r) in hlo_model.iter().zip(&rust_model) {
+        assert!(
+            (h - r).abs() < 5e-4,
+            "HLO vs Rust model mismatch: {h} vs {r}"
+        );
+    }
+}
+
+#[test]
+fn hlo_epoch_matches_rust_trainer_logistic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let d = tiny_dataset(TaskKind::Binary, 43);
+    let exec = SgdEpochExecutor::new(
+        &mut rt,
+        "sgd_epoch_tiny_logistic_b16",
+        &d.features,
+        &d.labels,
+    )
+    .expect("executor");
+
+    let params = SgdHyperParams {
+        task: GlmTask::Logistic,
+        alpha: 0.2,
+        lambda: 0.0,
+        minibatch: 16,
+        epochs: 3,
+    };
+    let (hlo_model, history) = exec.train(&mut rt, &params).expect("train");
+    assert_eq!(history.len(), 3);
+    let (rust_model, _) = cpu::sgd::train(&d.features, &d.labels, 32, &params);
+    for (h, r) in hlo_model.iter().zip(&rust_model) {
+        assert!((h - r).abs() < 5e-4, "{h} vs {r}");
+    }
+}
+
+#[test]
+fn hlo_training_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let d = tiny_dataset(TaskKind::Regression, 44);
+    let exec =
+        SgdEpochExecutor::new(&mut rt, "sgd_epoch_tiny_ridge_b16", &d.features, &d.labels)
+            .unwrap();
+    let params = SgdHyperParams {
+        task: GlmTask::Ridge,
+        alpha: 0.05,
+        lambda: 0.0,
+        minibatch: 16,
+        epochs: 10,
+    };
+    let (model, history) = exec.train(&mut rt, &params).unwrap();
+    let l_first = cpu::sgd::loss(&d.features, &d.labels, 32, &history[0], &params);
+    let l_last = cpu::sgd::loss(&d.features, &d.labels, 32, &model, &params);
+    assert!(l_last < l_first * 0.5, "no descent: {l_first} -> {l_last}");
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let d = tiny_dataset(TaskKind::Regression, 45);
+    let exec =
+        SgdEpochExecutor::new(&mut rt, "sgd_epoch_tiny_ridge_b16", &d.features, &d.labels)
+            .unwrap();
+    let x = vec![0.0f32; 32];
+    let _ = exec.epoch(&mut rt, &x, 0.1, 0.0).unwrap();
+    let _ = exec.epoch(&mut rt, &x, 0.1, 0.0).unwrap();
+    assert_eq!(rt.compiled_count(), 1, "one artifact, one compilation");
+}
+
+#[test]
+fn select_artifact_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let meta = rt.meta("select_mask").expect("select artifact");
+    let items = meta.m;
+    let data: Vec<i32> = (0..items as i32).collect();
+    let data_lit = xla::Literal::vec1(&data);
+    let lo = xla::Literal::scalar(10i32);
+    let hi = xla::Literal::scalar(99i32);
+    let out = rt
+        .execute("select_mask", &[&data_lit, &lo, &hi])
+        .expect("execute select");
+    assert_eq!(out.len(), 2, "mask + counts");
+    let mask = out[0].to_vec::<i32>().unwrap();
+    let counts = out[1].to_vec::<i32>().unwrap();
+    assert_eq!(mask.iter().sum::<i32>(), 90);
+    assert_eq!(counts.iter().sum::<i32>(), 90);
+    assert_eq!(mask[10], 1);
+    assert_eq!(mask[9], 0);
+}

@@ -1,0 +1,298 @@
+//! Cross-module integration tests over the public API: the coordinator's
+//! end-to-end invariants that no single module's unit tests can see.
+//!
+//! These complement `runtime_integration.rs` (which needs artifacts);
+//! everything here is artifact-free and exercises the simulated device,
+//! the DBMS integration, the CPU baselines, and the paper's headline
+//! cross-checks against each other.
+
+use hbm_analytics::cpu;
+use hbm_analytics::db::ops::AggKind;
+use hbm_analytics::db::{Catalog, Column, Executor, FpgaAccelerator, Plan, Table};
+use hbm_analytics::engines::control::{ControlUnit, Csr};
+use hbm_analytics::engines::sgd::{GlmTask, SgdHyperParams};
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::util::proptest::{check, Gen, U64Range};
+use hbm_analytics::util::rng::Xoshiro256;
+use hbm_analytics::workloads::{JoinWorkload, SelectionWorkload};
+
+fn cfg() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+// ---------------------------------------------------------------------
+// FPGA path vs CPU path: result equivalence under randomized workloads.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_offloaded_select_equals_cpu_for_random_ranges() {
+    struct G;
+    impl Gen for G {
+        type Value = (u64, u64, u64);
+        fn generate(&self, rng: &mut Xoshiro256) -> Self::Value {
+            (rng.next_u64(), rng.gen_range_u64(1 << 32), rng.gen_range_u64(1 << 32))
+        }
+    }
+    // Fewer cases than default: each case is a full offload.
+    std::env::set_var("HBM_PROPTEST_CASES", "8");
+    check("offload_select ≡ cpu", &G, |&(seed, a, b)| {
+        let w = SelectionWorkload::uniform(50_000, 0.5, seed);
+        let (lo, hi) = (a.min(b) as u32, a.max(b) as u32);
+        let (fpga, _) = FpgaAccelerator::new(cfg()).resident().offload_select(&w.data, lo, hi);
+        let mut cpu = cpu::selection::range_select(&w.data, lo, hi, 4);
+        cpu.sort_unstable();
+        fpga == cpu
+    });
+    std::env::remove_var("HBM_PROPTEST_CASES");
+}
+
+#[test]
+fn offloaded_join_multi_pass_equals_cpu() {
+    // |S| = 20_000 forces 3 passes over L (HT capacity 8192): the
+    // pass-loop's index bookkeeping must still match the one-shot CPU join.
+    let w = JoinWorkload::generate(80_000, 20_000, true, true, 31);
+    let (mut fpga, _) = FpgaAccelerator::new(cfg()).resident().offload_join(&w.s, &w.l);
+    let mut cpu = cpu::join::hash_join_positions(&w.s, &w.l, 4);
+    fpga.sort_unstable();
+    cpu.sort_unstable();
+    assert_eq!(fpga, cpu);
+}
+
+#[test]
+fn offloaded_join_with_duplicates_equals_cpu() {
+    let w = JoinWorkload::generate(60_000, 2048, false, false, 32);
+    let (mut fpga, _) = FpgaAccelerator::new(cfg()).offload_join(&w.s, &w.l);
+    let mut cpu = cpu::join::hash_join_positions(&w.s, &w.l, 4);
+    fpga.sort_unstable();
+    cpu.sort_unstable();
+    assert_eq!(fpga, cpu);
+}
+
+// ---------------------------------------------------------------------
+// Timing invariants the paper's claims rest on.
+// ---------------------------------------------------------------------
+
+#[test]
+fn more_engines_never_slower() {
+    let w = SelectionWorkload::uniform(1_000_000, 0.0, 7);
+    let mut prev = f64::INFINITY;
+    for engines in [1usize, 2, 4, 8, 14] {
+        let (_, t) = FpgaAccelerator::new(cfg())
+            .with_engines(engines)
+            .resident()
+            .offload_select(&w.data, w.lo, w.hi);
+        assert!(
+            t.exec <= prev * 1.001,
+            "{engines} engines slower than fewer: {} vs {prev}",
+            t.exec
+        );
+        prev = t.exec;
+    }
+}
+
+#[test]
+fn clock_300_beats_200_proportionally() {
+    let w = SelectionWorkload::uniform(1_000_000, 0.0, 8);
+    let run = |clock| {
+        let (_, t) = FpgaAccelerator::new(HbmConfig::at_clock(clock))
+            .resident()
+            .offload_select(&w.data, w.lo, w.hi);
+        t.exec
+    };
+    let r = run(FabricClock::Mhz200) / run(FabricClock::Mhz300);
+    assert!((r - 1.5).abs() < 0.05, "clock scaling ratio {r}");
+}
+
+#[test]
+fn resident_data_strictly_faster_end_to_end() {
+    let w = JoinWorkload::generate(500_000, 1024, true, true, 9);
+    let (_, loaded) = FpgaAccelerator::new(cfg()).offload_join(&w.s, &w.l);
+    let (_, resident) = FpgaAccelerator::new(cfg()).resident().offload_join(&w.s, &w.l);
+    assert!(resident.total() < loaded.total());
+    assert_eq!(resident.copy_in, 0.0);
+    // Exec time itself is placement-identical.
+    assert!((resident.exec - loaded.exec).abs() / loaded.exec < 1e-9);
+}
+
+#[test]
+fn selection_rate_monotone_in_selectivity() {
+    // Fig. 6's mechanism as an invariant: higher selectivity never raises
+    // the consumption rate.
+    let mut prev = f64::INFINITY;
+    for (i, sel) in [0.0f64, 0.25, 0.5, 1.0].iter().enumerate() {
+        let w = SelectionWorkload::uniform(500_000, *sel, 100 + i as u64);
+        let (_, t) = FpgaAccelerator::new(cfg()).resident().offload_select(&w.data, w.lo, w.hi);
+        let rate = (w.data.len() * 4) as f64 / t.exec;
+        assert!(rate <= prev * 1.01, "sel={sel}: rate {rate} > prev {prev}");
+        prev = rate;
+    }
+}
+
+// ---------------------------------------------------------------------
+// DBMS integration: accelerated executor is a drop-in replacement.
+// ---------------------------------------------------------------------
+
+fn tpch_like_catalog(rows: usize) -> Catalog {
+    let mut rng = Xoshiro256::new(55);
+    let mut cat = Catalog::new();
+    cat.register(Table::new(
+        "lineitem",
+        vec![
+            Column::u32("okey", (0..rows as u32).collect()),
+            Column::u32("partkey", (0..rows).map(|_| rng.next_u32() % 1000).collect()),
+            Column::u32("qty", (0..rows).map(|_| rng.next_u32() % 50).collect()),
+        ],
+    ));
+    cat.register(Table::new(
+        "part",
+        vec![Column::u32("pkey", (0..1000u32).collect())],
+    ));
+    cat
+}
+
+#[test]
+fn accelerated_executor_is_result_identical_on_query_suite() {
+    let cat = tpch_like_catalog(300_000);
+    let queries = vec![
+        // Q1: selective scan + count (late materialization: project the
+        // candidates back onto the column, then count).
+        Plan::scan("lineitem", "qty")
+            .project(Plan::scan("lineitem", "qty").select(45, 49))
+            .aggregate(AggKind::Count),
+        // Q2: select + project + sum.
+        Plan::scan("lineitem", "partkey")
+            .project(Plan::scan("lineitem", "qty").select(0, 10))
+            .aggregate(AggKind::SumU32),
+        // Q3: join + side + max.
+        Plan::scan("lineitem", "okey")
+            .project(
+                Plan::scan("part", "pkey")
+                    .join(Plan::scan("lineitem", "partkey"))
+                    .join_side(false),
+            )
+            .aggregate(AggKind::MaxU32),
+    ];
+    for (i, q) in queries.iter().enumerate() {
+        let cpu_res = Executor::cpu(&cat, 4).run(q);
+        let mut acc = FpgaAccelerator::new(cfg());
+        let fpga_res = Executor::accelerated(&cat, 4, &mut acc).run(q);
+        assert_eq!(
+            format!("{cpu_res:?}"),
+            format!("{fpga_res:?}"),
+            "query {i} diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Control-unit protocol (the CSR contract the coordinator relies on).
+// ---------------------------------------------------------------------
+
+#[test]
+fn control_unit_drives_a_fleet_lifecycle() {
+    let mut cu = ControlUnit::new(14);
+    // Arm 14 engines with per-engine args, as the coordinator does.
+    for slot in 0..14 {
+        cu.csr_write(slot, Csr::Arg0 as u32, slot as u32 * 100);
+        cu.csr_write(slot, Csr::Control as u32, 1);
+    }
+    let started = cu.take_started();
+    assert_eq!(started.len(), 14);
+    assert!(!cu.barrier_done(&started));
+    // Engines complete out of order.
+    for &slot in started.iter().rev() {
+        cu.complete(slot, slot as u32, 0, 1000 + slot as u32);
+    }
+    assert!(cu.barrier_done(&started));
+    for slot in 0..14 {
+        assert_eq!(cu.csr_read(slot, Csr::Ret0 as u32), slot as u32);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure injection: the substrate rejects invalid placements loudly.
+// ---------------------------------------------------------------------
+
+#[test]
+fn oversized_replication_is_refused_like_the_paper_says() {
+    // §VI: replication impossible when dataset > 512 MiB (one port-home).
+    use hbm_analytics::hbm::shim::{Shim, PORT_HOME_BYTES};
+    let mut shim = Shim::new(cfg());
+    assert!(shim.alloc(0, PORT_HOME_BYTES + 64).is_none());
+    // Block-wise alternative: two half-size blocks fit.
+    assert!(shim.alloc(1, PORT_HOME_BYTES / 2).is_some());
+    assert!(shim.alloc(1, PORT_HOME_BYTES / 2).is_some());
+    assert!(shim.alloc(1, 64).is_none());
+}
+
+#[test]
+#[should_panic]
+fn hbm_capacity_is_enforced() {
+    use hbm_analytics::hbm::HbmMemory;
+    let mut mem = HbmMemory::new();
+    mem.write(8 * 1024 * 1024 * 1024 - 2, &[1, 2, 3, 4]);
+}
+
+// ---------------------------------------------------------------------
+// SGD end-to-end: the offloaded search beats/bit-matches the CPU search.
+// ---------------------------------------------------------------------
+
+#[test]
+fn offloaded_sgd_grid_agrees_with_cpu_grid() {
+    use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
+    let spec = DatasetSpec {
+        name: "t",
+        samples: 512,
+        features: 64,
+        task: TaskKind::Regression,
+        epochs: 3,
+    };
+    let d = spec.generate(77);
+    let grid: Vec<SgdHyperParams> = [0.1f32, 0.05, 0.01]
+        .iter()
+        .map(|&alpha| SgdHyperParams {
+            task: GlmTask::Ridge,
+            alpha,
+            lambda: 1e-4,
+            minibatch: 16,
+            epochs: 3,
+        })
+        .collect();
+    let (models, timing) =
+        FpgaAccelerator::new(cfg()).offload_sgd(&d.features, &d.labels, 64, &grid);
+    let cpu_results = cpu::sgd::search(&d.features, &d.labels, 64, &grid, 3);
+    for ((_, _, cpu_model), fpga_model) in cpu_results.iter().zip(&models) {
+        for (a, b) in cpu_model.iter().zip(fpga_model) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+    // 3 jobs on 14 engines: one round; copy-in accounted once.
+    assert!(timing.copy_in > 0.0 && timing.exec > 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Property: fluid allocations stay feasible through the whole stack.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_engine_count_rate_is_subadditive() {
+    // Aggregate rate with k engines never exceeds k × single-engine rate
+    // and never exceeds the 32-segment crossbar ceiling.
+    let single = {
+        let w = SelectionWorkload::uniform(200_000, 0.0, 5);
+        let (_, t) = FpgaAccelerator::new(cfg())
+            .with_engines(1)
+            .resident()
+            .offload_select(&w.data, w.lo, w.hi);
+        (w.data.len() * 4) as f64 / t.exec
+    };
+    check("subadditive scaling", &U64Range(1, 14), |&k| {
+        let w = SelectionWorkload::uniform(200_000, 0.0, 5);
+        let (_, t) = FpgaAccelerator::new(cfg())
+            .with_engines(k as usize)
+            .resident()
+            .offload_select(&w.data, w.lo, w.hi);
+        let rate = (w.data.len() * 4) as f64 / t.exec;
+        rate <= k as f64 * single * 1.05 && rate < 204.8e9
+    });
+}
