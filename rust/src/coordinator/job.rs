@@ -1,0 +1,302 @@
+//! Job model for the L3 coordinator: what clients submit, what the
+//! scheduler tracks, and what comes back.
+
+use crate::engines::join::HT_TUPLES;
+use crate::engines::sgd::SgdHyperParams;
+use crate::hbm::shim::ENGINE_PORTS;
+
+/// Identity of a host column for the HBM-resident cache: `(table, column)`.
+/// Two submissions with the same key are promises that the bytes are the
+/// same host column, so a second copy-in can be skipped.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ColumnKey {
+    pub table: String,
+    pub column: String,
+}
+
+impl ColumnKey {
+    pub fn new(table: impl Into<String>, column: impl Into<String>) -> Self {
+        Self { table: table.into(), column: column.into() }
+    }
+}
+
+impl std::fmt::Display for ColumnKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}.{}", self.table, self.column)
+    }
+}
+
+/// One input column of a job: optional cache identity plus its host size.
+#[derive(Debug, Clone)]
+pub struct InputColumn {
+    /// `None` marks an anonymous intermediate; it is copied every time and
+    /// never cached.
+    pub key: Option<ColumnKey>,
+    pub bytes: u64,
+}
+
+/// Payload of one query job. The coordinator owns the host data for the
+/// lifetime of the job (clients hand it over on submit).
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    /// Range selection over a `u32` column.
+    Selection { data: Vec<u32>, lo: u32, hi: u32 },
+    /// Hash join: build side `s`, probe side `l`.
+    Join { s: Vec<u32>, l: Vec<u32>, handle_collisions: bool },
+    /// GLM hyperparameter grid over one dataset.
+    Sgd {
+        features: Vec<f32>,
+        labels: Vec<f32>,
+        n_features: usize,
+        grid: Vec<SgdHyperParams>,
+    },
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Selection { .. } => "selection",
+            JobKind::Join { .. } => "join",
+            JobKind::Sgd { .. } => "sgd",
+        }
+    }
+
+    /// Host bytes that must be copied in when nothing is resident.
+    pub fn input_bytes(&self) -> u64 {
+        match self {
+            JobKind::Selection { data, .. } => (data.len() * 4) as u64,
+            JobKind::Join { s, l, .. } => ((s.len() + l.len()) * 4) as u64,
+            JobKind::Sgd { features, labels, .. } => {
+                ((features.len() + labels.len()) * 4) as u64
+            }
+        }
+    }
+
+    /// Shim ports one engine of this kind occupies (join engines drive a
+    /// read port and a write port).
+    pub fn ports_per_engine(&self) -> usize {
+        match self {
+            JobKind::Join { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Rough total HBM traffic estimate, the signal the bandwidth-aware
+    /// policy weighs: inputs scaled by how often the engines re-read them.
+    pub fn estimated_hbm_bytes(&self) -> u64 {
+        match self {
+            JobKind::Selection { data, .. } => (data.len() * 8) as u64,
+            JobKind::Join { s, l, .. } => {
+                let passes = (s.len().div_ceil(HT_TUPLES)).max(1) as u64;
+                (s.len() * 4) as u64 + (l.len() * 4) as u64 * passes
+            }
+            JobKind::Sgd { features, labels, grid, .. } => {
+                let bytes = ((features.len() + labels.len()) * 4) as u64;
+                let epochs: u64 =
+                    grid.iter().map(|p| p.epochs as u64).sum::<u64>().max(1);
+                bytes * epochs
+            }
+        }
+    }
+
+    fn default_inputs(&self) -> Vec<InputColumn> {
+        match self {
+            JobKind::Selection { data, .. } => vec![InputColumn {
+                key: None,
+                bytes: (data.len() * 4) as u64,
+            }],
+            JobKind::Join { s, l, .. } => vec![
+                InputColumn { key: None, bytes: (s.len() * 4) as u64 },
+                InputColumn { key: None, bytes: (l.len() * 4) as u64 },
+            ],
+            JobKind::Sgd { features, labels, .. } => vec![InputColumn {
+                key: None,
+                bytes: ((features.len() + labels.len()) * 4) as u64,
+            }],
+        }
+    }
+}
+
+/// A submitted job: payload plus scheduling metadata.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Submitting client (for reporting only).
+    pub client: usize,
+    pub kind: JobKind,
+    /// Cache identities of the payload's inputs, in payload order
+    /// (selection: `[data]`; join: `[s, l]`; SGD: `[features+labels]`).
+    pub inputs: Vec<InputColumn>,
+    /// Cap on compute engines this job may occupy.
+    pub max_engines: usize,
+    /// Legacy residency escape hatch: treat every input as already in HBM
+    /// regardless of the cache (the old `FpgaAccelerator::data_resident`).
+    pub resident: bool,
+}
+
+impl JobSpec {
+    pub fn new(kind: JobKind) -> Self {
+        let inputs = kind.default_inputs();
+        Self { client: 0, kind, inputs, max_engines: ENGINE_PORTS, resident: false }
+    }
+
+    /// Attach cache keys to the inputs, in payload order. Shorter lists
+    /// leave the remaining inputs anonymous.
+    pub fn with_keys(mut self, keys: Vec<Option<ColumnKey>>) -> Self {
+        for (input, key) in self.inputs.iter_mut().zip(keys) {
+            input.key = key;
+        }
+        self
+    }
+
+    pub fn with_client(mut self, client: usize) -> Self {
+        self.client = client;
+        self
+    }
+
+    pub fn with_max_engines(mut self, max_engines: usize) -> Self {
+        self.max_engines = max_engines;
+        self
+    }
+
+    pub fn with_resident(mut self, resident: bool) -> Self {
+        self.resident = resident;
+        self
+    }
+}
+
+/// Result payload of a completed job.
+#[derive(Debug, Clone)]
+pub enum JobOutput {
+    /// Sorted candidate list (global indexes).
+    Selection(Vec<u32>),
+    /// (S-position, L-index) pairs.
+    Join(Vec<(u32, u32)>),
+    /// One trained model per grid entry, in grid order.
+    Sgd(Vec<Vec<f32>>),
+}
+
+impl JobOutput {
+    pub fn expect_selection(self) -> Vec<u32> {
+        match self {
+            JobOutput::Selection(v) => v,
+            other => panic!("expected selection output, got {}", other.name()),
+        }
+    }
+
+    pub fn expect_join(self) -> Vec<(u32, u32)> {
+        match self {
+            JobOutput::Join(v) => v,
+            other => panic!("expected join output, got {}", other.name()),
+        }
+    }
+
+    pub fn expect_sgd(self) -> Vec<Vec<f32>> {
+        match self {
+            JobOutput::Sgd(v) => v,
+            other => panic!("expected sgd output, got {}", other.name()),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobOutput::Selection(_) => "selection",
+            JobOutput::Join(_) => "join",
+            JobOutput::Sgd(_) => "sgd",
+        }
+    }
+}
+
+/// Per-job accounting the coordinator publishes from [`stats`].
+///
+/// [`stats`]: crate::coordinator::Coordinator::stats
+#[derive(Debug, Clone, Default)]
+pub struct JobRecord {
+    pub id: usize,
+    pub client: usize,
+    pub kind: &'static str,
+    /// Simulated seconds, all on the coordinator's clock.
+    pub submit_time: f64,
+    pub start_time: f64,
+    pub finish_time: f64,
+    /// Time attributed to this job's host→HBM copies.
+    pub copy_in: f64,
+    /// Time this job's engines were running (sum over its rounds).
+    pub exec: f64,
+    pub copy_out: f64,
+    /// Most engines the job held in any round.
+    pub engines: usize,
+    /// Scheduling rounds the job participated in.
+    pub rounds: u32,
+    pub cache_hits: u32,
+    pub cache_misses: u32,
+    /// HBM bytes its engines moved across all rounds.
+    pub hbm_bytes: u64,
+}
+
+impl JobRecord {
+    /// Delay between submission and first engine allocation.
+    pub fn queue_wait(&self) -> f64 {
+        self.start_time - self.submit_time
+    }
+
+    /// End-to-end latency the client observed.
+    pub fn latency(&self) -> f64 {
+        self.finish_time - self.submit_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::sgd::GlmTask;
+
+    #[test]
+    fn spec_builder_wires_inputs_and_keys() {
+        let spec = JobSpec::new(JobKind::Join {
+            s: vec![1, 2, 3],
+            l: vec![4, 5],
+            handle_collisions: false,
+        })
+        .with_keys(vec![Some(ColumnKey::new("dim", "pk")), None])
+        .with_client(7)
+        .with_max_engines(3);
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[0].bytes, 12);
+        assert_eq!(spec.inputs[1].bytes, 8);
+        assert_eq!(spec.inputs[0].key.as_ref().unwrap().to_string(), "dim.pk");
+        assert!(spec.inputs[1].key.is_none());
+        assert_eq!((spec.client, spec.max_engines), (7, 3));
+        assert_eq!(spec.kind.ports_per_engine(), 2);
+    }
+
+    #[test]
+    fn estimates_scale_with_work() {
+        let small = JobKind::Selection { data: vec![0; 1000], lo: 0, hi: 1 };
+        let big = JobKind::Selection { data: vec![0; 100_000], lo: 0, hi: 1 };
+        assert!(big.estimated_hbm_bytes() > small.estimated_hbm_bytes());
+
+        // Multi-pass joins cost proportionally more.
+        let one_pass =
+            JobKind::Join { s: vec![0; 100], l: vec![0; 10_000], handle_collisions: false };
+        let three_pass = JobKind::Join {
+            s: vec![0; 2 * HT_TUPLES + 1],
+            l: vec![0; 10_000],
+            handle_collisions: false,
+        };
+        assert!(three_pass.estimated_hbm_bytes() > 2 * one_pass.estimated_hbm_bytes());
+
+        let sgd = JobKind::Sgd {
+            features: vec![0.0; 32 * 64],
+            labels: vec![0.0; 64],
+            n_features: 32,
+            grid: vec![SgdHyperParams {
+                task: GlmTask::Ridge,
+                alpha: 0.1,
+                lambda: 0.0,
+                minibatch: 16,
+                epochs: 4,
+            }],
+        };
+        assert_eq!(sgd.estimated_hbm_bytes(), sgd.input_bytes() * 4);
+    }
+}

@@ -1,1 +1,49 @@
-// paper's L3 coordination contribution
+//! L3 coordination: the multi-query scheduler that owns the simulated
+//! HBM-FPGA card.
+//!
+//! The paper's §III system architecture places one central software
+//! coordinator above the scale-out compute engines: it drives every
+//! engine asynchronously through the CSR register interface, decides
+//! which engine slots and shim ports each query gets, and manages what
+//! data stays resident in HBM between queries. This module is that
+//! layer, generalized from "one offload at a time" to a served queue of
+//! concurrent clients:
+//!
+//! * [`job`] — the submission/result model: [`JobSpec`] payloads
+//!   (selection / join / SGD), `(table, column)` cache identities
+//!   ([`ColumnKey`]), and per-job accounting ([`JobRecord`]);
+//! * [`policy`] — pluggable engine-slot allocation ([`Policy::Fifo`],
+//!   [`Policy::FairShare`], [`Policy::BandwidthAware`]): which queued
+//!   jobs co-run in a round and how the 14 engine ports split between
+//!   them — the channel/port allocation decision that related work
+//!   (Wang et al., Choi et al.) shows dominates delivered HBM bandwidth;
+//! * [`cache`] — the HBM-resident column cache with LRU eviction over a
+//!   byte budget, generalizing the old global `data_resident` flag so
+//!   repeat queries skip OpenCAPI copy-in per column;
+//! * [`scheduler`] — the [`Coordinator`] itself: owns `HbmMemory`,
+//!   `Shim`, `ControlUnit` and the host link, runs each round's engines
+//!   under one fluid simulation so co-scheduled jobs contend for
+//!   crossbar bandwidth, and publishes per-job latency/throughput
+//!   statistics;
+//! * [`serve`] — the `hbmctl serve` replay harness: a deterministic
+//!   mixed workload from N simulated clients, per-policy comparison
+//!   tables and the `BENCH_coordinator.json` perf artifact.
+//!
+//! `db::udf::FpgaAccelerator` submits through a private [`Coordinator`]
+//! instead of rebuilding the card per offload, so the DBMS integration
+//! and the figure drivers all exercise this path.
+
+pub mod cache;
+pub mod job;
+pub mod policy;
+pub mod scheduler;
+pub mod serve;
+
+pub use cache::{CacheStats, ColumnCache, DEFAULT_CACHE_BYTES};
+pub use job::{ColumnKey, InputColumn, JobKind, JobOutput, JobRecord, JobSpec};
+pub use policy::{Policy, MAX_CORUNNERS};
+pub use scheduler::{Coordinator, CoordinatorStats};
+pub use serve::{
+    bench_json, mixed_workload, render_outcomes, run_policy, PolicyOutcome,
+    ServeSpec,
+};

@@ -1,0 +1,265 @@
+//! Engine-slot allocation policies.
+//!
+//! The coordinator schedules in *rounds*: it picks a set of queued jobs,
+//! grants each a disjoint set of the shim's 14 engine ports, and runs all
+//! their engines under one fluid simulation. The policy decides both
+//! admission (which jobs co-run) and allocation (how many ports each
+//! gets) — the decision Wang et al. and Choi et al. show dominates
+//! delivered HBM bandwidth:
+//!
+//! * [`Policy::Fifo`] — one job at a time, full width. Best per-job
+//!   execution rate, worst queue wait under load.
+//! * [`Policy::FairShare`] — up to [`MAX_CORUNNERS`] jobs split the ports
+//!   evenly. Lower per-job rate, much lower queueing; with the column
+//!   cache it also overlaps one job's copy-in with another's residency.
+//! * [`Policy::BandwidthAware`] — co-runs like fair-share but sizes each
+//!   grant by the job's estimated HBM traffic, so a 3-pass join is not
+//!   starved by a small selection.
+//!
+//! Ports granted to one job are contiguous and disjoint from other jobs'
+//! — the ideal-partitioning discipline of §IV; contention between
+//! co-runners then happens on the host link and, when a grant is smaller
+//! than a job's data spread, inside the job's own port set.
+
+use crate::hbm::shim::ENGINE_PORTS;
+
+/// Most jobs fair-share/bandwidth-aware will co-run in one round. With 14
+/// ports and 4 co-runners every job still gets ≥ 3 ports (≥ 1 join
+/// engine pair).
+pub const MAX_CORUNNERS: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fifo,
+    FairShare,
+    BandwidthAware,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::FairShare => "fair-share",
+            Policy::BandwidthAware => "bandwidth-aware",
+        }
+    }
+
+    pub fn all() -> [Policy; 3] {
+        [Policy::Fifo, Policy::FairShare, Policy::BandwidthAware]
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "fair" | "fair-share" | "fairshare" => Some(Policy::FairShare),
+            "bandwidth" | "bandwidth-aware" | "bw" => Some(Policy::BandwidthAware),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// What the policy sees of one queued job.
+#[derive(Debug, Clone)]
+pub struct QueuedJob {
+    /// Ports one engine occupies (1, or 2 for join).
+    pub ports_per_engine: usize,
+    /// Most ports the job can use (its engine cap × ports-per-engine).
+    pub max_ports: usize,
+    /// Estimated total HBM traffic, the bandwidth-aware weight.
+    pub est_bytes: u64,
+}
+
+/// One admitted job for the upcoming round: queue position + port grant.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    pub queue_idx: usize,
+    pub ports: Vec<usize>,
+}
+
+/// Plan one round over the queue (front first). Always admits at least
+/// the head job; never oversubscribes the 14 engine ports; grants are
+/// multiples of the job's ports-per-engine.
+pub fn plan_round(policy: Policy, queue: &[QueuedJob]) -> Vec<Admission> {
+    assert!(!queue.is_empty(), "plan_round on an empty queue");
+    let grants: Vec<usize> = match policy {
+        Policy::Fifo => vec![clamp_grant(&queue[0], ENGINE_PORTS)],
+        Policy::FairShare => {
+            let n = queue.len().min(MAX_CORUNNERS);
+            let share = ENGINE_PORTS / n;
+            queue[..n].iter().map(|j| clamp_grant(j, share)).collect()
+        }
+        Policy::BandwidthAware => {
+            let n = queue.len().min(MAX_CORUNNERS);
+            proportional_grants(&queue[..n])
+        }
+    };
+
+    let mut next_port = 0usize;
+    grants
+        .into_iter()
+        .enumerate()
+        .map(|(queue_idx, grant)| {
+            let ports: Vec<usize> = (next_port..next_port + grant).collect();
+            next_port += grant;
+            assert!(next_port <= ENGINE_PORTS, "port pool oversubscribed");
+            Admission { queue_idx, ports }
+        })
+        .collect()
+}
+
+/// Clamp a desired port count to the job's shape: within `limit`, within
+/// the job's own cap, a multiple of ports-per-engine, and at least one
+/// engine.
+fn clamp_grant(job: &QueuedJob, limit: usize) -> usize {
+    let ppe = job.ports_per_engine;
+    let want = limit.min(job.max_ports);
+    let aligned = (want / ppe) * ppe;
+    aligned.max(ppe)
+}
+
+/// Bandwidth-aware sizing: start every admitted job at its minimum grant,
+/// then hand out the remaining ports to whichever job has the largest
+/// outstanding byte-per-port demand. Deterministic (first index wins
+/// ties) and never exceeds the pool.
+fn proportional_grants(jobs: &[QueuedJob]) -> Vec<usize> {
+    let mut grants: Vec<usize> = jobs.iter().map(|j| j.ports_per_engine).collect();
+    let mut used: usize = grants.iter().sum();
+    // Head-of-line jobs beyond the pool would oversubscribe; shrink the
+    // admitted set until the minimum grants fit (cannot happen with
+    // MAX_CORUNNERS = 4, kept for safety).
+    while used > ENGINE_PORTS {
+        used -= grants.pop().expect("grants underflow");
+    }
+
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, job) in jobs.iter().enumerate().take(grants.len()) {
+            let grant = grants[i];
+            if grant + job.ports_per_engine > job.max_ports.max(job.ports_per_engine)
+                || used + job.ports_per_engine > ENGINE_PORTS
+            {
+                continue;
+            }
+            let demand = job.est_bytes as f64 / grant as f64;
+            if best.map(|(_, d)| demand > d).unwrap_or(true) {
+                best = Some((i, demand));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                grants[i] += jobs[i].ports_per_engine;
+                used += jobs[i].ports_per_engine;
+            }
+            None => break,
+        }
+    }
+    grants
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sel(est: u64) -> QueuedJob {
+        QueuedJob { ports_per_engine: 1, max_ports: ENGINE_PORTS, est_bytes: est }
+    }
+
+    fn join(est: u64) -> QueuedJob {
+        QueuedJob { ports_per_engine: 2, max_ports: ENGINE_PORTS, est_bytes: est }
+    }
+
+    fn total_ports(adm: &[Admission]) -> usize {
+        adm.iter().map(|a| a.ports.len()).sum()
+    }
+
+    fn disjoint(adm: &[Admission]) -> bool {
+        let mut seen = std::collections::BTreeSet::new();
+        adm.iter().flat_map(|a| a.ports.iter()).all(|p| seen.insert(*p))
+    }
+
+    #[test]
+    fn fifo_gives_head_everything() {
+        let q = vec![sel(100), sel(100), sel(100)];
+        let adm = plan_round(Policy::Fifo, &q);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].queue_idx, 0);
+        assert_eq!(adm[0].ports, (0..ENGINE_PORTS).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fifo_respects_job_cap_and_join_pairs() {
+        let mut capped = sel(1);
+        capped.max_ports = 5;
+        let adm = plan_round(Policy::Fifo, &[capped]);
+        assert_eq!(adm[0].ports.len(), 5);
+
+        let adm = plan_round(Policy::Fifo, &[join(1)]);
+        assert_eq!(adm[0].ports.len(), ENGINE_PORTS, "7 join engine pairs");
+
+        let mut jcap = join(1);
+        jcap.max_ports = 5; // odd cap → round down to 2 engines
+        let adm = plan_round(Policy::Fifo, &[jcap]);
+        assert_eq!(adm[0].ports.len(), 4);
+    }
+
+    #[test]
+    fn fair_share_splits_evenly_and_disjointly() {
+        let q = vec![sel(1), join(1), sel(1), sel(1), sel(1)];
+        let adm = plan_round(Policy::FairShare, &q);
+        assert_eq!(adm.len(), MAX_CORUNNERS, "admits at most 4");
+        assert!(disjoint(&adm));
+        assert!(total_ports(&adm) <= ENGINE_PORTS);
+        assert_eq!(adm[0].ports.len(), 3);
+        assert_eq!(adm[1].ports.len(), 2, "join grant must be even");
+        assert_eq!(adm[2].ports.len(), 3);
+    }
+
+    #[test]
+    fn bandwidth_aware_feeds_the_heavy_job() {
+        let q = vec![sel(1_000_000), sel(100)];
+        let adm = plan_round(Policy::BandwidthAware, &q);
+        assert_eq!(adm.len(), 2);
+        assert!(disjoint(&adm));
+        assert_eq!(total_ports(&adm), ENGINE_PORTS, "no port left idle");
+        assert!(
+            adm[0].ports.len() > adm[1].ports.len() * 3,
+            "heavy job should dominate: {:?}",
+            adm.iter().map(|a| a.ports.len()).collect::<Vec<_>>()
+        );
+        assert!(!adm[1].ports.is_empty(), "light job still gets an engine");
+    }
+
+    #[test]
+    fn bandwidth_aware_join_stays_paired() {
+        let q = vec![join(1_000_000), sel(1_000_000)];
+        let adm = plan_round(Policy::BandwidthAware, &q);
+        assert_eq!(adm[0].ports.len() % 2, 0);
+        assert!(total_ports(&adm) <= ENGINE_PORTS);
+        assert!(disjoint(&adm));
+    }
+
+    #[test]
+    fn single_job_always_gets_full_width_under_all_policies() {
+        for p in Policy::all() {
+            let adm = plan_round(p, &[sel(42)]);
+            assert_eq!(adm.len(), 1);
+            assert_eq!(adm[0].ports.len(), ENGINE_PORTS, "policy {p}");
+        }
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for p in Policy::all() {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("fair"), Some(Policy::FairShare));
+        assert_eq!(Policy::parse("bw"), Some(Policy::BandwidthAware));
+        assert_eq!(Policy::parse("nope"), None);
+    }
+}

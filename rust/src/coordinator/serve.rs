@@ -1,0 +1,359 @@
+//! Mixed-workload replay harness behind `hbmctl serve`.
+//!
+//! Simulates `--clients N` concurrent clients submitting `--queries M`
+//! heterogeneous jobs (range selections, hash joins, SGD grids) against
+//! one coordinator, then reports throughput, latency percentiles, queue
+//! wait and cache behaviour per scheduling policy. Columns are drawn from
+//! a small pool of `(table, column)` identities and generated
+//! *deterministically from their key*, so a repeated key always carries
+//! identical bytes — the invariant the HBM-resident cache relies on.
+//!
+//! The harness also emits a machine-readable `BENCH_coordinator.json`
+//! so successive PRs can track the performance trajectory.
+
+use super::job::{ColumnKey, JobKind, JobOutput, JobSpec};
+use super::policy::Policy;
+use super::scheduler::{Coordinator, CoordinatorStats};
+use crate::engines::sgd::{GlmTask, SgdHyperParams};
+use crate::hbm::HbmConfig;
+use crate::util::rng::Xoshiro256;
+use crate::util::table::Table;
+
+/// Workload shape for one serve run.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub clients: usize,
+    pub queries: usize,
+    pub seed: u64,
+    /// Rows per generated column (scales every job).
+    pub rows: usize,
+    /// Resident-column budget handed to the coordinator.
+    pub cache_bytes: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        Self {
+            clients: 4,
+            queries: 64,
+            seed: 0xC0FFEE,
+            rows: 48_000,
+            cache_bytes: super::cache::DEFAULT_CACHE_BYTES,
+        }
+    }
+}
+
+/// Number of distinct selection columns in the pool.
+const SELECT_COLUMNS: usize = 8;
+/// Number of distinct join probe columns (with matching build tables).
+const JOIN_COLUMNS: usize = 4;
+/// Number of distinct SGD datasets.
+const SGD_DATASETS: usize = 2;
+/// Build-side size for the generated joins.
+const JOIN_BUILD_ROWS: usize = 2048;
+/// SGD dataset shape (small: the serve harness exercises scheduling, not
+/// convergence).
+const SGD_SAMPLES: usize = 256;
+const SGD_FEATURES: usize = 32;
+
+fn column_seed(spec_seed: u64, key: &ColumnKey) -> u64 {
+    // FNV-1a over the key name, mixed with the workload seed, so a key
+    // always regenerates the same bytes.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in key.table.bytes().chain(key.column.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^ spec_seed
+}
+
+/// The u32 column behind a selection key: uniform over the full domain.
+fn select_column(spec: &ServeSpec, key: &ColumnKey) -> Vec<u32> {
+    let mut rng = Xoshiro256::new(column_seed(spec.seed, key));
+    (0..spec.rows).map(|_| rng.next_u32()).collect()
+}
+
+/// The u32 probe column behind a join key: foreign keys into the build
+/// domain (half the probes match).
+fn probe_column(spec: &ServeSpec, key: &ColumnKey) -> Vec<u32> {
+    let mut rng = Xoshiro256::new(column_seed(spec.seed, key));
+    (0..spec.rows)
+        .map(|_| rng.next_u32() % (2 * JOIN_BUILD_ROWS as u32))
+        .collect()
+}
+
+/// The unique build side behind a dimension key.
+fn build_column(spec: &ServeSpec, key: &ColumnKey) -> Vec<u32> {
+    let mut rng = Xoshiro256::new(column_seed(spec.seed, key));
+    let shift = rng.next_u32() % JOIN_BUILD_ROWS as u32;
+    (0..JOIN_BUILD_ROWS as u32).map(|k| (k + shift) % (2 * JOIN_BUILD_ROWS as u32)).collect()
+}
+
+/// The planted-model dataset behind an SGD key: features then labels.
+fn sgd_dataset(spec: &ServeSpec, key: &ColumnKey) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(column_seed(spec.seed, key));
+    let truth: Vec<f32> =
+        (0..SGD_FEATURES).map(|_| rng.next_f32() - 0.5).collect();
+    let mut features = Vec::with_capacity(SGD_SAMPLES * SGD_FEATURES);
+    let mut labels = Vec::with_capacity(SGD_SAMPLES);
+    for _ in 0..SGD_SAMPLES {
+        let row: Vec<f32> = (0..SGD_FEATURES).map(|_| rng.next_f32() - 0.5).collect();
+        let y: f32 = row.iter().zip(&truth).map(|(x, t)| x * t).sum();
+        features.extend_from_slice(&row);
+        labels.push(y + 0.01 * (rng.next_f32() - 0.5));
+    }
+    (features, labels)
+}
+
+/// Generate the deterministic mixed workload for a serve run: ~50%
+/// selections, ~30% joins, ~20% SGD grids, clients assigned round-robin.
+pub fn mixed_workload(spec: &ServeSpec) -> Vec<JobSpec> {
+    let mut rng = Xoshiro256::new(spec.seed ^ 0x5E17);
+    let mut jobs = Vec::with_capacity(spec.queries);
+    for q in 0..spec.queries {
+        let client = q % spec.clients.max(1);
+        let job = match rng.next_u32() % 10 {
+            0..=4 => {
+                let key = ColumnKey::new(
+                    format!("sel{}", rng.next_u32() as usize % SELECT_COLUMNS),
+                    "v",
+                );
+                let data = select_column(spec, &key);
+                // Random ~10–50% selectivity window.
+                let span = (u32::MAX / 10) * (1 + rng.next_u32() % 5);
+                let lo = rng.next_u32().saturating_sub(span) / 2;
+                let hi = lo.saturating_add(span);
+                JobSpec::new(JobKind::Selection { data, lo, hi })
+                    .with_keys(vec![Some(key)])
+            }
+            5..=7 => {
+                let t = rng.next_u32() as usize % JOIN_COLUMNS;
+                let build_key = ColumnKey::new(format!("dim{t}"), "pk");
+                let probe_key = ColumnKey::new(format!("fact{t}"), "fk");
+                let s = build_column(spec, &build_key);
+                let l = probe_column(spec, &probe_key);
+                JobSpec::new(JobKind::Join { s, l, handle_collisions: false })
+                    .with_keys(vec![Some(build_key), Some(probe_key)])
+            }
+            _ => {
+                let key = ColumnKey::new(
+                    "ml",
+                    format!("ds{}", rng.next_u32() as usize % SGD_DATASETS),
+                );
+                let (features, labels) = sgd_dataset(spec, &key);
+                let grid: Vec<SgdHyperParams> = [0.1f32, 0.02]
+                    .iter()
+                    .map(|&alpha| SgdHyperParams {
+                        task: GlmTask::Ridge,
+                        alpha,
+                        lambda: 1e-4,
+                        minibatch: 16,
+                        epochs: 2,
+                    })
+                    .collect();
+                JobSpec::new(JobKind::Sgd {
+                    features,
+                    labels,
+                    n_features: SGD_FEATURES,
+                    grid,
+                })
+                .with_keys(vec![Some(key)])
+            }
+        };
+        jobs.push(job.with_client(client));
+    }
+    jobs
+}
+
+/// Summary of one policy's serve run.
+#[derive(Debug, Clone)]
+pub struct PolicyOutcome {
+    pub policy: Policy,
+    pub stats: CoordinatorStats,
+}
+
+impl PolicyOutcome {
+    pub fn throughput_qps(&self) -> f64 {
+        self.stats.throughput_qps()
+    }
+
+    pub fn p50_latency(&self) -> f64 {
+        self.stats.latency_percentile(50.0)
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        self.stats.latency_percentile(99.0)
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.stats.cache.hit_rate()
+    }
+}
+
+/// Replay `jobs` under one policy. Returns outputs (for verification) and
+/// the outcome summary.
+pub fn run_policy(
+    cfg: &HbmConfig,
+    policy: Policy,
+    spec: &ServeSpec,
+    jobs: Vec<JobSpec>,
+) -> (Vec<(usize, JobOutput)>, PolicyOutcome) {
+    let mut coord = Coordinator::new(cfg.clone())
+        .with_policy(policy)
+        .with_cache_bytes(spec.cache_bytes);
+    for job in jobs {
+        coord.submit(job);
+    }
+    let outputs = coord.run();
+    let outcome = PolicyOutcome { policy, stats: coord.stats() };
+    (outputs, outcome)
+}
+
+/// Render the per-policy comparison table.
+pub fn render_outcomes(outcomes: &[PolicyOutcome]) -> String {
+    let mut t = Table::new(
+        "coordinator serve: per-policy throughput/latency (simulated device time)",
+        &[
+            "policy",
+            "jobs",
+            "sim time",
+            "qps",
+            "p50 lat",
+            "p99 lat",
+            "mean wait",
+            "cache hit%",
+            "HBM GB",
+        ],
+    );
+    for o in outcomes {
+        t.row(vec![
+            o.policy.name().to_string(),
+            o.stats.completed().to_string(),
+            format!("{:.3} ms", o.stats.simulated_time * 1e3),
+            format!("{:.0}", o.throughput_qps()),
+            format!("{:.3} ms", o.p50_latency() * 1e3),
+            format!("{:.3} ms", o.p99_latency() * 1e3),
+            format!("{:.3} ms", o.stats.mean_queue_wait() * 1e3),
+            format!("{:.1}", o.cache_hit_rate() * 100.0),
+            format!("{:.3}", o.stats.hbm_bytes as f64 / 1e9),
+        ]);
+    }
+    t.render()
+}
+
+fn json_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Machine-readable benchmark report (hand-rolled JSON: the offline crate
+/// set has no serde).
+pub fn bench_json(spec: &ServeSpec, outcomes: &[PolicyOutcome]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"coordinator_serve\",\n");
+    out.push_str(&format!("  \"clients\": {},\n", spec.clients));
+    out.push_str(&format!("  \"queries\": {},\n", spec.queries));
+    out.push_str(&format!("  \"rows\": {},\n", spec.rows));
+    out.push_str(&format!("  \"seed\": {},\n", spec.seed));
+    out.push_str(&format!("  \"cache_bytes\": {},\n", spec.cache_bytes));
+    out.push_str("  \"policies\": [\n");
+    for (i, o) in outcomes.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"policy\": \"{}\",\n", o.policy.name()));
+        out.push_str(&format!("      \"jobs\": {},\n", o.stats.completed()));
+        out.push_str(&format!(
+            "      \"simulated_seconds\": {},\n",
+            json_f(o.stats.simulated_time)
+        ));
+        out.push_str(&format!(
+            "      \"throughput_qps\": {},\n",
+            json_f(o.throughput_qps())
+        ));
+        out.push_str(&format!(
+            "      \"p50_latency_s\": {},\n",
+            json_f(o.p50_latency())
+        ));
+        out.push_str(&format!(
+            "      \"p99_latency_s\": {},\n",
+            json_f(o.p99_latency())
+        ));
+        out.push_str(&format!(
+            "      \"mean_queue_wait_s\": {},\n",
+            json_f(o.stats.mean_queue_wait())
+        ));
+        out.push_str(&format!(
+            "      \"cache_hit_rate\": {},\n",
+            json_f(o.cache_hit_rate())
+        ));
+        out.push_str(&format!(
+            "      \"cache_hits\": {},\n",
+            o.stats.cache.hits
+        ));
+        out.push_str(&format!(
+            "      \"cache_misses\": {},\n",
+            o.stats.cache.misses
+        ));
+        out.push_str(&format!("      \"hbm_bytes\": {}\n", o.stats.hbm_bytes));
+        out.push_str(if i + 1 == outcomes.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hbm::config::FabricClock;
+
+    fn tiny_spec() -> ServeSpec {
+        ServeSpec { clients: 2, queries: 12, rows: 12_000, ..ServeSpec::default() }
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_mixed() {
+        let spec = tiny_spec();
+        let a = mixed_workload(&spec);
+        let b = mixed_workload(&spec);
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.kind.name(), y.kind.name());
+            assert_eq!(x.kind.input_bytes(), y.kind.input_bytes());
+            assert_eq!(x.client, y.client);
+        }
+        let kinds: std::collections::BTreeSet<&str> =
+            a.iter().map(|j| j.kind.name()).collect();
+        assert!(kinds.contains("selection"), "mix must include selections");
+    }
+
+    #[test]
+    fn repeated_keys_carry_identical_bytes() {
+        let spec = tiny_spec();
+        let key = ColumnKey::new("sel3", "v");
+        assert_eq!(select_column(&spec, &key), select_column(&spec, &key));
+        // Different keys differ.
+        let other = ColumnKey::new("sel4", "v");
+        assert_ne!(select_column(&spec, &key), select_column(&spec, &other));
+    }
+
+    #[test]
+    fn run_policy_completes_everything_and_reports() {
+        let spec = tiny_spec();
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let jobs = mixed_workload(&spec);
+        let n = jobs.len();
+        let (outputs, outcome) = run_policy(&cfg, Policy::FairShare, &spec, jobs);
+        assert_eq!(outputs.len(), n);
+        assert_eq!(outcome.stats.completed(), n);
+        assert!(outcome.throughput_qps() > 0.0);
+        assert!(outcome.p50_latency() > 0.0);
+        assert!(outcome.p99_latency() >= outcome.p50_latency());
+        let json = bench_json(&spec, &[outcome]);
+        assert!(json.contains("\"throughput_qps\""));
+        assert!(json.contains("\"fair-share\""));
+        assert!(!json.contains("null"), "tiny run must have finite stats");
+    }
+}

@@ -10,6 +10,7 @@
 use super::column::{Catalog, ColumnData};
 use super::ops::{self, AggKind, AggResult};
 use super::udf::FpgaAccelerator;
+use crate::coordinator::ColumnKey;
 
 /// Logical plan nodes (tree; children boxed).
 #[derive(Debug, Clone)]
@@ -94,6 +95,17 @@ impl Intermediate {
     }
 }
 
+/// The cache identity of a plan node, when it is a direct base-column
+/// scan: intermediates have no stable identity and are never cached.
+fn scan_key(plan: &Plan) -> Option<ColumnKey> {
+    match plan {
+        Plan::ScanColumn { table, column } => {
+            Some(ColumnKey::new(table.clone(), column.clone()))
+        }
+        _ => None,
+    }
+}
+
 /// Executor: CPU operators by default; select/join optionally offloaded to
 /// the FPGA accelerator (the UDF path of doppioDB-style integration).
 pub struct Executor<'a> {
@@ -128,10 +140,17 @@ impl<'a> Executor<'a> {
                 Intermediate::Column(c.data.clone())
             }
             Plan::Select { input, lo, hi } => {
+                let key = scan_key(input);
                 let col = self.run(input).expect_column();
                 let cands = match self.accelerator.as_mut() {
                     Some(acc) => {
-                        acc.offload_select(col.as_u32().expect("u32"), *lo, *hi).0
+                        acc.offload_select_keyed(
+                            key,
+                            col.as_u32().expect("u32"),
+                            *lo,
+                            *hi,
+                        )
+                        .0
                     }
                     None => ops::range_select(&col, *lo, *hi, self.threads),
                 };
@@ -143,11 +162,14 @@ impl<'a> Executor<'a> {
                 Intermediate::Column(ops::project(&col, &cands))
             }
             Plan::Join { left, right } => {
+                let (s_key, l_key) = (scan_key(left), scan_key(right));
                 let build = self.run(left).expect_column();
                 let probe = self.run(right).expect_column();
                 let pairs = match self.accelerator.as_mut() {
                     Some(acc) => {
-                        acc.offload_join(
+                        acc.offload_join_keyed(
+                            s_key,
+                            l_key,
                             build.as_u32().expect("u32"),
                             probe.as_u32().expect("u32"),
                         )
@@ -226,6 +248,22 @@ mod tests {
             .project(join.join_side(false));
         let col = ex.run(&plan).expect_column();
         assert_eq!(col.len(), 5);
+    }
+
+    #[test]
+    fn accelerated_executor_reuses_resident_columns() {
+        let cat = catalog();
+        let mut acc = FpgaAccelerator::new(crate::hbm::HbmConfig::default());
+        // Same scan twice on one accelerator: the second offload must hit
+        // the coordinator's column cache via the (table, column) key.
+        let plan = Plan::scan("orders", "total")
+            .project(Plan::scan("orders", "okey").select(2, 4));
+        let a = Executor::accelerated(&cat, 2, &mut acc).run(&plan);
+        let b = Executor::accelerated(&cat, 2, &mut acc).run(&plan);
+        assert_eq!(a, b);
+        let stats = acc.coordinator().stats();
+        assert_eq!(stats.completed(), 2);
+        assert_eq!(stats.cache.hits, 1, "repeat scan must be HBM-resident");
     }
 
     #[test]

@@ -11,16 +11,28 @@
 //! 3. **copy-out** — padded results return to host memory and are
 //!    compacted into the candidate/pair lists the executor consumes.
 //!
+//! Since the L3 coordinator landed, the accelerator no longer builds a
+//! fresh card per offload: it submits a [`JobSpec`] to a private
+//! [`Coordinator`] that owns the card for the accelerator's lifetime.
+//! That is what makes column residency real — the `*_keyed` entry points
+//! carry a `(table, column)` identity, and repeats hit the coordinator's
+//! HBM-resident cache and skip copy-in (generalizing the old global
+//! `data_resident` flag, which is still honoured as an escape hatch).
+//!
+//! Submission hands an *owned* copy of the host columns to the job (the
+//! coordinator must be able to queue jobs past the borrow), so each
+//! offload pays one host-side memcpy of its input on top of the simulated
+//! transfers; at figure-driver scale this is noise next to the engines'
+//! functional passes.
+//!
 //! Every offload returns its [`OffloadTiming`] so callers (the figure
 //! drivers, the examples) can report rates with or without copies — the
 //! distinction Figs. 6 and 8 turn on.
 
-use crate::engines::join::{compact_matches, JoinEngine, JoinJob};
-use crate::engines::selection::{compact_results, SelectionEngine, SelectionJob};
-use crate::engines::sgd::{SgdEngine, SgdHyperParams, SgdJob};
-use crate::engines::{sim, Engine};
-use crate::hbm::shim::{Shim, ENGINE_PORTS};
-use crate::hbm::{HbmConfig, HbmMemory};
+use crate::coordinator::{ColumnKey, Coordinator, JobKind, JobOutput, JobSpec};
+use crate::engines::sgd::SgdHyperParams;
+use crate::hbm::shim::ENGINE_PORTS;
+use crate::hbm::HbmConfig;
 use crate::interconnect::opencapi::OpenCapiLink;
 
 /// Timing breakdown of one offload, seconds.
@@ -49,13 +61,23 @@ pub struct FpgaAccelerator {
     /// for join).
     pub engines: usize,
     /// Whether input data is already resident in HBM (the paper's
-    /// "subsequent queries" case) — skips copy-in accounting.
+    /// "subsequent queries" case) — skips copy-in accounting. Column-level
+    /// residency via the coordinator's cache supersedes this; the flag
+    /// remains for whole-card residency experiments.
     pub data_resident: bool,
+    coord: Coordinator,
 }
 
 impl FpgaAccelerator {
     pub fn new(cfg: HbmConfig) -> Self {
-        Self { cfg, link: OpenCapiLink::default(), engines: ENGINE_PORTS, data_resident: false }
+        let coord = Coordinator::new(cfg.clone());
+        Self {
+            cfg,
+            link: OpenCapiLink::default(),
+            engines: ENGINE_PORTS,
+            data_resident: false,
+            coord,
+        }
     }
 
     pub fn with_engines(mut self, engines: usize) -> Self {
@@ -68,72 +90,55 @@ impl FpgaAccelerator {
         self
     }
 
-    fn copy_in_time(&self, bytes: u64) -> f64 {
-        if self.data_resident {
-            0.0
-        } else {
-            // Two datamovers share the link; a large copy is split between
-            // them, so the aggregate rate is the full link bandwidth.
-            self.link.transfer_time(bytes, 1)
-        }
+    /// The coordinator serving this accelerator (per-job records, cache
+    /// hit rates, simulated card time).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    fn submit(
+        &mut self,
+        kind: JobKind,
+        keys: Vec<Option<ColumnKey>>,
+    ) -> (JobOutput, OffloadTiming) {
+        // The public `cfg`/`link` knobs stay live across offloads, exactly
+        // as when each offload built a fresh card: sync them into the
+        // coordinator before every submission.
+        self.coord.set_config(self.cfg.clone());
+        self.coord.set_link(self.link.clone());
+        let spec = JobSpec::new(kind)
+            .with_keys(keys)
+            .with_max_engines(self.engines)
+            .with_resident(self.data_resident);
+        let (output, record) = self.coord.run_single(spec);
+        let timing = OffloadTiming {
+            copy_in: record.copy_in,
+            exec: record.exec,
+            copy_out: record.copy_out,
+        };
+        (output, timing)
     }
 
     /// Range selection over a host column. Returns (sorted candidate
     /// list, timing).
     pub fn offload_select(&mut self, data: &[u32], lo: u32, hi: u32) -> (Vec<u32>, OffloadTiming) {
-        let engines = self.engines.min(ENGINE_PORTS).max(1);
-        let mut mem = HbmMemory::new();
-        let mut shim = Shim::new(self.cfg.clone());
+        self.offload_select_keyed(None, data, lo, hi)
+    }
 
-        let chunk = data.len().div_ceil(engines);
-        let mut jobs = Vec::new();
-        for (e, slice) in data.chunks(chunk.max(1)).enumerate() {
-            let input = shim
-                .alloc(e, (slice.len() * 4) as u64)
-                .expect("selection partition exceeds home window");
-            // Worst case output = input size (100% selectivity).
-            let output = shim
-                .alloc(e, (slice.len() * 4) as u64 + 64)
-                .expect("selection output exceeds home window");
-            input.write_u32s(&mut mem, 0, slice);
-            jobs.push(SelectionJob {
-                input,
-                items: slice.len() as u64,
-                index_base: (e * chunk) as u32,
-                lo,
-                hi,
-                output,
-            });
-        }
-        let mut engs: Vec<Box<dyn Engine>> = jobs
-            .iter()
-            .map(|j| {
-                Box::new(SelectionEngine::new(self.cfg.clone(), j.clone()))
-                    as Box<dyn Engine>
-            })
-            .collect();
-        let report = sim::run(&self.cfg, &mut mem, &mut engs);
-
-        // Collect per-engine outputs straight from the finished engines
-        // (sim borrowed them, so the functional pass ran exactly once).
-        let mut result = Vec::new();
-        let mut out_bytes_total = 0u64;
-        for (j, e) in jobs.iter().zip(&engs) {
-            let eng = e
-                .as_any()
-                .downcast_ref::<SelectionEngine>()
-                .expect("selection engine");
-            out_bytes_total += eng.out_bytes;
-            result.extend(compact_results(&mem, &j.output, eng.out_bytes));
-        }
-        result.sort_unstable();
-
-        let timing = OffloadTiming {
-            copy_in: self.copy_in_time((data.len() * 4) as u64),
-            exec: report.makespan,
-            copy_out: self.link.transfer_time(out_bytes_total, 1),
-        };
-        (result, timing)
+    /// Range selection with a cache identity: a repeated `(table, column)`
+    /// key skips the copy-in while it stays HBM-resident.
+    pub fn offload_select_keyed(
+        &mut self,
+        key: Option<ColumnKey>,
+        data: &[u32],
+        lo: u32,
+        hi: u32,
+    ) -> (Vec<u32>, OffloadTiming) {
+        let (out, timing) = self.submit(
+            JobKind::Selection { data: data.to_vec(), lo, hi },
+            vec![key],
+        );
+        (out.expect_selection(), timing)
     }
 
     /// Hash join: build side `s`, probe side `l`. Returns
@@ -141,10 +146,21 @@ impl FpgaAccelerator {
     /// chosen from the data (non-unique S requires it), matching how the
     /// DBMS picks the bitstream variant.
     pub fn offload_join(&mut self, s: &[u32], l: &[u32]) -> (Vec<(u32, u32)>, OffloadTiming) {
+        self.offload_join_keyed(None, None, s, l)
+    }
+
+    /// Hash join with cache identities for both sides.
+    pub fn offload_join_keyed(
+        &mut self,
+        s_key: Option<ColumnKey>,
+        l_key: Option<ColumnKey>,
+        s: &[u32],
+        l: &[u32],
+    ) -> (Vec<(u32, u32)>, OffloadTiming) {
         let mut s_sorted = s.to_vec();
         s_sorted.sort_unstable();
         let s_unique = s_sorted.windows(2).all(|w| w[0] != w[1]);
-        self.offload_join_cfg(s, l, !s_unique)
+        self.offload_join_cfg_keyed(s_key, l_key, s, l, !s_unique)
     }
 
     pub fn offload_join_cfg(
@@ -153,64 +169,22 @@ impl FpgaAccelerator {
         l: &[u32],
         handle_collisions: bool,
     ) -> (Vec<(u32, u32)>, OffloadTiming) {
-        // Join engines use two ports each.
-        let engines = self.engines.min(ENGINE_PORTS / 2).max(1);
-        let mut mem = HbmMemory::new();
-        let mut shim = Shim::new(self.cfg.clone());
+        self.offload_join_cfg_keyed(None, None, s, l, handle_collisions)
+    }
 
-        // S is broadcast: place one copy per engine pair's read port.
-        let chunk = l.len().div_ceil(engines);
-        let mut jobs = Vec::new();
-        for (e, slice) in l.chunks(chunk.max(1)).enumerate() {
-            let read_port = e * 2;
-            let write_port = e * 2 + 1;
-            let s_buf = shim
-                .alloc(read_port, (s.len() * 4) as u64 + 64)
-                .expect("S exceeds home window");
-            s_buf.write_u32s(&mut mem, 0, s);
-            let l_buf = shim
-                .alloc(read_port, (slice.len() * 4) as u64 + 64)
-                .expect("L partition exceeds home window");
-            l_buf.write_u32s(&mut mem, 0, slice);
-            // Worst-case output sizing: every probe matches ~avg dups.
-            let out_cap = (slice.len() as u64 * 16 + 256).min(
-                crate::hbm::shim::PORT_HOME_BYTES - 64,
-            );
-            let output = shim
-                .alloc(write_port, out_cap)
-                .expect("join output exceeds home window");
-            jobs.push(JoinJob {
-                s: s_buf,
-                s_items: s.len() as u64,
-                handle_collisions,
-                l: l_buf,
-                l_items: slice.len() as u64,
-                l_index_base: (e * chunk) as u32,
-                output,
-            });
-        }
-        let mut engs: Vec<Box<dyn Engine>> = jobs
-            .iter()
-            .map(|j| {
-                Box::new(JoinEngine::new(self.cfg.clone(), j.clone())) as Box<dyn Engine>
-            })
-            .collect();
-        let report = sim::run(&self.cfg, &mut mem, &mut engs);
-
-        let mut pairs = Vec::new();
-        let mut out_bytes_total = 0u64;
-        for (j, e) in jobs.iter().zip(&engs) {
-            let eng = e.as_any().downcast_ref::<JoinEngine>().expect("join engine");
-            out_bytes_total += eng.out_bytes;
-            pairs.extend(compact_matches(&mem, &j.output, eng.out_bytes));
-        }
-
-        let timing = OffloadTiming {
-            copy_in: self.copy_in_time((l.len() * 4 + s.len() * 4) as u64),
-            exec: report.makespan,
-            copy_out: self.link.transfer_time(out_bytes_total, 1),
-        };
-        (pairs, timing)
+    pub fn offload_join_cfg_keyed(
+        &mut self,
+        s_key: Option<ColumnKey>,
+        l_key: Option<ColumnKey>,
+        s: &[u32],
+        l: &[u32],
+        handle_collisions: bool,
+    ) -> (Vec<(u32, u32)>, OffloadTiming) {
+        let (out, timing) = self.submit(
+            JobKind::Join { s: s.to_vec(), l: l.to_vec(), handle_collisions },
+            vec![s_key, l_key],
+        );
+        (out.expect_join(), timing)
     }
 
     /// Train GLMs on the FPGA: one job per engine slot, replicated data
@@ -223,61 +197,28 @@ impl FpgaAccelerator {
         n_features: usize,
         grid: &[SgdHyperParams],
     ) -> (Vec<Vec<f32>>, OffloadTiming) {
-        let engines = self.engines.min(ENGINE_PORTS).max(1);
-        let mut all = features.to_vec();
-        all.extend_from_slice(labels);
-        let bytes = (all.len() * 4) as u64;
+        self.offload_sgd_keyed(None, features, labels, n_features, grid)
+    }
 
-        let mut models: Vec<Vec<f32>> = vec![Vec::new(); grid.len()];
-        let mut exec_total = 0.0f64;
-        // Jobs run in rounds of `engines` (the paper's 28-job search over
-        // 14 engines = 2 rounds).
-        for (r, round) in grid.chunks(engines).enumerate() {
-            let mut mem = HbmMemory::new();
-            let mut shim = Shim::new(self.cfg.clone());
-            let mut jobs = Vec::new();
-            for (e, params) in round.iter().enumerate() {
-                let data = shim
-                    .alloc(e, bytes)
-                    .expect("dataset exceeds home window; use block-wise scan");
-                data.write_f32s(&mut mem, 0, &all);
-                let model_out = shim.alloc(e, (n_features * 4) as u64 + 64).unwrap();
-                jobs.push(SgdJob {
-                    data,
-                    n_samples: labels.len(),
-                    n_features,
-                    params: params.clone(),
-                    model_out,
-                });
-            }
-            let mut engs: Vec<Box<dyn Engine>> = jobs
-                .iter()
-                .map(|j| {
-                    Box::new(SgdEngine::new(self.cfg.clone(), j.clone()))
-                        as Box<dyn Engine>
-                })
-                .collect();
-            let report = sim::run(&self.cfg, &mut mem, &mut engs);
-            exec_total += report.makespan;
-            // Read the trained models out of the finished engines.
-            for (j, e) in engs.iter().enumerate() {
-                let eng =
-                    e.as_any().downcast_ref::<SgdEngine>().expect("sgd engine");
-                models[r * engines + j] = eng.model.clone();
-            }
-        }
-
-        let timing = OffloadTiming {
-            // One copy-in of the dataset (replication inside HBM is an
-            // engine-side scatter, charged as one extra HBM pass folded
-            // into exec by the sim's write flows).
-            copy_in: self.copy_in_time(bytes),
-            exec: exec_total,
-            copy_out: self
-                .link
-                .transfer_time((grid.len() * n_features * 4) as u64, 1),
-        };
-        (models, timing)
+    /// SGD with a cache identity for the dataset.
+    pub fn offload_sgd_keyed(
+        &mut self,
+        key: Option<ColumnKey>,
+        features: &[f32],
+        labels: &[f32],
+        n_features: usize,
+        grid: &[SgdHyperParams],
+    ) -> (Vec<Vec<f32>>, OffloadTiming) {
+        let (out, timing) = self.submit(
+            JobKind::Sgd {
+                features: features.to_vec(),
+                labels: labels.to_vec(),
+                n_features,
+                grid: grid.to_vec(),
+            },
+            vec![key],
+        );
+        (out.expect_sgd(), timing)
     }
 }
 
@@ -360,5 +301,41 @@ mod tests {
             }
         }
         assert!(t.exec > 0.0);
+    }
+
+    #[test]
+    fn keyed_repeat_offload_is_copy_free_on_one_card() {
+        let w = SelectionWorkload::uniform(100_000, 0.05, 12);
+        let key = ColumnKey::new("lineitem", "qty");
+        let mut acc = acc();
+        let (r1, t1) =
+            acc.offload_select_keyed(Some(key.clone()), &w.data, w.lo, w.hi);
+        let (r2, t2) =
+            acc.offload_select_keyed(Some(key.clone()), &w.data, w.lo, w.hi);
+        assert_eq!(r1, r2);
+        assert!(t1.copy_in > 0.0, "first touch pays the copy");
+        assert_eq!(t2.copy_in, 0.0, "repeat is HBM-resident");
+        assert!((t1.exec - t2.exec).abs() / t1.exec < 1e-9);
+        let stats = acc.coordinator().stats();
+        assert_eq!(stats.completed(), 2);
+        assert_eq!(stats.cache.hits, 1);
+    }
+
+    #[test]
+    fn accelerator_card_persists_across_offloads() {
+        // One card, three different operators back to back — the
+        // coordinator must reuse the card without cross-talk.
+        let mut acc = acc();
+        let w = SelectionWorkload::uniform(60_000, 0.2, 13);
+        let (sel, _) = acc.offload_select(&w.data, w.lo, w.hi);
+        let jw = JoinWorkload::generate(40_000, 700, true, true, 14);
+        let (mut pairs, _) = acc.offload_join(&jw.s, &jw.l);
+        let (sel2, _) = acc.offload_select(&w.data, w.lo, w.hi);
+        assert_eq!(sel, sel2, "join between selections must not corrupt them");
+        let mut cpu_pairs = cpu::join::hash_join_positions(&jw.s, &jw.l, 4);
+        pairs.sort_unstable();
+        cpu_pairs.sort_unstable();
+        assert_eq!(pairs, cpu_pairs);
+        assert_eq!(acc.coordinator().stats().completed(), 3);
     }
 }

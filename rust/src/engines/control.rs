@@ -72,8 +72,14 @@ impl ControlUnit {
     }
 
     /// Host-side register write. Writing `1` to `Control` arms the slot.
+    /// A start write while the slot is busy (not idle) is dropped, as HLS
+    /// run-bits do — the coordinator can only double-dispatch a slot by
+    /// racing itself, and the hardware contract makes that a no-op.
     pub fn csr_write(&mut self, slot: usize, offset: u32, value: u32) {
         if offset == Csr::Control as u32 && value & 1 == 1 {
+            if !self.is_idle(slot) {
+                return;
+            }
             self.started[slot] = true;
             self.slots[slot].write(Csr::Status as u32, 0); // busy
             // Control is self-clearing.
@@ -145,6 +151,57 @@ mod tests {
         assert!(cu.is_done(0));
         assert_eq!(cu.csr_read(0, Csr::Ret0 as u32), 42);
         assert_eq!(cu.csr_read(0, Csr::Cycles as u32), 1000);
+    }
+
+    #[test]
+    fn double_start_on_busy_slot_is_ignored() {
+        let mut cu = ControlUnit::new(2);
+        cu.csr_write(0, Csr::Control as u32, 1);
+        assert_eq!(cu.take_started(), vec![0]);
+        // Second start while busy: dropped, so the slot is not re-armed
+        // and the coordinator cannot double-dispatch it.
+        cu.csr_write(0, Csr::Control as u32, 1);
+        assert!(cu.take_started().is_empty());
+        assert!(!cu.is_idle(0));
+        // After completion the slot is idle again and can be re-armed.
+        cu.complete(0, 1, 0, 10);
+        cu.csr_write(0, Csr::Control as u32, 1);
+        assert_eq!(cu.take_started(), vec![0]);
+    }
+
+    #[test]
+    fn status_read_before_done_reports_busy_not_done() {
+        let mut cu = ControlUnit::new(1);
+        cu.csr_write(0, Csr::Control as u32, 1);
+        // Mid-run polling: neither IDLE nor DONE is set.
+        assert_eq!(cu.csr_read(0, Csr::Status as u32), 0);
+        assert!(!cu.is_done(0));
+        assert!(!cu.is_idle(0));
+        // Result registers read as reset values before completion.
+        assert_eq!(cu.csr_read(0, Csr::Ret0 as u32), 0);
+        assert_eq!(cu.csr_read(0, Csr::Cycles as u32), 0);
+    }
+
+    #[test]
+    fn result_readback_is_stable_after_completion() {
+        let mut cu = ControlUnit::new(1);
+        cu.csr_write(0, Csr::Control as u32, 1);
+        cu.complete(0, 0xAB, 0xCD, 999);
+        // Reads are non-destructive: the registers hold until re-arm.
+        for _ in 0..3 {
+            assert!(cu.is_done(0));
+            assert_eq!(cu.csr_read(0, Csr::Ret0 as u32), 0xAB);
+            assert_eq!(cu.csr_read(0, Csr::Ret1 as u32), 0xCD);
+            assert_eq!(cu.csr_read(0, Csr::Cycles as u32), 999);
+        }
+        // Re-arming clears DONE but result registers stay stale-readable
+        // (typical HLS behaviour) until the next completion overwrites
+        // them.
+        cu.csr_write(0, Csr::Control as u32, 1);
+        assert!(!cu.is_done(0));
+        assert_eq!(cu.csr_read(0, Csr::Ret0 as u32), 0xAB);
+        cu.complete(0, 0x11, 0, 5);
+        assert_eq!(cu.csr_read(0, Csr::Ret0 as u32), 0x11);
     }
 
     #[test]

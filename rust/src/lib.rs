@@ -12,17 +12,23 @@
 //!
 //! ## Layer map
 //!
-//! * **L3 (this crate)** — the coordinator: HBM subsystem simulator
-//!   ([`hbm`]), scale-out compute engines and their event-driven fluid
-//!   simulation ([`engines`]), CPU↔FPGA interconnect ([`interconnect`]),
-//!   physical-design models ([`floorplan`]), a columnar DBMS ([`db`]),
-//!   CPU baselines ([`cpu`]), workload generators ([`workloads`]), the
-//!   PJRT runtime ([`runtime`]) and the benchmark harness ([`bench`]).
+//! * **L3 (this crate)** — the card and its coordination: the HBM
+//!   subsystem simulator ([`hbm`]), scale-out compute engines and their
+//!   event-driven fluid simulation ([`engines`]), the multi-query
+//!   scheduler that owns the card — engine-slot allocation policies,
+//!   the HBM-resident column cache, per-job statistics and the
+//!   `hbmctl serve` replay harness ([`coordinator`]) — CPU↔FPGA
+//!   interconnect ([`interconnect`]), physical-design models
+//!   ([`floorplan`]), a columnar DBMS whose accelerator hook submits
+//!   through the coordinator ([`db`]), CPU baselines ([`cpu`]), workload
+//!   generators ([`workloads`]), the PJRT runtime ([`runtime`]) and the
+//!   benchmark harness ([`bench`]).
 //! * **L2/L1 (python/compile)** — the JAX SGD model and Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
 //!   [`runtime`] — Python never runs at request time.
 
 pub mod bench;
+pub mod coordinator;
 pub mod cpu;
 pub mod db;
 pub mod engines;

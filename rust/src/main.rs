@@ -6,21 +6,26 @@
 //!   resources   Table III resource/floorplan report
 //!   train       train a GLM through the PJRT runtime (HLO artifacts)
 //!   query       demo DB query, CPU vs FPGA-offloaded
+//!   serve       multi-client mixed workload through the L3 coordinator
 //!
 //! Examples:
 //!   hbmctl figures --fig all --scale 0.0625 --out results
 //!   hbmctl microbench --ports 32 --separations 256,128,0
 //!   hbmctl train --dataset tiny_ridge --alpha 0.05 --epochs 10
+//!   hbmctl serve --clients 4 --queries 64 --policy all
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use hbm_analytics::bench::figures::{self, FigureCtx};
+use hbm_analytics::coordinator::{self, Policy, ServeSpec};
 use hbm_analytics::db::{Catalog, Column, Executor, FpgaAccelerator, Plan, Table};
 use hbm_analytics::engines::sgd::{GlmTask, SgdHyperParams};
+use hbm_analytics::hbm::shim::ENGINE_PORTS;
 use hbm_analytics::hbm::{fig2_sweep, FabricClock, HbmConfig};
 use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
 use hbm_analytics::util::cli::Args;
+use hbm_analytics::util::units::MIB;
 use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
 
 fn main() -> ExitCode {
@@ -31,6 +36,7 @@ fn main() -> ExitCode {
         Some("resources") => cmd_resources(&args),
         Some("train") => cmd_train(&args),
         Some("query") => cmd_query(&args),
+        Some("serve") => cmd_serve(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
             usage();
@@ -52,14 +58,20 @@ fn main() -> ExitCode {
 
 fn usage() {
     eprintln!(
-        "usage: hbmctl <figures|microbench|resources|train|query> [options]\n\
+        "usage: hbmctl <figures|microbench|resources|train|query|serve> [options]\n\
          \n\
          figures    --fig <id|all> --scale <f> --out <dir> --artifacts <dir>\n\
          microbench --ports <list> --separations <list> --clock <200|300|400>\n\
          resources  (no options)\n\
          train      --dataset <tiny_ridge|tiny_logistic|im|mnist|aea|syn>\n\
          \u{20}          --alpha <f> --lambda <f> --epochs <n> --minibatch <1|4|16>\n\
-         query      --rows <n> --offload <true|false>"
+         query      --rows <n> --offload <true|false>\n\
+         \u{20}          --engines <1..14>   compute engines granted to each offload\n\
+         \u{20}          --resident <bool>   treat columns as already HBM-resident\n\
+         serve      --clients <n> --queries <m> --policy <fifo|fair|bandwidth|all>\n\
+         \u{20}          --rows <n> --seed <s> --cache-mib <n> --out <file.json>\n\
+         \u{20}          replays a mixed selection/join/SGD workload through the\n\
+         \u{20}          L3 coordinator and writes BENCH_coordinator.json"
     );
 }
 
@@ -171,6 +183,12 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     use hbm_analytics::util::rng::Xoshiro256;
     let rows: usize = args.get_parsed("rows", 1_000_000)?;
     let offload = args.get_bool("offload", true);
+    let engines: usize = args.get_parsed("engines", ENGINE_PORTS)?;
+    anyhow::ensure!(
+        (1..=ENGINE_PORTS).contains(&engines),
+        "--engines must be in 1..={ENGINE_PORTS}, got {engines}"
+    );
+    let resident = args.get_bool("resident", false);
     let mut rng = Xoshiro256::new(3);
     let keys: Vec<u32> = (0..rows as u32).collect();
     let vals: Vec<u32> = (0..rows).map(|_| rng.next_u32() % 10_000).collect();
@@ -190,13 +208,64 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
 
     println!("CPU executor: {cpu_result:?} in {t_cpu:?}");
     if offload {
-        let mut acc = FpgaAccelerator::new(HbmConfig::default());
+        let mut acc =
+            FpgaAccelerator::new(HbmConfig::default()).with_engines(engines);
+        acc.data_resident = resident;
         let t1 = std::time::Instant::now();
         let fpga_result = Executor::accelerated(&cat, 8, &mut acc).run(&plan);
         let t_fpga = t1.elapsed();
-        println!("FPGA-offloaded executor: {fpga_result:?} in {t_fpga:?} (host)");
+        println!(
+            "FPGA-offloaded executor ({engines} engines, resident={resident}): \
+             {fpga_result:?} in {t_fpga:?} (host)"
+        );
         assert_eq!(format!("{cpu_result:?}"), format!("{fpga_result:?}"));
         println!("results identical ✓ (simulated-device timings via `figures`)");
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let spec = ServeSpec {
+        clients: args.get_parsed("clients", 4usize)?,
+        queries: args.get_parsed("queries", 64usize)?,
+        seed: args.get_parsed("seed", 0xC0FFEEu64)?,
+        rows: args.get_parsed("rows", 48_000usize)?,
+        cache_bytes: args.get_parsed("cache-mib", 4096u64)? * MIB,
+    };
+    anyhow::ensure!(spec.clients > 0, "--clients must be positive");
+    anyhow::ensure!(spec.queries > 0, "--queries must be positive");
+    let which = args.get_str("policy", "all");
+    let policies: Vec<Policy> = if which == "all" {
+        Policy::all().to_vec()
+    } else {
+        vec![Policy::parse(&which).ok_or_else(|| {
+            anyhow::anyhow!("unknown policy '{which}' (fifo|fair|bandwidth|all)")
+        })?]
+    };
+
+    let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+    println!(
+        "serving {} queries from {} clients ({} rows/column, seed {:#x})",
+        spec.queries, spec.clients, spec.rows, spec.seed
+    );
+    let mut outcomes = Vec::new();
+    for policy in policies {
+        let jobs = coordinator::mixed_workload(&spec);
+        let (outputs, outcome) = coordinator::run_policy(&cfg, policy, &spec, jobs);
+        println!(
+            "  {:<16} {} jobs in {:.3} ms simulated ({:.0} qps, cache hit {:.1}%)",
+            outcome.policy.name(),
+            outputs.len(),
+            outcome.stats.simulated_time * 1e3,
+            outcome.throughput_qps(),
+            outcome.cache_hit_rate() * 100.0,
+        );
+        outcomes.push(outcome);
+    }
+    println!("\n{}", coordinator::render_outcomes(&outcomes));
+
+    let out_path = args.get_str("out", "BENCH_coordinator.json");
+    std::fs::write(&out_path, coordinator::bench_json(&spec, &outcomes))?;
+    println!("wrote {out_path}");
     Ok(())
 }

@@ -10,13 +10,24 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
     Missing(String),
-    #[error("invalid value for --{0}: '{1}'")]
     Invalid(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(key) => write!(f, "missing required option --{key}"),
+            CliError::Invalid(key, value) => {
+                write!(f, "invalid value for --{key}: '{value}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of argument strings (not including argv[0]).

@@ -1,0 +1,298 @@
+//! Integration tests for the L3 coordinator: the acceptance scenario of
+//! the multi-query scheduler (`hbmctl serve --clients 4 --queries 64`),
+//! functional equivalence of every scheduled job against the CPU
+//! baselines, and the cache-hit speedup the HBM-resident column cache
+//! must deliver on repeated columns.
+
+use hbm_analytics::coordinator::{
+    bench_json, mixed_workload, run_policy, ColumnKey, Coordinator, JobKind,
+    JobOutput, JobSpec, Policy, ServeSpec,
+};
+use hbm_analytics::cpu;
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+
+fn cfg() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+/// A compact serve spec: full client/query counts, smaller columns so the
+/// functional passes stay fast.
+fn serve_spec() -> ServeSpec {
+    ServeSpec { clients: 4, queries: 64, rows: 24_000, ..ServeSpec::default() }
+}
+
+/// Verify one job's output against the CPU baseline for its payload.
+fn check_against_cpu(spec: &JobSpec, output: &JobOutput) {
+    match (&spec.kind, output) {
+        (JobKind::Selection { data, lo, hi }, JobOutput::Selection(got)) => {
+            let mut want = cpu::selection::range_select(data, *lo, *hi, 4);
+            want.sort_unstable();
+            assert_eq!(got, &want, "selection diverged from CPU");
+        }
+        (JobKind::Join { s, l, .. }, JobOutput::Join(got)) => {
+            let mut got = got.clone();
+            let mut want = cpu::join::hash_join_positions(s, l, 4);
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "join diverged from CPU");
+        }
+        (
+            JobKind::Sgd { features, labels, n_features, grid },
+            JobOutput::Sgd(models),
+        ) => {
+            assert_eq!(models.len(), grid.len());
+            for (params, model) in grid.iter().zip(models) {
+                let (want, _) = cpu::sgd::train(features, labels, *n_features, params);
+                for (a, b) in want.iter().zip(model) {
+                    assert!((a - b).abs() < 1e-5, "sgd model diverged from CPU");
+                }
+            }
+        }
+        (kind, out) => panic!(
+            "output kind mismatch: job {} produced {}",
+            kind.name(),
+            out.name()
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: serve --clients 4 --queries 64 completes a mixed workload
+// under every policy, result-identical to the CPU baselines.
+// ---------------------------------------------------------------------
+
+#[test]
+fn serve_mixed_workload_completes_under_every_policy() {
+    let spec = serve_spec();
+    for policy in Policy::all() {
+        let jobs = mixed_workload(&spec);
+        let reference = mixed_workload(&spec);
+        let (outputs, outcome) = run_policy(&cfg(), policy, &spec, jobs);
+        assert_eq!(outputs.len(), 64, "policy {policy} lost jobs");
+        assert_eq!(outcome.stats.completed(), 64);
+
+        // Every record is sane: finite, ordered timestamps and engines.
+        for rec in &outcome.stats.records {
+            assert!(rec.latency() > 0.0 && rec.latency().is_finite());
+            assert!(rec.queue_wait() >= 0.0);
+            assert!(rec.finish_time > rec.start_time);
+            assert!(rec.engines >= 1 && rec.engines <= 14);
+            assert!(rec.hbm_bytes > 0);
+        }
+        assert!(outcome.throughput_qps() > 0.0);
+        assert!(outcome.p99_latency() >= outcome.p50_latency());
+
+        // Functional spot-check against CPU: job ids are submission
+        // indexes, so pair each output with its regenerated spec.
+        for (id, output) in &outputs {
+            check_against_cpu(&reference[*id], output);
+        }
+    }
+}
+
+#[test]
+fn policies_agree_functionally() {
+    // Engine-slot allocation must never change results, only timing.
+    let spec = serve_spec();
+    let mut per_policy: Vec<Vec<(usize, String)>> = Vec::new();
+    for policy in Policy::all() {
+        let (mut outputs, _) =
+            run_policy(&cfg(), policy, &spec, mixed_workload(&spec));
+        outputs.sort_by_key(|(id, _)| *id);
+        per_policy.push(
+            outputs
+                .into_iter()
+                .map(|(id, out)| {
+                    // Canonical form: sorted join pairs, debug-rendered.
+                    let canon = match out {
+                        JobOutput::Join(mut pairs) => {
+                            pairs.sort_unstable();
+                            format!("{pairs:?}")
+                        }
+                        other => format!("{other:?}"),
+                    };
+                    (id, canon)
+                })
+                .collect(),
+        );
+    }
+    assert_eq!(per_policy[0], per_policy[1], "fifo vs fair-share diverged");
+    assert_eq!(per_policy[0], per_policy[2], "fifo vs bandwidth-aware diverged");
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: the fair-share policy shows a measurable cache-hit speedup
+// on repeated columns versus cold runs.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fair_share_cache_hits_beat_cold_runs() {
+    let warm_spec = serve_spec();
+    let cold_spec = ServeSpec { cache_bytes: 0, ..serve_spec() };
+
+    let (_, warm) =
+        run_policy(&cfg(), Policy::FairShare, &warm_spec, mixed_workload(&warm_spec));
+    let (_, cold) =
+        run_policy(&cfg(), Policy::FairShare, &cold_spec, mixed_workload(&cold_spec));
+
+    // The workload draws 64 queries from a small column pool, so repeats
+    // dominate: the cache must convert them into hits...
+    assert!(
+        warm.cache_hit_rate() > 0.3,
+        "expected substantial hit rate, got {}",
+        warm.cache_hit_rate()
+    );
+    assert_eq!(cold.stats.cache.hits, 0, "zero-budget cache cannot hit");
+
+    // ...and hits must buy real simulated time: less copy-in, faster
+    // end-to-end completion of the same workload.
+    assert!(
+        warm.stats.total_copy_in() < cold.stats.total_copy_in() * 0.8,
+        "cache saved too little copy-in: warm {} vs cold {}",
+        warm.stats.total_copy_in(),
+        cold.stats.total_copy_in()
+    );
+    assert!(
+        warm.stats.simulated_time < cold.stats.simulated_time,
+        "warm serve must finish sooner: {} vs {}",
+        warm.stats.simulated_time,
+        cold.stats.simulated_time
+    );
+
+    // Per-job view: every repeat access of a keyed column is copy-free.
+    let specs = mixed_workload(&warm_spec);
+    let mut seen = std::collections::BTreeSet::new();
+    let mut expected_hits = 0u64;
+    for job in &specs {
+        for input in &job.inputs {
+            if let Some(key) = &input.key {
+                if !seen.insert(key.clone()) {
+                    expected_hits += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(
+        warm.stats.cache.hits, expected_hits,
+        "every repeated key must hit (budget is larger than the pool)"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Scheduling-shape invariants across policies.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fifo_serializes_while_fair_share_co_runs() {
+    let spec = serve_spec();
+    let (_, fifo) =
+        run_policy(&cfg(), Policy::Fifo, &spec, mixed_workload(&spec));
+    let (_, fair) =
+        run_policy(&cfg(), Policy::FairShare, &spec, mixed_workload(&spec));
+
+    let distinct_starts = |records: &[hbm_analytics::coordinator::JobRecord]| {
+        let mut starts: Vec<f64> = records.iter().map(|r| r.start_time).collect();
+        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        starts.dedup();
+        starts.len()
+    };
+    // FIFO: one job per round, so 64 rounds with strictly increasing
+    // start times. Fair-share retires up to 4 per round → far fewer
+    // rounds, and co-runners share a start time.
+    assert_eq!(distinct_starts(&fifo.stats.records), 64);
+    assert!(
+        distinct_starts(&fair.stats.records) <= 64 / 3,
+        "fair-share must co-schedule jobs: {} rounds",
+        distinct_starts(&fair.stats.records)
+    );
+    // Under FIFO every job after the first queues behind a full round.
+    assert!(fifo.stats.mean_queue_wait() > 0.0);
+    // Both policies retire the whole workload.
+    assert_eq!(fifo.stats.completed(), 64);
+    assert_eq!(fair.stats.completed(), 64);
+}
+
+#[test]
+fn bench_json_is_complete_and_reproducible() {
+    let spec = ServeSpec { clients: 2, queries: 10, rows: 8_000, ..serve_spec() };
+    let (_, a) = run_policy(&cfg(), Policy::BandwidthAware, &spec, mixed_workload(&spec));
+    let (_, b) = run_policy(&cfg(), Policy::BandwidthAware, &spec, mixed_workload(&spec));
+    let ja = bench_json(&spec, &[a]);
+    let jb = bench_json(&spec, &[b]);
+    assert_eq!(ja, jb, "same spec must reproduce the same benchmark JSON");
+    for field in [
+        "\"bench\": \"coordinator_serve\"",
+        "\"throughput_qps\"",
+        "\"p50_latency_s\"",
+        "\"p99_latency_s\"",
+        "\"cache_hit_rate\"",
+        "\"hbm_bytes\"",
+    ] {
+        assert!(ja.contains(field), "missing {field} in {ja}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// The rewired accelerator path: one persistent card under the DBMS hook.
+// ---------------------------------------------------------------------
+
+#[test]
+fn coordinator_is_the_accelerator_substrate() {
+    use hbm_analytics::db::FpgaAccelerator;
+    use hbm_analytics::workloads::SelectionWorkload;
+
+    let w = SelectionWorkload::uniform(90_000, 0.15, 21);
+    let key = ColumnKey::new("orders", "amount");
+    let mut acc = FpgaAccelerator::new(cfg());
+    let (r1, t1) = acc.offload_select_keyed(Some(key.clone()), &w.data, w.lo, w.hi);
+    let (r2, t2) = acc.offload_select_keyed(Some(key), &w.data, w.lo, w.hi);
+    assert_eq!(r1, r2);
+    assert!(t1.copy_in > 0.0);
+    assert_eq!(t2.copy_in, 0.0, "keyed repeat must be HBM-resident");
+
+    let stats = acc.coordinator().stats();
+    assert_eq!(stats.completed(), 2);
+    assert_eq!(stats.cache.hits, 1);
+    assert!(stats.simulated_time > 0.0);
+    // The coordinator drove real engines: HBM bytes were accounted.
+    assert!(stats.hbm_bytes >= (w.data.len() * 4 * 2) as u64);
+}
+
+#[test]
+fn direct_coordinator_submission_interleaves_job_kinds() {
+    use hbm_analytics::workloads::{JoinWorkload, SelectionWorkload};
+
+    let mut coord = Coordinator::new(cfg()).with_policy(Policy::BandwidthAware);
+    let sel = SelectionWorkload::uniform(30_000, 0.4, 2);
+    let join = JoinWorkload::generate(25_000, 900, true, true, 3);
+    let id_sel = coord.submit(JobSpec::new(JobKind::Selection {
+        data: sel.data.clone(),
+        lo: sel.lo,
+        hi: sel.hi,
+    }));
+    let id_join = coord.submit(JobSpec::new(JobKind::Join {
+        s: join.s.clone(),
+        l: join.l.clone(),
+        handle_collisions: false,
+    }));
+    let outputs = coord.run();
+    assert_eq!(outputs.len(), 2);
+    for (id, out) in outputs {
+        if id == id_sel {
+            let mut want = cpu::selection::range_select(&sel.data, sel.lo, sel.hi, 4);
+            want.sort_unstable();
+            assert_eq!(out.expect_selection(), want);
+        } else {
+            assert_eq!(id, id_join);
+            let mut got = out.expect_join();
+            let mut want = cpu::join::hash_join_positions(&join.s, &join.l, 4);
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        }
+    }
+    // Both co-ran in one bandwidth-aware round.
+    let recs = coord.stats().records;
+    assert_eq!(recs.len(), 2);
+    assert_eq!(recs[0].start_time, recs[1].start_time);
+}
