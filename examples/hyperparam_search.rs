@@ -10,7 +10,7 @@
 //! Run: `make artifacts && cargo run --release --example hyperparam_search`
 
 use hbm_analytics::cpu;
-use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::db::{FpgaAccelerator, OffloadRequest};
 use hbm_analytics::hbm::{FabricClock, HbmConfig};
 use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
 use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
@@ -48,9 +48,16 @@ fn main() -> anyhow::Result<()> {
         t0.elapsed()
     );
 
-    // ---- 2. FPGA fleet (replicated placement).
+    // ---- 2. FPGA fleet (replicated placement), submitted as one grid
+    //         request; the dataset key would make a follow-up grid over
+    //         the same data copy-free.
     let mut acc = FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
-    let (models, timing) = acc.offload_sgd(&d.features, &d.labels, spec.features, &grid);
+    let (models, timing) = acc
+        .submit(
+            OffloadRequest::sgd(&d.features, &d.labels, spec.features, &grid)
+                .key("ml", "im-mini"),
+        )
+        .wait_sgd();
     let mut best_fpga = (0usize, f64::INFINITY);
     for (i, model) in models.iter().enumerate() {
         let loss = cpu::sgd::loss(&d.features, &d.labels, spec.features, model, &grid[i]);

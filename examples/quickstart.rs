@@ -1,7 +1,8 @@
 //! Quickstart: the whole stack in one file.
 //!
 //! 1. Microbenchmark the simulated HBM (the paper's Fig. 2 sweep);
-//! 2. Offload a range selection to the 14-engine FPGA model and compare
+//! 2. Submit a range selection to the 14-engine FPGA model through the
+//!    `OffloadRequest` builder + async `JobHandle` API and compare
 //!    against the CPU baseline;
 //! 3. Train a GLM through the AOT-compiled HLO artifacts on the PJRT
 //!    runtime (Python never runs here — `make artifacts` already did).
@@ -9,7 +10,7 @@
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use hbm_analytics::cpu;
-use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::db::{FpgaAccelerator, OffloadRequest};
 use hbm_analytics::engines::sgd::SgdHyperParams;
 use hbm_analytics::hbm::{fig2_sweep, FabricClock, HbmConfig};
 use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
@@ -27,8 +28,14 @@ fn main() -> anyhow::Result<()> {
     // ---- 2. FPGA-offloaded selection ------------------------------------
     println!("\n== range selection: FPGA engines vs CPU ==");
     let w = SelectionWorkload::uniform(4_000_000, 0.05, 42);
-    let mut acc = FpgaAccelerator::new(cfg.clone()).resident();
-    let (fpga_idx, timing) = acc.offload_select(&w.data, w.lo, w.hi);
+    let mut acc = FpgaAccelerator::new(cfg.clone());
+    // submit() is async: it returns a JobHandle immediately; wait_*()
+    // drives the simulated card. The .key names the column for the
+    // HBM-resident cache, so a resubmission would skip its copy-in.
+    let handle = acc.submit(
+        OffloadRequest::select(w.lo, w.hi).on(&w.data).key("bench", "v"),
+    );
+    let (fpga_idx, timing) = handle.wait_selection();
     let mut cpu_idx = cpu::selection::range_select(&w.data, w.lo, w.hi, 8);
     cpu_idx.sort_unstable();
     assert_eq!(fpga_idx, cpu_idx, "FPGA and CPU must agree");

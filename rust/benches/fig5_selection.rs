@@ -5,7 +5,7 @@
 use hbm_analytics::bench::figures::{fig5a, fig5b, FigureCtx};
 use hbm_analytics::bench::harness::{black_box, Bencher};
 use hbm_analytics::cpu;
-use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::db::{FpgaAccelerator, OffloadRequest};
 use hbm_analytics::hbm::{FabricClock, HbmConfig};
 use hbm_analytics::workloads::SelectionWorkload;
 
@@ -18,10 +18,12 @@ fn main() {
     let w = SelectionWorkload::uniform(items, 0.0, 1);
     let bytes = items * 4;
     let b = Bencher::quick();
-    let r = b.run_throughput("offload_select 14 engines (8M items)", bytes, || {
-        let mut acc =
-            FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200)).resident();
-        black_box(acc.offload_select(&w.data, w.lo, w.hi));
+    let r = b.run_throughput("select offload 14 engines (8M items)", bytes, || {
+        let mut acc = FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
+        black_box(
+            acc.submit(OffloadRequest::select(w.lo, w.hi).on(&w.data))
+                .wait_selection(),
+        );
     });
     println!("{}", r.report());
     let r = b.run_throughput("cpu range_select 8 threads (8M items)", bytes, || {

@@ -3,7 +3,7 @@
 
 use hbm_analytics::bench::figures::{fig6, FigureCtx};
 use hbm_analytics::bench::harness::{black_box, Bencher};
-use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::db::{FpgaAccelerator, OffloadRequest};
 use hbm_analytics::hbm::{FabricClock, HbmConfig};
 use hbm_analytics::workloads::SelectionWorkload;
 
@@ -14,10 +14,12 @@ fn main() {
     let items = 2_000_000u64;
     let w = SelectionWorkload::uniform(items, 1.0, 2);
     let b = Bencher::quick();
-    let r = b.run_throughput("offload_select sel=100% (2M items)", items * 4, || {
-        let mut acc =
-            FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200)).resident();
-        black_box(acc.offload_select(&w.data, w.lo, w.hi));
+    let r = b.run_throughput("select offload sel=100% (2M items)", items * 4, || {
+        let mut acc = FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
+        black_box(
+            acc.submit(OffloadRequest::select(w.lo, w.hi).on(&w.data))
+                .wait_selection(),
+        );
     });
     println!("{}", r.report());
 }

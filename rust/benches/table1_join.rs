@@ -1,9 +1,10 @@
 //! Bench: Table I — join configuration matrix. Regenerates the table and
-//! times the best-case probe path (II=1, resident L) end to end.
+//! times the best-case probe path (II=1, no collision handling) end to
+//! end, copy-in included.
 
 use hbm_analytics::bench::figures::{table1, FigureCtx};
 use hbm_analytics::bench::harness::{black_box, Bencher};
-use hbm_analytics::db::FpgaAccelerator;
+use hbm_analytics::db::{FpgaAccelerator, OffloadRequest};
 use hbm_analytics::hbm::{FabricClock, HbmConfig};
 use hbm_analytics::workloads::JoinWorkload;
 
@@ -14,12 +15,15 @@ fn main() {
     let w = JoinWorkload::generate(4_000_000, 4096, true, true, 3);
     let b = Bencher::quick();
     let r = b.run_throughput(
-        "offload_join 7 engines, II=1 (4M tuples)",
+        "join offload 7 engines, II=1 (4M tuples)",
         (w.l.len() * 4) as u64,
         || {
-            let mut acc = FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200))
-                .resident();
-            black_box(acc.offload_join_cfg(&w.s, &w.l, false));
+            let mut acc =
+                FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
+            black_box(
+                acc.submit(OffloadRequest::join(&w.s, &w.l).collisions(false))
+                    .wait_join(),
+            );
         },
     );
     println!("{}", r.report());

@@ -9,7 +9,8 @@
 use std::path::PathBuf;
 
 use crate::cpu::{CpuPlatform, POWER9, XEON_E5};
-use crate::db::udf::FpgaAccelerator;
+use crate::db::request::OffloadRequest;
+use crate::db::udf::{FpgaAccelerator, OffloadTiming};
 use crate::engines::join::HT_TUPLES;
 use crate::engines::sgd::{engine_rate, GlmTask, SgdEngine, SgdHyperParams, SgdJob};
 use crate::engines::{sim, Engine};
@@ -120,10 +121,24 @@ pub fn fig2(ctx: &FigureCtx) -> FigureOutput {
 
 // ------------------------------------------------------------- Fig. 5a/b
 
+/// Submit a request twice under one key on one card and return the warm
+/// (HBM-resident, copy-in-free) timing — the paper's "subsequent queries"
+/// measurement, expressed through the per-request residency keys.
+fn warm_timing(
+    acc: &mut FpgaAccelerator,
+    request: impl Fn() -> OffloadRequest,
+) -> OffloadTiming {
+    acc.submit(request()).take();
+    acc.submit(request()).take().1
+}
+
 fn fpga_selection_rate(engines: usize, items: u64, selectivity: f64, seed: u64) -> f64 {
     let w = SelectionWorkload::uniform(items, selectivity, seed);
-    let mut acc = FpgaAccelerator::new(cfg200()).with_engines(engines).resident();
-    let (_, timing) = acc.offload_select(&w.data, w.lo, w.hi);
+    let mut acc = FpgaAccelerator::new(cfg200()).with_engines(engines);
+    // Exec rate is residency-independent: a single cold submission gives
+    // the same engine-side timing the paper's resident sweep reports.
+    let (_, timing) =
+        acc.submit(OffloadRequest::select(w.lo, w.hi).on(&w.data)).wait_selection();
     (items * 4) as f64 / timing.exec
 }
 
@@ -198,9 +213,10 @@ pub fn fig6(ctx: &FigureCtx) -> FigureOutput {
     );
     for &sel in &[0.0f64, 0.01, 0.10, 0.25, 0.50, 0.75, 1.00] {
         let w = SelectionWorkload::uniform(items, sel, ctx.seed + (sel * 100.0) as u64);
-        let mut acc =
-            FpgaAccelerator::new(cfg200()).with_engines(ENGINE_PORTS).resident();
-        let (idx, timing) = acc.offload_select(&w.data, w.lo, w.hi);
+        let mut acc = FpgaAccelerator::new(cfg200()).with_engines(ENGINE_PORTS);
+        let (idx, timing) = acc
+            .submit(OffloadRequest::select(w.lo, w.hi).on(&w.data))
+            .wait_selection();
         let in_bytes = (items * 4) as f64;
         let fpga = in_bytes / timing.exec / 1e9;
         let fpga_copy = in_bytes / (timing.exec + timing.copy_out) / 1e9;
@@ -257,8 +273,19 @@ pub fn table1(ctx: &FigureCtx) -> FigureOutput {
         let mut rates = Vec::new();
         for engines in [1usize, 7] {
             let mut acc = FpgaAccelerator::new(cfg200()).with_engines(engines);
-            acc.data_resident = !load_l;
-            let (_, timing) = acc.offload_join_cfg(&w.s, &w.l, handle);
+            let request = || {
+                OffloadRequest::join(&w.s, &w.l)
+                    .collisions(handle)
+                    .key("table1", "s")
+                    .probe_key("table1", "l")
+            };
+            // "L loaded" measures the cold first touch; "L resident"
+            // measures the keyed repeat after a warm-up pass.
+            let timing = if load_l {
+                acc.submit(request()).take().1
+            } else {
+                warm_timing(&mut acc, request)
+            };
             rates.push(l_bytes / timing.total() / 1e9);
         }
         t.row(vec![
@@ -296,10 +323,19 @@ pub fn fig8a(ctx: &FigureCtx) -> FigureOutput {
     );
     for &k in &[1usize, 2, 4, 7, 16, 32, 64] {
         let (fb, fw) = if k <= 7 {
-            let mut best = FpgaAccelerator::new(cfg200()).with_engines(k).resident();
-            let (_, tb) = best.offload_join_cfg(&w.s, &w.l, false);
+            // Best case: II=1 bitstream, inputs HBM-resident (warm keyed
+            // repeat). Worst case: collision handling, cold copy-in.
+            let mut best = FpgaAccelerator::new(cfg200()).with_engines(k);
+            let tb = warm_timing(&mut best, || {
+                OffloadRequest::join(&w.s, &w.l)
+                    .collisions(false)
+                    .key("fig8", "s")
+                    .probe_key("fig8", "l")
+            });
             let mut worst = FpgaAccelerator::new(cfg200()).with_engines(k);
-            let (_, tw) = worst.offload_join_cfg(&w.s, &w.l, true);
+            let (_, tw) = worst
+                .submit(OffloadRequest::join(&w.s, &w.l).collisions(true))
+                .wait_join();
             (
                 fnum(l_bytes / tb.total() / 1e9),
                 fnum(l_bytes / tw.total() / 1e9),

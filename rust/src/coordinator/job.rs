@@ -128,15 +128,12 @@ pub struct JobSpec {
     pub inputs: Vec<InputColumn>,
     /// Cap on compute engines this job may occupy.
     pub max_engines: usize,
-    /// Legacy residency escape hatch: treat every input as already in HBM
-    /// regardless of the cache (the old `FpgaAccelerator::data_resident`).
-    pub resident: bool,
 }
 
 impl JobSpec {
     pub fn new(kind: JobKind) -> Self {
         let inputs = kind.default_inputs();
-        Self { client: 0, kind, inputs, max_engines: ENGINE_PORTS, resident: false }
+        Self { client: 0, kind, inputs, max_engines: ENGINE_PORTS }
     }
 
     /// Attach cache keys to the inputs, in payload order. Shorter lists
@@ -155,11 +152,6 @@ impl JobSpec {
 
     pub fn with_max_engines(mut self, max_engines: usize) -> Self {
         self.max_engines = max_engines;
-        self
-    }
-
-    pub fn with_resident(mut self, resident: bool) -> Self {
-        self.resident = resident;
         self
     }
 }

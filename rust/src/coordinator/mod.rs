@@ -18,20 +18,26 @@
 //!   them — the channel/port allocation decision that related work
 //!   (Wang et al., Choi et al.) shows dominates delivered HBM bandwidth;
 //! * [`cache`] — the HBM-resident column cache with LRU eviction over a
-//!   byte budget, generalizing the old global `data_resident` flag so
-//!   repeat queries skip OpenCAPI copy-in per column;
+//!   byte budget: requests name inputs with `(table, column)` keys and
+//!   repeat queries skip OpenCAPI copy-in per column (residency is
+//!   per-request — there is no global "already resident" switch);
 //! * [`scheduler`] — the [`Coordinator`] itself: owns `HbmMemory`,
 //!   `Shim`, `ControlUnit` and the host link, runs each round's engines
 //!   under one fluid simulation so co-scheduled jobs contend for
 //!   crossbar bandwidth, and publishes per-job latency/throughput
-//!   statistics;
+//!   statistics. Rounds advance either in bulk ([`Coordinator::run`]) or
+//!   one at a time ([`Coordinator::step`] + [`Coordinator::take_result`])
+//!   — the primitive behind the public async `JobHandle`;
 //! * [`serve`] — the `hbmctl serve` replay harness: a deterministic
 //!   mixed workload from N simulated clients, per-policy comparison
 //!   tables and the `BENCH_coordinator.json` perf artifact.
 //!
-//! `db::udf::FpgaAccelerator` submits through a private [`Coordinator`]
-//! instead of rebuilding the card per offload, so the DBMS integration
-//! and the figure drivers all exercise this path.
+//! The public face of this layer is `db`'s request/handle API:
+//! `db::FpgaAccelerator::submit` lowers a typed `db::OffloadRequest` into
+//! a [`JobSpec`] on its private [`Coordinator`] and returns a
+//! `db::JobHandle` immediately, so DBMS clients keep several operators in
+//! flight while the coordinator's rounds overlap one job's copy-in with
+//! another's execution.
 
 pub mod cache;
 pub mod job;

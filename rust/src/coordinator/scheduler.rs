@@ -22,7 +22,7 @@
 //! larger than its grant trains a grant-sized batch per round and stays
 //! queued — how the paper runs its 28-job search over 14 engines.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::cache::{CacheStats, ColumnCache, DEFAULT_CACHE_BYTES};
 use super::job::{JobKind, JobOutput, JobRecord, JobSpec};
@@ -35,7 +35,7 @@ use crate::engines::{sim, Engine};
 use crate::hbm::shim::{Shim, ENGINE_PORTS, PORT_HOME_BYTES};
 use crate::hbm::{HbmConfig, HbmMemory};
 use crate::interconnect::opencapi::OpenCapiLink;
-use crate::util::stats::percentile;
+use crate::util::stats::percentile_nearest_rank;
 
 /// A queued job plus its in-flight progress.
 struct Pending {
@@ -95,12 +95,16 @@ impl CoordinatorStats {
         }
     }
 
+    /// Latency percentile by the standard nearest-rank (ceil-rank)
+    /// estimator: interpolation between order statistics biases the tail
+    /// low on small samples (p99 of 10 jobs must be the slowest job, not
+    /// a blend of the two slowest).
     pub fn latency_percentile(&self, p: f64) -> f64 {
         let l = self.latencies();
         if l.is_empty() {
             0.0
         } else {
-            percentile(&l, p)
+            percentile_nearest_rank(&l, p)
         }
     }
 
@@ -131,6 +135,15 @@ pub struct Coordinator {
     next_id: usize,
     queue: VecDeque<Pending>,
     records: Vec<JobRecord>,
+    /// Outputs of completed jobs not yet claimed through [`take_result`].
+    ///
+    /// [`take_result`]: Coordinator::take_result
+    finished: BTreeMap<usize, JobOutput>,
+    /// Queued jobs nobody will claim ([`abandon`]): they still run, but
+    /// their outputs are discarded at completion instead of buffered.
+    ///
+    /// [`abandon`]: Coordinator::abandon
+    abandoned: BTreeSet<usize>,
     hbm_bytes: u64,
 }
 
@@ -149,6 +162,8 @@ impl Coordinator {
             next_id: 0,
             queue: VecDeque::new(),
             records: Vec::new(),
+            finished: BTreeMap::new(),
+            abandoned: BTreeSet::new(),
             hbm_bytes: 0,
         }
     }
@@ -156,6 +171,10 @@ impl Coordinator {
     pub fn with_policy(mut self, policy: Policy) -> Self {
         self.policy = policy;
         self
+    }
+
+    pub fn set_policy(&mut self, policy: Policy) {
+        self.policy = policy;
     }
 
     /// Resize the resident-column budget (0 disables caching).
@@ -224,18 +243,82 @@ impl Coordinator {
         id
     }
 
-    /// Serve the queue to completion. Returns `(id, output)` pairs in
-    /// completion order.
+    /// Serve the queue to completion. Returns `(id, output)` pairs of the
+    /// jobs completing during this call, in completion order (abandoned
+    /// jobs run but return nothing).
     pub fn run(&mut self) -> Vec<(usize, JobOutput)> {
         let mut outputs = Vec::new();
         while !self.queue.is_empty() {
-            outputs.extend(self.run_round());
+            for id in self.step() {
+                // Straight off the buffer: no record lookup needed here.
+                if let Some(output) = self.finished.remove(&id) {
+                    outputs.push((id, output));
+                }
+            }
         }
         outputs
     }
 
-    /// Submit one job and serve it immediately (the `FpgaAccelerator`
-    /// path). Returns the output and the job's accounting record.
+    /// Advance the card by exactly one scheduling round (a no-op on an
+    /// empty queue). Outputs of jobs completing in the round are buffered
+    /// for [`take_result`]; the completed ids are returned. This is the
+    /// primitive the async `JobHandle::wait` path drives, so one client's
+    /// wait makes progress for every in-flight job.
+    ///
+    /// [`take_result`]: Coordinator::take_result
+    pub fn step(&mut self) -> Vec<usize> {
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        let finished = self.run_round();
+        let ids: Vec<usize> = finished.iter().map(|(id, _)| *id).collect();
+        for (id, output) in finished {
+            if !self.abandoned.remove(&id) {
+                self.finished.insert(id, output);
+            }
+        }
+        ids
+    }
+
+    /// Declare that nobody will claim `id`'s output (its handle was
+    /// dropped). The job still runs — its cache side effects happen and
+    /// its record is kept — but the output is freed immediately if
+    /// buffered, or discarded at completion instead of buffered, so
+    /// fire-and-forget submission cannot accumulate unclaimed results.
+    pub fn abandon(&mut self, id: usize) {
+        if self.finished.remove(&id).is_none() && self.queue.iter().any(|p| p.id == id)
+        {
+            self.abandoned.insert(id);
+        }
+    }
+
+    /// Claim a completed job's buffered output and its accounting record.
+    /// Non-blocking: `None` while the job is still queued or running.
+    /// Each output can be claimed once; the record stays in [`stats`]
+    /// forever.
+    ///
+    /// [`stats`]: Coordinator::stats
+    pub fn take_result(&mut self, id: usize) -> Option<(JobOutput, JobRecord)> {
+        let output = self.finished.remove(&id)?;
+        let record = self
+            .records
+            .iter()
+            .rev()
+            .find(|r| r.id == id)
+            .expect("finished job must be recorded")
+            .clone();
+        Some((output, record))
+    }
+
+    /// Whether a job is anywhere in the coordinator: queued, running, or
+    /// completed with its output unclaimed.
+    pub fn is_in_flight(&self, id: usize) -> bool {
+        self.finished.contains_key(&id) || self.queue.iter().any(|p| p.id == id)
+    }
+
+    /// Submit one job and serve it immediately — the blocking
+    /// convenience for drivers that want exactly one result. Returns the
+    /// output and the job's accounting record.
     pub fn run_single(&mut self, spec: JobSpec) -> (JobOutput, JobRecord) {
         let id = self.submit(spec);
         let mut outputs = self.run();
@@ -244,6 +327,11 @@ impl Coordinator {
             .position(|(out_id, _)| *out_id == id)
             .expect("submitted job must complete");
         let (_, output) = outputs.swap_remove(pos);
+        // Other queued jobs drained by this call stay claimable through
+        // take_result — run_single must not swallow their outputs.
+        for (other, out) in outputs {
+            self.finished.insert(other, out);
+        }
         let record = self
             .records
             .iter()
@@ -279,9 +367,6 @@ impl Coordinator {
                 continue;
             }
             pending.copied_in = true;
-            if pending.spec.resident {
-                continue;
-            }
             for input in &pending.spec.inputs {
                 match &input.key {
                     Some(key) => {
@@ -784,11 +869,71 @@ mod tests {
     }
 
     #[test]
-    fn resident_flag_bypasses_link_entirely() {
-        let w = SelectionWorkload::uniform(50_000, 0.0, 6);
+    fn step_buffers_outputs_until_taken() {
+        let w = SelectionWorkload::uniform(40_000, 0.1, 6);
         let mut coord = Coordinator::new(cfg());
-        let (_, rec) = coord.run_single(selection_spec(&w).with_resident(true));
-        assert_eq!(rec.copy_in, 0.0);
-        assert_eq!(rec.cache_hits + rec.cache_misses, 0);
+        let id = coord.submit(selection_spec(&w));
+        assert!(coord.is_in_flight(id));
+        assert!(coord.take_result(id).is_none(), "nothing done before a round");
+
+        let done = coord.step();
+        assert_eq!(done, vec![id]);
+        assert!(coord.is_in_flight(id), "unclaimed output keeps the job visible");
+        let (out, rec) = coord.take_result(id).expect("buffered output");
+        assert_eq!(rec.id, id);
+        assert!(rec.copy_in > 0.0);
+        let mut want = cpu::selection::range_select(&w.data, w.lo, w.hi, 4);
+        want.sort_unstable();
+        assert_eq!(out.expect_selection(), want);
+
+        // Claimed exactly once; the record survives in stats.
+        assert!(coord.take_result(id).is_none());
+        assert!(!coord.is_in_flight(id));
+        assert_eq!(coord.stats().completed(), 1);
+        assert!(coord.step().is_empty(), "empty queue: step is a no-op");
+    }
+
+    #[test]
+    fn abandoned_jobs_run_but_never_buffer_their_output() {
+        let w = SelectionWorkload::uniform(30_000, 0.1, 7);
+        let mut coord = Coordinator::new(cfg());
+
+        // Abandon while queued: the job runs, nothing is buffered.
+        let a = coord.submit(selection_spec(&w));
+        coord.abandon(a);
+        assert_eq!(coord.step(), vec![a]);
+        assert!(coord.take_result(a).is_none(), "abandoned output is discarded");
+        assert!(!coord.is_in_flight(a));
+
+        // Abandon after completion: the buffered output is freed.
+        let b = coord.submit(selection_spec(&w));
+        coord.step();
+        assert!(coord.is_in_flight(b), "unclaimed output still buffered");
+        coord.abandon(b);
+        assert!(!coord.is_in_flight(b));
+        assert!(coord.take_result(b).is_none());
+
+        // Both jobs really ran and were recorded.
+        assert_eq!(coord.stats().completed(), 2);
+    }
+
+    #[test]
+    fn run_single_keeps_other_queued_jobs_claimable() {
+        let w = SelectionWorkload::uniform(30_000, 0.2, 8);
+        let mut coord = Coordinator::new(cfg());
+        let first = coord.submit(selection_spec(&w));
+        // run_single drains the whole queue; the co-queued job's output
+        // must stay claimable afterwards.
+        let (single_out, rec) = coord.run_single(selection_spec(&w));
+        assert!(rec.id != first);
+        let (first_out, first_rec) = coord
+            .take_result(first)
+            .expect("co-drained job's output must stay claimable");
+        assert_eq!(first_rec.id, first);
+        assert_eq!(
+            first_out.expect_selection(),
+            single_out.expect_selection(),
+            "same workload must give the same candidates"
+        );
     }
 }

@@ -9,6 +9,7 @@
 
 use super::column::{Catalog, ColumnData};
 use super::ops::{self, AggKind, AggResult};
+use super::request::OffloadRequest;
 use super::udf::FpgaAccelerator;
 use crate::coordinator::ColumnKey;
 
@@ -144,13 +145,10 @@ impl<'a> Executor<'a> {
                 let col = self.run(input).expect_column();
                 let cands = match self.accelerator.as_mut() {
                     Some(acc) => {
-                        acc.offload_select_keyed(
-                            key,
-                            col.as_u32().expect("u32"),
-                            *lo,
-                            *hi,
-                        )
-                        .0
+                        let req = OffloadRequest::select(*lo, *hi)
+                            .on(col.as_u32().expect("u32"))
+                            .keyed(key);
+                        acc.submit(req).wait_selection().0
                     }
                     None => ops::range_select(&col, *lo, *hi, self.threads),
                 };
@@ -167,13 +165,13 @@ impl<'a> Executor<'a> {
                 let probe = self.run(right).expect_column();
                 let pairs = match self.accelerator.as_mut() {
                     Some(acc) => {
-                        acc.offload_join_keyed(
-                            s_key,
-                            l_key,
+                        let req = OffloadRequest::join(
                             build.as_u32().expect("u32"),
                             probe.as_u32().expect("u32"),
                         )
-                        .0
+                        .keyed(s_key)
+                        .probe_keyed(l_key);
+                        acc.submit(req).wait_join().0
                     }
                     None => ops::hash_join(&build, &probe, self.threads),
                 };
@@ -261,7 +259,7 @@ mod tests {
         let a = Executor::accelerated(&cat, 2, &mut acc).run(&plan);
         let b = Executor::accelerated(&cat, 2, &mut acc).run(&plan);
         assert_eq!(a, b);
-        let stats = acc.coordinator().stats();
+        let stats = acc.stats();
         assert_eq!(stats.completed(), 2);
         assert_eq!(stats.cache.hits, 1, "repeat scan must be HBM-resident");
     }

@@ -13,16 +13,23 @@
 //!   project, aggregate), all late-materializing via candidate lists;
 //! * [`exec`] — a small operator-at-a-time plan executor with a builder
 //!   API;
-//! * [`udf`] — the accelerator hook: the same operators offloaded to the
-//!   simulated HBM-FPGA through the datamovers, returning both results and
+//! * [`request`] — the typed [`OffloadRequest`] builder: payload, engine
+//!   caps, collision handling, and per-input `(table, column)` residency
+//!   keys, validated in one place;
+//! * [`udf`] — the accelerator hook: [`FpgaAccelerator::submit`] enqueues
+//!   a request on the card's coordinator and returns an async
+//!   [`JobHandle`] (`poll`/`wait`), so the executor and multi-query
+//!   clients keep several operators in flight; each completed job reports
 //!   the timing breakdown (copy-in / execute / copy-out) the end-to-end
 //!   figures need.
 
 pub mod column;
 pub mod exec;
 pub mod ops;
+pub mod request;
 pub mod udf;
 
 pub use column::{Catalog, Column, ColumnData, Table};
 pub use exec::{Executor, Plan};
-pub use udf::{FpgaAccelerator, OffloadTiming};
+pub use request::{OffloadRequest, RequestError, MAX_JOIN_ENGINES};
+pub use udf::{FpgaAccelerator, JobHandle, OffloadTiming};

@@ -1,0 +1,433 @@
+//! Typed offload requests: the one place where work crossing the
+//! DBMS↔card boundary is shaped and validated.
+//!
+//! The paper's §III/§V integration story is about this boundary — what
+//! crosses OpenCAPI, when, and what stays resident in HBM. An
+//! [`OffloadRequest`] captures one operator's crossing declaratively:
+//!
+//! ```ignore
+//! let handle = acc.submit(
+//!     OffloadRequest::select(100, 999)
+//!         .on(&column)
+//!         .key("lineitem", "qty")   // HBM residency identity
+//!         .engines(8),
+//! );
+//! ```
+//!
+//! Every rule that used to be scattered over the old `offload_*`
+//! entry-point family lives here:
+//!
+//! * **engine clamps** — selection/SGD engines are capped at the 14 shim
+//!   ports; join engines at 7 (each drives a read port and a write port);
+//! * **collision handling** — chosen from the build side's uniqueness
+//!   unless the caller forces a bitstream variant with
+//!   [`collisions`](OffloadRequest::collisions);
+//! * **residency** — per-request `(table, column)` keys name inputs for
+//!   the coordinator's HBM-resident cache; a repeated key skips its
+//!   copy-in while the column stays cached. Anonymous inputs (no key) are
+//!   copied every time;
+//! * **shape checks** — a selection must carry data, an SGD grid must be
+//!   non-empty and its feature matrix rectangular.
+//!
+//! Requests lower to the coordinator's internal `JobSpec` at submission;
+//! validation failures surface as [`RequestError`] from
+//! `FpgaAccelerator::try_submit` (or a panic from the ergonomic
+//! `submit`).
+
+use crate::coordinator::{ColumnKey, JobKind, JobSpec};
+use crate::engines::sgd::SgdHyperParams;
+use crate::hbm::shim::ENGINE_PORTS;
+
+/// Most engines a join request may occupy: each join engine holds a read
+/// port and a write port, so 14 ports carry 7 engines.
+pub const MAX_JOIN_ENGINES: usize = ENGINE_PORTS / 2;
+
+/// Why a request failed validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// The request is missing its payload (e.g. `select` without `.on`).
+    MissingData(&'static str),
+    /// An SGD request with an empty hyperparameter grid.
+    EmptyGrid,
+    /// Payload dimensions are inconsistent.
+    BadShape(String),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::MissingData(what) => write!(f, "missing data: {what}"),
+            RequestError::EmptyGrid => {
+                write!(f, "sgd request needs a non-empty hyperparameter grid")
+            }
+            RequestError::BadShape(why) => write!(f, "bad payload shape: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+#[derive(Debug, Clone)]
+enum Payload {
+    Select {
+        data: Option<Vec<u32>>,
+        lo: u32,
+        hi: u32,
+        key: Option<ColumnKey>,
+    },
+    Join {
+        s: Vec<u32>,
+        l: Vec<u32>,
+        s_key: Option<ColumnKey>,
+        l_key: Option<ColumnKey>,
+        /// `None`: decide from the build side's uniqueness at submission.
+        collisions: Option<bool>,
+    },
+    Sgd {
+        features: Vec<f32>,
+        labels: Vec<f32>,
+        n_features: usize,
+        grid: Vec<SgdHyperParams>,
+        key: Option<ColumnKey>,
+    },
+}
+
+/// A typed, validated description of one offload. Build with
+/// [`select`](OffloadRequest::select), [`join`](OffloadRequest::join) or
+/// [`sgd`](OffloadRequest::sgd), refine with the chainable setters, then
+/// hand to `FpgaAccelerator::submit` for an async `JobHandle`.
+#[derive(Debug, Clone)]
+pub struct OffloadRequest {
+    payload: Payload,
+    /// Engine cap; `None` inherits the accelerator's default.
+    engines: Option<usize>,
+    client: usize,
+}
+
+impl OffloadRequest {
+    /// Range selection `lo..=hi`; attach the column with
+    /// [`on`](OffloadRequest::on).
+    pub fn select(lo: u32, hi: u32) -> Self {
+        Self {
+            payload: Payload::Select { data: None, lo, hi, key: None },
+            engines: None,
+            client: 0,
+        }
+    }
+
+    /// Hash join: build side `s`, probe side `l`. Collision handling is
+    /// auto-detected from `s` unless forced with
+    /// [`collisions`](OffloadRequest::collisions).
+    pub fn join(s: &[u32], l: &[u32]) -> Self {
+        Self {
+            payload: Payload::Join {
+                s: s.to_vec(),
+                l: l.to_vec(),
+                s_key: None,
+                l_key: None,
+                collisions: None,
+            },
+            engines: None,
+            client: 0,
+        }
+    }
+
+    /// GLM hyperparameter grid over one dataset (row-major `features`,
+    /// one label per sample).
+    pub fn sgd(
+        features: &[f32],
+        labels: &[f32],
+        n_features: usize,
+        grid: &[SgdHyperParams],
+    ) -> Self {
+        Self {
+            payload: Payload::Sgd {
+                features: features.to_vec(),
+                labels: labels.to_vec(),
+                n_features,
+                grid: grid.to_vec(),
+                key: None,
+            },
+            engines: None,
+            client: 0,
+        }
+    }
+
+    /// Attach the selection's input column. Panics on non-selection
+    /// requests (join/SGD carry their payloads in their constructors).
+    pub fn on(mut self, data: &[u32]) -> Self {
+        match &mut self.payload {
+            Payload::Select { data: slot, .. } => *slot = Some(data.to_vec()),
+            other => panic!(
+                ".on(data) applies to select requests, not {}",
+                payload_name(other)
+            ),
+        }
+        self
+    }
+
+    /// Residency identity of the primary input (selection column, join
+    /// build side, SGD dataset): a repeated key skips copy-in while the
+    /// column stays HBM-resident.
+    pub fn key(self, table: impl Into<String>, column: impl Into<String>) -> Self {
+        self.keyed(Some(ColumnKey::new(table, column)))
+    }
+
+    /// [`key`](OffloadRequest::key) with an optional identity — handy for
+    /// callers (like the plan executor) that only sometimes have one.
+    pub fn keyed(mut self, key: Option<ColumnKey>) -> Self {
+        match &mut self.payload {
+            Payload::Select { key: slot, .. } => *slot = key,
+            Payload::Join { s_key, .. } => *s_key = key,
+            Payload::Sgd { key: slot, .. } => *slot = key,
+        }
+        self
+    }
+
+    /// Residency identity of the join's probe side.
+    pub fn probe_key(
+        self,
+        table: impl Into<String>,
+        column: impl Into<String>,
+    ) -> Self {
+        self.probe_keyed(Some(ColumnKey::new(table, column)))
+    }
+
+    /// [`probe_key`](OffloadRequest::probe_key) with an optional identity.
+    /// Panics on non-join requests.
+    pub fn probe_keyed(mut self, key: Option<ColumnKey>) -> Self {
+        match &mut self.payload {
+            Payload::Join { l_key, .. } => *l_key = key,
+            other => panic!(
+                ".probe_keyed applies to join requests, not {}",
+                payload_name(other)
+            ),
+        }
+        self
+    }
+
+    /// Force the collision-handling bitstream variant instead of deriving
+    /// it from the build side. Panics on non-join requests.
+    pub fn collisions(mut self, handle: bool) -> Self {
+        match &mut self.payload {
+            Payload::Join { collisions, .. } => *collisions = Some(handle),
+            other => panic!(
+                ".collisions applies to join requests, not {}",
+                payload_name(other)
+            ),
+        }
+        self
+    }
+
+    /// Cap the compute engines this request may occupy. Clamped at
+    /// submission to the card's limits (≤ 14; joins ≤ 7).
+    pub fn engines(mut self, n: usize) -> Self {
+        self.engines = Some(n);
+        self
+    }
+
+    /// Tag the submitting client (reporting only).
+    pub fn client(mut self, id: usize) -> Self {
+        self.client = id;
+        self
+    }
+
+    /// The workload kind this request describes.
+    pub fn kind_name(&self) -> &'static str {
+        payload_name(&self.payload)
+    }
+
+    /// Check the request without submitting it. `submit` runs the same
+    /// checks and panics; `try_submit` surfaces this error.
+    pub fn validate(&self) -> Result<(), RequestError> {
+        match &self.payload {
+            Payload::Select { data, .. } => {
+                if data.is_none() {
+                    return Err(RequestError::MissingData(
+                        "select request needs .on(column)",
+                    ));
+                }
+            }
+            Payload::Join { .. } => {}
+            Payload::Sgd { features, labels, n_features, grid, .. } => {
+                if grid.is_empty() {
+                    return Err(RequestError::EmptyGrid);
+                }
+                if *n_features == 0 {
+                    return Err(RequestError::BadShape(
+                        "n_features must be positive".into(),
+                    ));
+                }
+                if features.len() != labels.len() * n_features {
+                    return Err(RequestError::BadShape(format!(
+                        "features len {} != {} samples x {} features",
+                        features.len(),
+                        labels.len(),
+                        n_features
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower to the coordinator's job model, applying every boundary rule
+    /// in one place: shape validation, engine clamps, collision detection,
+    /// per-input residency keys.
+    pub(crate) fn into_spec(self, default_engines: usize) -> Result<JobSpec, RequestError> {
+        self.validate()?;
+        let engine_limit = match &self.payload {
+            Payload::Join { .. } => MAX_JOIN_ENGINES,
+            _ => ENGINE_PORTS,
+        };
+        let engines = self.engines.unwrap_or(default_engines).clamp(1, engine_limit);
+        let (kind, keys) = match self.payload {
+            Payload::Select { data, lo, hi, key } => (
+                JobKind::Selection { data: data.expect("validated"), lo, hi },
+                vec![key],
+            ),
+            Payload::Join { s, l, s_key, l_key, collisions } => {
+                let handle_collisions =
+                    collisions.unwrap_or_else(|| !build_side_is_unique(&s));
+                (JobKind::Join { s, l, handle_collisions }, vec![s_key, l_key])
+            }
+            Payload::Sgd { features, labels, n_features, grid, key } => (
+                JobKind::Sgd { features, labels, n_features, grid },
+                vec![key],
+            ),
+        };
+        Ok(JobSpec::new(kind)
+            .with_keys(keys)
+            .with_max_engines(engines)
+            .with_client(self.client))
+    }
+}
+
+fn payload_name(p: &Payload) -> &'static str {
+    match p {
+        Payload::Select { .. } => "select",
+        Payload::Join { .. } => "join",
+        Payload::Sgd { .. } => "sgd",
+    }
+}
+
+/// A unique build side needs no collision handling — the choice the DBMS
+/// makes when picking the bitstream variant.
+fn build_side_is_unique(s: &[u32]) -> bool {
+    let mut sorted = s.to_vec();
+    sorted.sort_unstable();
+    sorted.windows(2).all(|w| w[0] != w[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::sgd::GlmTask;
+
+    fn grid1() -> Vec<SgdHyperParams> {
+        vec![SgdHyperParams {
+            task: GlmTask::Ridge,
+            alpha: 0.05,
+            lambda: 0.0,
+            minibatch: 16,
+            epochs: 2,
+        }]
+    }
+
+    #[test]
+    fn select_lowering_carries_key_and_clamps_engines() {
+        let spec = OffloadRequest::select(10, 20)
+            .on(&[1, 15, 30])
+            .key("t", "c")
+            .engines(99)
+            .client(3)
+            .into_spec(ENGINE_PORTS)
+            .unwrap();
+        assert_eq!(spec.max_engines, ENGINE_PORTS, "clamped to the 14 ports");
+        assert_eq!(spec.client, 3);
+        assert_eq!(spec.inputs.len(), 1);
+        assert_eq!(spec.inputs[0].key.as_ref().unwrap().to_string(), "t.c");
+        match spec.kind {
+            JobKind::Selection { ref data, lo, hi } => {
+                assert_eq!(data, &[1, 15, 30]);
+                assert_eq!((lo, hi), (10, 20));
+            }
+            ref other => panic!("wrong kind {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn join_clamps_to_seven_engines_and_detects_collisions() {
+        // Duplicate build keys: collision handling must switch on.
+        let spec = OffloadRequest::join(&[1, 2, 2], &[1, 2, 3])
+            .engines(99)
+            .into_spec(ENGINE_PORTS)
+            .unwrap();
+        assert_eq!(spec.max_engines, MAX_JOIN_ENGINES);
+        match spec.kind {
+            JobKind::Join { handle_collisions, .. } => assert!(handle_collisions),
+            ref other => panic!("wrong kind {}", other.name()),
+        }
+
+        // Unique build side: off by default, but the caller can force it.
+        let auto = OffloadRequest::join(&[1, 2, 3], &[1])
+            .into_spec(ENGINE_PORTS)
+            .unwrap();
+        let forced = OffloadRequest::join(&[1, 2, 3], &[1])
+            .collisions(true)
+            .into_spec(ENGINE_PORTS)
+            .unwrap();
+        match (auto.kind, forced.kind) {
+            (
+                JobKind::Join { handle_collisions: a, .. },
+                JobKind::Join { handle_collisions: f, .. },
+            ) => {
+                assert!(!a);
+                assert!(f);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn default_engines_inherited_from_accelerator() {
+        let spec = OffloadRequest::select(0, 1)
+            .on(&[1])
+            .into_spec(4)
+            .unwrap();
+        assert_eq!(spec.max_engines, 4);
+    }
+
+    #[test]
+    fn select_without_data_is_rejected() {
+        let err = OffloadRequest::select(0, 1).validate().unwrap_err();
+        assert!(matches!(err, RequestError::MissingData(_)));
+    }
+
+    #[test]
+    fn sgd_shape_checks() {
+        assert!(matches!(
+            OffloadRequest::sgd(&[0.0; 8], &[0.0; 2], 4, &[]).validate(),
+            Err(RequestError::EmptyGrid)
+        ));
+        assert!(matches!(
+            OffloadRequest::sgd(&[0.0; 7], &[0.0; 2], 4, &grid1()).validate(),
+            Err(RequestError::BadShape(_))
+        ));
+        assert!(OffloadRequest::sgd(&[0.0; 8], &[0.0; 2], 4, &grid1())
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = ".on(data) applies to select requests")]
+    fn on_rejects_non_select() {
+        let _ = OffloadRequest::join(&[1], &[2]).on(&[3]);
+    }
+
+    #[test]
+    #[should_panic(expected = ".probe_keyed applies to join requests")]
+    fn probe_key_rejects_non_join() {
+        let _ = OffloadRequest::select(0, 1).probe_key("t", "c");
+    }
+}

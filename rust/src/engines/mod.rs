@@ -9,7 +9,7 @@
 //!   work to the timing simulator: an engine is a state machine emitting
 //!   *phases* (e.g. "ingress 64 KiB", "probe pass 3"), each with the HBM
 //!   flows it drives and an optional compute-bound rate ceiling;
-//! * [`sim::Simulation`] — the event-driven fluid simulation: it solves
+//! * [`sim::run`] — the event-driven fluid simulation: it solves
 //!   the crossbar allocation for all concurrently-active phases, advances
 //!   time to the next phase completion, and repeats;
 //! * [`control::ControlUnit`] — the CSR (register read/write) facade the

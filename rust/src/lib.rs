@@ -19,10 +19,14 @@
 //!   the HBM-resident column cache, per-job statistics and the
 //!   `hbmctl serve` replay harness ([`coordinator`]) — CPU↔FPGA
 //!   interconnect ([`interconnect`]), physical-design models
-//!   ([`floorplan`]), a columnar DBMS whose accelerator hook submits
-//!   through the coordinator ([`db`]), CPU baselines ([`cpu`]), workload
-//!   generators ([`workloads`]), the PJRT runtime ([`runtime`]) and the
-//!   benchmark harness ([`bench`]).
+//!   ([`floorplan`]), a columnar DBMS ([`db`]) whose accelerator
+//!   boundary is the typed request/handle API: callers shape work as an
+//!   [`db::OffloadRequest`] (payload, engine caps, `(table, column)`
+//!   residency keys) and submit it for an async [`db::JobHandle`]
+//!   (`poll`/`wait`), keeping several operators in flight on one card;
+//!   plus CPU baselines ([`cpu`]), workload generators ([`workloads`]),
+//!   the PJRT runtime ([`runtime`]) and the benchmark harness
+//!   ([`bench`]).
 //! * **L2/L1 (python/compile)** — the JAX SGD model and Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
 //!   [`runtime`] — Python never runs at request time.

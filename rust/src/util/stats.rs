@@ -74,6 +74,22 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Nearest-rank percentile (the standard ceil-rank formula): the smallest
+/// sample with at least `p`% of the data at or below it, i.e.
+/// `v[⌈p/100 · N⌉ - 1]` of the sorted sample. Unlike the interpolating
+/// [`percentile`], it never invents values between order statistics —
+/// the right estimator for latency tails on small `N`, where
+/// interpolation biases p99 low (on 10 samples, p99 must be the slowest
+/// observation, not a blend of the two slowest).
+pub fn percentile_nearest_rank(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0 * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
 pub fn median(samples: &[f64]) -> f64 {
     percentile(samples, 50.0)
 }
@@ -113,6 +129,21 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_uses_ceil_rank() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), 5.0);
+        assert_eq!(percentile_nearest_rank(&xs, 95.0), 10.0);
+        assert_eq!(percentile_nearest_rank(&xs, 99.0), 10.0);
+        assert_eq!(percentile_nearest_rank(&xs, 0.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&xs, 100.0), 10.0);
+        assert_eq!(percentile_nearest_rank(&xs, 10.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&xs, 10.1), 2.0);
+        // Interpolation would blend the two slowest samples here; the
+        // nearest-rank tail is an actual observation.
+        assert_eq!(percentile_nearest_rank(&[1.0, 2.0, 100.0], 99.0), 100.0);
     }
 
     #[test]

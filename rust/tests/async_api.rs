@@ -1,0 +1,215 @@
+//! Contract tests for the redesigned DBMS↔card boundary: the typed
+//! `OffloadRequest` builder and the async `JobHandle` returned by
+//! `FpgaAccelerator::submit`.
+//!
+//! The acceptance bar: several jobs genuinely in flight at once —
+//! submitted before *any* is waited on — with results identical to
+//! serial blocking submission, plus the handle semantics the executor
+//! and multi-client servers rely on (non-blocking poll, idempotent wait,
+//! records surviving dropped handles).
+
+use hbm_analytics::cpu;
+use hbm_analytics::db::{FpgaAccelerator, OffloadRequest};
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::workloads::{JoinWorkload, SelectionWorkload};
+
+fn cfg() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+fn cpu_select(w: &SelectionWorkload) -> Vec<u32> {
+    let mut want = cpu::selection::range_select(&w.data, w.lo, w.hi, 4);
+    want.sort_unstable();
+    want
+}
+
+fn cpu_join(w: &JoinWorkload) -> Vec<(u32, u32)> {
+    let mut want = cpu::join::hash_join_positions(&w.s, &w.l, 4);
+    want.sort_unstable();
+    want
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: ≥ 2 jobs in flight concurrently, result-identical to the
+// blocking one-at-a-time path.
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_jobs_in_flight_match_blocking_results() {
+    let sel = SelectionWorkload::uniform(80_000, 0.2, 41);
+    let join = JoinWorkload::generate(60_000, 1024, true, true, 42);
+
+    // Blocking reference: one card, one job at a time.
+    let mut serial = FpgaAccelerator::new(cfg());
+    let (serial_sel, _) = serial
+        .submit(OffloadRequest::select(sel.lo, sel.hi).on(&sel.data))
+        .wait_selection();
+    let (mut serial_join, _) =
+        serial.submit(OffloadRequest::join(&join.s, &join.l)).wait_join();
+    serial_join.sort_unstable();
+
+    // Async path: both submitted before either is waited on.
+    let mut acc = FpgaAccelerator::new(cfg());
+    let mut h_sel =
+        acc.submit(OffloadRequest::select(sel.lo, sel.hi).on(&sel.data));
+    let h_join = acc.submit(OffloadRequest::join(&join.s, &join.l));
+    assert_eq!(acc.in_flight(), 2, "both jobs must be in flight before any wait");
+    assert_eq!(acc.stats().completed(), 0, "nothing ran before a wait");
+
+    // Collect in reverse submission order: waiting on the join drives the
+    // shared rounds, so the selection completes under it.
+    let (mut pairs, _) = h_join.wait_join();
+    pairs.sort_unstable();
+    assert!(h_sel.poll(), "co-scheduled selection finished during the join wait");
+    let (cands, _) = h_sel.wait_selection();
+
+    assert_eq!(cands, serial_sel, "async selection diverged from blocking path");
+    assert_eq!(pairs, serial_join, "async join diverged from blocking path");
+    assert_eq!(cands, cpu_select(&sel));
+    assert_eq!(pairs, cpu_join(&join));
+
+    // The overlap is real: both records share the first round's start.
+    let stats = acc.stats();
+    assert_eq!(stats.completed(), 2);
+    let starts: Vec<f64> = stats.records.iter().map(|r| r.start_time).collect();
+    assert_eq!(starts[0], starts[1], "fair-share must co-run the in-flight jobs");
+}
+
+// ---------------------------------------------------------------------
+// JobHandle semantics.
+// ---------------------------------------------------------------------
+
+#[test]
+fn poll_before_any_round_is_nonblocking() {
+    let w = SelectionWorkload::uniform(50_000, 0.1, 7);
+    let mut acc = FpgaAccelerator::new(cfg());
+    let mut handle =
+        acc.submit(OffloadRequest::select(w.lo, w.hi).on(&w.data));
+
+    // poll() must not drive the card: no rounds, no simulated time.
+    assert!(!handle.poll());
+    assert!(!handle.poll(), "repeated polls stay non-blocking");
+    let stats = acc.stats();
+    assert_eq!(stats.completed(), 0);
+    assert_eq!(stats.simulated_time, 0.0, "poll must not advance the card");
+
+    let (output, _) = handle.wait();
+    assert_eq!(output.expect_selection(), cpu_select(&w));
+    assert!(handle.poll(), "poll after completion reports done");
+    let (cands, _) = handle.wait_selection();
+    assert_eq!(cands, cpu_select(&w), "consuming take returns the same result");
+}
+
+#[test]
+fn wait_is_idempotent_after_completion() {
+    let w = SelectionWorkload::uniform(60_000, 0.3, 8);
+    let mut acc = FpgaAccelerator::new(cfg());
+    let mut handle =
+        acc.submit(OffloadRequest::select(w.lo, w.hi).on(&w.data));
+    let (first, t1) = handle.wait();
+    let (second, t2) = handle.wait();
+    assert_eq!(
+        first.expect_selection(),
+        second.expect_selection(),
+        "repeat wait must return the same output"
+    );
+    assert!((t1.total() - t2.total()).abs() < 1e-15);
+    // The card did not re-run the job.
+    assert_eq!(acc.stats().completed(), 1);
+}
+
+#[test]
+fn dropping_a_handle_keeps_the_job_and_its_record() {
+    let w = SelectionWorkload::uniform(40_000, 0.1, 9);
+    let jw = JoinWorkload::generate(30_000, 700, true, false, 10);
+    let mut acc = FpgaAccelerator::new(cfg());
+    let kept = acc.submit(OffloadRequest::select(w.lo, w.hi).on(&w.data));
+    let dropped =
+        acc.submit(OffloadRequest::join(&jw.s, &jw.l).key("dim", "pk"));
+    let dropped_id = dropped.id();
+    drop(dropped);
+
+    // The abandoned job still runs (wait_all drains the queue) and its
+    // accounting record survives in the coordinator's stats.
+    acc.wait_all();
+    let (cands, _) = kept.wait_selection();
+    assert_eq!(cands, cpu_select(&w));
+    let stats = acc.stats();
+    assert_eq!(stats.completed(), 2, "dropped handle must not lose the job");
+    let rec = stats
+        .records
+        .iter()
+        .find(|r| r.id == dropped_id)
+        .expect("dropped job's record survives");
+    assert_eq!(rec.kind, "join");
+    assert!(rec.exec > 0.0, "the dropped job really ran");
+    // ...including its side effect on the column cache.
+    assert_eq!(stats.cache.misses, 1);
+}
+
+#[test]
+fn interleaved_clients_get_consistent_results() {
+    // Two logical clients interleaving submits and waits on one card:
+    // every result must match its CPU baseline regardless of ordering.
+    let wa = SelectionWorkload::uniform(50_000, 0.25, 11);
+    let wb = SelectionWorkload::uniform(70_000, 0.1, 12);
+    let jb = JoinWorkload::generate(40_000, 900, true, true, 13);
+
+    let mut acc = FpgaAccelerator::new(cfg());
+    let a1 = acc.submit(
+        OffloadRequest::select(wa.lo, wa.hi).on(&wa.data).client(0).key("a", "v"),
+    );
+    let b1 = acc.submit(
+        OffloadRequest::select(wb.lo, wb.hi).on(&wb.data).client(1),
+    );
+    let (b1_out, _) = b1.wait_selection();
+
+    // Client 1 keeps going while client 0's handle is still outstanding.
+    let b2 = acc.submit(OffloadRequest::join(&jb.s, &jb.l).client(1));
+    // Client 0 resubmits its keyed column: must hit the resident cache
+    // even though other clients' jobs ran in between.
+    let (a1_out, _) = a1.wait_selection();
+    let a2 = acc.submit(
+        OffloadRequest::select(wa.lo, wa.hi).on(&wa.data).client(0).key("a", "v"),
+    );
+    let (a2_out, a2_t) = a2.wait_selection();
+    let (mut b2_out, _) = b2.wait_join();
+    b2_out.sort_unstable();
+
+    assert_eq!(a1_out, cpu_select(&wa));
+    assert_eq!(a2_out, a1_out);
+    assert_eq!(a2_t.copy_in, 0.0, "client 0's repeat is HBM-resident");
+    assert_eq!(b1_out, cpu_select(&wb));
+    assert_eq!(b2_out, cpu_join(&jb));
+
+    let stats = acc.stats();
+    assert_eq!(stats.completed(), 5);
+    for rec in &stats.records {
+        assert!(rec.client <= 1);
+        assert!(rec.latency() > 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Request validation at the boundary.
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_clamps_are_enforced_at_submission() {
+    let w = SelectionWorkload::uniform(40_000, 0.1, 14);
+    let jw = JoinWorkload::generate(30_000, 600, true, false, 15);
+    let mut acc = FpgaAccelerator::new(cfg());
+    acc.submit(OffloadRequest::select(w.lo, w.hi).on(&w.data).engines(999))
+        .take();
+    acc.submit(OffloadRequest::join(&jw.s, &jw.l).engines(999)).take();
+    let stats = acc.stats();
+    assert_eq!(stats.records[0].engines, 14, "selection clamps to the 14 ports");
+    assert_eq!(stats.records[1].engines, 7, "join engines pair two ports each");
+}
+
+#[test]
+#[should_panic(expected = "invalid offload request")]
+fn submit_rejects_a_select_without_data() {
+    let mut acc = FpgaAccelerator::new(cfg());
+    let _ = acc.submit(OffloadRequest::select(1, 2));
+}

@@ -238,19 +238,24 @@ fn bench_json_is_complete_and_reproducible() {
 
 #[test]
 fn coordinator_is_the_accelerator_substrate() {
-    use hbm_analytics::db::FpgaAccelerator;
+    use hbm_analytics::db::{FpgaAccelerator, OffloadRequest};
     use hbm_analytics::workloads::SelectionWorkload;
 
     let w = SelectionWorkload::uniform(90_000, 0.15, 21);
     let key = ColumnKey::new("orders", "amount");
     let mut acc = FpgaAccelerator::new(cfg());
-    let (r1, t1) = acc.offload_select_keyed(Some(key.clone()), &w.data, w.lo, w.hi);
-    let (r2, t2) = acc.offload_select_keyed(Some(key), &w.data, w.lo, w.hi);
+    let request = || {
+        OffloadRequest::select(w.lo, w.hi)
+            .on(&w.data)
+            .keyed(Some(key.clone()))
+    };
+    let (r1, t1) = acc.submit(request()).wait_selection();
+    let (r2, t2) = acc.submit(request()).wait_selection();
     assert_eq!(r1, r2);
     assert!(t1.copy_in > 0.0);
     assert_eq!(t2.copy_in, 0.0, "keyed repeat must be HBM-resident");
 
-    let stats = acc.coordinator().stats();
+    let stats = acc.stats();
     assert_eq!(stats.completed(), 2);
     assert_eq!(stats.cache.hits, 1);
     assert!(stats.simulated_time > 0.0);
