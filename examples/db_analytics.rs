@@ -1,124 +1,104 @@
 //! DB analytics scenario: the paper's §III integration story end-to-end.
 //!
 //! A MonetDB-style catalog holds an orders/customers schema; we run a
-//! selection + join + aggregation query twice — once on the CPU operator
-//! path, once with the select and join offloaded to the simulated
-//! HBM-FPGA through the UDF hook — verify identical results, and report
-//! the accelerator's simulated timing breakdown (copy-in / exec /
-//! copy-out), the data-movement tradeoff §III is about.
+//! selection + join + aggregation query three ways — on the CPU operator
+//! path, as the historical operator-at-a-time offload walk, and as a
+//! whole-query pipeline (`submit_plan`) whose dependent stages consume
+//! their parents' outputs directly from HBM — verify identical results,
+//! and report the host bytes each offload path moved, the data-movement
+//! tradeoff §III is about. Finally, two whole queries are submitted
+//! concurrently and collected out of order.
 //!
 //! Run: `cargo run --release --example db_analytics`
 
-use hbm_analytics::db::ops::AggKind;
-use hbm_analytics::db::{
-    Catalog, Column, Executor, FpgaAccelerator, OffloadRequest, Plan, Table,
-};
+use hbm_analytics::db::{Executor, FpgaAccelerator, PipelineRequest};
 use hbm_analytics::hbm::{FabricClock, HbmConfig};
-use hbm_analytics::util::rng::Xoshiro256;
-
-fn build_catalog(orders: usize, customers: usize) -> Catalog {
-    let mut rng = Xoshiro256::new(99);
-    let mut cat = Catalog::new();
-    cat.register(Table::new(
-        "orders",
-        vec![
-            Column::u32("okey", (0..orders as u32).collect()),
-            Column::u32(
-                "cust",
-                (0..orders).map(|_| rng.next_u32() % customers as u32).collect(),
-            ),
-            Column::u32(
-                "amount",
-                (0..orders).map(|_| rng.next_u32() % 10_000).collect(),
-            ),
-        ],
-    ));
-    cat.register(Table::new(
-        "customers",
-        vec![Column::u32("ckey", (0..customers as u32).collect())],
-    ));
-    cat
-}
+use hbm_analytics::workloads::analytics;
 
 fn main() {
     let orders = 2_000_000;
     let customers = 2_000;
     println!("catalog: {orders} orders, {customers} customers");
-    let cat = build_catalog(orders, customers);
+    let cat = analytics::orders_catalog(orders, customers, 99);
 
-    // Query: for big-ticket orders (amount in [9000, 9999]), join to the
-    // customers table and count matched order rows.
+    // Query: count order rows of the low half of the customer-id range
+    // (key-range pruning), via join against the customers table.
     //   SELECT count(*) FROM customers c JOIN orders o ON c.ckey = o.cust
-    //   WHERE o.amount BETWEEN 9000 AND 9999
-    let candidates = Plan::scan("orders", "amount").select(9000, 9999);
-    let probe_keys = Plan::scan("orders", "cust").project(candidates);
-    let join = Plan::scan("customers", "ckey").join(probe_keys);
-    let count = Plan::scan("customers", "ckey")
-        .project(join.clone().join_side(true))
-        .aggregate(AggKind::Count);
+    //   WHERE o.cust <= :half
+    let count = analytics::key_range_join_count(customers);
 
     // --- CPU path.
     let t0 = std::time::Instant::now();
-    let cpu_count = Executor::cpu(&cat, 8).run(&count);
-    println!("CPU path:  {cpu_count:?}  ({:?} host)", t0.elapsed());
+    let cpu_count = Executor::cpu(&cat, 8).run(&count).expect("cpu plan");
+    println!("CPU path:            {cpu_count:?}  ({:?} host)", t0.elapsed());
 
-    // --- FPGA-offloaded path (selection + join engines).
-    let mut acc = FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
+    // --- Operator-at-a-time offload: one blocking submission per
+    //     select/join, the projected probe side round-tripping through
+    //     the host (what the paper's integration pays).
+    let mut acc_op = FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
     let t1 = std::time::Instant::now();
-    let fpga_count = Executor::accelerated(&cat, 8, &mut acc).run(&count);
-    println!("FPGA path: {fpga_count:?}  ({:?} host)", t1.elapsed());
+    let op_count = Executor::accelerated(&cat, 8, &mut acc_op)
+        .operator_at_a_time()
+        .run(&count)
+        .expect("operator-at-a-time plan");
+    let op_bytes = acc_op.stats().total_copy_in_bytes();
+    println!(
+        "operator-at-a-time:  {op_count:?}  ({:?} host, {op_bytes} B over the link)",
+        t1.elapsed()
+    );
+
+    // --- Whole-plan pipeline: the executor lowers the plan into a
+    //     dependency-linked stage DAG; the join consumes the selection's
+    //     output as an HBM-resident (pinned) intermediate.
+    let mut acc_pipe =
+        FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
+    let t2 = std::time::Instant::now();
+    let pipe_count = Executor::accelerated(&cat, 8, &mut acc_pipe)
+        .run(&count)
+        .expect("pipelined plan");
+    let pipe_bytes = acc_pipe.stats().total_copy_in_bytes();
+    println!(
+        "pipelined plan:      {pipe_count:?}  ({:?} host, {pipe_bytes} B over the link)",
+        t2.elapsed()
+    );
+    assert_eq!(cpu_count, op_count, "offloaded plan must be result-identical");
+    assert_eq!(cpu_count, pipe_count, "pipelined plan must be result-identical");
+    assert!(
+        pipe_bytes < op_bytes,
+        "the pipeline must skip the probe-side host round-trip"
+    );
+    println!(
+        "pipelining saved {} B of OpenCAPI traffic ({:.1}%)",
+        op_bytes - pipe_bytes,
+        100.0 * (op_bytes - pipe_bytes) as f64 / op_bytes as f64
+    );
+
+    // --- Two whole queries in flight on one card, collected out of
+    //     order — what the blocking per-operator API could never express.
+    let sum_big = analytics::amount_band_sum(9_000, 9_999);
+    let h_count = acc_pipe.submit_plan(
+        PipelineRequest::from_plan(&count, &cat).expect("lowerable").client(0),
+    );
+    let h_sum = acc_pipe.submit_plan(
+        PipelineRequest::from_plan(&sum_big, &cat).expect("lowerable").client(1),
+    );
+    println!(
+        "submitted 2 whole-query pipelines concurrently ({} stage jobs in flight)",
+        acc_pipe.in_flight()
+    );
+    let (sum_result, sum_report) = h_sum.take_scalar();
+    let (count_repeat, count_report) = h_count.take();
+    println!(
+        "collected out of order: sum {sum_result:?} ({} B copied), repeat \
+         count {count_repeat:?} ({} B copied — fully HBM-resident repeat)",
+        sum_report.copy_in_bytes(),
+        count_report.copy_in_bytes(),
+    );
+    assert_eq!(count_repeat, cpu_count);
     assert_eq!(
-        format!("{cpu_count:?}"),
-        format!("{fpga_count:?}"),
-        "offloaded plan must be result-identical"
-    );
-
-    // --- Simulated-device timing breakdown for the join in isolation:
-    //     first query vs subsequent queries. The request names both sides
-    //     with (table, column) keys, so the first submission pays the
-    //     OpenCAPI copy-in and the repeat runs against HBM-resident
-    //     columns — the paper's distinction, expressed per request.
-    let s: Vec<u32> = (0..customers as u32).collect();
-    let l = cat.table("orders").unwrap().column("cust").unwrap();
-    let l = l.data.as_u32().unwrap();
-    let mut acc = FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
-    let request = || {
-        OffloadRequest::join(&s, l)
-            .key("customers", "ckey")
-            .probe_key("orders", "cust")
-    };
-    for label in ["first query (cold copy-in)", "repeat query (HBM-resident)"] {
-        let (_, t) = acc.submit(request()).wait_join();
-        println!(
-            "join offload, {label}: copy-in {:.3} ms, exec {:.3} ms, \
-             copy-out {:.3} ms -> rate {:.2} GB/s",
-            t.copy_in * 1e3,
-            t.exec * 1e3,
-            t.copy_out * 1e3,
-            (l.len() * 4) as f64 / t.total() / 1e9,
-        );
-    }
-
-    // --- Async submission: keep two operators in flight on one card and
-    //     collect them in either order — what the blocking offload_* API
-    //     could never express.
-    let amount = cat.table("orders").unwrap().column("amount").unwrap();
-    let sel = acc.submit(
-        OffloadRequest::select(9000, 9999)
-            .on(amount.data.as_u32().unwrap())
-            .key("orders", "amount"),
-    );
-    let join2 = acc.submit(request());
-    println!(
-        "submitted selection + join concurrently ({} jobs in flight)",
-        acc.in_flight()
-    );
-    let (pairs, _) = join2.wait_join();
-    let (cands, _) = sel.wait_selection();
-    println!(
-        "collected out of order: {} join pairs, {} selection candidates",
-        pairs.len(),
-        cands.len()
+        count_report.copy_in_bytes(),
+        0,
+        "repeat of a keyed plan on a warm card must copy nothing"
     );
     println!("db_analytics OK");
 }

@@ -641,6 +641,81 @@ pub fn fig11(ctx: &FigureCtx) -> FigureOutput {
     out
 }
 
+// -------------------------------------------------------------- pipeline
+
+/// Whole-plan pipelining vs operator-at-a-time offload: host bytes moved
+/// per plan (§II/§VI data-movement story, measured end-to-end). "cold" is
+/// a fresh card; "warm" repeats the plan so keyed base columns are
+/// HBM-resident — the pipelined path then moves nothing at all, while the
+/// operator-at-a-time walk still round-trips every intermediate.
+pub fn pipeline_fig(ctx: &FigureCtx) -> FigureOutput {
+    use crate::db::{Executor, PipelineRequest};
+    use crate::workloads::analytics;
+
+    let rows = ((200_000f64 * ctx.scale) as usize).max(4_096);
+    let customers = (rows / 100).max(32);
+    let cat = analytics::orders_catalog(rows, customers, ctx.seed);
+    let plans = [
+        ("scan_select_join_agg", analytics::key_range_join_count(customers)),
+        ("select_project_sum", analytics::amount_band_sum(0, 4_999)),
+    ];
+
+    let mut t = Table::new(
+        "Pipelined plans vs operator-at-a-time: host bytes over the link",
+        &["plan", "op cold", "pipe cold", "op warm", "pipe warm", "saved %"],
+    );
+    for (name, plan) in &plans {
+        let want = Executor::cpu(&cat, 4).run(plan).expect("cpu reference");
+
+        let mut acc_op = FpgaAccelerator::new(cfg200());
+        let mut op_runs = Vec::new();
+        for _ in 0..2 {
+            let before = acc_op.stats().total_copy_in_bytes();
+            let got = Executor::accelerated(&cat, 4, &mut acc_op)
+                .operator_at_a_time()
+                .run(plan)
+                .expect("operator-at-a-time run");
+            assert_eq!(got, want, "{name}: operator-at-a-time diverged");
+            op_runs.push(acc_op.stats().total_copy_in_bytes() - before);
+        }
+
+        let mut acc_pipe = FpgaAccelerator::new(cfg200());
+        let mut pipe_runs = Vec::new();
+        for _ in 0..2 {
+            let req =
+                PipelineRequest::from_plan(plan, &cat).expect("lowerable plan");
+            let (got, report) = acc_pipe.submit_plan(req).take();
+            assert_eq!(got, want, "{name}: pipeline diverged");
+            pipe_runs.push(report.copy_in_bytes());
+        }
+
+        let total_op: u64 = op_runs.iter().sum();
+        let total_pipe: u64 = pipe_runs.iter().sum();
+        let saved =
+            100.0 * (total_op as f64 - total_pipe as f64) / total_op.max(1) as f64;
+        t.row(vec![
+            name.to_string(),
+            op_runs[0].to_string(),
+            pipe_runs[0].to_string(),
+            op_runs[1].to_string(),
+            pipe_runs[1].to_string(),
+            format!("{saved:.1}"),
+        ]);
+    }
+    let out = FigureOutput {
+        id: "pipeline",
+        tables: vec![t],
+        notes: vec![
+            "dependent stages consume HBM-resident intermediates (pinned \
+             transient cache entries); the operator-at-a-time walk ships \
+             every projected probe side back over OpenCAPI"
+                .into(),
+        ],
+    };
+    out.emit(ctx);
+    out
+}
+
 // -------------------------------------------------------------- Table III
 
 /// Resource consumption per bitstream (Table III) + floorplan/timing.
@@ -705,7 +780,7 @@ pub fn latency(ctx: &FigureCtx) -> FigureOutput {
 pub fn all_ids() -> &'static [&'static str] {
     &[
         "fig2", "fig5a", "fig5b", "fig6", "table1", "fig8a", "fig8b",
-        "fig10a", "fig10b", "fig11", "table2", "table3", "latency",
+        "fig10a", "fig10b", "fig11", "pipeline", "table2", "table3", "latency",
     ]
 }
 
@@ -743,6 +818,7 @@ pub fn run(id: &str, ctx: &FigureCtx) -> Option<FigureOutput> {
         "fig10a" => fig10a(ctx),
         "fig10b" => fig10b(ctx),
         "fig11" => fig11(ctx),
+        "pipeline" => pipeline_fig(ctx),
         "table2" => table2(ctx),
         "table3" => table3(ctx),
         "latency" => latency(ctx),
@@ -877,6 +953,24 @@ mod tests {
             rows.iter().find(|r| r[0] == b).unwrap()[2].parse().unwrap()
         };
         assert!(time("16") < time("1"));
+    }
+
+    #[test]
+    fn pipeline_driver_shows_moved_byte_savings() {
+        let out = pipeline_fig(&quick_ctx());
+        let rows = out.tables[0].rows();
+        let row = rows
+            .iter()
+            .find(|r| r[0] == "scan_select_join_agg")
+            .expect("acceptance plan row");
+        let op_cold: u64 = row[1].parse().unwrap();
+        let pipe_cold: u64 = row[2].parse().unwrap();
+        assert!(
+            pipe_cold < op_cold,
+            "pipelined plan must move strictly fewer bytes: {pipe_cold} vs {op_cold}"
+        );
+        let pipe_warm: u64 = row[4].parse().unwrap();
+        assert_eq!(pipe_warm, 0, "warm pipeline is fully HBM-resident");
     }
 
     #[test]

@@ -15,6 +15,17 @@
 //! engines' home windows is (re)done per round by the scheduler, since
 //! the ideal partitioning depends on how many engines the job was granted
 //! (§IV: one partition per engine port).
+//!
+//! ## Pinning
+//!
+//! An entry can carry a *pin count*. Pinned entries are never evicted:
+//! the scheduler pins a key while a queued job depends on it (so a burst
+//! of large admissions cannot thrash a column a waiting job was promised)
+//! and pins pipeline intermediates published by a completed parent stage
+//! until every dependent stage has consumed them. Pins are a scheduler
+//! promise, so [`insert_pinned`](ColumnCache::insert_pinned) always
+//! admits — the budget constrains only unpinned (evictable) residents,
+//! and `used` may transiently exceed `capacity` while pins are live.
 
 use std::collections::BTreeMap;
 
@@ -54,6 +65,8 @@ impl CacheStats {
 struct Entry {
     bytes: u64,
     last_use: u64,
+    /// Live pins: > 0 means the entry must not be evicted.
+    pins: u32,
 }
 
 /// LRU column cache over a byte budget.
@@ -101,10 +114,20 @@ impl ColumnCache {
         self.entries.contains_key(key)
     }
 
+    /// Whether `key` is resident with at least one live pin.
+    pub fn is_pinned(&self, key: &ColumnKey) -> bool {
+        self.entries.get(key).map(|e| e.pins > 0).unwrap_or(false)
+    }
+
+    /// Bytes held by pinned entries (not evictable).
+    pub fn pinned_bytes(&self) -> u64 {
+        self.entries.values().filter(|e| e.pins > 0).map(|e| e.bytes).sum()
+    }
+
     /// Record one access on behalf of a copy-in decision. Returns `true`
     /// on a hit (column resident, copy-in skippable). On a miss the
-    /// column is admitted — evicting LRU entries as needed — unless it is
-    /// larger than the whole budget.
+    /// column is admitted — evicting unpinned LRU entries as needed —
+    /// unless it cannot fit next to the currently pinned residents.
     pub fn access(&mut self, key: &ColumnKey, bytes: u64) -> bool {
         self.tick += 1;
         if let Some(entry) = self.entries.get_mut(key) {
@@ -115,32 +138,86 @@ impl ColumnCache {
         }
         self.stats.misses += 1;
         self.stats.miss_bytes += bytes;
-        if bytes <= self.capacity {
+        if bytes + self.pinned_bytes() <= self.capacity {
             self.evict_to_fit(bytes);
             self.used += bytes;
             self.entries
-                .insert(key.clone(), Entry { bytes, last_use: self.tick });
+                .insert(key.clone(), Entry { bytes, last_use: self.tick, pins: 0 });
         }
         false
     }
 
+    /// Add one pin to a resident entry. Returns `false` (no-op) when the
+    /// key is not resident — there is nothing to protect yet.
+    pub fn pin(&mut self, key: &ColumnKey) -> bool {
+        match self.entries.get_mut(key) {
+            Some(entry) => {
+                entry.pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one pin. A no-op on unknown or unpinned keys.
+    pub fn unpin(&mut self, key: &ColumnKey) {
+        if let Some(entry) = self.entries.get_mut(key) {
+            entry.pins = entry.pins.saturating_sub(1);
+        }
+    }
+
+    /// Insert `key` as a resident entry carrying `pins` pins — how a
+    /// completed pipeline stage publishes its intermediate. Unpinned LRU
+    /// entries are evicted best-effort; the insert itself never fails
+    /// (pinned residency is a scheduler promise, see the module docs), so
+    /// `used` may transiently exceed the budget.
+    pub fn insert_pinned(&mut self, key: &ColumnKey, bytes: u64, pins: u32) {
+        self.tick += 1;
+        if let Some(entry) = self.entries.get_mut(key) {
+            entry.pins += pins;
+            entry.last_use = self.tick;
+            return;
+        }
+        self.evict_to_fit(bytes);
+        self.used += bytes;
+        self.entries
+            .insert(key.clone(), Entry { bytes, last_use: self.tick, pins });
+    }
+
+    /// Drop one entry (pinned or not), freeing its budget. Returns
+    /// whether it was resident — how transient pipeline intermediates are
+    /// released after their last consumer.
+    pub fn remove(&mut self, key: &ColumnKey) -> bool {
+        match self.entries.remove(key) {
+            Some(entry) => {
+                self.used -= entry.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
     fn evict_to_fit(&mut self, incoming: u64) {
         while self.used + incoming > self.capacity {
-            // Least-recently-used entry; ties (impossible with a monotone
-            // tick) would break deterministically on key order.
+            // Least-recently-used *unpinned* entry; ties (impossible with
+            // a monotone tick) would break deterministically on key order.
             let victim = self
                 .entries
                 .iter()
+                .filter(|(_, e)| e.pins == 0)
                 .min_by_key(|(key, e)| (e.last_use, (*key).clone()))
-                .map(|(key, _)| key.clone())
-                .expect("over budget with no entries");
+                .map(|(key, _)| key.clone());
+            let Some(victim) = victim else {
+                return; // everything left is pinned
+            };
             let entry = self.entries.remove(&victim).unwrap();
             self.used -= entry.bytes;
             self.stats.evictions += 1;
         }
     }
 
-    /// Drop all entries (counters are kept).
+    /// Drop all entries (counters are kept). Pins do not survive a flush:
+    /// this is the whole-card reset path.
     pub fn flush(&mut self) {
         self.entries.clear();
         self.used = 0;
@@ -190,6 +267,59 @@ mod tests {
         c.access(&key("small"), 50);
         assert!(!c.access(&key("huge"), 101));
         assert!(c.contains(&key("small")));
+    }
+
+    #[test]
+    fn pinned_entries_survive_capacity_pressure() {
+        let mut c = ColumnCache::new(1000);
+        c.access(&key("queued"), 400);
+        assert!(c.pin(&key("queued")), "resident key must accept a pin");
+        // Fill well past capacity: LRU would evict "queued" first, but the
+        // pin protects it and the churn falls on the other entries.
+        for i in 0..8 {
+            c.access(&ColumnKey::new("t", format!("filler{i}")), 400);
+        }
+        assert!(c.contains(&key("queued")), "pinned key must not be evicted");
+        assert!(c.access(&key("queued"), 400), "and must still hit");
+        // Unpinned, it becomes a normal LRU citizen again.
+        c.unpin(&key("queued"));
+        c.access(&ColumnKey::new("t", "a"), 400);
+        c.access(&ColumnKey::new("t", "b"), 400);
+        c.access(&ColumnKey::new("t", "c"), 400);
+        assert!(!c.contains(&key("queued")), "unpinned key is evictable again");
+    }
+
+    #[test]
+    fn pins_never_block_admission_of_pinned_inserts() {
+        let mut c = ColumnCache::new(1000);
+        c.access(&key("a"), 600);
+        c.pin(&key("a"));
+        // A miss that cannot fit next to the pinned bytes is not admitted
+        // (and must not evict the pinned entry).
+        assert!(!c.access(&key("big"), 500));
+        assert!(!c.contains(&key("big")));
+        assert!(c.contains(&key("a")));
+        // But a pinned insert (scheduler promise) always lands, even past
+        // the budget.
+        c.insert_pinned(&key("intermediate"), 600, 2);
+        assert!(c.contains(&key("intermediate")));
+        assert!(c.used() > c.capacity(), "pins may transiently overflow");
+        // Two consumers release it; removal frees the budget.
+        c.unpin(&key("intermediate"));
+        assert!(c.is_pinned(&key("intermediate")));
+        c.unpin(&key("intermediate"));
+        assert!(!c.is_pinned(&key("intermediate")));
+        assert!(c.remove(&key("intermediate")));
+        assert_eq!(c.used(), 600);
+    }
+
+    #[test]
+    fn pin_on_absent_key_is_a_noop() {
+        let mut c = ColumnCache::new(100);
+        assert!(!c.pin(&key("ghost")));
+        c.unpin(&key("ghost"));
+        assert!(!c.remove(&key("ghost")));
+        assert_eq!(c.used(), 0);
     }
 
     #[test]

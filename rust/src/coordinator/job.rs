@@ -35,6 +35,73 @@ pub struct InputColumn {
     pub bytes: u64,
 }
 
+/// How a dependent job's payload slot is derived from upstream outputs —
+/// the dependency edges of a pipeline DAG. Evaluated by the coordinator
+/// when every referenced parent has completed; the derived column never
+/// crosses the host link (the parent's output is already HBM-resident).
+#[derive(Debug, Clone)]
+pub enum DepExpr {
+    /// A completed selection parent's candidate list, as a u32 column.
+    Candidates(usize),
+    /// One side of a completed join parent's `(s_pos, l_index)` pairs.
+    JoinSide { parent: usize, left: bool },
+    /// A host base column riding along for on-card gathers. Keyed columns
+    /// go through the resident cache like any direct input; only misses
+    /// are charged to the dependent job's copy-in.
+    Column { data: Vec<u32>, key: Option<ColumnKey> },
+    /// Positional gather: `column[positions[i]]` for each position — how
+    /// `Project` chains lower onto the card.
+    Gather { column: Box<DepExpr>, positions: Box<DepExpr> },
+}
+
+impl DepExpr {
+    /// Parent job ids this expression reads (possibly with duplicates).
+    pub fn parents(&self, out: &mut Vec<usize>) {
+        match self {
+            DepExpr::Candidates(p) => out.push(*p),
+            DepExpr::JoinSide { parent, .. } => out.push(*parent),
+            DepExpr::Column { .. } => {}
+            DepExpr::Gather { column, positions } => {
+                column.parents(out);
+                positions.parents(out);
+            }
+        }
+    }
+
+    /// Cache keys of base columns this expression gathers from — the
+    /// residents the scheduler pins while the dependent job waits.
+    pub fn column_keys<'a>(&'a self, out: &mut Vec<&'a ColumnKey>) {
+        match self {
+            DepExpr::Column { key: Some(k), .. } => out.push(k),
+            DepExpr::Column { key: None, .. } => {}
+            DepExpr::Candidates(_) | DepExpr::JoinSide { .. } => {}
+            DepExpr::Gather { column, positions } => {
+                column.column_keys(out);
+                positions.column_keys(out);
+            }
+        }
+    }
+}
+
+/// A unique build side needs no collision handling — the choice the DBMS
+/// makes when picking the join bitstream variant. Shared by the request
+/// builder (host build sides, at submission) and the scheduler
+/// (dependency-fed build sides, re-derived at install when the concrete
+/// column exists).
+pub(crate) fn build_side_is_unique(s: &[u32]) -> bool {
+    let mut sorted = s.to_vec();
+    sorted.sort_unstable();
+    sorted.windows(2).all(|w| w[0] != w[1])
+}
+
+/// One dependency-fed payload slot of a [`JobSpec`] (selection: slot 0 is
+/// the data column; join: slot 0 the build side, slot 1 the probe side).
+#[derive(Debug, Clone)]
+pub struct DepInput {
+    pub slot: usize,
+    pub expr: DepExpr,
+}
+
 /// Payload of one query job. The coordinator owns the host data for the
 /// lifetime of the job (clients hand it over on submit).
 #[derive(Debug, Clone)]
@@ -99,6 +166,21 @@ impl JobKind {
         }
     }
 
+    /// Install a derived u32 column into payload slot `slot` (the
+    /// dependency-resolution write). Panics on SGD jobs — grids cannot be
+    /// dependency-fed — and on out-of-range slots.
+    pub(crate) fn install_slot(&mut self, slot: usize, column: Vec<u32>) {
+        match (self, slot) {
+            (JobKind::Selection { data, .. }, 0) => *data = column,
+            (JobKind::Join { s, .. }, 0) => *s = column,
+            (JobKind::Join { l, .. }, 1) => *l = column,
+            (kind, slot) => panic!(
+                "job kind {} has no dependency-feedable slot {slot}",
+                kind.name()
+            ),
+        }
+    }
+
     fn default_inputs(&self) -> Vec<InputColumn> {
         match self {
             JobKind::Selection { data, .. } => vec![InputColumn {
@@ -128,12 +210,22 @@ pub struct JobSpec {
     pub inputs: Vec<InputColumn>,
     /// Cap on compute engines this job may occupy.
     pub max_engines: usize,
+    /// Dependency-fed payload slots. A job with deps is *gated*: it is
+    /// never dispatched until every referenced parent job has completed,
+    /// at which point the coordinator evaluates each expression against
+    /// the parents' (HBM-resident, pinned) outputs and installs the
+    /// derived columns into the payload. Every referenced parent must
+    /// still be in the coordinator's queue when this spec is submitted.
+    /// A dependency-fed join *build* side re-derives `handle_collisions`
+    /// at install time from the concrete column (it was unknowable at
+    /// submission).
+    pub deps: Vec<DepInput>,
 }
 
 impl JobSpec {
     pub fn new(kind: JobKind) -> Self {
         let inputs = kind.default_inputs();
-        Self { client: 0, kind, inputs, max_engines: ENGINE_PORTS }
+        Self { client: 0, kind, inputs, max_engines: ENGINE_PORTS, deps: Vec::new() }
     }
 
     /// Attach cache keys to the inputs, in payload order. Shorter lists
@@ -153,6 +245,23 @@ impl JobSpec {
     pub fn with_max_engines(mut self, max_engines: usize) -> Self {
         self.max_engines = max_engines;
         self
+    }
+
+    /// Declare dependency-fed payload slots (see [`JobSpec::deps`]).
+    pub fn with_deps(mut self, deps: Vec<DepInput>) -> Self {
+        self.deps = deps;
+        self
+    }
+
+    /// Parent job ids referenced by this spec's deps, deduplicated.
+    pub fn parent_ids(&self) -> Vec<usize> {
+        let mut ids = Vec::new();
+        for dep in &self.deps {
+            dep.expr.parents(&mut ids);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        ids
     }
 }
 
@@ -196,6 +305,18 @@ impl JobOutput {
             JobOutput::Sgd(_) => "sgd",
         }
     }
+
+    /// Size of the output payload when resident in HBM — what a pinned
+    /// transient cache entry for this intermediate is charged.
+    pub fn byte_size(&self) -> u64 {
+        match self {
+            JobOutput::Selection(v) => (v.len() * 4) as u64,
+            JobOutput::Join(v) => (v.len() * 8) as u64,
+            JobOutput::Sgd(models) => {
+                models.iter().map(|m| (m.len() * 4) as u64).sum()
+            }
+        }
+    }
 }
 
 /// Per-job accounting the coordinator publishes from [`stats`].
@@ -212,6 +333,10 @@ pub struct JobRecord {
     pub finish_time: f64,
     /// Time attributed to this job's host→HBM copies.
     pub copy_in: f64,
+    /// Host bytes this job actually moved over the link (cache hits and
+    /// dependency-fed intermediates move nothing) — the per-stage signal
+    /// figure drivers compare against the operator-at-a-time path.
+    pub copy_in_bytes: u64,
     /// Time this job's engines were running (sum over its rounds).
     pub exec: f64,
     pub copy_out: f64,
@@ -259,6 +384,45 @@ mod tests {
         assert!(spec.inputs[1].key.is_none());
         assert_eq!((spec.client, spec.max_engines), (7, 3));
         assert_eq!(spec.kind.ports_per_engine(), 2);
+    }
+
+    #[test]
+    fn dep_exprs_report_their_parents() {
+        let expr = DepExpr::Gather {
+            column: Box::new(DepExpr::Column { data: vec![1, 2, 3], key: None }),
+            positions: Box::new(DepExpr::JoinSide { parent: 4, left: false }),
+        };
+        let spec = JobSpec::new(JobKind::Selection { data: Vec::new(), lo: 0, hi: 1 })
+            .with_deps(vec![
+                DepInput { slot: 0, expr },
+                DepInput { slot: 0, expr: DepExpr::Candidates(4) },
+            ]);
+        assert_eq!(spec.parent_ids(), vec![4], "duplicates collapse");
+        assert_eq!(spec.deps.len(), 2);
+    }
+
+    #[test]
+    fn install_slot_reaches_every_feedable_slot() {
+        let mut sel = JobKind::Selection { data: Vec::new(), lo: 0, hi: 9 };
+        sel.install_slot(0, vec![7, 8]);
+        assert!(matches!(sel, JobKind::Selection { ref data, .. } if data == &[7, 8]));
+        let mut join = JobKind::Join { s: Vec::new(), l: Vec::new(), handle_collisions: true };
+        join.install_slot(0, vec![1]);
+        join.install_slot(1, vec![2, 3]);
+        match join {
+            JobKind::Join { ref s, ref l, .. } => {
+                assert_eq!(s, &[1]);
+                assert_eq!(l, &[2, 3]);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn output_byte_sizes() {
+        assert_eq!(JobOutput::Selection(vec![1, 2, 3]).byte_size(), 12);
+        assert_eq!(JobOutput::Join(vec![(1, 2)]).byte_size(), 8);
+        assert_eq!(JobOutput::Sgd(vec![vec![0.0; 4], vec![0.0; 2]]).byte_size(), 24);
     }
 
     #[test]

@@ -11,23 +11,32 @@
 //!
 //! * [`job`] — the submission/result model: [`JobSpec`] payloads
 //!   (selection / join / SGD), `(table, column)` cache identities
-//!   ([`ColumnKey`]), and per-job accounting ([`JobRecord`]);
+//!   ([`ColumnKey`]), dependency edges ([`DepInput`]/[`DepExpr`]: a
+//!   spec's payload slot derived from earlier jobs' outputs), and
+//!   per-job accounting ([`JobRecord`], including per-stage
+//!   `copy_in_bytes`);
 //! * [`policy`] — pluggable engine-slot allocation ([`Policy::Fifo`],
 //!   [`Policy::FairShare`], [`Policy::BandwidthAware`]): which queued
 //!   jobs co-run in a round and how the 14 engine ports split between
 //!   them — the channel/port allocation decision that related work
 //!   (Wang et al., Choi et al.) shows dominates delivered HBM bandwidth;
 //! * [`cache`] — the HBM-resident column cache with LRU eviction over a
-//!   byte budget: requests name inputs with `(table, column)` keys and
-//!   repeat queries skip OpenCAPI copy-in per column (residency is
-//!   per-request — there is no global "already resident" switch);
+//!   byte budget and a pin API: requests name inputs with
+//!   `(table, column)` keys and repeat queries skip OpenCAPI copy-in per
+//!   column (residency is per-request — there is no global "already
+//!   resident" switch); pinned entries are never evicted, which protects
+//!   columns promised to queued jobs and the transient intermediates of
+//!   pipeline DAGs ([`intermediate_key`]) until their last consumer;
 //! * [`scheduler`] — the [`Coordinator`] itself: owns `HbmMemory`,
 //!   `Shim`, `ControlUnit` and the host link, runs each round's engines
 //!   under one fluid simulation so co-scheduled jobs contend for
 //!   crossbar bandwidth, and publishes per-job latency/throughput
 //!   statistics. Rounds advance either in bulk ([`Coordinator::run`]) or
 //!   one at a time ([`Coordinator::step`] + [`Coordinator::take_result`])
-//!   — the primitive behind the public async `JobHandle`;
+//!   — the primitive behind the public async `JobHandle`. A round only
+//!   dispatches jobs whose dependency parents completed; a completed
+//!   parent with dependents publishes its output as a pinned transient
+//!   cache entry, so dependent stages skip copy-in entirely;
 //! * [`serve`] — the `hbmctl serve` replay harness: a deterministic
 //!   mixed workload from N simulated clients, per-policy comparison
 //!   tables and the `BENCH_coordinator.json` perf artifact.
@@ -37,7 +46,9 @@
 //! a [`JobSpec`] on its private [`Coordinator`] and returns a
 //! `db::JobHandle` immediately, so DBMS clients keep several operators in
 //! flight while the coordinator's rounds overlap one job's copy-in with
-//! another's execution.
+//! another's execution — and `db::FpgaAccelerator::submit_plan` lowers a
+//! whole `db::PipelineRequest` into a dependency-linked set of
+//! [`JobSpec`]s whose intermediates stay on the card.
 
 pub mod cache;
 pub mod job;
@@ -46,9 +57,12 @@ pub mod scheduler;
 pub mod serve;
 
 pub use cache::{CacheStats, ColumnCache, DEFAULT_CACHE_BYTES};
-pub use job::{ColumnKey, InputColumn, JobKind, JobOutput, JobRecord, JobSpec};
+pub use job::{
+    ColumnKey, DepExpr, DepInput, InputColumn, JobKind, JobOutput, JobRecord,
+    JobSpec,
+};
 pub use policy::{Policy, MAX_CORUNNERS};
-pub use scheduler::{Coordinator, CoordinatorStats};
+pub use scheduler::{intermediate_key, Coordinator, CoordinatorStats};
 pub use serve::{
     bench_json, mixed_workload, render_outcomes, run_policy, PolicyOutcome,
     ServeSpec,

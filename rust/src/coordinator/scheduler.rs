@@ -25,7 +25,7 @@
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::cache::{CacheStats, ColumnCache, DEFAULT_CACHE_BYTES};
-use super::job::{JobKind, JobOutput, JobRecord, JobSpec};
+use super::job::{ColumnKey, DepExpr, JobKind, JobOutput, JobRecord, JobSpec};
 use super::policy::{plan_round, Policy, QueuedJob};
 use crate::engines::control::{ControlUnit, Csr};
 use crate::engines::join::{compact_matches, JoinEngine, JoinJob};
@@ -47,6 +47,16 @@ struct Pending {
     started: bool,
     /// Copy-in is charged once per job, on its first round.
     copied_in: bool,
+    /// Parent job ids that have not completed yet. A job is dispatchable
+    /// only when this is empty *and* its dep expressions have been
+    /// installed (`spec.deps` drained).
+    unresolved: BTreeSet<usize>,
+    /// Link bytes owed by dependency resolution (gather-source columns
+    /// that missed the cache), charged with the job's first-round copy-in.
+    deferred_copy_bytes: u64,
+    /// Keys pinned at submission because this job depends on them;
+    /// released once the job's copy-in is accounted.
+    pinned_keys: Vec<ColumnKey>,
 }
 
 /// Per-kind handles the round keeps between building engines and
@@ -119,6 +129,18 @@ impl CoordinatorStats {
     pub fn total_copy_in(&self) -> f64 {
         self.records.iter().map(|r| r.copy_in).sum()
     }
+
+    /// Host bytes actually moved over the link by all completed jobs.
+    pub fn total_copy_in_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.copy_in_bytes).sum()
+    }
+}
+
+/// Cache identity of a completed job's HBM-resident output while
+/// dependent jobs consume it. The `$` prefix keeps the transient
+/// namespace disjoint from real `(table, column)` identities.
+pub fn intermediate_key(job_id: usize) -> ColumnKey {
+    ColumnKey::new("$intermediate", format!("job{job_id}"))
 }
 
 /// The multi-query scheduler that owns the simulated card.
@@ -144,6 +166,12 @@ pub struct Coordinator {
     ///
     /// [`abandon`]: Coordinator::abandon
     abandoned: BTreeSet<usize>,
+    /// Completed parents' outputs retained (HBM-resident, pinned) until
+    /// every dependent job has consumed them, with the remaining consumer
+    /// count.
+    dep_outputs: BTreeMap<usize, JobOutput>,
+    /// Remaining dependent jobs per parent id (registered at submission).
+    dependent_refs: BTreeMap<usize, u32>,
     hbm_bytes: u64,
 }
 
@@ -164,6 +192,8 @@ impl Coordinator {
             records: Vec::new(),
             finished: BTreeMap::new(),
             abandoned: BTreeSet::new(),
+            dep_outputs: BTreeMap::new(),
+            dependent_refs: BTreeMap::new(),
             hbm_bytes: 0,
         }
     }
@@ -221,10 +251,50 @@ impl Coordinator {
 
     /// Enqueue a job; returns its id. Work happens in [`run`].
     ///
+    /// A spec with [`deps`](JobSpec::deps) is dependency-gated: it will
+    /// not be dispatched until every referenced parent job completed, and
+    /// its derived inputs then skip host copy-in (the parents' outputs
+    /// are HBM-resident). Every referenced parent must still be queued
+    /// when the child is submitted (submit whole DAGs topologically,
+    /// before driving any round), or this panics.
+    ///
+    /// Keys the spec's host inputs name are *pinned* if already resident,
+    /// so admissions from co-queued jobs cannot evict a column this job
+    /// was promised before it dispatches.
+    ///
     /// [`run`]: Coordinator::run
     pub fn submit(&mut self, spec: JobSpec) -> usize {
         let id = self.next_id;
         self.next_id += 1;
+        let parents = spec.parent_ids();
+        for &p in &parents {
+            assert!(
+                self.queue.iter().any(|q| q.id == p),
+                "job {id} depends on job {p}, which is not queued \
+                 (submit DAGs topologically before running rounds)"
+            );
+            *self.dependent_refs.entry(p).or_insert(0) += 1;
+        }
+        let mut pinned_keys = Vec::new();
+        for input in &spec.inputs {
+            if let Some(key) = &input.key {
+                if self.cache.pin(key) {
+                    pinned_keys.push(key.clone());
+                }
+            }
+        }
+        // Gather-source columns named inside dependency expressions are
+        // consumed at install time, possibly many rounds from now: pin
+        // them too, so co-queued admissions cannot evict them first.
+        let mut dep_keys = Vec::new();
+        for dep in &spec.deps {
+            dep.expr.column_keys(&mut dep_keys);
+        }
+        for key in dep_keys {
+            if self.cache.pin(key) {
+                pinned_keys.push(key.clone());
+            }
+        }
         let record = JobRecord {
             id,
             client: spec.client,
@@ -232,14 +302,24 @@ impl Coordinator {
             submit_time: self.clock,
             ..JobRecord::default()
         };
-        self.queue.push_back(Pending {
+        let mut pending = Pending {
             id,
             spec,
             record,
             sgd_models: Vec::new(),
             started: false,
             copied_in: false,
-        });
+            unresolved: parents.into_iter().collect(),
+            deferred_copy_bytes: 0,
+            pinned_keys,
+        };
+        // Deps that reference no parent jobs (pure column/gather
+        // expressions) are vacuously ready: install them now so the job
+        // is dispatchable immediately.
+        if pending.unresolved.is_empty() && !pending.spec.deps.is_empty() {
+            install_deps(&mut pending, &self.dep_outputs, &mut self.cache);
+        }
+        self.queue.push_back(pending);
         id
     }
 
@@ -272,12 +352,69 @@ impl Coordinator {
         }
         let finished = self.run_round();
         let ids: Vec<usize> = finished.iter().map(|(id, _)| *id).collect();
+        // Publish the intermediates dependent jobs are waiting for (as
+        // pinned transient cache entries), then unblock those children —
+        // before abandonment can discard an output a child still needs.
+        for (id, output) in &finished {
+            if let Some(&refs) = self.dependent_refs.get(id) {
+                self.cache
+                    .insert_pinned(&intermediate_key(*id), output.byte_size(), refs);
+                self.dep_outputs.insert(*id, output.clone());
+            }
+        }
+        self.resolve_ready_children(&ids);
         for (id, output) in finished {
             if !self.abandoned.remove(&id) {
                 self.finished.insert(id, output);
             }
         }
         ids
+    }
+
+    /// Strike `completed` off every queued job's unresolved-parent set;
+    /// jobs whose last parent just completed get their dependency
+    /// expressions evaluated against the published (HBM-resident) outputs
+    /// and the derived columns installed into their payloads. The derived
+    /// columns cross no host link; only gather-source base columns that
+    /// miss the resident cache are charged, deferred to the job's
+    /// first-round copy-in.
+    fn resolve_ready_children(&mut self, completed: &[usize]) {
+        if completed.is_empty() {
+            return;
+        }
+        for pending in self.queue.iter_mut() {
+            for id in completed {
+                pending.unresolved.remove(id);
+            }
+            if !pending.unresolved.is_empty() || pending.spec.deps.is_empty() {
+                continue;
+            }
+            let parents =
+                install_deps(pending, &self.dep_outputs, &mut self.cache);
+            // Consume one reference per unique parent: the intermediate
+            // counts as a resident hit for this job, loses one pin, and
+            // is dropped from HBM after its last consumer.
+            for p in parents {
+                let key = intermediate_key(p);
+                if self.cache.access(&key, 0) {
+                    pending.record.cache_hits += 1;
+                }
+                self.cache.unpin(&key);
+                let remaining = {
+                    let refs = self
+                        .dependent_refs
+                        .get_mut(&p)
+                        .expect("consumed parent must be registered");
+                    *refs -= 1;
+                    *refs
+                };
+                if remaining == 0 {
+                    self.dependent_refs.remove(&p);
+                    self.dep_outputs.remove(&p);
+                    self.cache.remove(&key);
+                }
+            }
+        }
     }
 
     /// Declare that nobody will claim `id`'s output (its handle was
@@ -355,11 +492,32 @@ impl Coordinator {
     fn run_round(&mut self) -> Vec<(usize, JobOutput)> {
         let round_start = self.clock;
 
-        // 1. Policy decision over the current queue.
-        let views: Vec<QueuedJob> = self.queue.iter().map(queued_view).collect();
-        let admissions = plan_round(self.policy, &views);
+        // 1. Policy decision over the *ready* queue: dependency-gated
+        //    jobs are invisible to the policy until their parents
+        //    completed and their inputs were installed.
+        let ready: Vec<usize> = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.unresolved.is_empty() && p.spec.deps.is_empty())
+            .map(|(i, _)| i)
+            .collect();
+        assert!(
+            !ready.is_empty(),
+            "coordinator stalled: every queued job is dependency-gated \
+             (a parent id was wrong or a DAG was not submitted topologically)"
+        );
+        let views: Vec<QueuedJob> =
+            ready.iter().map(|&i| queued_view(&self.queue[i])).collect();
+        let mut admissions = plan_round(self.policy, &views);
+        for adm in &mut admissions {
+            adm.queue_idx = ready[adm.queue_idx];
+        }
 
-        // 2. Copy-in accounting (shared link) + cache lookups.
+        // 2. Copy-in accounting (shared link) + cache lookups. Zero-byte
+        //    inputs (dependency-fed slots: their columns are already on
+        //    the card) move nothing; deferred gather-source bytes from
+        //    dependency resolution are charged here.
         let mut copy_bytes = vec![0u64; admissions.len()];
         for (ai, adm) in admissions.iter().enumerate() {
             let pending = &mut self.queue[adm.queue_idx];
@@ -368,6 +526,9 @@ impl Coordinator {
             }
             pending.copied_in = true;
             for input in &pending.spec.inputs {
+                if input.bytes == 0 {
+                    continue;
+                }
                 match &input.key {
                     Some(key) => {
                         if self.cache.access(key, input.bytes) {
@@ -379,6 +540,14 @@ impl Coordinator {
                     }
                     None => copy_bytes[ai] += input.bytes,
                 }
+            }
+            copy_bytes[ai] += pending.deferred_copy_bytes;
+            pending.deferred_copy_bytes = 0;
+            pending.record.copy_in_bytes += copy_bytes[ai];
+            // The columns this job pinned at submission are now placed
+            // (or re-validated) for it; release the promises.
+            for key in pending.pinned_keys.drain(..) {
+                self.cache.unpin(&key);
             }
         }
         let n_copying = copy_bytes.iter().filter(|&&b| b > 0).count();
@@ -487,6 +656,106 @@ impl Coordinator {
         self.clock = round_start + copy_in_phase + report.makespan + copy_out_phase;
         self.queue.retain(|p| !completed_ids.contains(&p.id));
         finished
+    }
+}
+
+/// Evaluate and install a ready job's dependency expressions, draining
+/// `spec.deps`. Returns the unique parent ids the expressions read (the
+/// caller consumes one intermediate reference per parent; empty for pure
+/// column/gather expressions).
+fn install_deps(
+    pending: &mut Pending,
+    dep_outputs: &BTreeMap<usize, JobOutput>,
+    cache: &mut ColumnCache,
+) -> Vec<usize> {
+    let deps = std::mem::take(&mut pending.spec.deps);
+    let mut parents = Vec::new();
+    for dep in &deps {
+        dep.expr.parents(&mut parents);
+    }
+    parents.sort_unstable();
+    parents.dedup();
+    for dep in deps {
+        let column = eval_dep_expr(
+            dep.expr,
+            dep_outputs,
+            cache,
+            &mut pending.record,
+            &mut pending.deferred_copy_bytes,
+        );
+        let slot = dep.slot;
+        pending.spec.kind.install_slot(slot, column);
+        // A dependency-fed build side's collision handling was unknowable
+        // at submission; re-derive the bitstream variant now that the
+        // concrete column exists (candidate lists, for instance, are
+        // always unique and get the II=1 variant).
+        if slot == 0 {
+            if let JobKind::Join { s, handle_collisions, .. } =
+                &mut pending.spec.kind
+            {
+                *handle_collisions = !super::job::build_side_is_unique(s);
+            }
+        }
+    }
+    parents
+}
+
+/// Evaluate one dependency expression against the published parent
+/// outputs. Derived data never crosses the host link; only gather-source
+/// base columns that miss the resident cache add to `deferred` (charged
+/// with the job's first-round copy-in). Panics on expression/output kind
+/// mismatches and out-of-range gathers — the pipeline layer validates
+/// plan shapes before submission, exactly like the CPU executor's
+/// positional gather.
+fn eval_dep_expr(
+    expr: DepExpr,
+    outputs: &BTreeMap<usize, JobOutput>,
+    cache: &mut ColumnCache,
+    record: &mut JobRecord,
+    deferred: &mut u64,
+) -> Vec<u32> {
+    match expr {
+        DepExpr::Candidates(parent) => match outputs.get(&parent) {
+            Some(JobOutput::Selection(v)) => v.clone(),
+            Some(other) => panic!(
+                "dep expression expected selection output of job {parent}, got {}",
+                other.name()
+            ),
+            None => panic!("job {parent} has no published output"),
+        },
+        DepExpr::JoinSide { parent, left } => match outputs.get(&parent) {
+            Some(JobOutput::Join(pairs)) => pairs
+                .iter()
+                .map(|&(l, r)| if left { l } else { r })
+                .collect(),
+            Some(other) => panic!(
+                "dep expression expected join output of job {parent}, got {}",
+                other.name()
+            ),
+            None => panic!("job {parent} has no published output"),
+        },
+        DepExpr::Column { data, key } => {
+            let bytes = (data.len() * 4) as u64;
+            if bytes > 0 {
+                match &key {
+                    Some(key) => {
+                        if cache.access(key, bytes) {
+                            record.cache_hits += 1;
+                        } else {
+                            record.cache_misses += 1;
+                            *deferred += bytes;
+                        }
+                    }
+                    None => *deferred += bytes,
+                }
+            }
+            data
+        }
+        DepExpr::Gather { column, positions } => {
+            let col = eval_dep_expr(*column, outputs, cache, record, deferred);
+            let pos = eval_dep_expr(*positions, outputs, cache, record, deferred);
+            pos.iter().map(|&p| col[p as usize]).collect()
+        }
     }
 }
 
@@ -915,6 +1184,269 @@ mod tests {
 
         // Both jobs really ran and were recorded.
         assert_eq!(coord.stats().completed(), 2);
+    }
+
+    #[test]
+    fn dependency_gated_child_waits_and_skips_copy_in() {
+        use crate::coordinator::job::{DepExpr, DepInput};
+        let w = SelectionWorkload::uniform(50_000, 0.3, 3);
+        let mut coord = Coordinator::new(cfg());
+        let parent = coord.submit(selection_spec(&w));
+        // Child selects over the parent's candidate list (positions),
+        // dependency-fed: no host bytes cross for its input.
+        let child = coord.submit(
+            JobSpec::new(JobKind::Selection { data: Vec::new(), lo: 0, hi: 20_000 })
+                .with_deps(vec![DepInput {
+                    slot: 0,
+                    expr: DepExpr::Candidates(parent),
+                }]),
+        );
+        let outputs = coord.run();
+        assert_eq!(outputs.len(), 2);
+
+        let mut parent_cands = cpu::selection::range_select(&w.data, w.lo, w.hi, 4);
+        parent_cands.sort_unstable();
+        let mut want = cpu::selection::range_select(&parent_cands, 0, 20_000, 4);
+        want.sort_unstable();
+        let child_out = outputs
+            .iter()
+            .find(|(id, _)| *id == child)
+            .unwrap()
+            .1
+            .clone()
+            .expect_selection();
+        assert_eq!(child_out, want, "dep-fed selection diverged from CPU");
+
+        let stats = coord.stats();
+        let rec = |id: usize| stats.records.iter().find(|r| r.id == id).unwrap();
+        assert!(rec(parent).copy_in_bytes > 0, "parent pays its copy-in");
+        assert_eq!(rec(child).copy_in_bytes, 0, "dep-fed input moves no host bytes");
+        assert_eq!(rec(child).copy_in, 0.0);
+        assert!(rec(child).cache_hits >= 1, "the intermediate counts as resident");
+        assert!(
+            rec(child).start_time >= rec(parent).finish_time - 1e-12,
+            "gated child must not dispatch before its parent completed"
+        );
+        // The transient intermediate was consumed and released.
+        assert!(!coord.cache().contains(&intermediate_key(parent)));
+    }
+
+    #[test]
+    fn dep_gather_source_hits_resident_cache() {
+        use crate::coordinator::job::{DepExpr, DepInput};
+        let w = SelectionWorkload::uniform(40_000, 0.2, 21);
+        let key = ColumnKey::new("t", "v");
+        let mut coord = Coordinator::new(cfg());
+        let parent = coord
+            .submit(selection_spec(&w).with_keys(vec![Some(key.clone())]));
+        // Child join: host build side; probe side = the same base column
+        // gathered at the parent's candidates, entirely on the card.
+        let s: Vec<u32> = (0..512u32).collect();
+        let child = coord.submit(
+            JobSpec::new(JobKind::Join {
+                s: s.clone(),
+                l: Vec::new(),
+                handle_collisions: true,
+            })
+            .with_deps(vec![DepInput {
+                slot: 1,
+                expr: DepExpr::Gather {
+                    column: Box::new(DepExpr::Column {
+                        data: w.data.clone(),
+                        key: Some(key.clone()),
+                    }),
+                    positions: Box::new(DepExpr::Candidates(parent)),
+                },
+            }]),
+        );
+        let outputs = coord.run();
+        assert_eq!(outputs.len(), 2);
+
+        let mut cands = cpu::selection::range_select(&w.data, w.lo, w.hi, 4);
+        cands.sort_unstable();
+        let probe: Vec<u32> = cands.iter().map(|&p| w.data[p as usize]).collect();
+        let mut want = cpu::join::hash_join_positions(&s, &probe, 4);
+        want.sort_unstable();
+        let mut got = outputs
+            .iter()
+            .find(|(id, _)| *id == child)
+            .unwrap()
+            .1
+            .clone()
+            .expect_join();
+        got.sort_unstable();
+        assert_eq!(got, want, "dep-fed join diverged from CPU");
+
+        let stats = coord.stats();
+        let child_rec = stats.records.iter().find(|r| r.id == child).unwrap();
+        assert_eq!(
+            child_rec.copy_in_bytes,
+            (s.len() * 4) as u64,
+            "only the host build side crosses the link: the gather source \
+             was resident (parent copied it in under the same key)"
+        );
+        assert!(child_rec.cache_hits >= 2, "gather source + intermediate hits");
+    }
+
+    #[test]
+    fn multi_parent_intermediate_stays_pinned_until_last_parent() {
+        use crate::coordinator::job::{DepExpr, DepInput};
+        let w1 = SelectionWorkload::uniform(30_000, 0.2, 31);
+        let w2 = SelectionWorkload::uniform(30_000, 0.3, 32);
+        // FIFO completes one parent per round, so the child stays gated
+        // (and parent 1's intermediate pinned) across a full round.
+        let mut coord = Coordinator::new(cfg()).with_policy(Policy::Fifo);
+        let p1 = coord.submit(selection_spec(&w1));
+        let p2 = coord.submit(selection_spec(&w2));
+        let child = coord.submit(
+            JobSpec::new(JobKind::Join {
+                s: Vec::new(),
+                l: Vec::new(),
+                handle_collisions: true,
+            })
+            .with_deps(vec![
+                DepInput { slot: 0, expr: DepExpr::Candidates(p1) },
+                DepInput { slot: 1, expr: DepExpr::Candidates(p2) },
+            ]),
+        );
+        assert_eq!(coord.step(), vec![p1]);
+        let ikey = intermediate_key(p1);
+        assert!(coord.cache().contains(&ikey), "published for the gated child");
+        assert!(coord.cache().is_pinned(&ikey), "pinned while the child waits");
+
+        assert_eq!(coord.step(), vec![p2]);
+        assert!(
+            !coord.cache().contains(&ikey),
+            "consumed and released once the child resolved"
+        );
+        assert!(!coord.cache().contains(&intermediate_key(p2)));
+
+        assert_eq!(coord.step(), vec![child]);
+        let (out, rec) = coord.take_result(child).unwrap();
+        assert_eq!(rec.copy_in_bytes, 0, "both sides were dependency-fed");
+        let mut c1 = cpu::selection::range_select(&w1.data, w1.lo, w1.hi, 4);
+        c1.sort_unstable();
+        let mut c2 = cpu::selection::range_select(&w2.data, w2.lo, w2.hi, 4);
+        c2.sort_unstable();
+        let mut want = cpu::join::hash_join_positions(&c1, &c2, 4);
+        want.sort_unstable();
+        let mut got = out.expect_join();
+        got.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dep_gather_source_keys_are_pinned_while_child_waits() {
+        use crate::coordinator::job::{DepExpr, DepInput};
+        // A gated child's gather source (keyed base column) must survive
+        // cache churn between its submission and its install.
+        let w = SelectionWorkload::uniform(80_000, 0.1, 51); // 320 KB
+        let key = ColumnKey::new("t", "v");
+        let mut coord = Coordinator::new(cfg())
+            .with_policy(Policy::Fifo)
+            .with_cache_bytes(512 * 1024);
+        // Warm the source column.
+        coord.run_single(
+            selection_spec(&w).with_keys(vec![Some(key.clone())]),
+        );
+        // A filler that would evict it under plain LRU, dispatched first.
+        let filler = SelectionWorkload::uniform(80_000, 0.1, 52);
+        coord.submit(
+            selection_spec(&filler)
+                .with_keys(vec![Some(ColumnKey::new("fill", "f"))]),
+        );
+        let parent = coord.submit(JobSpec::new(JobKind::Selection {
+            data: (0..10_000u32).collect(),
+            lo: 0,
+            hi: 4_999,
+        }));
+        let s: Vec<u32> = (0..256u32).collect();
+        let child = coord.submit(
+            JobSpec::new(JobKind::Join {
+                s: s.clone(),
+                l: Vec::new(),
+                handle_collisions: true,
+            })
+            .with_deps(vec![DepInput {
+                slot: 1,
+                expr: DepExpr::Gather {
+                    column: Box::new(DepExpr::Column {
+                        data: w.data.clone(),
+                        key: Some(key.clone()),
+                    }),
+                    positions: Box::new(DepExpr::Candidates(parent)),
+                },
+            }]),
+        );
+        coord.run();
+        let stats = coord.stats();
+        let rec = stats.records.iter().find(|r| r.id == child).unwrap();
+        assert_eq!(
+            rec.copy_in_bytes,
+            (s.len() * 4) as u64,
+            "the pinned gather source must still be resident at install"
+        );
+    }
+
+    #[test]
+    fn parentless_dep_expressions_resolve_at_submit() {
+        use crate::coordinator::job::{DepExpr, DepInput};
+        // A dep expression that references no parent job is vacuously
+        // ready: it must install immediately, not stall the queue.
+        let mut coord = Coordinator::new(cfg());
+        let id = coord.submit(
+            JobSpec::new(JobKind::Selection { data: Vec::new(), lo: 2, hi: 3 })
+                .with_deps(vec![DepInput {
+                    slot: 0,
+                    expr: DepExpr::Column { data: vec![1, 2, 3, 4], key: None },
+                }]),
+        );
+        assert_eq!(coord.step(), vec![id]);
+        let (out, rec) = coord.take_result(id).unwrap();
+        assert_eq!(out.expect_selection(), vec![1, 2]);
+        assert_eq!(rec.copy_in_bytes, 16, "anonymous column still crosses");
+    }
+
+    #[test]
+    #[should_panic(expected = "not queued")]
+    fn dep_on_unqueued_parent_is_rejected_at_submit() {
+        use crate::coordinator::job::{DepExpr, DepInput};
+        let mut coord = Coordinator::new(cfg());
+        coord.submit(
+            JobSpec::new(JobKind::Selection { data: Vec::new(), lo: 0, hi: 1 })
+                .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(99) }]),
+        );
+    }
+
+    #[test]
+    fn pinned_submit_key_survives_cache_churn() {
+        // Regression (pre-pipeline bug surface): a queued job naming key K
+        // must still find K resident when it dispatches, even if other
+        // admissions would have evicted it under pure LRU.
+        let w = SelectionWorkload::uniform(80_000, 0.1, 41); // 320 KB
+        let key = ColumnKey::new("hot", "col");
+        let mut coord = Coordinator::new(cfg())
+            .with_policy(Policy::Fifo)
+            .with_cache_bytes(512 * 1024);
+        let spec = || selection_spec(&w).with_keys(vec![Some(key.clone())]);
+        let (_, first) = coord.run_single(spec());
+        assert_eq!(first.cache_misses, 1, "cold first touch");
+
+        // Fillers that would evict K under LRU, queued ahead of the
+        // second keyed job (FIFO dispatches them first).
+        for seed in 0..3u64 {
+            let f = SelectionWorkload::uniform(80_000, 0.1, 100 + seed);
+            coord.submit(
+                selection_spec(&f)
+                    .with_keys(vec![Some(ColumnKey::new("fill", format!("c{seed}")))]),
+            );
+        }
+        let keyed = coord.submit(spec());
+        coord.run();
+        let stats = coord.stats();
+        let rec = stats.records.iter().find(|r| r.id == keyed).unwrap();
+        assert_eq!(rec.cache_hits, 1, "pinned key must survive the churn");
+        assert_eq!(rec.copy_in, 0.0, "and its copy-in must be skipped");
     }
 
     #[test]

@@ -14,6 +14,15 @@ pub enum ColumnData {
 }
 
 impl ColumnData {
+    /// The element type's name, in the shared error vocabulary of the
+    /// executor and the pipeline lowering.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            ColumnData::U32(_) => "u32 column",
+            ColumnData::F32(_) => "f32 column",
+        }
+    }
+
     pub fn len(&self) -> usize {
         match self {
             ColumnData::U32(v) => v.len(),

@@ -1,14 +1,29 @@
-//! Operator-at-a-time plan executor with a small builder API.
+//! Plan executor: CPU operators, with accelerated plans routed through
+//! the card's pipeline API.
 //!
 //! MonetDB executes MAL plans one operator at a time, fully materializing
 //! each intermediate (the paper's §II notes column stores "materialize
 //! their intermediate results heavily" — a key reason memory bandwidth
-//! matters). The executor mirrors that: every step produces a concrete
-//! intermediate (candidate list, pair list, or column) and optionally
-//! dispatches to the FPGA accelerator hook instead of the CPU operator.
+//! matters). The CPU path of [`Executor::run`] mirrors that: every step
+//! produces a concrete intermediate (candidate list, pair list, or
+//! column).
+//!
+//! With an accelerator attached, `run` no longer walks the tree one
+//! blocking offload at a time: it lowers the whole plan into a
+//! [`PipelineRequest`](super::pipeline::PipelineRequest) and submits it
+//! through `FpgaAccelerator::submit_plan`, so dependent operators consume
+//! their parents' outputs directly from HBM instead of round-tripping
+//! through the host. The historical operator-at-a-time offload walk is
+//! kept behind [`Executor::operator_at_a_time`] — figure drivers use it
+//! to measure exactly the data movement the pipeline deletes.
+//!
+//! Errors (unknown tables/columns, producer/consumer type mismatches) are
+//! typed as [`ExecError`] on the library path; panicking conveniences
+//! (`Intermediate::expect_*`) remain for examples, benches and tests.
 
 use super::column::{Catalog, ColumnData};
 use super::ops::{self, AggKind, AggResult};
+use super::pipeline::{PipelineError, PipelineRequest};
 use super::request::OffloadRequest;
 use super::udf::FpgaAccelerator;
 use crate::coordinator::ColumnKey;
@@ -57,6 +72,56 @@ impl Plan {
     }
 }
 
+/// Why a plan failed to execute.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecError {
+    /// A scan names a table the catalog does not have.
+    UnknownTable(String),
+    /// A scan names a column its table does not have.
+    UnknownColumn { table: String, column: String },
+    /// An operator was fed the wrong kind of intermediate.
+    Type {
+        context: &'static str,
+        expected: &'static str,
+        got: &'static str,
+    },
+    /// The pipeline lowering rejected the plan (accelerated path only;
+    /// name/type errors are mapped onto the variants above).
+    Pipeline(PipelineError),
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::UnknownTable(t) => write!(f, "unknown table '{t}'"),
+            ExecError::UnknownColumn { table, column } => {
+                write!(f, "unknown column '{table}.{column}'")
+            }
+            ExecError::Type { context, expected, got } => {
+                write!(f, "{context}: expected {expected}, got {got}")
+            }
+            ExecError::Pipeline(e) => write!(f, "pipeline: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+impl From<PipelineError> for ExecError {
+    fn from(e: PipelineError) -> Self {
+        match e {
+            PipelineError::UnknownTable(t) => ExecError::UnknownTable(t),
+            PipelineError::UnknownColumn { table, column } => {
+                ExecError::UnknownColumn { table, column }
+            }
+            PipelineError::TypeMismatch { context, expected, got } => {
+                ExecError::Type { context, expected, got }
+            }
+            other => ExecError::Pipeline(other),
+        }
+    }
+}
+
 /// A materialized intermediate.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Intermediate {
@@ -67,6 +132,19 @@ pub enum Intermediate {
 }
 
 impl Intermediate {
+    /// The intermediate's kind, for error messages (same vocabulary the
+    /// pipeline lowering uses, so errors compare equal across paths).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Intermediate::Column(_) => "column",
+            Intermediate::Candidates(_) => "candidate list",
+            Intermediate::Pairs(_) => "join pairs",
+            Intermediate::Scalar(_) => "scalar",
+        }
+    }
+
+    /// Panicking convenience for examples/benches; the library path uses
+    /// the typed [`into_column`](Intermediate::into_column).
     pub fn expect_column(self) -> ColumnData {
         match self {
             Intermediate::Column(c) => c,
@@ -94,6 +172,49 @@ impl Intermediate {
             other => panic!("expected scalar, got {other:?}"),
         }
     }
+
+    /// Typed accessor: the column, or an [`ExecError::Type`] naming the
+    /// consuming operator.
+    pub fn into_column(self, context: &'static str) -> Result<ColumnData, ExecError> {
+        match self {
+            Intermediate::Column(c) => Ok(c),
+            other => Err(ExecError::Type {
+                context,
+                expected: "column",
+                got: other.kind_name(),
+            }),
+        }
+    }
+
+    /// Typed accessor: the candidate list, or an [`ExecError::Type`].
+    pub fn into_candidates(
+        self,
+        context: &'static str,
+    ) -> Result<Vec<u32>, ExecError> {
+        match self {
+            Intermediate::Candidates(c) => Ok(c),
+            other => Err(ExecError::Type {
+                context,
+                expected: "candidate list",
+                got: other.kind_name(),
+            }),
+        }
+    }
+
+    /// Typed accessor: the pair list, or an [`ExecError::Type`].
+    pub fn into_pairs(
+        self,
+        context: &'static str,
+    ) -> Result<Vec<(u32, u32)>, ExecError> {
+        match self {
+            Intermediate::Pairs(p) => Ok(p),
+            other => Err(ExecError::Type {
+                context,
+                expected: "join pairs",
+                got: other.kind_name(),
+            }),
+        }
+    }
 }
 
 /// The cache identity of a plan node, when it is a direct base-column
@@ -107,17 +228,23 @@ fn scan_key(plan: &Plan) -> Option<ColumnKey> {
     }
 }
 
-/// Executor: CPU operators by default; select/join optionally offloaded to
-/// the FPGA accelerator (the UDF path of doppioDB-style integration).
+/// Executor: CPU operators by default. With an accelerator attached,
+/// plans are lowered whole and submitted through the pipeline API
+/// (dependent operators keep their intermediates in HBM); the historical
+/// blocking per-operator offload walk remains available via
+/// [`operator_at_a_time`](Executor::operator_at_a_time).
 pub struct Executor<'a> {
     pub catalog: &'a Catalog,
     pub threads: usize,
     pub accelerator: Option<&'a mut FpgaAccelerator>,
+    /// Accelerated plans go through `submit_plan` (the default) instead
+    /// of one blocking offload per operator.
+    pipelined: bool,
 }
 
 impl<'a> Executor<'a> {
     pub fn cpu(catalog: &'a Catalog, threads: usize) -> Self {
-        Self { catalog, threads, accelerator: None }
+        Self { catalog, threads, accelerator: None, pipelined: true }
     }
 
     pub fn accelerated(
@@ -125,49 +252,88 @@ impl<'a> Executor<'a> {
         threads: usize,
         accelerator: &'a mut FpgaAccelerator,
     ) -> Self {
-        Self { catalog, threads, accelerator: Some(accelerator) }
+        Self { catalog, threads, accelerator: Some(accelerator), pipelined: true }
     }
 
-    pub fn run(&mut self, plan: &Plan) -> Intermediate {
+    /// Use the historical operator-at-a-time offload walk: one blocking
+    /// submission per select/join, every intermediate round-tripping
+    /// through the host. Kept for measuring what the pipeline saves.
+    pub fn operator_at_a_time(mut self) -> Self {
+        self.pipelined = false;
+        self
+    }
+
+    /// Execute `plan`, returning the root intermediate or a typed error.
+    pub fn run(&mut self, plan: &Plan) -> Result<Intermediate, ExecError> {
+        if self.pipelined && self.accelerator.is_some() {
+            let request = PipelineRequest::from_plan(plan, self.catalog)?;
+            let acc = self.accelerator.as_mut().expect("accelerator checked");
+            let mut handle = acc.try_submit_plan(request)?;
+            Ok(handle.wait())
+        } else {
+            self.run_walk(plan)
+        }
+    }
+
+    /// The materializing tree walk: CPU operators, or (without
+    /// `pipelined`) one blocking offload per select/join.
+    fn run_walk(&mut self, plan: &Plan) -> Result<Intermediate, ExecError> {
         match plan {
             Plan::ScanColumn { table, column } => {
                 let t = self
                     .catalog
                     .table(table)
-                    .unwrap_or_else(|| panic!("unknown table '{table}'"));
-                let c = t
-                    .column(column)
-                    .unwrap_or_else(|| panic!("unknown column '{table}.{column}'"));
-                Intermediate::Column(c.data.clone())
+                    .ok_or_else(|| ExecError::UnknownTable(table.clone()))?;
+                let c = t.column(column).ok_or_else(|| ExecError::UnknownColumn {
+                    table: table.clone(),
+                    column: column.clone(),
+                })?;
+                Ok(Intermediate::Column(c.data.clone()))
             }
             Plan::Select { input, lo, hi } => {
                 let key = scan_key(input);
-                let col = self.run(input).expect_column();
+                let col = self.run_walk(input)?.into_column("select input")?;
+                if col.as_u32().is_none() {
+                    return Err(ExecError::Type {
+                        context: "select input",
+                        expected: "u32 column",
+                        got: col.type_name(),
+                    });
+                }
                 let cands = match self.accelerator.as_mut() {
                     Some(acc) => {
                         let req = OffloadRequest::select(*lo, *hi)
-                            .on(col.as_u32().expect("u32"))
+                            .on(col.as_u32().expect("checked u32"))
                             .keyed(key);
                         acc.submit(req).wait_selection().0
                     }
                     None => ops::range_select(&col, *lo, *hi, self.threads),
                 };
-                Intermediate::Candidates(cands)
+                Ok(Intermediate::Candidates(cands))
             }
             Plan::Project { input, candidates } => {
-                let col = self.run(input).expect_column();
-                let cands = self.run(candidates).expect_candidates();
-                Intermediate::Column(ops::project(&col, &cands))
+                let col = self.run_walk(input)?.into_column("project input")?;
+                let cands =
+                    self.run_walk(candidates)?.into_candidates("project candidates")?;
+                Ok(Intermediate::Column(ops::project(&col, &cands)))
             }
             Plan::Join { left, right } => {
                 let (s_key, l_key) = (scan_key(left), scan_key(right));
-                let build = self.run(left).expect_column();
-                let probe = self.run(right).expect_column();
+                let build = self.run_walk(left)?.into_column("join build side")?;
+                let probe = self.run_walk(right)?.into_column("join probe side")?;
+                if build.as_u32().is_none() || probe.as_u32().is_none() {
+                    let bad = if build.as_u32().is_none() { &build } else { &probe };
+                    return Err(ExecError::Type {
+                        context: "join input",
+                        expected: "u32 column",
+                        got: bad.type_name(),
+                    });
+                }
                 let pairs = match self.accelerator.as_mut() {
                     Some(acc) => {
                         let req = OffloadRequest::join(
-                            build.as_u32().expect("u32"),
-                            probe.as_u32().expect("u32"),
+                            build.as_u32().expect("checked u32"),
+                            probe.as_u32().expect("checked u32"),
                         )
                         .keyed(s_key)
                         .probe_keyed(l_key);
@@ -175,20 +341,31 @@ impl<'a> Executor<'a> {
                     }
                     None => ops::hash_join(&build, &probe, self.threads),
                 };
-                Intermediate::Pairs(pairs)
+                Ok(Intermediate::Pairs(pairs))
             }
             Plan::JoinSide { join, left_side } => {
-                let pairs = self.run(join).expect_pairs();
-                Intermediate::Candidates(
+                let pairs = self.run_walk(join)?.into_pairs("join_side input")?;
+                Ok(Intermediate::Candidates(
                     pairs
                         .iter()
                         .map(|&(l, r)| if *left_side { l } else { r })
                         .collect(),
-                )
+                ))
             }
             Plan::Aggregate { input, kind } => {
-                let col = self.run(input).expect_column();
-                Intermediate::Scalar(ops::aggregate(&col, *kind))
+                let col = self.run_walk(input)?.into_column("aggregate input")?;
+                // Validated against the same table the pipeline lowering
+                // uses, so errors compare equal across paths.
+                if let Some(expected) = kind.expected_input() {
+                    if expected != col.type_name() {
+                        return Err(ExecError::Type {
+                            context: "aggregate kind",
+                            expected,
+                            got: col.type_name(),
+                        });
+                    }
+                }
+                Ok(Intermediate::Scalar(ops::aggregate(&col, *kind)))
             }
         }
     }
@@ -224,10 +401,11 @@ mod tests {
         let plan = Plan::scan("orders", "total").project(
             Plan::scan("orders", "okey").select(2, 4),
         );
-        let col = ex.run(&plan).expect_column();
+        let col = ex.run(&plan).unwrap().expect_column();
         assert_eq!(col, ColumnData::F32(vec![15.0, 25.0, 35.0]));
         let agg = ex
             .run(&plan.clone().aggregate(AggKind::SumF32))
+            .unwrap()
             .expect_scalar();
         assert_eq!(agg, AggResult::F64(75.0));
     }
@@ -239,12 +417,12 @@ mod tests {
         // customers ⋈ orders ON ckey = cust
         let join =
             Plan::scan("customers", "ckey").join(Plan::scan("orders", "cust"));
-        let pairs = ex.run(&join).expect_pairs();
+        let pairs = ex.run(&join).unwrap().expect_pairs();
         assert_eq!(pairs.len(), 5, "every order has a customer");
         // Project order totals of customer 20's orders.
         let plan = Plan::scan("orders", "total")
             .project(join.join_side(false));
-        let col = ex.run(&plan).expect_column();
+        let col = ex.run(&plan).unwrap().expect_column();
         assert_eq!(col.len(), 5);
     }
 
@@ -252,12 +430,12 @@ mod tests {
     fn accelerated_executor_reuses_resident_columns() {
         let cat = catalog();
         let mut acc = FpgaAccelerator::new(crate::hbm::HbmConfig::default());
-        // Same scan twice on one accelerator: the second offload must hit
+        // Same scan twice on one accelerator: the second pipeline must hit
         // the coordinator's column cache via the (table, column) key.
         let plan = Plan::scan("orders", "total")
             .project(Plan::scan("orders", "okey").select(2, 4));
-        let a = Executor::accelerated(&cat, 2, &mut acc).run(&plan);
-        let b = Executor::accelerated(&cat, 2, &mut acc).run(&plan);
+        let a = Executor::accelerated(&cat, 2, &mut acc).run(&plan).unwrap();
+        let b = Executor::accelerated(&cat, 2, &mut acc).run(&plan).unwrap();
         assert_eq!(a, b);
         let stats = acc.stats();
         assert_eq!(stats.completed(), 2);
@@ -265,10 +443,94 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn unknown_table_panics() {
+    fn pipelined_and_blocking_paths_agree() {
+        let cat = catalog();
+        let plan = Plan::scan("customers", "ckey")
+            .join(Plan::scan("orders", "cust"))
+            .join_side(true);
+        let cpu = Executor::cpu(&cat, 2).run(&plan).unwrap();
+        let mut acc_a = FpgaAccelerator::new(crate::hbm::HbmConfig::default());
+        let piped = Executor::accelerated(&cat, 2, &mut acc_a).run(&plan).unwrap();
+        let mut acc_b = FpgaAccelerator::new(crate::hbm::HbmConfig::default());
+        let blocking = Executor::accelerated(&cat, 2, &mut acc_b)
+            .operator_at_a_time()
+            .run(&plan)
+            .unwrap();
+        // Candidate order can differ between paths; compare as sets.
+        let norm = |i: Intermediate| {
+            let mut v = i.expect_candidates();
+            v.sort_unstable();
+            v
+        };
+        let want = norm(cpu);
+        assert_eq!(norm(piped), want);
+        assert_eq!(norm(blocking), want);
+    }
+
+    #[test]
+    fn unknown_names_are_typed_errors() {
         let cat = catalog();
         let mut ex = Executor::cpu(&cat, 1);
-        ex.run(&Plan::scan("nope", "x"));
+        assert_eq!(
+            ex.run(&Plan::scan("nope", "x")).unwrap_err(),
+            ExecError::UnknownTable("nope".into())
+        );
+        assert_eq!(
+            ex.run(&Plan::scan("orders", "missing")).unwrap_err(),
+            ExecError::UnknownColumn {
+                table: "orders".into(),
+                column: "missing".into()
+            }
+        );
+        // The accelerated (pipeline) path maps onto the same variants.
+        let mut acc = FpgaAccelerator::new(crate::hbm::HbmConfig::default());
+        assert_eq!(
+            Executor::accelerated(&cat, 1, &mut acc)
+                .run(&Plan::scan("nope", "x"))
+                .unwrap_err(),
+            ExecError::UnknownTable("nope".into())
+        );
+    }
+
+    #[test]
+    fn type_misuse_is_a_typed_error_not_a_panic() {
+        let cat = catalog();
+        let mut ex = Executor::cpu(&cat, 1);
+        // Selecting over an f32 column.
+        let err = ex
+            .run(&Plan::scan("orders", "total").select(1, 2))
+            .unwrap_err();
+        assert!(matches!(err, ExecError::Type { .. }), "{err}");
+        // Aggregating a candidate list.
+        let err = ex
+            .run(
+                &Plan::scan("orders", "okey")
+                    .select(1, 3)
+                    .aggregate(AggKind::Count),
+            )
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ExecError::Type {
+                context: "aggregate input",
+                expected: "column",
+                got: "candidate list"
+            }
+        );
+        // The pipelined path reports the identical payload for this plan.
+        let mut acc = FpgaAccelerator::new(crate::hbm::HbmConfig::default());
+        let piped_err = Executor::accelerated(&cat, 1, &mut acc)
+            .run(
+                &Plan::scan("orders", "okey")
+                    .select(1, 3)
+                    .aggregate(AggKind::Count),
+            )
+            .unwrap_err();
+        assert_eq!(piped_err, err, "error payloads must match across paths");
+        // Wrong aggregate kind for the element type.
+        let err = ex
+            .run(&Plan::scan("orders", "okey").aggregate(AggKind::SumF32))
+            .unwrap_err();
+        assert!(matches!(err, ExecError::Type { .. }), "{err}");
     }
 }

@@ -6,30 +6,41 @@
 //! UDF-style hook, with all the data-movement consequences that implies
 //! (host columns must be copied to HBM, results copied back and
 //! re-materialized as candidate lists). This module reproduces that
-//! architecture:
+//! architecture — and the pipeline API that removes the round-trips:
 //!
 //! * [`column`] — BAT-style typed columns, tables, and the catalog;
 //! * [`ops`] — the relational operators (scan, range-select, hash join,
 //!   project, aggregate), all late-materializing via candidate lists;
-//! * [`exec`] — a small operator-at-a-time plan executor with a builder
-//!   API;
-//! * [`request`] — the typed [`OffloadRequest`] builder: payload, engine
-//!   caps, collision handling, and per-input `(table, column)` residency
-//!   keys, validated in one place;
-//! * [`udf`] — the accelerator hook: [`FpgaAccelerator::submit`] enqueues
-//!   a request on the card's coordinator and returns an async
-//!   [`JobHandle`] (`poll`/`wait`), so the executor and multi-query
-//!   clients keep several operators in flight; each completed job reports
-//!   the timing breakdown (copy-in / execute / copy-out) the end-to-end
-//!   figures need.
+//! * [`exec`] — the plan executor: CPU operators with typed
+//!   [`ExecError`]s; accelerated plans route whole through the pipeline
+//!   API (the historical blocking per-operator walk survives as
+//!   `Executor::operator_at_a_time` for measuring what pipelining saves);
+//! * [`request`] — the typed [`OffloadRequest`] builder for single
+//!   operators: payload, engine caps, collision handling, and per-input
+//!   `(table, column)` residency keys, validated in one place;
+//! * [`pipeline`] — the whole-plan boundary: [`PipelineRequest`] lowers a
+//!   [`Plan`] into a dependency-linked DAG of offload stages (validated
+//!   as [`PipelineError`]); `FpgaAccelerator::submit_plan` returns an
+//!   async [`PipelineHandle`] whose dependent stages consume parent
+//!   outputs directly from HBM — pinned transient cache entries instead
+//!   of host round-trips — with per-stage copy-in reported in a
+//!   [`PipelineReport`];
+//! * [`udf`] — the accelerator hook: [`FpgaAccelerator::submit`] /
+//!   `submit_plan` enqueue work on the card's coordinator and return
+//!   async handles ([`JobHandle`] / [`PipelineHandle`]), so the executor
+//!   and multi-query clients keep several operators — or several whole
+//!   queries — in flight; each completed job reports the timing breakdown
+//!   (copy-in / execute / copy-out) the end-to-end figures need.
 
 pub mod column;
 pub mod exec;
 pub mod ops;
+pub mod pipeline;
 pub mod request;
 pub mod udf;
 
 pub use column::{Catalog, Column, ColumnData, Table};
-pub use exec::{Executor, Plan};
+pub use exec::{ExecError, Executor, Intermediate, Plan};
+pub use pipeline::{PipelineError, PipelineHandle, PipelineReport, PipelineRequest};
 pub use request::{OffloadRequest, RequestError, MAX_JOIN_ENGINES};
 pub use udf::{FpgaAccelerator, JobHandle, OffloadTiming};

@@ -36,6 +36,22 @@ pub enum AggKind {
     MaxU32,
 }
 
+impl AggKind {
+    /// The element type this aggregate consumes, or `None` for any
+    /// column (`Count`) — the single table both the CPU executor and the
+    /// pipeline lowering validate against, so their error payloads can
+    /// never drift apart.
+    pub fn expected_input(&self) -> Option<&'static str> {
+        match self {
+            AggKind::Count => None,
+            AggKind::SumF32 => Some("f32 column"),
+            AggKind::SumU32 | AggKind::MinU32 | AggKind::MaxU32 => {
+                Some("u32 column")
+            }
+        }
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum AggResult {
     Count(u64),

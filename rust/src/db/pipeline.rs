@@ -1,0 +1,1035 @@
+//! Whole-plan offload: lower a [`Plan`] into a dependency-linked DAG of
+//! offload stages with HBM-resident intermediates.
+//!
+//! The paper's MonetDB integration (§II, §VI) pays operator-at-a-time
+//! materialization in full: every offloaded operator round-trips its
+//! intermediate through the host, even when the next operator consumes it
+//! immediately on the card. A [`PipelineRequest`] removes that
+//! round-trip. Lowered from a [`Plan`], it captures the plan's offloadable
+//! operators (range selects and hash joins) as `OffloadRequest`-shaped
+//! *stages* plus dependency edges between them, and ships the whole DAG
+//! to the card in one submission:
+//!
+//! ```ignore
+//! let request = PipelineRequest::from_plan(&plan, &catalog)?;
+//! let mut handle = acc.submit_plan(request);   // returns immediately
+//! let result = handle.wait();                  // drives the card
+//! ```
+//!
+//! A dependent stage never copies its derived input over OpenCAPI: the
+//! parent stage's output is published into the coordinator's column cache
+//! as a **pinned transient entry** (never evicted while a dependent is in
+//! flight, released on consumption), and positional gathers of base
+//! columns happen card-side against resident data. Only base columns that
+//! miss the resident cache cross the link. Host-side glue that engines
+//! cannot run (final projections, f32 columns, aggregates) is evaluated
+//! by the [`PipelineHandle`] once every stage completed.
+//!
+//! Every plan-boundary rule lives here, surfaced as [`PipelineError`]
+//! from [`PipelineRequest::from_plan`] / `FpgaAccelerator::try_submit_plan`:
+//!
+//! * **unknown tables/columns** — scans are resolved against the catalog
+//!   at lowering;
+//! * **producer/consumer shape checks** — every operator's input type is
+//!   validated (a select cannot consume a candidate list, joins need u32
+//!   columns, aggregate kinds must match element types), plus static
+//!   length checks between gather sources and candidate domains for
+//!   gathers that run card-side (host-side finisher projects keep the
+//!   CPU executor's permissive positional semantics, so valid plans
+//!   behave identically on both paths);
+//! * **engine-cap conflicts** — a per-pipeline cap outside the card's
+//!   limits (`1..=14` shim ports) is rejected rather than silently
+//!   clamped; join stages are further bounded by the card's 7
+//!   read/write-port engine pairs, a physical per-operator limit.
+//!
+//! Several whole queries co-run: each `submit_plan` enqueues its DAG
+//! atomically, and the coordinator's round policy interleaves ready
+//! stages from all in-flight pipelines.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::column::{Catalog, ColumnData};
+use super::exec::{Intermediate, Plan};
+use super::ops::{self, AggKind, AggResult};
+use super::request::build_side_is_unique;
+use super::udf::FpgaAccelerator;
+use crate::coordinator::{
+    ColumnKey, Coordinator, DepExpr, DepInput, JobKind, JobOutput, JobRecord,
+    JobSpec,
+};
+use crate::hbm::shim::ENGINE_PORTS;
+
+/// Why a plan could not be lowered into (or submitted as) a pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PipelineError {
+    /// A scan names a table the catalog does not have.
+    UnknownTable(String),
+    /// A scan names a column its table does not have.
+    UnknownColumn { table: String, column: String },
+    /// A producer feeds a consumer the wrong kind of intermediate.
+    TypeMismatch {
+        context: &'static str,
+        expected: &'static str,
+        got: &'static str,
+    },
+    /// A gather source is (statically) shorter than the candidate domain
+    /// its positions index — the gather would run off the column.
+    ShapeMismatch {
+        context: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// The requested engine cap is outside the card's limits.
+    EngineCap { requested: usize, limit: usize },
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::UnknownTable(t) => write!(f, "unknown table '{t}'"),
+            PipelineError::UnknownColumn { table, column } => {
+                write!(f, "unknown column '{table}.{column}'")
+            }
+            PipelineError::TypeMismatch { context, expected, got } => {
+                write!(f, "{context}: expected {expected}, got {got}")
+            }
+            PipelineError::ShapeMismatch { context, expected, got } => write!(
+                f,
+                "{context}: gather source has only {got} rows but its \
+                 candidate domain has {expected}"
+            ),
+            PipelineError::EngineCap { requested, limit } => write!(
+                f,
+                "engine cap {requested} outside the card's limits (1..={limit})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+/// The offloadable operator of one stage.
+#[derive(Debug, Clone)]
+enum StageOp {
+    Select { lo: u32, hi: u32 },
+    Join,
+}
+
+/// One payload slot of a stage.
+#[derive(Debug, Clone)]
+enum StageInput {
+    /// A host base column, named for the resident cache.
+    Host { data: Vec<u32>, key: ColumnKey },
+    /// Derived on the card from earlier stages' outputs.
+    Expr(StageExpr),
+}
+
+/// Dependency expression over *stage indices* (lowered to job-id
+/// [`DepExpr`]s at submission).
+#[derive(Debug, Clone)]
+enum StageExpr {
+    Candidates(usize),
+    JoinSide { stage: usize, left: bool },
+    Column { data: Vec<u32>, key: Option<ColumnKey> },
+    Gather { column: Box<StageExpr>, positions: Box<StageExpr> },
+}
+
+/// One offload stage: operator plus per-slot inputs.
+#[derive(Debug, Clone)]
+struct PipelineStage {
+    op: StageOp,
+    inputs: Vec<StageInput>,
+}
+
+/// Static per-stage shape facts for producer/consumer length checks.
+#[derive(Debug, Clone, Copy)]
+enum StageMeta {
+    Select { input_len: Option<usize> },
+    Join { s_len: Option<usize>, l_len: Option<usize> },
+}
+
+/// Host-side finisher: how the final [`Intermediate`] is assembled from
+/// stage outputs and base columns once every stage completed.
+#[derive(Debug, Clone)]
+enum Finish {
+    Base { data: ColumnData, key: ColumnKey },
+    SelectStage(usize),
+    JoinStage(usize),
+    JoinSide { stage: usize, left: bool },
+    Project { input: Box<Finish>, candidates: Box<Finish> },
+    Aggregate { input: Box<Finish>, kind: AggKind },
+}
+
+/// Value type of a lowered plan node, for producer/consumer validation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VType {
+    ColU32,
+    ColF32,
+    Cands,
+    Pairs,
+    Scalar,
+}
+
+fn vname(t: VType) -> &'static str {
+    match t {
+        VType::ColU32 => "u32 column",
+        VType::ColF32 => "f32 column",
+        VType::Cands => "candidate list",
+        VType::Pairs => "join pairs",
+        VType::Scalar => "scalar",
+    }
+}
+
+/// A whole query plan lowered for submission: the stage DAG plus the
+/// host-side finisher. Build with [`from_plan`](PipelineRequest::from_plan),
+/// refine with the chainable setters, then hand to
+/// `FpgaAccelerator::submit_plan` for a [`PipelineHandle`].
+#[derive(Debug, Clone)]
+pub struct PipelineRequest {
+    stages: Vec<PipelineStage>,
+    finish: Finish,
+    engines: Option<usize>,
+    client: usize,
+}
+
+impl PipelineRequest {
+    /// Lower `plan` against `catalog`, running every validation rule of
+    /// the plan→card boundary (see the module docs).
+    pub fn from_plan(plan: &Plan, catalog: &Catalog) -> Result<Self, PipelineError> {
+        let mut lowerer = Lowerer { catalog, stages: Vec::new(), metas: Vec::new() };
+        let (finish, _) = lowerer.lower(plan)?;
+        Ok(Self {
+            stages: lowerer.stages,
+            finish,
+            engines: None,
+            client: 0,
+        })
+    }
+
+    /// Cap the compute engines each stage may occupy. Unlike the
+    /// per-operator `OffloadRequest::engines` (which clamps silently),
+    /// a cap outside the card's limits (`1..=14`) is a validation error.
+    /// Join stages pair a read and a write port, so their effective cap
+    /// is additionally bounded by the 7 join-engine pairs — a physical
+    /// per-operator limit, not a request error.
+    pub fn engines(mut self, n: usize) -> Self {
+        self.engines = Some(n);
+        self
+    }
+
+    /// Tag the submitting client (reporting only).
+    pub fn client(mut self, id: usize) -> Self {
+        self.client = id;
+        self
+    }
+
+    /// Offload stages this plan lowers to (0 for pure host plans).
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Operator names of the stages, in dependency (submission) order.
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages
+            .iter()
+            .map(|s| match s.op {
+                StageOp::Select { .. } => "selection",
+                StageOp::Join => "join",
+            })
+            .collect()
+    }
+
+    /// Check the request without submitting it (`from_plan` already
+    /// validated the plan shape; this re-checks submission-time knobs).
+    pub fn validate(&self) -> Result<(), PipelineError> {
+        if let Some(n) = self.engines {
+            if n == 0 || n > ENGINE_PORTS {
+                return Err(PipelineError::EngineCap {
+                    requested: n,
+                    limit: ENGINE_PORTS,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Plan→stage lowering state.
+struct Lowerer<'a> {
+    catalog: &'a Catalog,
+    stages: Vec<PipelineStage>,
+    metas: Vec<StageMeta>,
+}
+
+impl<'a> Lowerer<'a> {
+    fn lower(&mut self, plan: &Plan) -> Result<(Finish, VType), PipelineError> {
+        match plan {
+            Plan::ScanColumn { table, column } => {
+                let t = self
+                    .catalog
+                    .table(table)
+                    .ok_or_else(|| PipelineError::UnknownTable(table.clone()))?;
+                let c = t.column(column).ok_or_else(|| {
+                    PipelineError::UnknownColumn {
+                        table: table.clone(),
+                        column: column.clone(),
+                    }
+                })?;
+                let vtype = match c.data {
+                    ColumnData::U32(_) => VType::ColU32,
+                    ColumnData::F32(_) => VType::ColF32,
+                };
+                Ok((
+                    Finish::Base {
+                        data: c.data.clone(),
+                        key: ColumnKey::new(table.clone(), column.clone()),
+                    },
+                    vtype,
+                ))
+            }
+            Plan::Select { input, lo, hi } => {
+                let (fin, t) = self.lower(input)?;
+                require(t, VType::ColU32, "select input")?;
+                let input_len = static_len(&fin);
+                let stage_input = self.column_stage_input(fin)?;
+                let idx = self.stages.len();
+                self.stages.push(PipelineStage {
+                    op: StageOp::Select { lo: *lo, hi: *hi },
+                    inputs: vec![stage_input],
+                });
+                self.metas.push(StageMeta::Select { input_len });
+                Ok((Finish::SelectStage(idx), VType::Cands))
+            }
+            Plan::Join { left, right } => {
+                let (lf, lt) = self.lower(left)?;
+                require(lt, VType::ColU32, "join build side")?;
+                let (rf, rt) = self.lower(right)?;
+                require(rt, VType::ColU32, "join probe side")?;
+                let s_len = static_len(&lf);
+                let l_len = static_len(&rf);
+                let s_input = self.column_stage_input(lf)?;
+                let l_input = self.column_stage_input(rf)?;
+                let idx = self.stages.len();
+                self.stages.push(PipelineStage {
+                    op: StageOp::Join,
+                    inputs: vec![s_input, l_input],
+                });
+                self.metas.push(StageMeta::Join { s_len, l_len });
+                Ok((Finish::JoinStage(idx), VType::Pairs))
+            }
+            Plan::JoinSide { join, left_side } => {
+                let (fin, t) = self.lower(join)?;
+                require(t, VType::Pairs, "join_side input")?;
+                let Finish::JoinStage(stage) = fin else {
+                    unreachable!("pairs are only produced by join stages");
+                };
+                Ok((
+                    Finish::JoinSide { stage, left: *left_side },
+                    VType::Cands,
+                ))
+            }
+            Plan::Project { input, candidates } => {
+                let (col_fin, col_t) = self.lower(input)?;
+                if col_t != VType::ColU32 && col_t != VType::ColF32 {
+                    return Err(PipelineError::TypeMismatch {
+                        context: "project input",
+                        expected: "column",
+                        got: vname(col_t),
+                    });
+                }
+                let (cand_fin, cand_t) = self.lower(candidates)?;
+                require(cand_t, VType::Cands, "project candidates")?;
+                Ok((
+                    Finish::Project {
+                        input: Box::new(col_fin),
+                        candidates: Box::new(cand_fin),
+                    },
+                    col_t,
+                ))
+            }
+            Plan::Aggregate { input, kind } => {
+                let (fin, t) = self.lower(input)?;
+                if t != VType::ColU32 && t != VType::ColF32 {
+                    return Err(PipelineError::TypeMismatch {
+                        context: "aggregate input",
+                        expected: "column",
+                        got: vname(t),
+                    });
+                }
+                // Same table the CPU walk validates against
+                // (AggKind::expected_input), so error payloads match.
+                if let Some(expected) = kind.expected_input() {
+                    if expected != vname(t) {
+                        return Err(PipelineError::TypeMismatch {
+                            context: "aggregate kind",
+                            expected,
+                            got: vname(t),
+                        });
+                    }
+                }
+                Ok((
+                    Finish::Aggregate { input: Box::new(fin), kind: *kind },
+                    VType::Scalar,
+                ))
+            }
+        }
+    }
+
+    /// Turn a u32-column finisher node into a stage input: base columns
+    /// ride as host data (with their cache key), anything stage-derived
+    /// becomes a dependency expression.
+    fn column_stage_input(&self, fin: Finish) -> Result<StageInput, PipelineError> {
+        match fin {
+            Finish::Base { data: ColumnData::U32(data), key } => {
+                Ok(StageInput::Host { data, key })
+            }
+            other => Ok(StageInput::Expr(self.column_expr(other)?)),
+        }
+    }
+
+    /// Lower a column-typed finisher node to a dependency expression. A
+    /// gather that will run card-side is statically shape-checked (its
+    /// source must be as long as the domain its positions index) — an
+    /// out-of-range position here would panic deep inside the scheduler,
+    /// unlike host-side finisher projects, which keep the CPU executor's
+    /// permissive positional semantics.
+    fn column_expr(&self, fin: Finish) -> Result<StageExpr, PipelineError> {
+        match fin {
+            Finish::Base { data: ColumnData::U32(data), key } => {
+                Ok(StageExpr::Column { data, key: Some(key) })
+            }
+            Finish::Base { data: ColumnData::F32(_), .. } => {
+                Err(PipelineError::TypeMismatch {
+                    context: "offloaded gather source",
+                    expected: "u32 column",
+                    got: "f32 column",
+                })
+            }
+            Finish::Project { input, candidates } => {
+                // Candidate positions index 0..domain, so any source at
+                // least as long as the domain is safe; only a *shorter*
+                // source is a guaranteed out-of-range gather.
+                if let (Some(col_len), Some(dom)) =
+                    (static_len(&input), self.domain_len(&candidates))
+                {
+                    if col_len < dom {
+                        return Err(PipelineError::ShapeMismatch {
+                            context: "offloaded project",
+                            expected: dom,
+                            got: col_len,
+                        });
+                    }
+                }
+                Ok(StageExpr::Gather {
+                    column: Box::new(self.column_expr(*input)?),
+                    positions: Box::new(candidates_expr(*candidates)?),
+                })
+            }
+            other => Err(PipelineError::TypeMismatch {
+                context: "offloaded stage input",
+                expected: "u32 column",
+                got: finish_name(&other),
+            }),
+        }
+    }
+
+    /// Static domain length of a candidates-typed finisher node: the
+    /// length of the column its positions index, when known.
+    fn domain_len(&self, fin: &Finish) -> Option<usize> {
+        match fin {
+            Finish::SelectStage(i) => match self.metas[*i] {
+                StageMeta::Select { input_len } => input_len,
+                _ => None,
+            },
+            Finish::JoinSide { stage, left } => match self.metas[*stage] {
+                StageMeta::Join { s_len, l_len } => {
+                    if *left {
+                        s_len
+                    } else {
+                        l_len
+                    }
+                }
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+}
+
+fn require(
+    got: VType,
+    want: VType,
+    context: &'static str,
+) -> Result<(), PipelineError> {
+    if got == want {
+        Ok(())
+    } else {
+        Err(PipelineError::TypeMismatch {
+            context,
+            expected: vname(want),
+            got: vname(got),
+        })
+    }
+}
+
+/// Length of a column-typed finisher node, when statically known.
+fn static_len(fin: &Finish) -> Option<usize> {
+    match fin {
+        Finish::Base { data, .. } => Some(data.len()),
+        _ => None,
+    }
+}
+
+/// Lower a candidates-typed finisher node to a dependency expression.
+fn candidates_expr(fin: Finish) -> Result<StageExpr, PipelineError> {
+    match fin {
+        Finish::SelectStage(i) => Ok(StageExpr::Candidates(i)),
+        Finish::JoinSide { stage, left } => {
+            Ok(StageExpr::JoinSide { stage, left })
+        }
+        other => Err(PipelineError::TypeMismatch {
+            context: "offloaded gather positions",
+            expected: "candidate list",
+            got: finish_name(&other),
+        }),
+    }
+}
+
+fn finish_name(fin: &Finish) -> &'static str {
+    match fin {
+        Finish::Base { .. } => "base column",
+        Finish::SelectStage(_) => "candidate list",
+        Finish::JoinStage(_) => "join pairs",
+        Finish::JoinSide { .. } => "candidate list",
+        Finish::Project { .. } => "projected column",
+        Finish::Aggregate { .. } => "scalar",
+    }
+}
+
+/// Map a stage-index expression to a job-id [`DepExpr`], moving the
+/// column payloads (submission hands them to the coordinator).
+fn to_dep_expr(expr: StageExpr, ids: &[usize]) -> DepExpr {
+    match expr {
+        StageExpr::Candidates(i) => DepExpr::Candidates(ids[i]),
+        StageExpr::JoinSide { stage, left } => {
+            DepExpr::JoinSide { parent: ids[stage], left }
+        }
+        StageExpr::Column { data, key } => DepExpr::Column { data, key },
+        StageExpr::Gather { column, positions } => DepExpr::Gather {
+            column: Box::new(to_dep_expr(*column, ids)),
+            positions: Box::new(to_dep_expr(*positions, ids)),
+        },
+    }
+}
+
+/// One payload slot of a stage, lowered: either host data (with its
+/// cache key) or a dependency edge.
+fn lower_input(
+    input: StageInput,
+    slot: usize,
+    ids: &[usize],
+    deps: &mut Vec<DepInput>,
+) -> (Vec<u32>, Option<ColumnKey>) {
+    match input {
+        StageInput::Host { data, key } => (data, Some(key)),
+        StageInput::Expr(e) => {
+            deps.push(DepInput { slot, expr: to_dep_expr(e, ids) });
+            (Vec::new(), None)
+        }
+    }
+}
+
+/// Lower one stage to a coordinator job spec, wiring dependency edges on
+/// the already-submitted parents.
+fn stage_to_spec(
+    stage: PipelineStage,
+    ids: &[usize],
+    engines: usize,
+    client: usize,
+) -> JobSpec {
+    let mut deps: Vec<DepInput> = Vec::new();
+    let mut inputs = stage.inputs.into_iter();
+    match stage.op {
+        StageOp::Select { lo, hi } => {
+            let (data, key) =
+                lower_input(inputs.next().expect("select input"), 0, ids, &mut deps);
+            JobSpec::new(JobKind::Selection { data, lo, hi })
+                .with_keys(vec![key])
+                .with_deps(deps)
+                .with_max_engines(engines)
+                .with_client(client)
+        }
+        StageOp::Join => {
+            let (s, s_key) =
+                lower_input(inputs.next().expect("join build side"), 0, ids, &mut deps);
+            let (l, l_key) =
+                lower_input(inputs.next().expect("join probe side"), 1, ids, &mut deps);
+            // A host build side picks the bitstream variant from its
+            // uniqueness (like OffloadRequest); a dependency-fed build
+            // side starts conservative and the coordinator re-derives the
+            // variant at install time, when the concrete column exists.
+            let handle_collisions = if deps.iter().any(|d| d.slot == 0) {
+                true
+            } else {
+                !build_side_is_unique(&s)
+            };
+            JobSpec::new(JobKind::Join { s, l, handle_collisions })
+                .with_keys(vec![s_key, l_key])
+                .with_deps(deps)
+                .with_max_engines(engines.min(super::request::MAX_JOIN_ENGINES))
+                .with_client(client)
+        }
+    }
+}
+
+/// Evaluate the host-side finisher over the completed stage outputs.
+fn eval_finish(fin: &Finish, outs: &BTreeMap<usize, JobOutput>) -> Intermediate {
+    match fin {
+        Finish::Base { data, .. } => Intermediate::Column(data.clone()),
+        Finish::SelectStage(i) => match outs.get(i) {
+            Some(JobOutput::Selection(v)) => Intermediate::Candidates(v.clone()),
+            other => panic!("stage {i}: expected selection output, got {other:?}"),
+        },
+        Finish::JoinStage(i) => match outs.get(i) {
+            Some(JobOutput::Join(pairs)) => Intermediate::Pairs(pairs.clone()),
+            other => panic!("stage {i}: expected join output, got {other:?}"),
+        },
+        Finish::JoinSide { stage, left } => match outs.get(stage) {
+            Some(JobOutput::Join(pairs)) => Intermediate::Candidates(
+                pairs
+                    .iter()
+                    .map(|&(l, r)| if *left { l } else { r })
+                    .collect(),
+            ),
+            other => panic!("stage {stage}: expected join output, got {other:?}"),
+        },
+        Finish::Project { input, candidates } => {
+            let col = eval_finish(input, outs).expect_column();
+            let cands = eval_finish(candidates, outs).expect_candidates();
+            Intermediate::Column(ops::project(&col, &cands))
+        }
+        Finish::Aggregate { input, kind } => {
+            let col = eval_finish(input, outs).expect_column();
+            Intermediate::Scalar(ops::aggregate(&col, *kind))
+        }
+    }
+}
+
+impl FpgaAccelerator {
+    /// Submit a whole lowered plan to the card and return immediately.
+    /// The DAG is enqueued atomically (one coordinator lock), so several
+    /// pipelines — and loose `submit` jobs — co-run under the round
+    /// policy. Panics on an invalid request; use
+    /// [`try_submit_plan`](FpgaAccelerator::try_submit_plan) to handle
+    /// [`PipelineError`] instead.
+    pub fn submit_plan(&mut self, request: PipelineRequest) -> PipelineHandle {
+        self.try_submit_plan(request)
+            .unwrap_or_else(|e| panic!("invalid pipeline request: {e}"))
+    }
+
+    /// Non-panicking [`submit_plan`](FpgaAccelerator::submit_plan).
+    pub fn try_submit_plan(
+        &mut self,
+        request: PipelineRequest,
+    ) -> Result<PipelineHandle, PipelineError> {
+        request.validate()?;
+        let PipelineRequest { stages, finish, engines: cap, client } = request;
+        let engines = cap.unwrap_or(self.engines).clamp(1, ENGINE_PORTS);
+        let coord_arc = self.coord_arc();
+        let mut coord = coord_arc.lock().expect("coordinator lock poisoned");
+        self.sync_card(&mut coord);
+        let mut ids: Vec<usize> = Vec::with_capacity(stages.len());
+        for stage in stages {
+            let spec = stage_to_spec(stage, &ids, engines, client);
+            ids.push(coord.submit(spec));
+        }
+        drop(coord);
+        Ok(PipelineHandle {
+            stage_ids: ids,
+            finish,
+            coord: coord_arc,
+            outputs: BTreeMap::new(),
+            records: BTreeMap::new(),
+            result: None,
+        })
+    }
+}
+
+/// Aggregate accounting of one completed pipeline, assembled from the
+/// per-stage [`JobRecord`]s (each reports its own copy-in — the signal
+/// figure drivers compare against the operator-at-a-time path).
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Per-stage records, in stage (submission) order.
+    pub stages: Vec<JobRecord>,
+}
+
+impl PipelineReport {
+    /// Host bytes the whole plan actually moved over the link.
+    pub fn copy_in_bytes(&self) -> u64 {
+        self.stages.iter().map(|r| r.copy_in_bytes).sum()
+    }
+
+    /// Total copy-in time across stages, seconds.
+    pub fn copy_in(&self) -> f64 {
+        self.stages.iter().map(|r| r.copy_in).sum()
+    }
+
+    /// Total engine execution time across stages, seconds.
+    pub fn exec(&self) -> f64 {
+        self.stages.iter().map(|r| r.exec).sum()
+    }
+
+    /// Total copy-out time across stages, seconds.
+    pub fn copy_out(&self) -> f64 {
+        self.stages.iter().map(|r| r.copy_out).sum()
+    }
+
+    /// End-to-end simulated latency: first submission to last completion
+    /// (0 for pipelines with no offload stage).
+    pub fn latency(&self) -> f64 {
+        let submit = self
+            .stages
+            .iter()
+            .map(|r| r.submit_time)
+            .fold(f64::INFINITY, f64::min);
+        let finish = self.stages.iter().map(|r| r.finish_time).fold(0.0, f64::max);
+        if self.stages.is_empty() {
+            0.0
+        } else {
+            finish - submit
+        }
+    }
+}
+
+/// An in-flight pipeline. Obtained from `FpgaAccelerator::submit_plan`;
+/// holds a reference to the card's coordinator, so it stays valid across
+/// further submissions and other handles' waits.
+///
+/// * [`poll`](PipelineHandle::poll) — non-blocking completion check;
+///   never advances the card.
+/// * [`wait`](PipelineHandle::wait) — drive scheduling rounds until every
+///   stage completes, then evaluate the host-side finisher; idempotent.
+/// * [`take`](PipelineHandle::take) /
+///   [`take_column`](PipelineHandle::take_column) /
+///   [`take_candidates`](PipelineHandle::take_candidates) /
+///   [`take_pairs`](PipelineHandle::take_pairs) /
+///   [`take_scalar`](PipelineHandle::take_scalar) — consuming waits
+///   returning the result (typed variants panic on a different root
+///   type) plus the per-stage [`PipelineReport`].
+///
+/// Dropping a handle abandons unclaimed stage *outputs*, not the jobs:
+/// stages still run (their cache side effects happen, records survive in
+/// `FpgaAccelerator::stats`), and dependent stages of other pipelines are
+/// unaffected.
+#[must_use = "a PipelineHandle only runs its stages when waited on (or via wait_all)"]
+pub struct PipelineHandle {
+    stage_ids: Vec<usize>,
+    finish: Finish,
+    coord: Arc<Mutex<Coordinator>>,
+    /// Claimed stage outputs, by stage index.
+    outputs: BTreeMap<usize, JobOutput>,
+    records: BTreeMap<usize, JobRecord>,
+    result: Option<Intermediate>,
+}
+
+impl std::fmt::Debug for PipelineHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PipelineHandle")
+            .field("stages", &self.stage_ids.len())
+            .field("claimed", &self.outputs.len())
+            .field("evaluated", &self.result.is_some())
+            .finish()
+    }
+}
+
+impl PipelineHandle {
+    /// Coordinator job ids of the stages, in stage order.
+    pub fn ids(&self) -> &[usize] {
+        &self.stage_ids
+    }
+
+    /// Number of offload stages (0 for pure host plans).
+    pub fn stage_count(&self) -> usize {
+        self.stage_ids.len()
+    }
+
+    fn try_claim(&mut self) {
+        let coord = Arc::clone(&self.coord);
+        let mut coord = coord.lock().expect("coordinator lock poisoned");
+        for (si, &id) in self.stage_ids.iter().enumerate() {
+            if self.outputs.contains_key(&si) {
+                continue;
+            }
+            if let Some((output, record)) = coord.take_result(id) {
+                self.outputs.insert(si, output);
+                self.records.insert(si, record);
+            }
+        }
+    }
+
+    fn complete(&self) -> bool {
+        self.outputs.len() == self.stage_ids.len()
+    }
+
+    /// Has every stage completed? Non-blocking: checks for buffered
+    /// results without advancing the simulated card.
+    pub fn poll(&mut self) -> bool {
+        self.try_claim();
+        self.complete()
+    }
+
+    /// Drive scheduling rounds until every stage completed (co-scheduled
+    /// jobs from other pipelines progress too), then evaluate the
+    /// host-side finisher.
+    fn drive_to_completion(&mut self) {
+        loop {
+            self.try_claim();
+            if self.complete() {
+                break;
+            }
+            let coord = Arc::clone(&self.coord);
+            let mut coord = coord.lock().expect("coordinator lock poisoned");
+            for (si, &id) in self.stage_ids.iter().enumerate() {
+                if !self.outputs.contains_key(&si) {
+                    assert!(
+                        coord.is_in_flight(id),
+                        "pipeline stage job {id} vanished without completing"
+                    );
+                }
+            }
+            coord.step();
+        }
+        if self.result.is_none() {
+            self.result = Some(eval_finish(&self.finish, &self.outputs));
+        }
+    }
+
+    /// Block until the whole plan completes; returns the root
+    /// [`Intermediate`]. Idempotent: repeat calls return the same result.
+    pub fn wait(&mut self) -> Intermediate {
+        self.drive_to_completion();
+        self.result.clone().expect("evaluated result")
+    }
+
+    /// Per-stage accounting once every stage completed (`None` before).
+    pub fn report(&self) -> Option<PipelineReport> {
+        if !self.complete() {
+            return None;
+        }
+        Some(PipelineReport {
+            stages: (0..self.stage_ids.len())
+                .map(|si| self.records[&si].clone())
+                .collect(),
+        })
+    }
+
+    /// Consuming [`wait`](PipelineHandle::wait): result plus the
+    /// per-stage report, without an extra clone of the result.
+    pub fn take(mut self) -> (Intermediate, PipelineReport) {
+        self.drive_to_completion();
+        let report = self.report().expect("complete pipeline has a report");
+        (self.result.take().expect("evaluated result"), report)
+    }
+
+    /// [`take`](PipelineHandle::take), expecting a column root.
+    pub fn take_column(self) -> (ColumnData, PipelineReport) {
+        let (result, report) = self.take();
+        (result.expect_column(), report)
+    }
+
+    /// [`take`](PipelineHandle::take), expecting a candidate-list root.
+    pub fn take_candidates(self) -> (Vec<u32>, PipelineReport) {
+        let (result, report) = self.take();
+        (result.expect_candidates(), report)
+    }
+
+    /// [`take`](PipelineHandle::take), expecting a join-pairs root.
+    pub fn take_pairs(self) -> (Vec<(u32, u32)>, PipelineReport) {
+        let (result, report) = self.take();
+        (result.expect_pairs(), report)
+    }
+
+    /// [`take`](PipelineHandle::take), expecting a scalar root.
+    pub fn take_scalar(self) -> (AggResult, PipelineReport) {
+        let (result, report) = self.take();
+        (result.expect_scalar(), report)
+    }
+}
+
+impl Drop for PipelineHandle {
+    fn drop(&mut self) {
+        // Unclaimed stage outputs must not linger in the coordinator's
+        // buffer. Ignore a poisoned lock: never panic in drop.
+        if let Ok(mut coord) = self.coord.lock() {
+            for (si, &id) in self.stage_ids.iter().enumerate() {
+                if !self.outputs.contains_key(&si) {
+                    coord.abandon(id);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::column::{Column, Table};
+    use crate::db::ops::AggKind;
+    use crate::hbm::HbmConfig;
+
+    fn catalog() -> Catalog {
+        let mut cat = Catalog::new();
+        cat.register(Table::new(
+            "orders",
+            vec![
+                Column::u32("okey", (0..64).collect()),
+                Column::u32("cust", (0..64).map(|i| i % 8).collect()),
+                Column::f32("total", (0..64).map(|i| i as f32).collect()),
+            ],
+        ));
+        cat.register(Table::new(
+            "customers",
+            vec![Column::u32("ckey", (0..8).collect())],
+        ));
+        cat
+    }
+
+    #[test]
+    fn lowering_counts_stages_and_names_them() {
+        let cat = catalog();
+        let plan = Plan::scan("customers", "ckey")
+            .join(
+                Plan::scan("orders", "cust")
+                    .project(Plan::scan("orders", "okey").select(10, 40)),
+            )
+            .join_side(false)
+            .aggregate(AggKind::Count);
+        // Wait: join_side yields candidates; aggregate needs a column.
+        let err = PipelineRequest::from_plan(&plan, &cat).unwrap_err();
+        assert!(matches!(err, PipelineError::TypeMismatch { .. }));
+
+        let plan = Plan::scan("orders", "okey")
+            .project(
+                Plan::scan("customers", "ckey")
+                    .join(
+                        Plan::scan("orders", "cust")
+                            .project(Plan::scan("orders", "okey").select(10, 40)),
+                    )
+                    .join_side(false),
+            )
+            .aggregate(AggKind::Count);
+        // join_side(false) indexes the probe side, whose length is
+        // dynamic (a projected column), so the static shape check cannot
+        // reject the 64-row gather source — this lowers fine.
+        let req = PipelineRequest::from_plan(&plan, &cat).unwrap();
+        assert_eq!(req.n_stages(), 2);
+        assert_eq!(req.stage_names(), vec!["selection", "join"]);
+    }
+
+    #[test]
+    fn unknown_names_are_reported() {
+        let cat = catalog();
+        assert_eq!(
+            PipelineRequest::from_plan(&Plan::scan("nope", "x"), &cat).unwrap_err(),
+            PipelineError::UnknownTable("nope".into())
+        );
+        assert_eq!(
+            PipelineRequest::from_plan(&Plan::scan("orders", "x"), &cat)
+                .unwrap_err(),
+            PipelineError::UnknownColumn {
+                table: "orders".into(),
+                column: "x".into()
+            }
+        );
+    }
+
+    #[test]
+    fn type_mismatches_are_rejected() {
+        let cat = catalog();
+        // Selecting over an f32 column: engines are u32-only.
+        let err = PipelineRequest::from_plan(
+            &Plan::scan("orders", "total").select(1, 2),
+            &cat,
+        )
+        .unwrap_err();
+        assert!(matches!(err, PipelineError::TypeMismatch { .. }), "{err}");
+        // Summing a u32 column as f32.
+        let err = PipelineRequest::from_plan(
+            &Plan::scan("orders", "okey").aggregate(AggKind::SumF32),
+            &cat,
+        )
+        .unwrap_err();
+        assert!(matches!(err, PipelineError::TypeMismatch { .. }), "{err}");
+        // Joining against an f32 probe side.
+        let err = PipelineRequest::from_plan(
+            &Plan::scan("orders", "okey").join(Plan::scan("orders", "total")),
+            &cat,
+        )
+        .unwrap_err();
+        assert!(matches!(err, PipelineError::TypeMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn static_shape_mismatch_is_rejected_for_stage_fed_gathers() {
+        let cat = catalog();
+        // Candidates index the 64-row orders domain, but the gather source
+        // is the 8-row customers column. Feeding that gather to a select
+        // stage would run it card-side, so lowering rejects it…
+        let mismatched = Plan::scan("customers", "ckey")
+            .project(Plan::scan("orders", "okey").select(0, 10));
+        let err =
+            PipelineRequest::from_plan(&mismatched.clone().select(0, 5), &cat)
+                .unwrap_err();
+        assert_eq!(
+            err,
+            PipelineError::ShapeMismatch {
+                context: "offloaded project",
+                expected: 64,
+                got: 8
+            }
+        );
+        // …while the same project as the host-side *finisher* keeps the
+        // CPU executor's positional semantics (it only fails on actually
+        // out-of-range positions, identically on both paths).
+        assert!(PipelineRequest::from_plan(&mismatched, &cat).is_ok());
+    }
+
+    #[test]
+    fn engine_cap_is_validated_not_clamped() {
+        let cat = catalog();
+        let plan = Plan::scan("orders", "okey").select(0, 10);
+        let req = PipelineRequest::from_plan(&plan, &cat).unwrap().engines(99);
+        assert_eq!(
+            req.validate().unwrap_err(),
+            PipelineError::EngineCap { requested: 99, limit: ENGINE_PORTS }
+        );
+        let mut acc = FpgaAccelerator::new(HbmConfig::default());
+        let req = PipelineRequest::from_plan(&plan, &cat).unwrap().engines(0);
+        assert!(matches!(
+            acc.try_submit_plan(req),
+            Err(PipelineError::EngineCap { .. })
+        ));
+        assert_eq!(acc.in_flight(), 0, "rejected pipeline must not enqueue");
+    }
+
+    #[test]
+    fn stageless_plan_completes_without_the_card() {
+        let cat = catalog();
+        let mut acc = FpgaAccelerator::new(HbmConfig::default());
+        let req = PipelineRequest::from_plan(
+            &Plan::scan("orders", "total").aggregate(AggKind::SumF32),
+            &cat,
+        )
+        .unwrap();
+        assert_eq!(req.n_stages(), 0);
+        let mut handle = acc.submit_plan(req);
+        assert!(handle.poll(), "no stages: complete immediately");
+        let (scalar, report) = handle.take_scalar();
+        assert_eq!(scalar, AggResult::F64((0..64).map(|i| i as f64).sum()));
+        assert!(report.stages.is_empty());
+        assert_eq!(report.copy_in_bytes(), 0);
+        assert_eq!(acc.stats().completed(), 0, "nothing ran on the card");
+    }
+}

@@ -311,13 +311,7 @@ fn payload_name(p: &Payload) -> &'static str {
     }
 }
 
-/// A unique build side needs no collision handling — the choice the DBMS
-/// makes when picking the bitstream variant.
-fn build_side_is_unique(s: &[u32]) -> bool {
-    let mut sorted = s.to_vec();
-    sorted.sort_unstable();
-    sorted.windows(2).all(|w| w[0] != w[1])
-}
+pub(crate) use crate::coordinator::job::build_side_is_unique;
 
 #[cfg(test)]
 mod tests {

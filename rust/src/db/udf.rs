@@ -1,7 +1,7 @@
 //! The FPGA accelerator hook — the UDF-style integration point between
 //! the columnar engine and the simulated HBM-FPGA (paper §III, Figure 3).
 //!
-//! The DBMS↔card boundary is two types:
+//! The DBMS↔card boundary is two request/handle pairs:
 //!
 //! * [`OffloadRequest`] — a typed builder describing one operator
 //!   crossing OpenCAPI (payload, engine cap, per-input residency keys);
@@ -11,6 +11,12 @@
 //!   coordinator; the simulated card advances when a handle is driven
 //!   ([`JobHandle::wait`]) or the accelerator drains
 //!   ([`FpgaAccelerator::wait_all`]). [`JobHandle::poll`] never blocks.
+//!
+//! Whole query plans cross through the sibling pair
+//! (`PipelineRequest` → `FpgaAccelerator::submit_plan` →
+//! `PipelineHandle`, see [`super::pipeline`]): the plan's operators
+//! become a dependency-linked job DAG whose intermediates stay in HBM
+//! instead of round-tripping through the host.
 //!
 //! Because submission and completion are decoupled, a client can keep
 //! several operators in flight: jobs queued together are co-scheduled by
@@ -131,6 +137,19 @@ impl FpgaAccelerator {
         self.coord.lock().expect("coordinator lock poisoned")
     }
 
+    /// Shared handle on the card's coordinator, for the pipeline layer
+    /// (`submit_plan` submits whole stage DAGs under one lock).
+    pub(crate) fn coord_arc(&self) -> Arc<Mutex<Coordinator>> {
+        Arc::clone(&self.coord)
+    }
+
+    /// Sync the public `cfg`/`link` knobs into the coordinator — done
+    /// before every submission so the knobs stay live across offloads.
+    pub(crate) fn sync_card(&self, coord: &mut Coordinator) {
+        coord.set_config(self.cfg.clone());
+        coord.set_link(self.link.clone());
+    }
+
     /// Enqueue a request on the card and return immediately. The job only
     /// runs when a [`JobHandle`] is waited on (or polled after someone
     /// else drove the rounds) or [`wait_all`](FpgaAccelerator::wait_all)
@@ -153,8 +172,7 @@ impl FpgaAccelerator {
         let mut coord = self.coord();
         // The public `cfg`/`link` knobs stay live across offloads: sync
         // them into the coordinator before every submission.
-        coord.set_config(self.cfg.clone());
-        coord.set_link(self.link.clone());
+        self.sync_card(&mut coord);
         let id = coord.submit(spec);
         drop(coord);
         Ok(JobHandle {

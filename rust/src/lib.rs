@@ -16,17 +16,20 @@
 //!   subsystem simulator ([`hbm`]), scale-out compute engines and their
 //!   event-driven fluid simulation ([`engines`]), the multi-query
 //!   scheduler that owns the card — engine-slot allocation policies,
-//!   the HBM-resident column cache, per-job statistics and the
+//!   dependency-gated job DAGs, the HBM-resident column cache with
+//!   pinned transient intermediates, per-job statistics and the
 //!   `hbmctl serve` replay harness ([`coordinator`]) — CPU↔FPGA
 //!   interconnect ([`interconnect`]), physical-design models
 //!   ([`floorplan`]), a columnar DBMS ([`db`]) whose accelerator
-//!   boundary is the typed request/handle API: callers shape work as an
-//!   [`db::OffloadRequest`] (payload, engine caps, `(table, column)`
-//!   residency keys) and submit it for an async [`db::JobHandle`]
-//!   (`poll`/`wait`), keeping several operators in flight on one card;
-//!   plus CPU baselines ([`cpu`]), workload generators ([`workloads`]),
-//!   the PJRT runtime ([`runtime`]) and the benchmark harness
-//!   ([`bench`]).
+//!   boundary is a two-level request/handle API: single operators cross
+//!   as a typed [`db::OffloadRequest`] returning an async
+//!   [`db::JobHandle`] (`poll`/`wait`), and *whole query plans* lower
+//!   into a [`db::PipelineRequest`] — a dependency-linked DAG of offload
+//!   stages submitted via `submit_plan` for a [`db::PipelineHandle`],
+//!   whose dependent stages consume their parents' outputs directly from
+//!   HBM instead of round-tripping intermediates through the host; plus
+//!   CPU baselines ([`cpu`]), workload generators ([`workloads`]), the
+//!   PJRT runtime ([`runtime`]) and the benchmark harness ([`bench`]).
 //! * **L2/L1 (python/compile)** — the JAX SGD model and Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
 //!   [`runtime`] — Python never runs at request time.

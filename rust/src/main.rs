@@ -6,12 +6,14 @@
 //!   resources   Table III resource/floorplan report
 //!   train       train a GLM through the PJRT runtime (HLO artifacts)
 //!   query       demo DB query, CPU vs FPGA-offloaded
+//!   plan        whole-plan pipelines vs operator-at-a-time offload
 //!   serve       multi-client mixed workload through the L3 coordinator
 //!
 //! Examples:
 //!   hbmctl figures --fig all --scale 0.0625 --out results
 //!   hbmctl microbench --ports 32 --separations 256,128,0
 //!   hbmctl train --dataset tiny_ridge --alpha 0.05 --epochs 10
+//!   hbmctl plan --rows 200000 --repeat 2
 //!   hbmctl serve --clients 4 --queries 64 --policy all
 
 use std::path::PathBuf;
@@ -36,6 +38,7 @@ fn main() -> ExitCode {
         Some("resources") => cmd_resources(&args),
         Some("train") => cmd_train(&args),
         Some("query") => cmd_query(&args),
+        Some("plan") => cmd_plan(&args),
         Some("serve") => cmd_serve(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
@@ -58,7 +61,7 @@ fn main() -> ExitCode {
 
 fn usage() {
     eprintln!(
-        "usage: hbmctl <figures|microbench|resources|train|query|serve> [options]\n\
+        "usage: hbmctl <figures|microbench|resources|train|query|plan|serve> [options]\n\
          \n\
          figures    --fig <id|all> --scale <f> --out <dir> --artifacts <dir>\n\
          microbench --ports <list> --separations <list> --clock <200|300|400>\n\
@@ -69,6 +72,11 @@ fn usage() {
          \u{20}          --engines <1..14>   compute engines granted to each offload\n\
          \u{20}          --repeat <n>        run the plan n times on one card; repeats\n\
          \u{20}          hit the HBM-resident column cache and skip copy-in\n\
+         plan       --rows <n> --repeat <r> --seed <s> --out <file.json>\n\
+         \u{20}          runs a mixed-plan workload as whole-query pipelines\n\
+         \u{20}          (submit_plan) vs operator-at-a-time offloads, verifies\n\
+         \u{20}          identical results, and writes BENCH_pipeline.json with\n\
+         \u{20}          the moved-bytes savings\n\
          serve      --clients <n> --queries <m> --policy <fifo|fair|bandwidth|all>\n\
          \u{20}          --rows <n> --seed <s> --cache-mib <n> --out <file.json>\n\
          \u{20}          replays a mixed selection/join/SGD workload through the\n\
@@ -205,19 +213,20 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         .aggregate(hbm_analytics::db::ops::AggKind::Count);
 
     let t0 = std::time::Instant::now();
-    let cpu_result = Executor::cpu(&cat, 8).run(&plan);
+    let cpu_result = Executor::cpu(&cat, 8).run(&plan)?;
     let t_cpu = t0.elapsed();
 
     println!("CPU executor: {cpu_result:?} in {t_cpu:?}");
     if offload {
-        // One persistent card across repeats: the executor names base
-        // columns with (table, column) keys, so every run after the first
-        // finds them HBM-resident and skips copy-in.
+        // One persistent card across repeats: the executor lowers the
+        // plan through `submit_plan` and names base columns with
+        // (table, column) keys, so every run after the first finds them
+        // HBM-resident and skips copy-in.
         let mut acc =
             FpgaAccelerator::new(HbmConfig::default()).with_engines(engines);
         for run in 0..repeat {
             let t1 = std::time::Instant::now();
-            let fpga_result = Executor::accelerated(&cat, 8, &mut acc).run(&plan);
+            let fpga_result = Executor::accelerated(&cat, 8, &mut acc).run(&plan)?;
             let t_fpga = t1.elapsed();
             println!(
                 "FPGA-offloaded executor ({engines} engines, run {}/{repeat}): \
@@ -235,6 +244,184 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
             stats.cache.misses
         );
     }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    use hbm_analytics::db::PipelineRequest;
+    use hbm_analytics::util::table::Table as ReportTable;
+    use hbm_analytics::workloads::analytics;
+
+    let rows: usize = args.get_parsed("rows", 200_000)?;
+    let repeat: usize = args.get_parsed("repeat", 2)?;
+    let seed: u64 = args.get_parsed("seed", 11u64)?;
+    anyhow::ensure!(rows > 0, "--rows must be positive");
+    anyhow::ensure!(repeat > 0, "--repeat must be positive");
+    let customers = (rows / 100).max(64);
+
+    // The shared mixed-plan workload (workloads::analytics): its first
+    // plan is the scan→select→join→aggregate shape whose probe side the
+    // pipeline keeps on the card, where the operator-at-a-time walk
+    // ships the projected intermediate back to the host and over the
+    // link again.
+    let cat = analytics::orders_catalog(rows, customers, seed);
+    let plans = analytics::mixed_plans(customers);
+
+    println!(
+        "plan workload: {} plans x {repeat} runs over {rows} orders / \
+         {customers} customers (seed {seed:#x})",
+        plans.len()
+    );
+    let mut cpu_results = Vec::new();
+    for (_, plan) in &plans {
+        cpu_results.push(Executor::cpu(&cat, 8).run(plan)?);
+    }
+
+    // Operator-at-a-time reference: one blocking offload per operator,
+    // every intermediate round-tripping through the host.
+    let mut acc_op = FpgaAccelerator::new(HbmConfig::default());
+    let mut op_bytes: Vec<Vec<u64>> = vec![Vec::new(); plans.len()];
+    for _ in 0..repeat {
+        for (pi, (name, plan)) in plans.iter().enumerate() {
+            let before = acc_op.stats().total_copy_in_bytes();
+            let r = Executor::accelerated(&cat, 8, &mut acc_op)
+                .operator_at_a_time()
+                .run(plan)?;
+            anyhow::ensure!(
+                r == cpu_results[pi],
+                "operator-at-a-time diverged on {name}"
+            );
+            op_bytes[pi].push(acc_op.stats().total_copy_in_bytes() - before);
+        }
+    }
+
+    // Pipelined: every run submits all plans as whole-query DAGs before
+    // collecting any result, so they co-run on one card.
+    let mut acc_pipe = FpgaAccelerator::new(HbmConfig::default());
+    let mut pipe_bytes: Vec<Vec<u64>> = vec![Vec::new(); plans.len()];
+    for run in 0..repeat {
+        let mut handles = Vec::new();
+        for (pi, (_, plan)) in plans.iter().enumerate() {
+            let req = PipelineRequest::from_plan(plan, &cat)?.client(pi);
+            handles.push(acc_pipe.submit_plan(req));
+        }
+        println!(
+            "run {}/{repeat}: {} pipelines in flight ({} stage jobs queued)",
+            run + 1,
+            handles.len(),
+            acc_pipe.in_flight()
+        );
+        for (pi, handle) in handles.into_iter().enumerate() {
+            let (r, report) = handle.take();
+            anyhow::ensure!(
+                r == cpu_results[pi],
+                "pipeline diverged on {}",
+                plans[pi].0
+            );
+            pipe_bytes[pi].push(report.copy_in_bytes());
+        }
+    }
+
+    let mut t = ReportTable::new(
+        "whole-plan pipelines vs operator-at-a-time (host bytes over the link)",
+        &["plan", "run", "op-at-a-time B", "pipelined B", "saved %"],
+    );
+    for (pi, (name, _)) in plans.iter().enumerate() {
+        for run in 0..repeat {
+            let ob = op_bytes[pi][run];
+            let pb = pipe_bytes[pi][run];
+            let saved = if ob > 0 {
+                100.0 * (ob as f64 - pb as f64) / ob as f64
+            } else {
+                0.0
+            };
+            t.row(vec![
+                name.to_string(),
+                (run + 1).to_string(),
+                ob.to_string(),
+                pb.to_string(),
+                format!("{saved:.1}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    let op_stats = acc_op.stats();
+    let pipe_stats = acc_pipe.stats();
+    let op_total = op_stats.total_copy_in_bytes();
+    let pipe_total = pipe_stats.total_copy_in_bytes();
+    println!(
+        "results identical ✓; total copy-in {op_total} B operator-at-a-time \
+         vs {pipe_total} B pipelined ({:.1}% saved)",
+        100.0 * (op_total as f64 - pipe_total as f64) / op_total.max(1) as f64
+    );
+    anyhow::ensure!(
+        pipe_total < op_total,
+        "pipelining must move strictly fewer host bytes"
+    );
+
+    let json_f = |v: f64| {
+        if v.is_finite() {
+            format!("{v:.9}")
+        } else {
+            "null".to_string()
+        }
+    };
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"plan_pipeline\",\n");
+    json.push_str(&format!("  \"rows\": {rows},\n"));
+    json.push_str(&format!("  \"repeat\": {repeat},\n"));
+    json.push_str(&format!("  \"seed\": {seed},\n"));
+    json.push_str("  \"plans\": [\n");
+    for (pi, (name, _)) in plans.iter().enumerate() {
+        json.push_str("    {\n");
+        json.push_str(&format!("      \"name\": \"{name}\",\n"));
+        let fmt_runs = |v: &[u64]| {
+            v.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ")
+        };
+        json.push_str(&format!(
+            "      \"operator_at_a_time_bytes\": [{}],\n",
+            fmt_runs(&op_bytes[pi])
+        ));
+        json.push_str(&format!(
+            "      \"pipelined_bytes\": [{}]\n",
+            fmt_runs(&pipe_bytes[pi])
+        ));
+        json.push_str(if pi + 1 == plans.len() { "    }\n" } else { "    },\n" });
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"operator_at_a_time\": {\n");
+    json.push_str(&format!("    \"copy_in_bytes\": {op_total},\n"));
+    json.push_str(&format!("    \"jobs\": {},\n", op_stats.completed()));
+    json.push_str(&format!(
+        "    \"simulated_seconds\": {}\n",
+        json_f(op_stats.simulated_time)
+    ));
+    json.push_str("  },\n");
+    json.push_str("  \"pipelined\": {\n");
+    json.push_str(&format!("    \"copy_in_bytes\": {pipe_total},\n"));
+    json.push_str(&format!("    \"jobs\": {},\n", pipe_stats.completed()));
+    json.push_str(&format!("    \"cache_hits\": {},\n", pipe_stats.cache.hits));
+    json.push_str(&format!(
+        "    \"simulated_seconds\": {}\n",
+        json_f(pipe_stats.simulated_time)
+    ));
+    json.push_str("  },\n");
+    json.push_str("  \"savings\": {\n");
+    json.push_str(&format!(
+        "    \"copy_in_bytes\": {},\n",
+        op_total.saturating_sub(pipe_total)
+    ));
+    json.push_str(&format!(
+        "    \"fraction\": {}\n",
+        json_f(1.0 - pipe_total as f64 / op_total.max(1) as f64)
+    ));
+    json.push_str("  }\n}\n");
+
+    let out_path = args.get_str("out", "BENCH_pipeline.json");
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
     Ok(())
 }
 

@@ -1,0 +1,104 @@
+//! Shared DB-analytics plan workload: the orders/customers schema and
+//! the mixed query plans the pipeline surfaces all measure.
+//!
+//! `hbmctl plan` (the CI-checked `BENCH_pipeline.json` artifact), the
+//! `figures --fig pipeline` driver, the `db_analytics` example and the
+//! pipeline acceptance tests deliberately exercise **one** definition of
+//! this workload, so a change to a plan's selectivity or shape shifts
+//! every measurement together instead of silently diverging.
+
+use crate::db::ops::AggKind;
+use crate::db::{Catalog, Column, Plan, Table};
+use crate::util::rng::Xoshiro256;
+
+/// The orders/customers schema: `orders(okey, cust, amount)` with
+/// `cust` uniform over the customer keys and `amount` uniform in
+/// `0..10_000`, plus `customers(ckey)` = `0..customers`.
+pub fn orders_catalog(rows: usize, customers: usize, seed: u64) -> Catalog {
+    let mut rng = Xoshiro256::new(seed);
+    let mut cat = Catalog::new();
+    cat.register(Table::new(
+        "orders",
+        vec![
+            Column::u32("okey", (0..rows as u32).collect()),
+            Column::u32(
+                "cust",
+                (0..rows).map(|_| rng.next_u32() % customers as u32).collect(),
+            ),
+            Column::u32(
+                "amount",
+                (0..rows).map(|_| rng.next_u32() % 10_000).collect(),
+            ),
+        ],
+    ));
+    cat.register(Table::new(
+        "customers",
+        vec![Column::u32("ckey", (0..customers as u32).collect())],
+    ));
+    cat
+}
+
+/// The acceptance shape (scan→select→join→aggregate): count order rows
+/// of the low half of the customer-key range via a join against the
+/// customers table. Its join probe is the selection's projected output —
+/// the intermediate a pipeline keeps on the card and the
+/// operator-at-a-time walk round-trips through the host.
+pub fn key_range_join_count(customers: usize) -> Plan {
+    let cands = Plan::scan("orders", "cust").select(0, (customers / 2) as u32);
+    let probe = Plan::scan("orders", "cust").project(cands);
+    let join = Plan::scan("customers", "ckey").join(probe);
+    Plan::scan("customers", "ckey")
+        .project(join.join_side(true))
+        .aggregate(AggKind::Count)
+}
+
+/// Select an `amount` band, project it back, and sum it — a single-stage
+/// plan (the select) whose finisher runs on the host.
+pub fn amount_band_sum(lo: u32, hi: u32) -> Plan {
+    Plan::scan("orders", "amount")
+        .project(Plan::scan("orders", "amount").select(lo, hi))
+        .aggregate(AggKind::SumU32)
+}
+
+/// Join customers to orders, take the probe-side positions, and compute
+/// the max order key — join-only offload with host-side projection.
+pub fn join_project_max() -> Plan {
+    Plan::scan("orders", "okey")
+        .project(
+            Plan::scan("customers", "ckey")
+                .join(Plan::scan("orders", "cust"))
+                .join_side(false),
+        )
+        .aggregate(AggKind::MaxU32)
+}
+
+/// The named mixed-plan workload `hbmctl plan` replays.
+pub fn mixed_plans(customers: usize) -> Vec<(&'static str, Plan)> {
+    vec![
+        ("scan_select_join_agg", key_range_join_count(customers)),
+        ("select_project_sum", amount_band_sum(0, 4_999)),
+        ("join_project_max", join_project_max()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::{ExecError, Executor, PipelineRequest};
+
+    #[test]
+    fn catalog_and_plans_are_consistent() {
+        let cat = orders_catalog(2_000, 64, 5);
+        assert_eq!(cat.table("orders").unwrap().n_rows(), 2_000);
+        assert_eq!(cat.table("customers").unwrap().n_rows(), 64);
+        for (name, plan) in mixed_plans(64) {
+            // Every plan must execute on the CPU path and lower cleanly.
+            Executor::cpu(&cat, 2)
+                .run(&plan)
+                .unwrap_or_else(|e: ExecError| panic!("{name}: {e}"));
+            let req = PipelineRequest::from_plan(&plan, &cat)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(req.n_stages() >= 1, "{name} must offload something");
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! reports, and — for the ML datasets — a *planted* ground-truth model so
 //! convergence experiments are meaningful (see DESIGN.md §1).
 
+pub mod analytics;
 pub mod datasets;
 pub mod join;
 pub mod selection;

@@ -1,0 +1,305 @@
+//! Contract tests for the whole-plan pipeline boundary: `submit_plan`,
+//! dependency-linked stage DAGs, and HBM-resident intermediates.
+//!
+//! The acceptance bar: a 3+-operator plan (scan→select→join→aggregate)
+//! submitted via `submit_plan` moves strictly fewer host bytes than the
+//! same plan run operator-at-a-time, with identical results; and two
+//! concurrently submitted pipelines complete with results identical to
+//! sequential execution. A randomized-plan property (over the miniature
+//! proptest harness) holds the pipelined executor result-identical to
+//! the CPU executor for arbitrary Select/Project/Join/Aggregate trees.
+
+use hbm_analytics::db::ops::AggKind;
+use hbm_analytics::db::{
+    Catalog, Column, ColumnData, Executor, FpgaAccelerator, Intermediate,
+    PipelineRequest, Plan, Table,
+};
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::util::proptest::{check, U64Range};
+use hbm_analytics::util::rng::Xoshiro256;
+use hbm_analytics::workloads::analytics::{amount_band_sum, orders_catalog};
+
+fn cfg() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+/// The acceptance shape: scan → select → join → aggregate, where the
+/// join's probe side is the selection's projected output — the shared
+/// definition every pipeline surface measures.
+fn acceptance_plan(customers: usize) -> Plan {
+    hbm_analytics::workloads::analytics::key_range_join_count(customers)
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: strictly less copy-in than operator-at-a-time, identical
+// results.
+// ---------------------------------------------------------------------
+
+#[test]
+fn pipelined_plan_moves_strictly_fewer_bytes_than_operator_at_a_time() {
+    let (rows, customers) = (60_000, 600);
+    let cat = orders_catalog(rows, customers, 7);
+    let plan = acceptance_plan(customers);
+    let want = Executor::cpu(&cat, 4).run(&plan).unwrap();
+
+    let mut acc_op = FpgaAccelerator::new(cfg());
+    let got_op = Executor::accelerated(&cat, 4, &mut acc_op)
+        .operator_at_a_time()
+        .run(&plan)
+        .unwrap();
+    assert_eq!(got_op, want, "operator-at-a-time diverged from CPU");
+    let op_bytes = acc_op.stats().total_copy_in_bytes();
+
+    let mut acc_pipe = FpgaAccelerator::new(cfg());
+    let request = PipelineRequest::from_plan(&plan, &cat).unwrap();
+    assert_eq!(request.stage_names(), vec!["selection", "join"]);
+    let mut handle = acc_pipe.submit_plan(request);
+    let got = handle.wait();
+    assert_eq!(got, want, "pipelined plan diverged from CPU");
+
+    let report = handle.report().expect("completed pipeline");
+    let pipe_bytes = report.copy_in_bytes();
+    assert_eq!(
+        pipe_bytes,
+        acc_pipe.stats().total_copy_in_bytes(),
+        "per-stage records must add up to the card's accounting"
+    );
+    assert!(
+        pipe_bytes < op_bytes,
+        "pipeline must move strictly fewer host bytes: {pipe_bytes} vs {op_bytes}"
+    );
+    // The dependent join stage moved only its host build side: the probe
+    // came from the pinned HBM-resident intermediate + a resident gather
+    // source.
+    assert_eq!(report.stages[1].copy_in_bytes, (customers * 4) as u64);
+    assert!(report.stages[1].cache_hits >= 2);
+    assert!(report.latency() > 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: two pipelines in flight interleave; results identical to
+// sequential execution.
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_pipelines_match_sequential_results() {
+    let (rows, customers) = (50_000, 500);
+    let cat = orders_catalog(rows, customers, 13);
+    let plan_a = acceptance_plan(customers);
+    let plan_b = amount_band_sum(2_000, 7_999);
+
+    // Sequential reference: each plan alone on a fresh card.
+    let seq_a = {
+        let mut acc = FpgaAccelerator::new(cfg());
+        Executor::accelerated(&cat, 4, &mut acc).run(&plan_a).unwrap()
+    };
+    let seq_b = {
+        let mut acc = FpgaAccelerator::new(cfg());
+        Executor::accelerated(&cat, 4, &mut acc).run(&plan_b).unwrap()
+    };
+
+    // Concurrent: both whole queries submitted before either is waited on.
+    let mut acc = FpgaAccelerator::new(cfg());
+    let mut ha = acc.submit_plan(
+        PipelineRequest::from_plan(&plan_a, &cat).unwrap().client(0),
+    );
+    let hb = acc.submit_plan(
+        PipelineRequest::from_plan(&plan_b, &cat).unwrap().client(1),
+    );
+    assert_eq!(acc.in_flight(), 3, "2 + 1 stage jobs queued before any wait");
+    assert!(!ha.poll(), "poll must not advance the card");
+    assert_eq!(acc.stats().completed(), 0);
+
+    let (got_b, report_b) = hb.take();
+    let got_a = ha.wait();
+    assert_eq!(got_a, seq_a, "interleaved pipeline A diverged");
+    assert_eq!(got_b, seq_b, "interleaved pipeline B diverged");
+    assert!(report_b.copy_in_bytes() > 0, "B's cold column crossed the link");
+
+    // The overlap is real: both pipelines' first stages co-ran in the
+    // fair-share first round.
+    let stats = acc.stats();
+    assert_eq!(stats.completed(), 3);
+    let first_round_starts = stats
+        .records
+        .iter()
+        .filter(|r| r.start_time == 0.0)
+        .count();
+    assert!(
+        first_round_starts >= 2,
+        "fair-share must co-run the two pipelines' ready stages"
+    );
+}
+
+#[test]
+fn dropped_pipeline_still_runs_and_keeps_the_card_serviceable() {
+    let (rows, customers) = (30_000, 300);
+    let cat = orders_catalog(rows, customers, 23);
+    let mut acc = FpgaAccelerator::new(cfg());
+    let dropped = acc.submit_plan(
+        PipelineRequest::from_plan(&acceptance_plan(customers), &cat).unwrap(),
+    );
+    let dropped_ids = dropped.ids().to_vec();
+    drop(dropped);
+
+    // A second pipeline on the same card completes normally...
+    let plan = amount_band_sum(0, 999);
+    let want = Executor::cpu(&cat, 4).run(&plan).unwrap();
+    let got = Executor::accelerated(&cat, 4, &mut acc).run(&plan).unwrap();
+    assert_eq!(got, want);
+
+    // ...and the dropped pipeline's stages still ran (dependency edges
+    // resolve even for abandoned outputs), with records kept.
+    acc.wait_all();
+    let stats = acc.stats();
+    for id in dropped_ids {
+        assert!(
+            stats.records.iter().any(|r| r.id == id),
+            "dropped pipeline stage {id} must keep its record"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: pipelined execution ≡ CPU executor on randomized plans.
+// ---------------------------------------------------------------------
+
+/// Small catalog for randomized plans: three aligned u32 columns on "t"
+/// (values in 0..1000) and a unique build table "d".
+fn prop_catalog() -> Catalog {
+    let rows = 2_000usize;
+    let mut rng = Xoshiro256::new(0xF00D);
+    let mut cat = Catalog::new();
+    cat.register(Table::new(
+        "t",
+        vec![
+            Column::u32("a", (0..rows as u32).map(|i| i % 1_000).collect()),
+            Column::u32("b", (0..rows).map(|_| rng.next_u32() % 1_000).collect()),
+            Column::u32("c", (0..rows).map(|_| rng.next_u32() % 1_000).collect()),
+        ],
+    ));
+    cat.register(Table::new(
+        "d",
+        vec![Column::u32("pk", (0..500u32).collect())],
+    ));
+    cat
+}
+
+/// Three positionally-aligned columns derived from "t": level 0 is the
+/// base scans; each deeper level projects all three through one shared
+/// random selection, so any member stays a valid gather target for
+/// candidates produced from any other member.
+fn aligned_columns(rng: &mut Xoshiro256, depth: usize) -> Vec<Plan> {
+    let cols = vec![Plan::scan("t", "a"), Plan::scan("t", "b"), Plan::scan("t", "c")];
+    if depth == 0 {
+        return cols;
+    }
+    let cols = aligned_columns(rng, depth - 1);
+    let sel = cols[(rng.next_u32() % 3) as usize].clone();
+    let (x, y) = (rng.next_u32() % 1_100, rng.next_u32() % 1_100);
+    let cands = sel.select(x.min(y), x.max(y));
+    cols.into_iter().map(|c| c.project(cands.clone())).collect()
+}
+
+/// A random well-typed Select/Project/Join/Aggregate tree.
+fn random_plan(seed: u64) -> Plan {
+    let mut rng = Xoshiro256::new(seed);
+    let depth = (rng.next_u32() % 3) as usize;
+    let cols = aligned_columns(&mut rng, depth);
+    let pick = |rng: &mut Xoshiro256| cols[(rng.next_u32() % 3) as usize].clone();
+    match rng.next_u32() % 5 {
+        0 => pick(&mut rng),
+        1 => {
+            let (x, y) = (rng.next_u32() % 1_100, rng.next_u32() % 1_100);
+            pick(&mut rng).select(x.min(y), x.max(y))
+        }
+        2 => Plan::scan("d", "pk").join(pick(&mut rng)),
+        3 => {
+            let join = Plan::scan("d", "pk").join(pick(&mut rng));
+            if rng.next_u32() % 2 == 0 {
+                Plan::scan("d", "pk").project(join.join_side(true))
+            } else {
+                pick(&mut rng).project(join.join_side(false))
+            }
+        }
+        _ => {
+            let kind = match rng.next_u32() % 4 {
+                0 => AggKind::Count,
+                1 => AggKind::SumU32,
+                2 => AggKind::MinU32,
+                _ => AggKind::MaxU32,
+            };
+            pick(&mut rng).aggregate(kind)
+        }
+    }
+}
+
+/// Join-derived orders differ between the engine and CPU paths, so
+/// compare order-insensitively (aggregates are order-independent).
+fn normalized(i: Intermediate) -> Intermediate {
+    match i {
+        Intermediate::Candidates(mut v) => {
+            v.sort_unstable();
+            Intermediate::Candidates(v)
+        }
+        Intermediate::Pairs(mut p) => {
+            p.sort_unstable();
+            Intermediate::Pairs(p)
+        }
+        Intermediate::Column(ColumnData::U32(mut v)) => {
+            v.sort_unstable();
+            Intermediate::Column(ColumnData::U32(v))
+        }
+        other => other,
+    }
+}
+
+#[test]
+fn prop_random_plans_pipeline_equals_cpu() {
+    let cat = prop_catalog();
+    // Each case runs three full executions; keep the count modest.
+    std::env::set_var("HBM_PROPTEST_CASES", "10");
+    check("pipelined plan ≡ cpu executor", &U64Range(1, 1 << 32), |&seed| {
+        let plan = random_plan(seed);
+        let cpu = normalized(Executor::cpu(&cat, 2).run(&plan).unwrap());
+        let mut acc = FpgaAccelerator::new(cfg());
+        let piped =
+            normalized(Executor::accelerated(&cat, 2, &mut acc).run(&plan).unwrap());
+        let mut acc2 = FpgaAccelerator::new(cfg());
+        let blocking = normalized(
+            Executor::accelerated(&cat, 2, &mut acc2)
+                .operator_at_a_time()
+                .run(&plan)
+                .unwrap(),
+        );
+        piped == cpu && blocking == cpu
+    });
+    std::env::remove_var("HBM_PROPTEST_CASES");
+}
+
+// ---------------------------------------------------------------------
+// Residency across pipelines: a repeated keyed plan is fully resident.
+// ---------------------------------------------------------------------
+
+#[test]
+fn repeat_pipeline_on_a_warm_card_copies_nothing() {
+    let (rows, customers) = (40_000, 400);
+    let cat = orders_catalog(rows, customers, 31);
+    let plan = acceptance_plan(customers);
+    let mut acc = FpgaAccelerator::new(cfg());
+    let (first, cold) = acc
+        .submit_plan(PipelineRequest::from_plan(&plan, &cat).unwrap())
+        .take();
+    let (second, warm) = acc
+        .submit_plan(PipelineRequest::from_plan(&plan, &cat).unwrap())
+        .take();
+    assert_eq!(first, second);
+    assert!(cold.copy_in_bytes() > 0, "cold card pays the base-column copies");
+    assert_eq!(
+        warm.copy_in_bytes(),
+        0,
+        "every input of the repeat is HBM-resident (keyed bases + pinned \
+         intermediate)"
+    );
+    assert!(warm.latency() < cold.latency());
+}

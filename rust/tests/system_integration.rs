@@ -187,13 +187,25 @@ fn accelerated_executor_is_result_identical_on_query_suite() {
             .aggregate(AggKind::MaxU32),
     ];
     for (i, q) in queries.iter().enumerate() {
-        let cpu_res = Executor::cpu(&cat, 4).run(q);
+        let cpu_res = Executor::cpu(&cat, 4).run(q).unwrap();
+        // Pipelined (the default) and operator-at-a-time accelerated
+        // paths must both be drop-in replacements.
         let mut acc = FpgaAccelerator::new(cfg());
-        let fpga_res = Executor::accelerated(&cat, 4, &mut acc).run(q);
+        let fpga_res = Executor::accelerated(&cat, 4, &mut acc).run(q).unwrap();
         assert_eq!(
             format!("{cpu_res:?}"),
             format!("{fpga_res:?}"),
-            "query {i} diverged"
+            "query {i} diverged (pipelined)"
+        );
+        let mut acc = FpgaAccelerator::new(cfg());
+        let blocking_res = Executor::accelerated(&cat, 4, &mut acc)
+            .operator_at_a_time()
+            .run(q)
+            .unwrap();
+        assert_eq!(
+            format!("{cpu_res:?}"),
+            format!("{blocking_res:?}"),
+            "query {i} diverged (operator-at-a-time)"
         );
     }
 }
