@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     let (fpga_idx, timing) = handle.wait_selection();
     let mut cpu_idx = cpu::selection::range_select(&w.data, w.lo, w.hi, 8);
     cpu_idx.sort_unstable();
-    assert_eq!(fpga_idx, cpu_idx, "FPGA and CPU must agree");
+    assert_eq!(fpga_idx[..], cpu_idx[..], "FPGA and CPU must agree");
     let gbs = (w.data.len() * 4) as f64 / timing.exec / 1e9;
     println!(
         "  {} matches of {} items; simulated device rate {gbs:.1} GB/s \

@@ -1,0 +1,327 @@
+//! Host-performance benchmark: how fast the *simulator itself* runs.
+//!
+//! Every other benchmark in this crate reports simulated-device time; the
+//! ROADMAP's "fast as the hardware allows" scale-up additionally needs
+//! the host model to keep up — a 2 GB `hbmctl serve` run must be
+//! bottlenecked by the modeled hardware, not by the functional simulator.
+//! `hbmctl bench-host` measures exactly that: wall-clock throughput
+//! (input rows/s) of the shared [`workloads::analytics`] plan mix,
+//! executed end-to-end through the plan executor and the coordinator, in
+//! four modes crossed from two switches:
+//!
+//! * **serial vs parallel** — functional engine passes on the calling
+//!   thread vs on `std::thread::scope` workers over disjoint `HbmView`s
+//!   (`Coordinator::set_parallel_functional`);
+//! * **cold vs resident** — a first pass over a fresh card vs a repeat
+//!   pass whose keyed base columns are HBM-resident, where the
+//!   physically-resident cache also skips the host→HBM placement writes.
+//!
+//! All four modes must produce results identical to the CPU executor —
+//! the benchmark asserts it — so the deltas are pure host-speed, with
+//! bit-identical simulator output. A separate keyed-repeat probe pins the
+//! zero-write invariant exactly: the repeat submission of keyed
+//! selection/join requests performs **zero** host→HBM byte writes.
+//!
+//! [`workloads::analytics`]: crate::workloads::analytics
+
+use std::time::Instant;
+
+use crate::db::{Executor, FpgaAccelerator, Intermediate, OffloadRequest, PipelineRequest};
+use crate::hbm::{FabricClock, HbmConfig};
+use crate::util::table::Table;
+use crate::workloads::analytics;
+
+/// Workload shape for one bench-host run.
+#[derive(Debug, Clone)]
+pub struct HostBenchSpec {
+    /// Rows in the orders table (scales every plan).
+    pub rows: usize,
+    pub seed: u64,
+}
+
+impl Default for HostBenchSpec {
+    fn default() -> Self {
+        Self { rows: 400_000, seed: 0xB05 }
+    }
+}
+
+/// One measured execution mode.
+#[derive(Debug, Clone)]
+pub struct ModeResult {
+    pub name: &'static str,
+    /// Host wall-clock of the pass, seconds.
+    pub wall_s: f64,
+    /// Input rows processed per host second (rows × plans / wall).
+    pub rows_per_s: f64,
+    /// Host bytes charged over the link during the pass.
+    pub copy_in_bytes: u64,
+    /// Host bytes physically written into `HbmMemory` during the pass.
+    pub host_write_bytes: u64,
+}
+
+/// Full bench-host report.
+#[derive(Debug, Clone)]
+pub struct HostBenchReport {
+    pub spec: HostBenchSpec,
+    pub plans: usize,
+    /// serial_cold, serial_resident, parallel_cold, parallel_resident.
+    pub modes: Vec<ModeResult>,
+    /// Keyed-repeat probe: host→HBM bytes of the cold pass and of the
+    /// repeat pass (the latter must be zero).
+    pub probe_first_write_bytes: u64,
+    pub probe_repeat_write_bytes: u64,
+}
+
+impl HostBenchReport {
+    fn mode(&self, name: &str) -> &ModeResult {
+        self.modes
+            .iter()
+            .find(|m| m.name == name)
+            .expect("bench-host always measures all four modes")
+    }
+
+    /// Parallel-cold throughput over serial-cold (same cold card state).
+    pub fn parallel_vs_serial(&self) -> f64 {
+        self.mode("parallel_cold").rows_per_s / self.mode("serial_cold").rows_per_s
+    }
+
+    /// Parallel-resident throughput over parallel-cold (what physical
+    /// residency buys on top of threading).
+    pub fn resident_vs_cold(&self) -> f64 {
+        self.mode("parallel_resident").rows_per_s
+            / self.mode("parallel_cold").rows_per_s
+    }
+
+    /// The headline: all three optimizations together (parallel
+    /// functional execution + zero-copy columns + physically-resident
+    /// cache) against the serial cold baseline, measured in one run.
+    pub fn best_vs_serial(&self) -> f64 {
+        self.mode("parallel_resident").rows_per_s
+            / self.mode("serial_cold").rows_per_s
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "bench-host: simulator wall-clock throughput (host time, identical results)",
+            &["mode", "wall s", "rows/s", "copy-in B", "host→HBM B"],
+        );
+        for m in &self.modes {
+            t.row(vec![
+                m.name.to_string(),
+                format!("{:.3}", m.wall_s),
+                format!("{:.0}", m.rows_per_s),
+                m.copy_in_bytes.to_string(),
+                m.host_write_bytes.to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "speedups: parallel/serial {:.2}x, resident/cold {:.2}x, \
+             combined {:.2}x\n\
+             keyed-repeat probe: cold wrote {} B host→HBM, repeat wrote {} B\n",
+            self.parallel_vs_serial(),
+            self.resident_vs_cold(),
+            self.best_vs_serial(),
+            self.probe_first_write_bytes,
+            self.probe_repeat_write_bytes,
+        ));
+        out
+    }
+}
+
+fn json_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Machine-readable report (hand-rolled JSON: the offline crate set has
+/// no serde).
+pub fn bench_json(report: &HostBenchReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"host\",\n");
+    out.push_str(&format!("  \"rows\": {},\n", report.spec.rows));
+    out.push_str(&format!("  \"seed\": {},\n", report.spec.seed));
+    out.push_str(&format!("  \"plans\": {},\n", report.plans));
+    out.push_str("  \"modes\": [\n");
+    for (i, m) in report.modes.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"name\": \"{}\",\n", m.name));
+        out.push_str(&format!("      \"wall_s\": {},\n", json_f(m.wall_s)));
+        out.push_str(&format!("      \"rows_per_s\": {},\n", json_f(m.rows_per_s)));
+        out.push_str(&format!("      \"copy_in_bytes\": {},\n", m.copy_in_bytes));
+        out.push_str(&format!(
+            "      \"host_write_bytes\": {}\n",
+            m.host_write_bytes
+        ));
+        out.push_str(if i + 1 == report.modes.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"speedup\": {\n");
+    out.push_str(&format!(
+        "    \"parallel_vs_serial\": {},\n",
+        json_f(report.parallel_vs_serial())
+    ));
+    out.push_str(&format!(
+        "    \"resident_vs_cold\": {},\n",
+        json_f(report.resident_vs_cold())
+    ));
+    out.push_str(&format!(
+        "    \"best_vs_serial\": {}\n",
+        json_f(report.best_vs_serial())
+    ));
+    out.push_str("  },\n");
+    out.push_str("  \"resident_repeat\": {\n");
+    out.push_str(&format!(
+        "    \"first_host_write_bytes\": {},\n",
+        report.probe_first_write_bytes
+    ));
+    out.push_str(&format!(
+        "    \"repeat_host_write_bytes\": {}\n",
+        report.probe_repeat_write_bytes
+    ));
+    out.push_str("  }\n}\n");
+    out
+}
+
+/// One pass of the analytics plan mix through `acc`: all plans submitted
+/// as whole-query pipelines before any is collected (they co-run), wall
+/// time measured around submission + completion.
+fn run_pass(
+    acc: &mut FpgaAccelerator,
+    cat: &crate::db::Catalog,
+    plans: &[(&'static str, crate::db::Plan)],
+    want: &[Intermediate],
+) -> f64 {
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(plans.len());
+    for (_, plan) in plans {
+        let req = PipelineRequest::from_plan(plan, cat).expect("lowerable plan");
+        handles.push(acc.submit_plan(req));
+    }
+    let results: Vec<Intermediate> =
+        handles.into_iter().map(|h| h.take().0).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    for ((name, _), (got, expect)) in plans.iter().zip(results.iter().zip(want)) {
+        assert_eq!(got, expect, "bench-host mode diverged on plan {name}");
+    }
+    wall
+}
+
+/// Keyed-repeat probe: submit the same keyed request twice on one card —
+/// one card per request shape, so the repeat reuses the exact placements
+/// — and report (cold host→HBM bytes, repeat host→HBM bytes). The repeat
+/// must write exactly zero bytes: its chunks are physically resident.
+fn resident_write_probe(rows: usize, seed: u64) -> (u64, u64) {
+    use crate::workloads::{JoinWorkload, SelectionWorkload};
+    let sel = SelectionWorkload::uniform(rows as u64, 0.1, seed);
+    let join = JoinWorkload::generate(rows, 2_048, true, true, seed ^ 0x9E37);
+    let probe = |request: &dyn Fn() -> OffloadRequest| -> (u64, u64) {
+        let mut acc =
+            FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
+        let mut pass = |acc: &mut FpgaAccelerator| {
+            let before = acc.stats().host_write_bytes;
+            acc.submit(request()).take();
+            acc.stats().host_write_bytes - before
+        };
+        (pass(&mut acc), pass(&mut acc))
+    };
+    let (sel_cold, sel_repeat) = probe(&|| {
+        OffloadRequest::select(sel.lo, sel.hi)
+            .on(&sel.data)
+            .key("probe", "sel")
+    });
+    let (join_cold, join_repeat) = probe(&|| {
+        OffloadRequest::join(&join.s, &join.l)
+            .key("probe", "dim")
+            .probe_key("probe", "fact")
+    });
+    (sel_cold + join_cold, sel_repeat + join_repeat)
+}
+
+/// Run the whole bench: four modes over the shared analytics mix plus the
+/// keyed-repeat write probe.
+pub fn run(spec: &HostBenchSpec) -> HostBenchReport {
+    let customers = (spec.rows / 100).max(64);
+    let cat = analytics::orders_catalog(spec.rows, customers, spec.seed);
+    let plans = analytics::mixed_plans(customers);
+    let want: Vec<Intermediate> = plans
+        .iter()
+        .map(|(name, plan)| {
+            Executor::cpu(&cat, 4)
+                .run(plan)
+                .unwrap_or_else(|e| panic!("{name}: {e}"))
+        })
+        .collect();
+    let total_rows = (spec.rows * plans.len()) as f64;
+
+    let mut modes = Vec::new();
+    for &parallel in &[false, true] {
+        let mut acc =
+            FpgaAccelerator::new(HbmConfig::at_clock(FabricClock::Mhz200));
+        acc.set_parallel_functional(parallel);
+        for &resident in &[false, true] {
+            let name = match (parallel, resident) {
+                (false, false) => "serial_cold",
+                (false, true) => "serial_resident",
+                (true, false) => "parallel_cold",
+                (true, true) => "parallel_resident",
+            };
+            let before = acc.stats();
+            let wall = run_pass(&mut acc, &cat, &plans, &want);
+            let after = acc.stats();
+            modes.push(ModeResult {
+                name,
+                wall_s: wall,
+                rows_per_s: total_rows / wall.max(1e-9),
+                copy_in_bytes: after.total_copy_in_bytes()
+                    - before.total_copy_in_bytes(),
+                host_write_bytes: after.host_write_bytes - before.host_write_bytes,
+            });
+        }
+    }
+
+    let (probe_first, probe_repeat) = resident_write_probe(spec.rows, spec.seed);
+    HostBenchReport {
+        spec: spec.clone(),
+        plans: plans.len(),
+        modes,
+        probe_first_write_bytes: probe_first,
+        probe_repeat_write_bytes: probe_repeat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_host_runs_and_reports_consistently() {
+        let spec = HostBenchSpec { rows: 12_000, seed: 7 };
+        let report = run(&spec);
+        assert_eq!(report.modes.len(), 4);
+        for m in &report.modes {
+            assert!(m.wall_s > 0.0 && m.rows_per_s > 0.0, "{}", m.name);
+        }
+        // Cold passes pay copy-in; resident repeats are fully cached
+        // (every base column is keyed in the analytics mix).
+        assert!(report.mode("serial_cold").copy_in_bytes > 0);
+        assert_eq!(report.mode("parallel_resident").copy_in_bytes, 0);
+        // The keyed-repeat probe writes zero host bytes on the repeat.
+        assert!(report.probe_first_write_bytes > 0);
+        assert_eq!(report.probe_repeat_write_bytes, 0);
+        let json = bench_json(&report);
+        for field in [
+            "\"bench\": \"host\"",
+            "\"parallel_vs_serial\"",
+            "\"best_vs_serial\"",
+            "\"repeat_host_write_bytes\": 0",
+        ] {
+            assert!(json.contains(field), "missing {field}");
+        }
+        assert!(!report.render().is_empty());
+    }
+}

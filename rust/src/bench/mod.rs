@@ -8,6 +8,8 @@
 
 pub mod figures;
 pub mod harness;
+pub mod host;
 
 pub use figures::{FigureCtx, FigureOutput};
 pub use harness::Bencher;
+pub use host::{HostBenchReport, HostBenchSpec};

@@ -14,7 +14,12 @@
 //! The cache tracks *residency and accounting*; placement inside the
 //! engines' home windows is (re)done per round by the scheduler, since
 //! the ideal partitioning depends on how many engines the job was granted
-//! (§IV: one partition per engine port).
+//! (§IV: one partition per engine port). The *physical* side of residency
+//! — which card address ranges currently hold which column bytes, so a
+//! cache hit can skip the host→HBM write entirely — is tracked by the
+//! sibling [`ResidentLayout`]: the scheduler claims a span per placed
+//! input chunk, hits whose span is still valid skip `HbmMemory` writes,
+//! and eviction releases the spans (freeing their fully-covered pages).
 //!
 //! ## Pinning
 //!
@@ -77,6 +82,10 @@ pub struct ColumnCache {
     tick: u64,
     entries: BTreeMap<ColumnKey, Entry>,
     stats: CacheStats,
+    /// Keys dropped by LRU eviction since the last
+    /// [`drain_evicted`](ColumnCache::drain_evicted) — the scheduler
+    /// consumes these to release the keys' physical spans and pages.
+    evicted: Vec<ColumnKey>,
 }
 
 impl ColumnCache {
@@ -87,6 +96,7 @@ impl ColumnCache {
             tick: 0,
             entries: BTreeMap::new(),
             stats: CacheStats::default(),
+            evicted: Vec::new(),
         }
     }
 
@@ -200,12 +210,13 @@ impl ColumnCache {
     fn evict_to_fit(&mut self, incoming: u64) {
         while self.used + incoming > self.capacity {
             // Least-recently-used *unpinned* entry; ties (impossible with
-            // a monotone tick) would break deterministically on key order.
+            // a monotone tick) break deterministically on key order. The
+            // comparison works on borrowed keys — no per-candidate clone.
             let victim = self
                 .entries
                 .iter()
                 .filter(|(_, e)| e.pins == 0)
-                .min_by_key(|(key, e)| (e.last_use, (*key).clone()))
+                .min_by(|a, b| (a.1.last_use, a.0).cmp(&(b.1.last_use, b.0)))
                 .map(|(key, _)| key.clone());
             let Some(victim) = victim else {
                 return; // everything left is pinned
@@ -213,7 +224,15 @@ impl ColumnCache {
             let entry = self.entries.remove(&victim).unwrap();
             self.used -= entry.bytes;
             self.stats.evictions += 1;
+            self.evicted.push(victim);
         }
+    }
+
+    /// Keys dropped by LRU eviction since the last drain, in eviction
+    /// order. The scheduler consumes these after every admission batch to
+    /// invalidate the keys' physical spans and free their pages.
+    pub fn drain_evicted(&mut self) -> Vec<ColumnKey> {
+        std::mem::take(&mut self.evicted)
     }
 
     /// Drop all entries (counters are kept). Pins do not survive a flush:
@@ -221,6 +240,141 @@ impl ColumnCache {
     pub fn flush(&mut self) {
         self.entries.clear();
         self.used = 0;
+        self.evicted.clear();
+    }
+}
+
+/// One physically-placed chunk of a resident column: `content_bytes`
+/// logical bytes of `key`'s column starting at source byte `offset`,
+/// written into a `bytes`-sized (beat-aligned) placement striped by the
+/// shim at stack-0 base `lo_addr` (the stack-1 mirror is implied).
+/// Identity includes the *exact* content length, not just the aligned
+/// placement size: two chunks of different item counts can round up to
+/// the same allocation, and matching on the aligned size alone would
+/// let a repeat "hit" tail bytes the previous chunk never wrote.
+#[derive(Debug, Clone)]
+struct Span {
+    bytes: u64,
+    content_bytes: u64,
+    key: ColumnKey,
+    offset: u64,
+}
+
+/// Physical residency map of the card: which shim placements currently
+/// hold which column bytes.
+///
+/// The accounting cache ([`ColumnCache`]) decides whether a copy-in is
+/// *charged*; this layout decides whether the functional simulator must
+/// actually *write* the column into `HbmMemory` again. The scheduler
+/// claims a span for every input chunk it places: if the exact span
+/// (same placement, same column slice) is still valid, the bytes are
+/// already on the card and the host→HBM write is skipped — the
+/// physically-resident fast path that makes repeat queries run at host
+/// speed. Any allocation overlapping a span invalidates it (the round's
+/// scratch will overwrite those addresses), and evicting a key releases
+/// its spans so their fully-covered pages can be freed.
+///
+/// All coordinates are the shim's logical ones: a span at `lo_addr` with
+/// `bytes` logical bytes occupies `[lo_addr, lo_addr + bytes/2)` on
+/// stack 0 and the same interval at `+4 GiB` on stack 1, so stack-0
+/// interval overlap is exactly physical overlap.
+#[derive(Debug, Default)]
+pub struct ResidentLayout {
+    /// Spans by stack-0 base address; pairwise disjoint.
+    spans: BTreeMap<u64, Span>,
+}
+
+fn half_extent(bytes: u64) -> u64 {
+    // A logical buffer of `bytes` occupies bytes/2 per stack, at least
+    // one byte for interval math on degenerate tiny buffers.
+    (bytes / 2).max(1)
+}
+
+impl ResidentLayout {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of live spans (test/introspection hook).
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Claim the placement `[lo_addr, +bytes)` for this round. When
+    /// `content` names a column slice `(key, source byte offset, exact
+    /// content bytes)` and the identical span is already valid, returns
+    /// `true`: the bytes are physically present and the caller skips the
+    /// `HbmMemory` write. Otherwise every overlapping span is
+    /// invalidated, the new content (if keyed) is recorded, and `false`
+    /// is returned — the caller must write the bytes.
+    pub fn claim(
+        &mut self,
+        lo_addr: u64,
+        bytes: u64,
+        content: Option<(&ColumnKey, u64, u64)>,
+    ) -> bool {
+        if let Some((key, offset, content_bytes)) = content {
+            if let Some(span) = self.spans.get(&lo_addr) {
+                if span.bytes == bytes
+                    && span.offset == offset
+                    && span.content_bytes == content_bytes
+                    && span.key == *key
+                {
+                    return true;
+                }
+            }
+        }
+        self.invalidate(lo_addr, bytes);
+        if let Some((key, offset, content_bytes)) = content {
+            self.spans.insert(
+                lo_addr,
+                Span { bytes, content_bytes, key: key.clone(), offset },
+            );
+        }
+        false
+    }
+
+    /// Drop every span overlapping the placement `[lo_addr, +bytes)` —
+    /// those addresses are about to be overwritten by scratch. Spans are
+    /// pairwise disjoint, so only the predecessor of `lo_addr` can reach
+    /// into the interval from below; everything else overlapping starts
+    /// inside it — O(log n + overlaps), not a scan of all lower spans.
+    pub fn invalidate(&mut self, lo_addr: u64, bytes: u64) {
+        let lo = lo_addr;
+        let hi = lo_addr + half_extent(bytes);
+        let mut doomed: Vec<u64> =
+            self.spans.range(lo..hi).map(|(&s_lo, _)| s_lo).collect();
+        if let Some((&s_lo, span)) = self.spans.range(..lo).next_back() {
+            if s_lo + half_extent(span.bytes) > lo {
+                doomed.push(s_lo);
+            }
+        }
+        for s_lo in doomed {
+            self.spans.remove(&s_lo);
+        }
+    }
+
+    /// Release every span holding `key`'s bytes (the key was evicted from
+    /// the accounting cache). Returns the released `(lo_addr, bytes)`
+    /// placements so the caller can free their fully-covered pages.
+    pub fn remove_key(&mut self, key: &ColumnKey) -> Vec<(u64, u64)> {
+        let doomed: Vec<u64> = self
+            .spans
+            .iter()
+            .filter(|(_, span)| span.key == *key)
+            .map(|(&s_lo, _)| s_lo)
+            .collect();
+        doomed
+            .into_iter()
+            .map(|s_lo| {
+                let span = self.spans.remove(&s_lo).expect("span just listed");
+                (s_lo, span.bytes)
+            })
+            .collect()
     }
 }
 
@@ -331,5 +485,63 @@ mod tests {
         assert_eq!(c.used(), 0);
         assert_eq!(c.stats().misses, 1);
         assert!(!c.access(&key("a"), 100), "flushed entry must miss");
+    }
+
+    #[test]
+    fn evicted_keys_are_drained_in_order() {
+        let mut c = ColumnCache::new(1000);
+        c.access(&key("a"), 400);
+        c.access(&key("b"), 400);
+        c.access(&key("c"), 400); // evicts a
+        c.access(&key("d"), 400); // evicts b
+        assert_eq!(c.drain_evicted(), vec![key("a"), key("b")]);
+        assert!(c.drain_evicted().is_empty(), "drain empties the list");
+    }
+
+    #[test]
+    fn layout_claim_hits_only_on_identical_spans() {
+        let mut l = ResidentLayout::new();
+        let k = key("col");
+        // First placement: miss, recorded.
+        assert!(!l.claim(0, 1024, Some((&k, 0, 1000))));
+        // Identical placement + content: hit, write skippable.
+        assert!(l.claim(0, 1024, Some((&k, 0, 1000))));
+        // Same aligned placement but different exact content length (a
+        // different item count rounding to the same allocation): miss —
+        // the tail bytes were never written by the previous chunk.
+        assert!(!l.claim(0, 1024, Some((&k, 0, 996))));
+        // Same base, different slice offset: not the same bytes.
+        assert!(!l.claim(0, 1024, Some((&k, 4096, 996))));
+        // Different size at the same base after re-record: also a miss.
+        assert!(!l.claim(0, 2048, Some((&k, 4096, 2048))));
+        assert_eq!(l.len(), 1, "re-claims replace, never duplicate");
+    }
+
+    #[test]
+    fn layout_scratch_allocations_invalidate_overlaps() {
+        let mut l = ResidentLayout::new();
+        let k = key("col");
+        assert!(!l.claim(0, 2048, Some((&k, 0, 2048)))); // stack-0 extent [0, 1024)
+        // Anonymous scratch overlapping the tail kills the span...
+        assert!(!l.claim(512, 64, None));
+        assert!(!l.claim(0, 2048, Some((&k, 0, 2048))), "span was invalidated");
+        // ...but scratch beyond the extent leaves it alone.
+        assert!(!l.claim(1024, 64, None));
+        assert!(l.claim(0, 2048, Some((&k, 0, 2048))));
+    }
+
+    #[test]
+    fn layout_remove_key_releases_every_span_of_that_key() {
+        let mut l = ResidentLayout::new();
+        let (ka, kb) = (key("a"), key("b"));
+        l.claim(0, 1024, Some((&ka, 0, 1024)));
+        l.claim(4096, 1024, Some((&ka, 512, 1024)));
+        l.claim(8192, 1024, Some((&kb, 0, 1024)));
+        let mut released = l.remove_key(&ka);
+        released.sort_unstable();
+        assert_eq!(released, vec![(0, 1024), (4096, 1024)]);
+        assert_eq!(l.len(), 1);
+        assert!(l.remove_key(&ka).is_empty(), "a's spans are fully released");
+        assert!(!l.claim(8192, 1024, Some((&ka, 0, 1024))), "b's span is not a's");
     }
 }

@@ -1,5 +1,12 @@
 //! Job model for the L3 coordinator: what clients submit, what the
 //! scheduler tracks, and what comes back.
+//!
+//! Column payloads are `Arc`-backed (`Arc<[u32]>` / `Arc<[f32]>`):
+//! submission, dependency publishing and result claiming move *handles*,
+//! never column bytes. A client that already holds a shared column (the
+//! `db` catalog does) submits it with zero host-side copies.
+
+use std::sync::Arc;
 
 use crate::engines::join::HT_TUPLES;
 use crate::engines::sgd::SgdHyperParams;
@@ -48,7 +55,7 @@ pub enum DepExpr {
     /// A host base column riding along for on-card gathers. Keyed columns
     /// go through the resident cache like any direct input; only misses
     /// are charged to the dependent job's copy-in.
-    Column { data: Vec<u32>, key: Option<ColumnKey> },
+    Column { data: Arc<[u32]>, key: Option<ColumnKey> },
     /// Positional gather: `column[positions[i]]` for each position — how
     /// `Project` chains lower onto the card.
     Gather { column: Box<DepExpr>, positions: Box<DepExpr> },
@@ -102,18 +109,19 @@ pub struct DepInput {
     pub expr: DepExpr,
 }
 
-/// Payload of one query job. The coordinator owns the host data for the
-/// lifetime of the job (clients hand it over on submit).
+/// Payload of one query job. Columns are shared `Arc` slices: the
+/// coordinator holds a reference for the lifetime of the job, and
+/// submission never copies column bytes.
 #[derive(Debug, Clone)]
 pub enum JobKind {
     /// Range selection over a `u32` column.
-    Selection { data: Vec<u32>, lo: u32, hi: u32 },
+    Selection { data: Arc<[u32]>, lo: u32, hi: u32 },
     /// Hash join: build side `s`, probe side `l`.
-    Join { s: Vec<u32>, l: Vec<u32>, handle_collisions: bool },
+    Join { s: Arc<[u32]>, l: Arc<[u32]>, handle_collisions: bool },
     /// GLM hyperparameter grid over one dataset.
     Sgd {
-        features: Vec<f32>,
-        labels: Vec<f32>,
+        features: Arc<[f32]>,
+        labels: Arc<[f32]>,
         n_features: usize,
         grid: Vec<SgdHyperParams>,
     },
@@ -169,7 +177,7 @@ impl JobKind {
     /// Install a derived u32 column into payload slot `slot` (the
     /// dependency-resolution write). Panics on SGD jobs — grids cannot be
     /// dependency-fed — and on out-of-range slots.
-    pub(crate) fn install_slot(&mut self, slot: usize, column: Vec<u32>) {
+    pub(crate) fn install_slot(&mut self, slot: usize, column: Arc<[u32]>) {
         match (self, slot) {
             (JobKind::Selection { data, .. }, 0) => *data = column,
             (JobKind::Join { s, .. }, 0) => *s = column,
@@ -265,33 +273,35 @@ impl JobSpec {
     }
 }
 
-/// Result payload of a completed job.
+/// Result payload of a completed job. `Arc`-backed: publishing an output
+/// to dependents, buffering it for a handle, and claiming it through
+/// `take_result` all clone a handle, never the result bytes.
 #[derive(Debug, Clone)]
 pub enum JobOutput {
     /// Sorted candidate list (global indexes).
-    Selection(Vec<u32>),
+    Selection(Arc<[u32]>),
     /// (S-position, L-index) pairs.
-    Join(Vec<(u32, u32)>),
+    Join(Arc<[(u32, u32)]>),
     /// One trained model per grid entry, in grid order.
-    Sgd(Vec<Vec<f32>>),
+    Sgd(Arc<[Vec<f32>]>),
 }
 
 impl JobOutput {
-    pub fn expect_selection(self) -> Vec<u32> {
+    pub fn expect_selection(self) -> Arc<[u32]> {
         match self {
             JobOutput::Selection(v) => v,
             other => panic!("expected selection output, got {}", other.name()),
         }
     }
 
-    pub fn expect_join(self) -> Vec<(u32, u32)> {
+    pub fn expect_join(self) -> Arc<[(u32, u32)]> {
         match self {
             JobOutput::Join(v) => v,
             other => panic!("expected join output, got {}", other.name()),
         }
     }
 
-    pub fn expect_sgd(self) -> Vec<Vec<f32>> {
+    pub fn expect_sgd(self) -> Arc<[Vec<f32>]> {
         match self {
             JobOutput::Sgd(v) => v,
             other => panic!("expected sgd output, got {}", other.name()),
@@ -337,6 +347,12 @@ pub struct JobRecord {
     /// dependency-fed intermediates move nothing) — the per-stage signal
     /// figure drivers compare against the operator-at-a-time path.
     pub copy_in_bytes: u64,
+    /// Host-column bytes physically written into `HbmMemory` for this
+    /// job's input placement, summed over its rounds. A cache hit whose
+    /// bytes are already placed (physically-resident span) writes
+    /// nothing; a zero here on a repeat job is the "no host→HBM write"
+    /// invariant the regression suite asserts.
+    pub host_write_bytes: u64,
     /// Time this job's engines were running (sum over its rounds).
     pub exec: f64,
     pub copy_out: f64,
@@ -370,8 +386,8 @@ mod tests {
     #[test]
     fn spec_builder_wires_inputs_and_keys() {
         let spec = JobSpec::new(JobKind::Join {
-            s: vec![1, 2, 3],
-            l: vec![4, 5],
+            s: vec![1, 2, 3].into(),
+            l: vec![4, 5].into(),
             handle_collisions: false,
         })
         .with_keys(vec![Some(ColumnKey::new("dim", "pk")), None])
@@ -389,30 +405,43 @@ mod tests {
     #[test]
     fn dep_exprs_report_their_parents() {
         let expr = DepExpr::Gather {
-            column: Box::new(DepExpr::Column { data: vec![1, 2, 3], key: None }),
+            column: Box::new(DepExpr::Column {
+                data: vec![1, 2, 3].into(),
+                key: None,
+            }),
             positions: Box::new(DepExpr::JoinSide { parent: 4, left: false }),
         };
-        let spec = JobSpec::new(JobKind::Selection { data: Vec::new(), lo: 0, hi: 1 })
-            .with_deps(vec![
-                DepInput { slot: 0, expr },
-                DepInput { slot: 0, expr: DepExpr::Candidates(4) },
-            ]);
+        let spec = JobSpec::new(JobKind::Selection {
+            data: Vec::new().into(),
+            lo: 0,
+            hi: 1,
+        })
+        .with_deps(vec![
+            DepInput { slot: 0, expr },
+            DepInput { slot: 0, expr: DepExpr::Candidates(4) },
+        ]);
         assert_eq!(spec.parent_ids(), vec![4], "duplicates collapse");
         assert_eq!(spec.deps.len(), 2);
     }
 
     #[test]
     fn install_slot_reaches_every_feedable_slot() {
-        let mut sel = JobKind::Selection { data: Vec::new(), lo: 0, hi: 9 };
-        sel.install_slot(0, vec![7, 8]);
-        assert!(matches!(sel, JobKind::Selection { ref data, .. } if data == &[7, 8]));
-        let mut join = JobKind::Join { s: Vec::new(), l: Vec::new(), handle_collisions: true };
-        join.install_slot(0, vec![1]);
-        join.install_slot(1, vec![2, 3]);
+        let mut sel = JobKind::Selection { data: Vec::new().into(), lo: 0, hi: 9 };
+        sel.install_slot(0, vec![7, 8].into());
+        assert!(
+            matches!(sel, JobKind::Selection { ref data, .. } if data[..] == [7, 8])
+        );
+        let mut join = JobKind::Join {
+            s: Vec::new().into(),
+            l: Vec::new().into(),
+            handle_collisions: true,
+        };
+        join.install_slot(0, vec![1].into());
+        join.install_slot(1, vec![2, 3].into());
         match join {
             JobKind::Join { ref s, ref l, .. } => {
-                assert_eq!(s, &[1]);
-                assert_eq!(l, &[2, 3]);
+                assert_eq!(s[..], [1]);
+                assert_eq!(l[..], [2, 3]);
             }
             _ => unreachable!(),
         }
@@ -420,30 +449,36 @@ mod tests {
 
     #[test]
     fn output_byte_sizes() {
-        assert_eq!(JobOutput::Selection(vec![1, 2, 3]).byte_size(), 12);
-        assert_eq!(JobOutput::Join(vec![(1, 2)]).byte_size(), 8);
-        assert_eq!(JobOutput::Sgd(vec![vec![0.0; 4], vec![0.0; 2]]).byte_size(), 24);
+        assert_eq!(JobOutput::Selection(vec![1, 2, 3].into()).byte_size(), 12);
+        assert_eq!(JobOutput::Join(vec![(1, 2)].into()).byte_size(), 8);
+        assert_eq!(
+            JobOutput::Sgd(vec![vec![0.0; 4], vec![0.0; 2]].into()).byte_size(),
+            24
+        );
     }
 
     #[test]
     fn estimates_scale_with_work() {
-        let small = JobKind::Selection { data: vec![0; 1000], lo: 0, hi: 1 };
-        let big = JobKind::Selection { data: vec![0; 100_000], lo: 0, hi: 1 };
+        let small = JobKind::Selection { data: vec![0; 1000].into(), lo: 0, hi: 1 };
+        let big = JobKind::Selection { data: vec![0; 100_000].into(), lo: 0, hi: 1 };
         assert!(big.estimated_hbm_bytes() > small.estimated_hbm_bytes());
 
         // Multi-pass joins cost proportionally more.
-        let one_pass =
-            JobKind::Join { s: vec![0; 100], l: vec![0; 10_000], handle_collisions: false };
+        let one_pass = JobKind::Join {
+            s: vec![0; 100].into(),
+            l: vec![0; 10_000].into(),
+            handle_collisions: false,
+        };
         let three_pass = JobKind::Join {
-            s: vec![0; 2 * HT_TUPLES + 1],
-            l: vec![0; 10_000],
+            s: vec![0; 2 * HT_TUPLES + 1].into(),
+            l: vec![0; 10_000].into(),
             handle_collisions: false,
         };
         assert!(three_pass.estimated_hbm_bytes() > 2 * one_pass.estimated_hbm_bytes());
 
         let sgd = JobKind::Sgd {
-            features: vec![0.0; 32 * 64],
-            labels: vec![0.0; 64],
+            features: vec![0.0; 32 * 64].into(),
+            labels: vec![0.0; 64].into(),
             n_features: 32,
             grid: vec![SgdHyperParams {
                 task: GlmTask::Ridge,

@@ -56,13 +56,13 @@ pub mod policy;
 pub mod scheduler;
 pub mod serve;
 
-pub use cache::{CacheStats, ColumnCache, DEFAULT_CACHE_BYTES};
+pub use cache::{CacheStats, ColumnCache, ResidentLayout, DEFAULT_CACHE_BYTES};
 pub use job::{
     ColumnKey, DepExpr, DepInput, InputColumn, JobKind, JobOutput, JobRecord,
     JobSpec,
 };
 pub use policy::{Policy, MAX_CORUNNERS};
-pub use scheduler::{intermediate_key, Coordinator, CoordinatorStats};
+pub use scheduler::{intermediate_key, Coordinator, CoordinatorStats, StatsView};
 pub use serve::{
     bench_json, mixed_workload, render_outcomes, run_policy, PolicyOutcome,
     ServeSpec,

@@ -23,16 +23,19 @@
 //! queued — how the paper runs its 28-job search over 14 engines.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Arc;
 
-use super::cache::{CacheStats, ColumnCache, DEFAULT_CACHE_BYTES};
-use super::job::{ColumnKey, DepExpr, JobKind, JobOutput, JobRecord, JobSpec};
+use super::cache::{CacheStats, ColumnCache, ResidentLayout, DEFAULT_CACHE_BYTES};
+use super::job::{
+    ColumnKey, DepExpr, InputColumn, JobKind, JobOutput, JobRecord, JobSpec,
+};
 use super::policy::{plan_round, Policy, QueuedJob};
 use crate::engines::control::{ControlUnit, Csr};
 use crate::engines::join::{compact_matches, JoinEngine, JoinJob};
 use crate::engines::selection::{compact_results, SelectionEngine, SelectionJob};
 use crate::engines::sgd::{SgdEngine, SgdJob};
 use crate::engines::{sim, Engine};
-use crate::hbm::shim::{Shim, ENGINE_PORTS, PORT_HOME_BYTES};
+use crate::hbm::shim::{Shim, ENGINE_PORTS, PORT_HOME_BYTES, STACK_OFFSET};
 use crate::hbm::{HbmConfig, HbmMemory};
 use crate::interconnect::opencapi::OpenCapiLink;
 use crate::util::stats::percentile_nearest_rank;
@@ -75,7 +78,11 @@ enum RoundOutcome {
     SgdPartial { models: Vec<Vec<f32>> },
 }
 
-/// Aggregate report of everything the coordinator has served.
+/// Aggregate report of everything the coordinator has served — the
+/// *owned* snapshot form, for callers that must outlive the coordinator
+/// (or its lock). Obtain one clone-free with [`Coordinator::into_stats`],
+/// or from a borrowed [`StatsView`] via [`StatsView::snapshot`] (which
+/// clones exactly once, explicitly).
 #[derive(Debug, Clone)]
 pub struct CoordinatorStats {
     /// Completed jobs, in completion order.
@@ -85,9 +92,84 @@ pub struct CoordinatorStats {
     pub simulated_time: f64,
     /// HBM bytes moved by all engines (excludes host-link traffic).
     pub hbm_bytes: u64,
+    /// Host-column bytes physically written into `HbmMemory` across all
+    /// rounds (placements only; physically-resident hits write nothing).
+    pub host_write_bytes: u64,
+}
+
+/// Borrowed view of the coordinator's accounting — what
+/// [`Coordinator::stats`] returns, so reading throughput or scanning the
+/// per-job records never clones the records vec.
+#[derive(Debug, Clone, Copy)]
+pub struct StatsView<'a> {
+    /// Completed jobs, in completion order.
+    pub records: &'a [JobRecord],
+    pub cache: &'a CacheStats,
+    /// Simulated seconds elapsed on the card.
+    pub simulated_time: f64,
+    /// HBM bytes moved by all engines (excludes host-link traffic).
+    pub hbm_bytes: u64,
+    /// Host-column bytes physically written into `HbmMemory`.
+    pub host_write_bytes: u64,
 }
 
 impl CoordinatorStats {
+    /// Borrowed view over this snapshot (shares the summary methods).
+    pub fn view(&self) -> StatsView<'_> {
+        StatsView {
+            records: &self.records,
+            cache: &self.cache,
+            simulated_time: self.simulated_time,
+            hbm_bytes: self.hbm_bytes,
+            host_write_bytes: self.host_write_bytes,
+        }
+    }
+
+    pub fn completed(&self) -> usize {
+        self.view().completed()
+    }
+
+    pub fn latencies(&self) -> Vec<f64> {
+        self.view().latencies()
+    }
+
+    /// Completed jobs per simulated second.
+    pub fn throughput_qps(&self) -> f64 {
+        self.view().throughput_qps()
+    }
+
+    /// Latency percentile by the standard nearest-rank estimator.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.view().latency_percentile(p)
+    }
+
+    pub fn mean_queue_wait(&self) -> f64 {
+        self.view().mean_queue_wait()
+    }
+
+    pub fn total_copy_in(&self) -> f64 {
+        self.view().total_copy_in()
+    }
+
+    /// Host bytes actually moved over the link by all completed jobs.
+    pub fn total_copy_in_bytes(&self) -> u64 {
+        self.view().total_copy_in_bytes()
+    }
+}
+
+impl StatsView<'_> {
+    /// Owned snapshot of this view — the one place the records clone
+    /// happens, explicitly, for callers that must escape the borrow.
+    pub fn snapshot(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            records: self.records.to_vec(),
+            cache: self.cache.clone(),
+            simulated_time: self.simulated_time,
+            hbm_bytes: self.hbm_bytes,
+            host_write_bytes: self.host_write_bytes,
+        }
+    }
+
     pub fn completed(&self) -> usize {
         self.records.len()
     }
@@ -173,6 +255,13 @@ pub struct Coordinator {
     /// Remaining dependent jobs per parent id (registered at submission).
     dependent_refs: BTreeMap<usize, u32>,
     hbm_bytes: u64,
+    /// Physical residency map: which shim placements currently hold which
+    /// column bytes, so a cache hit skips the host→HBM write entirely.
+    layout: ResidentLayout,
+    /// Host-column bytes physically written into `HbmMemory` (total).
+    host_write_bytes: u64,
+    /// Run each round's functional passes on worker threads (default).
+    parallel_functional: bool,
 }
 
 impl Coordinator {
@@ -195,6 +284,9 @@ impl Coordinator {
             dep_outputs: BTreeMap::new(),
             dependent_refs: BTreeMap::new(),
             hbm_bytes: 0,
+            layout: ResidentLayout::new(),
+            host_write_bytes: 0,
+            parallel_functional: true,
         }
     }
 
@@ -203,13 +295,30 @@ impl Coordinator {
         self
     }
 
+    /// Force every round's functional passes onto the calling thread —
+    /// the measured baseline of `hbmctl bench-host` and the reference the
+    /// determinism suite compares the parallel path against.
+    pub fn with_serial_functional(mut self) -> Self {
+        self.parallel_functional = false;
+        self
+    }
+
+    /// Toggle parallel functional execution (on by default). Results are
+    /// bit-identical either way; only host wall-clock changes.
+    pub fn set_parallel_functional(&mut self, on: bool) {
+        self.parallel_functional = on;
+    }
+
     pub fn set_policy(&mut self, policy: Policy) {
         self.policy = policy;
     }
 
-    /// Resize the resident-column budget (0 disables caching).
+    /// Resize the resident-column budget (0 disables caching). The
+    /// physical residency map is reset with it: span lifetime is tied to
+    /// the accounting entries.
     pub fn with_cache_bytes(mut self, bytes: u64) -> Self {
         self.cache = ColumnCache::new(bytes);
+        self.layout = ResidentLayout::new();
         self
     }
 
@@ -243,6 +352,14 @@ impl Coordinator {
 
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Bytes currently backed by allocated pages in the card's functional
+    /// memory (resident columns, pinned intermediates, last-round
+    /// scratch). Eviction of a physically-resident column frees its
+    /// fully-covered pages, which shows up here.
+    pub fn hbm_resident_bytes(&self) -> u64 {
+        self.mem.resident_bytes()
     }
 
     pub fn simulated_time(&self) -> f64 {
@@ -412,6 +529,12 @@ impl Coordinator {
                     self.dependent_refs.remove(&p);
                     self.dep_outputs.remove(&p);
                     self.cache.remove(&key);
+                    // Symmetric with the eviction drain: releasing a
+                    // resident entry frees its spans' pages.
+                    // (Intermediates are normally never placed — dep-fed
+                    // slots carry no key — so this is a no-op unless a
+                    // caller keyed a dependent slot explicitly.)
+                    release_key_spans(&mut self.layout, &mut self.mem, &key);
                 }
             }
         }
@@ -479,12 +602,30 @@ impl Coordinator {
         (output, record)
     }
 
-    pub fn stats(&self) -> CoordinatorStats {
+    /// Borrowed view of the accounting: no clone of the per-job records.
+    /// Use [`StatsView::snapshot`] (one explicit clone) or
+    /// [`into_stats`](Coordinator::into_stats) (move, no clone) when an
+    /// owned [`CoordinatorStats`] must escape the borrow.
+    pub fn stats(&self) -> StatsView<'_> {
+        StatsView {
+            records: &self.records,
+            cache: self.cache.stats(),
+            simulated_time: self.clock,
+            hbm_bytes: self.hbm_bytes,
+            host_write_bytes: self.host_write_bytes,
+        }
+    }
+
+    /// Consume the coordinator, moving its accounting out without any
+    /// clone — how drivers that are done with the card (e.g. one serve
+    /// policy run) obtain an owned snapshot.
+    pub fn into_stats(self) -> CoordinatorStats {
         CoordinatorStats {
-            records: self.records.clone(),
+            records: self.records,
             cache: self.cache.stats().clone(),
             simulated_time: self.clock,
             hbm_bytes: self.hbm_bytes,
+            host_write_bytes: self.host_write_bytes,
         }
     }
 
@@ -557,32 +698,48 @@ impl Coordinator {
             .collect();
         let copy_in_phase = copy_in.iter().cloned().fold(0.0f64, f64::max);
 
+        // 2b. Keys the admissions just evicted lose their physical
+        //     residency: release their spans and free the pages those
+        //     spans fully covered (both stacks of the shim stripe).
+        for key in self.cache.drain_evicted() {
+            release_key_spans(&mut self.layout, &mut self.mem, &key);
+        }
+
         // 3. Build every admitted job's engines on its granted ports and
-        //    arm them through the CSR interface.
+        //    arm them through the CSR interface. Keyed inputs whose exact
+        //    placement is still physically resident skip the host→HBM
+        //    write entirely (`host_written` stays 0 for fully-warm jobs).
         self.shim.reset();
         let mut engines: Vec<Box<dyn Engine>> = Vec::new();
         let mut prepared: Vec<(Prepared, std::ops::Range<usize>, Vec<usize>)> =
             Vec::new();
-        for adm in &admissions {
+        let mut host_written = vec![0u64; admissions.len()];
+        for (ai, adm) in admissions.iter().enumerate() {
             let pending = &self.queue[adm.queue_idx];
             let start = engines.len();
-            let (prep, slots) = build_engines(
+            let (prep, slots, written) = build_engines(
                 &self.cfg,
                 &mut self.shim,
                 &mut self.mem,
                 &mut self.control,
+                &mut self.layout,
+                &self.cache,
                 &pending.spec.kind,
+                &pending.spec.inputs,
                 pending.sgd_models.len(),
                 &adm.ports,
                 &mut engines,
             );
+            host_written[ai] = written;
             prepared.push((prep, start..engines.len(), slots));
         }
         let armed = self.control.take_started();
         debug_assert_eq!(armed.len(), engines.len(), "every engine must be armed");
 
-        // 4. One fluid simulation over all co-scheduled engines.
-        let report = sim::run(&self.cfg, &mut self.mem, &mut engines);
+        // 4. One fluid simulation over all co-scheduled engines: parallel
+        //    functional passes (disjoint per-engine views), serial timing.
+        let report =
+            sim::run_mode(&self.cfg, &mut self.mem, &mut engines, self.parallel_functional);
 
         // 5. Collect per-job results and publish them through the CSRs.
         let mut outcomes: Vec<(usize, f64, u64, RoundOutcome)> =
@@ -613,7 +770,7 @@ impl Coordinator {
 
         // 6. Apply outcomes to the per-job records.
         let mut finished: Vec<(usize, JobOutput)> = Vec::new();
-        let mut completed_ids: Vec<usize> = Vec::new();
+        let mut completed_ids: BTreeSet<usize> = BTreeSet::new();
         let mut copy_out_phase = 0.0f64;
         for (ai, (queue_idx, finish_in_sim, job_hbm, outcome)) in
             outcomes.into_iter().enumerate()
@@ -630,6 +787,8 @@ impl Coordinator {
                 .engines
                 .max(adm_ports / pending.spec.kind.ports_per_engine());
             pending.record.copy_in += copy_in[ai];
+            pending.record.host_write_bytes += host_written[ai];
+            self.host_write_bytes += host_written[ai];
             pending.record.exec += finish_in_sim;
             pending.record.hbm_bytes += job_hbm;
             self.hbm_bytes += job_hbm;
@@ -644,7 +803,7 @@ impl Coordinator {
                     pending.record.copy_out += copy_out;
                     pending.record.finish_time =
                         round_start + copy_in_phase + finish_in_sim + copy_out;
-                    completed_ids.push(pending.id);
+                    completed_ids.insert(pending.id);
                     self.records.push(pending.record.clone());
                     finished.push((pending.id, output));
                 }
@@ -653,9 +812,25 @@ impl Coordinator {
 
         // 7. Advance the card clock past the whole round and retire the
         //    completed jobs (unfinished SGD jobs keep their position).
+        //    `completed_ids` is a set, so this is O(queue · log completed)
+        //    rather than the old O(queue · completed) scan.
         self.clock = round_start + copy_in_phase + report.makespan + copy_out_phase;
         self.queue.retain(|p| !completed_ids.contains(&p.id));
         finished
+    }
+}
+
+/// Release `key`'s physical spans and free the pages each span fully
+/// covers, on both stacks of the shim stripe — the one rule for
+/// returning a resident column's backing to the allocator (used by the
+/// eviction drain and by intermediate release). A free function over the
+/// two fields so call sites inside queue iterations keep their disjoint
+/// borrows.
+fn release_key_spans(layout: &mut ResidentLayout, mem: &mut HbmMemory, key: &ColumnKey) {
+    for (lo_addr, bytes) in layout.remove_key(key) {
+        let half = bytes / 2;
+        mem.free_range(lo_addr, half);
+        mem.free_range(lo_addr + STACK_OFFSET, half);
     }
 }
 
@@ -713,10 +888,12 @@ fn eval_dep_expr(
     cache: &mut ColumnCache,
     record: &mut JobRecord,
     deferred: &mut u64,
-) -> Vec<u32> {
+) -> Arc<[u32]> {
     match expr {
+        // Parent outputs and host columns are Arc-backed: installing them
+        // into the dependent payload clones a handle, not the column.
         DepExpr::Candidates(parent) => match outputs.get(&parent) {
-            Some(JobOutput::Selection(v)) => v.clone(),
+            Some(JobOutput::Selection(v)) => Arc::clone(v),
             Some(other) => panic!(
                 "dep expression expected selection output of job {parent}, got {}",
                 other.name()
@@ -727,7 +904,8 @@ fn eval_dep_expr(
             Some(JobOutput::Join(pairs)) => pairs
                 .iter()
                 .map(|&(l, r)| if left { l } else { r })
-                .collect(),
+                .collect::<Vec<u32>>()
+                .into(),
             Some(other) => panic!(
                 "dep expression expected join output of job {parent}, got {}",
                 other.name()
@@ -754,7 +932,10 @@ fn eval_dep_expr(
         DepExpr::Gather { column, positions } => {
             let col = eval_dep_expr(*column, outputs, cache, record, deferred);
             let pos = eval_dep_expr(*positions, outputs, cache, record, deferred);
-            pos.iter().map(|&p| col[p as usize]).collect()
+            pos.iter()
+                .map(|&p| col[p as usize])
+                .collect::<Vec<u32>>()
+                .into()
         }
     }
 }
@@ -773,23 +954,96 @@ fn queued_view(pending: &Pending) -> QueuedJob {
     }
 }
 
+/// Debug-build spot check on a physically-resident span hit: the first
+/// and last element on the card must match the submitted slice. The
+/// cache-key contract ("same key ⇒ same bytes") is what makes skipping
+/// the write sound; this catches gross violations in test builds without
+/// costing the release path anything.
+fn debug_check_span_u32(mem: &HbmMemory, buf: &crate::hbm::ShimBuffer, slice: &[u32]) {
+    if cfg!(debug_assertions) {
+        if let (Some(&first), Some(&last)) = (slice.first(), slice.last()) {
+            assert_eq!(
+                buf.read_u32s(mem, 0, 1)[0],
+                first,
+                "resident span holds different bytes than the submitted \
+                 column (cache-key contract violated)"
+            );
+            assert_eq!(
+                buf.read_u32s(mem, (slice.len() as u64 - 1) * 4, 1)[0],
+                last,
+                "resident span holds different bytes than the submitted \
+                 column (cache-key contract violated)"
+            );
+        }
+    }
+}
+
+/// SGD variant of [`debug_check_span_u32`], comparing bit patterns. The
+/// card image is features *then labels*, so the check reads the first
+/// feature and the last label — same key + same features but different
+/// labels is exactly the misuse the tail check catches.
+fn debug_check_span_sgd(
+    mem: &HbmMemory,
+    buf: &crate::hbm::ShimBuffer,
+    features: &[f32],
+    labels: &[f32],
+) {
+    if cfg!(debug_assertions) {
+        if let Some(&first) = features.first() {
+            assert_eq!(
+                buf.read_f32s(mem, 0, 1)[0].to_bits(),
+                first.to_bits(),
+                "resident span holds different bytes than the submitted \
+                 dataset (cache-key contract violated)"
+            );
+        }
+        if let Some(&last) = labels.last() {
+            let tail = ((features.len() + labels.len() - 1) * 4) as u64;
+            assert_eq!(
+                buf.read_f32s(mem, tail, 1)[0].to_bits(),
+                last.to_bits(),
+                "resident span holds different bytes than the submitted \
+                 dataset (cache-key contract violated)"
+            );
+        }
+    }
+}
+
 /// Build the engines for one job on its granted ports, write its inputs
 /// through the shim, and arm each engine's CSR slot. Returns the prepared
-/// handles plus the CSR slot of each engine (its first port).
+/// handles, the CSR slot of each engine (its first port), and the host
+/// bytes physically written into `HbmMemory` — keyed input chunks whose
+/// exact placement is still resident in the [`ResidentLayout`] skip their
+/// write entirely (the physically-resident fast path). Spans are only
+/// recorded for keys the accounting cache actually holds, so span
+/// lifetime stays tied to cache entries (eviction releases both) and a
+/// zero-budget cache disables the physical fast path along with the
+/// accounting one.
 #[allow(clippy::too_many_arguments)]
 fn build_engines(
     cfg: &HbmConfig,
     shim: &mut Shim,
     mem: &mut HbmMemory,
     control: &mut ControlUnit,
+    layout: &mut ResidentLayout,
+    cache: &ColumnCache,
     kind: &JobKind,
+    inputs: &[InputColumn],
     sgd_done: usize,
     ports: &[usize],
     engines: &mut Vec<Box<dyn Engine>>,
-) -> (Prepared, Vec<usize>) {
-    match kind {
+) -> (Prepared, Vec<usize>, u64) {
+    let slot_key = |slot: usize| {
+        inputs
+            .get(slot)
+            .and_then(|i| i.key.as_ref())
+            .filter(|key| cache.contains(key))
+    };
+    let mut written = 0u64;
+    let prepared = match kind {
         JobKind::Selection { data, lo, hi } => {
             let chunk = data.len().div_ceil(ports.len());
+            let key = slot_key(0);
             let mut jobs = Vec::new();
             let mut slots = Vec::new();
             for (e, slice) in data.chunks(chunk.max(1)).enumerate() {
@@ -801,7 +1055,15 @@ fn build_engines(
                 let output = shim
                     .alloc(port, (slice.len() * 4) as u64 + 64)
                     .expect("selection output exceeds home window");
-                input.write_u32s(mem, 0, slice);
+                let offset = (e * chunk * 4) as u64;
+                let content = key.map(|k| (k, offset, (slice.len() * 4) as u64));
+                if layout.claim(input.lo_addr, input.bytes, content) {
+                    debug_check_span_u32(mem, &input, slice);
+                } else {
+                    input.write_u32s(mem, 0, slice);
+                    written += (slice.len() * 4) as u64;
+                }
+                layout.claim(output.lo_addr, output.bytes, None);
                 let job = SelectionJob {
                     input,
                     items: slice.len() as u64,
@@ -825,6 +1087,7 @@ fn build_engines(
         JobKind::Join { s, l, handle_collisions } => {
             let pairs = (ports.len() / 2).max(1);
             let chunk = l.len().div_ceil(pairs);
+            let (s_key, l_key) = (slot_key(0), slot_key(1));
             let mut jobs = Vec::new();
             let mut slots = Vec::new();
             for (e, slice) in l.chunks(chunk.max(1)).enumerate() {
@@ -833,17 +1096,34 @@ fn build_engines(
                 let s_buf = shim
                     .alloc(read_port, (s.len() * 4) as u64 + 64)
                     .expect("S exceeds home window");
-                s_buf.write_u32s(mem, 0, s);
+                // The build side is broadcast: every engine's replica
+                // carries the whole column (source offset 0).
+                let s_content = s_key.map(|k| (k, 0, (s.len() * 4) as u64));
+                if layout.claim(s_buf.lo_addr, s_buf.bytes, s_content) {
+                    debug_check_span_u32(mem, &s_buf, s);
+                } else {
+                    s_buf.write_u32s(mem, 0, s);
+                    written += (s.len() * 4) as u64;
+                }
                 let l_buf = shim
                     .alloc(read_port, (slice.len() * 4) as u64 + 64)
                     .expect("L partition exceeds home window");
-                l_buf.write_u32s(mem, 0, slice);
+                let l_offset = (e * chunk * 4) as u64;
+                let l_content =
+                    l_key.map(|k| (k, l_offset, (slice.len() * 4) as u64));
+                if layout.claim(l_buf.lo_addr, l_buf.bytes, l_content) {
+                    debug_check_span_u32(mem, &l_buf, slice);
+                } else {
+                    l_buf.write_u32s(mem, 0, slice);
+                    written += (slice.len() * 4) as u64;
+                }
                 // Worst-case output sizing: every probe matches ~avg dups.
                 let out_cap =
                     (slice.len() as u64 * 16 + 256).min(PORT_HOME_BYTES - 64);
                 let output = shim
                     .alloc(write_port, out_cap)
                     .expect("join output exceeds home window");
+                layout.claim(output.lo_addr, output.bytes, None);
                 let job = JoinJob {
                     s: s_buf,
                     s_items: s.len() as u64,
@@ -870,9 +1150,11 @@ fn build_engines(
             (Prepared::Join { jobs }, slots)
         }
         JobKind::Sgd { features, labels, n_features, grid } => {
-            let mut all = features.clone();
-            all.extend_from_slice(labels);
-            let bytes = (all.len() * 4) as u64;
+            let bytes = ((features.len() + labels.len()) * 4) as u64;
+            let key = slot_key(0);
+            // Concatenated dataset image, built lazily: a fully-resident
+            // round never materializes it at all.
+            let mut flat: Option<Vec<f32>> = None;
             let round_grid = &grid[sgd_done..(sgd_done + ports.len()).min(grid.len())];
             let mut jobs = Vec::new();
             let mut slots = Vec::new();
@@ -881,9 +1163,20 @@ fn build_engines(
                 let data = shim
                     .alloc(port, bytes)
                     .expect("dataset exceeds home window; use block-wise scan");
-                data.write_f32s(mem, 0, &all);
+                if layout.claim(data.lo_addr, data.bytes, key.map(|k| (k, 0, bytes))) {
+                    debug_check_span_sgd(mem, &data, features, labels);
+                } else {
+                    let flat = flat.get_or_insert_with(|| {
+                        let mut all = features.to_vec();
+                        all.extend_from_slice(labels);
+                        all
+                    });
+                    data.write_f32s(mem, 0, flat);
+                    written += bytes;
+                }
                 let model_out =
                     shim.alloc(port, (*n_features * 4) as u64 + 64).unwrap();
+                layout.claim(model_out.lo_addr, model_out.bytes, None);
                 let job = SgdJob {
                     data,
                     n_samples: labels.len(),
@@ -903,7 +1196,9 @@ fn build_engines(
             }
             (Prepared::Sgd { jobs }, slots)
         }
-    }
+    };
+    let (prep, slots) = prepared;
+    (prep, slots, written)
 }
 
 /// Read the results out of one job's finished engines, publish them
@@ -943,7 +1238,10 @@ fn collect_outcome(
                 result.extend(compact_results(mem, &job.output, eng.out_bytes));
             }
             result.sort_unstable();
-            RoundOutcome::Complete { output: JobOutput::Selection(result), out_bytes }
+            RoundOutcome::Complete {
+                output: JobOutput::Selection(result.into()),
+                out_bytes,
+            }
         }
         Prepared::Join { jobs } => {
             let mut pairs = Vec::new();
@@ -964,7 +1262,7 @@ fn collect_outcome(
                 debug_assert!(control.is_done(slot));
                 pairs.extend(found);
             }
-            RoundOutcome::Complete { output: JobOutput::Join(pairs), out_bytes }
+            RoundOutcome::Complete { output: JobOutput::Join(pairs.into()), out_bytes }
         }
         Prepared::Sgd { jobs } => {
             let mut models = Vec::new();
@@ -984,7 +1282,7 @@ fn collect_outcome(
                 let mut all = pending.sgd_models.clone();
                 all.extend(models);
                 RoundOutcome::Complete {
-                    output: JobOutput::Sgd(all),
+                    output: JobOutput::Sgd(all.into()),
                     out_bytes: (grid.len() * n_features * 4) as u64,
                 }
             } else {
@@ -1007,7 +1305,11 @@ mod tests {
     }
 
     fn selection_spec(w: &SelectionWorkload) -> JobSpec {
-        JobSpec::new(JobKind::Selection { data: w.data.clone(), lo: w.lo, hi: w.hi })
+        JobSpec::new(JobKind::Selection {
+            data: w.data.clone().into(),
+            lo: w.lo,
+            hi: w.hi,
+        })
     }
 
     #[test]
@@ -1017,7 +1319,7 @@ mod tests {
         let (out, rec) = coord.run_single(selection_spec(&w));
         let mut cpu = cpu::selection::range_select(&w.data, w.lo, w.hi, 4);
         cpu.sort_unstable();
-        assert_eq!(out.expect_selection(), cpu);
+        assert_eq!(out.expect_selection()[..], cpu[..]);
         assert!(rec.copy_in > 0.0 && rec.exec > 0.0 && rec.copy_out > 0.0);
         assert_eq!(rec.engines, ENGINE_PORTS);
         assert_eq!(rec.rounds, 1);
@@ -1047,12 +1349,12 @@ mod tests {
         let w = JoinWorkload::generate(50_000, 1500, true, true, 17);
         let mut coord = Coordinator::new(cfg());
         let spec = JobSpec::new(JobKind::Join {
-            s: w.s.clone(),
-            l: w.l.clone(),
+            s: w.s.clone().into(),
+            l: w.l.clone().into(),
             handle_collisions: false,
         });
         let (out, rec) = coord.run_single(spec);
-        let mut got = out.expect_join();
+        let mut got = out.expect_join().to_vec();
         let mut want = cpu::join::hash_join_positions(&w.s, &w.l, 4);
         got.sort_unstable();
         want.sort_unstable();
@@ -1084,8 +1386,8 @@ mod tests {
             .collect();
         let mut coord = Coordinator::new(cfg());
         let job = JobSpec::new(JobKind::Sgd {
-            features: d.features.clone(),
-            labels: d.labels.clone(),
+            features: d.features.clone().into(),
+            labels: d.labels.clone().into(),
             n_features: 16,
             grid: grid.clone(),
         });
@@ -1093,7 +1395,7 @@ mod tests {
         let models = out.expect_sgd();
         assert_eq!(models.len(), 16);
         assert_eq!(rec.rounds, 2);
-        for (params, model) in grid.iter().zip(&models) {
+        for (params, model) in grid.iter().zip(models.iter()) {
             let (cpu_model, _) = cpu::sgd::train(&d.features, &d.labels, 16, params);
             for (a, b) in cpu_model.iter().zip(model) {
                 assert!((a - b).abs() < 1e-5);
@@ -1113,7 +1415,7 @@ mod tests {
         let stats = coord.stats();
         // All three co-ran: everyone started at t=0 with ~a third of the
         // fleet each.
-        for rec in &stats.records {
+        for rec in stats.records {
             assert_eq!(rec.start_time, 0.0);
             assert!(rec.engines <= 5, "fair share grants ≤ ⌈14/3⌉ engines");
         }
@@ -1153,7 +1455,7 @@ mod tests {
         assert!(rec.copy_in > 0.0);
         let mut want = cpu::selection::range_select(&w.data, w.lo, w.hi, 4);
         want.sort_unstable();
-        assert_eq!(out.expect_selection(), want);
+        assert_eq!(out.expect_selection()[..], want[..]);
 
         // Claimed exactly once; the record survives in stats.
         assert!(coord.take_result(id).is_none());
@@ -1195,11 +1497,15 @@ mod tests {
         // Child selects over the parent's candidate list (positions),
         // dependency-fed: no host bytes cross for its input.
         let child = coord.submit(
-            JobSpec::new(JobKind::Selection { data: Vec::new(), lo: 0, hi: 20_000 })
-                .with_deps(vec![DepInput {
-                    slot: 0,
-                    expr: DepExpr::Candidates(parent),
-                }]),
+            JobSpec::new(JobKind::Selection {
+                data: Vec::new().into(),
+                lo: 0,
+                hi: 20_000,
+            })
+            .with_deps(vec![DepInput {
+                slot: 0,
+                expr: DepExpr::Candidates(parent),
+            }]),
         );
         let outputs = coord.run();
         assert_eq!(outputs.len(), 2);
@@ -1215,7 +1521,7 @@ mod tests {
             .1
             .clone()
             .expect_selection();
-        assert_eq!(child_out, want, "dep-fed selection diverged from CPU");
+        assert_eq!(child_out[..], want[..], "dep-fed selection diverged from CPU");
 
         let stats = coord.stats();
         let rec = |id: usize| stats.records.iter().find(|r| r.id == id).unwrap();
@@ -1244,15 +1550,15 @@ mod tests {
         let s: Vec<u32> = (0..512u32).collect();
         let child = coord.submit(
             JobSpec::new(JobKind::Join {
-                s: s.clone(),
-                l: Vec::new(),
+                s: s.clone().into(),
+                l: Vec::new().into(),
                 handle_collisions: true,
             })
             .with_deps(vec![DepInput {
                 slot: 1,
                 expr: DepExpr::Gather {
                     column: Box::new(DepExpr::Column {
-                        data: w.data.clone(),
+                        data: w.data.clone().into(),
                         key: Some(key.clone()),
                     }),
                     positions: Box::new(DepExpr::Candidates(parent)),
@@ -1273,7 +1579,8 @@ mod tests {
             .unwrap()
             .1
             .clone()
-            .expect_join();
+            .expect_join()
+            .to_vec();
         got.sort_unstable();
         assert_eq!(got, want, "dep-fed join diverged from CPU");
 
@@ -1300,8 +1607,8 @@ mod tests {
         let p2 = coord.submit(selection_spec(&w2));
         let child = coord.submit(
             JobSpec::new(JobKind::Join {
-                s: Vec::new(),
-                l: Vec::new(),
+                s: Vec::new().into(),
+                l: Vec::new().into(),
                 handle_collisions: true,
             })
             .with_deps(vec![
@@ -1330,7 +1637,7 @@ mod tests {
         c2.sort_unstable();
         let mut want = cpu::join::hash_join_positions(&c1, &c2, 4);
         want.sort_unstable();
-        let mut got = out.expect_join();
+        let mut got = out.expect_join().to_vec();
         got.sort_unstable();
         assert_eq!(got, want);
     }
@@ -1363,15 +1670,15 @@ mod tests {
         let s: Vec<u32> = (0..256u32).collect();
         let child = coord.submit(
             JobSpec::new(JobKind::Join {
-                s: s.clone(),
-                l: Vec::new(),
+                s: s.clone().into(),
+                l: Vec::new().into(),
                 handle_collisions: true,
             })
             .with_deps(vec![DepInput {
                 slot: 1,
                 expr: DepExpr::Gather {
                     column: Box::new(DepExpr::Column {
-                        data: w.data.clone(),
+                        data: w.data.clone().into(),
                         key: Some(key.clone()),
                     }),
                     positions: Box::new(DepExpr::Candidates(parent)),
@@ -1395,15 +1702,19 @@ mod tests {
         // ready: it must install immediately, not stall the queue.
         let mut coord = Coordinator::new(cfg());
         let id = coord.submit(
-            JobSpec::new(JobKind::Selection { data: Vec::new(), lo: 2, hi: 3 })
-                .with_deps(vec![DepInput {
-                    slot: 0,
-                    expr: DepExpr::Column { data: vec![1, 2, 3, 4], key: None },
-                }]),
+            JobSpec::new(JobKind::Selection {
+                data: Vec::new().into(),
+                lo: 2,
+                hi: 3,
+            })
+            .with_deps(vec![DepInput {
+                slot: 0,
+                expr: DepExpr::Column { data: vec![1, 2, 3, 4].into(), key: None },
+            }]),
         );
         assert_eq!(coord.step(), vec![id]);
         let (out, rec) = coord.take_result(id).unwrap();
-        assert_eq!(out.expect_selection(), vec![1, 2]);
+        assert_eq!(out.expect_selection()[..], [1, 2]);
         assert_eq!(rec.copy_in_bytes, 16, "anonymous column still crosses");
     }
 
@@ -1413,8 +1724,12 @@ mod tests {
         use crate::coordinator::job::{DepExpr, DepInput};
         let mut coord = Coordinator::new(cfg());
         coord.submit(
-            JobSpec::new(JobKind::Selection { data: Vec::new(), lo: 0, hi: 1 })
-                .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(99) }]),
+            JobSpec::new(JobKind::Selection {
+                data: Vec::new().into(),
+                lo: 0,
+                hi: 1,
+            })
+            .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(99) }]),
         );
     }
 
@@ -1447,6 +1762,74 @@ mod tests {
         let rec = stats.records.iter().find(|r| r.id == keyed).unwrap();
         assert_eq!(rec.cache_hits, 1, "pinned key must survive the churn");
         assert_eq!(rec.copy_in, 0.0, "and its copy-in must be skipped");
+    }
+
+    #[test]
+    fn cache_hit_repeat_performs_zero_hbm_writes() {
+        // The physically-resident fast path: a keyed repeat whose chunks
+        // land on the same placements must not rewrite a single host byte
+        // into HbmMemory — and must still produce identical results.
+        let w = SelectionWorkload::uniform(90_000, 0.15, 3);
+        let key = ColumnKey::new("t", "v");
+        let mut coord = Coordinator::new(cfg());
+        let spec = || selection_spec(&w).with_keys(vec![Some(key.clone())]);
+        let (out1, first) = coord.run_single(spec());
+        assert!(
+            first.host_write_bytes >= (w.data.len() * 4) as u64,
+            "cold run places the whole column"
+        );
+        let (out2, second) = coord.run_single(spec());
+        assert_eq!(
+            second.host_write_bytes, 0,
+            "hit inputs must skip the host→HBM write entirely"
+        );
+        assert_eq!(second.cache_hits, 1);
+        assert_eq!(out1.expect_selection(), out2.expect_selection());
+        let stats = coord.stats();
+        assert_eq!(stats.host_write_bytes, first.host_write_bytes);
+    }
+
+    #[test]
+    fn eviction_frees_physically_resident_pages() {
+        use crate::engines::sgd::{GlmTask, SgdHyperParams};
+        use crate::util::units::MIB;
+        // A ~6.3 MiB dataset replicated across the fleet backs ~84 MiB of
+        // pages; evicting its key must free the fully-covered ones.
+        let samples = 98_304usize;
+        let n_features = 15usize;
+        let features: Vec<f32> = vec![0.5; samples * n_features];
+        let labels: Vec<f32> = vec![1.0; samples];
+        let grid: Vec<SgdHyperParams> = (0..14)
+            .map(|_| SgdHyperParams {
+                task: GlmTask::Ridge,
+                alpha: 0.01,
+                lambda: 0.0,
+                minibatch: 16,
+                epochs: 1,
+            })
+            .collect();
+        let mut coord = Coordinator::new(cfg()).with_cache_bytes(8 * MIB);
+        coord.run_single(
+            JobSpec::new(JobKind::Sgd {
+                features: features.into(),
+                labels: labels.into(),
+                n_features,
+                grid,
+            })
+            .with_keys(vec![Some(ColumnKey::new("ml", "big"))]),
+        );
+        let before = coord.hbm_resident_bytes();
+        assert!(before > 50 * MIB, "replicas must be paged in: {before}");
+        // A 4 MiB keyed selection evicts the dataset from the 8 MiB cache.
+        let w = SelectionWorkload::uniform(1_000_000, 0.01, 9);
+        coord.run_single(
+            selection_spec(&w).with_keys(vec![Some(ColumnKey::new("t", "small"))]),
+        );
+        let after = coord.hbm_resident_bytes();
+        assert!(
+            after + 40 * MIB < before,
+            "eviction must free the replicas' pages: {before} -> {after}"
+        );
     }
 
     #[test]

@@ -123,7 +123,7 @@ pub fn mixed_workload(spec: &ServeSpec) -> Vec<JobSpec> {
                 let span = (u32::MAX / 10) * (1 + rng.next_u32() % 5);
                 let lo = rng.next_u32().saturating_sub(span) / 2;
                 let hi = lo.saturating_add(span);
-                JobSpec::new(JobKind::Selection { data, lo, hi })
+                JobSpec::new(JobKind::Selection { data: data.into(), lo, hi })
                     .with_keys(vec![Some(key)])
             }
             5..=7 => {
@@ -132,8 +132,12 @@ pub fn mixed_workload(spec: &ServeSpec) -> Vec<JobSpec> {
                 let probe_key = ColumnKey::new(format!("fact{t}"), "fk");
                 let s = build_column(spec, &build_key);
                 let l = probe_column(spec, &probe_key);
-                JobSpec::new(JobKind::Join { s, l, handle_collisions: false })
-                    .with_keys(vec![Some(build_key), Some(probe_key)])
+                JobSpec::new(JobKind::Join {
+                    s: s.into(),
+                    l: l.into(),
+                    handle_collisions: false,
+                })
+                .with_keys(vec![Some(build_key), Some(probe_key)])
             }
             _ => {
                 let key = ColumnKey::new(
@@ -152,8 +156,8 @@ pub fn mixed_workload(spec: &ServeSpec) -> Vec<JobSpec> {
                     })
                     .collect();
                 JobSpec::new(JobKind::Sgd {
-                    features,
-                    labels,
+                    features: features.into(),
+                    labels: labels.into(),
                     n_features: SGD_FEATURES,
                     grid,
                 })
@@ -191,7 +195,8 @@ impl PolicyOutcome {
 }
 
 /// Replay `jobs` under one policy. Returns outputs (for verification) and
-/// the outcome summary.
+/// the outcome summary (the coordinator's accounting is *moved* out — no
+/// records clone).
 pub fn run_policy(
     cfg: &HbmConfig,
     policy: Policy,
@@ -205,7 +210,7 @@ pub fn run_policy(
         coord.submit(job);
     }
     let outputs = coord.run();
-    let outcome = PolicyOutcome { policy, stats: coord.stats() };
+    let outcome = PolicyOutcome { policy, stats: coord.into_stats() };
     (outputs, outcome)
 }
 
@@ -362,6 +367,7 @@ mod tests {
             cache: crate::coordinator::CacheStats::default(),
             simulated_time: 10.0,
             hbm_bytes: 0,
+            host_write_bytes: 0,
         };
         assert_eq!(stats.latency_percentile(50.0), 5.0);
         assert_eq!(stats.latency_percentile(95.0), 10.0);

@@ -4,13 +4,25 @@
 //! virtual OID is the array position. We keep exactly that: a [`Column`]
 //! is a typed dense vector, a [`Table`] a set of equal-length columns, and
 //! the [`Catalog`] a name → table map.
+//!
+//! ## Ownership rule: columns are shared, immutable `Arc` slices
+//!
+//! [`ColumnData`] wraps `Arc<[u32]>` / `Arc<[f32]>`, and every layer that
+//! moves a column — plan lowering, `OffloadRequest` payloads, coordinator
+//! job specs, published intermediates, pipeline results — clones the
+//! *handle*, never the bytes. Scanning a catalog column, submitting it to
+//! the card, and taking it back out are all O(1) in column size. The
+//! corollary: column bytes are immutable once constructed; operators that
+//! transform data ([`ColumnData::gather`], the CPU operators) allocate a
+//! fresh column rather than mutating in place.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum ColumnData {
-    U32(Vec<u32>),
-    F32(Vec<f32>),
+    U32(Arc<[u32]>),
+    F32(Arc<[f32]>),
 }
 
 impl ColumnData {
@@ -52,6 +64,23 @@ impl ColumnData {
         }
     }
 
+    /// Shared handle on a u32 column — the zero-copy form offload
+    /// payloads take (cloning an `Arc`, not the bytes).
+    pub fn u32_shared(&self) -> Option<Arc<[u32]>> {
+        match self {
+            ColumnData::U32(v) => Some(Arc::clone(v)),
+            _ => None,
+        }
+    }
+
+    /// Shared handle on an f32 column.
+    pub fn f32_shared(&self) -> Option<Arc<[f32]>> {
+        match self {
+            ColumnData::F32(v) => Some(Arc::clone(v)),
+            _ => None,
+        }
+    }
+
     /// Positional gather (late materialization of a candidate list).
     pub fn gather(&self, positions: &[u32]) -> ColumnData {
         match self {
@@ -73,11 +102,11 @@ pub struct Column {
 
 impl Column {
     pub fn u32(name: impl Into<String>, data: Vec<u32>) -> Self {
-        Self { name: name.into(), data: ColumnData::U32(data) }
+        Self { name: name.into(), data: ColumnData::U32(data.into()) }
     }
 
     pub fn f32(name: impl Into<String>, data: Vec<f32>) -> Self {
-        Self { name: name.into(), data: ColumnData::F32(data) }
+        Self { name: name.into(), data: ColumnData::F32(data.into()) }
     }
 }
 
@@ -177,9 +206,18 @@ mod tests {
 
     #[test]
     fn gather_materializes_candidates() {
-        let d = ColumnData::U32(vec![10, 20, 30, 40]);
-        assert_eq!(d.gather(&[3, 0]), ColumnData::U32(vec![40, 10]));
-        let f = ColumnData::F32(vec![1.0, 2.0]);
-        assert_eq!(f.gather(&[1]), ColumnData::F32(vec![2.0]));
+        let d = ColumnData::U32(vec![10, 20, 30, 40].into());
+        assert_eq!(d.gather(&[3, 0]), ColumnData::U32(vec![40, 10].into()));
+        let f = ColumnData::F32(vec![1.0, 2.0].into());
+        assert_eq!(f.gather(&[1]), ColumnData::F32(vec![2.0].into()));
+    }
+
+    #[test]
+    fn shared_handles_alias_the_same_bytes() {
+        let d = ColumnData::U32(vec![1, 2, 3].into());
+        let a = d.u32_shared().unwrap();
+        let b = d.u32_shared().unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "clones share one allocation");
+        assert!(d.f32_shared().is_none());
     }
 }

@@ -21,6 +21,8 @@
 //! typed as [`ExecError`] on the library path; panicking conveniences
 //! (`Intermediate::expect_*`) remain for examples, benches and tests.
 
+use std::sync::Arc;
+
 use super::column::{Catalog, ColumnData};
 use super::ops::{self, AggKind, AggResult};
 use super::pipeline::{PipelineError, PipelineRequest};
@@ -122,12 +124,14 @@ impl From<PipelineError> for ExecError {
     }
 }
 
-/// A materialized intermediate.
+/// A materialized intermediate. Like [`ColumnData`], the vector-shaped
+/// variants are shared `Arc` slices: cloning an intermediate (or taking
+/// one out of a pipeline handle) never copies the payload bytes.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Intermediate {
     Column(ColumnData),
-    Candidates(Vec<u32>),
-    Pairs(Vec<(u32, u32)>),
+    Candidates(Arc<[u32]>),
+    Pairs(Arc<[(u32, u32)]>),
     Scalar(AggResult),
 }
 
@@ -152,14 +156,14 @@ impl Intermediate {
         }
     }
 
-    pub fn expect_candidates(self) -> Vec<u32> {
+    pub fn expect_candidates(self) -> Arc<[u32]> {
         match self {
             Intermediate::Candidates(c) => c,
             other => panic!("expected candidates, got {other:?}"),
         }
     }
 
-    pub fn expect_pairs(self) -> Vec<(u32, u32)> {
+    pub fn expect_pairs(self) -> Arc<[(u32, u32)]> {
         match self {
             Intermediate::Pairs(p) => p,
             other => panic!("expected pairs, got {other:?}"),
@@ -190,7 +194,7 @@ impl Intermediate {
     pub fn into_candidates(
         self,
         context: &'static str,
-    ) -> Result<Vec<u32>, ExecError> {
+    ) -> Result<Arc<[u32]>, ExecError> {
         match self {
             Intermediate::Candidates(c) => Ok(c),
             other => Err(ExecError::Type {
@@ -205,7 +209,7 @@ impl Intermediate {
     pub fn into_pairs(
         self,
         context: &'static str,
-    ) -> Result<Vec<(u32, u32)>, ExecError> {
+    ) -> Result<Arc<[(u32, u32)]>, ExecError> {
         match self {
             Intermediate::Pairs(p) => Ok(p),
             other => Err(ExecError::Type {
@@ -302,12 +306,14 @@ impl<'a> Executor<'a> {
                 }
                 let cands = match self.accelerator.as_mut() {
                     Some(acc) => {
+                        // Zero-copy: the request shares the catalog
+                        // column's allocation with the card.
                         let req = OffloadRequest::select(*lo, *hi)
-                            .on(col.as_u32().expect("checked u32"))
+                            .on_shared(col.u32_shared().expect("checked u32"))
                             .keyed(key);
                         acc.submit(req).wait_selection().0
                     }
-                    None => ops::range_select(&col, *lo, *hi, self.threads),
+                    None => ops::range_select(&col, *lo, *hi, self.threads).into(),
                 };
                 Ok(Intermediate::Candidates(cands))
             }
@@ -331,15 +337,15 @@ impl<'a> Executor<'a> {
                 }
                 let pairs = match self.accelerator.as_mut() {
                     Some(acc) => {
-                        let req = OffloadRequest::join(
-                            build.as_u32().expect("checked u32"),
-                            probe.as_u32().expect("checked u32"),
+                        let req = OffloadRequest::join_shared(
+                            build.u32_shared().expect("checked u32"),
+                            probe.u32_shared().expect("checked u32"),
                         )
                         .keyed(s_key)
                         .probe_keyed(l_key);
                         acc.submit(req).wait_join().0
                     }
-                    None => ops::hash_join(&build, &probe, self.threads),
+                    None => ops::hash_join(&build, &probe, self.threads).into(),
                 };
                 Ok(Intermediate::Pairs(pairs))
             }
@@ -402,7 +408,7 @@ mod tests {
             Plan::scan("orders", "okey").select(2, 4),
         );
         let col = ex.run(&plan).unwrap().expect_column();
-        assert_eq!(col, ColumnData::F32(vec![15.0, 25.0, 35.0]));
+        assert_eq!(col, ColumnData::F32(vec![15.0, 25.0, 35.0].into()));
         let agg = ex
             .run(&plan.clone().aggregate(AggKind::SumF32))
             .unwrap()
@@ -458,7 +464,7 @@ mod tests {
             .unwrap();
         // Candidate order can differ between paths; compare as sets.
         let norm = |i: Intermediate| {
-            let mut v = i.expect_candidates();
+            let mut v = i.expect_candidates().to_vec();
             v.sort_unstable();
             v
         };

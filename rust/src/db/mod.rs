@@ -8,7 +8,11 @@
 //! re-materialized as candidate lists). This module reproduces that
 //! architecture — and the pipeline API that removes the round-trips:
 //!
-//! * [`column`] — BAT-style typed columns, tables, and the catalog;
+//! * [`column`] — BAT-style typed columns, tables, and the catalog.
+//!   **Ownership rule:** columns are shared, immutable `Arc` slices
+//!   (`Arc<[u32]>` / `Arc<[f32]>`); every boundary crossing — plan
+//!   lowering, offload payloads, published intermediates, results taken
+//!   back — clones a handle, never the bytes (see [`column`]'s docs);
 //! * [`ops`] — the relational operators (scan, range-select, hash join,
 //!   project, aggregate), all late-materializing via candidate lists;
 //! * [`exec`] — the plan executor: CPU operators with typed

@@ -107,17 +107,17 @@ mod tests {
 
     #[test]
     fn select_then_project() {
-        let col = ColumnData::U32(vec![5, 50, 500, 55]);
+        let col = ColumnData::U32(vec![5, 50, 500, 55].into());
         let cand = range_select(&col, 50, 100, 2);
         assert_eq!(cand, vec![1, 3]);
         let vals = project(&col, &cand);
-        assert_eq!(vals, ColumnData::U32(vec![50, 55]));
+        assert_eq!(vals, ColumnData::U32(vec![50, 55].into()));
     }
 
     #[test]
     fn join_returns_positions_both_sides() {
-        let build = ColumnData::U32(vec![10, 20, 10]);
-        let probe = ColumnData::U32(vec![20, 10, 99]);
+        let build = ColumnData::U32(vec![10, 20, 10].into());
+        let probe = ColumnData::U32(vec![20, 10, 99].into());
         let mut pairs = hash_join(&build, &probe, 1);
         pairs.sort_unstable();
         // probe[0]=20 matches build pos 1; probe[1]=10 matches build pos 0
@@ -127,19 +127,19 @@ mod tests {
 
     #[test]
     fn aggregates() {
-        let u = ColumnData::U32(vec![3, 1, 2]);
+        let u = ColumnData::U32(vec![3, 1, 2].into());
         assert_eq!(aggregate(&u, AggKind::Count), AggResult::Count(3));
         assert_eq!(aggregate(&u, AggKind::SumU32), AggResult::U64(6));
         assert_eq!(aggregate(&u, AggKind::MinU32), AggResult::U64(1));
         assert_eq!(aggregate(&u, AggKind::MaxU32), AggResult::U64(3));
-        let f = ColumnData::F32(vec![1.5, 2.5]);
+        let f = ColumnData::F32(vec![1.5, 2.5].into());
         assert_eq!(aggregate(&f, AggKind::SumF32), AggResult::F64(4.0));
     }
 
     #[test]
     fn group_sum_groups() {
-        let k = ColumnData::U32(vec![1, 2, 1, 2, 3]);
-        let v = ColumnData::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let k = ColumnData::U32(vec![1, 2, 1, 2, 3].into());
+        let v = ColumnData::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0].into());
         let g = group_sum(&k, &v);
         assert_eq!(g, vec![(1, 4.0, 2), (2, 6.0, 2), (3, 5.0, 1)]);
     }

@@ -116,11 +116,12 @@ enum StageOp {
     Join,
 }
 
-/// One payload slot of a stage.
+/// One payload slot of a stage. Columns are shared `Arc` slices straight
+/// out of the catalog — lowering and submission never copy column bytes.
 #[derive(Debug, Clone)]
 enum StageInput {
     /// A host base column, named for the resident cache.
-    Host { data: Vec<u32>, key: ColumnKey },
+    Host { data: Arc<[u32]>, key: ColumnKey },
     /// Derived on the card from earlier stages' outputs.
     Expr(StageExpr),
 }
@@ -131,7 +132,7 @@ enum StageInput {
 enum StageExpr {
     Candidates(usize),
     JoinSide { stage: usize, left: bool },
-    Column { data: Vec<u32>, key: Option<ColumnKey> },
+    Column { data: Arc<[u32]>, key: Option<ColumnKey> },
     Gather { column: Box<StageExpr>, positions: Box<StageExpr> },
 }
 
@@ -530,12 +531,12 @@ fn lower_input(
     slot: usize,
     ids: &[usize],
     deps: &mut Vec<DepInput>,
-) -> (Vec<u32>, Option<ColumnKey>) {
+) -> (Arc<[u32]>, Option<ColumnKey>) {
     match input {
         StageInput::Host { data, key } => (data, Some(key)),
         StageInput::Expr(e) => {
             deps.push(DepInput { slot, expr: to_dep_expr(e, ids) });
-            (Vec::new(), None)
+            (Vec::new().into(), None)
         }
     }
 }

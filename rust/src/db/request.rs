@@ -34,6 +34,8 @@
 //! `FpgaAccelerator::try_submit` (or a panic from the ergonomic
 //! `submit`).
 
+use std::sync::Arc;
+
 use crate::coordinator::{ColumnKey, JobKind, JobSpec};
 use crate::engines::sgd::SgdHyperParams;
 use crate::hbm::shim::ENGINE_PORTS;
@@ -70,22 +72,22 @@ impl std::error::Error for RequestError {}
 #[derive(Debug, Clone)]
 enum Payload {
     Select {
-        data: Option<Vec<u32>>,
+        data: Option<Arc<[u32]>>,
         lo: u32,
         hi: u32,
         key: Option<ColumnKey>,
     },
     Join {
-        s: Vec<u32>,
-        l: Vec<u32>,
+        s: Arc<[u32]>,
+        l: Arc<[u32]>,
         s_key: Option<ColumnKey>,
         l_key: Option<ColumnKey>,
         /// `None`: decide from the build side's uniqueness at submission.
         collisions: Option<bool>,
     },
     Sgd {
-        features: Vec<f32>,
-        labels: Vec<f32>,
+        features: Arc<[f32]>,
+        labels: Arc<[f32]>,
         n_features: usize,
         grid: Vec<SgdHyperParams>,
         key: Option<ColumnKey>,
@@ -117,12 +119,20 @@ impl OffloadRequest {
 
     /// Hash join: build side `s`, probe side `l`. Collision handling is
     /// auto-detected from `s` unless forced with
-    /// [`collisions`](OffloadRequest::collisions).
+    /// [`collisions`](OffloadRequest::collisions). Copies each slice once
+    /// into a shared column; callers already holding `Arc` columns (the
+    /// plan executor) use [`join_shared`](OffloadRequest::join_shared).
     pub fn join(s: &[u32], l: &[u32]) -> Self {
+        Self::join_shared(s.into(), l.into())
+    }
+
+    /// Zero-copy [`join`](OffloadRequest::join): the shared columns are
+    /// handed over without copying their bytes.
+    pub fn join_shared(s: Arc<[u32]>, l: Arc<[u32]>) -> Self {
         Self {
             payload: Payload::Join {
-                s: s.to_vec(),
-                l: l.to_vec(),
+                s,
+                l,
                 s_key: None,
                 l_key: None,
                 collisions: None,
@@ -133,31 +143,43 @@ impl OffloadRequest {
     }
 
     /// GLM hyperparameter grid over one dataset (row-major `features`,
-    /// one label per sample).
+    /// one label per sample). Copies the dataset once into shared
+    /// columns; see [`sgd_shared`](OffloadRequest::sgd_shared).
     pub fn sgd(
         features: &[f32],
         labels: &[f32],
         n_features: usize,
         grid: &[SgdHyperParams],
     ) -> Self {
+        Self::sgd_shared(features.into(), labels.into(), n_features, grid.to_vec())
+    }
+
+    /// Zero-copy [`sgd`](OffloadRequest::sgd).
+    pub fn sgd_shared(
+        features: Arc<[f32]>,
+        labels: Arc<[f32]>,
+        n_features: usize,
+        grid: Vec<SgdHyperParams>,
+    ) -> Self {
         Self {
-            payload: Payload::Sgd {
-                features: features.to_vec(),
-                labels: labels.to_vec(),
-                n_features,
-                grid: grid.to_vec(),
-                key: None,
-            },
+            payload: Payload::Sgd { features, labels, n_features, grid, key: None },
             engines: None,
             client: 0,
         }
     }
 
-    /// Attach the selection's input column. Panics on non-selection
-    /// requests (join/SGD carry their payloads in their constructors).
-    pub fn on(mut self, data: &[u32]) -> Self {
+    /// Attach the selection's input column (one copy into a shared
+    /// column). Panics on non-selection requests (join/SGD carry their
+    /// payloads in their constructors).
+    pub fn on(self, data: &[u32]) -> Self {
+        self.on_shared(data.into())
+    }
+
+    /// Zero-copy [`on`](OffloadRequest::on): attach an already-shared
+    /// column without copying its bytes.
+    pub fn on_shared(mut self, data: Arc<[u32]>) -> Self {
         match &mut self.payload {
-            Payload::Select { data: slot, .. } => *slot = Some(data.to_vec()),
+            Payload::Select { data: slot, .. } => *slot = Some(data),
             other => panic!(
                 ".on(data) applies to select requests, not {}",
                 payload_name(other)
@@ -343,7 +365,7 @@ mod tests {
         assert_eq!(spec.inputs[0].key.as_ref().unwrap().to_string(), "t.c");
         match spec.kind {
             JobKind::Selection { ref data, lo, hi } => {
-                assert_eq!(data, &[1, 15, 30]);
+                assert_eq!(data[..], [1, 15, 30]);
                 assert_eq!((lo, hi), (10, 20));
             }
             ref other => panic!("wrong kind {}", other.name()),

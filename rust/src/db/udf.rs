@@ -44,11 +44,12 @@
 //! keyed warm-up request first and measure the repeat — what a real DBMS
 //! does, rather than asserting residency by fiat.
 //!
-//! Submission hands an *owned* copy of the host columns to the job (the
-//! coordinator must be able to queue jobs past the borrow), so each
-//! offload pays one host-side memcpy of its input on top of the simulated
-//! transfers; at figure-driver scale this is noise next to the engines'
-//! functional passes.
+//! Submission hands *shared* (`Arc`-backed) columns to the job: the
+//! coordinator holds a handle past the borrow, and no column bytes are
+//! copied host-side on submit, publish, or claim. Requests built from
+//! plain slices (`OffloadRequest::select(..).on(&data)`) pay exactly one
+//! copy into the shared allocation; the plan executor's catalog columns
+//! are already shared and cross for free (`on_shared`/`join_shared`).
 
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -197,9 +198,19 @@ impl FpgaAccelerator {
     }
 
     /// Snapshot of the card's accounting: per-job records, cache hit
-    /// rates, simulated card time.
+    /// rates, simulated card time. This clones the records once (the
+    /// snapshot must escape the coordinator lock); drivers that only need
+    /// summary numbers and hold the `Coordinator` directly use its
+    /// borrowed `stats()` view instead.
     pub fn stats(&self) -> CoordinatorStats {
-        self.coord().stats()
+        self.coord().stats().snapshot()
+    }
+
+    /// Toggle parallel functional execution on the card's simulator
+    /// (on by default). Results are bit-identical either way; only host
+    /// wall-clock changes — `hbmctl bench-host` measures the delta.
+    pub fn set_parallel_functional(&self, on: bool) {
+        self.coord().set_parallel_functional(on);
     }
 }
 
@@ -302,22 +313,22 @@ impl JobHandle {
     }
 
     /// [`take`](JobHandle::take), expecting a selection's sorted
-    /// candidate list.
-    pub fn wait_selection(self) -> (Vec<u32>, OffloadTiming) {
+    /// candidate list. The result is a shared slice — no copy.
+    pub fn wait_selection(self) -> (Arc<[u32]>, OffloadTiming) {
         let (output, timing) = self.take();
         (output.expect_selection(), timing)
     }
 
     /// [`take`](JobHandle::take), expecting a join's `(s_position,
     /// l_index)` pairs.
-    pub fn wait_join(self) -> (Vec<(u32, u32)>, OffloadTiming) {
+    pub fn wait_join(self) -> (Arc<[(u32, u32)]>, OffloadTiming) {
         let (output, timing) = self.take();
         (output.expect_join(), timing)
     }
 
     /// [`take`](JobHandle::take), expecting one trained model per grid
     /// entry, in grid order.
-    pub fn wait_sgd(self) -> (Vec<Vec<f32>>, OffloadTiming) {
+    pub fn wait_sgd(self) -> (Arc<[Vec<f32>]>, OffloadTiming) {
         let (output, timing) = self.take();
         (output.expect_sgd(), timing)
     }
@@ -358,7 +369,7 @@ mod tests {
             .wait_selection();
         let mut cpu = cpu::selection::range_select(&w.data, w.lo, w.hi, 4);
         cpu.sort_unstable();
-        assert_eq!(fpga, cpu);
+        assert_eq!(fpga[..], cpu[..]);
         assert!(t.exec > 0.0 && t.copy_in > 0.0 && t.copy_out > 0.0);
     }
 
@@ -366,8 +377,8 @@ mod tests {
     fn submitted_join_matches_cpu_positions() {
         let w = JoinWorkload::generate(60_000, 512, true, false, 9);
         let mut acc = acc();
-        let (mut fpga, t) =
-            acc.submit(OffloadRequest::join(&w.s, &w.l)).wait_join();
+        let (fpga, t) = acc.submit(OffloadRequest::join(&w.s, &w.l)).wait_join();
+        let mut fpga = fpga.to_vec();
         let mut cpu = cpu::join::hash_join_positions(&w.s, &w.l, 4);
         fpga.sort_unstable();
         cpu.sort_unstable();
@@ -407,7 +418,7 @@ mod tests {
             .submit(OffloadRequest::sgd(&d.features, &d.labels, 32, &grid))
             .wait_sgd();
         assert_eq!(models.len(), 2);
-        for (params, model) in grid.iter().zip(&models) {
+        for (params, model) in grid.iter().zip(models.iter()) {
             let (cpu_model, _) = cpu::sgd::train(&d.features, &d.labels, 32, params);
             for (a, b) in cpu_model.iter().zip(model) {
                 assert!((a - b).abs() < 1e-5);
@@ -441,7 +452,8 @@ mod tests {
         let sel_req = || OffloadRequest::select(w.lo, w.hi).on(&w.data);
         let (sel, _) = acc.submit(sel_req()).wait_selection();
         let jw = JoinWorkload::generate(40_000, 700, true, true, 14);
-        let (mut pairs, _) = acc.submit(OffloadRequest::join(&jw.s, &jw.l)).wait_join();
+        let (pairs, _) = acc.submit(OffloadRequest::join(&jw.s, &jw.l)).wait_join();
+        let mut pairs = pairs.to_vec();
         let (sel2, _) = acc.submit(sel_req()).wait_selection();
         assert_eq!(sel, sel2, "join between selections must not corrupt them");
         let mut cpu_pairs = cpu::join::hash_join_positions(&jw.s, &jw.l, 4);

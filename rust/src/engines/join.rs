@@ -25,7 +25,7 @@
 
 use super::pipeline::{cycles_to_secs, rate_at_ii, LINE_BYTES, PARALLELISM};
 use super::{Engine, Phase};
-use crate::hbm::memory::HbmMemory;
+use crate::hbm::memory::{HbmMemory, MemBytes};
 use crate::hbm::shim::ShimBuffer;
 use crate::hbm::HbmConfig;
 
@@ -135,11 +135,13 @@ pub struct PassStats {
 pub struct JoinEngine {
     cfg: HbmConfig,
     job: JoinJob,
-    /// Remaining passes: each covers HT_TUPLES tuples of S.
-    pass: usize,
     n_passes: usize,
-    /// Pending timing phases for the current pass (build, then probe).
+    /// Timing phases produced by the functional pass (build, then probe,
+    /// per pass), emitted in order by `next_phase`.
     queued: Vec<Phase>,
+    /// Next phase of `queued` to emit.
+    emitted: usize,
+    prepared: bool,
     out_words: Vec<u32>,
     pub total_matches: u64,
     pub out_bytes: u64,
@@ -152,9 +154,10 @@ impl JoinEngine {
         Self {
             cfg,
             job,
-            pass: 0,
             n_passes,
             queued: Vec::new(),
+            emitted: 0,
+            prepared: false,
             out_words: Vec::new(),
             total_matches: 0,
             out_bytes: 0,
@@ -167,7 +170,7 @@ impl JoinEngine {
     }
 
     /// Functionally execute pass `p` and queue its build+probe phases.
-    fn run_pass(&mut self, mem: &mut HbmMemory, p: usize) {
+    fn run_pass(&mut self, mem: &mut dyn MemBytes, p: usize) {
         let s_all = self.job.s.read_u32s(mem, 0, self.job.s_items as usize);
         let lo = p * HT_TUPLES;
         let hi = ((p + 1) * HT_TUPLES).min(s_all.len());
@@ -244,7 +247,7 @@ impl JoinEngine {
         self.stats.push(st);
     }
 
-    fn finalize(&mut self, mem: &mut HbmMemory) {
+    fn finalize(&mut self, mem: &mut dyn MemBytes) {
         self.job.output.write_u32s(mem, 0, &self.out_words);
         self.out_bytes = self.out_words.len() as u64 * 4;
     }
@@ -260,19 +263,33 @@ impl Engine for JoinEngine {
     }
 
     fn next_phase(&mut self, mem: &mut HbmMemory) -> Option<Phase> {
-        if let Some(p) = if self.queued.is_empty() { None } else { Some(self.queued.remove(0)) } {
-            return Some(p);
+        self.run_functional(mem);
+        if self.emitted < self.queued.len() {
+            let phase = self.queued[self.emitted].clone();
+            self.emitted += 1;
+            Some(phase)
+        } else {
+            None
         }
-        if self.pass < self.n_passes {
-            let p = self.pass;
-            self.pass += 1;
+    }
+
+    fn functional_ranges(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::with_capacity(6);
+        out.extend(self.job.s.ranges());
+        out.extend(self.job.l.ranges());
+        out.extend(self.job.output.ranges());
+        out
+    }
+
+    fn run_functional(&mut self, mem: &mut dyn MemBytes) {
+        if self.prepared {
+            return;
+        }
+        self.prepared = true;
+        for p in 0..self.n_passes {
             self.run_pass(mem, p);
-            if self.pass == self.n_passes {
-                self.finalize(mem);
-            }
-            return Some(self.queued.remove(0));
         }
-        None
+        self.finalize(mem);
     }
 }
 

@@ -24,7 +24,7 @@ pub mod sgd;
 pub mod sim;
 
 use crate::hbm::fluid::Flow;
-use crate::hbm::memory::HbmMemory;
+use crate::hbm::memory::{HbmMemory, MemBytes};
 
 /// One unit of engine work visible to the timing simulator.
 #[derive(Debug, Clone)]
@@ -103,9 +103,19 @@ impl Phase {
 }
 
 /// A compute engine as seen by the simulator: a state machine producing
-/// phases until done. Functional work (producing the actual output data)
-/// happens inside `next_phase`, reading/writing the shared [`HbmMemory`].
-pub trait Engine {
+/// phases until done.
+///
+/// Engines separate *functional* work (producing the actual output
+/// bytes) from *timing* phases. [`run_functional`](Engine::run_functional)
+/// performs the entire functional pass up front — against the whole card
+/// or a disjoint per-engine [`HbmView`](crate::hbm::HbmView), which is
+/// how `sim::run` executes co-scheduled engines on parallel worker
+/// threads (the `Send` supertrait exists for exactly that) — and caches
+/// the resulting timing phases; [`next_phase`](Engine::next_phase) then
+/// only emits them. Calling `next_phase` on an unprepared engine runs the
+/// functional pass lazily against the shared memory, preserving the old
+/// single-threaded driving style for tests and ad-hoc drivers.
+pub trait Engine: Send {
     fn name(&self) -> String;
     /// Produce the next phase of work, or `None` when the engine is done.
     fn next_phase(&mut self, mem: &mut HbmMemory) -> Option<Phase>;
@@ -113,6 +123,18 @@ pub trait Engine {
     /// trained models, output sizes) back out of a finished engine
     /// without re-running its functional pass.
     fn as_any(&self) -> &dyn std::any::Any;
+    /// Disjoint `(addr, bytes)` ranges the functional pass may touch.
+    /// An empty list means "unknown" and forces serial execution for
+    /// this engine's round (the safe default for ad-hoc test engines).
+    fn functional_ranges(&self) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
+    /// Run the entire functional pass now (idempotent), against `mem` —
+    /// either the whole card or this engine's granted view. The default
+    /// no-op keeps lazy engines working through `next_phase`.
+    fn run_functional(&mut self, mem: &mut dyn MemBytes) {
+        let _ = mem;
+    }
 }
 
 /// Statistics for one engine after a simulation run.

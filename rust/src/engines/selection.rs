@@ -18,7 +18,7 @@
 
 use super::pipeline::{cycles_to_secs, LINE_BYTES, PARALLELISM};
 use super::{Engine, Phase};
-use crate::hbm::memory::HbmMemory;
+use crate::hbm::memory::{HbmMemory, MemBytes};
 use crate::hbm::shim::ShimBuffer;
 use crate::hbm::HbmConfig;
 
@@ -51,27 +51,24 @@ pub struct SelectionJob {
 pub struct SelectionEngine {
     cfg: HbmConfig,
     job: SelectionJob,
-    state: State,
+    /// Timing phase produced by the functional pass, awaiting emission.
+    phase: Option<Phase>,
+    prepared: bool,
     /// Filled after the scan: total matches (excluding padding).
     pub matches: u64,
     /// Bytes of (padded) output produced.
     pub out_bytes: u64,
 }
 
-enum State {
-    Pending,
-    Done,
-}
-
 impl SelectionEngine {
     pub fn new(cfg: HbmConfig, job: SelectionJob) -> Self {
-        Self { cfg, job, state: State::Pending, matches: 0, out_bytes: 0 }
+        Self { cfg, job, phase: None, prepared: false, matches: 0, out_bytes: 0 }
     }
 
     /// Run the scan functionally: read the column through the shim, apply
     /// the predicate per lane, write padded result lines. Returns
     /// (matches, padded output lines).
-    fn run_functional(&mut self, mem: &mut HbmMemory) -> (u64, u64) {
+    fn scan(&mut self, mem: &mut dyn MemBytes) -> (u64, u64) {
         let items = self.job.items as usize;
         let data = self.job.input.read_u32s(mem, 0, items);
         let chunk_items = BUFFER_SIZE * PARALLELISM;
@@ -115,34 +112,41 @@ impl Engine for SelectionEngine {
     }
 
     fn next_phase(&mut self, mem: &mut HbmMemory) -> Option<Phase> {
-        match self.state {
-            State::Done => None,
-            State::Pending => {
-                let (matches, out_lines) = self.run_functional(mem);
-                self.matches = matches;
-                self.out_bytes = out_lines * LINE_BYTES;
-                self.state = State::Done;
+        self.run_functional(mem);
+        self.phase.take()
+    }
 
-                let in_bytes = self.job.items * 4;
-                let n_switches =
-                    (self.job.items as f64 / (BUFFER_SIZE * PARALLELISM) as f64)
-                        .ceil();
-                let overhead = cycles_to_secs(
-                    &self.cfg,
-                    n_switches * SWITCH_OVERHEAD_CYCLES,
-                );
-                let out_ratio = self.out_bytes as f64 / in_bytes.max(1) as f64;
-                // Ingress paced by input bytes; egress traffic rides along
-                // at `out_ratio` bytes per input byte on the same port.
-                let mut phase = Phase::new("scan", in_bytes)
-                    .with_buffer(&self.job.input, 0, 1.0)
-                    .with_overhead(overhead);
-                if out_ratio > 0.0 {
-                    phase = phase.with_buffer(&self.job.output, 2, out_ratio);
-                }
-                Some(phase)
-            }
+    fn functional_ranges(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::with_capacity(4);
+        out.extend(self.job.input.ranges());
+        out.extend(self.job.output.ranges());
+        out
+    }
+
+    fn run_functional(&mut self, mem: &mut dyn MemBytes) {
+        if self.prepared {
+            return;
         }
+        self.prepared = true;
+        let (matches, out_lines) = self.scan(mem);
+        self.matches = matches;
+        self.out_bytes = out_lines * LINE_BYTES;
+
+        let in_bytes = self.job.items * 4;
+        let n_switches =
+            (self.job.items as f64 / (BUFFER_SIZE * PARALLELISM) as f64).ceil();
+        let overhead =
+            cycles_to_secs(&self.cfg, n_switches * SWITCH_OVERHEAD_CYCLES);
+        let out_ratio = self.out_bytes as f64 / in_bytes.max(1) as f64;
+        // Ingress paced by input bytes; egress traffic rides along
+        // at `out_ratio` bytes per input byte on the same port.
+        let mut phase = Phase::new("scan", in_bytes)
+            .with_buffer(&self.job.input, 0, 1.0)
+            .with_overhead(overhead);
+        if out_ratio > 0.0 {
+            phase = phase.with_buffer(&self.job.output, 2, out_ratio);
+        }
+        self.phase = Some(phase);
     }
 }
 
@@ -188,7 +192,7 @@ mod tests {
             cfg.clone(),
             SelectionJob { input, items, index_base: 0, lo, hi, output },
         );
-        let (matches, out_lines) = probe.run_functional(&mut mem);
+        let (matches, out_lines) = probe.scan(&mut mem);
         let idx = compact_results(&mem, &output, out_lines * 64);
         (report, matches, idx, out_lines * 64)
     }

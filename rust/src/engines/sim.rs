@@ -6,6 +6,23 @@
 //! O(#phases × solve-cost), independent of data volume — a 2 GB join and
 //! a 2 KB join cost the same to *time* (the functional work still touches
 //! the real bytes).
+//!
+//! ## Parallel functional execution, serial timing
+//!
+//! Engines within a round are independent: they read and write disjoint
+//! `ShimBuffer` ranges in their own ports' home windows. [`run`] exploits
+//! that by executing every engine's *functional* pass (the scan/probe/SGD
+//! loops over real bytes — the host-side cost that dominates large runs)
+//! on `std::thread::scope` workers first, each against a disjoint
+//! [`HbmView`](crate::hbm::HbmView) carved out of the page store, and
+//! only then runs the (cheap, deterministic) event-driven timing loop
+//! single-threaded. Results are bit-identical to serial execution: each
+//! engine touches only its own pages, the views merge back
+//! deterministically, and the timing loop consumes the same phase
+//! sequence either way. Engines that do not declare their memory
+//! footprint ([`Engine::functional_ranges`] empty), or whose declared
+//! ranges overlap, fall back to serial functional execution —
+//! correctness never depends on the parallel path.
 
 use super::{Engine, EngineStats, Phase};
 use crate::hbm::fluid::{solve, Flow};
@@ -36,9 +53,88 @@ impl SimReport {
     }
 }
 
-/// Run all engines to completion, sharing `mem` and the crossbar.
+/// Run all engines to completion, sharing `mem` and the crossbar, with
+/// the functional passes executed on parallel worker threads when the
+/// engines' declared footprints are disjoint (see the module docs).
 pub fn run(cfg: &HbmConfig, mem: &mut HbmMemory, engines: &mut [Box<dyn Engine>]) -> SimReport {
+    run_mode(cfg, mem, engines, true)
+}
+
+/// [`run`] with the functional passes forced onto the calling thread —
+/// the serial reference for callers driving the simulator directly. (The
+/// coordinator's equivalent switch is
+/// `Coordinator::set_parallel_functional(false)`, which is what
+/// `hbmctl bench-host` and the determinism suite use.)
+pub fn run_serial(
+    cfg: &HbmConfig,
+    mem: &mut HbmMemory,
+    engines: &mut [Box<dyn Engine>],
+) -> SimReport {
+    run_mode(cfg, mem, engines, false)
+}
+
+/// Below this total declared footprint, per-round thread-spawn overhead
+/// outweighs the parallel win; such rounds run serially so the default
+/// mode is never slower than serial on small workloads.
+const PARALLEL_MIN_FOOTPRINT_BYTES: u64 = 1 << 20;
+
+/// Execute every engine's functional pass up front. Parallel when
+/// requested and worthwhile (≥ 2 engines, a host with > 1 core, every
+/// footprint declared, all footprints page-disjoint, and enough total
+/// work to amortize the worker threads); serial otherwise. Either way,
+/// engines are *prepared* afterwards: `next_phase` only emits
+/// precomputed phases.
+fn prepare_functional(mem: &mut HbmMemory, engines: &mut [Box<dyn Engine>], parallel: bool) {
+    let want_parallel = parallel
+        && engines.len() > 1
+        && std::thread::available_parallelism().map(|p| p.get() > 1).unwrap_or(false);
+    if want_parallel {
+        let range_sets: Vec<Vec<(u64, u64)>> =
+            engines.iter().map(|e| e.functional_ranges()).collect();
+        let footprint: u64 = range_sets
+            .iter()
+            .flat_map(|set| set.iter().map(|&(_, bytes)| bytes))
+            .sum();
+        if footprint >= PARALLEL_MIN_FOOTPRINT_BYTES
+            && range_sets.iter().all(|r| !r.is_empty())
+        {
+            if let Some(views) = mem.take_disjoint_views(&range_sets) {
+                let views = std::thread::scope(|scope| {
+                    let workers: Vec<_> = engines
+                        .iter_mut()
+                        .zip(views)
+                        .map(|(engine, mut view)| {
+                            scope.spawn(move || {
+                                engine.run_functional(&mut view);
+                                view
+                            })
+                        })
+                        .collect();
+                    workers
+                        .into_iter()
+                        .map(|w| w.join().expect("engine functional worker panicked"))
+                        .collect::<Vec<_>>()
+                });
+                mem.restore_views(views);
+                return;
+            }
+        }
+    }
+    for engine in engines.iter_mut() {
+        engine.run_functional(mem);
+    }
+}
+
+/// Run all engines to completion, with explicit control over whether the
+/// functional passes use worker threads.
+pub fn run_mode(
+    cfg: &HbmConfig,
+    mem: &mut HbmMemory,
+    engines: &mut [Box<dyn Engine>],
+    parallel: bool,
+) -> SimReport {
     let n = engines.len();
+    prepare_functional(mem, engines, parallel);
     let mut stats: Vec<EngineStats> = engines
         .iter()
         .map(|e| EngineStats { name: e.name(), ..Default::default() })

@@ -4,16 +4,55 @@
 //! pages so that compute engines read and write *real data* through the
 //! same addresses the timing model accounts for. Untouched pages cost
 //! nothing; a full 2 GB join build allocates only what it touches.
+//!
+//! Two access paths exist:
+//!
+//! * [`HbmMemory`] — the whole card, owned by one caller (the
+//!   coordinator, a figure driver, a test);
+//! * [`HbmView`] — a *disjoint slice* of the card's pages, carved out
+//!   with [`HbmMemory::take_disjoint_views`] so several engines can run
+//!   their functional passes on worker threads at once. Views own their
+//!   pages (they are moved out of the store and moved back by
+//!   [`HbmMemory::restore_views`]), so no locking is needed and the
+//!   merge is deterministic. A view panics on any access outside its
+//!   granted ranges — the functional analogue of a bus error, catching
+//!   engines that touch memory they were not granted.
+//!
+//! Both implement [`MemBytes`], the byte-level access trait the shim's
+//! interleaved buffers are generic over.
 
 use crate::util::units::MIB;
 
 use super::config::TOTAL_BYTES;
 
-const PAGE_BYTES: u64 = MIB;
+pub(crate) const PAGE_BYTES: u64 = MIB;
+
+/// Byte-level access to (a view of) the HBM store. Implemented by
+/// [`HbmMemory`] (the whole card) and [`HbmView`] (a disjoint per-engine
+/// slice); everything that moves functional bytes — the shim's
+/// interleaved buffers, the engines' scratch I/O — is generic over it.
+pub trait MemBytes {
+    /// Read `out.len()` bytes at `addr`. Unwritten regions read as zero.
+    fn read_into(&self, addr: u64, out: &mut [u8]);
+
+    /// Write a byte slice at `addr`.
+    fn write(&mut self, addr: u64, data: &[u8]);
+
+    /// Read `len` bytes at `addr` into a fresh buffer.
+    fn read(&self, addr: u64, len: usize) -> Vec<u8> {
+        let mut out = vec![0u8; len];
+        self.read_into(addr, &mut out);
+        out
+    }
+}
 
 /// Sparse paged byte store covering the HBM address space.
 pub struct HbmMemory {
     pages: Vec<Option<Box<[u8]>>>,
+    /// Pages currently backed by an allocation — maintained by the
+    /// allocate/free paths so [`resident_bytes`](HbmMemory::resident_bytes)
+    /// is O(1) instead of scanning all 8192 slots.
+    allocated_pages: u64,
 }
 
 impl Default for HbmMemory {
@@ -25,17 +64,40 @@ impl Default for HbmMemory {
 impl HbmMemory {
     pub fn new() -> Self {
         let n_pages = (TOTAL_BYTES / PAGE_BYTES) as usize;
-        Self { pages: (0..n_pages).map(|_| None).collect() }
+        Self { pages: (0..n_pages).map(|_| None).collect(), allocated_pages: 0 }
     }
 
-    /// Bytes currently backed by allocated pages.
+    /// Bytes currently backed by allocated pages (O(1): the counter is
+    /// maintained on the allocate and free paths).
     pub fn resident_bytes(&self) -> u64 {
-        self.pages.iter().filter(|p| p.is_some()).count() as u64 * PAGE_BYTES
+        self.allocated_pages * PAGE_BYTES
     }
 
     fn page_mut(&mut self, idx: usize) -> &mut [u8] {
-        self.pages[idx]
-            .get_or_insert_with(|| vec![0u8; PAGE_BYTES as usize].into_boxed_slice())
+        let slot = &mut self.pages[idx];
+        if slot.is_none() {
+            self.allocated_pages += 1;
+        }
+        slot.get_or_insert_with(|| vec![0u8; PAGE_BYTES as usize].into_boxed_slice())
+    }
+
+    /// Free every page *fully contained* in `[addr, addr + len)` — how
+    /// the coordinator returns an evicted resident column's backing to
+    /// the allocator. Partial edge pages are kept (they may carry
+    /// neighbouring data); freed pages read as zero again.
+    pub fn free_range(&mut self, addr: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let end = addr.checked_add(len).expect("address overflow");
+        assert!(end <= TOTAL_BYTES, "free [{addr:#x}, {end:#x}) exceeds HBM");
+        let first = addr.div_ceil(PAGE_BYTES) as usize;
+        let last = (end / PAGE_BYTES) as usize;
+        for p in first..last {
+            if self.pages[p].take().is_some() {
+                self.allocated_pages -= 1;
+            }
+        }
     }
 
     /// Write a byte slice at `addr`. Panics if the range exceeds capacity
@@ -118,6 +180,176 @@ impl HbmMemory {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect()
     }
+
+    // ----- disjoint views for parallel functional execution -----
+
+    /// Carve the store into one owned [`HbmView`] per entry of
+    /// `range_sets`, where each entry lists the `(addr, bytes)` ranges
+    /// that view may touch. Returns `None` — taking nothing — when any
+    /// two sets share a page (the caller then falls back to serial
+    /// execution). Pages are *moved* into the views; every view must come
+    /// back through [`restore_views`](HbmMemory::restore_views).
+    pub fn take_disjoint_views(
+        &mut self,
+        range_sets: &[Vec<(u64, u64)>],
+    ) -> Option<Vec<HbmView>> {
+        // Page intervals per set, merged within the set.
+        let mut per_set: Vec<Vec<(usize, usize)>> = Vec::with_capacity(range_sets.len());
+        for ranges in range_sets {
+            let mut pages: Vec<(usize, usize)> = Vec::new();
+            for &(addr, bytes) in ranges {
+                if bytes == 0 {
+                    continue;
+                }
+                let end = addr.checked_add(bytes).expect("range overflow");
+                assert!(end <= TOTAL_BYTES, "view range exceeds HBM");
+                pages.push((
+                    (addr / PAGE_BYTES) as usize,
+                    end.div_ceil(PAGE_BYTES) as usize,
+                ));
+            }
+            pages.sort_unstable();
+            let mut merged: Vec<(usize, usize)> = Vec::new();
+            for (s, e) in pages {
+                match merged.last_mut() {
+                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                    _ => merged.push((s, e)),
+                }
+            }
+            per_set.push(merged);
+        }
+        // Cross-set disjointness.
+        let mut all: Vec<(usize, usize, usize)> = Vec::new();
+        for (owner, intervals) in per_set.iter().enumerate() {
+            for &(s, e) in intervals {
+                all.push((s, e, owner));
+            }
+        }
+        all.sort_unstable();
+        for w in all.windows(2) {
+            if w[1].0 < w[0].1 {
+                return None;
+            }
+        }
+        // Move the pages out.
+        let mut views: Vec<HbmView> = (0..range_sets.len())
+            .map(|_| HbmView { runs: Vec::new(), allocated: 0 })
+            .collect();
+        for (s, e, owner) in all {
+            let run: Vec<Option<Box<[u8]>>> =
+                self.pages[s..e].iter_mut().map(std::mem::take).collect();
+            views[owner].runs.push((s, run));
+        }
+        Some(views)
+    }
+
+    /// Move every view's pages back into the store and fold their
+    /// allocation counts into the resident-page counter.
+    pub fn restore_views(&mut self, views: Vec<HbmView>) {
+        for view in views {
+            self.allocated_pages += view.allocated;
+            for (start, run) in view.runs {
+                for (i, page) in run.into_iter().enumerate() {
+                    self.pages[start + i] = page;
+                }
+            }
+        }
+    }
+}
+
+impl MemBytes for HbmMemory {
+    fn read_into(&self, addr: u64, out: &mut [u8]) {
+        HbmMemory::read_into(self, addr, out)
+    }
+
+    fn write(&mut self, addr: u64, data: &[u8]) {
+        HbmMemory::write(self, addr, data)
+    }
+}
+
+/// An owned, disjoint slice of the HBM page store: the memory one engine's
+/// functional pass may touch while co-scheduled engines run on other
+/// worker threads. Created by [`HbmMemory::take_disjoint_views`]; any
+/// access outside the granted ranges panics.
+pub struct HbmView {
+    /// `(first_page, pages)` runs, sorted by first page.
+    runs: Vec<(usize, Vec<Option<Box<[u8]>>>)>,
+    /// Pages this view newly allocated (folded back into the store's
+    /// counter at restore).
+    allocated: u64,
+}
+
+impl HbmView {
+    fn run_index(&self, page: usize) -> usize {
+        self.runs
+            .binary_search_by(|(start, run)| {
+                if start + run.len() <= page {
+                    std::cmp::Ordering::Less
+                } else if page < *start {
+                    std::cmp::Ordering::Greater
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            })
+            .unwrap_or_else(|_| {
+                panic!(
+                    "functional pass touched page {page} outside the \
+                     engine's granted memory ranges"
+                )
+            })
+    }
+
+    fn page_ref(&self, page: usize) -> &Option<Box<[u8]>> {
+        let ri = self.run_index(page);
+        let (start, run) = &self.runs[ri];
+        &run[page - start]
+    }
+
+    fn page_mut(&mut self, page: usize) -> &mut [u8] {
+        let ri = self.run_index(page);
+        let (start, run) = &mut self.runs[ri];
+        let slot = &mut run[page - *start];
+        if slot.is_none() {
+            self.allocated += 1;
+        }
+        slot.get_or_insert_with(|| vec![0u8; PAGE_BYTES as usize].into_boxed_slice())
+    }
+}
+
+impl MemBytes for HbmView {
+    fn read_into(&self, addr: u64, out: &mut [u8]) {
+        let end = addr.checked_add(out.len() as u64).expect("address overflow");
+        assert!(end <= TOTAL_BYTES, "read [{addr:#x}, {end:#x}) exceeds HBM");
+        let mut off = 0usize;
+        let mut cur = addr;
+        while off < out.len() {
+            let page = (cur / PAGE_BYTES) as usize;
+            let in_page = (cur % PAGE_BYTES) as usize;
+            let n = ((PAGE_BYTES as usize) - in_page).min(out.len() - off);
+            match self.page_ref(page) {
+                Some(p) => out[off..off + n].copy_from_slice(&p[in_page..in_page + n]),
+                None => out[off..off + n].fill(0),
+            }
+            off += n;
+            cur += n as u64;
+        }
+    }
+
+    fn write(&mut self, addr: u64, data: &[u8]) {
+        let end = addr.checked_add(data.len() as u64).expect("address overflow");
+        assert!(end <= TOTAL_BYTES, "write [{addr:#x}, {end:#x}) exceeds HBM");
+        let mut off = 0usize;
+        let mut cur = addr;
+        while off < data.len() {
+            let page = (cur / PAGE_BYTES) as usize;
+            let in_page = (cur % PAGE_BYTES) as usize;
+            let n = ((PAGE_BYTES as usize) - in_page).min(data.len() - off);
+            self.page_mut(page)[in_page..in_page + n]
+                .copy_from_slice(&data[off..off + n]);
+            off += n;
+            cur += n as u64;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -161,12 +393,81 @@ mod tests {
     }
 
     #[test]
+    fn free_range_frees_only_fully_covered_pages() {
+        let mut m = HbmMemory::new();
+        // Touch pages 0..4.
+        for p in 0..4u64 {
+            m.write(p * PAGE_BYTES, &[1]);
+        }
+        assert_eq!(m.resident_bytes(), 4 * PAGE_BYTES);
+        // [half of page 0, half of page 3): only pages 1 and 2 are fully
+        // covered and freed; the edge pages keep their data.
+        m.free_range(PAGE_BYTES / 2, 3 * PAGE_BYTES);
+        assert_eq!(m.resident_bytes(), 2 * PAGE_BYTES);
+        assert_eq!(m.read(0, 1), vec![1], "edge page keeps its data");
+        assert_eq!(m.read(PAGE_BYTES, 1), vec![0], "freed page reads zero");
+        assert_eq!(m.read(3 * PAGE_BYTES, 1), vec![1]);
+        // Freeing again is a no-op on the counter.
+        m.free_range(PAGE_BYTES / 2, 3 * PAGE_BYTES);
+        assert_eq!(m.resident_bytes(), 2 * PAGE_BYTES);
+    }
+
+    #[test]
     fn typed_roundtrips() {
         let mut m = HbmMemory::new();
         m.write_u32s(100, &[1, 2, 0xFFFF_FFFF]);
         assert_eq!(m.read_u32s(100, 3), vec![1, 2, 0xFFFF_FFFF]);
         m.write_f32s(4096, &[1.5, -2.25]);
         assert_eq!(m.read_f32s(4096, 2), vec![1.5, -2.25]);
+    }
+
+    #[test]
+    fn disjoint_views_partition_and_merge_back() {
+        let mut m = HbmMemory::new();
+        m.write(0, &[7]);
+        m.write(8 * PAGE_BYTES, &[9]);
+        let sets = vec![
+            vec![(0u64, 2 * PAGE_BYTES)],
+            vec![(8 * PAGE_BYTES, PAGE_BYTES)],
+        ];
+        let mut views = m.take_disjoint_views(&sets).expect("disjoint");
+        assert_eq!(views.len(), 2);
+        // Pages were moved out: the store reads zero where view 0 holds 7.
+        assert_eq!(m.read(0, 1), vec![0]);
+        assert_eq!(views[0].read(0, 1), vec![7]);
+        assert_eq!(views[1].read(8 * PAGE_BYTES, 1), vec![9]);
+        // Each view writes privately (a fresh page in view 0's range).
+        views[0].write(PAGE_BYTES, &[5, 5]);
+        views[1].write(8 * PAGE_BYTES + 10, &[3]);
+        m.restore_views(views);
+        assert_eq!(m.read(0, 1), vec![7]);
+        assert_eq!(m.read(PAGE_BYTES, 2), vec![5, 5]);
+        assert_eq!(m.read(8 * PAGE_BYTES + 10, 1), vec![3]);
+        // The counter absorbed the view's fresh allocation.
+        assert_eq!(m.resident_bytes(), 3 * PAGE_BYTES);
+    }
+
+    #[test]
+    fn overlapping_view_sets_are_refused() {
+        let mut m = HbmMemory::new();
+        let sets = vec![
+            vec![(0u64, 2 * PAGE_BYTES)],
+            vec![(PAGE_BYTES, PAGE_BYTES)], // shares page 1 with set 0
+        ];
+        assert!(m.take_disjoint_views(&sets).is_none());
+        // Nothing was taken: the store still works.
+        m.write(0, &[1]);
+        assert_eq!(m.read(0, 1), vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "granted memory ranges")]
+    fn view_access_outside_footprint_panics() {
+        let mut m = HbmMemory::new();
+        let mut views = m
+            .take_disjoint_views(&[vec![(0u64, PAGE_BYTES)]])
+            .expect("disjoint");
+        views[0].write(4 * PAGE_BYTES, &[1]);
     }
 
     #[test]

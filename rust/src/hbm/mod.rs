@@ -15,6 +15,6 @@ pub mod traffic;
 
 pub use config::{FabricClock, HbmConfig};
 pub use fluid::{solve, Allocation, Flow};
-pub use memory::HbmMemory;
+pub use memory::{HbmMemory, HbmView, MemBytes};
 pub use shim::{Shim, ShimBuffer};
 pub use traffic::{fig2_sweep, run_bandwidth, TrafficGen, TrafficOp};

@@ -17,7 +17,7 @@
 
 use super::config::{HbmConfig, SEGMENT_BYTES};
 use super::fluid::Flow;
-use super::memory::HbmMemory;
+use super::memory::MemBytes;
 use crate::util::units::GIB;
 
 /// Logical (post-shim) port count.
@@ -59,6 +59,19 @@ impl ShimBuffer {
         self.bytes / 2
     }
 
+    /// The two physical `(addr, bytes)` ranges this buffer occupies (one
+    /// per stack) — the memory footprint an engine declares so the
+    /// simulator can grant it a disjoint [`HbmView`] for its parallel
+    /// functional pass.
+    ///
+    /// [`HbmView`]: crate::hbm::memory::HbmView
+    pub fn ranges(&self) -> [(u64, u64); 2] {
+        [
+            (self.lo_addr, self.half_bytes()),
+            (self.lo_addr + STACK_OFFSET, self.half_bytes()),
+        ]
+    }
+
     /// The two fluid flows a full sequential pass over this buffer
     /// generates (one per physical port), with an optional per-flow rate
     /// cap (each physical port carries half the logical traffic, so a
@@ -78,7 +91,9 @@ impl ShimBuffer {
     /// de-interleave into two contiguous per-stack images and issue two
     /// bulk writes, instead of one paged write per 32-byte half-line
     /// (§Perf in EXPERIMENTS.md). Partial edge lines are read-modify-write.
-    pub fn write(&self, mem: &mut HbmMemory, offset: u64, data: &[u8]) {
+    /// Generic over [`MemBytes`] so engines can run against either the
+    /// whole card or their granted per-engine view.
+    pub fn write<M: MemBytes + ?Sized>(&self, mem: &mut M, offset: u64, data: &[u8]) {
         assert!(offset + data.len() as u64 <= self.bytes);
         if data.is_empty() {
             return;
@@ -122,7 +137,7 @@ impl ShimBuffer {
 
     /// Functional read through the shim's interleave (bulk two-stack read
     /// + in-memory interleave; see `write`).
-    pub fn read(&self, mem: &HbmMemory, offset: u64, len: usize) -> Vec<u8> {
+    pub fn read<M: MemBytes + ?Sized>(&self, mem: &M, offset: u64, len: usize) -> Vec<u8> {
         assert!(offset + len as u64 <= self.bytes);
         if len == 0 {
             return Vec::new();
@@ -144,7 +159,7 @@ impl ShimBuffer {
         logical[head..head + len].to_vec()
     }
 
-    pub fn write_u32s(&self, mem: &mut HbmMemory, offset: u64, vals: &[u32]) {
+    pub fn write_u32s<M: MemBytes + ?Sized>(&self, mem: &mut M, offset: u64, vals: &[u32]) {
         let mut buf = Vec::with_capacity(vals.len() * 4);
         for v in vals {
             buf.extend_from_slice(&v.to_le_bytes());
@@ -152,14 +167,14 @@ impl ShimBuffer {
         self.write(mem, offset, &buf);
     }
 
-    pub fn read_u32s(&self, mem: &HbmMemory, offset: u64, count: usize) -> Vec<u32> {
+    pub fn read_u32s<M: MemBytes + ?Sized>(&self, mem: &M, offset: u64, count: usize) -> Vec<u32> {
         self.read(mem, offset, count * 4)
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect()
     }
 
-    pub fn write_f32s(&self, mem: &mut HbmMemory, offset: u64, vals: &[f32]) {
+    pub fn write_f32s<M: MemBytes + ?Sized>(&self, mem: &mut M, offset: u64, vals: &[f32]) {
         let mut buf = Vec::with_capacity(vals.len() * 4);
         for v in vals {
             buf.extend_from_slice(&v.to_le_bytes());
@@ -167,7 +182,7 @@ impl ShimBuffer {
         self.write(mem, offset, &buf);
     }
 
-    pub fn read_f32s(&self, mem: &HbmMemory, offset: u64, count: usize) -> Vec<f32> {
+    pub fn read_f32s<M: MemBytes + ?Sized>(&self, mem: &M, offset: u64, count: usize) -> Vec<f32> {
         self.read(mem, offset, count * 4)
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -241,6 +256,7 @@ impl Shim {
 mod tests {
     use super::*;
     use crate::hbm::config::FabricClock;
+    use crate::hbm::memory::HbmMemory;
 
     #[test]
     fn logical_port_rates_match_paper() {

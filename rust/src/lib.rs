@@ -30,6 +30,12 @@
 //!   HBM instead of round-tripping intermediates through the host; plus
 //!   CPU baselines ([`cpu`]), workload generators ([`workloads`]), the
 //!   PJRT runtime ([`runtime`]) and the benchmark harness ([`bench`]).
+//!   The simulator itself runs at host speed: engine functional passes
+//!   execute on worker threads over disjoint memory views, columns are
+//!   zero-copy `Arc` slices end to end, and the column cache is
+//!   *physically* resident (repeat queries skip the host→HBM writes) —
+//!   all bit-identical to serial execution and measured by
+//!   `hbmctl bench-host` (DESIGN.md "Host performance model").
 //! * **L2/L1 (python/compile)** — the JAX SGD model and Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
 //!   [`runtime`] — Python never runs at request time.

@@ -8,6 +8,8 @@
 //!   query       demo DB query, CPU vs FPGA-offloaded
 //!   plan        whole-plan pipelines vs operator-at-a-time offload
 //!   serve       multi-client mixed workload through the L3 coordinator
+//!   bench-host  simulator wall-clock throughput: serial vs parallel,
+//!               cold vs physically-resident
 //!
 //! Examples:
 //!   hbmctl figures --fig all --scale 0.0625 --out results
@@ -15,6 +17,7 @@
 //!   hbmctl train --dataset tiny_ridge --alpha 0.05 --epochs 10
 //!   hbmctl plan --rows 200000 --repeat 2
 //!   hbmctl serve --clients 4 --queries 64 --policy all
+//!   hbmctl bench-host --rows 400000
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -40,6 +43,7 @@ fn main() -> ExitCode {
         Some("query") => cmd_query(&args),
         Some("plan") => cmd_plan(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench-host") => cmd_bench_host(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
             usage();
@@ -61,7 +65,7 @@ fn main() -> ExitCode {
 
 fn usage() {
     eprintln!(
-        "usage: hbmctl <figures|microbench|resources|train|query|plan|serve> [options]\n\
+        "usage: hbmctl <figures|microbench|resources|train|query|plan|serve|bench-host> [options]\n\
          \n\
          figures    --fig <id|all> --scale <f> --out <dir> --artifacts <dir>\n\
          microbench --ports <list> --separations <list> --clock <200|300|400>\n\
@@ -80,7 +84,12 @@ fn usage() {
          serve      --clients <n> --queries <m> --policy <fifo|fair|bandwidth|all>\n\
          \u{20}          --rows <n> --seed <s> --cache-mib <n> --out <file.json>\n\
          \u{20}          replays a mixed selection/join/SGD workload through the\n\
-         \u{20}          L3 coordinator and writes BENCH_coordinator.json"
+         \u{20}          L3 coordinator and writes BENCH_coordinator.json\n\
+         bench-host --rows <n> --seed <s> --out <file.json>\n\
+         \u{20}          measures the simulator's own wall-clock throughput on\n\
+         \u{20}          the analytics plan mix (serial vs parallel functional\n\
+         \u{20}          execution, cold vs physically-resident card) and writes\n\
+         \u{20}          BENCH_host.json"
     );
 }
 
@@ -421,6 +430,34 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
 
     let out_path = args.get_str("out", "BENCH_pipeline.json");
     std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn cmd_bench_host(args: &Args) -> anyhow::Result<()> {
+    use hbm_analytics::bench::host;
+
+    let spec = host::HostBenchSpec {
+        rows: args.get_parsed("rows", 400_000usize)?,
+        seed: args.get_parsed("seed", 0xB05u64)?,
+    };
+    anyhow::ensure!(spec.rows > 0, "--rows must be positive");
+    println!(
+        "bench-host: {} orders rows, 4 modes (serial/parallel x cold/resident), \
+         host parallelism {}",
+        spec.rows,
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    );
+    let report = host::run(&spec);
+    println!("{}", report.render());
+    anyhow::ensure!(
+        report.probe_repeat_write_bytes == 0,
+        "physically-resident repeat must write zero host bytes into HBM"
+    );
+    let out_path = args.get_str("out", "BENCH_host.json");
+    std::fs::write(&out_path, host::bench_json(&report))?;
     println!("wrote {out_path}");
     Ok(())
 }

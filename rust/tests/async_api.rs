@@ -44,8 +44,9 @@ fn concurrent_jobs_in_flight_match_blocking_results() {
     let (serial_sel, _) = serial
         .submit(OffloadRequest::select(sel.lo, sel.hi).on(&sel.data))
         .wait_selection();
-    let (mut serial_join, _) =
+    let (serial_join, _) =
         serial.submit(OffloadRequest::join(&join.s, &join.l)).wait_join();
+    let mut serial_join = serial_join.to_vec();
     serial_join.sort_unstable();
 
     // Async path: both submitted before either is waited on.
@@ -58,14 +59,15 @@ fn concurrent_jobs_in_flight_match_blocking_results() {
 
     // Collect in reverse submission order: waiting on the join drives the
     // shared rounds, so the selection completes under it.
-    let (mut pairs, _) = h_join.wait_join();
+    let (pairs, _) = h_join.wait_join();
+    let mut pairs = pairs.to_vec();
     pairs.sort_unstable();
     assert!(h_sel.poll(), "co-scheduled selection finished during the join wait");
     let (cands, _) = h_sel.wait_selection();
 
     assert_eq!(cands, serial_sel, "async selection diverged from blocking path");
     assert_eq!(pairs, serial_join, "async join diverged from blocking path");
-    assert_eq!(cands, cpu_select(&sel));
+    assert_eq!(cands[..], cpu_select(&sel)[..]);
     assert_eq!(pairs, cpu_join(&join));
 
     // The overlap is real: both records share the first round's start.
@@ -94,10 +96,14 @@ fn poll_before_any_round_is_nonblocking() {
     assert_eq!(stats.simulated_time, 0.0, "poll must not advance the card");
 
     let (output, _) = handle.wait();
-    assert_eq!(output.expect_selection(), cpu_select(&w));
+    assert_eq!(output.expect_selection()[..], cpu_select(&w)[..]);
     assert!(handle.poll(), "poll after completion reports done");
     let (cands, _) = handle.wait_selection();
-    assert_eq!(cands, cpu_select(&w), "consuming take returns the same result");
+    assert_eq!(
+        cands[..],
+        cpu_select(&w)[..],
+        "consuming take returns the same result"
+    );
 }
 
 #[test]
@@ -133,7 +139,7 @@ fn dropping_a_handle_keeps_the_job_and_its_record() {
     // accounting record survives in the coordinator's stats.
     acc.wait_all();
     let (cands, _) = kept.wait_selection();
-    assert_eq!(cands, cpu_select(&w));
+    assert_eq!(cands[..], cpu_select(&w)[..]);
     let stats = acc.stats();
     assert_eq!(stats.completed(), 2, "dropped handle must not lose the job");
     let rec = stats
@@ -173,13 +179,14 @@ fn interleaved_clients_get_consistent_results() {
         OffloadRequest::select(wa.lo, wa.hi).on(&wa.data).client(0).key("a", "v"),
     );
     let (a2_out, a2_t) = a2.wait_selection();
-    let (mut b2_out, _) = b2.wait_join();
+    let (b2_out, _) = b2.wait_join();
+    let mut b2_out = b2_out.to_vec();
     b2_out.sort_unstable();
 
-    assert_eq!(a1_out, cpu_select(&wa));
+    assert_eq!(a1_out[..], cpu_select(&wa)[..]);
     assert_eq!(a2_out, a1_out);
     assert_eq!(a2_t.copy_in, 0.0, "client 0's repeat is HBM-resident");
-    assert_eq!(b1_out, cpu_select(&wb));
+    assert_eq!(b1_out[..], cpu_select(&wb)[..]);
     assert_eq!(b2_out, cpu_join(&jb));
 
     let stats = acc.stats();

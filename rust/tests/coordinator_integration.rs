@@ -27,10 +27,10 @@ fn check_against_cpu(spec: &JobSpec, output: &JobOutput) {
         (JobKind::Selection { data, lo, hi }, JobOutput::Selection(got)) => {
             let mut want = cpu::selection::range_select(data, *lo, *hi, 4);
             want.sort_unstable();
-            assert_eq!(got, &want, "selection diverged from CPU");
+            assert_eq!(got[..], want[..], "selection diverged from CPU");
         }
         (JobKind::Join { s, l, .. }, JobOutput::Join(got)) => {
-            let mut got = got.clone();
+            let mut got = got.to_vec();
             let mut want = cpu::join::hash_join_positions(s, l, 4);
             got.sort_unstable();
             want.sort_unstable();
@@ -41,7 +41,7 @@ fn check_against_cpu(spec: &JobSpec, output: &JobOutput) {
             JobOutput::Sgd(models),
         ) => {
             assert_eq!(models.len(), grid.len());
-            for (params, model) in grid.iter().zip(models) {
+            for (params, model) in grid.iter().zip(models.iter()) {
                 let (want, _) = cpu::sgd::train(features, labels, *n_features, params);
                 for (a, b) in want.iter().zip(model) {
                     assert!((a - b).abs() < 1e-5, "sgd model diverged from CPU");
@@ -105,7 +105,8 @@ fn policies_agree_functionally() {
                 .map(|(id, out)| {
                     // Canonical form: sorted join pairs, debug-rendered.
                     let canon = match out {
-                        JobOutput::Join(mut pairs) => {
+                        JobOutput::Join(pairs) => {
+                            let mut pairs = pairs.to_vec();
                             pairs.sort_unstable();
                             format!("{pairs:?}")
                         }
@@ -271,13 +272,13 @@ fn direct_coordinator_submission_interleaves_job_kinds() {
     let sel = SelectionWorkload::uniform(30_000, 0.4, 2);
     let join = JoinWorkload::generate(25_000, 900, true, true, 3);
     let id_sel = coord.submit(JobSpec::new(JobKind::Selection {
-        data: sel.data.clone(),
+        data: sel.data.clone().into(),
         lo: sel.lo,
         hi: sel.hi,
     }));
     let id_join = coord.submit(JobSpec::new(JobKind::Join {
-        s: join.s.clone(),
-        l: join.l.clone(),
+        s: join.s.clone().into(),
+        l: join.l.clone().into(),
         handle_collisions: false,
     }));
     let outputs = coord.run();
@@ -286,10 +287,10 @@ fn direct_coordinator_submission_interleaves_job_kinds() {
         if id == id_sel {
             let mut want = cpu::selection::range_select(&sel.data, sel.lo, sel.hi, 4);
             want.sort_unstable();
-            assert_eq!(out.expect_selection(), want);
+            assert_eq!(out.expect_selection()[..], want[..]);
         } else {
             assert_eq!(id, id_join);
-            let mut got = out.expect_join();
+            let mut got = out.expect_join().to_vec();
             let mut want = cpu::join::hash_join_positions(&join.s, &join.l, 4);
             got.sort_unstable();
             want.sort_unstable();

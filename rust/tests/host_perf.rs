@@ -1,0 +1,155 @@
+//! Host-performance invariants of the simulator: parallel functional
+//! execution must be *bit-identical* to serial execution, and the
+//! physically-resident cache must make keyed repeats write zero host
+//! bytes into `HbmMemory`.
+//!
+//! These are the contracts `hbmctl bench-host` trades on: the wall-clock
+//! wins are only claimable because nothing observable changes.
+
+use hbm_analytics::coordinator::{
+    mixed_workload, Coordinator, JobSpec, Policy, ServeSpec,
+};
+use hbm_analytics::db::{Executor, FpgaAccelerator, Intermediate, OffloadRequest};
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::util::proptest::{check, U64Range};
+use hbm_analytics::workloads::analytics;
+use hbm_analytics::workloads::SelectionWorkload;
+
+fn cfg() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+/// Run a job list to completion under one functional-execution mode;
+/// return every output (debug-rendered for exact comparison) plus the
+/// simulator's timing observables.
+fn run_jobs(
+    jobs: Vec<JobSpec>,
+    policy: Policy,
+    parallel: bool,
+) -> (Vec<(usize, String)>, u64, u64) {
+    let mut coord = Coordinator::new(cfg()).with_policy(policy);
+    coord.set_parallel_functional(parallel);
+    for job in jobs {
+        coord.submit(job);
+    }
+    let mut outputs: Vec<(usize, String)> = coord
+        .run()
+        .into_iter()
+        .map(|(id, out)| (id, format!("{out:?}")))
+        .collect();
+    outputs.sort_by_key(|(id, _)| *id);
+    let time_bits = coord.simulated_time().to_bits();
+    let hbm = coord.stats().hbm_bytes;
+    (outputs, time_bits, hbm)
+}
+
+// ---------------------------------------------------------------------
+// Determinism: parallel ≡ serial, bit for bit, across randomized
+// mixed workloads (selection / join / SGD) and every policy.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_parallel_execution_is_bit_identical_to_serial() {
+    // Each case runs the workload twice end to end; keep the count modest.
+    // Rows are sized so a round's footprint clears the simulator's
+    // parallel threshold — the parallel path must actually execute.
+    std::env::set_var("HBM_PROPTEST_CASES", "6");
+    check("parallel ≡ serial (mixed jobs)", &U64Range(1, 1 << 48), |&seed| {
+        let spec = ServeSpec {
+            clients: 3,
+            queries: 14,
+            rows: 150_000,
+            seed,
+            ..ServeSpec::default()
+        };
+        let policy = match seed % 3 {
+            0 => Policy::Fifo,
+            1 => Policy::FairShare,
+            _ => Policy::BandwidthAware,
+        };
+        let serial = run_jobs(mixed_workload(&spec), policy, false);
+        let parallel = run_jobs(mixed_workload(&spec), policy, true);
+        serial == parallel
+    });
+    std::env::remove_var("HBM_PROPTEST_CASES");
+}
+
+#[test]
+fn parallel_pipelines_match_serial_pipelines_exactly() {
+    // Whole-plan DAGs through the accelerator, co-running: the parallel
+    // simulator must produce the exact same Intermediates and accounting.
+    // Rows sized above the simulator's parallel footprint threshold.
+    let (rows, customers) = (200_000, 2_000);
+    let cat = analytics::orders_catalog(rows, customers, 17);
+    let plans = analytics::mixed_plans(customers);
+
+    let run_mode = |parallel: bool| -> (Vec<Intermediate>, u64) {
+        let mut acc = FpgaAccelerator::new(cfg());
+        acc.set_parallel_functional(parallel);
+        let results: Vec<Intermediate> = plans
+            .iter()
+            .map(|(_, plan)| {
+                Executor::accelerated(&cat, 4, &mut acc).run(plan).unwrap()
+            })
+            .collect();
+        let stats = acc.stats();
+        (results, stats.hbm_bytes)
+    };
+    let (serial_results, serial_hbm) = run_mode(false);
+    let (parallel_results, parallel_hbm) = run_mode(true);
+    assert_eq!(serial_results, parallel_results, "results must be bit-identical");
+    assert_eq!(serial_hbm, parallel_hbm, "timing accounting must be identical");
+
+    // And both match the CPU executor.
+    for ((name, plan), got) in plans.iter().zip(&parallel_results) {
+        let want = Executor::cpu(&cat, 4).run(plan).unwrap();
+        assert_eq!(got, &want, "{name} diverged from CPU");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Physically-resident cache: keyed repeats write zero host bytes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn keyed_repeat_job_writes_zero_host_bytes_into_hbm() {
+    let w = SelectionWorkload::uniform(120_000, 0.2, 5);
+    let mut acc = FpgaAccelerator::new(cfg());
+    let request = || {
+        OffloadRequest::select(w.lo, w.hi)
+            .on(&w.data)
+            .key("lineitem", "qty")
+    };
+    let (r1, _) = acc.submit(request()).wait_selection();
+    let cold = acc.stats();
+    assert!(
+        cold.host_write_bytes >= (w.data.len() * 4) as u64,
+        "cold run places the column"
+    );
+
+    let (r2, t2) = acc.submit(request()).wait_selection();
+    let warm = acc.stats();
+    assert_eq!(r1, r2, "skipping the write must not change results");
+    assert_eq!(t2.copy_in, 0.0, "accounting hit");
+    assert_eq!(
+        warm.host_write_bytes, cold.host_write_bytes,
+        "the repeat must not add a single host→HBM byte"
+    );
+    let repeat_rec = warm.records.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(repeat_rec.host_write_bytes, 0);
+    assert_eq!(repeat_rec.cache_hits, 1);
+}
+
+#[test]
+fn unkeyed_repeat_still_pays_the_write() {
+    // Control for the test above: without a key there is no span
+    // identity, so every submission rewrites its placement.
+    let w = SelectionWorkload::uniform(60_000, 0.2, 6);
+    let mut acc = FpgaAccelerator::new(cfg());
+    let request = || OffloadRequest::select(w.lo, w.hi).on(&w.data);
+    acc.submit(request()).take();
+    let first = acc.stats().host_write_bytes;
+    acc.submit(request()).take();
+    let second = acc.stats().host_write_bytes;
+    assert_eq!(second, first * 2, "anonymous inputs are rewritten every time");
+}

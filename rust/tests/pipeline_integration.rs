@@ -238,17 +238,20 @@ fn random_plan(seed: u64) -> Plan {
 /// compare order-insensitively (aggregates are order-independent).
 fn normalized(i: Intermediate) -> Intermediate {
     match i {
-        Intermediate::Candidates(mut v) => {
+        Intermediate::Candidates(v) => {
+            let mut v = v.to_vec();
             v.sort_unstable();
-            Intermediate::Candidates(v)
+            Intermediate::Candidates(v.into())
         }
-        Intermediate::Pairs(mut p) => {
+        Intermediate::Pairs(p) => {
+            let mut p = p.to_vec();
             p.sort_unstable();
-            Intermediate::Pairs(p)
+            Intermediate::Pairs(p.into())
         }
-        Intermediate::Column(ColumnData::U32(mut v)) => {
+        Intermediate::Column(ColumnData::U32(v)) => {
+            let mut v = v.to_vec();
             v.sort_unstable();
-            Intermediate::Column(ColumnData::U32(v))
+            Intermediate::Column(ColumnData::U32(v.into()))
         }
         other => other,
     }

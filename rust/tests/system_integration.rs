@@ -45,7 +45,7 @@ fn prop_offloaded_select_equals_cpu_for_random_ranges() {
             .wait_selection();
         let mut cpu = cpu::selection::range_select(&w.data, lo, hi, 4);
         cpu.sort_unstable();
-        fpga == cpu
+        fpga[..] == cpu[..]
     });
     std::env::remove_var("HBM_PROPTEST_CASES");
 }
@@ -55,8 +55,9 @@ fn offloaded_join_multi_pass_equals_cpu() {
     // |S| = 20_000 forces 3 passes over L (HT capacity 8192): the
     // pass-loop's index bookkeeping must still match the one-shot CPU join.
     let w = JoinWorkload::generate(80_000, 20_000, true, true, 31);
-    let (mut fpga, _) =
+    let (fpga, _) =
         FpgaAccelerator::new(cfg()).submit(OffloadRequest::join(&w.s, &w.l)).wait_join();
+    let mut fpga = fpga.to_vec();
     let mut cpu = cpu::join::hash_join_positions(&w.s, &w.l, 4);
     fpga.sort_unstable();
     cpu.sort_unstable();
@@ -66,8 +67,9 @@ fn offloaded_join_multi_pass_equals_cpu() {
 #[test]
 fn offloaded_join_with_duplicates_equals_cpu() {
     let w = JoinWorkload::generate(60_000, 2048, false, false, 32);
-    let (mut fpga, _) =
+    let (fpga, _) =
         FpgaAccelerator::new(cfg()).submit(OffloadRequest::join(&w.s, &w.l)).wait_join();
+    let mut fpga = fpga.to_vec();
     let mut cpu = cpu::join::hash_join_positions(&w.s, &w.l, 4);
     fpga.sort_unstable();
     cpu.sort_unstable();
@@ -288,7 +290,7 @@ fn offloaded_sgd_grid_agrees_with_cpu_grid() {
         .submit(OffloadRequest::sgd(&d.features, &d.labels, 64, &grid))
         .wait_sgd();
     let cpu_results = cpu::sgd::search(&d.features, &d.labels, 64, &grid, 3);
-    for ((_, _, cpu_model), fpga_model) in cpu_results.iter().zip(&models) {
+    for ((_, _, cpu_model), fpga_model) in cpu_results.iter().zip(models.iter()) {
         for (a, b) in cpu_model.iter().zip(fpga_model) {
             assert!((a - b).abs() < 1e-5);
         }
