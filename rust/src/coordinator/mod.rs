@@ -16,10 +16,11 @@
 //!   per-job accounting ([`JobRecord`], including per-stage
 //!   `copy_in_bytes`);
 //! * [`policy`] — pluggable engine-slot allocation ([`Policy::Fifo`],
-//!   [`Policy::FairShare`], [`Policy::BandwidthAware`]): which queued
-//!   jobs co-run in a round and how the 14 engine ports split between
-//!   them — the channel/port allocation decision that related work
-//!   (Wang et al., Choi et al.) shows dominates delivered HBM bandwidth;
+//!   [`Policy::FairShare`], [`Policy::BandwidthAware`]): which ready
+//!   jobs join the running set when ports free, and how the freed ports
+//!   split between them (`plan_admission`) — the channel/port allocation
+//!   decision that related work (Wang et al., Choi et al.) shows
+//!   dominates delivered HBM bandwidth;
 //! * [`cache`] — the HBM-resident column cache with LRU eviction over a
 //!   byte budget and a pin API: requests name inputs with
 //!   `(table, column)` keys and repeat queries skip OpenCAPI copy-in per
@@ -28,18 +29,26 @@
 //!   columns promised to queued jobs and the transient intermediates of
 //!   pipeline DAGs ([`intermediate_key`]) until their last consumer;
 //! * [`scheduler`] — the [`Coordinator`] itself: owns `HbmMemory`,
-//!   `Shim`, `ControlUnit` and the host link, runs each round's engines
-//!   under one fluid simulation so co-scheduled jobs contend for
-//!   crossbar bandwidth, and publishes per-job latency/throughput
-//!   statistics. Rounds advance either in bulk ([`Coordinator::run`]) or
-//!   one at a time ([`Coordinator::step`] + [`Coordinator::take_result`])
-//!   — the primitive behind the public async `JobHandle`. A round only
-//!   dispatches jobs whose dependency parents completed; a completed
-//!   parent with dependents publishes its output as a pinned transient
-//!   cache entry, so dependent stages skip copy-in entirely;
+//!   `Shim`, `ControlUnit` and the host link, and drives one persistent
+//!   event-driven card timeline (`engines::sim::SimSession`) in which
+//!   every in-flight job's copy-in, engine execution and copy-out are
+//!   first-class events: transfers overlap other jobs' compute, engines
+//!   start the moment their own transfer lands, and slots free at each
+//!   job's own completion event. The card advances in bulk
+//!   ([`Coordinator::run`]) or one completion at a time
+//!   ([`Coordinator::step`] + [`Coordinator::take_result`]) — the
+//!   primitive behind the public async `JobHandle`; scheduling failures
+//!   surface as typed [`CoordinatorError`]s. A job only dispatches once
+//!   its dependency parents completed; a completed parent with
+//!   dependents publishes its output as a pinned transient cache entry,
+//!   so dependent stages skip copy-in entirely. The historical lock-step
+//!   round scheduler survives as the measured baseline behind
+//!   [`Coordinator::set_round_barrier`];
 //! * [`serve`] — the `hbmctl serve` replay harness: a deterministic
-//!   mixed workload from N simulated clients, per-policy comparison
-//!   tables and the `BENCH_coordinator.json` perf artifact.
+//!   mixed workload from N simulated clients, per-policy comparison of
+//!   continuous vs round-barrier scheduling (throughput, latency
+//!   percentiles, slot utilization, overlap ratio) and the
+//!   `BENCH_coordinator.json` perf artifact.
 //!
 //! The public face of this layer is `db`'s request/handle API:
 //! `db::FpgaAccelerator::submit` lowers a typed `db::OffloadRequest` into
@@ -61,8 +70,10 @@ pub use job::{
     ColumnKey, DepExpr, DepInput, InputColumn, JobKind, JobOutput, JobRecord,
     JobSpec,
 };
-pub use policy::{Policy, MAX_CORUNNERS};
-pub use scheduler::{intermediate_key, Coordinator, CoordinatorStats, StatsView};
+pub use policy::{plan_admission, Policy, MAX_CORUNNERS};
+pub use scheduler::{
+    intermediate_key, Coordinator, CoordinatorError, CoordinatorStats, StatsView,
+};
 pub use serve::{
     bench_json, mixed_workload, render_outcomes, run_policy, PolicyOutcome,
     ServeSpec,

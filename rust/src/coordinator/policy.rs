@@ -1,25 +1,31 @@
 //! Engine-slot allocation policies.
 //!
-//! The coordinator schedules in *rounds*: it picks a set of queued jobs,
-//! grants each a disjoint set of the shim's 14 engine ports, and runs all
-//! their engines under one fluid simulation. The policy decides both
-//! admission (which jobs co-run) and allocation (how many ports each
-//! gets) — the decision Wang et al. and Choi et al. show dominates
-//! delivered HBM bandwidth:
+//! The coordinator schedules *continuously*: whenever engine ports free
+//! (a job's own completion event, or an SGD batch boundary) it asks the
+//! policy to plan an **incremental admission** over exactly those free
+//! ports ([`plan_admission`]), so ready jobs start mid-flight at the
+//! current simulated time instead of waiting for a global round barrier.
+//! The policy decides both admission (which jobs join the running set)
+//! and allocation (how many ports each gets) — the decision Wang et al.
+//! and Choi et al. show dominates delivered HBM bandwidth:
 //!
 //! * [`Policy::Fifo`] — one job at a time, full width. Best per-job
 //!   execution rate, worst queue wait under load.
-//! * [`Policy::FairShare`] — up to [`MAX_CORUNNERS`] jobs split the ports
-//!   evenly. Lower per-job rate, much lower queueing; with the column
-//!   cache it also overlaps one job's copy-in with another's residency.
+//! * [`Policy::FairShare`] — up to [`MAX_CORUNNERS`] jobs hold ports at
+//!   once, splitting the free ports evenly among new admissions. Lower
+//!   per-job rate, much lower queueing; one job's copy-in overlaps the
+//!   others' compute.
 //! * [`Policy::BandwidthAware`] — co-runs like fair-share but sizes each
 //!   grant by the job's estimated HBM traffic, so a 3-pass join is not
 //!   starved by a small selection.
 //!
-//! Ports granted to one job are contiguous and disjoint from other jobs'
-//! — the ideal-partitioning discipline of §IV; contention between
-//! co-runners then happens on the host link and, when a grant is smaller
-//! than a job's data spread, inside the job's own port set.
+//! Ports granted to one job are disjoint from other jobs' — the
+//! ideal-partitioning discipline of §IV; contention between co-runners
+//! then happens on the host link and, when a grant is smaller than a
+//! job's data spread, inside the job's own port set.
+//!
+//! [`plan_round`] remains the historical round-barrier planner, used by
+//! the coordinator's `set_round_barrier(true)` measurement baseline.
 
 use crate::hbm::shim::ENGINE_PORTS;
 
@@ -111,6 +117,111 @@ pub fn plan_round(policy: Policy, queue: &[QueuedJob]) -> Vec<Admission> {
             Admission { queue_idx, ports }
         })
         .collect()
+}
+
+/// Plan an incremental admission at an event time: `queue` is the ready
+/// jobs in queue order, `free_ports` the engine ports not held by any
+/// in-flight job, `in_flight` how many jobs currently hold ports. New
+/// admissions receive ports drawn from `free_ports` only — running jobs
+/// are never preempted. Admits nothing when the policy's co-runner
+/// budget is exhausted or no ready job fits the free ports; admits at
+/// least the head ready job whenever the card is empty (`in_flight` 0 and
+/// all ports free), so an admissible queue can never stall.
+pub fn plan_admission(
+    policy: Policy,
+    queue: &[QueuedJob],
+    free_ports: &[usize],
+    in_flight: usize,
+) -> Vec<Admission> {
+    if queue.is_empty() || free_ports.is_empty() {
+        return Vec::new();
+    }
+    let slots = match policy {
+        // FIFO: strictly one job on the card at a time.
+        Policy::Fifo => {
+            if in_flight > 0 {
+                return Vec::new();
+            }
+            1
+        }
+        Policy::FairShare | Policy::BandwidthAware => {
+            if in_flight >= MAX_CORUNNERS {
+                return Vec::new();
+            }
+            MAX_CORUNNERS - in_flight
+        }
+    };
+    let admitted = queue.len().min(slots);
+    let candidates = &queue[..admitted];
+
+    // Target grants over the free pool.
+    let grants: Vec<usize> = match policy {
+        Policy::Fifo => vec![clamp_grant(&candidates[0], free_ports.len())],
+        Policy::FairShare => {
+            let share = free_ports.len() / admitted;
+            candidates.iter().map(|j| clamp_grant(j, share.max(1))).collect()
+        }
+        Policy::BandwidthAware => proportional_pool(candidates, free_ports.len()),
+    };
+
+    // Hand out the actual free ports, head-of-queue first; a job whose
+    // minimum grant no longer fits is skipped (a later 1-port selection
+    // can still slip in behind a 2-port join).
+    let mut next = 0usize;
+    let mut admissions = Vec::new();
+    for (queue_idx, (job, grant)) in candidates.iter().zip(grants).enumerate() {
+        let remaining = free_ports.len() - next;
+        let grant = grant.min((remaining / job.ports_per_engine) * job.ports_per_engine);
+        if grant < job.ports_per_engine {
+            continue;
+        }
+        let ports: Vec<usize> = free_ports[next..next + grant].to_vec();
+        next += grant;
+        admissions.push(Admission { queue_idx, ports });
+    }
+    admissions
+}
+
+/// Bandwidth-aware sizing over an arbitrary pool size: start every job at
+/// its minimum grant, then hand the remaining ports to whichever job has
+/// the largest outstanding byte-per-port demand (deterministic,
+/// first-index ties). Jobs whose minimum does not fit get zero.
+fn proportional_pool(jobs: &[QueuedJob], pool: usize) -> Vec<usize> {
+    let mut grants: Vec<usize> = Vec::with_capacity(jobs.len());
+    let mut used = 0usize;
+    for j in jobs {
+        if used + j.ports_per_engine <= pool {
+            grants.push(j.ports_per_engine);
+            used += j.ports_per_engine;
+        } else {
+            grants.push(0);
+        }
+    }
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, job) in jobs.iter().enumerate() {
+            let grant = grants[i];
+            if grant == 0
+                || grant + job.ports_per_engine
+                    > job.max_ports.max(job.ports_per_engine)
+                || used + job.ports_per_engine > pool
+            {
+                continue;
+            }
+            let demand = job.est_bytes as f64 / grant as f64;
+            if best.map(|(_, d)| demand > d).unwrap_or(true) {
+                best = Some((i, demand));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                grants[i] += jobs[i].ports_per_engine;
+                used += jobs[i].ports_per_engine;
+            }
+            None => break,
+        }
+    }
+    grants
 }
 
 /// Clamp a desired port count to the job's shape: within `limit`, within
@@ -248,6 +359,73 @@ mod tests {
     fn single_job_always_gets_full_width_under_all_policies() {
         for p in Policy::all() {
             let adm = plan_round(p, &[sel(42)]);
+            assert_eq!(adm.len(), 1);
+            assert_eq!(adm[0].ports.len(), ENGINE_PORTS, "policy {p}");
+        }
+    }
+
+    #[test]
+    fn fifo_admission_is_exclusive() {
+        let free: Vec<usize> = (0..ENGINE_PORTS).collect();
+        let q = vec![sel(10), sel(10)];
+        // Card busy: FIFO admits nothing.
+        assert!(plan_admission(Policy::Fifo, &q, &free[..3], 1).is_empty());
+        // Card empty: the head job takes every free port.
+        let adm = plan_admission(Policy::Fifo, &q, &free, 0);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].queue_idx, 0);
+        assert_eq!(adm[0].ports, free);
+    }
+
+    #[test]
+    fn fair_admission_splits_free_ports_within_corunner_budget() {
+        let free: Vec<usize> = vec![2, 3, 7, 8, 9, 11];
+        let q = vec![sel(1), sel(1), sel(1)];
+        // 3 in flight → one co-runner slot left: only the head is
+        // admitted, on free ports only.
+        let adm = plan_admission(Policy::FairShare, &q, &free, 3);
+        assert_eq!(adm.len(), 1);
+        assert!(adm[0].ports.iter().all(|p| free.contains(p)));
+        // Budget exhausted → nothing.
+        assert!(plan_admission(Policy::FairShare, &q, &free, MAX_CORUNNERS).is_empty());
+        // Card empty: three jobs split the free ports evenly.
+        let adm = plan_admission(Policy::FairShare, &q, &free, 0);
+        assert_eq!(adm.len(), 3);
+        assert!(disjoint(&adm));
+        assert!(total_ports(&adm) <= free.len());
+        for a in &adm {
+            assert_eq!(a.ports.len(), 2);
+        }
+    }
+
+    #[test]
+    fn admission_skips_jobs_that_do_not_fit() {
+        // One free port: a join (2 ports/engine) cannot start, but the
+        // selection queued behind it slips in.
+        let q = vec![join(1), sel(1)];
+        let adm = plan_admission(Policy::FairShare, &q, &[5], 1);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].queue_idx, 1);
+        assert_eq!(adm[0].ports, vec![5]);
+    }
+
+    #[test]
+    fn bandwidth_admission_feeds_heavy_job_from_partial_pool() {
+        let free: Vec<usize> = (4..ENGINE_PORTS).collect(); // 10 ports
+        let q = vec![sel(1_000_000), sel(100)];
+        let adm = plan_admission(Policy::BandwidthAware, &q, &free, 2);
+        assert_eq!(adm.len(), 2);
+        assert!(disjoint(&adm));
+        assert_eq!(total_ports(&adm), free.len(), "no free port left idle");
+        assert!(adm[0].ports.len() > adm[1].ports.len());
+        assert!(adm.iter().flat_map(|a| a.ports.iter()).all(|p| free.contains(p)));
+    }
+
+    #[test]
+    fn single_ready_job_on_empty_card_gets_full_width_under_all_policies() {
+        let free: Vec<usize> = (0..ENGINE_PORTS).collect();
+        for p in Policy::all() {
+            let adm = plan_admission(p, &[sel(42)], &free, 0);
             assert_eq!(adm.len(), 1);
             assert_eq!(adm[0].ports.len(), ENGINE_PORTS, "policy {p}");
         }

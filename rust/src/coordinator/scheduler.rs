@@ -1,26 +1,42 @@
 //! The coordinator: one owner for the simulated card, serving a queue of
-//! heterogeneous query jobs.
+//! heterogeneous query jobs on a **continuous event-driven timeline**.
 //!
 //! The paper's §III architecture has *one* central control unit driving
 //! many compute engines through a register interface, with software
 //! deciding which engine does what. [`Coordinator`] is that layer: it
 //! owns the card (an [`HbmMemory`], a [`Shim`], a [`ControlUnit`], the
-//! OpenCAPI link) and advances a simulated clock while serving submitted
-//! [`JobSpec`]s in scheduling *rounds*:
+//! OpenCAPI link) and drives one persistent
+//! [`SimSession`](crate::engines::sim::SimSession) in which every job
+//! advances through its own per-job stages:
 //!
-//! 1. the [`Policy`] admits queued jobs and grants each a disjoint set of
-//!    engine ports ([`plan_round`]);
-//! 2. inputs are copied in over the shared link — unless the column cache
-//!    says they are already HBM-resident;
-//! 3. every admitted job's engines are armed through the CSR protocol and
-//!    run under **one** fluid simulation, so co-scheduled jobs contend for
-//!    the crossbar exactly as the timing model dictates;
-//! 4. completions are published back through the CSR files, outputs are
-//!    compacted, and results copied out over the shared link.
+//! 1. **Admission** — whenever engine ports free (a job's completion
+//!    event or an SGD batch boundary), the [`Policy`] plans an
+//!    incremental admission over exactly those ports
+//!    ([`plan_admission`]), so ready jobs join mid-flight at the current
+//!    simulated time;
+//! 2. **Copy-in** — the job's cold input bytes become a link transfer on
+//!    the shared-session OpenCAPI model, *overlapping* other jobs'
+//!    compute (resident columns skip the transfer entirely and dispatch
+//!    immediately);
+//! 3. **Execute** — the moment its own transfer lands, the job's engines
+//!    are armed through the CSR protocol and join the session, contending
+//!    for the crossbar with every other in-flight engine exactly as the
+//!    fluid model dictates;
+//! 4. **Copy-out & retire** — when the job's last engine finishes, its
+//!    slots free back to the policy *at that event* and its results cross
+//!    the link while newly admitted jobs already compute.
 //!
-//! Selection and join jobs finish in one round. An SGD job whose grid is
-//! larger than its grant trains a grant-sized batch per round and stays
-//! queued — how the paper runs its 28-job search over 14 engines.
+//! An SGD job whose grid is larger than its grant trains a grant-sized
+//! batch per dispatch and re-enters admission at the batch boundary
+//! (its dataset stays resident: copy-in is charged once per job) — how
+//! the paper runs its 28-job search over 14 engines.
+//!
+//! The historical lock-step *round* scheduler — every co-admitted job
+//! charged the max copy-in of the batch, one `sim::run` to full
+//! completion, slots held until the slowest job finishes — remains as a
+//! measured baseline behind [`Coordinator::set_round_barrier`]; `hbmctl
+//! serve` reports both so `BENCH_coordinator.json` tracks exactly what
+//! the continuous timeline buys.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
@@ -29,11 +45,12 @@ use super::cache::{CacheStats, ColumnCache, ResidentLayout, DEFAULT_CACHE_BYTES}
 use super::job::{
     ColumnKey, DepExpr, InputColumn, JobKind, JobOutput, JobRecord, JobSpec,
 };
-use super::policy::{plan_round, Policy, QueuedJob};
+use super::policy::{plan_admission, plan_round, Policy, QueuedJob};
 use crate::engines::control::{ControlUnit, Csr};
 use crate::engines::join::{compact_matches, JoinEngine, JoinJob};
 use crate::engines::selection::{compact_results, SelectionEngine, SelectionJob};
 use crate::engines::sgd::{SgdEngine, SgdJob};
+use crate::engines::sim::{SimEvent, SimSession};
 use crate::engines::{sim, Engine};
 use crate::hbm::shim::{Shim, ENGINE_PORTS, PORT_HOME_BYTES, STACK_OFFSET};
 use crate::hbm::{HbmConfig, HbmMemory};
@@ -48,18 +65,46 @@ struct Pending {
     /// Models trained so far (SGD only; grid order).
     sgd_models: Vec<Vec<f32>>,
     started: bool,
-    /// Copy-in is charged once per job, on its first round.
+    /// Copy-in is charged once per job, on its first admission.
     copied_in: bool,
     /// Parent job ids that have not completed yet. A job is dispatchable
     /// only when this is empty *and* its dep expressions have been
     /// installed (`spec.deps` drained).
     unresolved: BTreeSet<usize>,
     /// Link bytes owed by dependency resolution (gather-source columns
-    /// that missed the cache), charged with the job's first-round copy-in.
+    /// that missed the cache), charged with the job's first copy-in.
     deferred_copy_bytes: u64,
     /// Keys pinned at submission because this job depends on them;
     /// released once the job's copy-in is accounted.
     pinned_keys: Vec<ColumnKey>,
+    /// Where the job is on the continuous timeline (always `Waiting`
+    /// under the round-barrier baseline, which tracks progress per
+    /// round instead).
+    stage: Stage,
+}
+
+/// One job's position on the continuous timeline.
+enum Stage {
+    /// Queued: not holding ports. Ready for admission once its
+    /// dependencies are resolved (SGD jobs return here between batches).
+    Waiting,
+    /// Admitted: cold input bytes in flight on the shared link; the
+    /// granted ports are reserved so the engines can start the moment the
+    /// transfer lands.
+    CopyIn { transfer: usize, started: f64, ports: Vec<usize> },
+    /// Engines joined the session on the granted ports.
+    Running {
+        members: Vec<usize>,
+        ports: Vec<usize>,
+        prep: Prepared,
+        slots: Vec<usize>,
+        started: f64,
+        /// Session members still running; the batch completes when this
+        /// reaches zero.
+        remaining: usize,
+    },
+    /// Results in flight back to the host; ports already freed.
+    CopyOut { transfer: usize, started: f64, output: JobOutput },
 }
 
 /// Per-kind handles the round keeps between building engines and
@@ -70,13 +115,39 @@ enum Prepared {
     Sgd { jobs: Vec<SgdJob> },
 }
 
-/// What one admitted job produced in one round.
+/// What one admitted job produced in one dispatch.
 enum RoundOutcome {
     /// Job finished: its output and the bytes to copy back to the host.
     Complete { output: JobOutput, out_bytes: u64 },
     /// SGD grid not yet exhausted: a batch of trained models.
     SgdPartial { models: Vec<Vec<f32>> },
 }
+
+/// Typed scheduler failure, surfaced through [`Coordinator::step`] (and
+/// the db layer's `try_wait` family) instead of aborting the process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoordinatorError {
+    /// Every queued job is dependency-gated and nothing is in flight:
+    /// a parent id was wrong, or a DAG was submitted out of order (a
+    /// child must be submitted while its parents are still queued).
+    /// Carries the stuck job ids.
+    DependencyStall { stalled: Vec<usize> },
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorError::DependencyStall { stalled } => write!(
+                f,
+                "coordinator stalled: every queued job ({stalled:?}) is \
+                 dependency-gated (a parent id was wrong or a DAG was not \
+                 submitted topologically)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
 
 /// Aggregate report of everything the coordinator has served — the
 /// *owned* snapshot form, for callers that must outlive the coordinator
@@ -93,8 +164,19 @@ pub struct CoordinatorStats {
     /// HBM bytes moved by all engines (excludes host-link traffic).
     pub hbm_bytes: u64,
     /// Host-column bytes physically written into `HbmMemory` across all
-    /// rounds (placements only; physically-resident hits write nothing).
+    /// dispatches (placements only; physically-resident hits write
+    /// nothing).
     pub host_write_bytes: u64,
+    /// Port-seconds of engine-slot occupancy (Σ over dispatches of
+    /// ports held × execution seconds) — the numerator of
+    /// [`slot_utilization`](CoordinatorStats::slot_utilization).
+    pub engine_busy_port_seconds: f64,
+    /// Simulated seconds the host link spent moving bytes.
+    pub link_busy_seconds: f64,
+    /// Simulated seconds a link transfer overlapped engine execution —
+    /// identically 0 under the round barrier, which serializes copy
+    /// phases against compute.
+    pub overlap_seconds: f64,
 }
 
 /// Borrowed view of the coordinator's accounting — what
@@ -111,6 +193,12 @@ pub struct StatsView<'a> {
     pub hbm_bytes: u64,
     /// Host-column bytes physically written into `HbmMemory`.
     pub host_write_bytes: u64,
+    /// Port-seconds of engine-slot occupancy.
+    pub engine_busy_port_seconds: f64,
+    /// Simulated seconds the host link spent moving bytes.
+    pub link_busy_seconds: f64,
+    /// Simulated seconds a link transfer overlapped engine execution.
+    pub overlap_seconds: f64,
 }
 
 impl CoordinatorStats {
@@ -122,7 +210,21 @@ impl CoordinatorStats {
             simulated_time: self.simulated_time,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
+            engine_busy_port_seconds: self.engine_busy_port_seconds,
+            link_busy_seconds: self.link_busy_seconds,
+            overlap_seconds: self.overlap_seconds,
         }
+    }
+
+    /// Fraction of total engine-port capacity kept busy over the serve
+    /// window.
+    pub fn slot_utilization(&self) -> f64 {
+        self.view().slot_utilization()
+    }
+
+    /// Fraction of link-busy time that overlapped engine execution.
+    pub fn overlap_ratio(&self) -> f64 {
+        self.view().overlap_ratio()
     }
 
     pub fn completed(&self) -> usize {
@@ -167,6 +269,31 @@ impl StatsView<'_> {
             simulated_time: self.simulated_time,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
+            engine_busy_port_seconds: self.engine_busy_port_seconds,
+            link_busy_seconds: self.link_busy_seconds,
+            overlap_seconds: self.overlap_seconds,
+        }
+    }
+
+    /// Fraction of total engine-port capacity (14 ports × serve window)
+    /// kept busy by dispatched engines — the headline the continuous
+    /// scheduler moves by freeing slots per job instead of per round.
+    pub fn slot_utilization(&self) -> f64 {
+        if self.simulated_time <= 0.0 {
+            0.0
+        } else {
+            self.engine_busy_port_seconds
+                / (self.simulated_time * ENGINE_PORTS as f64)
+        }
+    }
+
+    /// Fraction of link-busy time that overlapped engine execution
+    /// (0 under the round barrier by construction).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.link_busy_seconds <= 0.0 {
+            0.0
+        } else {
+            self.overlap_seconds / self.link_busy_seconds
         }
     }
 
@@ -260,16 +387,33 @@ pub struct Coordinator {
     layout: ResidentLayout,
     /// Host-column bytes physically written into `HbmMemory` (total).
     host_write_bytes: u64,
-    /// Run each round's functional passes on worker threads (default).
+    /// Run each dispatch's functional passes on worker threads (default).
     parallel_functional: bool,
+    /// The continuous card timeline every in-flight job shares.
+    session: SimSession,
+    /// Engine ports not held by any in-flight job.
+    free_ports: BTreeSet<usize>,
+    /// Schedule in historical lock-step rounds instead of continuously —
+    /// the measured baseline (see [`set_round_barrier`]).
+    ///
+    /// [`set_round_barrier`]: Coordinator::set_round_barrier
+    round_barrier: bool,
+    /// Port-seconds of engine occupancy, both modes.
+    engine_busy_port_seconds: f64,
+    /// Link-busy seconds contributed by round-barrier copy phases (the
+    /// continuous mode's share lives in the session's counters).
+    link_busy_barrier: f64,
 }
 
 impl Coordinator {
     pub fn new(cfg: HbmConfig) -> Self {
         let shim = Shim::new(cfg.clone());
+        let link = OpenCapiLink::default();
+        let mut session = SimSession::new(cfg.clone());
+        session.set_link_bandwidth(link.bandwidth);
         Self {
             cfg,
-            link: OpenCapiLink::default(),
+            link,
             mem: HbmMemory::new(),
             shim,
             control: ControlUnit::new(ENGINE_PORTS),
@@ -287,12 +431,44 @@ impl Coordinator {
             layout: ResidentLayout::new(),
             host_write_bytes: 0,
             parallel_functional: true,
+            session,
+            free_ports: (0..ENGINE_PORTS).collect(),
+            round_barrier: false,
+            engine_busy_port_seconds: 0.0,
+            link_busy_barrier: 0.0,
         }
     }
 
     pub fn with_policy(mut self, policy: Policy) -> Self {
         self.policy = policy;
         self
+    }
+
+    /// Builder form of [`set_round_barrier`](Coordinator::set_round_barrier).
+    pub fn with_round_barrier(mut self, on: bool) -> Self {
+        self.set_round_barrier(on);
+        self
+    }
+
+    /// Schedule in historical lock-step rounds (`true`) instead of the
+    /// continuous event-driven default: every co-admitted job is charged
+    /// the max copy-in of its batch, one fluid simulation runs to full
+    /// completion, and slots are held until the slowest job finishes.
+    /// Functional outputs are bit-identical in both modes; only the
+    /// timing composition differs — this is the measured baseline of
+    /// `hbmctl serve`. Panics if jobs are queued or in flight (the two
+    /// timelines cannot mix mid-workload).
+    pub fn set_round_barrier(&mut self, on: bool) {
+        assert!(
+            self.queue.is_empty(),
+            "cannot switch scheduling mode with jobs in flight"
+        );
+        self.round_barrier = on;
+    }
+
+    /// Whether the round-barrier baseline mode is active.
+    pub fn round_barrier(&self) -> bool {
+        self.round_barrier
     }
 
     /// Force every round's functional passes onto the calling thread —
@@ -332,9 +508,12 @@ impl Coordinator {
 
     /// Swap the card's timing configuration (e.g. a fabric-clock change
     /// between offloads). Queued jobs and cache accounting survive; the
-    /// shim allocator is rebuilt against the new config.
+    /// shim allocator is rebuilt against the new config. Whole-card
+    /// semantics: phases still in flight see the new rates from the next
+    /// event on.
     pub fn set_config(&mut self, cfg: HbmConfig) {
         self.shim = Shim::new(cfg.clone());
+        self.session.set_config(cfg.clone());
         self.cfg = cfg;
     }
 
@@ -343,6 +522,7 @@ impl Coordinator {
     }
 
     pub fn set_link(&mut self, link: OpenCapiLink) {
+        self.session.set_link_bandwidth(link.bandwidth);
         self.link = link;
     }
 
@@ -373,24 +553,28 @@ impl Coordinator {
     /// its derived inputs then skip host copy-in (the parents' outputs
     /// are HBM-resident). Every referenced parent must still be queued
     /// when the child is submitted (submit whole DAGs topologically,
-    /// before driving any round), or this panics.
+    /// before driving the card). A child naming an unknown or
+    /// already-retired parent stays permanently gated — [`step`] reports
+    /// it as a typed [`CoordinatorError::DependencyStall`] once nothing
+    /// else can make progress, instead of aborting the process.
     ///
     /// Keys the spec's host inputs name are *pinned* if already resident,
     /// so admissions from co-queued jobs cannot evict a column this job
     /// was promised before it dispatches.
     ///
     /// [`run`]: Coordinator::run
+    /// [`step`]: Coordinator::step
     pub fn submit(&mut self, spec: JobSpec) -> usize {
         let id = self.next_id;
         self.next_id += 1;
         let parents = spec.parent_ids();
         for &p in &parents {
-            assert!(
-                self.queue.iter().any(|q| q.id == p),
-                "job {id} depends on job {p}, which is not queued \
-                 (submit DAGs topologically before running rounds)"
-            );
-            *self.dependent_refs.entry(p).or_insert(0) += 1;
+            // Only live (still-queued) parents are registered as
+            // intermediate publishers; a dangling parent id leaves the
+            // child gated forever and surfaces as DependencyStall.
+            if self.queue.iter().any(|q| q.id == p) {
+                *self.dependent_refs.entry(p).or_insert(0) += 1;
+            }
         }
         let mut pinned_keys = Vec::new();
         for input in &spec.inputs {
@@ -429,6 +613,7 @@ impl Coordinator {
             unresolved: parents.into_iter().collect(),
             deferred_copy_bytes: 0,
             pinned_keys,
+            stage: Stage::Waiting,
         };
         // Deps that reference no parent jobs (pure column/gather
         // expressions) are vacuously ready: install them now so the job
@@ -442,36 +627,94 @@ impl Coordinator {
 
     /// Serve the queue to completion. Returns `(id, output)` pairs of the
     /// jobs completing during this call, in completion order (abandoned
-    /// jobs run but return nothing).
+    /// jobs run but return nothing). Panics on a dependency stall — use
+    /// [`try_run`](Coordinator::try_run) (or drive [`step`] directly) to
+    /// handle [`CoordinatorError`] instead.
+    ///
+    /// [`step`]: Coordinator::step
     pub fn run(&mut self) -> Vec<(usize, JobOutput)> {
+        self.try_run()
+            .unwrap_or_else(|e| panic!("coordinator cannot make progress: {e}"))
+    }
+
+    /// Non-panicking [`run`](Coordinator::run).
+    pub fn try_run(&mut self) -> Result<Vec<(usize, JobOutput)>, CoordinatorError> {
         let mut outputs = Vec::new();
         while !self.queue.is_empty() {
-            for id in self.step() {
+            for id in self.step()? {
                 // Straight off the buffer: no record lookup needed here.
                 if let Some(output) = self.finished.remove(&id) {
                     outputs.push((id, output));
                 }
             }
         }
-        outputs
+        Ok(outputs)
     }
 
-    /// Advance the card by exactly one scheduling round (a no-op on an
-    /// empty queue). Outputs of jobs completing in the round are buffered
-    /// for [`take_result`]; the completed ids are returned. This is the
-    /// primitive the async `JobHandle::wait` path drives, so one client's
-    /// wait makes progress for every in-flight job.
+    /// Advance the card to the next **job completion event** (a no-op on
+    /// an empty queue): admissions, copy-ins, engine dispatches and SGD
+    /// batch boundaries are processed along the way, at their own event
+    /// times on the shared session. Outputs of the completing jobs are
+    /// buffered for [`take_result`]; the completed ids are returned. This
+    /// is the primitive the async `JobHandle::wait` path drives, so one
+    /// client's wait makes progress for every in-flight job. Under the
+    /// round-barrier baseline this advances exactly one lock-step round
+    /// instead.
+    ///
+    /// Returns [`CoordinatorError::DependencyStall`] when every queued
+    /// job is dependency-gated and nothing is in flight.
     ///
     /// [`take_result`]: Coordinator::take_result
-    pub fn step(&mut self) -> Vec<usize> {
+    pub fn step(&mut self) -> Result<Vec<usize>, CoordinatorError> {
         if self.queue.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
-        let finished = self.run_round();
+        if self.round_barrier {
+            let finished = self.run_round()?;
+            return Ok(self.publish_finished(finished));
+        }
+        // Barrier rounds may have advanced the card clock past the
+        // session while the mode was switched on an idle card.
+        if self.session.now() < self.clock {
+            self.session.sync_now(self.clock);
+        }
+        let mut finished: Vec<(usize, JobOutput)> = Vec::new();
+        while finished.is_empty() {
+            self.admit_ready();
+            self.clock = self.session.now();
+            if self.session.idle() {
+                if self.queue.is_empty() {
+                    break;
+                }
+                // Nothing running and nothing admissible: every queued
+                // job is waiting on a parent that can never complete.
+                let stalled: Vec<usize> = self.queue.iter().map(|p| p.id).collect();
+                return Err(CoordinatorError::DependencyStall { stalled });
+            }
+            let events = self.session.advance(&mut self.mem);
+            self.clock = self.session.now();
+            for event in events {
+                match event {
+                    SimEvent::EngineDone { member } => self.note_engine_done(member),
+                    SimEvent::TransferDone { transfer } => {
+                        self.note_transfer_done(transfer, &mut finished);
+                    }
+                }
+            }
+        }
+        Ok(self.publish_finished(finished))
+    }
+
+    /// Publish completed jobs' intermediates (pinned transient cache
+    /// entries) for waiting dependents, unblock those children, and
+    /// buffer the outputs for [`take_result`] — the completion tail both
+    /// scheduling modes share.
+    ///
+    /// [`take_result`]: Coordinator::take_result
+    fn publish_finished(&mut self, finished: Vec<(usize, JobOutput)>) -> Vec<usize> {
         let ids: Vec<usize> = finished.iter().map(|(id, _)| *id).collect();
-        // Publish the intermediates dependent jobs are waiting for (as
-        // pinned transient cache entries), then unblock those children —
-        // before abandonment can discard an output a child still needs.
+        // Publish before abandonment can discard an output a child still
+        // needs.
         for (id, output) in &finished {
             if let Some(&refs) = self.dependent_refs.get(id) {
                 self.cache
@@ -486,6 +729,272 @@ impl Coordinator {
             }
         }
         ids
+    }
+
+    /// Ask the policy for an incremental admission over the currently
+    /// free ports and start every admitted job at the present time.
+    fn admit_ready(&mut self) {
+        let ready: Vec<usize> = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| {
+                matches!(p.stage, Stage::Waiting)
+                    && p.unresolved.is_empty()
+                    && p.spec.deps.is_empty()
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if ready.is_empty() {
+            return;
+        }
+        let in_flight = self
+            .queue
+            .iter()
+            .filter(|p| matches!(p.stage, Stage::CopyIn { .. } | Stage::Running { .. }))
+            .count();
+        let free: Vec<usize> = self.free_ports.iter().copied().collect();
+        let views: Vec<QueuedJob> =
+            ready.iter().map(|&i| queued_view(&self.queue[i])).collect();
+        let admissions = plan_admission(self.policy, &views, &free, in_flight);
+        for adm in admissions {
+            self.admit_job(ready[adm.queue_idx], adm.ports);
+        }
+    }
+
+    /// Admit one job onto `ports`: account its (once-per-job) copy-in
+    /// against the column cache and either start the link transfer or,
+    /// when everything is resident, dispatch its engines immediately.
+    fn admit_job(&mut self, qi: usize, ports: Vec<usize>) {
+        let now = self.session.now();
+        for p in &ports {
+            let was_free = self.free_ports.remove(p);
+            debug_assert!(was_free, "admitted port {p} must be free");
+        }
+        let mut copy_bytes = 0u64;
+        {
+            let pending = &mut self.queue[qi];
+            if !pending.started {
+                pending.started = true;
+                pending.record.start_time = now;
+            }
+            if !pending.copied_in {
+                pending.copied_in = true;
+                for input in &pending.spec.inputs {
+                    if input.bytes == 0 {
+                        continue;
+                    }
+                    match &input.key {
+                        Some(key) => {
+                            if self.cache.access(key, input.bytes) {
+                                pending.record.cache_hits += 1;
+                            } else {
+                                pending.record.cache_misses += 1;
+                                copy_bytes += input.bytes;
+                            }
+                        }
+                        None => copy_bytes += input.bytes,
+                    }
+                }
+                copy_bytes += pending.deferred_copy_bytes;
+                pending.deferred_copy_bytes = 0;
+                pending.record.copy_in_bytes += copy_bytes;
+                // The columns this job pinned at submission are now
+                // placed (or re-validated) for it; release the promises.
+                for key in pending.pinned_keys.drain(..) {
+                    self.cache.unpin(&key);
+                }
+            }
+        }
+        // Keys this admission just evicted lose their physical residency:
+        // release their spans and free the pages those spans fully
+        // covered (both stacks of the shim stripe).
+        for key in self.cache.drain_evicted() {
+            release_key_spans(&mut self.layout, &mut self.mem, &key);
+        }
+        if copy_bytes > 0 {
+            let transfer = self.session.add_transfer(copy_bytes, self.link.latency);
+            self.queue[qi].stage = Stage::CopyIn { transfer, started: now, ports };
+        } else {
+            // Fully resident (or dependency-fed): engines start now.
+            self.dispatch_engines(qi, ports);
+        }
+    }
+
+    /// Build, arm and join one job's engines on its granted ports at the
+    /// current session time (one SGD batch per dispatch).
+    fn dispatch_engines(&mut self, qi: usize, ports: Vec<usize>) {
+        let now = self.session.now();
+        // Freed ports are recycled: reset their bump allocators so this
+        // job's placement starts at the home-window base — a repeat job
+        // with the same grant re-derives the same addresses, keeping the
+        // physically-resident fast path live across jobs.
+        for &p in &ports {
+            self.shim.reset_port(p);
+        }
+        let mut engines: Vec<Box<dyn Engine>> = Vec::new();
+        let (prep, slots, written) = {
+            let pending = &self.queue[qi];
+            build_engines(
+                &self.cfg,
+                &mut self.shim,
+                &mut self.mem,
+                &mut self.control,
+                &mut self.layout,
+                &self.cache,
+                &pending.spec.kind,
+                &pending.spec.inputs,
+                pending.sgd_models.len(),
+                &ports,
+                &mut engines,
+            )
+        };
+        let armed = self.control.take_started();
+        debug_assert_eq!(armed.len(), engines.len(), "every engine must be armed");
+        // Functional passes run at dispatch (parallel when footprints are
+        // disjoint); the timing phases then join the shared session.
+        sim::prepare_functional(&mut self.mem, &mut engines, self.parallel_functional);
+        let mut members = Vec::with_capacity(engines.len());
+        let mut remaining = 0usize;
+        for engine in engines {
+            let (member, active) = self.session.add_engine(engine, &mut self.mem);
+            members.push(member);
+            if active {
+                remaining += 1;
+            }
+        }
+        self.host_write_bytes += written;
+        {
+            let pending = &mut self.queue[qi];
+            pending.record.rounds += 1;
+            pending.record.engines = pending
+                .record
+                .engines
+                .max(ports.len() / pending.spec.kind.ports_per_engine());
+            pending.record.host_write_bytes += written;
+            pending.stage = Stage::Running {
+                members,
+                ports,
+                prep,
+                slots,
+                started: now,
+                remaining,
+            };
+        }
+        if remaining == 0 {
+            // Degenerate dispatch (e.g. an empty dependency-fed column
+            // built zero engines): complete the batch synchronously.
+            self.finish_batch(qi);
+        }
+    }
+
+    /// One of this job's session members finished its last phase; when
+    /// the whole batch is done, collect it.
+    fn note_engine_done(&mut self, member: usize) {
+        let Some(qi) = self.queue.iter().position(|p| {
+            matches!(&p.stage, Stage::Running { members, .. } if members.contains(&member))
+        }) else {
+            // An engine of an already-collected batch (can only happen if
+            // the session reported duplicates; it does not).
+            return;
+        };
+        let done = {
+            let Stage::Running { remaining, .. } = &mut self.queue[qi].stage else {
+                unreachable!("position matched a running stage");
+            };
+            *remaining -= 1;
+            *remaining == 0
+        };
+        if done {
+            self.finish_batch(qi);
+        }
+    }
+
+    /// Collect one job's finished engine batch at the current event:
+    /// publish results through the CSRs, free the slots back to the
+    /// policy, and either start the copy-out (job complete) or return the
+    /// job to the admission queue (SGD grid not exhausted).
+    fn finish_batch(&mut self, qi: usize) {
+        let now = self.session.now();
+        let stage = std::mem::replace(&mut self.queue[qi].stage, Stage::Waiting);
+        let Stage::Running { members, ports, prep, slots, started, .. } = stage else {
+            unreachable!("finish_batch on a non-running job");
+        };
+        let exec = now - started;
+        let mut engines: Vec<Box<dyn Engine>> = Vec::with_capacity(members.len());
+        let mut job_hbm = 0u64;
+        for &m in &members {
+            let (engine, stats) = self.session.take_engine(m);
+            job_hbm += stats.hbm_bytes;
+            engines.push(engine);
+        }
+        let outcome = collect_outcome(
+            &self.cfg,
+            &self.mem,
+            &mut self.control,
+            &prep,
+            &engines,
+            &slots,
+            &self.queue[qi],
+            exec,
+        );
+        // Slots free at *this job's* completion event, not a round's.
+        self.engine_busy_port_seconds += ports.len() as f64 * exec;
+        for p in ports {
+            self.free_ports.insert(p);
+        }
+        self.hbm_bytes += job_hbm;
+        let pending = &mut self.queue[qi];
+        pending.record.exec += exec;
+        pending.record.hbm_bytes += job_hbm;
+        match outcome {
+            RoundOutcome::SgdPartial { models } => {
+                // Stage is already `Waiting`: the job re-enters admission
+                // at this same event time, with its dataset resident and
+                // its copy-in long since charged.
+                pending.sgd_models.extend(models);
+            }
+            RoundOutcome::Complete { output, out_bytes } => {
+                let transfer = self.session.add_transfer(out_bytes, self.link.latency);
+                pending.stage = Stage::CopyOut { transfer, started: now, output };
+            }
+        }
+    }
+
+    /// A link transfer landed: either the job's inputs are on the card
+    /// (dispatch its engines) or its results reached the host (retire
+    /// it).
+    fn note_transfer_done(
+        &mut self,
+        transfer: usize,
+        finished: &mut Vec<(usize, JobOutput)>,
+    ) {
+        let now = self.session.now();
+        let Some(qi) = self.queue.iter().position(|p| match &p.stage {
+            Stage::CopyIn { transfer: t, .. } | Stage::CopyOut { transfer: t, .. } => {
+                *t == transfer
+            }
+            _ => false,
+        }) else {
+            return;
+        };
+        match std::mem::replace(&mut self.queue[qi].stage, Stage::Waiting) {
+            Stage::CopyIn { started, ports, .. } => {
+                self.queue[qi].record.copy_in += now - started;
+                self.dispatch_engines(qi, ports);
+            }
+            Stage::CopyOut { started, output, .. } => {
+                let pending = &mut self.queue[qi];
+                pending.record.copy_out += now - started;
+                pending.record.finish_time = now;
+                self.records.push(pending.record.clone());
+                let id = pending.id;
+                finished.push((id, output));
+                let retired = self.queue.remove(qi);
+                debug_assert!(retired.is_some(), "retired job was in the queue");
+            }
+            _ => unreachable!("position matched a transfer stage"),
+        }
     }
 
     /// Strike `completed` off every queued job's unresolved-parent set;
@@ -613,6 +1122,10 @@ impl Coordinator {
             simulated_time: self.clock,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
+            engine_busy_port_seconds: self.engine_busy_port_seconds,
+            link_busy_seconds: self.link_busy_barrier
+                + self.session.link_busy_seconds(),
+            overlap_seconds: self.session.overlap_seconds(),
         }
     }
 
@@ -626,11 +1139,16 @@ impl Coordinator {
             simulated_time: self.clock,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
+            engine_busy_port_seconds: self.engine_busy_port_seconds,
+            link_busy_seconds: self.link_busy_barrier
+                + self.session.link_busy_seconds(),
+            overlap_seconds: self.session.overlap_seconds(),
         }
     }
 
-    /// Execute one scheduling round; returns the jobs completed in it.
-    fn run_round(&mut self) -> Vec<(usize, JobOutput)> {
+    /// Execute one lock-step scheduling round (the `set_round_barrier`
+    /// baseline); returns the jobs completed in it.
+    fn run_round(&mut self) -> Result<Vec<(usize, JobOutput)>, CoordinatorError> {
         let round_start = self.clock;
 
         // 1. Policy decision over the *ready* queue: dependency-gated
@@ -643,11 +1161,10 @@ impl Coordinator {
             .filter(|(_, p)| p.unresolved.is_empty() && p.spec.deps.is_empty())
             .map(|(i, _)| i)
             .collect();
-        assert!(
-            !ready.is_empty(),
-            "coordinator stalled: every queued job is dependency-gated \
-             (a parent id was wrong or a DAG was not submitted topologically)"
-        );
+        if ready.is_empty() {
+            let stalled: Vec<usize> = self.queue.iter().map(|p| p.id).collect();
+            return Err(CoordinatorError::DependencyStall { stalled });
+        }
         let views: Vec<QueuedJob> =
             ready.iter().map(|&i| queued_view(&self.queue[i])).collect();
         let mut admissions = plan_round(self.policy, &views);
@@ -776,6 +1293,7 @@ impl Coordinator {
             outcomes.into_iter().enumerate()
         {
             let adm_ports = admissions[ai].ports.len();
+            self.engine_busy_port_seconds += adm_ports as f64 * finish_in_sim;
             let pending = &mut self.queue[queue_idx];
             if !pending.started {
                 pending.started = true;
@@ -813,10 +1331,14 @@ impl Coordinator {
         // 7. Advance the card clock past the whole round and retire the
         //    completed jobs (unfinished SGD jobs keep their position).
         //    `completed_ids` is a set, so this is O(queue · log completed)
-        //    rather than the old O(queue · completed) scan.
+        //    rather than the old O(queue · completed) scan. The copy
+        //    phases serialize against compute here — that is the barrier
+        //    cost the continuous mode deletes — so the round's link-busy
+        //    time contributes zero overlap.
+        self.link_busy_barrier += copy_in_phase + copy_out_phase;
         self.clock = round_start + copy_in_phase + report.makespan + copy_out_phase;
         self.queue.retain(|p| !completed_ids.contains(&p.id));
-        finished
+        Ok(finished)
     }
 }
 
@@ -1447,7 +1969,7 @@ mod tests {
         assert!(coord.is_in_flight(id));
         assert!(coord.take_result(id).is_none(), "nothing done before a round");
 
-        let done = coord.step();
+        let done = coord.step().unwrap();
         assert_eq!(done, vec![id]);
         assert!(coord.is_in_flight(id), "unclaimed output keeps the job visible");
         let (out, rec) = coord.take_result(id).expect("buffered output");
@@ -1461,7 +1983,7 @@ mod tests {
         assert!(coord.take_result(id).is_none());
         assert!(!coord.is_in_flight(id));
         assert_eq!(coord.stats().completed(), 1);
-        assert!(coord.step().is_empty(), "empty queue: step is a no-op");
+        assert!(coord.step().unwrap().is_empty(), "empty queue: step is a no-op");
     }
 
     #[test]
@@ -1472,13 +1994,13 @@ mod tests {
         // Abandon while queued: the job runs, nothing is buffered.
         let a = coord.submit(selection_spec(&w));
         coord.abandon(a);
-        assert_eq!(coord.step(), vec![a]);
+        assert_eq!(coord.step().unwrap(), vec![a]);
         assert!(coord.take_result(a).is_none(), "abandoned output is discarded");
         assert!(!coord.is_in_flight(a));
 
         // Abandon after completion: the buffered output is freed.
         let b = coord.submit(selection_spec(&w));
-        coord.step();
+        coord.step().unwrap();
         assert!(coord.is_in_flight(b), "unclaimed output still buffered");
         coord.abandon(b);
         assert!(!coord.is_in_flight(b));
@@ -1616,19 +2138,19 @@ mod tests {
                 DepInput { slot: 1, expr: DepExpr::Candidates(p2) },
             ]),
         );
-        assert_eq!(coord.step(), vec![p1]);
+        assert_eq!(coord.step().unwrap(), vec![p1]);
         let ikey = intermediate_key(p1);
         assert!(coord.cache().contains(&ikey), "published for the gated child");
         assert!(coord.cache().is_pinned(&ikey), "pinned while the child waits");
 
-        assert_eq!(coord.step(), vec![p2]);
+        assert_eq!(coord.step().unwrap(), vec![p2]);
         assert!(
             !coord.cache().contains(&ikey),
             "consumed and released once the child resolved"
         );
         assert!(!coord.cache().contains(&intermediate_key(p2)));
 
-        assert_eq!(coord.step(), vec![child]);
+        assert_eq!(coord.step().unwrap(), vec![child]);
         let (out, rec) = coord.take_result(child).unwrap();
         assert_eq!(rec.copy_in_bytes, 0, "both sides were dependency-fed");
         let mut c1 = cpu::selection::range_select(&w1.data, w1.lo, w1.hi, 4);
@@ -1712,24 +2234,71 @@ mod tests {
                 expr: DepExpr::Column { data: vec![1, 2, 3, 4].into(), key: None },
             }]),
         );
-        assert_eq!(coord.step(), vec![id]);
+        assert_eq!(coord.step().unwrap(), vec![id]);
         let (out, rec) = coord.take_result(id).unwrap();
         assert_eq!(out.expect_selection()[..], [1, 2]);
         assert_eq!(rec.copy_in_bytes, 16, "anonymous column still crosses");
     }
 
     #[test]
-    #[should_panic(expected = "not queued")]
-    fn dep_on_unqueued_parent_is_rejected_at_submit() {
+    fn mis_ordered_dag_surfaces_a_typed_stall_not_an_abort() {
         use crate::coordinator::job::{DepExpr, DepInput};
+        // A child naming a parent that was never queued: step() must
+        // report a typed DependencyStall instead of panicking.
         let mut coord = Coordinator::new(cfg());
-        coord.submit(
+        let child = coord.submit(
             JobSpec::new(JobKind::Selection {
                 data: Vec::new().into(),
                 lo: 0,
                 hi: 1,
             })
             .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(99) }]),
+        );
+        let err = coord.step().unwrap_err();
+        assert_eq!(err, CoordinatorError::DependencyStall { stalled: vec![child] });
+        assert!(err.to_string().contains("dependency-gated"), "{err}");
+
+        // The same stall is typed under the round-barrier baseline too.
+        let mut coord = Coordinator::new(cfg()).with_round_barrier(true);
+        let child = coord.submit(
+            JobSpec::new(JobKind::Selection {
+                data: Vec::new().into(),
+                lo: 0,
+                hi: 1,
+            })
+            .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(99) }]),
+        );
+        assert_eq!(
+            coord.step().unwrap_err(),
+            CoordinatorError::DependencyStall { stalled: vec![child] }
+        );
+        assert!(coord.try_run().is_err(), "try_run surfaces the stall too");
+    }
+
+    #[test]
+    fn stall_error_reports_after_live_parents_complete() {
+        use crate::coordinator::job::{DepExpr, DepInput};
+        // One live parent + one dangling dependency: the live parent
+        // completes normally, then the stuck child surfaces as a typed
+        // stall instead of wedging the queue forever.
+        let w = SelectionWorkload::uniform(20_000, 0.2, 77);
+        let mut coord = Coordinator::new(cfg());
+        let parent = coord.submit(selection_spec(&w));
+        let child = coord.submit(
+            JobSpec::new(JobKind::Join {
+                s: Vec::new().into(),
+                l: Vec::new().into(),
+                handle_collisions: true,
+            })
+            .with_deps(vec![
+                DepInput { slot: 0, expr: DepExpr::Candidates(parent) },
+                DepInput { slot: 1, expr: DepExpr::Candidates(4242) },
+            ]),
+        );
+        assert_eq!(coord.step().unwrap(), vec![parent]);
+        assert_eq!(
+            coord.step().unwrap_err(),
+            CoordinatorError::DependencyStall { stalled: vec![child] }
         );
     }
 

@@ -55,8 +55,8 @@ use super::ops::{self, AggKind, AggResult};
 use super::request::build_side_is_unique;
 use super::udf::FpgaAccelerator;
 use crate::coordinator::{
-    ColumnKey, Coordinator, DepExpr, DepInput, JobKind, JobOutput, JobRecord,
-    JobSpec,
+    ColumnKey, Coordinator, CoordinatorError, DepExpr, DepInput, JobKind,
+    JobOutput, JobRecord, JobSpec,
 };
 use crate::hbm::shim::ENGINE_PORTS;
 
@@ -781,10 +781,10 @@ impl PipelineHandle {
         self.complete()
     }
 
-    /// Drive scheduling rounds until every stage completed (co-scheduled
-    /// jobs from other pipelines progress too), then evaluate the
-    /// host-side finisher.
-    fn drive_to_completion(&mut self) {
+    /// Drive the card until every stage completed (co-scheduled jobs
+    /// from other pipelines progress too), then evaluate the host-side
+    /// finisher. Scheduling failures surface as typed errors.
+    fn drive_to_completion(&mut self) -> Result<(), CoordinatorError> {
         loop {
             self.try_claim();
             if self.complete() {
@@ -800,18 +800,28 @@ impl PipelineHandle {
                     );
                 }
             }
-            coord.step();
+            coord.step()?;
         }
         if self.result.is_none() {
             self.result = Some(eval_finish(&self.finish, &self.outputs));
         }
+        Ok(())
     }
 
     /// Block until the whole plan completes; returns the root
     /// [`Intermediate`]. Idempotent: repeat calls return the same result.
+    /// Panics on a dependency stall — use
+    /// [`try_wait`](PipelineHandle::try_wait) to handle
+    /// [`CoordinatorError`] instead.
     pub fn wait(&mut self) -> Intermediate {
-        self.drive_to_completion();
-        self.result.clone().expect("evaluated result")
+        self.try_wait()
+            .unwrap_or_else(|e| panic!("card cannot make progress: {e}"))
+    }
+
+    /// Non-panicking [`wait`](PipelineHandle::wait).
+    pub fn try_wait(&mut self) -> Result<Intermediate, CoordinatorError> {
+        self.drive_to_completion()?;
+        Ok(self.result.clone().expect("evaluated result"))
     }
 
     /// Per-stage accounting once every stage completed (`None` before).
@@ -829,7 +839,8 @@ impl PipelineHandle {
     /// Consuming [`wait`](PipelineHandle::wait): result plus the
     /// per-stage report, without an extra clone of the result.
     pub fn take(mut self) -> (Intermediate, PipelineReport) {
-        self.drive_to_completion();
+        self.drive_to_completion()
+            .unwrap_or_else(|e| panic!("card cannot make progress: {e}"));
         let report = self.report().expect("complete pipeline has a report");
         (self.result.take().expect("evaluated result"), report)
     }

@@ -19,11 +19,11 @@
 //! instead of round-tripping through the host.
 //!
 //! Because submission and completion are decoupled, a client can keep
-//! several operators in flight: jobs queued together are co-scheduled by
-//! the coordinator's round policy, so the next query's copy-in overlaps
-//! the current round's execution — the copy/exec trade-off Figs. 6 and 8
-//! turn on — and one client's `wait` makes progress for every in-flight
-//! job.
+//! several operators in flight: the coordinator's continuous event-driven
+//! scheduler admits ready jobs the moment engine slots free, so one job's
+//! OpenCAPI copy-in overlaps other jobs' compute — the copy/exec
+//! trade-off Figs. 6 and 8 turn on — and one client's `wait` makes
+//! progress for every in-flight job.
 //!
 //! Each offload is still accounted end-to-end, exactly as the paper does:
 //! **copy-in** over the two datamovers into ideally-partitioned HBM
@@ -55,7 +55,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use super::request::{OffloadRequest, RequestError};
 use crate::coordinator::{
-    Coordinator, CoordinatorStats, JobOutput, JobRecord, Policy,
+    Coordinator, CoordinatorError, CoordinatorStats, JobOutput, JobRecord, Policy,
 };
 use crate::hbm::shim::ENGINE_PORTS;
 use crate::hbm::HbmConfig;
@@ -184,12 +184,21 @@ impl FpgaAccelerator {
     }
 
     /// Drive the card until every in-flight job has completed. Results
-    /// stay claimable through their handles.
+    /// stay claimable through their handles. Panics on a dependency
+    /// stall — [`try_wait_all`](FpgaAccelerator::try_wait_all) surfaces
+    /// the typed [`CoordinatorError`] instead.
     pub fn wait_all(&mut self) {
+        self.try_wait_all()
+            .unwrap_or_else(|e| panic!("card cannot make progress: {e}"))
+    }
+
+    /// Non-panicking [`wait_all`](FpgaAccelerator::wait_all).
+    pub fn try_wait_all(&mut self) -> Result<(), CoordinatorError> {
         let mut coord = self.coord();
         while coord.pending() > 0 {
-            coord.step();
+            coord.step()?;
         }
+        Ok(())
     }
 
     /// Jobs submitted but not yet completed.
@@ -278,13 +287,13 @@ impl JobHandle {
         self.cached.is_some()
     }
 
-    /// Drive scheduling rounds until the job completes (so co-scheduled
-    /// jobs progress too).
-    fn claim_blocking(&mut self) {
+    /// Drive the card until the job completes (so co-scheduled jobs
+    /// progress too), surfacing scheduling failures as typed errors.
+    fn claim_blocking(&mut self) -> Result<(), CoordinatorError> {
         loop {
             self.try_claim();
             if self.cached.is_some() {
-                return;
+                return Ok(());
             }
             let mut coord = self.coord();
             assert!(
@@ -292,7 +301,7 @@ impl JobHandle {
                 "job {} vanished from the coordinator without completing",
                 self.id
             );
-            coord.step();
+            coord.step()?;
         }
     }
 
@@ -300,15 +309,27 @@ impl JobHandle {
     /// Idempotent: after completion every call returns the same result
     /// (a clone of the cached output — use [`take`](JobHandle::take) or
     /// a typed `wait_*` for the clone-free single-consumer case).
+    /// Panics on a dependency stall — use
+    /// [`try_wait`](JobHandle::try_wait) to handle [`CoordinatorError`]
+    /// instead.
     pub fn wait(&mut self) -> (JobOutput, OffloadTiming) {
-        self.claim_blocking();
-        self.cached.clone().expect("claimed result")
+        self.try_wait()
+            .unwrap_or_else(|e| panic!("card cannot make progress: {e}"))
+    }
+
+    /// Non-panicking [`wait`](JobHandle::wait): the typed scheduler
+    /// failure (e.g. [`CoordinatorError::DependencyStall`]) instead of a
+    /// process abort.
+    pub fn try_wait(&mut self) -> Result<(JobOutput, OffloadTiming), CoordinatorError> {
+        self.claim_blocking()?;
+        Ok(self.cached.clone().expect("claimed result"))
     }
 
     /// Consuming [`wait`](JobHandle::wait): blocks until completion and
     /// moves the result out without cloning it.
     pub fn take(mut self) -> (JobOutput, OffloadTiming) {
-        self.claim_blocking();
+        self.claim_blocking()
+            .unwrap_or_else(|e| panic!("card cannot make progress: {e}"));
         self.cached.take().expect("claimed result")
     }
 

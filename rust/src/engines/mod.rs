@@ -9,9 +9,13 @@
 //!   work to the timing simulator: an engine is a state machine emitting
 //!   *phases* (e.g. "ingress 64 KiB", "probe pass 3"), each with the HBM
 //!   flows it drives and an optional compute-bound rate ceiling;
-//! * [`sim::run`] — the event-driven fluid simulation: it solves
-//!   the crossbar allocation for all concurrently-active phases, advances
-//!   time to the next phase completion, and repeats;
+//! * [`sim::SimSession`] — the persistent event-driven card timeline:
+//!   it solves the crossbar allocation for all concurrently-active
+//!   phases (and shares the host link among active transfers), advances
+//!   time to the next completion, and repeats — with engines and
+//!   transfers joining/leaving at arbitrary event times, which is what
+//!   the coordinator's continuous scheduler is built on. [`sim::run`] is
+//!   the one-shot drain over a private session;
 //! * [`control::ControlUnit`] — the CSR (register read/write) facade the
 //!   coordinator uses to start/stop/poll engines, mirroring the paper's
 //!   asynchronous software control.

@@ -1,44 +1,109 @@
 //! Event-driven fluid simulation of concurrent engines over the HBM.
 //!
-//! Between events (phase completions) the set of active flows is constant,
-//! so the max-min allocation from [`crate::hbm::fluid`] is constant too;
-//! the simulator advances directly to the earliest completion. Runtime is
-//! O(#phases × solve-cost), independent of data volume — a 2 GB join and
-//! a 2 KB join cost the same to *time* (the functional work still touches
-//! the real bytes).
+//! Between events (phase or transfer completions) the set of active flows
+//! is constant, so the max-min allocation from [`crate::hbm::fluid`] is
+//! constant too; the simulator advances directly to the earliest
+//! completion. Runtime is O(#phases × solve-cost), independent of data
+//! volume — a 2 GB join and a 2 KB join cost the same to *time* (the
+//! functional work still touches the real bytes).
+//!
+//! ## The persistent session
+//!
+//! [`SimSession`] is the card's continuous timeline: engines — and
+//! modeled host-link transfers for copy-in/copy-out — **join and leave at
+//! arbitrary event times**. The coordinator keeps one session alive for
+//! its whole life, so one job's copy-in overlaps other jobs' compute, a
+//! job's engines start the moment its own transfer lands, and a finished
+//! job's slots free at its own completion event instead of a round
+//! barrier. [`run`]/[`run_mode`] remain the one-shot convenience: they
+//! drive a private session from `t = 0` to drain, which is exactly the
+//! old round-scoped behaviour (and keeps the Fig. 2 anchors untouched).
+//!
+//! Per event the session solves the crossbar allocation over every active
+//! phase's flows (link transfers share a separate host-link resource
+//! max-min, like the OpenCAPI model), advances to the earliest
+//! completion, and reports [`SimEvent`]s. Segment weights are cached per
+//! phase and the solver runs on reusable scratch buffers
+//! ([`crate::hbm::fluid::solve_in`]), so steady-state events perform no
+//! heap allocation.
 //!
 //! ## Parallel functional execution, serial timing
 //!
-//! Engines within a round are independent: they read and write disjoint
-//! `ShimBuffer` ranges in their own ports' home windows. [`run`] exploits
-//! that by executing every engine's *functional* pass (the scan/probe/SGD
-//! loops over real bytes — the host-side cost that dominates large runs)
-//! on `std::thread::scope` workers first, each against a disjoint
-//! [`HbmView`](crate::hbm::HbmView) carved out of the page store, and
-//! only then runs the (cheap, deterministic) event-driven timing loop
-//! single-threaded. Results are bit-identical to serial execution: each
-//! engine touches only its own pages, the views merge back
-//! deterministically, and the timing loop consumes the same phase
-//! sequence either way. Engines that do not declare their memory
-//! footprint ([`Engine::functional_ranges`] empty), or whose declared
-//! ranges overlap, fall back to serial functional execution —
-//! correctness never depends on the parallel path.
+//! Engines joining together are independent: they read and write disjoint
+//! `ShimBuffer` ranges in their own ports' home windows.
+//! [`prepare_functional`] exploits that by executing every engine's
+//! *functional* pass (the scan/probe/SGD loops over real bytes — the
+//! host-side cost that dominates large runs) on `std::thread::scope`
+//! workers first, each against a disjoint
+//! [`HbmView`](crate::hbm::HbmView) carved out of the page store; the
+//! (cheap, deterministic) event-driven timing loop stays single-threaded.
+//! Results are bit-identical to serial execution: each engine touches
+//! only its own pages, the views merge back deterministically, and the
+//! timing loop consumes the same phase sequence either way. Engines that
+//! do not declare their memory footprint
+//! ([`Engine::functional_ranges`] empty), or whose declared ranges
+//! overlap, fall back to serial functional execution — correctness never
+//! depends on the parallel path.
 
 use super::{Engine, EngineStats, Phase};
-use crate::hbm::fluid::{solve, Flow};
+use crate::hbm::fluid::{solve_in, Flow, SolveScratch};
 use crate::hbm::memory::HbmMemory;
 use crate::hbm::HbmConfig;
 
 struct ActivePhase {
-    engine_idx: usize,
     phase: Phase,
     /// Progress through `work_bytes`, in bytes.
     done_bytes: f64,
     /// Remaining fixed overhead to burn before/alongside progress.
     overhead_left: f64,
+    /// Segment weights of each phase flow, computed once when the phase
+    /// starts (they depend only on the flow's address range) and copied
+    /// into the solver's flat table per event — no per-event `Vec`s.
+    flow_weights: Vec<Vec<(usize, f64)>>,
 }
 
-/// Result of a simulation run.
+impl ActivePhase {
+    fn new(phase: Phase) -> Self {
+        let flow_weights =
+            phase.flows.iter().map(|pf| pf.flow.segment_weights()).collect();
+        Self {
+            overhead_left: phase.fixed_overhead,
+            done_bytes: 0.0,
+            flow_weights,
+            phase,
+        }
+    }
+}
+
+/// One engine participating in the session.
+struct Member {
+    /// Taken out by [`SimSession::take_engine`] after the engine is done.
+    engine: Option<Box<dyn Engine>>,
+    active: Option<ActivePhase>,
+    stats: EngineStats,
+}
+
+/// One modeled host-link transfer (copy-in or copy-out) sharing the
+/// session's link bandwidth max-min with every other active transfer.
+struct Transfer {
+    latency_left: f64,
+    remaining_bytes: f64,
+    done: bool,
+}
+
+/// A completion the session reports from [`SimSession::advance`]: the
+/// join/leave points the scheduler reacts to. Internal phase transitions
+/// of a multi-phase engine are not events — nothing external can change
+/// between them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEvent {
+    /// The engine behind this member id emitted its last phase.
+    EngineDone { member: usize },
+    /// The transfer behind this id finished moving its bytes.
+    TransferDone { transfer: usize },
+}
+
+/// Result of a one-shot simulation run ([`run`]/[`run_mode`]).
 #[derive(Debug, Clone)]
 pub struct SimReport {
     /// Time at which the last engine finished (seconds).
@@ -50,6 +115,342 @@ impl SimReport {
     /// Aggregate processing rate given total useful bytes, in bytes/s.
     pub fn rate(&self, useful_bytes: u64) -> f64 {
         useful_bytes as f64 / self.makespan.max(1e-12)
+    }
+}
+
+/// The persistent event-driven card timeline. See the module docs.
+pub struct SimSession {
+    cfg: HbmConfig,
+    now: f64,
+    members: Vec<Member>,
+    transfers: Vec<Transfer>,
+    /// Host-link bandwidth shared max-min among active transfers.
+    /// `INFINITY` (the default) makes transfers pure-latency.
+    link_bandwidth: f64,
+    /// Seconds with ≥ 1 active transfer.
+    link_busy: f64,
+    /// Seconds with ≥ 1 active transfer *and* ≥ 1 active engine phase —
+    /// the compute/transfer overlap the continuous scheduler buys.
+    overlap: f64,
+    /// Member slots whose engine was reclaimed ([`SimSession::take_engine`]),
+    /// recycled by the next [`SimSession::add_engine`] so a long-lived
+    /// session's member table stays bounded by *peak concurrency*, not by
+    /// total jobs served. Safe because a taken member's events were all
+    /// delivered before its slot could free.
+    free_members: Vec<usize>,
+    // Reusable per-event buffers (see the module docs on allocation).
+    scratch: SolveScratch,
+    flows: Vec<Flow>,
+    flow_owner: Vec<(usize, f64)>,
+    weight_flat: Vec<(usize, f64)>,
+    weight_spans: Vec<(usize, usize)>,
+    phase_rate: Vec<f64>,
+}
+
+impl SimSession {
+    pub fn new(cfg: HbmConfig) -> Self {
+        Self {
+            cfg,
+            now: 0.0,
+            members: Vec::new(),
+            transfers: Vec::new(),
+            link_bandwidth: f64::INFINITY,
+            link_busy: 0.0,
+            overlap: 0.0,
+            free_members: Vec::new(),
+            scratch: SolveScratch::new(),
+            flows: Vec::new(),
+            flow_owner: Vec::new(),
+            weight_flat: Vec::new(),
+            weight_spans: Vec::new(),
+            phase_rate: Vec::new(),
+        }
+    }
+
+    /// Current simulated time (seconds since session start).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Host-link bandwidth for transfers, bytes/s.
+    pub fn set_link_bandwidth(&mut self, bw: f64) {
+        self.link_bandwidth = bw;
+    }
+
+    /// Swap the timing configuration. Whole-card semantics: in-flight
+    /// phases see the new crossbar rates from the next event on.
+    pub fn set_config(&mut self, cfg: HbmConfig) {
+        self.cfg = cfg;
+    }
+
+    /// Seconds the host link spent moving bytes.
+    pub fn link_busy_seconds(&self) -> f64 {
+        self.link_busy
+    }
+
+    /// Seconds a transfer and an engine phase were simultaneously active.
+    pub fn overlap_seconds(&self) -> f64 {
+        self.overlap
+    }
+
+    /// Nothing left to simulate: no active engine phase, no transfer.
+    pub fn idle(&self) -> bool {
+        self.members.iter().all(|m| m.active.is_none())
+            && self.transfers.iter().all(|t| t.done)
+    }
+
+    /// Fast-forward an idle session (e.g. after externally-timed
+    /// round-barrier work advanced the card clock past the session).
+    pub fn sync_now(&mut self, t: f64) {
+        assert!(self.idle(), "cannot fast-forward a busy session");
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    /// Join an engine at the current time. The engine should already be
+    /// *prepared* (see [`prepare_functional`]); unprepared engines run
+    /// their functional pass lazily inside `next_phase`, exactly like the
+    /// historical single-threaded drivers. Returns the member id and
+    /// whether the engine actually has work (an engine whose first
+    /// `next_phase` is `None` joins already-done and emits no event).
+    pub fn add_engine(
+        &mut self,
+        mut engine: Box<dyn Engine>,
+        mem: &mut HbmMemory,
+    ) -> (usize, bool) {
+        let mut stats = EngineStats { name: engine.name(), ..Default::default() };
+        let active = engine.next_phase(mem).map(ActivePhase::new);
+        let has_work = active.is_some();
+        if has_work {
+            stats.phases += 1;
+        }
+        let member = Member { engine: Some(engine), active, stats };
+        let id = match self.free_members.pop() {
+            Some(slot) => {
+                self.members[slot] = member;
+                slot
+            }
+            None => {
+                self.members.push(member);
+                self.members.len() - 1
+            }
+        };
+        (id, has_work)
+    }
+
+    /// Start a host-link transfer of `bytes` at the current time, with a
+    /// fixed `latency` burned before (and alongside) the bytes.
+    pub fn add_transfer(&mut self, bytes: u64, latency: f64) -> usize {
+        let id = self.transfers.len();
+        self.transfers.push(Transfer {
+            latency_left: latency,
+            remaining_bytes: bytes as f64,
+            done: false,
+        });
+        id
+    }
+
+    /// A done member's accumulated statistics.
+    pub fn engine_stats(&self, member: usize) -> &EngineStats {
+        &self.members[member].stats
+    }
+
+    /// Reclaim a done engine (for result downcasting) and its stats,
+    /// freeing the member slot for reuse. Panics if the engine still has
+    /// phases or was already taken.
+    pub fn take_engine(&mut self, member: usize) -> (Box<dyn Engine>, EngineStats) {
+        let m = &mut self.members[member];
+        assert!(m.active.is_none(), "cannot take a running engine");
+        let engine = m.engine.take().expect("engine already taken");
+        self.free_members.push(member);
+        (engine, m.stats.clone())
+    }
+
+    /// Advance to the next completion event(s). Returns every
+    /// [`SimEvent`] landing at the new `now` — at least one, unless the
+    /// session is idle (empty return). Internal phase hand-offs of
+    /// multi-phase engines are processed silently.
+    pub fn advance(&mut self, mem: &mut HbmMemory) -> Vec<SimEvent> {
+        let mut events = Vec::new();
+        let mut guard = 0u64;
+        while events.is_empty() {
+            guard += 1;
+            assert!(guard < 50_000_000, "simulation did not terminate");
+
+            // Collect flows from all active phases, with each phase's
+            // cached segment weights copied into the solver's flat table.
+            // Apply the phase's compute cap to each of its flows so the
+            // solver can hand slack to others.
+            self.flows.clear();
+            self.flow_owner.clear();
+            self.weight_flat.clear();
+            self.weight_spans.clear();
+            let mut any_engine = false;
+            for (mi, m) in self.members.iter().enumerate() {
+                let Some(ap) = &m.active else { continue };
+                any_engine = true;
+                for (fi, pf) in ap.phase.flows.iter().enumerate() {
+                    let mut f = pf.flow.clone();
+                    f.id = self.flows.len();
+                    // Weighted max-min: a phase's flows advance in
+                    // lock-step, each demanding bandwidth proportional to
+                    // its per-unit share (an idle-ish egress flow must
+                    // not hoard half the segment).
+                    f.weight = pf.per_unit.max(1e-9);
+                    if ap.phase.rate_cap.is_finite() {
+                        f.rate_cap = f.rate_cap.min(ap.phase.rate_cap * pf.per_unit);
+                    }
+                    let w = &ap.flow_weights[fi];
+                    self.weight_spans.push((self.weight_flat.len(), w.len()));
+                    self.weight_flat.extend_from_slice(w);
+                    self.flows.push(f);
+                    self.flow_owner.push((mi, pf.per_unit));
+                }
+            }
+            let n_transfers = self.transfers.iter().filter(|t| !t.done).count();
+            if !any_engine && n_transfers == 0 {
+                return events; // idle
+            }
+
+            solve_in(
+                &self.cfg,
+                &self.flows,
+                &self.weight_spans,
+                &self.weight_flat,
+                &mut self.scratch,
+            );
+
+            // Phase progress rate: slowest flow relative to its per-unit
+            // share; compute-only phases progress at their cap (or
+            // instantly if pure overhead).
+            self.phase_rate.clear();
+            self.phase_rate.resize(self.members.len(), f64::INFINITY);
+            for (fi, &(mi, per_unit)) in self.flow_owner.iter().enumerate() {
+                if per_unit > 1e-12 {
+                    self.phase_rate[mi] =
+                        self.phase_rate[mi].min(self.scratch.rates[fi] / per_unit);
+                }
+            }
+            for (mi, m) in self.members.iter().enumerate() {
+                if let Some(ap) = &m.active {
+                    if self.phase_rate[mi].is_infinite() {
+                        // No HBM flows: pure compute phase.
+                        self.phase_rate[mi] = ap.phase.rate_cap;
+                    }
+                }
+            }
+
+            // Active transfers split the host link evenly (max-min with
+            // equal weights and no caps collapses to an even split).
+            let link_rate = if n_transfers > 0 {
+                self.link_bandwidth / n_transfers as f64
+            } else {
+                0.0
+            };
+
+            // Time to the next completion. Overhead/latency burns first,
+            // then work.
+            let mut dt = f64::INFINITY;
+            for (mi, m) in self.members.iter().enumerate() {
+                let Some(ap) = &m.active else { continue };
+                let mut t = ap.overhead_left;
+                let remaining = ap.phase.work_bytes as f64 - ap.done_bytes;
+                if remaining > 1e-9 {
+                    let r = self.phase_rate[mi];
+                    t += if r.is_finite() && r > 0.0 {
+                        remaining / r
+                    } else {
+                        f64::INFINITY
+                    };
+                }
+                dt = dt.min(t);
+            }
+            for tr in &self.transfers {
+                if tr.done {
+                    continue;
+                }
+                let mut t = tr.latency_left;
+                if tr.remaining_bytes > 1e-6 {
+                    t += if link_rate > 0.0 && link_rate.is_finite() {
+                        tr.remaining_bytes / link_rate
+                    } else if link_rate.is_infinite() {
+                        0.0
+                    } else {
+                        f64::INFINITY
+                    };
+                }
+                dt = dt.min(t);
+            }
+            assert!(dt.is_finite(), "active phase can make no progress");
+            // Numerical floor keeps degenerate zero-work phases moving.
+            let dt = dt.max(1e-15);
+            self.now += dt;
+            if n_transfers > 0 {
+                self.link_busy += dt;
+                if any_engine {
+                    self.overlap += dt;
+                }
+            }
+
+            // Advance all phases by dt; retire completed ones.
+            for mi in 0..self.members.len() {
+                let m = &mut self.members[mi];
+                let Some(ap) = m.active.as_mut() else { continue };
+                let mut t = dt;
+                if ap.overhead_left > 0.0 {
+                    let burn = ap.overhead_left.min(t);
+                    ap.overhead_left -= burn;
+                    t -= burn;
+                }
+                if t > 0.0 && self.phase_rate[mi].is_finite() {
+                    ap.done_bytes += self.phase_rate[mi] * t;
+                }
+                let finished = ap.overhead_left <= 1e-15
+                    && ap.done_bytes + 1e-6 >= ap.phase.work_bytes as f64;
+                if finished {
+                    // Account the phase's HBM bytes exactly once, at
+                    // completion: per-event truncation under-reported
+                    // long multi-event phases by up to a byte per event.
+                    let per_unit_total: f64 =
+                        ap.phase.flows.iter().map(|f| f.per_unit).sum();
+                    m.stats.hbm_bytes +=
+                        (ap.phase.work_bytes as f64 * per_unit_total).round() as u64;
+                    m.stats.finish_time = self.now;
+                    let engine =
+                        m.engine.as_mut().expect("running engine present");
+                    m.active = engine.next_phase(mem).map(ActivePhase::new);
+                    if m.active.is_some() {
+                        m.stats.phases += 1;
+                    } else {
+                        events.push(SimEvent::EngineDone { member: mi });
+                    }
+                }
+            }
+
+            // Advance transfers by dt.
+            for (ti, tr) in self.transfers.iter_mut().enumerate() {
+                if tr.done {
+                    continue;
+                }
+                let mut t = dt;
+                if tr.latency_left > 0.0 {
+                    let burn = tr.latency_left.min(t);
+                    tr.latency_left -= burn;
+                    t -= burn;
+                }
+                if t > 0.0 && link_rate.is_finite() {
+                    tr.remaining_bytes -= link_rate * t;
+                } else if t > 0.0 && link_rate.is_infinite() {
+                    tr.remaining_bytes = 0.0;
+                }
+                if tr.latency_left <= 1e-15 && tr.remaining_bytes <= 1e-6 {
+                    tr.done = true;
+                    events.push(SimEvent::TransferDone { transfer: ti });
+                }
+            }
+        }
+        events
     }
 }
 
@@ -73,9 +474,9 @@ pub fn run_serial(
     run_mode(cfg, mem, engines, false)
 }
 
-/// Below this total declared footprint, per-round thread-spawn overhead
-/// outweighs the parallel win; such rounds run serially so the default
-/// mode is never slower than serial on small workloads.
+/// Below this total declared footprint, per-dispatch thread-spawn
+/// overhead outweighs the parallel win; such engine sets run serially so
+/// the default mode is never slower than serial on small workloads.
 const PARALLEL_MIN_FOOTPRINT_BYTES: u64 = 1 << 20;
 
 /// Execute every engine's functional pass up front. Parallel when
@@ -84,7 +485,11 @@ const PARALLEL_MIN_FOOTPRINT_BYTES: u64 = 1 << 20;
 /// work to amortize the worker threads); serial otherwise. Either way,
 /// engines are *prepared* afterwards: `next_phase` only emits
 /// precomputed phases.
-fn prepare_functional(mem: &mut HbmMemory, engines: &mut [Box<dyn Engine>], parallel: bool) {
+pub fn prepare_functional(
+    mem: &mut HbmMemory,
+    engines: &mut [Box<dyn Engine>],
+    parallel: bool,
+) {
     let want_parallel = parallel
         && engines.len() > 1
         && std::thread::available_parallelism().map(|p| p.get() > 1).unwrap_or(false);
@@ -125,140 +530,53 @@ fn prepare_functional(mem: &mut HbmMemory, engines: &mut [Box<dyn Engine>], para
     }
 }
 
+/// Placeholder engine left in a caller's slot while [`run_mode`] drives
+/// the real engine inside a scoped session; swapped back before return.
+struct NullEngine;
+
+impl Engine for NullEngine {
+    fn name(&self) -> String {
+        "null".into()
+    }
+    fn next_phase(&mut self, _mem: &mut HbmMemory) -> Option<Phase> {
+        None
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
 /// Run all engines to completion, with explicit control over whether the
-/// functional passes use worker threads.
+/// functional passes use worker threads. One-shot convenience over
+/// [`SimSession`]: all engines join at `t = 0` and the session drains —
+/// the event sequence (and therefore every timing) is identical to the
+/// historical round-scoped loop.
 pub fn run_mode(
     cfg: &HbmConfig,
     mem: &mut HbmMemory,
     engines: &mut [Box<dyn Engine>],
     parallel: bool,
 ) -> SimReport {
-    let n = engines.len();
     prepare_functional(mem, engines, parallel);
-    let mut stats: Vec<EngineStats> = engines
-        .iter()
-        .map(|e| EngineStats { name: e.name(), ..Default::default() })
+    let mut session = SimSession::new(cfg.clone());
+    let ids: Vec<usize> = engines
+        .iter_mut()
+        .map(|slot| {
+            let engine = std::mem::replace(slot, Box::new(NullEngine) as Box<dyn Engine>);
+            session.add_engine(engine, mem).0
+        })
         .collect();
-
-    let mut active: Vec<Option<ActivePhase>> = Vec::with_capacity(n);
-    for (i, e) in engines.iter_mut().enumerate() {
-        active.push(e.next_phase(mem).map(|p| ActivePhase {
-            engine_idx: i,
-            overhead_left: p.fixed_overhead,
-            phase: p,
-            done_bytes: 0.0,
-        }));
-        if active[i].is_some() {
-            stats[i].phases += 1;
-        }
+    while !session.idle() {
+        session.advance(mem);
     }
-
-    let mut now = 0.0f64;
-    let mut guard = 0u64;
-    loop {
-        guard += 1;
-        assert!(guard < 50_000_000, "simulation did not terminate");
-
-        // Collect flows from all active phases. Apply the phase's compute
-        // cap to each of its flows so the solver can hand slack to others.
-        let mut flows: Vec<Flow> = Vec::new();
-        let mut flow_owner: Vec<(usize, f64)> = Vec::new(); // (phase idx, per_unit)
-        let mut any_active = false;
-        for (pi, ap) in active.iter().enumerate() {
-            let Some(ap) = ap else { continue };
-            any_active = true;
-            for pf in &ap.phase.flows {
-                let mut f = pf.flow.clone();
-                f.id = flows.len();
-                // Weighted max-min: a phase's flows advance in lock-step,
-                // each demanding bandwidth proportional to its per-unit
-                // share (an idle-ish egress flow must not hoard half the
-                // segment).
-                f.weight = pf.per_unit.max(1e-9);
-                if ap.phase.rate_cap.is_finite() {
-                    f.rate_cap = f.rate_cap.min(ap.phase.rate_cap * pf.per_unit);
-                }
-                flows.push(f);
-                flow_owner.push((pi, pf.per_unit));
-            }
-        }
-        if !any_active {
-            break;
-        }
-
-        let alloc = solve(cfg, &flows);
-
-        // Phase progress rate: slowest flow relative to its per-unit share;
-        // compute-only phases progress at their cap (or instantly if pure
-        // overhead).
-        let mut phase_rate = vec![f64::INFINITY; n];
-        for (fi, &(pi, per_unit)) in flow_owner.iter().enumerate() {
-            if per_unit > 1e-12 {
-                phase_rate[pi] = phase_rate[pi].min(alloc.rates[fi] / per_unit);
-            }
-        }
-        for (pi, ap) in active.iter().enumerate() {
-            if let Some(ap) = ap {
-                if phase_rate[pi].is_infinite() {
-                    // No HBM flows: pure compute phase.
-                    phase_rate[pi] = ap.phase.rate_cap;
-                }
-            }
-        }
-
-        // Time to the next completion. Overhead burns first, then work.
-        let mut dt = f64::INFINITY;
-        for (pi, ap) in active.iter().enumerate() {
-            let Some(ap) = ap else { continue };
-            let mut t = ap.overhead_left;
-            let remaining = ap.phase.work_bytes as f64 - ap.done_bytes;
-            if remaining > 1e-9 {
-                let r = phase_rate[pi];
-                t += if r.is_finite() && r > 0.0 { remaining / r } else { f64::INFINITY };
-            }
-            dt = dt.min(t);
-        }
-        assert!(dt.is_finite(), "active phase can make no progress");
-        // Numerical floor keeps degenerate zero-work phases moving.
-        let dt = dt.max(1e-15);
-        now += dt;
-
-        // Advance all phases by dt; retire completed ones.
-        for pi in 0..n {
-            let Some(ap) = active[pi].as_mut() else { continue };
-            let mut t = dt;
-            if ap.overhead_left > 0.0 {
-                let burn = ap.overhead_left.min(t);
-                ap.overhead_left -= burn;
-                t -= burn;
-            }
-            if t > 0.0 && phase_rate[pi].is_finite() {
-                let adv = phase_rate[pi] * t;
-                ap.done_bytes += adv;
-                // Account HBM bytes moved.
-                let per_unit_total: f64 =
-                    ap.phase.flows.iter().map(|f| f.per_unit).sum();
-                stats[ap.engine_idx].hbm_bytes += (adv * per_unit_total) as u64;
-            }
-            let finished = ap.overhead_left <= 1e-15
-                && ap.done_bytes + 1e-6 >= ap.phase.work_bytes as f64;
-            if finished {
-                let ei = ap.engine_idx;
-                stats[ei].finish_time = now;
-                active[pi] = engines[ei].next_phase(mem).map(|p| ActivePhase {
-                    engine_idx: ei,
-                    overhead_left: p.fixed_overhead,
-                    phase: p,
-                    done_bytes: 0.0,
-                });
-                if active[pi].is_some() {
-                    stats[ei].phases += 1;
-                }
-            }
-        }
+    let makespan = session.now();
+    let mut stats = Vec::with_capacity(ids.len());
+    for (slot, &id) in engines.iter_mut().zip(&ids) {
+        let (engine, s) = session.take_engine(id);
+        *slot = engine;
+        stats.push(s);
     }
-
-    SimReport { makespan: now, engines: stats }
+    SimReport { makespan, engines: stats }
 }
 
 #[cfg(test)]
@@ -379,9 +697,9 @@ mod tests {
             left: u32,
         }
         impl Engine for TwoPhase {
-        fn as_any(&self) -> &dyn std::any::Any {
-            self
-        }
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
 
             fn name(&self) -> String {
                 "twophase".into()
@@ -409,9 +727,9 @@ mod tests {
     fn overhead_only_phase_advances_time() {
         struct Sleeper(bool);
         impl Engine for Sleeper {
-        fn as_any(&self) -> &dyn std::any::Any {
-            self
-        }
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
 
             fn name(&self) -> String {
                 "sleeper".into()
@@ -429,5 +747,192 @@ mod tests {
         let mut engines: Vec<Box<dyn Engine>> = vec![Box::new(Sleeper(false))];
         let r = run(&cfg, &mut mem, &mut engines);
         assert!((r.makespan - 1e-3).abs() < 1e-9);
+    }
+
+    // -----------------------------------------------------------------
+    // Session semantics: mid-flight joins, link transfers, accounting.
+    // -----------------------------------------------------------------
+
+    /// An engine whose single phase carries an extra fractional egress
+    /// flow: `per_unit_total` = 1.0 + ratio, the shape whose per-event
+    /// truncation used to leak bytes.
+    struct RatioStreamer {
+        addr: u64,
+        total: u64,
+        ratio: f64,
+        emitted: bool,
+    }
+
+    impl Engine for RatioStreamer {
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+        fn name(&self) -> String {
+            "ratio".into()
+        }
+        fn next_phase(&mut self, _mem: &mut HbmMemory) -> Option<Phase> {
+            if self.emitted {
+                return None;
+            }
+            self.emitted = true;
+            Some(
+                Phase::new("scan", self.total)
+                    .with_flow(Flow::new(0, self.addr, 256 * MIB), 1.0)
+                    .with_flow(Flow::new(1, self.addr, 64 * MIB), self.ratio),
+            )
+        }
+    }
+
+    #[test]
+    fn hbm_bytes_are_exact_across_many_events() {
+        // One long fractional-egress phase sliced by 40 short co-runner
+        // phases on the same segment: 40+ events inside the long phase.
+        // The moved-bytes total must still be *exact* — the old per-event
+        // `(adv * per_unit) as u64` truncation lost up to a byte per
+        // event.
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let mut mem = HbmMemory::new();
+        let total = 64 * MIB + 7; // odd size: fractional per-event slices
+        let ratio = 0.3303;
+        let mut engines: Vec<Box<dyn Engine>> = vec![Box::new(RatioStreamer {
+            addr: 0,
+            total,
+            ratio,
+            emitted: false,
+        })];
+        // left = 1..=40: the fleet thins out over 40 staggered waves, so
+        // the long phase advances in 40+ unequal slices.
+        for i in 0..40u32 {
+            engines.push(Box::new(TickEngine { left: i + 1 }));
+        }
+        struct TickEngine {
+            left: u32,
+        }
+        impl Engine for TickEngine {
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+            fn name(&self) -> String {
+                "tick".into()
+            }
+            fn next_phase(&mut self, _m: &mut HbmMemory) -> Option<Phase> {
+                if self.left == 0 {
+                    return None;
+                }
+                self.left -= 1;
+                Some(Phase::new("tick", MIB).with_flow(Flow::new(0, 0, MIB), 1.0))
+            }
+        }
+        let r = run(&cfg, &mut mem, &mut engines);
+        let want = (total as f64 * (1.0 + ratio)).round() as u64;
+        assert_eq!(
+            r.engines[0].hbm_bytes, want,
+            "phase totals must be rounded once, not truncated per event"
+        );
+        for (i, tick) in r.engines[1..].iter().enumerate() {
+            assert_eq!(tick.hbm_bytes, (i as u64 + 1) * MIB, "tick engine {i}");
+        }
+    }
+
+    #[test]
+    fn late_joining_engine_overlaps_and_finishes_later() {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let mut mem = HbmMemory::new();
+        let total = 256 * MIB;
+        let mut session = SimSession::new(cfg.clone());
+        // First engine runs alone on its own segment...
+        let (a, _) = session.add_engine(streamer(0, total, f64::INFINITY), &mut mem);
+        let solo = total as f64 / cfg.port_effective();
+        let events = session.advance(&mut mem);
+        assert_eq!(events, vec![SimEvent::EngineDone { member: a }]);
+        assert!((session.now() / solo - 1.0).abs() < 1e-9);
+        // ...a second joins *after* the first finished, on a separate
+        // segment: it must take exactly the solo time again, finishing at
+        // 2× solo on the session clock.
+        let (b, _) =
+            session.add_engine(streamer(256 * MIB, total, f64::INFINITY), &mut mem);
+        let events = session.advance(&mut mem);
+        assert_eq!(events, vec![SimEvent::EngineDone { member: b }]);
+        assert!((session.now() / (2.0 * solo) - 1.0).abs() < 1e-9);
+        assert!(session.idle());
+        let (_, stats_b) = session.take_engine(b);
+        assert!((stats_b.finish_time / (2.0 * solo) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfers_share_the_link_and_overlap_compute() {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let mut mem = HbmMemory::new();
+        let mut session = SimSession::new(cfg.clone());
+        let bw = 10e9;
+        session.set_link_bandwidth(bw);
+        // Two equal transfers: each sees bw/2 for its whole life, so both
+        // complete together at 2×(bytes/bw).
+        let bytes = 1u64 << 30;
+        let t1 = session.add_transfer(bytes, 0.0);
+        let t2 = session.add_transfer(bytes, 0.0);
+        // A compute engine slow enough (1 GB/s cap) to outlast the
+        // transfer window, overlapping it completely.
+        let (e, _) = session.add_engine(streamer(0, 512 * MIB, 1e9), &mut mem);
+        let events = session.advance(&mut mem);
+        assert!(events.contains(&SimEvent::TransferDone { transfer: t1 }));
+        assert!(events.contains(&SimEvent::TransferDone { transfer: t2 }));
+        let expect = 2.0 * bytes as f64 / bw;
+        assert!(
+            (session.now() / expect - 1.0).abs() < 1e-9,
+            "shared link must halve each transfer: {} vs {expect}",
+            session.now()
+        );
+        // The engine kept running under the transfers: full overlap.
+        assert!(session.overlap_seconds() > 0.0);
+        assert!(
+            (session.overlap_seconds() / session.link_busy_seconds() - 1.0).abs()
+                < 1e-9,
+            "compute covered the whole transfer window"
+        );
+        let events = session.advance(&mut mem);
+        assert_eq!(events, vec![SimEvent::EngineDone { member: e }]);
+        assert!(session.idle());
+    }
+
+    #[test]
+    fn transfer_latency_burns_before_bytes() {
+        let cfg = HbmConfig::default();
+        let mut mem = HbmMemory::new();
+        let mut session = SimSession::new(cfg);
+        session.set_link_bandwidth(1e9);
+        let t = session.add_transfer(1_000_000, 2e-6);
+        let events = session.advance(&mut mem);
+        assert_eq!(events, vec![SimEvent::TransferDone { transfer: t }]);
+        let expect = 2e-6 + 1e-3;
+        assert!((session.now() - expect).abs() < 1e-12);
+        // Zero-byte transfers still cost the latency.
+        let t2 = session.add_transfer(0, 2e-6);
+        let events = session.advance(&mut mem);
+        assert_eq!(events, vec![SimEvent::TransferDone { transfer: t2 }]);
+        assert!((session.now() - (expect + 2e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_matches_one_shot_run_exactly() {
+        // Driving the same engine set through a session by hand must
+        // reproduce run()'s makespan bit-for-bit (same event sequence).
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let total = 192 * MIB;
+        let build = |n: usize| -> Vec<Box<dyn Engine>> {
+            (0..n).map(|i| streamer(i as u64 * 128 * MIB, total, f64::INFINITY)).collect()
+        };
+        let mut mem = HbmMemory::new();
+        let report = run_serial(&cfg, &mut mem, &mut build(3));
+        let mut mem2 = HbmMemory::new();
+        let mut session = SimSession::new(cfg);
+        let mut engines = build(3);
+        for engine in engines.drain(..) {
+            session.add_engine(engine, &mut mem2);
+        }
+        while !session.idle() {
+            session.advance(&mut mem2);
+        }
+        assert_eq!(session.now().to_bits(), report.makespan.to_bits());
     }
 }

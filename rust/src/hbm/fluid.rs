@@ -92,26 +92,99 @@ impl Allocation {
     }
 }
 
+/// Reusable working memory for [`solve_in`]. The event-driven simulator
+/// calls the solver once per event; with a long-lived scratch (and
+/// caller-cached segment weights) a solve performs **zero** heap
+/// allocation, instead of reallocating every per-flow and per-segment
+/// vector on every freeze iteration of every event.
+#[derive(Debug, Default)]
+pub struct SolveScratch {
+    /// Per-flow allocated rates of the last [`solve_in`] call, aligned
+    /// with its flow order — the solver's output lives here so the caller
+    /// can read it without a fresh allocation.
+    pub rates: Vec<f64>,
+    caps: Vec<f64>,
+    fweight: Vec<f64>,
+    frozen: Vec<bool>,
+    seg_used: Vec<f64>,
+    seg_active: Vec<f64>,
+    saturated: Vec<bool>,
+}
+
+impl SolveScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every buffer for `n` flows, reusing capacity.
+    fn reset(&mut self, n: usize) {
+        self.rates.clear();
+        self.rates.resize(n, 0.0);
+        self.caps.clear();
+        self.fweight.clear();
+        self.frozen.clear();
+        self.frozen.resize(n, false);
+        self.seg_used.clear();
+        self.seg_used.resize(NUM_SEGMENTS, 0.0);
+        self.seg_active.clear();
+        self.seg_active.resize(NUM_SEGMENTS, 0.0);
+        self.saturated.clear();
+        self.saturated.resize(NUM_SEGMENTS, false);
+    }
+}
+
 /// Compute the max-min fair allocation for `flows` under `cfg`.
 pub fn solve(cfg: &HbmConfig, flows: &[Flow]) -> Allocation {
+    let mut flat: Vec<(usize, f64)> = Vec::new();
+    let mut spans: Vec<(usize, usize)> = Vec::with_capacity(flows.len());
+    for f in flows {
+        let w = f.segment_weights();
+        spans.push((flat.len(), w.len()));
+        flat.extend_from_slice(&w);
+    }
+    let mut scratch = SolveScratch::new();
+    solve_in(cfg, flows, &spans, &flat, &mut scratch);
+    Allocation { rates: std::mem::take(&mut scratch.rates) }
+}
+
+/// [`solve`] with caller-provided per-flow segment weights (cache them —
+/// they depend only on each flow's `addr`/`len`) and reusable scratch
+/// buffers. `spans[i] = (start, len)` indexes flow *i*'s weights inside
+/// the flattened `flat` table, so a caller can rebuild the table per
+/// event by copying cached per-phase weights — no per-flow `Vec`s.
+/// Produces the identical allocation to [`solve`] (the property suite
+/// pins this); the rates land in `scratch.rates`, aligned with `flows`.
+/// Zero heap allocation per call once the scratch has grown to the
+/// working set.
+pub fn solve_in(
+    cfg: &HbmConfig,
+    flows: &[Flow],
+    spans: &[(usize, usize)],
+    flat: &[(usize, f64)],
+    scratch: &mut SolveScratch,
+) {
     let n = flows.len();
-    let mut rates = vec![0.0f64; n];
+    assert_eq!(spans.len(), n, "one weight span per flow");
+    scratch.reset(n);
     if n == 0 {
-        return Allocation { rates };
+        return;
     }
 
     let port_cap = cfg.port_effective();
     let seg_cap = cfg.segment_capacity().min(cfg.dram_pc_capacity());
 
-    // Per-flow caps and segment weight lists.
-    let caps: Vec<f64> = flows.iter().map(|f| f.rate_cap.min(port_cap)).collect();
-    let weights: Vec<Vec<(usize, f64)>> =
-        flows.iter().map(|f| f.segment_weights()).collect();
-
-    let fweight: Vec<f64> = flows.iter().map(|f| f.weight).collect();
-    let mut frozen = vec![false; n];
-    // Remaining capacity per segment after frozen flows are subtracted.
-    let mut seg_used = vec![0.0f64; NUM_SEGMENTS];
+    // Per-flow caps and fairness weights.
+    for f in flows {
+        scratch.caps.push(f.rate_cap.min(port_cap));
+        scratch.fweight.push(f.weight);
+    }
+    let caps = &scratch.caps;
+    let fweight = &scratch.fweight;
+    let frozen = &mut scratch.frozen;
+    let seg_used = &mut scratch.seg_used;
+    let seg_active = &mut scratch.seg_active;
+    let saturated = &mut scratch.saturated;
+    let rates = &mut scratch.rates;
 
     // Progressive filling under *weighted* max-min fairness: all unfrozen
     // flows share a common level L, flow i's rate being weight_i × L.
@@ -119,14 +192,16 @@ pub fn solve(cfg: &HbmConfig, flows: &[Flow]) -> Allocation {
     // n times.
     loop {
         // Active weighted demand per segment from unfrozen flows.
-        let mut seg_active = vec![0.0f64; NUM_SEGMENTS];
+        for a in seg_active.iter_mut() {
+            *a = 0.0;
+        }
         let mut any_active = false;
-        for (i, w) in weights.iter().enumerate() {
+        for (i, &(start, len)) in spans.iter().enumerate() {
             if frozen[i] {
                 continue;
             }
             any_active = true;
-            for &(s, wt) in w {
+            for &(s, wt) in &flat[start..start + len] {
                 seg_active[s] += wt * fweight[i];
             }
         }
@@ -154,27 +229,26 @@ pub fn solve(cfg: &HbmConfig, flows: &[Flow]) -> Allocation {
         // Freeze every flow that is binding at this level: those whose cap
         // equals the level, and those touching a segment that just
         // saturated.
-        let mut saturated = vec![false; NUM_SEGMENTS];
         for s in 0..NUM_SEGMENTS {
-            if seg_active[s] > 1e-12 {
+            saturated[s] = seg_active[s] > 1e-12 && {
                 let headroom = (seg_cap - seg_used[s]).max(0.0);
-                if headroom - level * seg_active[s] < 1e-3 {
-                    saturated[s] = true;
-                }
-            }
+                headroom - level * seg_active[s] < 1e-3
+            };
         }
         let mut froze_any = false;
         for i in 0..n {
             if frozen[i] {
                 continue;
             }
+            let (start, len) = spans[i];
+            let w = &flat[start..start + len];
             let cap_bound = caps[i] / fweight[i] <= level * (1.0 + 1e-12);
-            let seg_bound = weights[i].iter().any(|&(s, _)| saturated[s]);
+            let seg_bound = w.iter().any(|&(s, _)| saturated[s]);
             if cap_bound || seg_bound {
                 rates[i] = (level * fweight[i]).min(caps[i]);
                 frozen[i] = true;
                 froze_any = true;
-                for &(s, wt) in &weights[i] {
+                for &(s, wt) in w {
                     seg_used[s] += rates[i] * wt;
                 }
             }
@@ -184,17 +258,16 @@ pub fn solve(cfg: &HbmConfig, flows: &[Flow]) -> Allocation {
         if !froze_any {
             for i in 0..n {
                 if !frozen[i] {
+                    let (start, len) = spans[i];
                     rates[i] = (level * fweight[i]).min(caps[i]);
                     frozen[i] = true;
-                    for &(s, wt) in &weights[i] {
+                    for &(s, wt) in &flat[start..start + len] {
                         seg_used[s] += rates[i] * wt;
                     }
                 }
             }
         }
     }
-
-    Allocation { rates }
 }
 
 #[cfg(test)]
@@ -338,6 +411,26 @@ mod tests {
                 })
                 .collect();
             let alloc = solve(&cfg, &flows);
+            // The scratch-buffer entry point must produce the *identical*
+            // allocation (the event loop trades on this: cached weights +
+            // reused buffers change no rate by even one bit).
+            let mut flat: Vec<(usize, f64)> = Vec::new();
+            let mut spans: Vec<(usize, usize)> = Vec::new();
+            for f in &flows {
+                let w = f.segment_weights();
+                spans.push((flat.len(), w.len()));
+                flat.extend_from_slice(&w);
+            }
+            let mut scratch = SolveScratch::new();
+            solve_in(&cfg, &flows, &spans, &flat, &mut scratch);
+            let identical = scratch
+                .rates
+                .iter()
+                .zip(&alloc.rates)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            if !identical {
+                return false;
+            }
             // Rates non-negative and within caps.
             let caps_ok = flows.iter().zip(&alloc.rates).all(|(f, &r)| {
                 r >= -1e-6 && r <= f.rate_cap.min(cfg.port_effective()) + 1.0

@@ -14,7 +14,7 @@ pub mod shim;
 pub mod traffic;
 
 pub use config::{FabricClock, HbmConfig};
-pub use fluid::{solve, Allocation, Flow};
+pub use fluid::{solve, solve_in, Allocation, Flow, SolveScratch};
 pub use memory::{HbmMemory, HbmView, MemBytes};
 pub use shim::{Shim, ShimBuffer};
 pub use traffic::{fig2_sweep, run_bandwidth, TrafficGen, TrafficOp};

@@ -250,6 +250,17 @@ impl Shim {
     pub fn reset(&mut self) {
         self.next_free = [0; LOGICAL_PORTS];
     }
+
+    /// Reset one port's bump allocator — how the continuous scheduler
+    /// recycles a freed engine slot's home window for the next job
+    /// without disturbing ports whose jobs are still in flight. A repeat
+    /// job granted the same ports therefore re-derives the same
+    /// placement addresses, which is what keeps the physically-resident
+    /// fast path live across jobs.
+    pub fn reset_port(&mut self, port: usize) {
+        assert!(port < LOGICAL_PORTS);
+        self.next_free[port] = 0;
+    }
 }
 
 #[cfg(test)]

@@ -14,8 +14,10 @@
 //!
 //! * **L3 (this crate)** — the card and its coordination: the HBM
 //!   subsystem simulator ([`hbm`]), scale-out compute engines and their
-//!   event-driven fluid simulation ([`engines`]), the multi-query
-//!   scheduler that owns the card — engine-slot allocation policies,
+//!   event-driven fluid simulation with a persistent card timeline that
+//!   engines and host-link transfers join mid-flight ([`engines`]), the
+//!   continuous multi-query scheduler that owns the card — incremental
+//!   engine-slot admission policies, compute/transfer overlap,
 //!   dependency-gated job DAGs, the HBM-resident column cache with
 //!   pinned transient intermediates, per-job statistics and the
 //!   `hbmctl serve` replay harness ([`coordinator`]) — CPU↔FPGA

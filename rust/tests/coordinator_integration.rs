@@ -197,16 +197,26 @@ fn fifo_serializes_while_fair_share_co_runs() {
         starts.dedup();
         starts.len()
     };
-    // FIFO: one job per round, so 64 rounds with strictly increasing
-    // start times. Fair-share retires up to 4 per round → far fewer
-    // rounds, and co-runners share a start time.
+    // FIFO: one job on the card at a time, so every job is admitted at
+    // its own completion event — 64 strictly increasing start times.
     assert_eq!(distinct_starts(&fifo.stats.records), 64);
+    // Fair-share genuinely co-runs: at some instant ≥ 2 jobs hold engine
+    // slots simultaneously (overlapping [start, finish] windows), and
+    // queue waits collapse relative to FIFO's serial card.
+    let fair_overlaps = fair.stats.records.iter().enumerate().any(|(i, a)| {
+        fair.stats.records.iter().skip(i + 1).any(|b| {
+            a.start_time < b.finish_time && b.start_time < a.finish_time
+        })
+    });
+    assert!(fair_overlaps, "fair-share must co-schedule jobs");
     assert!(
-        distinct_starts(&fair.stats.records) <= 64 / 3,
-        "fair-share must co-schedule jobs: {} rounds",
-        distinct_starts(&fair.stats.records)
+        fair.stats.mean_queue_wait() < fifo.stats.mean_queue_wait(),
+        "co-running must cut queue wait: fair {} vs fifo {}",
+        fair.stats.mean_queue_wait(),
+        fifo.stats.mean_queue_wait()
     );
-    // Under FIFO every job after the first queues behind a full round.
+    // Under FIFO every job after the first queues behind the whole job
+    // ahead of it.
     assert!(fifo.stats.mean_queue_wait() > 0.0);
     // Both policies retire the whole workload.
     assert_eq!(fifo.stats.completed(), 64);
