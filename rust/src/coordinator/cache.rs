@@ -64,6 +64,14 @@ impl CacheStats {
             self.hits as f64 / self.accesses() as f64
         }
     }
+
+    /// Host→HBM copy-in bytes the cache saved: every hit on a resident
+    /// column skips its transfer entirely, so this is the sum of the hit
+    /// columns' sizes. Reported per policy by `hbmctl serve` and in
+    /// `BENCH_coordinator.json`.
+    pub fn bytes_avoided(&self) -> u64 {
+        self.hit_bytes
+    }
 }
 
 #[derive(Debug, Clone)]

@@ -75,6 +75,6 @@ pub use scheduler::{
     intermediate_key, Coordinator, CoordinatorError, CoordinatorStats, StatsView,
 };
 pub use serve::{
-    bench_json, mixed_workload, render_outcomes, run_policy, PolicyOutcome,
-    ServeSpec,
+    bench_json, mixed_workload, render_outcomes, run_policy, run_traced,
+    run_traced_jobs, PolicyOutcome, ServeSpec,
 };

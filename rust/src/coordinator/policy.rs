@@ -26,6 +26,19 @@
 //!
 //! [`plan_round`] remains the historical round-barrier planner, used by
 //! the coordinator's `set_round_barrier(true)` measurement baseline.
+//!
+//! # Traced admission decisions
+//!
+//! When the coordinator's tracer is on (`set_tracing(true)`), every
+//! admission decision a policy makes is witnessed in the event stream:
+//! each planned grant becomes a [`crate::trace::Event::Admitted`] carrying
+//! the policy name, the job, and the exact ports granted, and every ready
+//! job the policy *passed over* in a decision that admitted at least one
+//! other job becomes a [`crate::trace::Event::Skipped`]. Round-barrier
+//! decisions additionally carry their round index, so a trace can be cut
+//! per round. This makes policy behaviour auditable after the fact —
+//! "why did the 3-pass join wait two rounds under fifo?" is answered by
+//! the Skipped events, not by re-running the scheduler.
 
 use crate::hbm::shim::ENGINE_PORTS;
 

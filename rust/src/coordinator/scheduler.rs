@@ -55,7 +55,7 @@ use crate::engines::{sim, Engine};
 use crate::hbm::shim::{Shim, ENGINE_PORTS, PORT_HOME_BYTES, STACK_OFFSET};
 use crate::hbm::{HbmConfig, HbmMemory};
 use crate::interconnect::opencapi::OpenCapiLink;
-use crate::util::stats::percentile_nearest_rank;
+use crate::trace::{Dir, Event, Histogram, StageKind, StageSpan, Tracer, TransferSpan};
 
 /// A queued job plus its in-flight progress.
 struct Pending {
@@ -77,6 +77,9 @@ struct Pending {
     /// Keys pinned at submission because this job depends on them;
     /// released once the job's copy-in is accounted.
     pinned_keys: Vec<ColumnKey>,
+    /// Card time at which the job last entered `Waiting` (submission, or
+    /// an SGD batch boundary) — the start of its next Waiting trace span.
+    waiting_since: f64,
     /// Where the job is on the continuous timeline (always `Waiting`
     /// under the round-barrier baseline, which tracks progress per
     /// round instead).
@@ -91,7 +94,7 @@ enum Stage {
     /// Admitted: cold input bytes in flight on the shared link; the
     /// granted ports are reserved so the engines can start the moment the
     /// transfer lands.
-    CopyIn { transfer: usize, started: f64, ports: Vec<usize> },
+    CopyIn { transfer: usize, started: f64, ports: Vec<usize>, bytes: u64 },
     /// Engines joined the session on the granted ports.
     Running {
         members: Vec<usize>,
@@ -104,7 +107,7 @@ enum Stage {
         remaining: usize,
     },
     /// Results in flight back to the host; ports already freed.
-    CopyOut { transfer: usize, started: f64, output: JobOutput },
+    CopyOut { transfer: usize, started: f64, output: JobOutput, bytes: u64 },
 }
 
 /// Per-kind handles the round keeps between building engines and
@@ -317,14 +320,12 @@ impl StatsView<'_> {
     /// Latency percentile by the standard nearest-rank (ceil-rank)
     /// estimator: interpolation between order statistics biases the tail
     /// low on small samples (p99 of 10 jobs must be the slowest job, not
-    /// a blend of the two slowest).
+    /// a blend of the two slowest). Routed through the shared
+    /// [`Histogram`] so the serve harness and the trace metrics report
+    /// tails from one code path (the kernel stays
+    /// `util::stats::percentile_nearest_rank`).
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        let l = self.latencies();
-        if l.is_empty() {
-            0.0
-        } else {
-            percentile_nearest_rank(&l, p)
-        }
+        Histogram::from_samples(&self.latencies()).percentile(p)
     }
 
     pub fn mean_queue_wait(&self) -> f64 {
@@ -403,6 +404,11 @@ pub struct Coordinator {
     /// Link-busy seconds contributed by round-barrier copy phases (the
     /// continuous mode's share lives in the session's counters).
     link_busy_barrier: f64,
+    /// Card-clock event recorder (off by default — see [`crate::trace`]).
+    tracer: Tracer,
+    /// Lock-step rounds executed so far; tags barrier-mode trace spans
+    /// with their round index.
+    barrier_rounds: u64,
 }
 
 impl Coordinator {
@@ -436,6 +442,8 @@ impl Coordinator {
             round_barrier: false,
             engine_busy_port_seconds: 0.0,
             link_busy_barrier: 0.0,
+            tracer: Tracer::disabled(),
+            barrier_rounds: 0,
         }
     }
 
@@ -483,6 +491,30 @@ impl Coordinator {
     /// bit-identical either way; only host wall-clock changes.
     pub fn set_parallel_functional(&mut self, on: bool) {
         self.parallel_functional = on;
+    }
+
+    /// Toggle card-clock event tracing (off by default; see
+    /// [`crate::trace`] for the event taxonomy and the zero-overhead
+    /// contract). Enable **before** submitting work: the
+    /// [`validate`](crate::trace::validate) pass rejects streams whose
+    /// completed jobs predate the recording.
+    pub fn set_tracing(&mut self, on: bool) {
+        self.tracer.set_enabled(on);
+    }
+
+    /// Whether trace events are currently recorded.
+    pub fn tracing(&self) -> bool {
+        self.tracer.is_enabled()
+    }
+
+    /// The trace stream recorded so far, in emission order.
+    pub fn trace_events(&self) -> &[Event] {
+        self.tracer.events()
+    }
+
+    /// Drain the recorded trace stream (recording continues if enabled).
+    pub fn take_trace(&mut self) -> Vec<Event> {
+        self.tracer.take()
     }
 
     pub fn set_policy(&mut self, policy: Policy) {
@@ -603,6 +635,18 @@ impl Coordinator {
             submit_time: self.clock,
             ..JobRecord::default()
         };
+        let t_submit = self.clock;
+        let (client, kind_name) = (spec.client, spec.kind.name());
+        self.tracer.record(|| Event::Submitted {
+            t: t_submit,
+            job: id,
+            client,
+            kind: kind_name,
+        });
+        for key in &pinned_keys {
+            self.tracer
+                .record(|| Event::CachePin { t: t_submit, key: key.to_string() });
+        }
         let mut pending = Pending {
             id,
             spec,
@@ -613,6 +657,7 @@ impl Coordinator {
             unresolved: parents.into_iter().collect(),
             deferred_copy_bytes: 0,
             pinned_keys,
+            waiting_since: t_submit,
             stage: Stage::Waiting,
         };
         // Deps that reference no parent jobs (pure column/gather
@@ -691,7 +736,8 @@ impl Coordinator {
                 let stalled: Vec<usize> = self.queue.iter().map(|p| p.id).collect();
                 return Err(CoordinatorError::DependencyStall { stalled });
             }
-            let events = self.session.advance(&mut self.mem);
+            let events =
+                self.session.advance_traced(&mut self.mem, &mut self.tracer);
             self.clock = self.session.now();
             for event in events {
                 match event {
@@ -715,11 +761,16 @@ impl Coordinator {
         let ids: Vec<usize> = finished.iter().map(|(id, _)| *id).collect();
         // Publish before abandonment can discard an output a child still
         // needs.
+        let t_now = self.clock;
         for (id, output) in &finished {
             if let Some(&refs) = self.dependent_refs.get(id) {
                 self.cache
                     .insert_pinned(&intermediate_key(*id), output.byte_size(), refs);
                 self.dep_outputs.insert(*id, output.clone());
+                self.tracer.record(|| Event::CachePin {
+                    t: t_now,
+                    key: intermediate_key(*id).to_string(),
+                });
             }
         }
         self.resolve_ready_children(&ids);
@@ -757,6 +808,26 @@ impl Coordinator {
         let views: Vec<QueuedJob> =
             ready.iter().map(|&i| queued_view(&self.queue[i])).collect();
         let admissions = plan_admission(self.policy, &views, &free, in_flight);
+        // Trace the jobs this decision passed over — only at decisions
+        // that admitted something, so a job waiting across many events is
+        // not re-reported at every one.
+        if !admissions.is_empty() && self.tracer.is_enabled() {
+            let now = self.session.now();
+            let policy_name = self.policy.name();
+            let admitted: BTreeSet<usize> =
+                admissions.iter().map(|a| a.queue_idx).collect();
+            for (vi, &qi) in ready.iter().enumerate() {
+                if !admitted.contains(&vi) {
+                    let job_id = self.queue[qi].id;
+                    self.tracer.record(|| Event::Skipped {
+                        t: now,
+                        job: job_id,
+                        policy: policy_name,
+                        barrier_round: None,
+                    });
+                }
+            }
+        }
         for adm in admissions {
             self.admit_job(ready[adm.queue_idx], adm.ports);
         }
@@ -771,9 +842,35 @@ impl Coordinator {
             let was_free = self.free_ports.remove(p);
             debug_assert!(was_free, "admitted port {p} must be free");
         }
+        let policy_name = self.policy.name();
         let mut copy_bytes = 0u64;
         {
             let pending = &mut self.queue[qi];
+            let (job_id, client, kind_name) =
+                (pending.id, pending.spec.client, pending.spec.kind.name());
+            let waiting_since = pending.waiting_since;
+            // The Waiting span closes at this admission; the decision
+            // itself is an instant.
+            self.tracer.record(|| {
+                Event::Stage(StageSpan {
+                    job: job_id,
+                    client,
+                    kind: kind_name,
+                    policy: policy_name,
+                    stage: StageKind::Waiting,
+                    start: waiting_since,
+                    end: now,
+                    ports: Vec::new(),
+                    barrier_round: None,
+                })
+            });
+            self.tracer.record(|| Event::Admitted {
+                t: now,
+                job: job_id,
+                policy: policy_name,
+                ports: ports.clone(),
+                barrier_round: None,
+            });
             if !pending.started {
                 pending.started = true;
                 pending.record.start_time = now;
@@ -786,12 +883,21 @@ impl Coordinator {
                     }
                     match &input.key {
                         Some(key) => {
-                            if self.cache.access(key, input.bytes) {
+                            let hit = self.cache.access(key, input.bytes);
+                            if hit {
                                 pending.record.cache_hits += 1;
                             } else {
                                 pending.record.cache_misses += 1;
                                 copy_bytes += input.bytes;
                             }
+                            let bytes = input.bytes;
+                            self.tracer.record(|| Event::CacheAccess {
+                                t: now,
+                                job: job_id,
+                                key: key.to_string(),
+                                bytes,
+                                hit,
+                            });
                         }
                         None => copy_bytes += input.bytes,
                     }
@@ -803,6 +909,10 @@ impl Coordinator {
                 // placed (or re-validated) for it; release the promises.
                 for key in pending.pinned_keys.drain(..) {
                     self.cache.unpin(&key);
+                    self.tracer.record(|| Event::CacheUnpin {
+                        t: now,
+                        key: key.to_string(),
+                    });
                 }
             }
         }
@@ -811,10 +921,13 @@ impl Coordinator {
         // covered (both stacks of the shim stripe).
         for key in self.cache.drain_evicted() {
             release_key_spans(&mut self.layout, &mut self.mem, &key);
+            self.tracer
+                .record(|| Event::CacheEvict { t: now, key: key.to_string() });
         }
         if copy_bytes > 0 {
             let transfer = self.session.add_transfer(copy_bytes, self.link.latency);
-            self.queue[qi].stage = Stage::CopyIn { transfer, started: now, ports };
+            self.queue[qi].stage =
+                Stage::CopyIn { transfer, started: now, ports, bytes: copy_bytes };
         } else {
             // Fully resident (or dependency-fed): engines start now.
             self.dispatch_engines(qi, ports);
@@ -861,6 +974,24 @@ impl Coordinator {
             members.push(member);
             if active {
                 remaining += 1;
+            }
+        }
+        if self.tracer.is_enabled() {
+            // Bind each session member to its engine's home port so the
+            // fluid-solver bandwidth samples it emits can be attributed
+            // to a port track (member ids are recycled across jobs).
+            let (job_id, ppe) = {
+                let p = &self.queue[qi];
+                (p.id, p.spec.kind.ports_per_engine())
+            };
+            for (e, &member) in members.iter().enumerate() {
+                let port = ports[e * ppe];
+                self.tracer.record(|| Event::MemberBound {
+                    t: now,
+                    member,
+                    job: job_id,
+                    port,
+                });
             }
         }
         self.host_write_bytes += written;
@@ -921,12 +1052,32 @@ impl Coordinator {
             unreachable!("finish_batch on a non-running job");
         };
         let exec = now - started;
+        {
+            let pending = &self.queue[qi];
+            let (job_id, client, kind_name) =
+                (pending.id, pending.spec.client, pending.spec.kind.name());
+            let policy_name = self.policy.name();
+            self.tracer.record(|| {
+                Event::Stage(StageSpan {
+                    job: job_id,
+                    client,
+                    kind: kind_name,
+                    policy: policy_name,
+                    stage: StageKind::Running,
+                    start: started,
+                    end: now,
+                    ports: ports.clone(),
+                    barrier_round: None,
+                })
+            });
+        }
         let mut engines: Vec<Box<dyn Engine>> = Vec::with_capacity(members.len());
         let mut job_hbm = 0u64;
         for &m in &members {
             let (engine, stats) = self.session.take_engine(m);
             job_hbm += stats.hbm_bytes;
             engines.push(engine);
+            self.tracer.record(|| Event::MemberFreed { t: now, member: m });
         }
         let outcome = collect_outcome(
             &self.cfg,
@@ -953,10 +1104,16 @@ impl Coordinator {
                 // at this same event time, with its dataset resident and
                 // its copy-in long since charged.
                 pending.sgd_models.extend(models);
+                pending.waiting_since = now;
             }
             RoundOutcome::Complete { output, out_bytes } => {
                 let transfer = self.session.add_transfer(out_bytes, self.link.latency);
-                pending.stage = Stage::CopyOut { transfer, started: now, output };
+                pending.stage = Stage::CopyOut {
+                    transfer,
+                    started: now,
+                    output,
+                    bytes: out_bytes,
+                };
             }
         }
     }
@@ -978,12 +1135,63 @@ impl Coordinator {
         }) else {
             return;
         };
+        let policy_name = self.policy.name();
+        let (job_id, client, kind_name) = {
+            let p = &self.queue[qi];
+            (p.id, p.spec.client, p.spec.kind.name())
+        };
         match std::mem::replace(&mut self.queue[qi].stage, Stage::Waiting) {
-            Stage::CopyIn { started, ports, .. } => {
+            Stage::CopyIn { started, ports, bytes, .. } => {
                 self.queue[qi].record.copy_in += now - started;
+                self.tracer.record(|| {
+                    Event::Stage(StageSpan {
+                        job: job_id,
+                        client,
+                        kind: kind_name,
+                        policy: policy_name,
+                        stage: StageKind::CopyIn,
+                        start: started,
+                        end: now,
+                        ports: Vec::new(),
+                        barrier_round: None,
+                    })
+                });
+                self.tracer.record(|| {
+                    Event::Transfer(TransferSpan {
+                        job: job_id,
+                        dir: Dir::In,
+                        bytes,
+                        start: started,
+                        end: now,
+                        barrier_round: None,
+                    })
+                });
                 self.dispatch_engines(qi, ports);
             }
-            Stage::CopyOut { started, output, .. } => {
+            Stage::CopyOut { started, output, bytes, .. } => {
+                self.tracer.record(|| {
+                    Event::Stage(StageSpan {
+                        job: job_id,
+                        client,
+                        kind: kind_name,
+                        policy: policy_name,
+                        stage: StageKind::CopyOut,
+                        start: started,
+                        end: now,
+                        ports: Vec::new(),
+                        barrier_round: None,
+                    })
+                });
+                self.tracer.record(|| {
+                    Event::Transfer(TransferSpan {
+                        job: job_id,
+                        dir: Dir::Out,
+                        bytes,
+                        start: started,
+                        end: now,
+                        barrier_round: None,
+                    })
+                });
                 let pending = &mut self.queue[qi];
                 pending.record.copy_out += now - started;
                 pending.record.finish_time = now;
@@ -1022,10 +1230,21 @@ impl Coordinator {
             // is dropped from HBM after its last consumer.
             for p in parents {
                 let key = intermediate_key(p);
-                if self.cache.access(&key, 0) {
+                let hit = self.cache.access(&key, 0);
+                if hit {
                     pending.record.cache_hits += 1;
                 }
+                let (t_now, job_id) = (self.clock, pending.id);
+                self.tracer.record(|| Event::CacheAccess {
+                    t: t_now,
+                    job: job_id,
+                    key: key.to_string(),
+                    bytes: 0,
+                    hit,
+                });
                 self.cache.unpin(&key);
+                self.tracer
+                    .record(|| Event::CacheUnpin { t: t_now, key: key.to_string() });
                 let remaining = {
                     let refs = self
                         .dependent_refs
@@ -1150,6 +1369,9 @@ impl Coordinator {
     /// baseline); returns the jobs completed in it.
     fn run_round(&mut self) -> Result<Vec<(usize, JobOutput)>, CoordinatorError> {
         let round_start = self.clock;
+        let round = self.barrier_rounds;
+        self.barrier_rounds += 1;
+        let policy_name = self.policy.name();
 
         // 1. Policy decision over the *ready* queue: dependency-gated
         //    jobs are invisible to the policy until their parents
@@ -1171,6 +1393,31 @@ impl Coordinator {
         for adm in &mut admissions {
             adm.queue_idx = ready[adm.queue_idx];
         }
+        if self.tracer.is_enabled() {
+            let admitted: BTreeSet<usize> =
+                admissions.iter().map(|a| a.queue_idx).collect();
+            for &qi in &ready {
+                if !admitted.contains(&qi) {
+                    let job_id = self.queue[qi].id;
+                    self.tracer.record(|| Event::Skipped {
+                        t: round_start,
+                        job: job_id,
+                        policy: policy_name,
+                        barrier_round: Some(round),
+                    });
+                }
+            }
+            for adm in &admissions {
+                let job_id = self.queue[adm.queue_idx].id;
+                self.tracer.record(|| Event::Admitted {
+                    t: round_start,
+                    job: job_id,
+                    policy: policy_name,
+                    ports: adm.ports.clone(),
+                    barrier_round: Some(round),
+                });
+            }
+        }
 
         // 2. Copy-in accounting (shared link) + cache lookups. Zero-byte
         //    inputs (dependency-fed slots: their columns are already on
@@ -1183,18 +1430,28 @@ impl Coordinator {
                 continue;
             }
             pending.copied_in = true;
+            let job_id = pending.id;
             for input in &pending.spec.inputs {
                 if input.bytes == 0 {
                     continue;
                 }
                 match &input.key {
                     Some(key) => {
-                        if self.cache.access(key, input.bytes) {
+                        let hit = self.cache.access(key, input.bytes);
+                        if hit {
                             pending.record.cache_hits += 1;
                         } else {
                             pending.record.cache_misses += 1;
                             copy_bytes[ai] += input.bytes;
                         }
+                        let bytes = input.bytes;
+                        self.tracer.record(|| Event::CacheAccess {
+                            t: round_start,
+                            job: job_id,
+                            key: key.to_string(),
+                            bytes,
+                            hit,
+                        });
                     }
                     None => copy_bytes[ai] += input.bytes,
                 }
@@ -1206,6 +1463,10 @@ impl Coordinator {
             // (or re-validated) for it; release the promises.
             for key in pending.pinned_keys.drain(..) {
                 self.cache.unpin(&key);
+                self.tracer.record(|| Event::CacheUnpin {
+                    t: round_start,
+                    key: key.to_string(),
+                });
             }
         }
         let n_copying = copy_bytes.iter().filter(|&&b| b > 0).count();
@@ -1220,6 +1481,10 @@ impl Coordinator {
         //     spans fully covered (both stacks of the shim stripe).
         for key in self.cache.drain_evicted() {
             release_key_spans(&mut self.layout, &mut self.mem, &key);
+            self.tracer.record(|| Event::CacheEvict {
+                t: round_start,
+                key: key.to_string(),
+            });
         }
 
         // 3. Build every admitted job's engines on its granted ports and
@@ -1311,9 +1576,61 @@ impl Coordinator {
             pending.record.hbm_bytes += job_hbm;
             self.hbm_bytes += job_hbm;
 
+            // Synthesize this job's round spans from the analytic phase
+            // timings (Waiting closes at the round start; Running sits
+            // after the batch-wide copy-in phase). All tagged with the
+            // round index — the validator recomputes barrier link-busy
+            // per round from phase maxima, not interval unions.
+            let (job_id, client, kind_name) =
+                (pending.id, pending.spec.client, pending.spec.kind.name());
+            let waiting_since = pending.waiting_since;
+            let span = |stage: StageKind, start: f64, end: f64, ports: Vec<usize>| {
+                Event::Stage(StageSpan {
+                    job: job_id,
+                    client,
+                    kind: kind_name,
+                    policy: policy_name,
+                    stage,
+                    start,
+                    end,
+                    ports,
+                    barrier_round: Some(round),
+                })
+            };
+            self.tracer.record(|| {
+                span(StageKind::Waiting, waiting_since, round_start, Vec::new())
+            });
+            if copy_bytes[ai] > 0 {
+                let (b, ci) = (copy_bytes[ai], copy_in[ai]);
+                self.tracer.record(|| {
+                    span(StageKind::CopyIn, round_start, round_start + ci, Vec::new())
+                });
+                self.tracer.record(|| {
+                    Event::Transfer(TransferSpan {
+                        job: job_id,
+                        dir: Dir::In,
+                        bytes: b,
+                        start: round_start,
+                        end: round_start + ci,
+                        barrier_round: Some(round),
+                    })
+                });
+            }
+            let run_start = round_start + copy_in_phase;
+            let run_end = run_start + finish_in_sim;
+            self.tracer.record(|| {
+                span(
+                    StageKind::Running,
+                    run_start,
+                    run_end,
+                    admissions[ai].ports.clone(),
+                )
+            });
+
             match outcome {
                 RoundOutcome::SgdPartial { models } => {
                     pending.sgd_models.extend(models);
+                    pending.waiting_since = run_end;
                 }
                 RoundOutcome::Complete { output, out_bytes } => {
                     let copy_out = self.link.transfer_time(out_bytes, n_out);
@@ -1321,6 +1638,19 @@ impl Coordinator {
                     pending.record.copy_out += copy_out;
                     pending.record.finish_time =
                         round_start + copy_in_phase + finish_in_sim + copy_out;
+                    self.tracer.record(|| {
+                        span(StageKind::CopyOut, run_end, run_end + copy_out, Vec::new())
+                    });
+                    self.tracer.record(|| {
+                        Event::Transfer(TransferSpan {
+                            job: job_id,
+                            dir: Dir::Out,
+                            bytes: out_bytes,
+                            start: run_end,
+                            end: run_end + copy_out,
+                            barrier_round: Some(round),
+                        })
+                    });
                     completed_ids.insert(pending.id);
                     self.records.push(pending.record.clone());
                     finished.push((pending.id, output));

@@ -23,6 +23,7 @@ use super::policy::Policy;
 use super::scheduler::{Coordinator, CoordinatorStats};
 use crate::engines::sgd::{GlmTask, SgdHyperParams};
 use crate::hbm::HbmConfig;
+use crate::trace::{Event, Histogram, MetricsRegistry};
 use crate::util::rng::Xoshiro256;
 use crate::util::table::Table;
 
@@ -298,6 +299,42 @@ pub fn run_policy(
     (outputs, PolicyOutcome { policy, stats, barrier })
 }
 
+/// Replay the spec's mixed workload under one policy and mode with the
+/// coordinator's tracer on, returning the full event stream next to the
+/// scheduler's own accounting — the input pair for
+/// [`crate::trace::validate`]. Used by `hbmctl trace` and the trace
+/// invariant property tests.
+pub fn run_traced(
+    cfg: &HbmConfig,
+    policy: Policy,
+    barrier: bool,
+    spec: &ServeSpec,
+) -> (Vec<Event>, CoordinatorStats) {
+    run_traced_jobs(cfg, policy, barrier, spec, mixed_workload(spec))
+}
+
+/// [`run_traced`] over an explicit job list (the property tests generate
+/// their own randomized workloads).
+pub fn run_traced_jobs(
+    cfg: &HbmConfig,
+    policy: Policy,
+    barrier: bool,
+    spec: &ServeSpec,
+    jobs: Vec<JobSpec>,
+) -> (Vec<Event>, CoordinatorStats) {
+    let mut coord = Coordinator::new(cfg.clone())
+        .with_policy(policy)
+        .with_round_barrier(barrier)
+        .with_cache_bytes(spec.cache_bytes);
+    coord.set_tracing(true);
+    for job in jobs {
+        coord.submit(job);
+    }
+    coord.run();
+    let events = coord.take_trace();
+    (events, coord.into_stats())
+}
+
 /// Render the per-policy comparison table: continuous scheduling next to
 /// its round-barrier baseline.
 pub fn render_outcomes(outcomes: &[PolicyOutcome]) -> String {
@@ -317,6 +354,8 @@ pub fn render_outcomes(outcomes: &[PolicyOutcome]) -> String {
             "util%",
             "ovlp%",
             "cache hit%",
+            "hit/miss",
+            "MB saved",
         ],
     );
     for o in outcomes {
@@ -333,6 +372,8 @@ pub fn render_outcomes(outcomes: &[PolicyOutcome]) -> String {
             format!("{:.1}", o.stats.slot_utilization() * 100.0),
             format!("{:.1}", o.stats.overlap_ratio() * 100.0),
             format!("{:.1}", o.cache_hit_rate() * 100.0),
+            format!("{}/{}", o.stats.cache.hits, o.stats.cache.misses),
+            format!("{:.1}", o.stats.cache.bytes_avoided() as f64 / 1e6),
         ]);
     }
     t.render()
@@ -347,10 +388,13 @@ fn json_f(v: f64) -> String {
 }
 
 /// One mode's stat block, shared by the continuous and round-barrier
-/// sections of the JSON report.
+/// sections of the JSON report. Latency tails come from one
+/// [`Histogram`] over the per-job latencies (nearest-rank kernel), built
+/// once instead of re-sorting per percentile.
 fn mode_json(out: &mut String, indent: &str, stats: &CoordinatorStats) {
-    let p50 = stats.latency_percentile(50.0);
-    let p99 = stats.latency_percentile(99.0);
+    let latencies = Histogram::from_samples(&stats.latencies());
+    let p50 = latencies.percentile(50.0);
+    let p99 = latencies.percentile(99.0);
     out.push_str(&format!("{indent}\"jobs\": {},\n", stats.completed()));
     out.push_str(&format!(
         "{indent}\"simulated_seconds\": {},\n",
@@ -380,7 +424,36 @@ fn mode_json(out: &mut String, indent: &str, stats: &CoordinatorStats) {
     ));
     out.push_str(&format!("{indent}\"cache_hits\": {},\n", stats.cache.hits));
     out.push_str(&format!("{indent}\"cache_misses\": {},\n", stats.cache.misses));
+    out.push_str(&format!(
+        "{indent}\"cache_evictions\": {},\n",
+        stats.cache.evictions
+    ));
+    out.push_str(&format!(
+        "{indent}\"cache_bytes_avoided\": {},\n",
+        stats.cache.bytes_avoided()
+    ));
     out.push_str(&format!("{indent}\"hbm_bytes\": {}\n", stats.hbm_bytes));
+}
+
+/// Fold one mode's accounting into a [`MetricsRegistry`] — the snapshot
+/// embedded per policy in `BENCH_coordinator.json`, named with the same
+/// taxonomy [`MetricsRegistry::from_events`] derives from a full trace.
+fn stats_registry(stats: &CoordinatorStats) -> MetricsRegistry {
+    let mut reg = MetricsRegistry::new();
+    reg.inc("jobs_completed", stats.completed() as u64);
+    reg.inc("cache_hits", stats.cache.hits);
+    reg.inc("cache_misses", stats.cache.misses);
+    reg.inc("cache_evictions", stats.cache.evictions);
+    reg.inc("cache_bytes_avoided", stats.cache.bytes_avoided());
+    reg.inc("hbm_bytes", stats.hbm_bytes);
+    reg.inc("host_write_bytes", stats.host_write_bytes);
+    for latency in stats.latencies() {
+        reg.observe("latency_s", latency);
+    }
+    for record in &stats.records {
+        reg.observe("wait_s", record.queue_wait());
+    }
+    reg
 }
 
 /// Machine-readable benchmark report (hand-rolled JSON: the offline crate
@@ -418,6 +491,15 @@ pub fn bench_json(spec: &ServeSpec, outcomes: &[PolicyOutcome]) -> String {
             "      \"cache_hit_rate\": {},\n",
             json_f(o.cache_hit_rate())
         ));
+        out.push_str(&format!("      \"cache_hits\": {},\n", o.stats.cache.hits));
+        out.push_str(&format!(
+            "      \"cache_misses\": {},\n",
+            o.stats.cache.misses
+        ));
+        out.push_str(&format!(
+            "      \"cache_bytes_avoided\": {},\n",
+            o.stats.cache.bytes_avoided()
+        ));
         out.push_str(&format!("      \"hbm_bytes\": {},\n", o.stats.hbm_bytes));
         out.push_str(&format!(
             "      \"speedup_vs_barrier\": {},\n",
@@ -432,7 +514,11 @@ pub fn bench_json(spec: &ServeSpec, outcomes: &[PolicyOutcome]) -> String {
         out.push_str("      },\n");
         out.push_str("      \"round_barrier\": {\n");
         mode_json(&mut out, "        ", &o.barrier);
-        out.push_str("      }\n");
+        out.push_str("      },\n");
+        out.push_str(&format!(
+            "      \"metrics\": {}\n",
+            stats_registry(&o.stats).to_json("      ")
+        ));
         out.push_str(if i + 1 == outcomes.len() { "    }\n" } else { "    },\n" });
     }
     out.push_str("  ]\n}\n");
@@ -528,7 +614,28 @@ mod tests {
         assert!(json.contains("\"slot_utilization\""));
         assert!(json.contains("\"overlap_ratio\""));
         assert!(json.contains("\"speedup_vs_barrier\""));
+        assert!(json.contains("\"cache_bytes_avoided\""));
+        assert!(json.contains("\"cache_evictions\""));
+        assert!(json.contains("\"metrics\""));
+        assert!(json.contains("\"latency_s\""));
         assert!(!json.contains("null"), "tiny run must have finite stats");
+    }
+
+    #[test]
+    fn traced_runs_validate_against_scheduler_accounting() {
+        // The trace must be a faithful second witness: re-deriving the
+        // aggregate accounting from the span stream has to reproduce
+        // CoordinatorStats in both scheduling modes.
+        let spec = tiny_spec();
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        for barrier in [false, true] {
+            let (events, stats) =
+                run_traced(&cfg, Policy::FairShare, barrier, &spec);
+            assert!(!events.is_empty(), "tracing on must record events");
+            let v = crate::trace::validate(&events, stats.view());
+            assert!(v.passed(), "barrier={barrier}: {}", v.summary());
+            assert_eq!(v.jobs_checked, stats.completed());
+        }
     }
 
     #[test]

@@ -687,6 +687,24 @@ impl PipelineReport {
         self.stages.iter().map(|r| r.copy_out).sum()
     }
 
+    /// Per-stage time breakdowns re-derived from a trace stream (enable
+    /// tracing with `FpgaAccelerator::set_tracing` before submitting,
+    /// drain with `FpgaAccelerator::take_trace`). One entry per stage in
+    /// stage order; `None` for a stage with no spans in the stream
+    /// (tracing enabled after it ran). Unlike the [`JobRecord`] phase
+    /// sums, a [`JobBreakdown`](crate::trace::JobBreakdown) also counts
+    /// engine dispatches and waiting time between them — the queueing
+    /// view the flat records cannot express.
+    pub fn stage_breakdowns(
+        &self,
+        events: &[crate::trace::Event],
+    ) -> Vec<Option<crate::trace::JobBreakdown>> {
+        self.stages
+            .iter()
+            .map(|r| crate::trace::job_breakdown(events, r.id))
+            .collect()
+    }
+
     /// End-to-end simulated latency: first submission to last completion
     /// (0 for pipelines with no offload stage).
     pub fn latency(&self) -> f64 {
@@ -1024,6 +1042,44 @@ mod tests {
             Err(PipelineError::EngineCap { .. })
         ));
         assert_eq!(acc.in_flight(), 0, "rejected pipeline must not enqueue");
+    }
+
+    #[test]
+    fn traced_pipeline_exposes_stage_breakdowns() {
+        let cat = catalog();
+        let mut acc = FpgaAccelerator::new(HbmConfig::default());
+        acc.set_tracing(true);
+        let plan = Plan::scan("orders", "okey")
+            .project(
+                Plan::scan("customers", "ckey")
+                    .join(
+                        Plan::scan("orders", "cust")
+                            .project(Plan::scan("orders", "okey").select(10, 40)),
+                    )
+                    .join_side(false),
+            )
+            .aggregate(AggKind::Count);
+        let req = PipelineRequest::from_plan(&plan, &cat).unwrap();
+        let handle = acc.submit_plan(req);
+        let (_, report) = handle.take();
+        let events = acc.take_trace();
+        assert!(!events.is_empty(), "tracing on must record the stages");
+        let breakdowns = report.stage_breakdowns(&events);
+        assert_eq!(breakdowns.len(), report.stages.len());
+        for (record, breakdown) in report.stages.iter().zip(&breakdowns) {
+            let b = breakdown.expect("traced stage has spans");
+            assert!(b.dispatches >= 1);
+            // The span-derived execution time is the same accumulation
+            // the record keeps, from the same event times.
+            assert!(
+                (b.running - record.exec).abs() <= 1e-12 + 1e-9 * record.exec,
+                "span running {} vs record exec {}",
+                b.running,
+                record.exec
+            );
+        }
+        // An untraced job id yields None, not a zeroed breakdown.
+        assert!(crate::trace::job_breakdown(&events, 10_000).is_none());
     }
 
     #[test]

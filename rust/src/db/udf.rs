@@ -221,6 +221,23 @@ impl FpgaAccelerator {
     pub fn set_parallel_functional(&self, on: bool) {
         self.coord().set_parallel_functional(on);
     }
+
+    /// Toggle the coordinator's card-clock tracer (off by default — see
+    /// `trace` module docs for the zero-overhead contract). Enable
+    /// *before* submitting work: the validator rejects streams whose
+    /// completed jobs predate the first event.
+    pub fn set_tracing(&self, on: bool) {
+        self.coord().set_tracing(on);
+    }
+
+    /// Drain the trace recorded so far (typed [`crate::trace::Event`]s on
+    /// the simulated card clock), leaving the tracer enabled and empty.
+    /// Feed the stream to [`crate::trace::chrome_trace`],
+    /// [`crate::trace::MetricsRegistry::from_events`], or
+    /// [`crate::trace::validate`].
+    pub fn take_trace(&self) -> Vec<crate::trace::Event> {
+        self.coord().take_trace()
+    }
 }
 
 /// An in-flight offload. Obtained from [`FpgaAccelerator::submit`]; holds

@@ -49,6 +49,7 @@ use super::{Engine, EngineStats, Phase};
 use crate::hbm::fluid::{solve_in, Flow, SolveScratch};
 use crate::hbm::memory::HbmMemory;
 use crate::hbm::HbmConfig;
+use crate::trace::{Event, Tracer};
 
 struct ActivePhase {
     phase: Phase,
@@ -272,6 +273,23 @@ impl SimSession {
     /// session is idle (empty return). Internal phase hand-offs of
     /// multi-phase engines are processed silently.
     pub fn advance(&mut self, mem: &mut HbmMemory) -> Vec<SimEvent> {
+        let mut tracer = Tracer::disabled();
+        self.advance_traced(mem, &mut tracer)
+    }
+
+    /// [`advance`](Self::advance) with bandwidth sampling: when `tracer`
+    /// is enabled, every inter-event interval emits one
+    /// [`Event::Bandwidth`] per active member (the HBM bytes/s the fluid
+    /// solver allocated to its phase over `[t, t + dt]`) and one
+    /// [`Event::LinkRate`] for the aggregate host-link allocation. With a
+    /// disabled tracer this *is* `advance` — the sampling block is
+    /// guarded by the one-word enabled check, so the steady-state path
+    /// stays allocation-free.
+    pub fn advance_traced(
+        &mut self,
+        mem: &mut HbmMemory,
+        tracer: &mut Tracer,
+    ) -> Vec<SimEvent> {
         let mut events = Vec::new();
         let mut guard = 0u64;
         while events.is_empty() {
@@ -385,6 +403,38 @@ impl SimSession {
             assert!(dt.is_finite(), "active phase can make no progress");
             // Numerical floor keeps degenerate zero-work phases moving.
             let dt = dt.max(1e-15);
+            if tracer.is_enabled() {
+                // Fluid-solver bandwidth samples over [now, now + dt]:
+                // one per active member (its flows' allocated rates
+                // summed) plus the aggregate link allocation.
+                let t0 = self.now;
+                for (mi, m) in self.members.iter().enumerate() {
+                    if m.active.is_none() {
+                        continue;
+                    }
+                    let bw: f64 = self
+                        .flow_owner
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &(owner, _))| owner == mi)
+                        .map(|(fi, _)| self.scratch.rates[fi])
+                        .sum();
+                    tracer.record(|| Event::Bandwidth {
+                        t: t0,
+                        dt,
+                        member: mi,
+                        bytes_per_sec: bw,
+                    });
+                }
+                if n_transfers > 0 && link_rate.is_finite() {
+                    tracer.record(|| Event::LinkRate {
+                        t: t0,
+                        dt,
+                        transfers: n_transfers,
+                        bytes_per_sec: link_rate * n_transfers as f64,
+                    });
+                }
+            }
             self.now += dt;
             if n_transfers > 0 {
                 self.link_busy += dt;

@@ -51,5 +51,6 @@ pub mod floorplan;
 pub mod hbm;
 pub mod interconnect;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 pub mod workloads;

@@ -8,8 +8,10 @@
 //!   query       demo DB query, CPU vs FPGA-offloaded
 //!   plan        whole-plan pipelines vs operator-at-a-time offload
 //!   serve       multi-client mixed workload through the L3 coordinator
+//!   trace       card-clock trace of the analytics mix + validation matrix
 //!   bench-host  simulator wall-clock throughput: serial vs parallel,
 //!               cold vs physically-resident
+//!   help        full usage with per-subcommand options
 //!
 //! Examples:
 //!   hbmctl figures --fig all --scale 0.0625 --out results
@@ -17,6 +19,7 @@
 //!   hbmctl train --dataset tiny_ridge --alpha 0.05 --epochs 10
 //!   hbmctl plan --rows 200000 --repeat 2
 //!   hbmctl serve --clients 4 --queries 64 --policy all
+//!   hbmctl trace --rows 100000 --repeat 2
 //!   hbmctl bench-host --rows 400000
 
 use std::path::PathBuf;
@@ -43,10 +46,15 @@ fn main() -> ExitCode {
         Some("query") => cmd_query(&args),
         Some("plan") => cmd_plan(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("bench-host") => cmd_bench_host(&args),
-        Some(other) => {
-            eprintln!("unknown subcommand '{other}'");
+        Some("help") => {
             usage();
+            return ExitCode::SUCCESS;
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            eprintln!("{}", subcommand_list());
             return ExitCode::FAILURE;
         }
         None => {
@@ -63,9 +71,27 @@ fn main() -> ExitCode {
     }
 }
 
+/// The full subcommand roster with one-line descriptions — what an
+/// unknown subcommand gets (run `hbmctl help` for per-subcommand
+/// options).
+fn subcommand_list() -> &'static str {
+    "subcommands:\n\
+     \u{20} figures     regenerate paper tables/figures (--fig fig2|table1|all)\n\
+     \u{20} microbench  HBM bandwidth/latency microbenchmarks (paper §II)\n\
+     \u{20} resources   Table III resource/floorplan report\n\
+     \u{20} train       train a GLM through the PJRT runtime (HLO artifacts)\n\
+     \u{20} query       demo DB query, CPU vs FPGA-offloaded\n\
+     \u{20} plan        whole-plan pipelines vs operator-at-a-time offload\n\
+     \u{20} serve       multi-client mixed workload through the L3 coordinator\n\
+     \u{20} trace       card-clock trace of the analytics mix (Perfetto JSON)\n\
+     \u{20}             plus the trace-vs-stats validation matrix\n\
+     \u{20} bench-host  simulator wall-clock throughput benchmark\n\
+     \u{20} help        full usage with per-subcommand options"
+}
+
 fn usage() {
     eprintln!(
-        "usage: hbmctl <figures|microbench|resources|train|query|plan|serve|bench-host> [options]\n\
+        "usage: hbmctl <figures|microbench|resources|train|query|plan|serve|trace|bench-host|help> [options]\n\
          \n\
          figures    --fig <id|all> --scale <f> --out <dir> --artifacts <dir>\n\
          microbench --ports <list> --separations <list> --clock <200|300|400>\n\
@@ -87,11 +113,18 @@ fn usage() {
          \u{20}          L3 coordinator, once continuously and once under the\n\
          \u{20}          round-barrier baseline (results verified identical),\n\
          \u{20}          and writes the comparison to BENCH_coordinator.json\n\
+         trace      --rows <n> --repeat <r> --queries <m> --seed <s> --out <file.json>\n\
+         \u{20}          runs the analytics plan mix with the card-clock tracer\n\
+         \u{20}          on (repeats warm the column cache), validates the span\n\
+         \u{20}          stream against the scheduler's accounting for every\n\
+         \u{20}          policy in both scheduling modes, and writes the\n\
+         \u{20}          Perfetto-loadable TRACE_serve.json\n\
          bench-host --rows <n> --seed <s> --out <file.json>\n\
          \u{20}          measures the simulator's own wall-clock throughput on\n\
          \u{20}          the analytics plan mix (serial vs parallel functional\n\
          \u{20}          execution, cold vs physically-resident card) and writes\n\
-         \u{20}          BENCH_host.json"
+         \u{20}          BENCH_host.json\n\
+         help       this message"
     );
 }
 
@@ -520,5 +553,213 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let out_path = args.get_str("out", "BENCH_coordinator.json");
     std::fs::write(&out_path, coordinator::bench_json(&spec, &outcomes))?;
     println!("wrote {out_path}");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use hbm_analytics::db::PipelineRequest;
+    use hbm_analytics::trace;
+    use hbm_analytics::workloads::analytics;
+
+    let rows: usize = args.get_parsed("rows", 100_000)?;
+    let repeat: usize = args.get_parsed("repeat", 2)?;
+    let seed: u64 = args.get_parsed("seed", 11u64)?;
+    anyhow::ensure!(rows > 0, "--rows must be positive");
+    anyhow::ensure!(repeat > 0, "--repeat must be positive");
+    let customers = (rows / 100).max(64);
+
+    // 1. Traced whole-pipeline run of the analytics plan mix. Repeats
+    // reuse one card, so runs after the first hit the HBM-resident
+    // column cache — the trace must witness those hits.
+    let cat = analytics::orders_catalog(rows, customers, seed);
+    let plans = analytics::mixed_plans(customers);
+    let mut acc = FpgaAccelerator::new(HbmConfig::default());
+    acc.set_tracing(true);
+    println!(
+        "tracing {} plans x {repeat} runs over {rows} orders / {customers} \
+         customers (seed {seed:#x})",
+        plans.len()
+    );
+    let mut reports: Vec<(&str, usize, hbm_analytics::db::PipelineReport)> =
+        Vec::new();
+    for run in 0..repeat {
+        let mut handles = Vec::new();
+        for (pi, (_, plan)) in plans.iter().enumerate() {
+            let req = PipelineRequest::from_plan(plan, &cat)?.client(pi);
+            handles.push(acc.submit_plan(req));
+        }
+        for (pi, handle) in handles.into_iter().enumerate() {
+            let (_, report) = handle.take();
+            reports.push((plans[pi].0, run + 1, report));
+        }
+    }
+    let pipe_events = acc.take_trace();
+    let pipe_stats = acc.stats();
+    let pipe_validation = trace::validate(&pipe_events, pipe_stats.view());
+    let hit_rate = pipe_stats.cache.hit_rate();
+    println!(
+        "  {} events; cache hits {} / misses {} ({:.1}% hit rate, {} B \
+         copy-in avoided)",
+        pipe_events.len(),
+        pipe_stats.cache.hits,
+        pipe_stats.cache.misses,
+        hit_rate * 100.0,
+        pipe_stats.cache.bytes_avoided()
+    );
+    println!("  {}", pipe_validation.summary());
+    anyhow::ensure!(pipe_validation.passed(), "pipeline trace failed validation");
+    if repeat > 1 {
+        anyhow::ensure!(
+            hit_rate > 0.0,
+            "repeat runs on one card must hit the column cache"
+        );
+    }
+
+    println!("  per-stage span breakdowns (simulated seconds):");
+    for (name, run, report) in &reports {
+        for (si, breakdown) in
+            report.stage_breakdowns(&pipe_events).iter().enumerate()
+        {
+            let b = breakdown.expect("traced stage has spans");
+            println!(
+                "    {name} run {run} stage {si}: wait {:.6} copy-in {:.6} \
+                 run {:.6} copy-out {:.6} ({} dispatches)",
+                b.waiting, b.copy_in, b.running, b.copy_out, b.dispatches
+            );
+        }
+    }
+
+    // 2. Validation matrix: every policy in both scheduling modes over
+    // the serve harness's mixed workload — the trace re-derives the
+    // scheduler's aggregate accounting and must match it everywhere.
+    let spec = ServeSpec {
+        clients: args.get_parsed("clients", 4usize)?,
+        queries: args.get_parsed("queries", 32usize)?,
+        seed: args.get_parsed("serve-seed", 0xC0FFEEu64)?,
+        rows: args.get_parsed("serve-rows", 24_000usize)?,
+        cache_bytes: args.get_parsed("cache-mib", 4096u64)? * MIB,
+    };
+    let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+    println!(
+        "validation matrix: {} queries from {} clients per policy and mode",
+        spec.queries, spec.clients
+    );
+    let mut validations = Vec::new();
+    for policy in Policy::all() {
+        for barrier in [false, true] {
+            let (events, stats) =
+                coordinator::run_traced(&cfg, policy, barrier, &spec);
+            let v = trace::validate(&events, stats.view());
+            let mode = if barrier { "round_barrier" } else { "continuous" };
+            println!("  {:<16} {mode:<14} {}", policy.name(), v.summary());
+            anyhow::ensure!(
+                v.passed(),
+                "trace validation failed for {} ({mode})",
+                policy.name()
+            );
+            validations.push((policy, barrier, v));
+        }
+    }
+
+    let json_f = |v: f64| {
+        if v.is_finite() {
+            format!("{v:.9}")
+        } else {
+            "null".to_string()
+        }
+    };
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"displayTimeUnit\": \"ms\",\n");
+    json.push_str(&format!(
+        "  \"traceEvents\": {},\n",
+        trace::trace_events_json(&pipe_events)
+    ));
+    json.push_str(&format!("  \"cache_hit_rate\": {},\n", json_f(hit_rate)));
+    json.push_str(&format!(
+        "  \"cache_bytes_avoided\": {},\n",
+        pipe_stats.cache.bytes_avoided()
+    ));
+    json.push_str(&format!(
+        "  \"pipeline_validation_passed\": {},\n",
+        pipe_validation.passed()
+    ));
+    json.push_str("  \"validation\": [\n");
+    for (i, (policy, barrier, v)) in validations.iter().enumerate() {
+        json.push_str("    {\n");
+        json.push_str(&format!("      \"policy\": \"{}\",\n", policy.name()));
+        json.push_str(&format!(
+            "      \"mode\": \"{}\",\n",
+            if *barrier { "round_barrier" } else { "continuous" }
+        ));
+        json.push_str(&format!("      \"passed\": {},\n", v.passed()));
+        json.push_str(&format!("      \"jobs_checked\": {},\n", v.jobs_checked));
+        json.push_str(&format!(
+            "      \"engine_busy_derived\": {},\n",
+            json_f(v.engine_busy_derived)
+        ));
+        json.push_str(&format!(
+            "      \"engine_busy_expected\": {},\n",
+            json_f(v.engine_busy_expected)
+        ));
+        json.push_str(&format!(
+            "      \"link_busy_derived\": {},\n",
+            json_f(v.link_busy_derived)
+        ));
+        json.push_str(&format!(
+            "      \"link_busy_expected\": {},\n",
+            json_f(v.link_busy_expected)
+        ));
+        json.push_str(&format!(
+            "      \"overlap_derived\": {},\n",
+            json_f(v.overlap_derived)
+        ));
+        json.push_str(&format!(
+            "      \"overlap_expected\": {},\n",
+            json_f(v.overlap_expected)
+        ));
+        json.push_str(&format!(
+            "      \"max_latency_error\": {}\n",
+            json_f(v.max_latency_error)
+        ));
+        json.push_str(if i + 1 == validations.len() {
+            "    }\n"
+        } else {
+            "    },\n"
+        });
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"metrics\": {},\n",
+        trace::MetricsRegistry::from_events(&pipe_events).to_json("  ")
+    ));
+    json.push_str("  \"pipeline_stages\": [\n");
+    let mut first = true;
+    for (name, run, report) in &reports {
+        for (si, breakdown) in
+            report.stage_breakdowns(&pipe_events).iter().enumerate()
+        {
+            let Some(b) = breakdown else { continue };
+            if !first {
+                json.push_str(",\n");
+            }
+            first = false;
+            json.push_str(&format!(
+                "    {{\"plan\": \"{name}\", \"run\": {run}, \"stage\": {si}, \
+                 \"waiting_s\": {}, \"copy_in_s\": {}, \"running_s\": {}, \
+                 \"copy_out_s\": {}, \"dispatches\": {}}}",
+                json_f(b.waiting),
+                json_f(b.copy_in),
+                json_f(b.running),
+                json_f(b.copy_out),
+                b.dispatches
+            ));
+        }
+    }
+    json.push_str("\n  ]\n}\n");
+
+    let out_path = args.get_str("out", "TRACE_serve.json");
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path} (load it in Perfetto / chrome://tracing)");
     Ok(())
 }

@@ -1,0 +1,390 @@
+//! Chrome trace-event exporter: turn a trace stream into JSON that
+//! `chrome://tracing` and <https://ui.perfetto.dev> load directly.
+//!
+//! Track layout (the format's `pid`/`tid` pair picks the row):
+//!
+//! * **pid 1 "engine ports"** — one track per shim port. Running spans
+//!   are drawn on every port they hold; fluid-solver bandwidth samples
+//!   become per-port counter series (`port N GB/s`), resolved through the
+//!   member→port bindings the scheduler records at dispatch.
+//! * **pid 2 "host link"** — transfer spans, greedily packed into lanes
+//!   so concurrent transfers never overlap on one row (the format nests
+//!   same-track slices; concurrent transfers are not nested), plus the
+//!   aggregate `link GB/s` counter.
+//! * **pid 3 "jobs"** — one track per job: its Waiting → CopyIn →
+//!   Running → CopyOut lifecycle spans plus admission instants.
+//! * **pid 4 "cache"** — access/evict/pin instants.
+//!
+//! Timestamps are microseconds of *card time* (`ts = seconds × 1e6`), so
+//! a trace of a 2 ms serve window renders as 2000 µs — zoom in, the
+//! simulated timeline is sub-millisecond.
+
+use std::collections::BTreeMap;
+
+use super::span::{Event, StageKind};
+
+const PID_PORTS: u32 = 1;
+const PID_LINK: u32 = 2;
+const PID_JOBS: u32 = 3;
+const PID_CACHE: u32 = 4;
+
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+/// Escape a string for a JSON literal (keys come from table/column
+/// names, which may contain anything).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn complete_event(
+    name: &str,
+    cat: &str,
+    pid: u32,
+    tid: u64,
+    start: f64,
+    end: f64,
+    args: &str,
+) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\
+         \"ts\":{:.3},\"dur\":{:.3},\"args\":{{{}}}}}",
+        esc(name),
+        cat,
+        pid,
+        tid,
+        us(start),
+        us(end - start).max(0.0),
+        args
+    )
+}
+
+fn instant_event(name: &str, cat: &str, pid: u32, tid: u64, t: f64, args: &str) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{},\
+         \"tid\":{},\"ts\":{:.3},\"args\":{{{}}}}}",
+        esc(name),
+        cat,
+        pid,
+        tid,
+        us(t),
+        args
+    )
+}
+
+fn counter_event(name: &str, pid: u32, t: f64, value: f64) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"ph\":\"C\",\"pid\":{},\"ts\":{:.3},\
+         \"args\":{{\"GB/s\":{:.6}}}}}",
+        esc(name),
+        pid,
+        us(t),
+        value
+    )
+}
+
+fn thread_name(pid: u32, tid: u64, name: &str) -> String {
+    format!(
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        pid,
+        tid,
+        esc(name)
+    )
+}
+
+fn process_name(pid: u32, name: &str) -> String {
+    format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        pid, name
+    )
+}
+
+/// Render the `traceEvents` JSON **array** for `events`. Embed it in a
+/// document (e.g. with extra metadata keys) or use [`chrome_trace`] for
+/// a standalone loadable file.
+pub fn trace_events_json(events: &[Event]) -> String {
+    let mut out: Vec<String> = vec![
+        process_name(PID_PORTS, "engine ports"),
+        process_name(PID_LINK, "host link"),
+        process_name(PID_JOBS, "jobs"),
+        process_name(PID_CACHE, "cache"),
+        thread_name(PID_CACHE, 0, "events"),
+    ];
+    // Live member→port bindings (member ids are recycled between jobs).
+    let mut member_port: BTreeMap<usize, usize> = BTreeMap::new();
+    // Greedy lane packing for concurrent link transfers: lane i is free
+    // when its last span ended at or before the new span's start.
+    let mut lane_ends: Vec<f64> = Vec::new();
+    let mut named_ports: Vec<u64> = Vec::new();
+    let mut named_jobs: Vec<u64> = Vec::new();
+    for event in events {
+        match event {
+            Event::Submitted { t, job, client, kind } => {
+                let tid = *job as u64;
+                if !named_jobs.contains(&tid) {
+                    named_jobs.push(tid);
+                    out.push(thread_name(PID_JOBS, tid, &format!("job {job} ({kind})")));
+                }
+                out.push(instant_event(
+                    "submitted",
+                    "lifecycle",
+                    PID_JOBS,
+                    tid,
+                    *t,
+                    &format!("\"job\":{job},\"client\":{client}"),
+                ));
+            }
+            Event::Stage(span) => {
+                let args = format!(
+                    "\"job\":{},\"client\":{},\"policy\":\"{}\"",
+                    span.job, span.client, span.policy
+                );
+                out.push(complete_event(
+                    &format!("{} job {}", span.stage.name(), span.job),
+                    "lifecycle",
+                    PID_JOBS,
+                    span.job as u64,
+                    span.start,
+                    span.end,
+                    &args,
+                ));
+                if span.stage == StageKind::Running {
+                    for &port in &span.ports {
+                        let tid = port as u64;
+                        if !named_ports.contains(&tid) {
+                            named_ports.push(tid);
+                            out.push(thread_name(PID_PORTS, tid, &format!("port {port}")));
+                        }
+                        out.push(complete_event(
+                            &format!("job {} ({})", span.job, span.kind),
+                            "running",
+                            PID_PORTS,
+                            tid,
+                            span.start,
+                            span.end,
+                            &args,
+                        ));
+                    }
+                }
+            }
+            Event::Transfer(span) => {
+                let lane = lane_ends
+                    .iter()
+                    .position(|&end| end <= span.start + 1e-15)
+                    .unwrap_or_else(|| {
+                        lane_ends.push(0.0);
+                        lane_ends.len() - 1
+                    });
+                lane_ends[lane] = span.end;
+                out.push(complete_event(
+                    &format!("{} job {}", span.dir.name(), span.job),
+                    "link",
+                    PID_LINK,
+                    lane as u64 + 1,
+                    span.start,
+                    span.end,
+                    &format!("\"job\":{},\"bytes\":{}", span.job, span.bytes),
+                ));
+            }
+            Event::Admitted { t, job, policy, ports, .. } => {
+                out.push(instant_event(
+                    &format!("admitted ({} ports)", ports.len()),
+                    "admission",
+                    PID_JOBS,
+                    *job as u64,
+                    *t,
+                    &format!(
+                        "\"job\":{job},\"policy\":\"{policy}\",\"ports\":{:?}",
+                        ports
+                    ),
+                ));
+            }
+            Event::Skipped { t, job, policy, .. } => {
+                out.push(instant_event(
+                    "skipped by policy",
+                    "admission",
+                    PID_JOBS,
+                    *job as u64,
+                    *t,
+                    &format!("\"job\":{job},\"policy\":\"{policy}\""),
+                ));
+            }
+            Event::CacheAccess { t, job, key, bytes, hit } => {
+                out.push(instant_event(
+                    &format!("{} {}", if *hit { "hit" } else { "miss" }, key),
+                    "cache",
+                    PID_CACHE,
+                    0,
+                    *t,
+                    &format!("\"job\":{job},\"bytes\":{bytes},\"hit\":{hit}"),
+                ));
+            }
+            Event::CacheEvict { t, key } => {
+                out.push(instant_event(
+                    &format!("evict {key}"),
+                    "cache",
+                    PID_CACHE,
+                    0,
+                    *t,
+                    "",
+                ));
+            }
+            Event::CachePin { t, key } => {
+                out.push(instant_event(&format!("pin {key}"), "cache", PID_CACHE, 0, *t, ""));
+            }
+            Event::CacheUnpin { t, key } => {
+                out.push(instant_event(
+                    &format!("unpin {key}"),
+                    "cache",
+                    PID_CACHE,
+                    0,
+                    *t,
+                    "",
+                ));
+            }
+            Event::MemberBound { member, port, .. } => {
+                member_port.insert(*member, *port);
+            }
+            Event::MemberFreed { t, member } => {
+                if let Some(port) = member_port.remove(member) {
+                    out.push(counter_event(&format!("port {port} GB/s"), PID_PORTS, *t, 0.0));
+                }
+            }
+            Event::Bandwidth { t, member, bytes_per_sec, .. } => {
+                if let Some(&port) = member_port.get(member) {
+                    out.push(counter_event(
+                        &format!("port {port} GB/s"),
+                        PID_PORTS,
+                        *t,
+                        bytes_per_sec / 1e9,
+                    ));
+                }
+            }
+            Event::LinkRate { t, bytes_per_sec, .. } => {
+                out.push(counter_event("link GB/s", PID_LINK, *t, bytes_per_sec / 1e9));
+            }
+        }
+    }
+    let mut json = String::from("[");
+    for (i, e) in out.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str("\n  ");
+        json.push_str(e);
+    }
+    json.push_str("\n]");
+    json
+}
+
+/// A standalone Chrome trace document: load the returned string (saved
+/// as a `.json` file) in Perfetto or `chrome://tracing` as-is.
+pub fn chrome_trace(events: &[Event]) -> String {
+    format!(
+        "{{\n\"displayTimeUnit\": \"ms\",\n\"traceEvents\": {}\n}}\n",
+        trace_events_json(events)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::span::{Dir, StageSpan, TransferSpan};
+
+    fn running(job: usize, start: f64, end: f64, ports: Vec<usize>) -> Event {
+        Event::Stage(StageSpan {
+            job,
+            client: 0,
+            kind: "selection",
+            policy: "fifo",
+            stage: StageKind::Running,
+            start,
+            end,
+            ports,
+            barrier_round: None,
+        })
+    }
+
+    #[test]
+    fn escapes_hostile_strings() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc("tab\there"), "tab\\there");
+    }
+
+    #[test]
+    fn running_spans_land_on_every_held_port() {
+        let json = trace_events_json(&[running(7, 0.0, 1e-3, vec![2, 5])]);
+        assert!(json.contains("\"pid\":1,\"tid\":2"));
+        assert!(json.contains("\"pid\":1,\"tid\":5"));
+        assert!(json.contains("\"name\":\"port 2\""));
+        // Job-track copy too.
+        assert!(json.contains("\"pid\":3,\"tid\":7"));
+    }
+
+    #[test]
+    fn concurrent_transfers_get_distinct_lanes() {
+        let t = |job, start: f64, end: f64| {
+            Event::Transfer(TransferSpan {
+                job,
+                dir: Dir::In,
+                bytes: 10,
+                start,
+                end,
+                barrier_round: None,
+            })
+        };
+        // Two overlapping, then one after both: lanes 1, 2, then 1 again.
+        let json = trace_events_json(&[t(0, 0.0, 2.0), t(1, 1.0, 3.0), t(2, 4.0, 5.0)]);
+        let lane_of = |job: usize| {
+            let needle = format!("copy-in job {job}");
+            let obj = json
+                .lines()
+                .find(|l| l.contains(&needle))
+                .unwrap_or_else(|| panic!("no event for job {job}"));
+            let tid = obj.split("\"tid\":").nth(1).unwrap();
+            tid.split(',').next().unwrap().to_string()
+        };
+        assert_eq!(lane_of(0), "1");
+        assert_eq!(lane_of(1), "2");
+        assert_eq!(lane_of(2), "1", "freed lane must be reused");
+    }
+
+    #[test]
+    fn bandwidth_samples_resolve_member_bindings() {
+        let events = vec![
+            Event::MemberBound { t: 0.0, member: 3, job: 0, port: 9 },
+            Event::Bandwidth { t: 0.5, dt: 0.1, member: 3, bytes_per_sec: 2e9 },
+            Event::MemberFreed { t: 1.0, member: 3 },
+            // After the free, samples for a stale member are dropped.
+            Event::Bandwidth { t: 1.5, dt: 0.1, member: 3, bytes_per_sec: 1e9 },
+        ];
+        let json = trace_events_json(&events);
+        assert!(json.contains("port 9 GB/s"));
+        assert!(json.contains("\"GB/s\":2.000000"));
+        assert!(!json.contains("\"GB/s\":1.000000"), "stale sample must drop");
+        assert!(json.contains("\"GB/s\":0.000000"), "freed port closes at 0");
+    }
+
+    #[test]
+    fn document_is_loadable_shape() {
+        let doc = chrome_trace(&[running(0, 0.0, 1.0, vec![0])]);
+        assert!(doc.starts_with("{\n\"displayTimeUnit\""));
+        assert!(doc.contains("\"traceEvents\": ["));
+        assert!(doc.trim_end().ends_with('}'));
+    }
+}

@@ -1,0 +1,324 @@
+//! Counters and histograms over trace streams — the snapshot layer the
+//! `BENCH_*.json` outputs embed.
+//!
+//! A [`MetricsRegistry`] is a named bag of monotonic counters and
+//! exact-sample histograms. The histogram keeps its raw samples and
+//! answers percentiles through the same nearest-rank kernel the serve
+//! harness reports latency with
+//! ([`percentile_nearest_rank`](crate::util::stats::percentile_nearest_rank)),
+//! so tracing and serving report tails from one code path.
+//! [`MetricsRegistry::from_events`] derives the standard taxonomy from a
+//! trace stream; callers can also populate registries directly
+//! ([`inc`](MetricsRegistry::inc) / [`observe`](MetricsRegistry::observe)).
+
+use std::collections::BTreeMap;
+
+use super::span::{Dir, Event, StageKind};
+use crate::util::stats::percentile_nearest_rank;
+
+/// An exact-sample histogram: keeps every observation (fine at serve and
+/// trace sizes) and answers order statistics over the raw sample.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_samples(samples: &[f64]) -> Self {
+        Self { samples: samples.to_vec() }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() { 0.0 } else { self.sum() / self.count() as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Nearest-rank (ceil-rank) percentile of the sample; 0 when empty.
+    /// The kernel is [`percentile_nearest_rank`] — the same estimator the
+    /// scheduler's `StatsView::latency_percentile` uses, deliberately.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            percentile_nearest_rank(&self.samples, p)
+        }
+    }
+}
+
+/// Named counters + histograms with a hand-rolled JSON snapshot (the
+/// offline crate set has no serde).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to counter `name` (created at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record one observation into histogram `name` (created empty).
+    pub fn observe(&mut self, name: &str, x: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(x);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Derive the standard taxonomy from a trace stream: lifecycle and
+    /// cache counters, per-stage duration histograms, per-job latency
+    /// (submit → last copy-out), and bandwidth-sample histograms in GB/s.
+    pub fn from_events(events: &[Event]) -> Self {
+        let mut reg = Self::new();
+        // Per-job endpoints for the latency histogram.
+        let mut submitted: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut finished: BTreeMap<usize, f64> = BTreeMap::new();
+        for event in events {
+            match event {
+                Event::Submitted { t, job, .. } => {
+                    reg.inc("jobs_submitted", 1);
+                    submitted.insert(*job, *t);
+                }
+                Event::Stage(span) => {
+                    match span.stage {
+                        StageKind::Waiting => reg.observe("wait_s", span.duration()),
+                        StageKind::CopyIn => reg.observe("copy_in_s", span.duration()),
+                        StageKind::Running => reg.observe("exec_s", span.duration()),
+                        StageKind::CopyOut => {
+                            reg.observe("copy_out_s", span.duration());
+                            finished.insert(span.job, span.end);
+                        }
+                    }
+                }
+                Event::Transfer(span) => match span.dir {
+                    Dir::In => reg.inc("copy_in_bytes", span.bytes),
+                    Dir::Out => reg.inc("copy_out_bytes", span.bytes),
+                },
+                Event::Admitted { .. } => reg.inc("admissions", 1),
+                Event::Skipped { .. } => reg.inc("admission_skips", 1),
+                Event::CacheAccess { bytes, hit, .. } => {
+                    if *hit {
+                        reg.inc("cache_hits", 1);
+                        reg.inc("cache_hit_bytes", *bytes);
+                    } else {
+                        reg.inc("cache_misses", 1);
+                        reg.inc("cache_miss_bytes", *bytes);
+                    }
+                }
+                Event::CacheEvict { .. } => reg.inc("cache_evictions", 1),
+                Event::CachePin { .. } => reg.inc("cache_pins", 1),
+                Event::CacheUnpin { .. } => reg.inc("cache_unpins", 1),
+                Event::MemberBound { .. } | Event::MemberFreed { .. } => {}
+                Event::Bandwidth { bytes_per_sec, .. } => {
+                    reg.observe("engine_gbps", bytes_per_sec / 1e9);
+                }
+                Event::LinkRate { bytes_per_sec, .. } => {
+                    reg.observe("link_gbps", bytes_per_sec / 1e9);
+                }
+            }
+        }
+        for (job, end) in finished {
+            reg.inc("jobs_completed", 1);
+            if let Some(&t0) = submitted.get(&job) {
+                reg.observe("latency_s", end - t0);
+            }
+        }
+        reg
+    }
+
+    /// JSON snapshot: counters verbatim; histograms as
+    /// `{count, mean, min, max, p50, p99}`. Non-finite floats serialize
+    /// as `null` (empty histograms have no min/max).
+    pub fn to_json(&self, indent: &str) -> String {
+        let f = |v: f64| {
+            if v.is_finite() { format!("{v:.9}") } else { "null".to_string() }
+        };
+        let mut out = String::from("{\n");
+        out.push_str(&format!("{indent}  \"counters\": {{"));
+        let mut first = true;
+        for (name, value) in &self.counters {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\n{indent}    \"{name}\": {value}"));
+        }
+        if !first {
+            out.push_str(&format!("\n{indent}  "));
+        }
+        out.push_str("},\n");
+        out.push_str(&format!("{indent}  \"histograms\": {{"));
+        let mut first = true;
+        for (name, h) in &self.histograms {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n{indent}    \"{name}\": {{\"count\": {}, \"mean\": {}, \
+                 \"min\": {}, \"max\": {}, \"p50\": {}, \"p99\": {}}}",
+                h.count(),
+                f(h.mean()),
+                f(h.min()),
+                f(h.max()),
+                f(h.percentile(50.0)),
+                f(h.percentile(99.0)),
+            ));
+        }
+        if !first {
+            out.push_str(&format!("\n{indent}  "));
+        }
+        out.push_str("}\n");
+        out.push_str(&format!("{indent}}}"));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::span::{StageSpan, TransferSpan};
+
+    #[test]
+    fn histogram_percentiles_use_the_nearest_rank_kernel() {
+        let mut h = Histogram::new();
+        for i in 1..=10 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.percentile(50.0), percentile_nearest_rank(&h.samples, 50.0));
+        assert_eq!(h.percentile(99.0), 10.0);
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 10.0);
+        assert!((h.mean() - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn registry_counts_and_observes() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("hits", 2);
+        reg.inc("hits", 3);
+        reg.observe("lat", 1.0);
+        reg.observe("lat", 3.0);
+        assert_eq!(reg.counter("hits"), 5);
+        assert_eq!(reg.counter("absent"), 0);
+        assert_eq!(reg.histogram("lat").unwrap().count(), 2);
+        assert!(reg.histogram("absent").is_none());
+    }
+
+    #[test]
+    fn from_events_derives_the_standard_taxonomy() {
+        let events = vec![
+            Event::Submitted { t: 0.0, job: 0, client: 0, kind: "selection" },
+            Event::Admitted {
+                t: 0.0,
+                job: 0,
+                policy: "fifo",
+                ports: vec![0],
+                barrier_round: None,
+            },
+            Event::CacheAccess {
+                t: 0.0,
+                job: 0,
+                key: "t.c".into(),
+                bytes: 64,
+                hit: false,
+            },
+            Event::Transfer(TransferSpan {
+                job: 0,
+                dir: Dir::In,
+                bytes: 64,
+                start: 0.0,
+                end: 1.0,
+                barrier_round: None,
+            }),
+            Event::Stage(StageSpan {
+                job: 0,
+                client: 0,
+                kind: "selection",
+                policy: "fifo",
+                stage: StageKind::CopyOut,
+                start: 2.0,
+                end: 3.0,
+                ports: vec![],
+                barrier_round: None,
+            }),
+        ];
+        let reg = MetricsRegistry::from_events(&events);
+        assert_eq!(reg.counter("jobs_submitted"), 1);
+        assert_eq!(reg.counter("jobs_completed"), 1);
+        assert_eq!(reg.counter("admissions"), 1);
+        assert_eq!(reg.counter("cache_misses"), 1);
+        assert_eq!(reg.counter("cache_miss_bytes"), 64);
+        assert_eq!(reg.counter("copy_in_bytes"), 64);
+        let lat = reg.histogram("latency_s").unwrap();
+        assert_eq!(lat.count(), 1);
+        assert!((lat.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_snapshot_is_well_formed() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("a", 1);
+        reg.observe("h", 2.0);
+        let json = reg.to_json("");
+        assert!(json.contains("\"a\": 1"));
+        assert!(json.contains("\"count\": 1"));
+        let empty = MetricsRegistry::new().to_json("  ");
+        assert!(empty.contains("\"counters\": {}"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Card-clock tracing and metrics for the coordinator.
+//!
+//! Everything in this module runs on the **simulated card clock** —
+//! seconds of card time since the coordinator was built, never host wall
+//! clock. The [`Tracer`] lives inside the `Coordinator` and is threaded
+//! through `SimSession::advance_traced`, so every state transition the
+//! scheduler makes can be witnessed as a typed [`Event`]:
+//!
+//! * **job lifecycle spans** — `Waiting → CopyIn → Running → CopyOut`
+//!   per job, with client / operator-kind / admission-policy / held-port
+//!   attribution ([`StageSpan`]);
+//! * **link-transfer spans** with byte counts ([`TransferSpan`]);
+//! * **fluid-solver bandwidth samples** — the HBM GB/s the proportional
+//!   solver allocated each active phase over each inter-event interval,
+//!   keyed to engine ports through [`Event::MemberBound`] /
+//!   [`Event::MemberFreed`] bindings, reconstructing every channel
+//!   group's bandwidth timeline;
+//! * **cache traffic** — hit / miss / evict / pin / unpin per keyed
+//!   column;
+//! * **admission decisions** — which ready jobs a policy admitted onto
+//!   which ports, and which it passed over.
+//!
+//! Exporters: [`chrome::chrome_trace`] renders the stream as Chrome
+//! trace-event JSON (open in Perfetto / `chrome://tracing`; one track
+//! per engine port, lanes for the host link, a track per job, counter
+//! tracks for per-port GB/s), and [`metrics::MetricsRegistry`] folds it
+//! into counters and histograms for the `BENCH_*.json` outputs. The
+//! [`validate`] pass re-derives the scheduler's aggregate accounting
+//! purely from the spans and checks it against `CoordinatorStats`,
+//! making the trace a second, independent witness of the scheduler's
+//! bookkeeping.
+//!
+//! # Overhead contract
+//!
+//! Tracing is **disabled by default** and costs nothing measurable when
+//! off: every recording site goes through [`Tracer::record`], which
+//! takes a *closure* producing the event, so argument construction
+//! (port-vec clones, key strings) only happens once the one-word
+//! `enabled` flag has passed. A disabled tracer never allocates — the
+//! event buffer stays empty and the steady-state scheduler/session path
+//! is identical to the untraced build.
+
+pub mod chrome;
+pub mod metrics;
+pub mod span;
+pub mod validate;
+
+pub use chrome::{chrome_trace, trace_events_json};
+pub use metrics::{Histogram, MetricsRegistry};
+pub use span::{Dir, Event, StageKind, StageSpan, TransferSpan};
+pub use validate::{job_breakdown, validate, JobBreakdown, Validation};
+
+/// Event recorder on the simulated card clock. Held by the coordinator;
+/// off by default (see the module docs for the zero-overhead contract).
+#[derive(Debug, Default)]
+pub struct Tracer {
+    enabled: bool,
+    events: Vec<Event>,
+}
+
+impl Tracer {
+    /// A tracer that records nothing until [`set_enabled`](Self::set_enabled).
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Turn recording on or off. Turning it off keeps already-recorded
+    /// events; turning it on mid-run yields a stream the validator will
+    /// reject (records predating the stream have no spans) — enable
+    /// tracing before submitting work.
+    pub fn set_enabled(&mut self, enabled: bool) {
+        self.enabled = enabled;
+    }
+
+    /// Whether events are currently recorded. Hot paths with non-trivial
+    /// per-event preparation (e.g. the session's bandwidth sampling loop)
+    /// may check this once instead of calling [`record`](Self::record)
+    /// per event.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record the event produced by `f` — *iff* tracing is enabled. The
+    /// closure indirection is the zero-overhead contract: when disabled,
+    /// `f` is never called, so its captures are never cloned and nothing
+    /// allocates.
+    #[inline]
+    pub fn record(&mut self, f: impl FnOnce() -> Event) {
+        if self.enabled {
+            self.events.push(f());
+        }
+    }
+
+    /// Everything recorded so far, in emission order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Drain the recorded stream, leaving the tracer empty (and still
+    /// enabled/disabled as it was).
+    pub fn take(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_never_invokes_the_closure() {
+        let mut tracer = Tracer::disabled();
+        let mut called = false;
+        tracer.record(|| {
+            called = true;
+            Event::Submitted { t: 0.0, job: 0, client: 0, kind: "selection" }
+        });
+        assert!(!called);
+        assert!(tracer.events().is_empty());
+        assert!(!tracer.is_enabled());
+    }
+
+    #[test]
+    fn enabled_tracer_records_and_takes() {
+        let mut tracer = Tracer::disabled();
+        tracer.set_enabled(true);
+        tracer.record(|| Event::Submitted { t: 1.0, job: 7, client: 2, kind: "join" });
+        assert_eq!(tracer.events().len(), 1);
+        let drained = tracer.take();
+        assert_eq!(drained.len(), 1);
+        assert!(tracer.events().is_empty());
+        assert!(tracer.is_enabled());
+    }
+}

@@ -1,0 +1,206 @@
+//! Typed trace events on the simulated card clock.
+//!
+//! Every timestamp in this module is **card time**: seconds since the
+//! coordinator's construction on the simulated timeline (`Coordinator::
+//! simulated_time`), never host wall clock. Spans are recorded *closed* —
+//! the scheduler emits a [`StageSpan`] or [`TransferSpan`] at the state
+//! transition that ends it, when both endpoints are known — so a trace
+//! stream needs no begin/end pairing pass and every span is internally
+//! consistent by construction.
+//!
+//! Barrier-mode spans carry their round index in `barrier_round`: the
+//! round scheduler computes timings analytically (per-phase maxima over
+//! the co-admitted batch, see `Coordinator::run_round`), and the
+//! validator re-derives link-busy time per round from those phase maxima
+//! rather than from interval unions. Continuous-mode spans carry `None`.
+
+/// Which lifecycle stage a [`StageSpan`] covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StageKind {
+    /// Queued without ports (SGD jobs return here between batches).
+    Waiting,
+    /// Cold input bytes in flight on the host link, ports reserved.
+    CopyIn,
+    /// Engines joined the session on the granted ports.
+    Running,
+    /// Results in flight back to the host, ports already freed.
+    CopyOut,
+}
+
+impl StageKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageKind::Waiting => "waiting",
+            StageKind::CopyIn => "copy-in",
+            StageKind::Running => "running",
+            StageKind::CopyOut => "copy-out",
+        }
+    }
+}
+
+/// Direction of a host-link transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// Host → card (copy-in).
+    In,
+    /// Card → host (copy-out).
+    Out,
+}
+
+impl Dir {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dir::In => "copy-in",
+            Dir::Out => "copy-out",
+        }
+    }
+}
+
+/// One closed interval of a job's lifecycle, with scheduling attribution.
+#[derive(Debug, Clone)]
+pub struct StageSpan {
+    pub job: usize,
+    /// Submitting client (reporting tag).
+    pub client: usize,
+    /// Operator name ("selection" / "join" / "sgd").
+    pub kind: &'static str,
+    /// Admission policy in force when the span was recorded.
+    pub policy: &'static str,
+    pub stage: StageKind,
+    /// Card-clock start, seconds.
+    pub start: f64,
+    /// Card-clock end, seconds.
+    pub end: f64,
+    /// Engine read ports held during the span (Running only; empty for
+    /// the portless stages).
+    pub ports: Vec<usize>,
+    /// Lock-step round index under the barrier baseline; `None` on the
+    /// continuous timeline.
+    pub barrier_round: Option<u64>,
+}
+
+impl StageSpan {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// One host-link transfer with its byte count.
+#[derive(Debug, Clone)]
+pub struct TransferSpan {
+    pub job: usize,
+    pub dir: Dir,
+    pub bytes: u64,
+    pub start: f64,
+    pub end: f64,
+    /// Round index under the barrier baseline (see module docs).
+    pub barrier_round: Option<u64>,
+}
+
+impl TransferSpan {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// A typed trace event. The stream is strictly ordered by emission; span
+/// events appear at their *end* time, instants at their own time.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A job entered the queue.
+    Submitted { t: f64, job: usize, client: usize, kind: &'static str },
+    /// A closed job-lifecycle interval.
+    Stage(StageSpan),
+    /// A closed host-link transfer interval.
+    Transfer(TransferSpan),
+    /// The policy admitted `job` onto `ports` at an admission decision.
+    Admitted {
+        t: f64,
+        job: usize,
+        policy: &'static str,
+        ports: Vec<usize>,
+        barrier_round: Option<u64>,
+    },
+    /// `job` was ready at an admission decision that admitted other work,
+    /// but the policy passed it over (its minimum grant did not fit).
+    Skipped { t: f64, job: usize, policy: &'static str, barrier_round: Option<u64> },
+    /// A keyed input was looked up in the resident-column cache.
+    CacheAccess { t: f64, job: usize, key: String, bytes: u64, hit: bool },
+    /// A resident column was evicted to make room.
+    CacheEvict { t: f64, key: String },
+    /// A resident column was pinned (promised to a queued job or holding
+    /// a transient intermediate).
+    CachePin { t: f64, key: String },
+    /// A pin was released.
+    CacheUnpin { t: f64, key: String },
+    /// A session engine was bound to `port` on behalf of `job` (member
+    /// ids are recycled; bindings are valid until the matching
+    /// [`Event::MemberFreed`]).
+    MemberBound { t: f64, member: usize, job: usize, port: usize },
+    /// The session engine behind `member` finished and left its port.
+    MemberFreed { t: f64, member: usize },
+    /// Fluid-solver bandwidth sample: the HBM bytes/s allocated to one
+    /// member's active phase over `[t, t + dt]` — one sample per member
+    /// per session event, reconstructing each port's bandwidth timeline.
+    Bandwidth { t: f64, dt: f64, member: usize, bytes_per_sec: f64 },
+    /// Host-link allocation sample over `[t, t + dt]`: active transfer
+    /// count and their aggregate bytes/s.
+    LinkRate { t: f64, dt: f64, transfers: usize, bytes_per_sec: f64 },
+}
+
+impl Event {
+    /// Card-clock timestamp of the event (for spans, the *start*).
+    pub fn time(&self) -> f64 {
+        match self {
+            Event::Submitted { t, .. }
+            | Event::Admitted { t, .. }
+            | Event::Skipped { t, .. }
+            | Event::CacheAccess { t, .. }
+            | Event::CacheEvict { t, .. }
+            | Event::CachePin { t, .. }
+            | Event::CacheUnpin { t, .. }
+            | Event::MemberBound { t, .. }
+            | Event::MemberFreed { t, .. }
+            | Event::Bandwidth { t, .. }
+            | Event::LinkRate { t, .. } => *t,
+            Event::Stage(s) => s.start,
+            Event::Transfer(s) => s.start,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_are_stable() {
+        assert_eq!(StageKind::Waiting.name(), "waiting");
+        assert_eq!(StageKind::CopyIn.name(), "copy-in");
+        assert_eq!(StageKind::Running.name(), "running");
+        assert_eq!(StageKind::CopyOut.name(), "copy-out");
+        assert_eq!(Dir::In.name(), "copy-in");
+        assert_eq!(Dir::Out.name(), "copy-out");
+    }
+
+    #[test]
+    fn event_time_reports_span_starts() {
+        let span = StageSpan {
+            job: 3,
+            client: 0,
+            kind: "selection",
+            policy: "fifo",
+            stage: StageKind::Running,
+            start: 1.5,
+            end: 2.5,
+            ports: vec![0, 1],
+            barrier_round: None,
+        };
+        assert_eq!(span.duration(), 1.0);
+        assert_eq!(Event::Stage(span).time(), 1.5);
+        assert_eq!(
+            Event::Submitted { t: 0.25, job: 0, client: 0, kind: "join" }.time(),
+            0.25
+        );
+    }
+}

@@ -1,0 +1,419 @@
+//! Self-validation: re-derive the scheduler's aggregate accounting
+//! purely from the span stream and check it against [`StatsView`].
+//!
+//! The trace is useful exactly insofar as it is *true*. This pass makes
+//! it a second, independent witness of the scheduler's accounting:
+//!
+//! * `engine_busy_port_seconds` — Σ over Running spans of
+//!   ports held × duration (the same identity `finish_batch` /
+//!   `run_round` accumulate, recomputed from recorded intervals);
+//! * `link_busy_seconds` — the measure of the **union** of
+//!   continuous-mode transfer intervals (concurrent transfers count
+//!   once), plus, per barrier round, the round's copy-in and copy-out
+//!   phase maxima (the barrier charges phases analytically; its
+//!   transfer spans carry their round index so the validator can apply
+//!   the same rule);
+//! * `overlap_seconds` — the measure of the *intersection* of the
+//!   transfer-busy union with the engine-busy union (continuous spans
+//!   only; the barrier serializes copy against compute, so it
+//!   contributes exactly zero);
+//! * per-job latency — last copy-out end minus submission time, matched
+//!   against every completed [`JobRecord`](crate::coordinator::JobRecord).
+//!
+//! The pass also asserts the structural span invariants (no two Running
+//! spans share a port concurrently; each job's stage spans are ordered,
+//! non-overlapping, and — on the continuous timeline — exactly
+//! contiguous). All float comparisons use a relative epsilon
+//! ([`TOLERANCE`]): derived and accumulated values follow different
+//! summation orders, so bit-equality is not expected, but they must
+//! agree to within accumulated rounding.
+//!
+//! Validation is only meaningful when tracing was enabled for the
+//! coordinator's whole life: records of jobs served before
+//! `set_tracing(true)` have no spans and are reported as errors.
+
+use std::collections::BTreeMap;
+
+use super::span::{Dir, Event, StageKind, StageSpan};
+use crate::coordinator::StatsView;
+
+/// Relative tolerance for derived-vs-accounted float comparisons.
+pub const TOLERANCE: f64 = 1e-9;
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-12 + TOLERANCE * a.abs().max(b.abs())
+}
+
+/// Outcome of one validation pass. `passed()` is the headline;
+/// the derived aggregates are kept so reports can show both sides.
+#[derive(Debug, Clone)]
+pub struct Validation {
+    /// Completed jobs whose latency was re-derived and matched.
+    pub jobs_checked: usize,
+    pub engine_busy_derived: f64,
+    pub engine_busy_expected: f64,
+    pub link_busy_derived: f64,
+    pub link_busy_expected: f64,
+    pub overlap_derived: f64,
+    pub overlap_expected: f64,
+    /// Largest |derived − recorded| per-job latency error, seconds.
+    pub max_latency_error: f64,
+    /// Everything that failed, human-readable. Empty ⇒ `passed()`.
+    pub errors: Vec<String>,
+}
+
+impl Validation {
+    pub fn passed(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    /// One-line summary for console output.
+    pub fn summary(&self) -> String {
+        if self.passed() {
+            format!(
+                "trace validated: {} jobs, engine-busy {:.6}s, link-busy {:.6}s, \
+                 overlap {:.6}s re-derived within tolerance",
+                self.jobs_checked,
+                self.engine_busy_derived,
+                self.link_busy_derived,
+                self.overlap_derived
+            )
+        } else {
+            format!(
+                "trace validation FAILED ({} errors): {}",
+                self.errors.len(),
+                self.errors.first().map(String::as_str).unwrap_or("")
+            )
+        }
+    }
+}
+
+/// Merge intervals in place and return them sorted and disjoint.
+fn union(mut intervals: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    intervals.retain(|&(s, e)| e > s);
+    intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(intervals.len());
+    for (s, e) in intervals {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged.push((s, e)),
+        }
+    }
+    merged
+}
+
+fn measure(merged: &[(f64, f64)]) -> f64 {
+    merged.iter().map(|&(s, e)| e - s).sum()
+}
+
+/// Measure of the intersection of two merged interval sets.
+fn intersection_measure(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let (mut i, mut j, mut total) = (0usize, 0usize, 0.0f64);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            total += hi - lo;
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    total
+}
+
+/// Legal stage successors within one job's lifecycle.
+fn may_follow(prev: StageKind, next: StageKind) -> bool {
+    matches!(
+        (prev, next),
+        (StageKind::Waiting, StageKind::CopyIn)
+            | (StageKind::Waiting, StageKind::Running)
+            | (StageKind::CopyIn, StageKind::Running)
+            | (StageKind::Running, StageKind::Waiting)
+            | (StageKind::Running, StageKind::CopyOut)
+    )
+}
+
+/// Re-derive the scheduler's aggregates from `events` and compare them
+/// with `stats`. See the module docs for the exact identities.
+pub fn validate(events: &[Event], stats: StatsView<'_>) -> Validation {
+    let mut errors: Vec<String> = Vec::new();
+
+    // Partition the stream.
+    let mut submitted: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut stage_spans: BTreeMap<usize, Vec<&StageSpan>> = BTreeMap::new();
+    let mut cont_transfers: Vec<(f64, f64)> = Vec::new();
+    // Per barrier round: (max copy-in duration, max copy-out duration).
+    let mut round_phases: BTreeMap<u64, (f64, f64)> = BTreeMap::new();
+    let mut engine_busy_derived = 0.0f64;
+    let mut engine_intervals: Vec<(f64, f64)> = Vec::new();
+    let mut port_spans: BTreeMap<usize, Vec<(f64, f64, usize)>> = BTreeMap::new();
+    for event in events {
+        match event {
+            Event::Submitted { t, job, .. } => {
+                submitted.insert(*job, *t);
+            }
+            Event::Stage(span) => {
+                if span.end + 1e-15 < span.start {
+                    errors.push(format!(
+                        "job {} {} span ends before it starts ({} < {})",
+                        span.job,
+                        span.stage.name(),
+                        span.end,
+                        span.start
+                    ));
+                }
+                if span.stage == StageKind::Running {
+                    engine_busy_derived += span.ports.len() as f64 * span.duration();
+                    if span.barrier_round.is_none() {
+                        engine_intervals.push((span.start, span.end));
+                    }
+                    for &p in &span.ports {
+                        port_spans.entry(p).or_default().push((
+                            span.start,
+                            span.end,
+                            span.job,
+                        ));
+                    }
+                }
+                stage_spans.entry(span.job).or_default().push(span);
+            }
+            Event::Transfer(span) => match span.barrier_round {
+                None => cont_transfers.push((span.start, span.end)),
+                Some(round) => {
+                    let phases = round_phases.entry(round).or_insert((0.0, 0.0));
+                    match span.dir {
+                        Dir::In => phases.0 = phases.0.max(span.duration()),
+                        Dir::Out => phases.1 = phases.1.max(span.duration()),
+                    }
+                }
+            },
+            _ => {}
+        }
+    }
+
+    // Invariant (a): spans on one engine port never overlap.
+    for (port, spans) in &mut port_spans {
+        spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for pair in spans.windows(2) {
+            let (_, prev_end, prev_job) = pair[0];
+            let (next_start, _, next_job) = pair[1];
+            if next_start + 1e-12 < prev_end {
+                errors.push(format!(
+                    "port {port}: running spans of jobs {prev_job} and \
+                     {next_job} overlap ({next_start} < {prev_end})"
+                ));
+            }
+        }
+    }
+
+    // Invariant (b): each job's stage spans are ordered (and contiguous
+    // on the continuous timeline, where every transition happens at one
+    // shared event time).
+    for (job, spans) in &mut stage_spans {
+        spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        if let Some(first) = spans.first() {
+            if first.stage != StageKind::Waiting {
+                errors.push(format!(
+                    "job {job}: lifecycle starts with {}, not waiting",
+                    first.stage.name()
+                ));
+            }
+            if let Some(&t0) = submitted.get(job) {
+                if first.start + 1e-12 < t0 {
+                    errors.push(format!(
+                        "job {job}: first span starts before submission"
+                    ));
+                }
+            }
+        }
+        for pair in spans.windows(2) {
+            let (prev, next) = (pair[0], pair[1]);
+            if !may_follow(prev.stage, next.stage) {
+                errors.push(format!(
+                    "job {job}: {} span may not follow {}",
+                    next.stage.name(),
+                    prev.stage.name()
+                ));
+            }
+            if next.start + 1e-12 < prev.end {
+                errors.push(format!(
+                    "job {job}: {} span overlaps the preceding {}",
+                    next.stage.name(),
+                    prev.stage.name()
+                ));
+            }
+            let continuous =
+                prev.barrier_round.is_none() && next.barrier_round.is_none();
+            if continuous && !close(prev.end, next.start) {
+                errors.push(format!(
+                    "job {job}: gap between {} and {} on the continuous \
+                     timeline ({} → {})",
+                    prev.stage.name(),
+                    next.stage.name(),
+                    prev.end,
+                    next.start
+                ));
+            }
+        }
+        for (i, span) in spans.iter().enumerate() {
+            if span.stage == StageKind::CopyOut && i + 1 != spans.len() {
+                errors.push(format!("job {job}: copy-out span is not terminal"));
+            }
+        }
+    }
+
+    // Aggregate identities.
+    let transfer_union = union(cont_transfers);
+    let barrier_link: f64 = round_phases.values().map(|&(ci, co)| ci + co).sum();
+    let link_busy_derived = measure(&transfer_union) + barrier_link;
+    let engine_union = union(engine_intervals);
+    let overlap_derived = intersection_measure(&transfer_union, &engine_union);
+
+    if !close(engine_busy_derived, stats.engine_busy_port_seconds) {
+        errors.push(format!(
+            "engine busy port-seconds: derived {engine_busy_derived} vs \
+             recorded {}",
+            stats.engine_busy_port_seconds
+        ));
+    }
+    if !close(link_busy_derived, stats.link_busy_seconds) {
+        errors.push(format!(
+            "link busy seconds: derived {link_busy_derived} vs recorded {}",
+            stats.link_busy_seconds
+        ));
+    }
+    if !close(overlap_derived, stats.overlap_seconds) {
+        errors.push(format!(
+            "overlap seconds: derived {overlap_derived} vs recorded {}",
+            stats.overlap_seconds
+        ));
+    }
+
+    // Per-job latencies against the completed records.
+    let mut max_latency_error = 0.0f64;
+    let mut jobs_checked = 0usize;
+    for record in stats.records {
+        let Some(&t0) = submitted.get(&record.id) else {
+            errors.push(format!(
+                "job {}: completed but never traced (was tracing enabled \
+                 before submission?)",
+                record.id
+            ));
+            continue;
+        };
+        let finish = stage_spans
+            .get(&record.id)
+            .into_iter()
+            .flatten()
+            .filter(|s| s.stage == StageKind::CopyOut)
+            .map(|s| s.end)
+            .fold(f64::NAN, f64::max);
+        if finish.is_nan() {
+            errors.push(format!("job {}: completed without a copy-out span", record.id));
+            continue;
+        }
+        let derived = finish - t0;
+        let expected = record.latency();
+        let err = (derived - expected).abs();
+        max_latency_error = max_latency_error.max(err);
+        if !close(derived, expected) {
+            errors.push(format!(
+                "job {}: span-derived latency {derived} vs recorded {expected}",
+                record.id
+            ));
+        }
+        jobs_checked += 1;
+    }
+
+    Validation {
+        jobs_checked,
+        engine_busy_derived,
+        engine_busy_expected: stats.engine_busy_port_seconds,
+        link_busy_derived,
+        link_busy_expected: stats.link_busy_seconds,
+        overlap_derived,
+        overlap_expected: stats.overlap_seconds,
+        max_latency_error,
+        errors,
+    }
+}
+
+/// Per-stage time breakdown of one job, summed from its spans — what the
+/// db layer's `PipelineReport::stage_breakdowns` exposes per pipeline
+/// stage. `None` when the job has no spans in the stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobBreakdown {
+    pub waiting: f64,
+    pub copy_in: f64,
+    pub running: f64,
+    pub copy_out: f64,
+    /// Engine dispatches (SGD jobs re-enter admission per batch).
+    pub dispatches: usize,
+}
+
+/// Sum `job`'s stage spans in `events` into a [`JobBreakdown`].
+pub fn job_breakdown(events: &[Event], job: usize) -> Option<JobBreakdown> {
+    let mut b = JobBreakdown {
+        waiting: 0.0,
+        copy_in: 0.0,
+        running: 0.0,
+        copy_out: 0.0,
+        dispatches: 0,
+    };
+    let mut seen = false;
+    for event in events {
+        let Event::Stage(span) = event else { continue };
+        if span.job != job {
+            continue;
+        }
+        seen = true;
+        match span.stage {
+            StageKind::Waiting => b.waiting += span.duration(),
+            StageKind::CopyIn => b.copy_in += span.duration(),
+            StageKind::Running => {
+                b.running += span.duration();
+                b.dispatches += 1;
+            }
+            StageKind::CopyOut => b.copy_out += span.duration(),
+        }
+    }
+    seen.then_some(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_merges_and_measures() {
+        let u = union(vec![(3.0, 4.0), (0.0, 1.0), (0.5, 2.0), (4.0, 4.0)]);
+        assert_eq!(u, vec![(0.0, 2.0), (3.0, 4.0)]);
+        assert!((measure(&u) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intersection_measures_overlap_only() {
+        let a = union(vec![(0.0, 2.0), (3.0, 5.0)]);
+        let b = union(vec![(1.0, 4.0)]);
+        assert!((intersection_measure(&a, &b) - 2.0).abs() < 1e-12);
+        assert_eq!(intersection_measure(&a, &[]), 0.0);
+    }
+
+    #[test]
+    fn stage_transition_table() {
+        assert!(may_follow(StageKind::Waiting, StageKind::CopyIn));
+        assert!(may_follow(StageKind::Waiting, StageKind::Running));
+        assert!(may_follow(StageKind::Running, StageKind::Waiting));
+        assert!(may_follow(StageKind::Running, StageKind::CopyOut));
+        assert!(!may_follow(StageKind::CopyOut, StageKind::Waiting));
+        assert!(!may_follow(StageKind::CopyIn, StageKind::CopyOut));
+        assert!(!may_follow(StageKind::Running, StageKind::CopyIn));
+    }
+
+    // End-to-end validation against a live coordinator is exercised in
+    // `tests/trace_invariants.rs` (proptested over randomized workloads
+    // in both scheduling modes).
+}
