@@ -1,0 +1,94 @@
+//! Deliberately-broken plan fixtures for exercising every analyzer
+//! diagnostic without a card, a workload, or a random generator.
+//!
+//! `hbmctl check --fixture broken` lints [`broken_plan_facts`] and CI
+//! asserts the expected diagnostic codes come out; the analyzer's own
+//! tests reuse it as the kitchen-sink input for JSON rendering.
+
+use super::{ExprFacts, InputFacts, PlanFacts, StageFacts};
+use crate::coordinator::ColumnKey;
+use crate::hbm::memory::PAGE_BYTES;
+
+/// One plan that trips every statically-expressible failure mode:
+///
+/// | stage | construction | diagnostics |
+/// |-------|--------------|-------------|
+/// | 0 | selection over a 2-billion-row keyed column | `stage-footprint` (Error), `cache-overcommit` (Warn) |
+/// | 1, 2 | selections gathering each other's candidates | `cycle` (Error), `submission-order` (Error, the forward half of the cycle) |
+/// | 3 | selection gathering candidates of stage 99 | `dangling-parent` (Error) |
+/// | 4 | ordinary join of two host columns | — |
+/// | 5 | selection using stage 4's *join* output as a candidate list | `dep-kind-mismatch` (Error) |
+/// | 6 | clean selection consumed only by stage 7 | `pin-leak` (Warn: its sole consumer is doomed) |
+/// | 7 | consumer of stage 6 that also names stage 99 | `dangling-parent` (Error) |
+/// | 8 | selection whose declared per-engine ranges share a page | `range-overlap` (Warn, spans named) |
+pub fn broken_plan_facts() -> PlanFacts {
+    let key = |t: &str, c: &str| Some(ColumnKey::new(t, c));
+    let host = |rows: usize, t: &str, c: &str| InputFacts::Host { rows, key: key(t, c) };
+    let gather_candidates = |src: usize, rows: usize| {
+        InputFacts::Expr(ExprFacts::Gather {
+            column: Box::new(ExprFacts::Column { rows, key: None }),
+            positions: Box::new(ExprFacts::Candidates(src)),
+        })
+    };
+
+    // Stage 8: two engines whose declared ranges share page 1.
+    let mut overlapping = StageFacts::select(vec![host(1 << 18, "t", "shared")]);
+    overlapping.declared_ranges = Some(vec![
+        vec![(0, 2 * PAGE_BYTES)],
+        vec![(PAGE_BYTES, PAGE_BYTES)],
+    ]);
+
+    PlanFacts {
+        stages: vec![
+            // 0: oversized footprint + cache overcommit.
+            StageFacts::select(vec![host(2_000_000_000, "lineitem", "huge")]),
+            // 1 ↔ 2: dependency cycle.
+            StageFacts::select(vec![gather_candidates(2, 1024)]),
+            StageFacts::select(vec![gather_candidates(1, 1024)]),
+            // 3: dangling parent.
+            StageFacts::select(vec![gather_candidates(99, 1024)]),
+            // 4: fine on its own.
+            StageFacts::join(vec![host(256, "t", "s"), host(4096, "t", "l")]),
+            // 5: consumes a join as if it were a selection.
+            StageFacts::select(vec![gather_candidates(4, 4096)]),
+            // 6: pinned intermediate whose only consumer (7) is doomed.
+            StageFacts::select(vec![host(4096, "t", "leaked")]),
+            // 7: doomed consumer of 6.
+            StageFacts::join(vec![
+                gather_candidates(6, 4096),
+                InputFacts::Expr(ExprFacts::Candidates(99)),
+            ]),
+            // 8: overlapping declared functional ranges.
+            overlapping,
+        ],
+        engines: None,
+    }
+}
+
+/// The diagnostic codes [`broken_plan_facts`] is guaranteed to produce
+/// (CI asserts the check report contains each of them).
+pub const BROKEN_EXPECTED_CODES: &[&str] = &[
+    "stage-footprint",
+    "cache-overcommit",
+    "cycle",
+    "submission-order",
+    "dangling-parent",
+    "dep-kind-mismatch",
+    "pin-leak",
+    "range-overlap",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::{analyze_facts, CardSpec};
+
+    #[test]
+    fn broken_fixture_produces_every_expected_code() {
+        let report = analyze_facts(&broken_plan_facts(), &CardSpec::default());
+        for code in BROKEN_EXPECTED_CODES {
+            assert!(report.has_code(code), "missing {code}: {:#?}", report.diagnostics);
+        }
+        assert!(report.is_rejected());
+    }
+}

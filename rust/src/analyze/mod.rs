@@ -1,0 +1,1548 @@
+//! Static plan analysis: prove capacity, disjointness, and stall-freedom
+//! **before** a job ever touches the card.
+//!
+//! The paper's integration story (§VI, MonetDB↔FPGA) lives or dies on
+//! data-movement and partitioning decisions made *before* execution, and
+//! the HBM benchmarking follow-ups (Wang et al., Choi et al.) show that
+//! placement/footprint mistakes are exactly what destroys achievable
+//! bandwidth. Without this module every such mistake is a *runtime*
+//! discovery: `CoordinatorError::DependencyStall` fires mid-run,
+//! overlapping `functional_ranges` silently demote parallel execution to
+//! serial, and oversized footprints abort inside the scheduler's
+//! `build_engines`. The analyzer runs the same placement, residency and
+//! dependency models purely symbolically over a
+//! [`PipelineRequest`](crate::db::PipelineRequest) DAG plus a card
+//! description ([`CardSpec`]) and emits lint-style typed
+//! [`Diagnostic`]s instead.
+//!
+//! ## Passes
+//!
+//! | pass | what it proves | severities |
+//! |------|----------------|------------|
+//! | [`Pass::Graph`] | stage DAG soundness: cycles, dangling or forward parents, dependency-kind mismatches, pin leaks | Error / Warn |
+//! | [`Pass::Capacity`] | per-stage footprints fit the granted home windows at the maximum *and* minimum engine grant; keyed residents + pinned intermediates fit the cache budget | Error / Warn |
+//! | [`Pass::Parallelism`] | the parallel functional path will actually engage: ≥ 2 engines, footprint over the serial-fallback threshold, predicted per-engine ranges pairwise disjoint | Warn / Info |
+//! | [`Pass::Floorplan`] | engine counts close placement and timing on the device via the [`floorplan`](crate::floorplan) model | Error / Warn |
+//! | [`Pass::CostBounds`] | analytic copy-in bytes (exact in the cold-cache, no-eviction regime) and link-time lower bounds | Info |
+//!
+//! Severity semantics: an **Error** means execution would abort, stall,
+//! or violate a physical limit — `FpgaAccelerator::submit_plan` rejects
+//! the plan up front with the diagnostic. A **Warn** means the plan runs
+//! but silently degrades (serialized functional pass, cache thrash,
+//! derated clock). **Info** carries analytic bounds and residual
+//! unknowns.
+//!
+//! ## Where the gate sits
+//!
+//! * `FpgaAccelerator::try_submit_plan` runs [`analyze_request`] after
+//!   shape validation and rejects Error-level plans with
+//!   `PipelineError::Rejected` — statically-detectable stalls never
+//!   reach the card (the runtime `DependencyStall` check remains as a
+//!   backstop for cross-submission mistakes).
+//! * `hbmctl check` lints a workload (or the deliberately-broken
+//!   fixture) and writes machine-readable `CHECK_report.json`.
+//! * Debug builds additionally run a dynamic bounds-checker in the
+//!   simulator's *serial* functional path asserting each engine stayed
+//!   inside its declared ranges — validating the soundness assumption
+//!   the parallelism pass (and the parallel path's `HbmView`s) rely on.
+//!
+//! Cross-submission use-after-release (a new DAG naming an
+//! already-retired parent job) cannot be seen from one request's facts;
+//! that case is promoted to a submit-time error by
+//! [`Coordinator::try_submit`](crate::coordinator::Coordinator::try_submit).
+
+pub mod fixtures;
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::ColumnKey;
+use crate::db::MAX_JOIN_ENGINES;
+use crate::engines::sim::PARALLEL_MIN_FOOTPRINT_BYTES;
+use crate::floorplan::{floorplan, BitstreamSpec, EngineKind};
+use crate::hbm::config::SEGMENT_BYTES;
+use crate::hbm::memory::PAGE_BYTES;
+use crate::hbm::shim::{ENGINE_PORTS, LOGICAL_BEAT_BYTES, PORT_HOME_BYTES, STACK_OFFSET};
+use crate::hbm::HbmConfig;
+use crate::interconnect::opencapi::OpenCapiLink;
+
+/// How bad a finding is. `Error` ⇒ the plan is rejected at submit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Which analysis produced a finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Graph,
+    Capacity,
+    Parallelism,
+    Floorplan,
+    CostBounds,
+}
+
+impl Pass {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Pass::Graph => "graph",
+            Pass::Capacity => "capacity",
+            Pass::Parallelism => "parallelism",
+            Pass::Floorplan => "floorplan",
+            Pass::CostBounds => "cost-bounds",
+        }
+    }
+}
+
+/// One lint finding: which pass, how bad, which stage (when
+/// attributable), what happened, and what to do about it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub pass: Pass,
+    pub severity: Severity,
+    /// Stable machine-readable code (asserted by CI), e.g. `"cycle"`.
+    pub code: &'static str,
+    /// Stage index the finding attributes to, when there is one.
+    pub stage: Option<usize>,
+    pub message: String,
+    /// Suggested fix.
+    pub help: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}[{}/{}]", self.severity.as_str(), self.pass.as_str(), self.code)?;
+        if let Some(s) = self.stage {
+            write!(f, " stage {s}")?;
+        }
+        write!(f, ": {}", self.message)?;
+        if !self.help.is_empty() {
+            write!(f, " (help: {})", self.help)?;
+        }
+        Ok(())
+    }
+}
+
+/// The card as the analyzer sees it: everything placement, residency and
+/// cost depend on, with defaults matching a fresh `FpgaAccelerator`.
+#[derive(Debug, Clone)]
+pub struct CardSpec {
+    pub cfg: HbmConfig,
+    pub link: OpenCapiLink,
+    /// Resident-column cache budget (the coordinator's LRU slice).
+    pub cache_bytes: u64,
+    /// Whether the simulator's parallel functional path is enabled.
+    pub parallel_functional: bool,
+    /// Default engine cap for plans that don't set one.
+    pub default_engines: usize,
+}
+
+impl Default for CardSpec {
+    fn default() -> Self {
+        Self {
+            cfg: HbmConfig::default(),
+            link: OpenCapiLink::default(),
+            cache_bytes: crate::coordinator::DEFAULT_CACHE_BYTES,
+            parallel_functional: true,
+            default_engines: ENGINE_PORTS,
+        }
+    }
+}
+
+/// Offloadable operator of one stage, as the analyzer sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpFacts {
+    Select,
+    Join,
+}
+
+impl OpFacts {
+    fn name(self) -> &'static str {
+        match self {
+            OpFacts::Select => "selection",
+            OpFacts::Join => "join",
+        }
+    }
+
+    fn engine_kind(self) -> EngineKind {
+        match self {
+            OpFacts::Select => EngineKind::Selection,
+            OpFacts::Join => EngineKind::Join,
+        }
+    }
+}
+
+/// Dependency expression over stage indices (mirrors the pipeline
+/// layer's `StageExpr`, stripped to what analysis needs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExprFacts {
+    /// Candidate list of an earlier selection stage.
+    Candidates(usize),
+    /// One side of an earlier join stage's pairs.
+    JoinSide { stage: usize, left: bool },
+    /// A host column shipped at install time (keyed → resident cache).
+    Column { rows: usize, key: Option<ColumnKey> },
+    /// Card-side gather of a column at dependency positions.
+    Gather { column: Box<ExprFacts>, positions: Box<ExprFacts> },
+}
+
+impl ExprFacts {
+    /// Stage indices this expression consumes, in syntax order.
+    pub fn parents(&self, out: &mut Vec<usize>) {
+        match self {
+            ExprFacts::Candidates(i) => out.push(*i),
+            ExprFacts::JoinSide { stage, .. } => out.push(*stage),
+            ExprFacts::Column { .. } => {}
+            ExprFacts::Gather { column, positions } => {
+                column.parents(out);
+                positions.parents(out);
+            }
+        }
+    }
+}
+
+/// One payload slot of a stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InputFacts {
+    /// A host base column riding with the submission.
+    Host { rows: usize, key: Option<ColumnKey> },
+    /// Derived on the card from earlier stages' outputs.
+    Expr(ExprFacts),
+}
+
+impl InputFacts {
+    /// Statically-known row count of the column this slot will hold at
+    /// install time (`None` for data-dependent shapes).
+    fn rows(&self) -> Option<u64> {
+        match self {
+            InputFacts::Host { rows, .. } => Some(*rows as u64),
+            InputFacts::Expr(ExprFacts::Column { rows, .. }) => Some(*rows as u64),
+            InputFacts::Expr(_) => None,
+        }
+    }
+}
+
+/// One stage of a plan, reduced to analyzable facts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageFacts {
+    pub op: OpFacts,
+    /// Payload slots in slot order (selection: 1, join: 2 — S then L).
+    pub inputs: Vec<InputFacts>,
+    /// Per-engine functional `(addr, bytes)` ranges, when declared
+    /// explicitly (synthetic fixtures, external engines). `None` means
+    /// "predict them from the shim placement model".
+    pub declared_ranges: Option<Vec<Vec<(u64, u64)>>>,
+}
+
+impl StageFacts {
+    pub fn select(inputs: Vec<InputFacts>) -> Self {
+        Self { op: OpFacts::Select, inputs, declared_ranges: None }
+    }
+
+    pub fn join(inputs: Vec<InputFacts>) -> Self {
+        Self { op: OpFacts::Join, inputs, declared_ranges: None }
+    }
+
+    /// Stage indices this stage consumes (deduplicated, sorted).
+    pub fn parents(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for input in &self.inputs {
+            if let InputFacts::Expr(e) = input {
+                e.parents(&mut out);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// Everything the analyzer needs to know about one plan: the stage DAG
+/// (in submission order) plus the requested engine cap. Built by
+/// `PipelineRequest::facts()` or assembled by hand for fixtures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanFacts {
+    pub stages: Vec<StageFacts>,
+    /// Requested per-pipeline engine cap (`None` = card default).
+    pub engines: Option<usize>,
+}
+
+/// Result of running all five passes over one plan.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    /// All findings, in pass order then stage order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Analytic copy-in bytes: exact in the cold-cache, no-eviction
+    /// regime (cross-checked against trace-measured bytes in tests).
+    pub predicted_copy_in_bytes: u64,
+    /// Copy-out bytes are data-dependent for selection and join; this is
+    /// the guaranteed lower bound.
+    pub predicted_copy_out_bytes_lower: u64,
+    /// Lower bound on OpenCAPI link occupancy (copy-in only), seconds.
+    pub predicted_link_seconds_lower: f64,
+}
+
+impl AnalysisReport {
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == severity).count()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    /// Whether `submit_plan` must reject the plan.
+    pub fn is_rejected(&self) -> bool {
+        self.errors() > 0
+    }
+
+    /// The Error-level diagnostics, for `PipelineError::Rejected`.
+    pub fn error_diagnostics(&self) -> Vec<Diagnostic> {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .cloned()
+            .collect()
+    }
+
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// Machine-readable JSON rendering (the body `hbmctl check` emits).
+    pub fn to_json(&self, indent: &str) -> String {
+        let mut out = String::new();
+        let i1 = indent.to_string() + "  ";
+        out.push_str("{\n");
+        out.push_str(&format!("{i1}\"errors\": {},\n", self.errors()));
+        out.push_str(&format!("{i1}\"warnings\": {},\n", self.warnings()));
+        out.push_str(&format!("{i1}\"infos\": {},\n", self.count(Severity::Info)));
+        out.push_str(&format!(
+            "{i1}\"predicted_copy_in_bytes\": {},\n",
+            self.predicted_copy_in_bytes
+        ));
+        out.push_str(&format!(
+            "{i1}\"predicted_copy_out_bytes_lower\": {},\n",
+            self.predicted_copy_out_bytes_lower
+        ));
+        out.push_str(&format!(
+            "{i1}\"predicted_link_seconds_lower\": {:.9},\n",
+            self.predicted_link_seconds_lower
+        ));
+        out.push_str(&format!("{i1}\"diagnostics\": ["));
+        for (n, d) in self.diagnostics.iter().enumerate() {
+            if n > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n{i1}  {}", diagnostic_json(d)));
+        }
+        if !self.diagnostics.is_empty() {
+            out.push_str(&format!("\n{i1}"));
+        }
+        out.push_str(&format!("]\n{indent}}}"));
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn diagnostic_json(d: &Diagnostic) -> String {
+    let stage = match d.stage {
+        Some(s) => s.to_string(),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"pass\": \"{}\", \"severity\": \"{}\", \"code\": \"{}\", \
+         \"stage\": {}, \"message\": \"{}\", \"help\": \"{}\"}}",
+        d.pass.as_str(),
+        d.severity.as_str(),
+        d.code,
+        stage,
+        json_escape(&d.message),
+        json_escape(&d.help)
+    )
+}
+
+/// Run all five passes over a lowered request. This is what the
+/// `submit_plan` gate and `hbmctl check` call.
+pub fn analyze_request(
+    request: &crate::db::PipelineRequest,
+    card: &CardSpec,
+) -> AnalysisReport {
+    analyze_facts(&request.facts(), card)
+}
+
+/// Run all five passes over raw plan facts (fixtures, tests, and any
+/// front end that is not the pipeline lowerer).
+pub fn analyze_facts(facts: &PlanFacts, card: &CardSpec) -> AnalysisReport {
+    let mut diagnostics = Vec::new();
+    graph_pass(facts, &mut diagnostics);
+    capacity_pass(facts, card, &mut diagnostics);
+    parallelism_pass(facts, card, &mut diagnostics);
+    floorplan_pass(facts, card, &mut diagnostics);
+    let cost = cost_pass(facts, card, &mut diagnostics);
+    AnalysisReport {
+        diagnostics,
+        predicted_copy_in_bytes: cost.copy_in_bytes,
+        predicted_copy_out_bytes_lower: 0,
+        predicted_link_seconds_lower: cost.link_seconds_lower,
+    }
+}
+
+// ---------------------------------------------------------------- grants
+
+/// Effective engine grant of a stage at the requested cap, mirroring
+/// `try_submit_plan` + the scheduler's `queued_view` clamps.
+fn max_grant(facts: &PlanFacts, card: &CardSpec, op: OpFacts) -> u64 {
+    let cap = facts
+        .engines
+        .unwrap_or(card.default_engines)
+        .clamp(1, ENGINE_PORTS);
+    match op {
+        OpFacts::Select => cap as u64,
+        OpFacts::Join => cap.min(MAX_JOIN_ENGINES).max(1) as u64,
+    }
+}
+
+fn align_beat(bytes: u64) -> u64 {
+    bytes.div_ceil(LOGICAL_BEAT_BYTES) * LOGICAL_BEAT_BYTES
+}
+
+// ------------------------------------------------------------ pass 1: graph
+
+/// Stage-DAG soundness. Returns the set of *doomed* stages (can never
+/// run) so pin-leak detection and later passes can reason about them.
+fn graph_pass(facts: &PlanFacts, out: &mut Vec<Diagnostic>) -> Vec<bool> {
+    let n = facts.stages.len();
+    let mut doomed = vec![false; n];
+
+    // Adjacency (consumer → parents), with dangling/forward edges noted.
+    let mut parents: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for (i, stage) in facts.stages.iter().enumerate() {
+        let ps = stage.parents();
+        for &p in &ps {
+            if p >= n {
+                doomed[i] = true;
+                out.push(Diagnostic {
+                    pass: Pass::Graph,
+                    severity: Severity::Error,
+                    code: "dangling-parent",
+                    stage: Some(i),
+                    message: format!(
+                        "stage {i} consumes stage {p}, but the plan has only \
+                         {n} stages"
+                    ),
+                    help: "every dependency must name an earlier stage of \
+                           the same plan"
+                        .into(),
+                });
+            } else if p >= i {
+                doomed[i] = true;
+                out.push(Diagnostic {
+                    pass: Pass::Graph,
+                    severity: Severity::Error,
+                    code: "submission-order",
+                    stage: Some(i),
+                    message: format!(
+                        "stage {i} consumes stage {p}, which is submitted at \
+                         or after it — the coordinator registers dependency \
+                         references only on already-queued parents"
+                    ),
+                    help: "reorder the stages so every producer precedes its \
+                           consumers"
+                        .into(),
+                });
+            } else {
+                // Dependency-kind check: only a selection produces a
+                // candidate list, only a join produces pairs.
+                let want = match kind_of_edge(&facts.stages[i], p) {
+                    Some(EdgeKind::Candidates) => Some(OpFacts::Select),
+                    Some(EdgeKind::JoinSide) => Some(OpFacts::Join),
+                    None => None,
+                };
+                if let Some(want) = want {
+                    let got = facts.stages[p].op;
+                    if got != want {
+                        doomed[i] = true;
+                        out.push(Diagnostic {
+                            pass: Pass::Graph,
+                            severity: Severity::Error,
+                            code: "dep-kind-mismatch",
+                            stage: Some(i),
+                            message: format!(
+                                "stage {i} consumes stage {p} as a {} output, \
+                                 but stage {p} is a {}",
+                                match want {
+                                    OpFacts::Select => "selection",
+                                    OpFacts::Join => "join",
+                                },
+                                got.name()
+                            ),
+                            help: "candidate lists come from selection \
+                                   stages, pair sides from join stages"
+                                .into(),
+                        });
+                    }
+                }
+            }
+        }
+        parents.push(ps.into_iter().filter(|&p| p < n).collect());
+    }
+
+    // Cycle detection (synthetic facts can express cycles even though
+    // the in-order lowerer cannot): iterative DFS, three colors.
+    let mut color = vec![0u8; n]; // 0 white, 1 gray, 2 black
+    for start in 0..n {
+        if color[start] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+        color[start] = 1;
+        while let Some(top) = stack.len().checked_sub(1) {
+            let (node, next) = stack[top];
+            if next < parents[node].len() {
+                stack[top].1 += 1;
+                let p = parents[node][next];
+                match color[p] {
+                    0 => {
+                        color[p] = 1;
+                        stack.push((p, 0));
+                    }
+                    1 => {
+                        doomed[node] = true;
+                        doomed[p] = true;
+                        let mut members: Vec<usize> = stack
+                            .iter()
+                            .map(|&(s, _)| s)
+                            .skip_while(|&s| s != p)
+                            .collect();
+                        members.sort_unstable();
+                        out.push(Diagnostic {
+                            pass: Pass::Graph,
+                            severity: Severity::Error,
+                            code: "cycle",
+                            stage: Some(node),
+                            message: format!(
+                                "stages {members:?} form a dependency cycle; \
+                                 none of them can ever be admitted"
+                            ),
+                            help: "break the cycle: a stage may only consume \
+                                   outputs of earlier stages"
+                                .into(),
+                        });
+                    }
+                    _ => {}
+                }
+            } else {
+                color[node] = 2;
+                stack.pop();
+            }
+        }
+    }
+
+    // Doom is transitive: a consumer of a doomed parent never runs.
+    loop {
+        let mut changed = false;
+        for i in 0..n {
+            if !doomed[i] && parents[i].iter().any(|&p| doomed[p]) {
+                doomed[i] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Pin-leak: a runnable producer whose consumers are all doomed. Its
+    // pinned intermediate is published but never consumed, so the pin is
+    // never released and the bytes stay locked in the cache.
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, ps) in parents.iter().enumerate() {
+        for &p in ps {
+            consumers[p].push(i);
+        }
+    }
+    for (p, cs) in consumers.iter().enumerate() {
+        if !cs.is_empty() && !doomed[p] && cs.iter().all(|&c| doomed[c]) {
+            out.push(Diagnostic {
+                pass: Pass::Graph,
+                severity: Severity::Warn,
+                code: "pin-leak",
+                stage: Some(p),
+                message: format!(
+                    "stage {p}'s intermediate is pinned for consumers \
+                     {cs:?}, but none of them can ever run — the pin is \
+                     never released"
+                ),
+                help: "fix the doomed consumers or drop the dependency; \
+                       leaked pins permanently shrink the resident cache"
+                    .into(),
+            });
+        }
+    }
+
+    doomed
+}
+
+enum EdgeKind {
+    Candidates,
+    JoinSide,
+}
+
+/// How stage `consumer` uses parent `p`: as a candidate list, as a join
+/// side, or `None` when `p` only appears inside gather positions (those
+/// recurse to one of the former anyway).
+fn kind_of_edge(consumer: &StageFacts, p: usize) -> Option<EdgeKind> {
+    fn walk(e: &ExprFacts, p: usize) -> Option<EdgeKind> {
+        match e {
+            ExprFacts::Candidates(i) if *i == p => Some(EdgeKind::Candidates),
+            ExprFacts::JoinSide { stage, .. } if *stage == p => {
+                Some(EdgeKind::JoinSide)
+            }
+            ExprFacts::Gather { column, positions } => {
+                walk(column, p).or_else(|| walk(positions, p))
+            }
+            _ => None,
+        }
+    }
+    for input in &consumer.inputs {
+        if let InputFacts::Expr(e) = input {
+            if let Some(k) = walk(e, p) {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+// --------------------------------------------------------- pass 2: capacity
+
+/// Would the scheduler's `build_engines` placement succeed for this
+/// stage at `engines` granted engines? Mirrors the shim bump-allocator
+/// arithmetic exactly (input + output halves per home window).
+fn stage_fits(op: OpFacts, rows: &[Option<u64>], engines: u64) -> Option<bool> {
+    match op {
+        OpFacts::Select => {
+            let n = rows.first().copied().flatten()?;
+            let chunk = n.div_ceil(engines.max(1)).max(1);
+            let input_half = align_beat(chunk * 4) / 2;
+            let output_half = align_beat(chunk * 4 + 64) / 2;
+            Some(input_half + output_half <= SEGMENT_BYTES)
+        }
+        OpFacts::Join => {
+            // Each join engine pairs a read port (S replica + L chunk)
+            // with a write port (output); the output cap is clamped to
+            // the home window, so only the read port can overflow.
+            let s = rows.first().copied().flatten();
+            let l = rows.get(1).copied().flatten();
+            if s.is_none() && l.is_none() {
+                return None;
+            }
+            let s_half = s.map_or(0, |s| align_beat(s * 4 + 64) / 2);
+            let l_half = l.map_or(0, |l| {
+                align_beat(l.div_ceil(engines.max(1)).max(1) * 4 + 64) / 2
+            });
+            Some(s_half + l_half <= SEGMENT_BYTES)
+        }
+    }
+}
+
+fn capacity_pass(facts: &PlanFacts, card: &CardSpec, out: &mut Vec<Diagnostic>) {
+    for (i, stage) in facts.stages.iter().enumerate() {
+        let rows: Vec<Option<u64>> =
+            stage.inputs.iter().map(|input| input.rows()).collect();
+        let g = max_grant(facts, card, stage.op);
+        match stage_fits(stage.op, &rows, g) {
+            Some(false) => out.push(Diagnostic {
+                pass: Pass::Capacity,
+                severity: Severity::Error,
+                code: "stage-footprint",
+                stage: Some(i),
+                message: format!(
+                    "{} stage {i} cannot be placed even at its maximum \
+                     grant of {g} engine(s): a partition's input + output \
+                     exceeds the {} MiB home window",
+                    stage.op.name(),
+                    SEGMENT_BYTES / (1 << 20)
+                ),
+                help: "shrink the input, or partition the operator \
+                       host-side (the paper's block-wise scan)"
+                    .into(),
+            }),
+            Some(true) => {
+                // Feasible at the full grant — but co-running policies
+                // may grant as little as one engine.
+                if stage_fits(stage.op, &rows, 1) == Some(false) {
+                    out.push(Diagnostic {
+                        pass: Pass::Capacity,
+                        severity: Severity::Warn,
+                        code: "min-grant-footprint",
+                        stage: Some(i),
+                        message: format!(
+                            "{} stage {i} fits at its full grant of {g} \
+                             engine(s) but not at the minimum grant of 1 — \
+                             under co-running admission it may be placed \
+                             with too few home windows and abort",
+                            stage.op.name()
+                        ),
+                        help: "reserve the card (submit alone), or lower \
+                               the data size until one home window holds a \
+                               full partition"
+                            .into(),
+                    });
+                }
+            }
+            None => {}
+        }
+    }
+
+    // Resident-cache accounting: every distinct keyed column is admitted
+    // once; pinned intermediates live from their producer until their
+    // last consumer. Intermediate sizes are data-dependent, so only
+    // selection outputs (≤ input rows × 4 B) contribute a bound.
+    let mut keyed: BTreeMap<ColumnKey, u64> = BTreeMap::new();
+    for stage in &facts.stages {
+        for input in &stage.inputs {
+            collect_keyed(input, &mut keyed);
+        }
+    }
+    for (key, bytes) in &keyed {
+        if *bytes > card.cache_bytes {
+            out.push(Diagnostic {
+                pass: Pass::Capacity,
+                severity: Severity::Warn,
+                code: "cache-overcommit",
+                stage: None,
+                message: format!(
+                    "keyed column {key} ({bytes} B) exceeds the whole \
+                     resident-cache budget ({} B); every submission will \
+                     re-pay its copy-in",
+                    card.cache_bytes
+                ),
+                help: "raise the cache budget or split the column".into(),
+            });
+        }
+    }
+    let keyed_total: u64 = keyed.values().sum();
+    let pinned_peak = pinned_intermediate_peak(facts);
+    if keyed_total <= card.cache_bytes
+        && keyed_total + pinned_peak > card.cache_bytes
+    {
+        out.push(Diagnostic {
+            pass: Pass::Capacity,
+            severity: Severity::Warn,
+            code: "cache-overcommit",
+            stage: None,
+            message: format!(
+                "keyed residents ({keyed_total} B) plus peak pinned \
+                 intermediates (≥ {pinned_peak} B) overcommit the \
+                 resident-cache budget ({} B); the LRU will thrash \
+                 unpinned columns while pins are live",
+                card.cache_bytes
+            ),
+            help: "raise the cache budget, or split the plan so fewer \
+                   intermediates are pinned concurrently"
+                .into(),
+        });
+    } else if keyed_total > card.cache_bytes {
+        out.push(Diagnostic {
+            pass: Pass::Capacity,
+            severity: Severity::Warn,
+            code: "cache-overcommit",
+            stage: None,
+            message: format!(
+                "the plan's distinct keyed columns total {keyed_total} B, \
+                 over the resident-cache budget ({} B); repeat submissions \
+                 will not be copy-free",
+                card.cache_bytes
+            ),
+            help: "raise the cache budget or drop keys from cold columns"
+                .into(),
+        });
+    }
+}
+
+fn collect_keyed(input: &InputFacts, keyed: &mut BTreeMap<ColumnKey, u64>) {
+    fn walk_expr(e: &ExprFacts, keyed: &mut BTreeMap<ColumnKey, u64>) {
+        match e {
+            ExprFacts::Column { rows, key: Some(key) } if *rows > 0 => {
+                let bytes = (*rows as u64) * 4;
+                let entry = keyed.entry(key.clone()).or_insert(bytes);
+                *entry = (*entry).max(bytes);
+            }
+            ExprFacts::Gather { column, positions } => {
+                walk_expr(column, keyed);
+                walk_expr(positions, keyed);
+            }
+            _ => {}
+        }
+    }
+    match input {
+        InputFacts::Host { rows, key: Some(key) } if *rows > 0 => {
+            let bytes = (*rows as u64) * 4;
+            let entry = keyed.entry(key.clone()).or_insert(bytes);
+            *entry = (*entry).max(bytes);
+        }
+        InputFacts::Expr(e) => walk_expr(e, keyed),
+        _ => {}
+    }
+}
+
+/// Worst-case bytes of pinned intermediates alive at once: a selection
+/// stage's output is at most `rows × 4` B, pinned from completion until
+/// its last consumer finishes. Join outputs are unbounded statically and
+/// contribute nothing (this is a lower bound on the peak).
+fn pinned_intermediate_peak(facts: &PlanFacts) -> u64 {
+    let n = facts.stages.len();
+    let mut last_consumer = vec![None::<usize>; n];
+    for (i, stage) in facts.stages.iter().enumerate() {
+        for p in stage.parents() {
+            if p < n {
+                let slot = &mut last_consumer[p];
+                *slot = Some(slot.map_or(i, |c| c.max(i)));
+            }
+        }
+    }
+    let mut peak = 0u64;
+    for t in 0..n {
+        let mut live = 0u64;
+        for (p, consumer) in last_consumer.iter().enumerate() {
+            let Some(c) = consumer else { continue };
+            if p < t && t <= *c {
+                if let OpFacts::Select = facts.stages[p].op {
+                    if let Some(rows) = facts.stages[p]
+                        .inputs
+                        .first()
+                        .and_then(|input| input.rows())
+                    {
+                        live += rows * 4;
+                    }
+                }
+            }
+        }
+        peak = peak.max(live);
+    }
+    peak
+}
+
+// ------------------------------------------------------ pass 3: parallelism
+
+/// Predicted per-engine functional range sets for a stage, replaying the
+/// scheduler's shim placement on ports `0..`. `None` when the input
+/// shapes are not statically known.
+fn predicted_range_sets(
+    stage: &StageFacts,
+    grant: u64,
+) -> Option<Vec<Vec<(u64, u64)>>> {
+    if let Some(declared) = &stage.declared_ranges {
+        return Some(declared.clone());
+    }
+    let mut next_free = [0u64; ENGINE_PORTS];
+    let mut alloc = |port: usize, bytes: u64| -> Option<(u64, u64)> {
+        let aligned = align_beat(bytes);
+        let half = aligned / 2;
+        let used = next_free[port];
+        if used + half > SEGMENT_BYTES {
+            return None;
+        }
+        next_free[port] = used + half;
+        Some((port as u64 * SEGMENT_BYTES + used, aligned))
+    };
+    let buf_ranges = |(lo, bytes): (u64, u64)| {
+        vec![(lo, bytes / 2), (lo + STACK_OFFSET, bytes / 2)]
+    };
+    match stage.op {
+        OpFacts::Select => {
+            let rows = stage.inputs.first()?.rows()?;
+            if rows == 0 {
+                return Some(Vec::new());
+            }
+            let chunk = rows.div_ceil(grant.max(1)).max(1);
+            let mut sets = Vec::new();
+            let mut remaining = rows;
+            let mut port = 0usize;
+            while remaining > 0 && port < grant as usize {
+                let slice = remaining.min(chunk);
+                let input = alloc(port, slice * 4)?;
+                let output = alloc(port, slice * 4 + 64)?;
+                let mut set = buf_ranges(input);
+                set.extend(buf_ranges(output));
+                sets.push(set);
+                remaining -= slice;
+                port += 1;
+            }
+            Some(sets)
+        }
+        OpFacts::Join => {
+            let s_rows = stage.inputs.first()?.rows()?;
+            let l_rows = stage.inputs.get(1)?.rows()?;
+            if l_rows == 0 {
+                return Some(Vec::new());
+            }
+            let pairs = grant.max(1);
+            let chunk = l_rows.div_ceil(pairs).max(1);
+            let mut sets = Vec::new();
+            let mut remaining = l_rows;
+            let mut pair = 0usize;
+            while remaining > 0 && pair < pairs as usize {
+                let slice = remaining.min(chunk);
+                let read_port = pair * 2;
+                let write_port = pair * 2 + 1;
+                let s_buf = alloc(read_port, s_rows * 4 + 64)?;
+                let l_buf = alloc(read_port, slice * 4 + 64)?;
+                let out_cap = (slice * 16 + 256).min(PORT_HOME_BYTES - 64);
+                let output = alloc(write_port, out_cap)?;
+                let mut set = buf_ranges(s_buf);
+                set.extend(buf_ranges(l_buf));
+                set.extend(buf_ranges(output));
+                sets.push(set);
+                remaining -= slice;
+                pair += 1;
+            }
+            Some(sets)
+        }
+    }
+}
+
+/// First page-sharing pair of ranges across two different engines'
+/// range sets, mirroring `HbmMemory::take_disjoint_views`' granularity.
+fn first_overlap(
+    sets: &[Vec<(u64, u64)>],
+) -> Option<(usize, (u64, u64), usize, (u64, u64))> {
+    let pages = |(addr, bytes): (u64, u64)| {
+        let first = addr / PAGE_BYTES;
+        let last = (addr + bytes.max(1) - 1) / PAGE_BYTES;
+        (first, last)
+    };
+    for (a, set_a) in sets.iter().enumerate() {
+        for (b, set_b) in sets.iter().enumerate().skip(a + 1) {
+            for &ra in set_a {
+                if ra.1 == 0 {
+                    continue;
+                }
+                let (a_lo, a_hi) = pages(ra);
+                for &rb in set_b {
+                    if rb.1 == 0 {
+                        continue;
+                    }
+                    let (b_lo, b_hi) = pages(rb);
+                    if a_lo <= b_hi && b_lo <= a_hi {
+                        return Some((a, ra, b, rb));
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+fn parallelism_pass(
+    facts: &PlanFacts,
+    card: &CardSpec,
+    out: &mut Vec<Diagnostic>,
+) {
+    if !card.parallel_functional && !facts.stages.is_empty() {
+        out.push(Diagnostic {
+            pass: Pass::Parallelism,
+            severity: Severity::Info,
+            code: "parallel-disabled",
+            stage: None,
+            message: "parallel functional execution is disabled on this \
+                      card; every stage's functional pass runs serially"
+                .into(),
+            help: "enable it with FpgaAccelerator::set_parallel_functional"
+                .into(),
+        });
+    }
+    for (i, stage) in facts.stages.iter().enumerate() {
+        let g = max_grant(facts, card, stage.op);
+        let Some(sets) = predicted_range_sets(stage, g) else {
+            // `None` with fully-known shapes means the placement replay
+            // overflowed a home window — the capacity pass already
+            // reported that as an Error; an unknown-shape Info here
+            // would misattribute it to dependency-fed inputs.
+            if stage.inputs.iter().all(|i| i.rows().is_some()) {
+                continue;
+            }
+            out.push(Diagnostic {
+                pass: Pass::Parallelism,
+                severity: Severity::Info,
+                code: "unknown-ranges",
+                stage: Some(i),
+                message: format!(
+                    "{} stage {i} has dependency-fed inputs of unknown \
+                     shape; its functional ranges cannot be predicted \
+                     statically",
+                    stage.op.name()
+                ),
+                help: "the simulator decides parallel vs serial at install \
+                       time, when the concrete columns exist"
+                    .into(),
+            });
+            continue;
+        };
+        if sets.is_empty() {
+            // A statically-empty input has no functional work to
+            // parallelize; warning about engine counts would be noise.
+            continue;
+        }
+        if let Some((a, ra, b, rb)) = first_overlap(&sets) {
+            out.push(Diagnostic {
+                pass: Pass::Parallelism,
+                severity: Severity::Warn,
+                code: "range-overlap",
+                stage: Some(i),
+                message: format!(
+                    "{} stage {i}: engine {a} range [{:#x}, +{}) and engine \
+                     {b} range [{:#x}, +{}) share a {} KiB page — the \
+                     functional pass will silently serialize",
+                    stage.op.name(),
+                    ra.0,
+                    ra.1,
+                    rb.0,
+                    rb.1,
+                    PAGE_BYTES / 1024
+                ),
+                help: "give each engine page-disjoint buffers (one home \
+                       window per engine is the ideal partitioning)"
+                    .into(),
+            });
+            continue;
+        }
+        if sets.len() <= 1 {
+            out.push(Diagnostic {
+                pass: Pass::Parallelism,
+                severity: Severity::Warn,
+                code: "single-engine",
+                stage: Some(i),
+                message: format!(
+                    "{} stage {i} runs on {} engine(s); the parallel \
+                     functional path needs at least two",
+                    stage.op.name(),
+                    sets.len()
+                ),
+                help: "raise the engine cap or enlarge the input so it \
+                       splits into more partitions"
+                    .into(),
+            });
+            continue;
+        }
+        let footprint: u64 = sets
+            .iter()
+            .map(|s| s.iter().map(|&(_, b)| b).sum::<u64>())
+            .sum();
+        if footprint < PARALLEL_MIN_FOOTPRINT_BYTES {
+            out.push(Diagnostic {
+                pass: Pass::Parallelism,
+                severity: Severity::Warn,
+                code: "small-footprint",
+                stage: Some(i),
+                message: format!(
+                    "{} stage {i}'s functional footprint ({footprint} B) is \
+                     under the {} B parallel threshold; the pass will run \
+                     serially (thread spawn would cost more than it saves)",
+                    stage.op.name(),
+                    PARALLEL_MIN_FOOTPRINT_BYTES
+                ),
+                help: "expected for small inputs — batch more data per \
+                       stage if parallel host execution matters"
+                    .into(),
+            });
+        }
+    }
+}
+
+// -------------------------------------------------------- pass 4: floorplan
+
+fn floorplan_pass(facts: &PlanFacts, card: &CardSpec, out: &mut Vec<Diagnostic>) {
+    let mut ceiling: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for (i, stage) in facts.stages.iter().enumerate() {
+        let kind = stage.op.engine_kind();
+        let g = max_grant(facts, card, stage.op) as usize;
+        let max = *ceiling
+            .entry(kind.name())
+            .or_insert_with(|| BitstreamSpec::max_engines(kind));
+        if g > max {
+            out.push(Diagnostic {
+                pass: Pass::Floorplan,
+                severity: Severity::Error,
+                code: "engine-cap",
+                stage: Some(i),
+                message: format!(
+                    "{} stage {i} wants {g} engines but at most {max} {} \
+                     engines fit the device's resources",
+                    stage.op.name(),
+                    kind.name()
+                ),
+                help: format!("cap the stage at {max} engines"),
+            });
+            continue;
+        }
+        let spec = BitstreamSpec { kind, engines: g };
+        let fp = floorplan(&spec);
+        if !fp.feasible {
+            out.push(Diagnostic {
+                pass: Pass::Floorplan,
+                severity: Severity::Error,
+                code: "floorplan-infeasible",
+                stage: Some(i),
+                message: format!(
+                    "{} stage {i}: {g} {} engines do not place within the \
+                     SLR routing headroom",
+                    stage.op.name(),
+                    kind.name()
+                ),
+                help: "lower the engine cap until the floorplan closes"
+                    .into(),
+            });
+            continue;
+        }
+        if fp.achieved_clock.mhz() < card.cfg.clock.mhz() {
+            out.push(Diagnostic {
+                pass: Pass::Floorplan,
+                severity: Severity::Warn,
+                code: "clock-derate",
+                stage: Some(i),
+                message: format!(
+                    "{} stage {i}: the card is configured at {} MHz but \
+                     this bitstream only closes timing at {} MHz",
+                    stage.op.name(),
+                    card.cfg.clock.mhz(),
+                    fp.achieved_clock.mhz()
+                ),
+                help: "run the card at the achievable clock (the paper \
+                       ships all designs at 200 MHz)"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------ pass 5: cost bounds
+
+struct CostSummary {
+    copy_in_bytes: u64,
+    link_seconds_lower: f64,
+}
+
+/// Stateful analytic copy-in model: replays the coordinator's admission
+/// charging (keyed columns hit the resident LRU after their first
+/// touch, anonymous columns always pay) against a simulated key set.
+/// Persisting one model across several plans predicts a whole session's
+/// bytes — what `hbmctl plan` compares against the measured artifact.
+///
+/// Exact in the no-eviction regime (distinct keyed bytes within the
+/// cache budget); [`Pass::Capacity`] warns when that assumption breaks.
+#[derive(Debug)]
+pub struct CostModel {
+    resident: BTreeMap<ColumnKey, u64>,
+    cache_bytes: u64,
+}
+
+impl CostModel {
+    pub fn new(cache_bytes: u64) -> Self {
+        Self { resident: BTreeMap::new(), cache_bytes }
+    }
+
+    fn charge_column(&mut self, rows: usize, key: &Option<ColumnKey>) -> u64 {
+        let bytes = rows as u64 * 4;
+        if bytes == 0 {
+            return 0;
+        }
+        match key {
+            Some(key) => {
+                if self.resident.contains_key(key) {
+                    0
+                } else {
+                    // Mirror `ColumnCache::access`: a column larger than
+                    // the whole budget is never admitted, so every
+                    // access keeps paying.
+                    if bytes <= self.cache_bytes {
+                        self.resident.insert(key.clone(), bytes);
+                    }
+                    bytes
+                }
+            }
+            None => bytes,
+        }
+    }
+
+    fn charge_expr(&mut self, e: &ExprFacts) -> u64 {
+        match e {
+            ExprFacts::Candidates(_) | ExprFacts::JoinSide { .. } => 0,
+            ExprFacts::Column { rows, key } => self.charge_column(*rows, key),
+            ExprFacts::Gather { column, positions } => {
+                self.charge_expr(column) + self.charge_expr(positions)
+            }
+        }
+    }
+
+    /// Predicted copy-in bytes of one stage, charging this model.
+    pub fn charge_stage(&mut self, stage: &StageFacts) -> u64 {
+        let mut charged = 0;
+        for input in &stage.inputs {
+            charged += match input {
+                InputFacts::Host { rows, key } => self.charge_column(*rows, key),
+                InputFacts::Expr(e) => self.charge_expr(e),
+            };
+        }
+        charged
+    }
+
+    /// Predicted copy-in bytes of a whole plan, in stage order.
+    pub fn charge_plan(&mut self, facts: &PlanFacts) -> u64 {
+        facts.stages.iter().map(|s| self.charge_stage(s)).sum()
+    }
+}
+
+fn cost_pass(
+    facts: &PlanFacts,
+    card: &CardSpec,
+    out: &mut Vec<Diagnostic>,
+) -> CostSummary {
+    let mut model = CostModel::new(card.cache_bytes);
+    let mut total = 0u64;
+    let mut transfers = 0u64;
+    for (i, stage) in facts.stages.iter().enumerate() {
+        let charged = model.charge_stage(stage);
+        total += charged;
+        if charged > 0 {
+            transfers += 1;
+        }
+        out.push(Diagnostic {
+            pass: Pass::CostBounds,
+            severity: Severity::Info,
+            code: "copy-in-bound",
+            stage: Some(i),
+            message: format!(
+                "{} stage {i} copies in {charged} B over the link (cold \
+                 resident cache; repeats of keyed columns are free)",
+                stage.op.name()
+            ),
+            help: String::new(),
+        });
+    }
+    let link_seconds_lower = if total > 0 {
+        total as f64 / card.link.bandwidth + transfers as f64 * card.link.latency
+    } else {
+        0.0
+    };
+    if !facts.stages.is_empty() {
+        out.push(Diagnostic {
+            pass: Pass::CostBounds,
+            severity: Severity::Info,
+            code: "link-time-bound",
+            stage: None,
+            message: format!(
+                "plan copy-in ≥ {total} B ⇒ ≥ {link_seconds_lower:.6} s of \
+                 link time before compute; copy-out is data-dependent \
+                 (lower bound 0 B)"
+            ),
+            help: String::new(),
+        });
+    }
+    CostSummary { copy_in_bytes: total, link_seconds_lower }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(t: &str, c: &str) -> Option<ColumnKey> {
+        Some(ColumnKey::new(t, c))
+    }
+
+    fn host(rows: usize, t: &str, c: &str) -> InputFacts {
+        InputFacts::Host { rows, key: key(t, c) }
+    }
+
+    fn card() -> CardSpec {
+        CardSpec::default()
+    }
+
+    fn plan(stages: Vec<StageFacts>) -> PlanFacts {
+        PlanFacts { stages, engines: None }
+    }
+
+    #[test]
+    fn clean_two_stage_plan_has_no_errors_or_warnings_beyond_size() {
+        // select(okey) feeding a join through a gather: the shape the
+        // analytics mix lowers to, big enough for the parallel path.
+        let rows = 1 << 18; // 1 MiB column
+        let facts = plan(vec![
+            StageFacts::select(vec![host(rows, "orders", "okey")]),
+            StageFacts::join(vec![
+                host(4096, "customers", "ckey"),
+                InputFacts::Expr(ExprFacts::Gather {
+                    column: Box::new(ExprFacts::Column {
+                        rows,
+                        key: key("orders", "cust"),
+                    }),
+                    positions: Box::new(ExprFacts::Candidates(0)),
+                }),
+            ]),
+        ]);
+        let report = analyze_facts(&facts, &card());
+        assert_eq!(report.errors(), 0, "{:?}", report.error_diagnostics());
+        // Stage 1's join shape is dependency-fed: ranges unknown (Info).
+        assert!(report.has_code("unknown-ranges"));
+        // Copy-in: okey + ckey + cust, each charged exactly once.
+        assert_eq!(
+            report.predicted_copy_in_bytes,
+            (rows as u64 * 4) + 4096 * 4 + (rows as u64 * 4)
+        );
+        assert!(report.predicted_link_seconds_lower > 0.0);
+    }
+
+    #[test]
+    fn cycle_is_detected_and_rejected() {
+        // Stages 1 and 2 gather each other's candidates: a true cycle.
+        let gather = |src: usize, rows: usize| {
+            InputFacts::Expr(ExprFacts::Gather {
+                column: Box::new(ExprFacts::Column { rows, key: None }),
+                positions: Box::new(ExprFacts::Candidates(src)),
+            })
+        };
+        let facts = plan(vec![
+            StageFacts::select(vec![host(1024, "t", "a")]),
+            StageFacts::select(vec![gather(2, 1024)]),
+            StageFacts::select(vec![gather(1, 1024)]),
+        ]);
+        let report = analyze_facts(&facts, &card());
+        assert!(report.is_rejected());
+        assert!(report.has_code("cycle"), "{:?}", report.diagnostics);
+    }
+
+    #[test]
+    fn dangling_parent_is_an_error() {
+        let facts = plan(vec![StageFacts::select(vec![InputFacts::Expr(
+            ExprFacts::Gather {
+                column: Box::new(ExprFacts::Column { rows: 64, key: None }),
+                positions: Box::new(ExprFacts::Candidates(99)),
+            },
+        )])]);
+        let report = analyze_facts(&facts, &card());
+        assert!(report.is_rejected());
+        assert!(report.has_code("dangling-parent"));
+    }
+
+    #[test]
+    fn forward_reference_is_an_error() {
+        let facts = plan(vec![
+            StageFacts::select(vec![InputFacts::Expr(ExprFacts::Gather {
+                column: Box::new(ExprFacts::Column { rows: 64, key: None }),
+                positions: Box::new(ExprFacts::Candidates(1)),
+            })]),
+            StageFacts::select(vec![host(64, "t", "a")]),
+        ]);
+        let report = analyze_facts(&facts, &card());
+        assert!(report.is_rejected());
+        assert!(report.has_code("submission-order"));
+    }
+
+    #[test]
+    fn dep_kind_mismatch_is_an_error() {
+        // Stage 1 consumes stage 0's output as candidates, but stage 0
+        // is a join.
+        let facts = plan(vec![
+            StageFacts::join(vec![host(64, "t", "s"), host(64, "t", "l")]),
+            StageFacts::select(vec![InputFacts::Expr(ExprFacts::Gather {
+                column: Box::new(ExprFacts::Column { rows: 64, key: None }),
+                positions: Box::new(ExprFacts::Candidates(0)),
+            })]),
+        ]);
+        let report = analyze_facts(&facts, &card());
+        assert!(report.is_rejected());
+        assert!(report.has_code("dep-kind-mismatch"));
+    }
+
+    #[test]
+    fn pin_leak_warns_on_runnable_producer_with_doomed_consumers() {
+        let facts = plan(vec![
+            StageFacts::select(vec![host(1024, "t", "a")]),
+            // Consumer of stage 0, but itself doomed by a dangling edge.
+            StageFacts::join(vec![
+                InputFacts::Expr(ExprFacts::Gather {
+                    column: Box::new(ExprFacts::Column { rows: 1024, key: None }),
+                    positions: Box::new(ExprFacts::Candidates(0)),
+                }),
+                InputFacts::Expr(ExprFacts::Candidates(42)),
+            ]),
+        ]);
+        let report = analyze_facts(&facts, &card());
+        assert!(report.has_code("dangling-parent"));
+        let leak = report
+            .diagnostics
+            .iter()
+            .find(|d| d.code == "pin-leak")
+            .expect("pin-leak warning");
+        assert_eq!(leak.stage, Some(0));
+        assert_eq!(leak.severity, Severity::Warn);
+    }
+
+    #[test]
+    fn oversized_stage_is_a_capacity_error() {
+        // 2 G rows × 4 B = 8 GB over 14 engines: ~571 MB per home
+        // window, far over 256 MiB.
+        let facts = plan(vec![StageFacts::select(vec![host(
+            2_000_000_000,
+            "t",
+            "huge",
+        )])]);
+        let report = analyze_facts(&facts, &card());
+        assert!(report.is_rejected());
+        assert!(report.has_code("stage-footprint"));
+        assert!(report.has_code("cache-overcommit"));
+    }
+
+    #[test]
+    fn min_grant_infeasibility_is_a_warning_not_an_error() {
+        // 100 M rows: 400 MB fits 14 home windows (~29 MB each) but not
+        // one (200 MB input half + 200 MB output half > 256 MiB).
+        let facts = plan(vec![StageFacts::select(vec![host(
+            100_000_000,
+            "t",
+            "big",
+        )])]);
+        let report = analyze_facts(&facts, &card());
+        assert_eq!(report.errors(), 0, "{:?}", report.error_diagnostics());
+        assert!(report.has_code("min-grant-footprint"));
+    }
+
+    #[test]
+    fn overlapping_declared_ranges_warn_with_named_spans() {
+        let mut stage = StageFacts::select(vec![host(1 << 20, "t", "a")]);
+        stage.declared_ranges = Some(vec![
+            vec![(0, 2 * PAGE_BYTES)],
+            vec![(PAGE_BYTES, PAGE_BYTES)], // shares page 1 with engine 0
+        ]);
+        let facts = plan(vec![stage]);
+        let report = analyze_facts(&facts, &card());
+        let d = report
+            .diagnostics
+            .iter()
+            .find(|d| d.code == "range-overlap")
+            .expect("overlap warning");
+        assert_eq!(d.severity, Severity::Warn);
+        assert!(
+            d.message.contains("engine 0") && d.message.contains("engine 1"),
+            "spans must be named: {}",
+            d.message
+        );
+        assert!(d.message.contains("0x"), "addresses named: {}", d.message);
+    }
+
+    #[test]
+    fn small_footprint_and_single_engine_warn() {
+        let small = plan(vec![StageFacts::select(vec![host(1000, "t", "a")])]);
+        let report = analyze_facts(&small, &card());
+        assert!(report.has_code("small-footprint"));
+
+        let single = PlanFacts {
+            stages: vec![StageFacts::select(vec![host(1 << 20, "t", "a")])],
+            engines: Some(1),
+        };
+        let report = analyze_facts(&single, &card());
+        assert!(report.has_code("single-engine"));
+    }
+
+    #[test]
+    fn predicted_ranges_of_real_shapes_are_always_disjoint() {
+        // The shim's bump allocator hands out disjoint home windows; the
+        // overlap warning must never fire for predicted placements.
+        for rows in [1usize << 10, 1 << 16, 1 << 20, 3_333_333] {
+            let facts = plan(vec![
+                StageFacts::select(vec![host(rows, "t", "a")]),
+                StageFacts::join(vec![
+                    host(rows / 4 + 1, "t", "s"),
+                    host(rows, "t", "l"),
+                ]),
+            ]);
+            let report = analyze_facts(&facts, &card());
+            assert!(!report.has_code("range-overlap"), "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn clock_derate_warns_at_400mhz() {
+        use crate::hbm::config::FabricClock;
+        let facts = plan(vec![StageFacts::select(vec![host(1 << 20, "t", "a")])]);
+        let card = CardSpec {
+            cfg: HbmConfig::at_clock(FabricClock::Mhz400),
+            ..CardSpec::default()
+        };
+        let report = analyze_facts(&facts, &card);
+        assert!(report.has_code("clock-derate"));
+        assert_eq!(report.errors(), 0);
+    }
+
+    #[test]
+    fn cost_model_charges_each_key_once_across_plans() {
+        let one = plan(vec![StageFacts::select(vec![host(1000, "t", "a")])]);
+        let mut model = CostModel::new(card().cache_bytes);
+        assert_eq!(model.charge_plan(&one), 4000);
+        assert_eq!(model.charge_plan(&one), 0, "repeat is resident");
+        let anon = plan(vec![StageFacts::select(vec![InputFacts::Host {
+            rows: 1000,
+            key: None,
+        }])]);
+        assert_eq!(model.charge_plan(&anon), 4000);
+        assert_eq!(model.charge_plan(&anon), 4000, "anonymous always pays");
+    }
+
+    #[test]
+    fn report_json_is_well_formed_and_carries_codes() {
+        let facts = fixtures::broken_plan_facts();
+        let report = analyze_facts(&facts, &card());
+        let json = report.to_json("");
+        assert!(json.contains("\"errors\":"));
+        assert!(json.contains("\"cycle\""));
+        assert!(json.contains("\"dangling-parent\""));
+        assert!(json.contains("\"range-overlap\""));
+        assert!(json.contains("\"stage-footprint\""));
+        // Balanced braces/brackets as a cheap well-formedness check.
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "{json}"
+        );
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn disabled_parallel_functional_is_an_info() {
+        let facts = plan(vec![StageFacts::select(vec![host(1 << 20, "t", "a")])]);
+        let card = CardSpec { parallel_functional: false, ..CardSpec::default() };
+        let report = analyze_facts(&facts, &card);
+        assert!(report.has_code("parallel-disabled"));
+        assert_eq!(report.errors(), 0);
+    }
+}

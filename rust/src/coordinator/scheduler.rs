@@ -135,6 +135,15 @@ pub enum CoordinatorError {
     /// child must be submitted while its parents are still queued).
     /// Carries the stuck job ids.
     DependencyStall { stalled: Vec<usize> },
+    /// A spec handed to [`Coordinator::try_submit`] names parents that
+    /// can never publish for it: ids never issued (`unknown`), or ids
+    /// already retired (`released` — intermediates are only registered
+    /// for publication to children submitted while the parent is still
+    /// queued or running, so this is a use-after-release of the
+    /// parent's pinned intermediate). Submitting such a spec would gate
+    /// it forever and end in a
+    /// [`DependencyStall`](CoordinatorError::DependencyStall).
+    UnknownParents { unknown: Vec<usize>, released: Vec<usize> },
 }
 
 impl std::fmt::Display for CoordinatorError {
@@ -146,6 +155,21 @@ impl std::fmt::Display for CoordinatorError {
                  dependency-gated (a parent id was wrong or a DAG was not \
                  submitted topologically)"
             ),
+            CoordinatorError::UnknownParents { unknown, released } => {
+                write!(f, "spec names parents that can never publish:")?;
+                if !unknown.is_empty() {
+                    write!(f, " never-submitted ids {unknown:?}")?;
+                }
+                if !released.is_empty() {
+                    write!(
+                        f,
+                        " already retired ids {released:?} (their \
+                         intermediates are not registered for \
+                         publication to this spec)"
+                    )?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -390,6 +414,11 @@ pub struct Coordinator {
     host_write_bytes: u64,
     /// Run each dispatch's functional passes on worker threads (default).
     parallel_functional: bool,
+    /// Dispatches whose functional passes ran on worker threads.
+    functional_parallel_dispatches: u64,
+    /// Dispatches that fell back to the serial functional path (see
+    /// [`sim::SerialReason`] for why a given dispatch serializes).
+    functional_serial_dispatches: u64,
     /// The continuous card timeline every in-flight job shares.
     session: SimSession,
     /// Engine ports not held by any in-flight job.
@@ -437,6 +466,8 @@ impl Coordinator {
             layout: ResidentLayout::new(),
             host_write_bytes: 0,
             parallel_functional: true,
+            functional_parallel_dispatches: 0,
+            functional_serial_dispatches: 0,
             session,
             free_ports: (0..ENGINE_PORTS).collect(),
             round_barrier: false,
@@ -491,6 +522,22 @@ impl Coordinator {
     /// bit-identical either way; only host wall-clock changes.
     pub fn set_parallel_functional(&mut self, on: bool) {
         self.parallel_functional = on;
+    }
+
+    /// How engine dispatches actually executed their functional passes:
+    /// `(parallel, serial)` dispatch counts. The observable the static
+    /// analyzer's parallelism pass predicts — a plan linting clean on
+    /// that pass must not grow the serial count.
+    pub fn functional_dispatches(&self) -> (u64, u64) {
+        (self.functional_parallel_dispatches, self.functional_serial_dispatches)
+    }
+
+    fn note_functional_mode(&mut self, mode: sim::FunctionalMode) {
+        if mode.is_parallel() {
+            self.functional_parallel_dispatches += 1;
+        } else {
+            self.functional_serial_dispatches += 1;
+        }
     }
 
     /// Toggle card-clock event tracing (off by default; see
@@ -668,6 +715,36 @@ impl Coordinator {
         }
         self.queue.push_back(pending);
         id
+    }
+
+    /// [`submit`](Coordinator::submit) with the statically-detectable
+    /// stall promoted to a submit-time error: a spec naming a parent
+    /// that is no longer (or never was) in the queue — never submitted
+    /// at all, or already retired (queued *and running* parents are
+    /// accepted; a job leaves the queue only at retirement) — is
+    /// rejected as
+    /// [`CoordinatorError::UnknownParents`] *before* it is enqueued,
+    /// instead of gating forever and surfacing rounds later as a
+    /// [`DependencyStall`](CoordinatorError::DependencyStall). The
+    /// runtime stall check remains as the backstop for anything this
+    /// screen cannot see.
+    pub fn try_submit(&mut self, spec: JobSpec) -> Result<usize, CoordinatorError> {
+        let mut unknown = Vec::new();
+        let mut released = Vec::new();
+        for p in spec.parent_ids() {
+            if self.queue.iter().any(|q| q.id == p) {
+                continue;
+            }
+            if p >= self.next_id {
+                unknown.push(p);
+            } else {
+                released.push(p);
+            }
+        }
+        if !unknown.is_empty() || !released.is_empty() {
+            return Err(CoordinatorError::UnknownParents { unknown, released });
+        }
+        Ok(self.submit(spec))
     }
 
     /// Serve the queue to completion. Returns `(id, output)` pairs of the
@@ -966,7 +1043,9 @@ impl Coordinator {
         debug_assert_eq!(armed.len(), engines.len(), "every engine must be armed");
         // Functional passes run at dispatch (parallel when footprints are
         // disjoint); the timing phases then join the shared session.
-        sim::prepare_functional(&mut self.mem, &mut engines, self.parallel_functional);
+        let mode =
+            sim::prepare_functional(&mut self.mem, &mut engines, self.parallel_functional);
+        self.note_functional_mode(mode);
         let mut members = Vec::with_capacity(engines.len());
         let mut remaining = 0usize;
         for engine in engines {
@@ -1246,10 +1325,9 @@ impl Coordinator {
                 self.tracer
                     .record(|| Event::CacheUnpin { t: t_now, key: key.to_string() });
                 let remaining = {
-                    let refs = self
-                        .dependent_refs
-                        .get_mut(&p)
-                        .expect("consumed parent must be registered");
+                    let Some(refs) = self.dependent_refs.get_mut(&p) else {
+                        unreachable!("consumed parent must be registered")
+                    };
                     *refs -= 1;
                     *refs
                 };
@@ -1288,14 +1366,10 @@ impl Coordinator {
     /// [`stats`]: Coordinator::stats
     pub fn take_result(&mut self, id: usize) -> Option<(JobOutput, JobRecord)> {
         let output = self.finished.remove(&id)?;
-        let record = self
-            .records
-            .iter()
-            .rev()
-            .find(|r| r.id == id)
-            .expect("finished job must be recorded")
-            .clone();
-        Some((output, record))
+        let Some(record) = self.records.iter().rev().find(|r| r.id == id) else {
+            unreachable!("finished job must be recorded")
+        };
+        Some((output, record.clone()))
     }
 
     /// Whether a job is anywhere in the coordinator: queued, running, or
@@ -1310,24 +1384,19 @@ impl Coordinator {
     pub fn run_single(&mut self, spec: JobSpec) -> (JobOutput, JobRecord) {
         let id = self.submit(spec);
         let mut outputs = self.run();
-        let pos = outputs
-            .iter()
-            .position(|(out_id, _)| *out_id == id)
-            .expect("submitted job must complete");
+        let Some(pos) = outputs.iter().position(|(out_id, _)| *out_id == id) else {
+            unreachable!("submitted job must complete")
+        };
         let (_, output) = outputs.swap_remove(pos);
         // Other queued jobs drained by this call stay claimable through
         // take_result — run_single must not swallow their outputs.
         for (other, out) in outputs {
             self.finished.insert(other, out);
         }
-        let record = self
-            .records
-            .iter()
-            .rev()
-            .find(|r| r.id == id)
-            .expect("completed job must be recorded")
-            .clone();
-        (output, record)
+        let Some(record) = self.records.iter().rev().find(|r| r.id == id) else {
+            unreachable!("completed job must be recorded")
+        };
+        (output, record.clone())
     }
 
     /// Borrowed view of the accounting: no clone of the per-job records.
@@ -1522,6 +1591,7 @@ impl Coordinator {
         //    functional passes (disjoint per-engine views), serial timing.
         let report =
             sim::run_mode(&self.cfg, &mut self.mem, &mut engines, self.parallel_functional);
+        self.note_functional_mode(report.functional);
 
         // 5. Collect per-job results and publish them through the CSRs.
         let mut outcomes: Vec<(usize, f64, u64, RoundOutcome)> =
@@ -1900,13 +1970,14 @@ fn build_engines(
             let mut slots = Vec::new();
             for (e, slice) in data.chunks(chunk.max(1)).enumerate() {
                 let port = ports[e];
-                let input = shim
-                    .alloc(port, (slice.len() * 4) as u64)
-                    .expect("selection partition exceeds home window");
+                let Some(input) = shim.alloc(port, (slice.len() * 4) as u64) else {
+                    panic!("selection partition exceeds home window")
+                };
                 // Worst case output = input size (100% selectivity).
-                let output = shim
-                    .alloc(port, (slice.len() * 4) as u64 + 64)
-                    .expect("selection output exceeds home window");
+                let Some(output) = shim.alloc(port, (slice.len() * 4) as u64 + 64)
+                else {
+                    panic!("selection output exceeds home window")
+                };
                 let offset = (e * chunk * 4) as u64;
                 let content = key.map(|k| (k, offset, (slice.len() * 4) as u64));
                 if layout.claim(input.lo_addr, input.bytes, content) {
@@ -1945,9 +2016,10 @@ fn build_engines(
             for (e, slice) in l.chunks(chunk.max(1)).enumerate() {
                 let read_port = ports[e * 2];
                 let write_port = ports[e * 2 + 1];
-                let s_buf = shim
-                    .alloc(read_port, (s.len() * 4) as u64 + 64)
-                    .expect("S exceeds home window");
+                let Some(s_buf) = shim.alloc(read_port, (s.len() * 4) as u64 + 64)
+                else {
+                    panic!("S exceeds home window")
+                };
                 // The build side is broadcast: every engine's replica
                 // carries the whole column (source offset 0).
                 let s_content = s_key.map(|k| (k, 0, (s.len() * 4) as u64));
@@ -1957,9 +2029,10 @@ fn build_engines(
                     s_buf.write_u32s(mem, 0, s);
                     written += (s.len() * 4) as u64;
                 }
-                let l_buf = shim
-                    .alloc(read_port, (slice.len() * 4) as u64 + 64)
-                    .expect("L partition exceeds home window");
+                let Some(l_buf) = shim.alloc(read_port, (slice.len() * 4) as u64 + 64)
+                else {
+                    panic!("L partition exceeds home window")
+                };
                 let l_offset = (e * chunk * 4) as u64;
                 let l_content =
                     l_key.map(|k| (k, l_offset, (slice.len() * 4) as u64));
@@ -1972,9 +2045,9 @@ fn build_engines(
                 // Worst-case output sizing: every probe matches ~avg dups.
                 let out_cap =
                     (slice.len() as u64 * 16 + 256).min(PORT_HOME_BYTES - 64);
-                let output = shim
-                    .alloc(write_port, out_cap)
-                    .expect("join output exceeds home window");
+                let Some(output) = shim.alloc(write_port, out_cap) else {
+                    panic!("join output exceeds home window")
+                };
                 layout.claim(output.lo_addr, output.bytes, None);
                 let job = JoinJob {
                     s: s_buf,
@@ -2012,9 +2085,9 @@ fn build_engines(
             let mut slots = Vec::new();
             for (e, params) in round_grid.iter().enumerate() {
                 let port = ports[e];
-                let data = shim
-                    .alloc(port, bytes)
-                    .expect("dataset exceeds home window; use block-wise scan");
+                let Some(data) = shim.alloc(port, bytes) else {
+                    panic!("dataset exceeds home window; use block-wise scan")
+                };
                 if layout.claim(data.lo_addr, data.bytes, key.map(|k| (k, 0, bytes))) {
                     debug_check_span_sgd(mem, &data, features, labels);
                 } else {
@@ -2026,8 +2099,10 @@ fn build_engines(
                     data.write_f32s(mem, 0, flat);
                     written += bytes;
                 }
-                let model_out =
-                    shim.alloc(port, (*n_features * 4) as u64 + 64).unwrap();
+                let Some(model_out) = shim.alloc(port, (*n_features * 4) as u64 + 64)
+                else {
+                    panic!("model output exceeds home window")
+                };
                 layout.claim(model_out.lo_addr, model_out.bytes, None);
                 let job = SgdJob {
                     data,
@@ -2072,10 +2147,10 @@ fn collect_outcome(
             let mut result = Vec::new();
             let mut out_bytes = 0u64;
             for ((job, engine), &slot) in jobs.iter().zip(engines).zip(slots) {
-                let eng = engine
-                    .as_any()
-                    .downcast_ref::<SelectionEngine>()
-                    .expect("selection engine");
+                let Some(eng) = engine.as_any().downcast_ref::<SelectionEngine>()
+                else {
+                    unreachable!("selection prep dispatched a non-selection engine")
+                };
                 out_bytes += eng.out_bytes;
                 control.complete(
                     slot,
@@ -2099,10 +2174,9 @@ fn collect_outcome(
             let mut pairs = Vec::new();
             let mut out_bytes = 0u64;
             for ((job, engine), &slot) in jobs.iter().zip(engines).zip(slots) {
-                let eng = engine
-                    .as_any()
-                    .downcast_ref::<JoinEngine>()
-                    .expect("join engine");
+                let Some(eng) = engine.as_any().downcast_ref::<JoinEngine>() else {
+                    unreachable!("join prep dispatched a non-join engine")
+                };
                 out_bytes += eng.out_bytes;
                 let found = compact_matches(mem, &job.output, eng.out_bytes);
                 control.complete(
@@ -2119,10 +2193,9 @@ fn collect_outcome(
         Prepared::Sgd { jobs } => {
             let mut models = Vec::new();
             for ((job, engine), &slot) in jobs.iter().zip(engines).zip(slots) {
-                let eng = engine
-                    .as_any()
-                    .downcast_ref::<SgdEngine>()
-                    .expect("sgd engine");
+                let Some(eng) = engine.as_any().downcast_ref::<SgdEngine>() else {
+                    unreachable!("sgd prep dispatched a non-sgd engine")
+                };
                 control.complete(slot, job.n_features as u32, 0, cycles);
                 debug_assert!(control.is_done(slot));
                 models.push(eng.model.clone());
@@ -2145,6 +2218,7 @@ fn collect_outcome(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::coordinator::job::ColumnKey;
@@ -2573,31 +2647,38 @@ mod tests {
     #[test]
     fn mis_ordered_dag_surfaces_a_typed_stall_not_an_abort() {
         use crate::coordinator::job::{DepExpr, DepInput};
-        // A child naming a parent that was never queued: step() must
-        // report a typed DependencyStall instead of panicking.
-        let mut coord = Coordinator::new(cfg());
-        let child = coord.submit(
+        let bad_spec = || {
             JobSpec::new(JobKind::Selection {
                 data: Vec::new().into(),
                 lo: 0,
                 hi: 1,
             })
-            .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(99) }]),
+            .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(99) }])
+        };
+
+        // Statically detectable, so try_submit rejects it *at submit
+        // time* — the queue never sees the doomed spec.
+        let mut coord = Coordinator::new(cfg());
+        let err = coord.try_submit(bad_spec()).unwrap_err();
+        assert_eq!(
+            err,
+            CoordinatorError::UnknownParents { unknown: vec![99], released: vec![] }
         );
+        assert!(err.to_string().contains("never-submitted"), "{err}");
+        assert_eq!(coord.pending(), 0, "rejected spec must not enqueue");
+
+        // The runtime check stays as the backstop for raw submit(): a
+        // child naming a parent that was never queued makes step()
+        // report a typed DependencyStall instead of panicking.
+        let mut coord = Coordinator::new(cfg());
+        let child = coord.submit(bad_spec());
         let err = coord.step().unwrap_err();
         assert_eq!(err, CoordinatorError::DependencyStall { stalled: vec![child] });
         assert!(err.to_string().contains("dependency-gated"), "{err}");
 
         // The same stall is typed under the round-barrier baseline too.
         let mut coord = Coordinator::new(cfg()).with_round_barrier(true);
-        let child = coord.submit(
-            JobSpec::new(JobKind::Selection {
-                data: Vec::new().into(),
-                lo: 0,
-                hi: 1,
-            })
-            .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(99) }]),
-        );
+        let child = coord.submit(bad_spec());
         assert_eq!(
             coord.step().unwrap_err(),
             CoordinatorError::DependencyStall { stalled: vec![child] }
@@ -2614,7 +2695,7 @@ mod tests {
         let w = SelectionWorkload::uniform(20_000, 0.2, 77);
         let mut coord = Coordinator::new(cfg());
         let parent = coord.submit(selection_spec(&w));
-        let child = coord.submit(
+        let child_spec = || {
             JobSpec::new(JobKind::Join {
                 s: Vec::new().into(),
                 l: Vec::new().into(),
@@ -2623,13 +2704,38 @@ mod tests {
             .with_deps(vec![
                 DepInput { slot: 0, expr: DepExpr::Candidates(parent) },
                 DepInput { slot: 1, expr: DepExpr::Candidates(4242) },
-            ]),
+            ])
+        };
+
+        // try_submit catches the dangling half up front: `parent` is
+        // queued and fine, 4242 was never issued.
+        assert_eq!(
+            coord.try_submit(child_spec()).unwrap_err(),
+            CoordinatorError::UnknownParents { unknown: vec![4242], released: vec![] }
         );
+
+        let child = coord.submit(child_spec());
         assert_eq!(coord.step().unwrap(), vec![parent]);
         assert_eq!(
             coord.step().unwrap_err(),
             CoordinatorError::DependencyStall { stalled: vec![child] }
         );
+
+        // With `parent` now retired, a fresh child naming it lands in
+        // the `released` bucket: its pinned intermediate was only
+        // registered for children submitted while it was queued.
+        let late = JobSpec::new(JobKind::Selection {
+            data: Vec::new().into(),
+            lo: 0,
+            hi: 1,
+        })
+        .with_deps(vec![DepInput { slot: 0, expr: DepExpr::Candidates(parent) }]);
+        let err = coord.try_submit(late).unwrap_err();
+        assert_eq!(
+            err,
+            CoordinatorError::UnknownParents { unknown: vec![], released: vec![parent] }
+        );
+        assert!(err.to_string().contains("already retired"), "{err}");
     }
 
     #[test]

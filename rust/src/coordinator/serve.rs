@@ -526,6 +526,7 @@ pub fn bench_json(spec: &ServeSpec, outcomes: &[PolicyOutcome]) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::hbm::config::FabricClock;

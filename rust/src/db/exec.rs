@@ -269,14 +269,15 @@ impl<'a> Executor<'a> {
 
     /// Execute `plan`, returning the root intermediate or a typed error.
     pub fn run(&mut self, plan: &Plan) -> Result<Intermediate, ExecError> {
-        if self.pipelined && self.accelerator.is_some() {
-            let request = PipelineRequest::from_plan(plan, self.catalog)?;
-            let acc = self.accelerator.as_mut().expect("accelerator checked");
-            let mut handle = acc.try_submit_plan(request)?;
-            Ok(handle.wait())
-        } else {
-            self.run_walk(plan)
+        if !self.pipelined || self.accelerator.is_none() {
+            return self.run_walk(plan);
         }
+        let request = PipelineRequest::from_plan(plan, self.catalog)?;
+        let Some(acc) = self.accelerator.as_mut() else {
+            unreachable!("accelerator presence checked above")
+        };
+        let mut handle = acc.try_submit_plan(request)?;
+        Ok(handle.wait())
     }
 
     /// The materializing tree walk: CPU operators, or (without
@@ -306,10 +307,13 @@ impl<'a> Executor<'a> {
                 }
                 let cands = match self.accelerator.as_mut() {
                     Some(acc) => {
+                        let Some(shared) = col.u32_shared() else {
+                            unreachable!("u32 type checked above")
+                        };
                         // Zero-copy: the request shares the catalog
                         // column's allocation with the card.
                         let req = OffloadRequest::select(*lo, *hi)
-                            .on_shared(col.u32_shared().expect("checked u32"))
+                            .on_shared(shared)
                             .keyed(key);
                         acc.submit(req).wait_selection().0
                     }
@@ -337,12 +341,14 @@ impl<'a> Executor<'a> {
                 }
                 let pairs = match self.accelerator.as_mut() {
                     Some(acc) => {
-                        let req = OffloadRequest::join_shared(
-                            build.u32_shared().expect("checked u32"),
-                            probe.u32_shared().expect("checked u32"),
-                        )
-                        .keyed(s_key)
-                        .probe_keyed(l_key);
+                        let (Some(build_shared), Some(probe_shared)) =
+                            (build.u32_shared(), probe.u32_shared())
+                        else {
+                            unreachable!("u32 types checked above")
+                        };
+                        let req = OffloadRequest::join_shared(build_shared, probe_shared)
+                            .keyed(s_key)
+                            .probe_keyed(l_key);
                         acc.submit(req).wait_join().0
                     }
                     None => ops::hash_join(&build, &probe, self.threads).into(),
@@ -378,6 +384,7 @@ impl<'a> Executor<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::db::column::{Column, Table};

@@ -36,6 +36,11 @@
 //!   queries — in flight; each completed job reports the timing breakdown
 //!   (copy-in / execute / copy-out) the end-to-end figures need.
 
+// DBMS-layer invariant: no `unwrap`/`expect` in non-test code (see
+// clippy.toml) — broken invariants get a `let`-`else` with a message
+// naming what was violated, everything else a typed error.
+#![deny(clippy::disallowed_methods)]
+
 pub mod column;
 pub mod exec;
 pub mod ops;

@@ -6,7 +6,9 @@ use crate::cpu;
 
 /// Range selection: candidate list of positions where `lo ≤ v ≤ hi`.
 pub fn range_select(col: &ColumnData, lo: u32, hi: u32, threads: usize) -> Vec<u32> {
-    let data = col.as_u32().expect("range_select needs a u32 column");
+    let Some(data) = col.as_u32() else {
+        panic!("range_select needs a u32 column")
+    };
     cpu::selection::range_select(data, lo, hi, threads)
 }
 
@@ -17,8 +19,9 @@ pub fn hash_join(
     right: &ColumnData,
     threads: usize,
 ) -> Vec<(u32, u32)> {
-    let s = left.as_u32().expect("join build side must be u32");
-    let l = right.as_u32().expect("join probe side must be u32");
+    let (Some(s), Some(l)) = (left.as_u32(), right.as_u32()) else {
+        panic!("hash_join needs u32 build and probe columns")
+    };
     cpu::join::hash_join_positions(s, l, threads)
 }
 
@@ -61,22 +64,28 @@ pub enum AggResult {
 
 /// Scalar aggregate over a column.
 pub fn aggregate(col: &ColumnData, kind: AggKind) -> AggResult {
+    fn need_u32<'a>(col: &'a ColumnData, what: &str) -> &'a [u32] {
+        match col.as_u32() {
+            Some(v) => v,
+            None => panic!("{what} needs u32"),
+        }
+    }
     match kind {
         AggKind::Count => AggResult::Count(col.len() as u64),
         AggKind::SumF32 => {
-            let v = col.as_f32().expect("SumF32 needs f32");
+            let Some(v) = col.as_f32() else { panic!("SumF32 needs f32") };
             AggResult::F64(v.iter().map(|&x| x as f64).sum())
         }
         AggKind::SumU32 => {
-            let v = col.as_u32().expect("SumU32 needs u32");
+            let v = need_u32(col, "SumU32");
             AggResult::U64(v.iter().map(|&x| x as u64).sum())
         }
         AggKind::MinU32 => {
-            let v = col.as_u32().expect("MinU32 needs u32");
+            let v = need_u32(col, "MinU32");
             AggResult::U64(v.iter().copied().min().unwrap_or(0) as u64)
         }
         AggKind::MaxU32 => {
-            let v = col.as_u32().expect("MaxU32 needs u32");
+            let v = need_u32(col, "MaxU32");
             AggResult::U64(v.iter().copied().max().unwrap_or(0) as u64)
         }
     }
@@ -88,8 +97,8 @@ pub fn group_sum(
     keys: &ColumnData,
     values: &ColumnData,
 ) -> Vec<(u32, f64, u64)> {
-    let k = keys.as_u32().expect("group keys must be u32");
-    let v = values.as_f32().expect("group values must be f32");
+    let Some(k) = keys.as_u32() else { panic!("group keys must be u32") };
+    let Some(v) = values.as_f32() else { panic!("group values must be f32") };
     assert_eq!(k.len(), v.len());
     let mut map: std::collections::BTreeMap<u32, (f64, u64)> =
         std::collections::BTreeMap::new();
@@ -102,6 +111,7 @@ pub fn group_sum(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -82,6 +82,11 @@ pub enum PipelineError {
     },
     /// The requested engine cap is outside the card's limits.
     EngineCap { requested: usize, limit: usize },
+    /// The static analyzer proved the plan cannot execute (cycle,
+    /// dangling dependency, infeasible footprint, …). Carries every
+    /// Error-level [`Diagnostic`](crate::analyze::Diagnostic) so callers
+    /// can print precise attributions and suggested fixes.
+    Rejected(Vec<crate::analyze::Diagnostic>),
 }
 
 impl std::fmt::Display for PipelineError {
@@ -103,6 +108,17 @@ impl std::fmt::Display for PipelineError {
                 f,
                 "engine cap {requested} outside the card's limits (1..={limit})"
             ),
+            PipelineError::Rejected(diagnostics) => {
+                write!(
+                    f,
+                    "plan rejected by static analysis ({} error(s))",
+                    diagnostics.len()
+                )?;
+                for d in diagnostics {
+                    write!(f, "; {d}")?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -253,6 +269,53 @@ impl PipelineRequest {
             }
         }
         Ok(())
+    }
+
+    /// The plan reduced to what the static analyzer needs: operators,
+    /// slot shapes (row counts + cache keys), and dependency edges over
+    /// stage indices. Column bytes are never copied — only lengths and
+    /// keys cross into the facts.
+    pub fn facts(&self) -> crate::analyze::PlanFacts {
+        use crate::analyze::{ExprFacts, InputFacts, PlanFacts, StageFacts};
+
+        fn expr_facts(e: &StageExpr) -> ExprFacts {
+            match e {
+                StageExpr::Candidates(stage) => ExprFacts::Candidates(*stage),
+                StageExpr::JoinSide { stage, left } => {
+                    ExprFacts::JoinSide { stage: *stage, left: *left }
+                }
+                StageExpr::Column { data, key } => {
+                    ExprFacts::Column { rows: data.len(), key: key.clone() }
+                }
+                StageExpr::Gather { column, positions } => ExprFacts::Gather {
+                    column: Box::new(expr_facts(column)),
+                    positions: Box::new(expr_facts(positions)),
+                },
+            }
+        }
+
+        let stages = self
+            .stages
+            .iter()
+            .map(|stage| {
+                let inputs = stage
+                    .inputs
+                    .iter()
+                    .map(|input| match input {
+                        StageInput::Host { data, key } => InputFacts::Host {
+                            rows: data.len(),
+                            key: Some(key.clone()),
+                        },
+                        StageInput::Expr(e) => InputFacts::Expr(expr_facts(e)),
+                    })
+                    .collect();
+                match stage.op {
+                    StageOp::Select { .. } => StageFacts::select(inputs),
+                    StageOp::Join => StageFacts::join(inputs),
+                }
+            })
+            .collect();
+        PlanFacts { stages, engines: self.engines }
     }
 }
 
@@ -541,6 +604,19 @@ fn lower_input(
     }
 }
 
+/// Lock the coordinator, recovering from a poisoned lock: the
+/// coordinator holds plain simulator state, so a panic elsewhere cannot
+/// leave it logically corrupt. The single recovery point for every
+/// holder of the card's coordinator mutex (`udf` reuses it too).
+pub(crate) fn lock_coord(
+    arc: &Arc<Mutex<Coordinator>>,
+) -> std::sync::MutexGuard<'_, Coordinator> {
+    match arc.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 /// Lower one stage to a coordinator job spec, wiring dependency edges on
 /// the already-submitted parents.
 fn stage_to_spec(
@@ -553,8 +629,10 @@ fn stage_to_spec(
     let mut inputs = stage.inputs.into_iter();
     match stage.op {
         StageOp::Select { lo, hi } => {
-            let (data, key) =
-                lower_input(inputs.next().expect("select input"), 0, ids, &mut deps);
+            let Some(input) = inputs.next() else {
+                unreachable!("select stages lower with one input slot")
+            };
+            let (data, key) = lower_input(input, 0, ids, &mut deps);
             JobSpec::new(JobKind::Selection { data, lo, hi })
                 .with_keys(vec![key])
                 .with_deps(deps)
@@ -562,10 +640,12 @@ fn stage_to_spec(
                 .with_client(client)
         }
         StageOp::Join => {
-            let (s, s_key) =
-                lower_input(inputs.next().expect("join build side"), 0, ids, &mut deps);
-            let (l, l_key) =
-                lower_input(inputs.next().expect("join probe side"), 1, ids, &mut deps);
+            let (Some(s_input), Some(l_input)) = (inputs.next(), inputs.next())
+            else {
+                unreachable!("join stages lower with two input slots")
+            };
+            let (s, s_key) = lower_input(s_input, 0, ids, &mut deps);
+            let (l, l_key) = lower_input(l_input, 1, ids, &mut deps);
             // A host build side picks the bitstream variant from its
             // uniqueness (like OffloadRequest); a dependency-fed build
             // side starts conservative and the coordinator re-derives the
@@ -630,20 +710,44 @@ impl FpgaAccelerator {
     }
 
     /// Non-panicking [`submit_plan`](FpgaAccelerator::submit_plan).
+    ///
+    /// Before anything reaches the card the request is linted by the
+    /// static analyzer ([`crate::analyze`]); a plan with any Error-level
+    /// finding — a dependency cycle, a dangling parent, an infeasible
+    /// footprint or floorplan — is rejected up front as
+    /// [`PipelineError::Rejected`] with the diagnostics, instead of
+    /// surfacing later as a runtime
+    /// [`CoordinatorError::DependencyStall`] or an engine-placement
+    /// abort. Warnings never block submission.
     pub fn try_submit_plan(
         &mut self,
         request: PipelineRequest,
     ) -> Result<PipelineHandle, PipelineError> {
         request.validate()?;
+        let card = crate::analyze::CardSpec {
+            cfg: self.cfg.clone(),
+            link: self.link.clone(),
+            default_engines: self.engines,
+            ..crate::analyze::CardSpec::default()
+        };
+        let analysis = crate::analyze::analyze_request(&request, &card);
+        if analysis.is_rejected() {
+            return Err(PipelineError::Rejected(analysis.error_diagnostics()));
+        }
         let PipelineRequest { stages, finish, engines: cap, client } = request;
         let engines = cap.unwrap_or(self.engines).clamp(1, ENGINE_PORTS);
         let coord_arc = self.coord_arc();
-        let mut coord = coord_arc.lock().expect("coordinator lock poisoned");
+        let mut coord = lock_coord(&coord_arc);
         self.sync_card(&mut coord);
         let mut ids: Vec<usize> = Vec::with_capacity(stages.len());
         for stage in stages {
             let spec = stage_to_spec(stage, &ids, engines, client);
-            ids.push(coord.submit(spec));
+            match coord.try_submit(spec) {
+                Ok(id) => ids.push(id),
+                // The graph pass proved every parent is an earlier stage
+                // of this very DAG, all submitted just above.
+                Err(e) => unreachable!("analyzer admitted an unsound DAG: {e}"),
+            }
         }
         drop(coord);
         Ok(PipelineHandle {
@@ -776,7 +880,7 @@ impl PipelineHandle {
 
     fn try_claim(&mut self) {
         let coord = Arc::clone(&self.coord);
-        let mut coord = coord.lock().expect("coordinator lock poisoned");
+        let mut coord = lock_coord(&coord);
         for (si, &id) in self.stage_ids.iter().enumerate() {
             if self.outputs.contains_key(&si) {
                 continue;
@@ -809,7 +913,7 @@ impl PipelineHandle {
                 break;
             }
             let coord = Arc::clone(&self.coord);
-            let mut coord = coord.lock().expect("coordinator lock poisoned");
+            let mut coord = lock_coord(&coord);
             for (si, &id) in self.stage_ids.iter().enumerate() {
                 if !self.outputs.contains_key(&si) {
                     assert!(
@@ -839,7 +943,10 @@ impl PipelineHandle {
     /// Non-panicking [`wait`](PipelineHandle::wait).
     pub fn try_wait(&mut self) -> Result<Intermediate, CoordinatorError> {
         self.drive_to_completion()?;
-        Ok(self.result.clone().expect("evaluated result"))
+        let Some(result) = self.result.clone() else {
+            unreachable!("drive_to_completion evaluated the result")
+        };
+        Ok(result)
     }
 
     /// Per-stage accounting once every stage completed (`None` before).
@@ -859,8 +966,13 @@ impl PipelineHandle {
     pub fn take(mut self) -> (Intermediate, PipelineReport) {
         self.drive_to_completion()
             .unwrap_or_else(|e| panic!("card cannot make progress: {e}"));
-        let report = self.report().expect("complete pipeline has a report");
-        (self.result.take().expect("evaluated result"), report)
+        let Some(report) = self.report() else {
+            unreachable!("complete pipeline has a report")
+        };
+        let Some(result) = self.result.take() else {
+            unreachable!("drive_to_completion evaluated the result")
+        };
+        (result, report)
     }
 
     /// [`take`](PipelineHandle::take), expecting a column root.
@@ -903,6 +1015,7 @@ impl Drop for PipelineHandle {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::db::column::{Column, Table};

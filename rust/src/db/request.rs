@@ -304,10 +304,12 @@ impl OffloadRequest {
         };
         let engines = self.engines.unwrap_or(default_engines).clamp(1, engine_limit);
         let (kind, keys) = match self.payload {
-            Payload::Select { data, lo, hi, key } => (
-                JobKind::Selection { data: data.expect("validated"), lo, hi },
-                vec![key],
-            ),
+            Payload::Select { data, lo, hi, key } => {
+                let Some(data) = data else {
+                    unreachable!("validate rejects a select without data")
+                };
+                (JobKind::Selection { data, lo, hi }, vec![key])
+            }
             Payload::Join { s, l, s_key, l_key, collisions } => {
                 let handle_collisions =
                     collisions.unwrap_or_else(|| !build_side_is_unique(&s));
@@ -336,6 +338,7 @@ fn payload_name(p: &Payload) -> &'static str {
 pub(crate) use crate::coordinator::job::build_side_is_unique;
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::engines::sgd::GlmTask;

@@ -135,7 +135,7 @@ impl FpgaAccelerator {
     }
 
     fn coord(&self) -> MutexGuard<'_, Coordinator> {
-        self.coord.lock().expect("coordinator lock poisoned")
+        super::pipeline::lock_coord(&self.coord)
     }
 
     /// Shared handle on the card's coordinator, for the pipeline layer
@@ -238,6 +238,16 @@ impl FpgaAccelerator {
     pub fn take_trace(&self) -> Vec<crate::trace::Event> {
         self.coord().take_trace()
     }
+
+    /// How the card's engine dispatches actually executed their
+    /// functional passes: `(parallel, serial)` dispatch counts since the
+    /// accelerator was created. This is the ground truth the static
+    /// analyzer's parallelism pass predicts: a plan that lints clean on
+    /// that pass must not grow the serial count (see
+    /// [`crate::analyze`]).
+    pub fn functional_dispatches(&self) -> (u64, u64) {
+        self.coord().functional_dispatches()
+    }
 }
 
 /// An in-flight offload. Obtained from [`FpgaAccelerator::submit`]; holds
@@ -284,7 +294,7 @@ impl JobHandle {
     }
 
     fn coord(&self) -> MutexGuard<'_, Coordinator> {
-        self.coord.lock().expect("coordinator lock poisoned")
+        super::pipeline::lock_coord(&self.coord)
     }
 
     fn try_claim(&mut self) {
@@ -339,7 +349,10 @@ impl JobHandle {
     /// process abort.
     pub fn try_wait(&mut self) -> Result<(JobOutput, OffloadTiming), CoordinatorError> {
         self.claim_blocking()?;
-        Ok(self.cached.clone().expect("claimed result"))
+        let Some(result) = self.cached.clone() else {
+            unreachable!("claim_blocking returned Ok without a claimed result")
+        };
+        Ok(result)
     }
 
     /// Consuming [`wait`](JobHandle::wait): blocks until completion and
@@ -347,7 +360,10 @@ impl JobHandle {
     pub fn take(mut self) -> (JobOutput, OffloadTiming) {
         self.claim_blocking()
             .unwrap_or_else(|e| panic!("card cannot make progress: {e}"));
-        self.cached.take().expect("claimed result")
+        let Some(result) = self.cached.take() else {
+            unreachable!("claim_blocking returned Ok without a claimed result")
+        };
+        result
     }
 
     /// [`take`](JobHandle::take), expecting a selection's sorted
@@ -385,6 +401,7 @@ impl Drop for JobHandle {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::coordinator::ColumnKey;

@@ -127,6 +127,7 @@ impl ControlUnit {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -308,6 +308,7 @@ pub fn compact_matches(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::engines::sim;

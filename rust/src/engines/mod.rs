@@ -20,6 +20,11 @@
 //!   coordinator uses to start/stop/poll engines, mirroring the paper's
 //!   asynchronous software control.
 
+// Engine-layer invariant: no `unwrap`/`expect` in non-test code (see
+// clippy.toml) — broken invariants get a `let`-`else` with a message
+// naming what was violated, everything else a typed error.
+#![deny(clippy::disallowed_methods)]
+
 pub mod control;
 pub mod join;
 pub mod pipeline;

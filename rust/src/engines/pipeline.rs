@@ -51,6 +51,7 @@ pub fn lines_for_items(items: u64) -> u64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::hbm::config::FabricClock;

@@ -158,6 +158,7 @@ pub fn compact_results(mem: &HbmMemory, out: &ShimBuffer, out_bytes: u64) -> Vec
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::engines::sim;

@@ -251,6 +251,7 @@ impl Engine for SgdEngine {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::engines::sim;

@@ -47,8 +47,9 @@
 
 use super::{Engine, EngineStats, Phase};
 use crate::hbm::fluid::{solve_in, Flow, SolveScratch};
-use crate::hbm::memory::HbmMemory;
+use crate::hbm::memory::{HbmMemory, PAGE_BYTES};
 use crate::hbm::HbmConfig;
+use crate::hbm::MemBytes;
 use crate::trace::{Event, Tracer};
 
 struct ActivePhase {
@@ -110,6 +111,9 @@ pub struct SimReport {
     /// Time at which the last engine finished (seconds).
     pub makespan: f64,
     pub engines: Vec<EngineStats>,
+    /// How the functional passes actually executed — the ground truth
+    /// the static analyzer's parallelism pass predicts.
+    pub functional: FunctionalMode,
 }
 
 impl SimReport {
@@ -263,7 +267,9 @@ impl SimSession {
     pub fn take_engine(&mut self, member: usize) -> (Box<dyn Engine>, EngineStats) {
         let m = &mut self.members[member];
         assert!(m.active.is_none(), "cannot take a running engine");
-        let engine = m.engine.take().expect("engine already taken");
+        let Some(engine) = m.engine.take() else {
+            panic!("engine already taken")
+        };
         self.free_members.push(member);
         (engine, m.stats.clone())
     }
@@ -467,8 +473,9 @@ impl SimSession {
                     m.stats.hbm_bytes +=
                         (ap.phase.work_bytes as f64 * per_unit_total).round() as u64;
                     m.stats.finish_time = self.now;
-                    let engine =
-                        m.engine.as_mut().expect("running engine present");
+                    let Some(engine) = m.engine.as_mut() else {
+                        unreachable!("running engine present while active")
+                    };
                     m.active = engine.next_phase(mem).map(ActivePhase::new);
                     if m.active.is_some() {
                         m.stats.phases += 1;
@@ -527,57 +534,172 @@ pub fn run_serial(
 /// Below this total declared footprint, per-dispatch thread-spawn
 /// overhead outweighs the parallel win; such engine sets run serially so
 /// the default mode is never slower than serial on small workloads.
-const PARALLEL_MIN_FOOTPRINT_BYTES: u64 = 1 << 20;
+/// Public so the static analyzer's parallelism pass predicts the same
+/// threshold it warns about.
+pub const PARALLEL_MIN_FOOTPRINT_BYTES: u64 = 1 << 20;
+
+/// Why [`prepare_functional`] fell back to the serial path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SerialReason {
+    /// The caller asked for serial execution.
+    Disabled,
+    /// Fewer than two engines — nothing to parallelize.
+    SingleEngine,
+    /// The host reports a single core (or no parallelism information).
+    NoHostParallelism,
+    /// Some engine declared no [`Engine::functional_ranges`], so its
+    /// footprint is unknown and no disjoint view can be carved.
+    UnknownRanges,
+    /// Total declared footprint under [`PARALLEL_MIN_FOOTPRINT_BYTES`].
+    SmallFootprint,
+    /// Two engines' declared ranges share a page — the silent
+    /// serialization the analyzer's `range-overlap` warning predicts.
+    Overlap,
+}
+
+/// How [`prepare_functional`] executed the functional passes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionalMode {
+    /// One worker thread per engine over disjoint [`crate::hbm::HbmView`]s.
+    Parallel { workers: usize },
+    Serial { reason: SerialReason },
+}
+
+impl FunctionalMode {
+    pub fn is_parallel(self) -> bool {
+        matches!(self, FunctionalMode::Parallel { .. })
+    }
+}
+
+impl Default for FunctionalMode {
+    fn default() -> Self {
+        FunctionalMode::Serial { reason: SerialReason::Disabled }
+    }
+}
+
+/// Serial-path debug bounds-checker: every access of an engine's
+/// functional pass must stay inside the page span of its declared
+/// ranges — the exact contract the parallel path's `HbmView`s enforce
+/// physically. Running it on the serial path too means an engine that
+/// lies about its footprint fails loudly in debug builds even when the
+/// parallel path didn't engage.
+struct RangeGuard<'a> {
+    mem: &'a mut HbmMemory,
+    /// Inclusive allowed page spans, from the declared ranges.
+    pages: Vec<(u64, u64)>,
+    name: String,
+}
+
+impl RangeGuard<'_> {
+    fn check(&self, addr: u64, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let first = addr / PAGE_BYTES;
+        let last = (addr + len as u64 - 1) / PAGE_BYTES;
+        for page in first..=last {
+            if !self.pages.iter().any(|&(lo, hi)| (lo..=hi).contains(&page)) {
+                panic!(
+                    "engine {}: functional pass touched page {page} \
+                     (addr {addr:#x}, {len} B) outside its declared \
+                     functional ranges",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+impl MemBytes for RangeGuard<'_> {
+    fn read_into(&self, addr: u64, out: &mut [u8]) {
+        self.check(addr, out.len());
+        self.mem.read_into(addr, out);
+    }
+
+    fn write(&mut self, addr: u64, data: &[u8]) {
+        self.check(addr, data.len());
+        self.mem.write(addr, data);
+    }
+}
 
 /// Execute every engine's functional pass up front. Parallel when
 /// requested and worthwhile (≥ 2 engines, a host with > 1 core, every
 /// footprint declared, all footprints page-disjoint, and enough total
 /// work to amortize the worker threads); serial otherwise. Either way,
 /// engines are *prepared* afterwards: `next_phase` only emits
-/// precomputed phases.
+/// precomputed phases. Returns which path ran (and if serial, why) so
+/// callers — and through them the analyzer's tests — can observe
+/// whether the parallel path engaged.
 pub fn prepare_functional(
     mem: &mut HbmMemory,
     engines: &mut [Box<dyn Engine>],
     parallel: bool,
-) {
-    let want_parallel = parallel
-        && engines.len() > 1
-        && std::thread::available_parallelism().map(|p| p.get() > 1).unwrap_or(false);
-    if want_parallel {
+) -> FunctionalMode {
+    let reason = 'serial: {
+        if !parallel {
+            break 'serial SerialReason::Disabled;
+        }
+        if engines.len() <= 1 {
+            break 'serial SerialReason::SingleEngine;
+        }
+        if !std::thread::available_parallelism().map(|p| p.get() > 1).unwrap_or(false) {
+            break 'serial SerialReason::NoHostParallelism;
+        }
         let range_sets: Vec<Vec<(u64, u64)>> =
             engines.iter().map(|e| e.functional_ranges()).collect();
+        if range_sets.iter().any(|r| r.is_empty()) {
+            break 'serial SerialReason::UnknownRanges;
+        }
         let footprint: u64 = range_sets
             .iter()
             .flat_map(|set| set.iter().map(|&(_, bytes)| bytes))
             .sum();
-        if footprint >= PARALLEL_MIN_FOOTPRINT_BYTES
-            && range_sets.iter().all(|r| !r.is_empty())
-        {
-            if let Some(views) = mem.take_disjoint_views(&range_sets) {
-                let views = std::thread::scope(|scope| {
-                    let workers: Vec<_> = engines
-                        .iter_mut()
-                        .zip(views)
-                        .map(|(engine, mut view)| {
-                            scope.spawn(move || {
-                                engine.run_functional(&mut view);
-                                view
-                            })
-                        })
-                        .collect();
-                    workers
-                        .into_iter()
-                        .map(|w| w.join().expect("engine functional worker panicked"))
-                        .collect::<Vec<_>>()
-                });
-                mem.restore_views(views);
-                return;
-            }
+        if footprint < PARALLEL_MIN_FOOTPRINT_BYTES {
+            break 'serial SerialReason::SmallFootprint;
+        }
+        let Some(views) = mem.take_disjoint_views(&range_sets) else {
+            break 'serial SerialReason::Overlap;
+        };
+        let views = std::thread::scope(|scope| {
+            let workers: Vec<_> = engines
+                .iter_mut()
+                .zip(views)
+                .map(|(engine, mut view)| {
+                    scope.spawn(move || {
+                        engine.run_functional(&mut view);
+                        view
+                    })
+                })
+                .collect();
+            workers
+                .into_iter()
+                .map(|w| match w.join() {
+                    Ok(view) => view,
+                    Err(panic) => std::panic::resume_unwind(panic),
+                })
+                .collect::<Vec<_>>()
+        });
+        mem.restore_views(views);
+        return FunctionalMode::Parallel { workers: engines.len() };
+    };
+    for engine in engines.iter_mut() {
+        let ranges = engine.functional_ranges();
+        if cfg!(debug_assertions) && !ranges.is_empty() {
+            let pages = ranges
+                .iter()
+                .filter(|&&(_, bytes)| bytes > 0)
+                .map(|&(addr, bytes)| {
+                    (addr / PAGE_BYTES, (addr + bytes - 1) / PAGE_BYTES)
+                })
+                .collect();
+            let mut guard =
+                RangeGuard { name: engine.name(), mem, pages };
+            engine.run_functional(&mut guard);
+        } else {
+            engine.run_functional(mem);
         }
     }
-    for engine in engines.iter_mut() {
-        engine.run_functional(mem);
-    }
+    FunctionalMode::Serial { reason }
 }
 
 /// Placeholder engine left in a caller's slot while [`run_mode`] drives
@@ -607,7 +729,7 @@ pub fn run_mode(
     engines: &mut [Box<dyn Engine>],
     parallel: bool,
 ) -> SimReport {
-    prepare_functional(mem, engines, parallel);
+    let functional = prepare_functional(mem, engines, parallel);
     let mut session = SimSession::new(cfg.clone());
     let ids: Vec<usize> = engines
         .iter_mut()
@@ -626,10 +748,11 @@ pub fn run_mode(
         *slot = engine;
         stats.push(s);
     }
-    SimReport { makespan, engines: stats }
+    SimReport { makespan, engines: stats, functional }
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::hbm::config::FabricClock;

@@ -22,7 +22,9 @@
 //!   pinned transient intermediates, per-job statistics and the
 //!   `hbmctl serve` replay harness ([`coordinator`]) — CPU↔FPGA
 //!   interconnect ([`interconnect`]), physical-design models
-//!   ([`floorplan`]), a columnar DBMS ([`db`]) whose accelerator
+//!   ([`floorplan`]), a static plan analyzer that proves capacity,
+//!   range disjointness and stall-freedom before a job ever touches the
+//!   card and gates `submit_plan` ([`analyze`]), a columnar DBMS ([`db`]) whose accelerator
 //!   boundary is a two-level request/handle API: single operators cross
 //!   as a typed [`db::OffloadRequest`] returning an async
 //!   [`db::JobHandle`] (`poll`/`wait`), and *whole query plans* lower
@@ -42,6 +44,14 @@
 //!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
 //!   [`runtime`] — Python never runs at request time.
 
+// The no-unwrap/no-expect discipline (clippy.toml `disallowed-methods`)
+// is scoped to the layers that must degrade into typed errors instead of
+// aborting a served card: `coordinator`, `db` and `engines` re-deny it
+// at their module roots. Everywhere else (benches, workload generators,
+// physical-design models) a panic on a broken invariant is fine.
+#![allow(clippy::disallowed_methods)]
+
+pub mod analyze;
 pub mod bench;
 pub mod coordinator;
 pub mod cpu;

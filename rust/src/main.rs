@@ -7,6 +7,7 @@
 //!   train       train a GLM through the PJRT runtime (HLO artifacts)
 //!   query       demo DB query, CPU vs FPGA-offloaded
 //!   plan        whole-plan pipelines vs operator-at-a-time offload
+//!   check       static plan analysis (lint a workload, no execution)
 //!   serve       multi-client mixed workload through the L3 coordinator
 //!   trace       card-clock trace of the analytics mix + validation matrix
 //!   bench-host  simulator wall-clock throughput: serial vs parallel,
@@ -18,9 +19,15 @@
 //!   hbmctl microbench --ports 32 --separations 256,128,0
 //!   hbmctl train --dataset tiny_ridge --alpha 0.05 --epochs 10
 //!   hbmctl plan --rows 200000 --repeat 2
+//!   hbmctl check --rows 200000
+//!   hbmctl check --fixture broken
 //!   hbmctl serve --clients 4 --queries 64 --policy all
 //!   hbmctl trace --rows 100000 --repeat 2
 //!   hbmctl bench-host --rows 400000
+
+// The binary is driver code outside the scheduler-layer no-unwrap scope
+// (see clippy.toml); `anyhow` errors are the contract here.
+#![allow(clippy::disallowed_methods)]
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -45,6 +52,7 @@ fn main() -> ExitCode {
         Some("train") => cmd_train(&args),
         Some("query") => cmd_query(&args),
         Some("plan") => cmd_plan(&args),
+        Some("check") => cmd_check(&args),
         Some("serve") => cmd_serve(&args),
         Some("trace") => cmd_trace(&args),
         Some("bench-host") => cmd_bench_host(&args),
@@ -82,6 +90,7 @@ fn subcommand_list() -> &'static str {
      \u{20} train       train a GLM through the PJRT runtime (HLO artifacts)\n\
      \u{20} query       demo DB query, CPU vs FPGA-offloaded\n\
      \u{20} plan        whole-plan pipelines vs operator-at-a-time offload\n\
+     \u{20} check       static plan analysis: lint a workload without executing it\n\
      \u{20} serve       multi-client mixed workload through the L3 coordinator\n\
      \u{20} trace       card-clock trace of the analytics mix (Perfetto JSON)\n\
      \u{20}             plus the trace-vs-stats validation matrix\n\
@@ -91,7 +100,7 @@ fn subcommand_list() -> &'static str {
 
 fn usage() {
     eprintln!(
-        "usage: hbmctl <figures|microbench|resources|train|query|plan|serve|trace|bench-host|help> [options]\n\
+        "usage: hbmctl <figures|microbench|resources|train|query|plan|check|serve|trace|bench-host|help> [options]\n\
          \n\
          figures    --fig <id|all> --scale <f> --out <dir> --artifacts <dir>\n\
          microbench --ports <list> --separations <list> --clock <200|300|400>\n\
@@ -106,7 +115,14 @@ fn usage() {
          \u{20}          runs a mixed-plan workload as whole-query pipelines\n\
          \u{20}          (submit_plan) vs operator-at-a-time offloads, verifies\n\
          \u{20}          identical results, and writes BENCH_pipeline.json with\n\
-         \u{20}          the moved-bytes savings\n\
+         \u{20}          the moved-bytes savings and the analyzer's predicted\n\
+         \u{20}          copy-in bytes next to the measured total\n\
+         check      --rows <n> --seed <s> --fixture <analytics|broken> --out <file.json>\n\
+         \u{20}          runs the five static-analysis passes (graph, capacity,\n\
+         \u{20}          parallelism, floorplan, cost bounds) over the analytics\n\
+         \u{20}          plan mix — or the intentionally broken fixture — without\n\
+         \u{20}          executing anything, prints every diagnostic, and writes\n\
+         \u{20}          CHECK_report.json\n\
          serve      --clients <n> --queries <m> --policy <fifo|fair|bandwidth|all>\n\
          \u{20}          --rows <n> --seed <s> --cache-mib <n> --out <file.json>\n\
          \u{20}          replays a mixed selection/join/SGD workload through the\n\
@@ -340,13 +356,22 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     }
 
     // Pipelined: every run submits all plans as whole-query DAGs before
-    // collecting any result, so they co-run on one card.
+    // collecting any result, so they co-run on one card. One analyzer
+    // cost model persists across the whole sequence, exactly like the
+    // card's column cache, so its predicted copy-in bytes are
+    // comparable to the measured total (exact while nothing is
+    // evicted).
     let mut acc_pipe = FpgaAccelerator::new(HbmConfig::default());
+    let mut cost = hbm_analytics::analyze::CostModel::new(
+        hbm_analytics::coordinator::DEFAULT_CACHE_BYTES,
+    );
+    let mut predicted_total = 0u64;
     let mut pipe_bytes: Vec<Vec<u64>> = vec![Vec::new(); plans.len()];
     for run in 0..repeat {
         let mut handles = Vec::new();
         for (pi, (_, plan)) in plans.iter().enumerate() {
             let req = PipelineRequest::from_plan(plan, &cat)?.client(pi);
+            predicted_total += cost.charge_plan(&req.facts());
             handles.push(acc_pipe.submit_plan(req));
         }
         println!(
@@ -403,6 +428,28 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
         pipe_total < op_total,
         "pipelining must move strictly fewer host bytes"
     );
+    println!(
+        "static analyzer predicted {predicted_total} B pipelined copy-in \
+         (measured {pipe_total} B)"
+    );
+    // The cost model is exact only while nothing is evicted (it never
+    // re-charges a key it admitted); under eviction pressure the real
+    // card re-pays copy-ins the model does not, so enforce agreement
+    // only in the eviction-free regime and report otherwise.
+    if pipe_stats.cache.evictions == 0 {
+        anyhow::ensure!(
+            (predicted_total as f64 - pipe_total as f64).abs()
+                <= 0.01 * pipe_total.max(1) as f64,
+            "analyzer cost bound diverged from the measured copy-in \
+             bytes (predicted {predicted_total}, measured {pipe_total})"
+        );
+    } else {
+        println!(
+            "note: {} eviction(s) — predicted copy-in is a lower bound, \
+             not checked against the measured total",
+            pipe_stats.cache.evictions
+        );
+    }
 
     let json_f = |v: f64| {
         if v.is_finite() {
@@ -445,6 +492,7 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     json.push_str("  },\n");
     json.push_str("  \"pipelined\": {\n");
     json.push_str(&format!("    \"copy_in_bytes\": {pipe_total},\n"));
+    json.push_str(&format!("    \"predicted_copy_in_bytes\": {predicted_total},\n"));
     json.push_str(&format!("    \"jobs\": {},\n", pipe_stats.completed()));
     json.push_str(&format!("    \"cache_hits\": {},\n", pipe_stats.cache.hits));
     json.push_str(&format!(
@@ -466,6 +514,104 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let out_path = args.get_str("out", "BENCH_pipeline.json");
     std::fs::write(&out_path, json)?;
     println!("wrote {out_path}");
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    use hbm_analytics::analyze::{self, fixtures, CardSpec, Severity};
+    use hbm_analytics::db::PipelineRequest;
+    use hbm_analytics::workloads::analytics;
+
+    let fixture = args.get_str("fixture", "analytics");
+    let out_path = args.get_str("out", "CHECK_report.json");
+    let card = CardSpec::default();
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"report\": \"check\",\n");
+    json.push_str(&format!("  \"fixture\": \"{fixture}\",\n"));
+
+    let (errors, warnings) = match fixture.as_str() {
+        "analytics" => {
+            let rows: usize = args.get_parsed("rows", 200_000)?;
+            let seed: u64 = args.get_parsed("seed", 11u64)?;
+            anyhow::ensure!(rows > 0, "--rows must be positive");
+            let customers = (rows / 100).max(64);
+            let cat = analytics::orders_catalog(rows, customers, seed);
+            let plans = analytics::mixed_plans(customers);
+            println!(
+                "linting {} analytics plans over {rows} orders / {customers} \
+                 customers (seed {seed:#x}) — nothing executes",
+                plans.len()
+            );
+            let (mut errors, mut warnings) = (0, 0);
+            json.push_str("  \"plans\": [\n");
+            for (pi, (name, plan)) in plans.iter().enumerate() {
+                let req = PipelineRequest::from_plan(plan, &cat)?;
+                let report = analyze::analyze_request(&req, &card);
+                errors += report.errors();
+                warnings += report.warnings();
+                println!(
+                    "  {name}: {} error(s), {} warning(s), {} info(s); \
+                     predicted copy-in {} B (cold card)",
+                    report.errors(),
+                    report.warnings(),
+                    report.count(Severity::Info),
+                    report.predicted_copy_in_bytes
+                );
+                for d in &report.diagnostics {
+                    println!("    {d}");
+                }
+                json.push_str(&format!("    {{\"name\": \"{name}\", \"analysis\": "));
+                json.push_str(&report.to_json("    "));
+                json.push('}');
+                json.push_str(if pi + 1 == plans.len() { "\n" } else { ",\n" });
+            }
+            json.push_str("  ],\n");
+            (errors, warnings)
+        }
+        "broken" => {
+            let facts = fixtures::broken_plan_facts();
+            let report = analyze::analyze_facts(&facts, &card);
+            println!(
+                "linting the intentionally broken fixture ({} stages):",
+                facts.stages.len()
+            );
+            for d in &report.diagnostics {
+                println!("  {d}");
+            }
+            let mut codes: Vec<&str> =
+                report.diagnostics.iter().map(|d| d.code).collect();
+            codes.sort_unstable();
+            codes.dedup();
+            json.push_str("  \"plans\": [\n");
+            json.push_str("    {\"name\": \"broken\", \"analysis\": ");
+            json.push_str(&report.to_json("    "));
+            json.push_str("}\n  ],\n");
+            json.push_str(&format!(
+                "  \"codes\": [{}],\n",
+                codes
+                    .iter()
+                    .map(|c| format!("\"{c}\""))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+            (report.errors(), report.warnings())
+        }
+        other => anyhow::bail!("unknown fixture '{other}' (analytics|broken)"),
+    };
+
+    json.push_str(&format!("  \"errors\": {errors},\n"));
+    json.push_str(&format!("  \"warnings\": {warnings}\n"));
+    json.push_str("}\n");
+    std::fs::write(&out_path, json)?;
+    println!("{errors} error(s), {warnings} warning(s); wrote {out_path}");
+    if fixture == "analytics" {
+        anyhow::ensure!(
+            errors == 0,
+            "the analytics workload must lint clean of errors"
+        );
+    }
     Ok(())
 }
 

@@ -1,3 +1,5 @@
+#![allow(clippy::disallowed_methods)]
+
 //! Contract tests for the redesigned DBMS↔card boundary: the typed
 //! `OffloadRequest` builder and the async `JobHandle` returned by
 //! `FpgaAccelerator::submit`.

@@ -1,3 +1,5 @@
+#![allow(clippy::disallowed_methods)]
+
 //! Integration tests for the continuous event-driven scheduler: the
 //! head-of-line regression the round barrier used to cause, policy
 //! result-equivalence under continuous admission, makespan dominance of

@@ -1,3 +1,5 @@
+#![allow(clippy::disallowed_methods)]
+
 //! Integration tests for the L3 coordinator: the acceptance scenario of
 //! the multi-query scheduler (`hbmctl serve --clients 4 --queries 64`),
 //! functional equivalence of every scheduled job against the CPU

@@ -1,3 +1,5 @@
+#![allow(clippy::disallowed_methods)]
+
 //! Host-performance invariants of the simulator: parallel functional
 //! execution must be *bit-identical* to serial execution, and the
 //! physically-resident cache must make keyed repeats write zero host

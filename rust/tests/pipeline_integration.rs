@@ -1,3 +1,5 @@
+#![allow(clippy::disallowed_methods)]
+
 //! Contract tests for the whole-plan pipeline boundary: `submit_plan`,
 //! dependency-linked stage DAGs, and HBM-resident intermediates.
 //!
@@ -8,14 +10,24 @@
 //! sequential execution. A randomized-plan property (over the miniature
 //! proptest harness) holds the pipelined executor result-identical to
 //! the CPU executor for arbitrary Select/Project/Join/Aggregate trees.
+//!
+//! Two further properties pin the static analyzer ([`analyze`]) to the
+//! machine it models: every lowered plan the analyzer accepts executes
+//! successfully with CPU-identical results (the reject direction is
+//! covered by the fixed fixtures in `analyze::fixtures`), and a plan
+//! whose parallelism pass lints clean really does dispatch its
+//! functional work on the parallel path — zero serial dispatches.
+//!
+//! [`analyze`]: hbm_analytics::analyze
 
+use hbm_analytics::analyze::{analyze_request, CardSpec};
 use hbm_analytics::db::ops::AggKind;
 use hbm_analytics::db::{
     Catalog, Column, ColumnData, Executor, FpgaAccelerator, Intermediate,
     PipelineRequest, Plan, Table,
 };
 use hbm_analytics::hbm::{FabricClock, HbmConfig};
-use hbm_analytics::util::proptest::{check, U64Range};
+use hbm_analytics::util::proptest::{check, Gen, PairGen, U64Range};
 use hbm_analytics::util::rng::Xoshiro256;
 use hbm_analytics::workloads::analytics::{amount_band_sum, orders_catalog};
 
@@ -305,4 +317,113 @@ fn repeat_pipeline_on_a_warm_card_copies_nothing() {
          intermediate)"
     );
     assert!(warm.latency() < cold.latency());
+}
+
+// ---------------------------------------------------------------------
+// Property: the static analyzer's verdict matches the machine.
+// ---------------------------------------------------------------------
+
+/// The card the tests execute on, as the analyzer sees it.
+fn card() -> CardSpec {
+    CardSpec { cfg: cfg(), ..CardSpec::default() }
+}
+
+/// Analyzer-accepts ⇒ execution-succeeds: every random well-typed plan
+/// lowers to a request the analyzer passes without errors, and that
+/// request then executes to the CPU executor's result. (The converse —
+/// broken DAGs are rejected at submit — is held by the fixed fixtures
+/// in `analyze::fixtures` and the coordinator's stall tests.)
+///
+/// Hand-rolled seed loop instead of `util::proptest::check`: each case
+/// runs two full executions, and the env-var case-count knob is global
+/// to the process — mutating it here would race the other properties
+/// in this binary.
+#[test]
+fn prop_analyzer_accepted_plans_execute_successfully() {
+    let cat = prop_catalog();
+    let mut rng = Xoshiro256::new(0xA11A);
+    for case in 0..10 {
+        let seed = U64Range(1, 1 << 32).generate(&mut rng);
+        let plan = random_plan(seed);
+        let request = PipelineRequest::from_plan(&plan, &cat).unwrap();
+        let report = analyze_request(&request, &card());
+        assert!(
+            !report.is_rejected(),
+            "case {case} (seed {seed:#x}): lowered plan must lint clean \
+             of errors: {:?}",
+            report.error_diagnostics()
+        );
+        let mut acc = FpgaAccelerator::new(cfg());
+        let mut handle = acc
+            .try_submit_plan(request)
+            .unwrap_or_else(|e| panic!("case {case} (seed {seed:#x}): {e}"));
+        let piped = normalized(handle.wait());
+        let cpu = normalized(Executor::cpu(&cat, 2).run(&plan).unwrap());
+        assert_eq!(
+            piped, cpu,
+            "case {case} (seed {seed:#x}): accepted plan diverged"
+        );
+    }
+}
+
+/// No parallelism warning ⇒ the parallel functional path engaged: when
+/// the analyzer's parallelism pass has nothing to say about a plan, the
+/// simulator must not fall back to serial functional execution.
+#[test]
+fn prop_clean_parallelism_lint_means_parallel_dispatches() {
+    // On a single-core host the simulator serializes every functional
+    // pass regardless of the plan; the property is vacuous there.
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    if cores <= 1 {
+        return;
+    }
+    // Rows sized well past PARALLEL_MIN_FOOTPRINT_BYTES so the analyzer
+    // never predicts a small-footprint fallback.
+    let gen = PairGen(U64Range(300_000, 600_000), U64Range(0, 900));
+    let mut rng = Xoshiro256::new(0xD15B);
+    for case in 0..6 {
+        let (rows, lo) = gen.generate(&mut rng);
+        let rows = rows as usize;
+        let mut data_rng = Xoshiro256::new(rows as u64 ^ 0xA5A5);
+        let mut cat = Catalog::new();
+        cat.register(Table::new(
+            "big",
+            vec![Column::u32(
+                "v",
+                (0..rows).map(|_| data_rng.next_u32() % 1_000).collect(),
+            )],
+        ));
+        let plan = Plan::scan("big", "v").select(lo as u32, 999);
+        let request = PipelineRequest::from_plan(&plan, &cat).unwrap();
+        let report = analyze_request(&request, &card());
+        for code in [
+            "parallel-disabled",
+            "unknown-ranges",
+            "range-overlap",
+            "single-engine",
+            "small-footprint",
+        ] {
+            assert!(
+                !report.has_code(code),
+                "case {case} ({rows} rows): a lone large select must \
+                 lint clean of the parallelism pass, got {code}"
+            );
+        }
+        let mut acc = FpgaAccelerator::new(cfg());
+        let mut handle = acc
+            .try_submit_plan(request)
+            .unwrap_or_else(|e| panic!("case {case} ({rows} rows): {e}"));
+        let got = normalized(handle.wait());
+        let want = normalized(Executor::cpu(&cat, 2).run(&plan).unwrap());
+        assert_eq!(got, want, "case {case} ({rows} rows)");
+        let (parallel, serial) = acc.functional_dispatches();
+        assert_eq!(
+            serial, 0,
+            "case {case} ({rows} rows): a plan with a clean parallelism \
+             pass must not serialize any functional dispatch"
+        );
+        assert!(parallel >= 1, "case {case} ({rows} rows)");
+    }
 }

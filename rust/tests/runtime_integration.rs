@@ -1,3 +1,5 @@
+#![allow(clippy::disallowed_methods)]
+
 //! End-to-end integration: Python-AOT HLO artifacts executed from the
 //! Rust PJRT runtime, validated against the native Rust trainer.
 //!

@@ -1,3 +1,5 @@
+#![allow(clippy::disallowed_methods)]
+
 //! Cross-module integration tests over the public API: the coordinator's
 //! end-to-end invariants that no single module's unit tests can see.
 //!

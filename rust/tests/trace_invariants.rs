@@ -1,3 +1,5 @@
+#![allow(clippy::disallowed_methods)]
+
 //! Property tests for the card-clock trace: on randomized served
 //! workloads, across all admission policies and both scheduling modes,
 //! the span stream must (a) never book one engine port twice at the same
