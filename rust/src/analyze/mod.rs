@@ -91,6 +91,9 @@ pub enum Pass {
     Parallelism,
     Floorplan,
     CostBounds,
+    /// Fleet placement: which card the router would choose — the prelude
+    /// to every other pass when linting against a multi-card deployment.
+    Route,
 }
 
 impl Pass {
@@ -101,6 +104,7 @@ impl Pass {
             Pass::Parallelism => "parallelism",
             Pass::Floorplan => "floorplan",
             Pass::CostBounds => "cost-bounds",
+            Pass::Route => "route",
         }
     }
 }
@@ -414,6 +418,75 @@ pub fn analyze_facts(facts: &PlanFacts, card: &CardSpec) -> AnalysisReport {
         predicted_copy_out_bytes_lower: 0,
         predicted_link_seconds_lower: cost.link_seconds_lower,
     }
+}
+
+/// Fleet-aware lint: run the passes against the card a cold fleet router
+/// would place this plan on.
+///
+/// The router's residency scores are runtime state the static analyzer
+/// cannot see, but its cold path is a pure function: the
+/// [`Partitioner`](crate::fleet::Partitioner) home of the plan's first
+/// keyed host column (keyless plans fall to card 0). The chosen card's
+/// [`CardSpec`] drives capacity, parallelism, floorplan and cost — cards
+/// in a fleet may differ — and the report is prefixed with an Info
+/// [`Pass::Route`] diagnostic naming the card id, so `hbmctl check
+/// --cards N` output attributes every finding to a concrete card.
+/// Returns `(card_id, report)`.
+pub fn analyze_facts_fleet(
+    facts: &PlanFacts,
+    cards: &[CardSpec],
+    partitioner: crate::fleet::Partitioner,
+) -> (usize, AnalysisReport) {
+    let n = cards.len().max(1);
+    let first_key = facts
+        .stages
+        .iter()
+        .flat_map(|s| &s.inputs)
+        .find_map(|input| match input {
+            InputFacts::Host { key: Some(k), .. } => Some(k.clone()),
+            _ => None,
+        });
+    let card_id = match &first_key {
+        Some(key) => partitioner.card_for(key, n),
+        None => 0,
+    };
+    let spec = cards.get(card_id).cloned().unwrap_or_default();
+    let mut report = analyze_facts(facts, &spec);
+    let message = match &first_key {
+        Some(key) => format!(
+            "routed to card {card_id} of {n} ({} home of {}.{})",
+            partitioner.name(),
+            key.table,
+            key.column
+        ),
+        None => format!(
+            "routed to card {card_id} of {n} (no keyed host column; \
+             keyless plans take the round-robin path at run time)"
+        ),
+    };
+    report.diagnostics.insert(
+        0,
+        Diagnostic {
+            pass: Pass::Route,
+            severity: Severity::Info,
+            code: "fleet-route",
+            stage: None,
+            message,
+            help: "every following finding is against this card's spec"
+                .to_string(),
+        },
+    );
+    (card_id, report)
+}
+
+/// [`analyze_facts_fleet`] over a lowered pipeline request — the entry
+/// `hbmctl check --cards N` uses.
+pub fn analyze_request_fleet(
+    request: &crate::db::PipelineRequest,
+    cards: &[CardSpec],
+    partitioner: crate::fleet::Partitioner,
+) -> (usize, AnalysisReport) {
+    analyze_facts_fleet(&request.facts(), cards, partitioner)
 }
 
 // ---------------------------------------------------------------- grants
@@ -1290,6 +1363,45 @@ mod tests {
 
     fn plan(stages: Vec<StageFacts>) -> PlanFacts {
         PlanFacts { stages, engines: None }
+    }
+
+    #[test]
+    fn fleet_lint_names_the_partitioner_home_card() {
+        use crate::fleet::Partitioner;
+        let rows = 1 << 18;
+        let facts = plan(vec![StageFacts::select(vec![host(
+            rows, "orders", "okey",
+        )])]);
+        let cards = vec![CardSpec::default(); 4];
+        let (card_id, report) =
+            analyze_facts_fleet(&facts, &cards, Partitioner::Hash);
+        assert_eq!(
+            card_id,
+            Partitioner::Hash.card_for(&ColumnKey::new("orders", "okey"), 4),
+            "lint must target the cold router's home card"
+        );
+        let first = &report.diagnostics[0];
+        assert_eq!(first.code, "fleet-route");
+        assert_eq!(first.severity, Severity::Info);
+        assert!(
+            first.message.contains(&format!("card {card_id}")),
+            "diagnostic must name the card: {first}"
+        );
+        // The routed report carries the same findings as linting that
+        // card directly, just with the route prelude.
+        let direct = analyze_facts(&facts, &cards[card_id]);
+        assert_eq!(report.diagnostics.len(), direct.diagnostics.len() + 1);
+        assert_eq!(report.predicted_copy_in_bytes, direct.predicted_copy_in_bytes);
+
+        // Keyless plans fall to card 0 and say so.
+        let keyless = plan(vec![StageFacts::select(vec![InputFacts::Host {
+            rows,
+            key: None,
+        }])]);
+        let (card_id, report) =
+            analyze_facts_fleet(&keyless, &cards, Partitioner::Range);
+        assert_eq!(card_id, 0);
+        assert!(report.diagnostics[0].message.contains("no keyed host column"));
     }
 
     #[test]

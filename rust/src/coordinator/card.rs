@@ -1,0 +1,124 @@
+//! One simulated HBM-FPGA card: the hardware-and-residency state a
+//! [`Coordinator`](super::Coordinator) schedules onto.
+//!
+//! Everything here used to live inline in the coordinator. It is split
+//! out so the coordinator is a *per-card scheduler* and a
+//! [`Fleet`](crate::fleet::Fleet) can hold N of them: each card owns its
+//! functional memory, shim allocator, CSR file, resident-column cache,
+//! physical residency map, host-link model and — crucially — its own
+//! persistent [`SimSession`] clock. Two cards never share any of this
+//! state; the only fleet-level coupling is the shared host-DRAM ingress
+//! bandwidth (`fleet::ingress`), applied by re-solving each card's link
+//! bandwidth between events.
+
+use std::collections::BTreeSet;
+
+use super::cache::{ColumnCache, ResidentLayout, DEFAULT_CACHE_BYTES};
+use crate::engines::control::ControlUnit;
+use crate::engines::sim::SimSession;
+use crate::hbm::shim::{Shim, ENGINE_PORTS};
+use crate::hbm::{HbmConfig, HbmMemory};
+use crate::interconnect::opencapi::OpenCapiLink;
+
+/// The per-card hardware and residency state. Fields are `pub` within
+/// the crate's scheduler layer on purpose: the coordinator's dispatch
+/// paths borrow several of them disjointly in one expression
+/// (`&self.card.cfg` next to `&mut self.card.shim`), which accessor
+/// methods would forbid.
+pub struct Card {
+    /// Stable card identity within a fleet (0 for a lone card). Stamped
+    /// onto every trace span this card's scheduler emits.
+    pub id: usize,
+    /// Timing configuration (fabric clock, channel rates).
+    pub cfg: HbmConfig,
+    /// Host-link model. Under a fleet's shared-ingress cap this carries
+    /// the card's *current max-min share*, not the nominal link rate.
+    pub link: OpenCapiLink,
+    /// Functional HBM contents.
+    pub mem: HbmMemory,
+    /// Deterministic per-port bump allocator over the HBM stripe.
+    pub shim: Shim,
+    /// CSR register file driving the engines.
+    pub control: ControlUnit,
+    /// Accounting cache: which `(table, column)` keys are HBM-resident.
+    pub cache: ColumnCache,
+    /// Physical residency map: which shim placements hold which bytes.
+    pub layout: ResidentLayout,
+    /// The continuous card timeline every in-flight job shares.
+    pub session: SimSession,
+    /// Engine ports not held by any in-flight job.
+    pub free_ports: BTreeSet<usize>,
+}
+
+impl Card {
+    pub fn new(cfg: HbmConfig) -> Self {
+        let shim = Shim::new(cfg.clone());
+        let link = OpenCapiLink::default();
+        let mut session = SimSession::new(cfg.clone());
+        session.set_link_bandwidth(link.bandwidth);
+        Self {
+            id: 0,
+            cfg,
+            link,
+            mem: HbmMemory::new(),
+            shim,
+            control: ControlUnit::new(ENGINE_PORTS),
+            cache: ColumnCache::new(DEFAULT_CACHE_BYTES),
+            layout: ResidentLayout::new(),
+            session,
+            free_ports: (0..ENGINE_PORTS).collect(),
+        }
+    }
+
+    /// Swap the card's timing configuration. The shim allocator is
+    /// rebuilt against the new config; phases still in flight see the
+    /// new rates from the next event on.
+    pub fn set_config(&mut self, cfg: HbmConfig) {
+        self.shim = Shim::new(cfg.clone());
+        self.session.set_config(cfg.clone());
+        self.cfg = cfg;
+    }
+
+    /// Swap the host-link model (rate changes apply from the next
+    /// session event — this is the knob a fleet's shared-ingress solver
+    /// turns between events).
+    pub fn set_link(&mut self, link: OpenCapiLink) {
+        self.session.set_link_bandwidth(link.bandwidth);
+        self.link = link;
+    }
+
+    /// Replace the resident-column budget (0 disables caching). The
+    /// physical residency map is reset with it: span lifetime is tied to
+    /// the accounting entries.
+    pub fn set_cache_bytes(&mut self, bytes: u64) {
+        self.cache = ColumnCache::new(bytes);
+        self.layout = ResidentLayout::new();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hbm::config::FabricClock;
+
+    #[test]
+    fn fresh_card_matches_coordinator_defaults() {
+        let card = Card::new(HbmConfig::at_clock(FabricClock::Mhz200));
+        assert_eq!(card.id, 0);
+        assert_eq!(card.free_ports.len(), ENGINE_PORTS);
+        assert_eq!(card.cache.capacity(), DEFAULT_CACHE_BYTES);
+        assert_eq!(card.session.now(), 0.0);
+        assert_eq!(card.link.bandwidth, OpenCapiLink::default().bandwidth);
+    }
+
+    #[test]
+    fn set_link_rebinds_the_session_rate() {
+        let mut card = Card::new(HbmConfig::at_clock(FabricClock::Mhz200));
+        let half = OpenCapiLink {
+            bandwidth: OpenCapiLink::default().bandwidth / 2.0,
+            ..OpenCapiLink::default()
+        };
+        card.set_link(half.clone());
+        assert_eq!(card.link.bandwidth, half.bandwidth);
+    }
+}

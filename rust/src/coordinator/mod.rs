@@ -48,7 +48,10 @@
 //!   mixed workload from N simulated clients, per-policy comparison of
 //!   continuous vs round-barrier scheduling (throughput, latency
 //!   percentiles, slot utilization, overlap ratio) and the
-//!   `BENCH_coordinator.json` perf artifact.
+//!   `BENCH_coordinator.json` perf artifact — plus, under `--cards N`,
+//!   the multi-card fleet replays ([`crate::fleet`]): uniform-mix
+//!   scaling efficiency and the skewed-tenant affinity-vs-round-robin
+//!   comparison recorded in the artifact's `fleet` block.
 //!
 //! The public face of this layer is `db`'s request/handle API:
 //! `db::FpgaAccelerator::submit` lowers a typed `db::OffloadRequest` into
@@ -65,12 +68,14 @@
 #![deny(clippy::disallowed_methods)]
 
 pub mod cache;
+pub mod card;
 pub mod job;
 pub mod policy;
 pub mod scheduler;
 pub mod serve;
 
 pub use cache::{CacheStats, ColumnCache, ResidentLayout, DEFAULT_CACHE_BYTES};
+pub use card::Card;
 pub use job::{
     ColumnKey, DepExpr, DepInput, InputColumn, JobKind, JobOutput, JobRecord,
     JobSpec,
@@ -80,6 +85,8 @@ pub use scheduler::{
     intermediate_key, Coordinator, CoordinatorError, CoordinatorStats, StatsView,
 };
 pub use serve::{
-    bench_json, mixed_workload, render_outcomes, run_policy, run_traced,
-    run_traced_jobs, PolicyOutcome, ServeSpec,
+    bench_json, mixed_workload, render_fleet, render_outcomes, run_fleet,
+    run_fleet_bench, run_fleet_traced, run_policy, run_traced, run_traced_jobs,
+    skewed_cache_bytes, skewed_workload, CardOutcome, FleetBench, FleetOutcome,
+    PolicyOutcome, ServeSpec, SKEW_TENANTS,
 };

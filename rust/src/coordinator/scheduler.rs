@@ -41,7 +41,8 @@
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 
-use super::cache::{CacheStats, ColumnCache, ResidentLayout, DEFAULT_CACHE_BYTES};
+use super::cache::{CacheStats, ColumnCache, ResidentLayout};
+use super::card::Card;
 use super::job::{
     ColumnKey, DepExpr, InputColumn, JobKind, JobOutput, JobRecord, JobSpec,
 };
@@ -50,7 +51,7 @@ use crate::engines::control::{ControlUnit, Csr};
 use crate::engines::join::{compact_matches, JoinEngine, JoinJob};
 use crate::engines::selection::{compact_results, SelectionEngine, SelectionJob};
 use crate::engines::sgd::{SgdEngine, SgdJob};
-use crate::engines::sim::{SimEvent, SimSession};
+use crate::engines::sim::SimEvent;
 use crate::engines::{sim, Engine};
 use crate::hbm::shim::{Shim, ENGINE_PORTS, PORT_HOME_BYTES, STACK_OFFSET};
 use crate::hbm::{HbmConfig, HbmMemory};
@@ -233,7 +234,7 @@ impl CoordinatorStats {
     pub fn view(&self) -> StatsView<'_> {
         StatsView {
             records: &self.records,
-            cache: &self.cache,
+            cache: &self.card.cache,
             simulated_time: self.simulated_time,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
@@ -292,7 +293,7 @@ impl StatsView<'_> {
     pub fn snapshot(&self) -> CoordinatorStats {
         CoordinatorStats {
             records: self.records.to_vec(),
-            cache: self.cache.clone(),
+            cache: self.card.cache.clone(),
             simulated_time: self.simulated_time,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
@@ -377,14 +378,16 @@ pub fn intermediate_key(job_id: usize) -> ColumnKey {
     ColumnKey::new("$intermediate", format!("job{job_id}"))
 }
 
-/// The multi-query scheduler that owns the simulated card.
+/// The multi-query scheduler that owns one simulated card.
+///
+/// All hardware and residency state lives in the [`Card`]; everything
+/// else here is scheduler state (queue, policy, accounting, tracer). A
+/// [`Fleet`](crate::fleet::Fleet) holds N coordinators — one per card —
+/// and routes submissions between them.
 pub struct Coordinator {
-    cfg: HbmConfig,
-    link: OpenCapiLink,
-    mem: HbmMemory,
-    shim: Shim,
-    control: ControlUnit,
-    cache: ColumnCache,
+    /// The card this scheduler drives: memory, shim, CSRs, cache,
+    /// residency layout, link model and the card's own clock.
+    card: Card,
     policy: Policy,
     /// Simulated seconds since construction.
     clock: f64,
@@ -407,9 +410,6 @@ pub struct Coordinator {
     /// Remaining dependent jobs per parent id (registered at submission).
     dependent_refs: BTreeMap<usize, u32>,
     hbm_bytes: u64,
-    /// Physical residency map: which shim placements currently hold which
-    /// column bytes, so a cache hit skips the host→HBM write entirely.
-    layout: ResidentLayout,
     /// Host-column bytes physically written into `HbmMemory` (total).
     host_write_bytes: u64,
     /// Run each dispatch's functional passes on worker threads (default).
@@ -419,10 +419,6 @@ pub struct Coordinator {
     /// Dispatches that fell back to the serial functional path (see
     /// [`sim::SerialReason`] for why a given dispatch serializes).
     functional_serial_dispatches: u64,
-    /// The continuous card timeline every in-flight job shares.
-    session: SimSession,
-    /// Engine ports not held by any in-flight job.
-    free_ports: BTreeSet<usize>,
     /// Schedule in historical lock-step rounds instead of continuously —
     /// the measured baseline (see [`set_round_barrier`]).
     ///
@@ -442,17 +438,8 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: HbmConfig) -> Self {
-        let shim = Shim::new(cfg.clone());
-        let link = OpenCapiLink::default();
-        let mut session = SimSession::new(cfg.clone());
-        session.set_link_bandwidth(link.bandwidth);
         Self {
-            cfg,
-            link,
-            mem: HbmMemory::new(),
-            shim,
-            control: ControlUnit::new(ENGINE_PORTS),
-            cache: ColumnCache::new(DEFAULT_CACHE_BYTES),
+            card: Card::new(cfg),
             policy: Policy::Fifo,
             clock: 0.0,
             next_id: 0,
@@ -463,13 +450,10 @@ impl Coordinator {
             dep_outputs: BTreeMap::new(),
             dependent_refs: BTreeMap::new(),
             hbm_bytes: 0,
-            layout: ResidentLayout::new(),
             host_write_bytes: 0,
             parallel_functional: true,
             functional_parallel_dispatches: 0,
             functional_serial_dispatches: 0,
-            session,
-            free_ports: (0..ENGINE_PORTS).collect(),
             round_barrier: false,
             engine_busy_port_seconds: 0.0,
             link_busy_barrier: 0.0,
@@ -481,6 +465,30 @@ impl Coordinator {
     pub fn with_policy(mut self, policy: Policy) -> Self {
         self.policy = policy;
         self
+    }
+
+    /// Builder form of [`set_card_id`](Coordinator::set_card_id).
+    pub fn with_card_id(mut self, id: usize) -> Self {
+        self.set_card_id(id);
+        self
+    }
+
+    /// Stamp this scheduler's card with its fleet-wide identity; every
+    /// span the scheduler emits from now on carries it. Lone cards keep
+    /// the default id 0.
+    pub fn set_card_id(&mut self, id: usize) {
+        self.card.id = id;
+    }
+
+    /// The fleet-wide identity of the card this scheduler drives.
+    pub fn card_id(&self) -> usize {
+        self.card.id
+    }
+
+    /// Borrow the card this scheduler drives (memory, cache, layout,
+    /// link and clock) — the state a fleet router scores.
+    pub fn card(&self) -> &Card {
+        &self.card
     }
 
     /// Builder form of [`set_round_barrier`](Coordinator::set_round_barrier).
@@ -560,6 +568,15 @@ impl Coordinator {
     }
 
     /// Drain the recorded trace stream (recording continues if enabled).
+    ///
+    /// The stream is **this card's alone**: every timestamp is on this
+    /// coordinator's own simulated clock, and after a fleet run each
+    /// card's `take_trace` returns only events it recorded — the fleet
+    /// never merges streams, because clocks of different cards are not
+    /// comparable. On the continuous timeline the stream is monotone in
+    /// emission time ([`Event::emit_time`]); under the barrier baseline
+    /// `run_round` synthesizes each job's spans together at round end,
+    /// so emission times are only monotone per round.
     pub fn take_trace(&mut self) -> Vec<Event> {
         self.tracer.take()
     }
@@ -572,8 +589,7 @@ impl Coordinator {
     /// physical residency map is reset with it: span lifetime is tied to
     /// the accounting entries.
     pub fn with_cache_bytes(mut self, bytes: u64) -> Self {
-        self.cache = ColumnCache::new(bytes);
-        self.layout = ResidentLayout::new();
+        self.card.set_cache_bytes(bytes);
         self
     }
 
@@ -582,7 +598,7 @@ impl Coordinator {
     }
 
     pub fn config(&self) -> &HbmConfig {
-        &self.cfg
+        &self.card.cfg
     }
 
     /// Swap the card's timing configuration (e.g. a fabric-clock change
@@ -591,26 +607,30 @@ impl Coordinator {
     /// semantics: phases still in flight see the new rates from the next
     /// event on.
     pub fn set_config(&mut self, cfg: HbmConfig) {
-        self.shim = Shim::new(cfg.clone());
-        self.session.set_config(cfg.clone());
-        self.cfg = cfg;
+        self.card.set_config(cfg);
     }
 
     pub fn link(&self) -> &OpenCapiLink {
-        &self.link
+        &self.card.link
     }
 
     pub fn set_link(&mut self, link: OpenCapiLink) {
-        self.session.set_link_bandwidth(link.bandwidth);
-        self.link = link;
+        self.card.set_link(link);
     }
 
     pub fn cache(&self) -> &ColumnCache {
-        &self.cache
+        &self.card.cache
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Total host-input bytes of every queued or in-flight job — the
+    /// outstanding-load measure the fleet router balances cold placements
+    /// against ([`crate::fleet::Router`]).
+    pub fn outstanding_input_bytes(&self) -> u64 {
+        self.queue.iter().map(|p| p.spec.kind.input_bytes()).sum()
     }
 
     /// Bytes currently backed by allocated pages in the card's functional
@@ -618,7 +638,7 @@ impl Coordinator {
     /// scratch). Eviction of a physically-resident column frees its
     /// fully-covered pages, which shows up here.
     pub fn hbm_resident_bytes(&self) -> u64 {
-        self.mem.resident_bytes()
+        self.card.mem.resident_bytes()
     }
 
     pub fn simulated_time(&self) -> f64 {
@@ -658,7 +678,7 @@ impl Coordinator {
         let mut pinned_keys = Vec::new();
         for input in &spec.inputs {
             if let Some(key) = &input.key {
-                if self.cache.pin(key) {
+                if self.card.cache.pin(key) {
                     pinned_keys.push(key.clone());
                 }
             }
@@ -671,7 +691,7 @@ impl Coordinator {
             dep.expr.column_keys(&mut dep_keys);
         }
         for key in dep_keys {
-            if self.cache.pin(key) {
+            if self.card.cache.pin(key) {
                 pinned_keys.push(key.clone());
             }
         }
@@ -711,7 +731,7 @@ impl Coordinator {
         // expressions) are vacuously ready: install them now so the job
         // is dispatchable immediately.
         if pending.unresolved.is_empty() && !pending.spec.deps.is_empty() {
-            install_deps(&mut pending, &self.dep_outputs, &mut self.cache);
+            install_deps(&mut pending, &self.dep_outputs, &mut self.card.cache);
         }
         self.queue.push_back(pending);
         id
@@ -797,14 +817,14 @@ impl Coordinator {
         }
         // Barrier rounds may have advanced the card clock past the
         // session while the mode was switched on an idle card.
-        if self.session.now() < self.clock {
-            self.session.sync_now(self.clock);
+        if self.card.session.now() < self.clock {
+            self.card.session.sync_now(self.clock);
         }
         let mut finished: Vec<(usize, JobOutput)> = Vec::new();
         while finished.is_empty() {
             self.admit_ready();
-            self.clock = self.session.now();
-            if self.session.idle() {
+            self.clock = self.card.session.now();
+            if self.card.session.idle() {
                 if self.queue.is_empty() {
                     break;
                 }
@@ -814,8 +834,8 @@ impl Coordinator {
                 return Err(CoordinatorError::DependencyStall { stalled });
             }
             let events =
-                self.session.advance_traced(&mut self.mem, &mut self.tracer);
-            self.clock = self.session.now();
+                self.card.session.advance_traced(&mut self.card.mem, &mut self.tracer);
+            self.clock = self.card.session.now();
             for event in events {
                 match event {
                     SimEvent::EngineDone { member } => self.note_engine_done(member),
@@ -841,7 +861,7 @@ impl Coordinator {
         let t_now = self.clock;
         for (id, output) in &finished {
             if let Some(&refs) = self.dependent_refs.get(id) {
-                self.cache
+                self.card.cache
                     .insert_pinned(&intermediate_key(*id), output.byte_size(), refs);
                 self.dep_outputs.insert(*id, output.clone());
                 self.tracer.record(|| Event::CachePin {
@@ -881,7 +901,7 @@ impl Coordinator {
             .iter()
             .filter(|p| matches!(p.stage, Stage::CopyIn { .. } | Stage::Running { .. }))
             .count();
-        let free: Vec<usize> = self.free_ports.iter().copied().collect();
+        let free: Vec<usize> = self.card.free_ports.iter().copied().collect();
         let views: Vec<QueuedJob> =
             ready.iter().map(|&i| queued_view(&self.queue[i])).collect();
         let admissions = plan_admission(self.policy, &views, &free, in_flight);
@@ -889,7 +909,7 @@ impl Coordinator {
         // that admitted something, so a job waiting across many events is
         // not re-reported at every one.
         if !admissions.is_empty() && self.tracer.is_enabled() {
-            let now = self.session.now();
+            let now = self.card.session.now();
             let policy_name = self.policy.name();
             let admitted: BTreeSet<usize> =
                 admissions.iter().map(|a| a.queue_idx).collect();
@@ -914,9 +934,9 @@ impl Coordinator {
     /// against the column cache and either start the link transfer or,
     /// when everything is resident, dispatch its engines immediately.
     fn admit_job(&mut self, qi: usize, ports: Vec<usize>) {
-        let now = self.session.now();
+        let now = self.card.session.now();
         for p in &ports {
-            let was_free = self.free_ports.remove(p);
+            let was_free = self.card.free_ports.remove(p);
             debug_assert!(was_free, "admitted port {p} must be free");
         }
         let policy_name = self.policy.name();
@@ -930,6 +950,7 @@ impl Coordinator {
             // itself is an instant.
             self.tracer.record(|| {
                 Event::Stage(StageSpan {
+                    card: self.card.id,
                     job: job_id,
                     client,
                     kind: kind_name,
@@ -960,7 +981,7 @@ impl Coordinator {
                     }
                     match &input.key {
                         Some(key) => {
-                            let hit = self.cache.access(key, input.bytes);
+                            let hit = self.card.cache.access(key, input.bytes);
                             if hit {
                                 pending.record.cache_hits += 1;
                             } else {
@@ -985,7 +1006,7 @@ impl Coordinator {
                 // The columns this job pinned at submission are now
                 // placed (or re-validated) for it; release the promises.
                 for key in pending.pinned_keys.drain(..) {
-                    self.cache.unpin(&key);
+                    self.card.cache.unpin(&key);
                     self.tracer.record(|| Event::CacheUnpin {
                         t: now,
                         key: key.to_string(),
@@ -996,13 +1017,13 @@ impl Coordinator {
         // Keys this admission just evicted lose their physical residency:
         // release their spans and free the pages those spans fully
         // covered (both stacks of the shim stripe).
-        for key in self.cache.drain_evicted() {
-            release_key_spans(&mut self.layout, &mut self.mem, &key);
+        for key in self.card.cache.drain_evicted() {
+            release_key_spans(&mut self.card.layout, &mut self.card.mem, &key);
             self.tracer
                 .record(|| Event::CacheEvict { t: now, key: key.to_string() });
         }
         if copy_bytes > 0 {
-            let transfer = self.session.add_transfer(copy_bytes, self.link.latency);
+            let transfer = self.card.session.add_transfer(copy_bytes, self.card.link.latency);
             self.queue[qi].stage =
                 Stage::CopyIn { transfer, started: now, ports, bytes: copy_bytes };
         } else {
@@ -1014,24 +1035,24 @@ impl Coordinator {
     /// Build, arm and join one job's engines on its granted ports at the
     /// current session time (one SGD batch per dispatch).
     fn dispatch_engines(&mut self, qi: usize, ports: Vec<usize>) {
-        let now = self.session.now();
+        let now = self.card.session.now();
         // Freed ports are recycled: reset their bump allocators so this
         // job's placement starts at the home-window base — a repeat job
         // with the same grant re-derives the same addresses, keeping the
         // physically-resident fast path live across jobs.
         for &p in &ports {
-            self.shim.reset_port(p);
+            self.card.shim.reset_port(p);
         }
         let mut engines: Vec<Box<dyn Engine>> = Vec::new();
         let (prep, slots, written) = {
             let pending = &self.queue[qi];
             build_engines(
-                &self.cfg,
-                &mut self.shim,
-                &mut self.mem,
-                &mut self.control,
-                &mut self.layout,
-                &self.cache,
+                &self.card.cfg,
+                &mut self.card.shim,
+                &mut self.card.mem,
+                &mut self.card.control,
+                &mut self.card.layout,
+                &self.card.cache,
                 &pending.spec.kind,
                 &pending.spec.inputs,
                 pending.sgd_models.len(),
@@ -1039,17 +1060,17 @@ impl Coordinator {
                 &mut engines,
             )
         };
-        let armed = self.control.take_started();
+        let armed = self.card.control.take_started();
         debug_assert_eq!(armed.len(), engines.len(), "every engine must be armed");
         // Functional passes run at dispatch (parallel when footprints are
         // disjoint); the timing phases then join the shared session.
         let mode =
-            sim::prepare_functional(&mut self.mem, &mut engines, self.parallel_functional);
+            sim::prepare_functional(&mut self.card.mem, &mut engines, self.parallel_functional);
         self.note_functional_mode(mode);
         let mut members = Vec::with_capacity(engines.len());
         let mut remaining = 0usize;
         for engine in engines {
-            let (member, active) = self.session.add_engine(engine, &mut self.mem);
+            let (member, active) = self.card.session.add_engine(engine, &mut self.card.mem);
             members.push(member);
             if active {
                 remaining += 1;
@@ -1125,7 +1146,7 @@ impl Coordinator {
     /// policy, and either start the copy-out (job complete) or return the
     /// job to the admission queue (SGD grid not exhausted).
     fn finish_batch(&mut self, qi: usize) {
-        let now = self.session.now();
+        let now = self.card.session.now();
         let stage = std::mem::replace(&mut self.queue[qi].stage, Stage::Waiting);
         let Stage::Running { members, ports, prep, slots, started, .. } = stage else {
             unreachable!("finish_batch on a non-running job");
@@ -1138,6 +1159,7 @@ impl Coordinator {
             let policy_name = self.policy.name();
             self.tracer.record(|| {
                 Event::Stage(StageSpan {
+                    card: self.card.id,
                     job: job_id,
                     client,
                     kind: kind_name,
@@ -1153,15 +1175,15 @@ impl Coordinator {
         let mut engines: Vec<Box<dyn Engine>> = Vec::with_capacity(members.len());
         let mut job_hbm = 0u64;
         for &m in &members {
-            let (engine, stats) = self.session.take_engine(m);
+            let (engine, stats) = self.card.session.take_engine(m);
             job_hbm += stats.hbm_bytes;
             engines.push(engine);
             self.tracer.record(|| Event::MemberFreed { t: now, member: m });
         }
         let outcome = collect_outcome(
-            &self.cfg,
-            &self.mem,
-            &mut self.control,
+            &self.card.cfg,
+            &self.card.mem,
+            &mut self.card.control,
             &prep,
             &engines,
             &slots,
@@ -1171,7 +1193,7 @@ impl Coordinator {
         // Slots free at *this job's* completion event, not a round's.
         self.engine_busy_port_seconds += ports.len() as f64 * exec;
         for p in ports {
-            self.free_ports.insert(p);
+            self.card.free_ports.insert(p);
         }
         self.hbm_bytes += job_hbm;
         let pending = &mut self.queue[qi];
@@ -1186,7 +1208,7 @@ impl Coordinator {
                 pending.waiting_since = now;
             }
             RoundOutcome::Complete { output, out_bytes } => {
-                let transfer = self.session.add_transfer(out_bytes, self.link.latency);
+                let transfer = self.card.session.add_transfer(out_bytes, self.card.link.latency);
                 pending.stage = Stage::CopyOut {
                     transfer,
                     started: now,
@@ -1205,7 +1227,7 @@ impl Coordinator {
         transfer: usize,
         finished: &mut Vec<(usize, JobOutput)>,
     ) {
-        let now = self.session.now();
+        let now = self.card.session.now();
         let Some(qi) = self.queue.iter().position(|p| match &p.stage {
             Stage::CopyIn { transfer: t, .. } | Stage::CopyOut { transfer: t, .. } => {
                 *t == transfer
@@ -1224,6 +1246,7 @@ impl Coordinator {
                 self.queue[qi].record.copy_in += now - started;
                 self.tracer.record(|| {
                     Event::Stage(StageSpan {
+                        card: self.card.id,
                         job: job_id,
                         client,
                         kind: kind_name,
@@ -1237,6 +1260,7 @@ impl Coordinator {
                 });
                 self.tracer.record(|| {
                     Event::Transfer(TransferSpan {
+                        card: self.card.id,
                         job: job_id,
                         dir: Dir::In,
                         bytes,
@@ -1250,6 +1274,7 @@ impl Coordinator {
             Stage::CopyOut { started, output, bytes, .. } => {
                 self.tracer.record(|| {
                     Event::Stage(StageSpan {
+                        card: self.card.id,
                         job: job_id,
                         client,
                         kind: kind_name,
@@ -1263,6 +1288,7 @@ impl Coordinator {
                 });
                 self.tracer.record(|| {
                     Event::Transfer(TransferSpan {
+                        card: self.card.id,
                         job: job_id,
                         dir: Dir::Out,
                         bytes,
@@ -1303,13 +1329,13 @@ impl Coordinator {
                 continue;
             }
             let parents =
-                install_deps(pending, &self.dep_outputs, &mut self.cache);
+                install_deps(pending, &self.dep_outputs, &mut self.card.cache);
             // Consume one reference per unique parent: the intermediate
             // counts as a resident hit for this job, loses one pin, and
             // is dropped from HBM after its last consumer.
             for p in parents {
                 let key = intermediate_key(p);
-                let hit = self.cache.access(&key, 0);
+                let hit = self.card.cache.access(&key, 0);
                 if hit {
                     pending.record.cache_hits += 1;
                 }
@@ -1321,7 +1347,7 @@ impl Coordinator {
                     bytes: 0,
                     hit,
                 });
-                self.cache.unpin(&key);
+                self.card.cache.unpin(&key);
                 self.tracer
                     .record(|| Event::CacheUnpin { t: t_now, key: key.to_string() });
                 let remaining = {
@@ -1334,13 +1360,13 @@ impl Coordinator {
                 if remaining == 0 {
                     self.dependent_refs.remove(&p);
                     self.dep_outputs.remove(&p);
-                    self.cache.remove(&key);
+                    self.card.cache.remove(&key);
                     // Symmetric with the eviction drain: releasing a
                     // resident entry frees its spans' pages.
                     // (Intermediates are normally never placed — dep-fed
                     // slots carry no key — so this is a no-op unless a
                     // caller keyed a dependent slot explicitly.)
-                    release_key_spans(&mut self.layout, &mut self.mem, &key);
+                    release_key_spans(&mut self.card.layout, &mut self.card.mem, &key);
                 }
             }
         }
@@ -1406,14 +1432,14 @@ impl Coordinator {
     pub fn stats(&self) -> StatsView<'_> {
         StatsView {
             records: &self.records,
-            cache: self.cache.stats(),
+            cache: self.card.cache.stats(),
             simulated_time: self.clock,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
             engine_busy_port_seconds: self.engine_busy_port_seconds,
             link_busy_seconds: self.link_busy_barrier
-                + self.session.link_busy_seconds(),
-            overlap_seconds: self.session.overlap_seconds(),
+                + self.card.session.link_busy_seconds(),
+            overlap_seconds: self.card.session.overlap_seconds(),
         }
     }
 
@@ -1423,14 +1449,14 @@ impl Coordinator {
     pub fn into_stats(self) -> CoordinatorStats {
         CoordinatorStats {
             records: self.records,
-            cache: self.cache.stats().clone(),
+            cache: self.card.cache.stats().clone(),
             simulated_time: self.clock,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
             engine_busy_port_seconds: self.engine_busy_port_seconds,
             link_busy_seconds: self.link_busy_barrier
-                + self.session.link_busy_seconds(),
-            overlap_seconds: self.session.overlap_seconds(),
+                + self.card.session.link_busy_seconds(),
+            overlap_seconds: self.card.session.overlap_seconds(),
         }
     }
 
@@ -1506,7 +1532,7 @@ impl Coordinator {
                 }
                 match &input.key {
                     Some(key) => {
-                        let hit = self.cache.access(key, input.bytes);
+                        let hit = self.card.cache.access(key, input.bytes);
                         if hit {
                             pending.record.cache_hits += 1;
                         } else {
@@ -1531,7 +1557,7 @@ impl Coordinator {
             // The columns this job pinned at submission are now placed
             // (or re-validated) for it; release the promises.
             for key in pending.pinned_keys.drain(..) {
-                self.cache.unpin(&key);
+                self.card.cache.unpin(&key);
                 self.tracer.record(|| Event::CacheUnpin {
                     t: round_start,
                     key: key.to_string(),
@@ -1541,15 +1567,15 @@ impl Coordinator {
         let n_copying = copy_bytes.iter().filter(|&&b| b > 0).count();
         let copy_in: Vec<f64> = copy_bytes
             .iter()
-            .map(|&b| if b > 0 { self.link.transfer_time(b, n_copying) } else { 0.0 })
+            .map(|&b| if b > 0 { self.card.link.transfer_time(b, n_copying) } else { 0.0 })
             .collect();
         let copy_in_phase = copy_in.iter().cloned().fold(0.0f64, f64::max);
 
         // 2b. Keys the admissions just evicted lose their physical
         //     residency: release their spans and free the pages those
         //     spans fully covered (both stacks of the shim stripe).
-        for key in self.cache.drain_evicted() {
-            release_key_spans(&mut self.layout, &mut self.mem, &key);
+        for key in self.card.cache.drain_evicted() {
+            release_key_spans(&mut self.card.layout, &mut self.card.mem, &key);
             self.tracer.record(|| Event::CacheEvict {
                 t: round_start,
                 key: key.to_string(),
@@ -1560,7 +1586,7 @@ impl Coordinator {
         //    arm them through the CSR interface. Keyed inputs whose exact
         //    placement is still physically resident skip the host→HBM
         //    write entirely (`host_written` stays 0 for fully-warm jobs).
-        self.shim.reset();
+        self.card.shim.reset();
         let mut engines: Vec<Box<dyn Engine>> = Vec::new();
         let mut prepared: Vec<(Prepared, std::ops::Range<usize>, Vec<usize>)> =
             Vec::new();
@@ -1569,12 +1595,12 @@ impl Coordinator {
             let pending = &self.queue[adm.queue_idx];
             let start = engines.len();
             let (prep, slots, written) = build_engines(
-                &self.cfg,
-                &mut self.shim,
-                &mut self.mem,
-                &mut self.control,
-                &mut self.layout,
-                &self.cache,
+                &self.card.cfg,
+                &mut self.card.shim,
+                &mut self.card.mem,
+                &mut self.card.control,
+                &mut self.card.layout,
+                &self.card.cache,
                 &pending.spec.kind,
                 &pending.spec.inputs,
                 pending.sgd_models.len(),
@@ -1584,13 +1610,13 @@ impl Coordinator {
             host_written[ai] = written;
             prepared.push((prep, start..engines.len(), slots));
         }
-        let armed = self.control.take_started();
+        let armed = self.card.control.take_started();
         debug_assert_eq!(armed.len(), engines.len(), "every engine must be armed");
 
         // 4. One fluid simulation over all co-scheduled engines: parallel
         //    functional passes (disjoint per-engine views), serial timing.
         let report =
-            sim::run_mode(&self.cfg, &mut self.mem, &mut engines, self.parallel_functional);
+            sim::run_mode(&self.card.cfg, &mut self.card.mem, &mut engines, self.parallel_functional);
         self.note_functional_mode(report.functional);
 
         // 5. Collect per-job results and publish them through the CSRs.
@@ -1602,9 +1628,9 @@ impl Coordinator {
                 stats.iter().map(|s| s.finish_time).fold(0.0f64, f64::max);
             let job_hbm: u64 = stats.iter().map(|s| s.hbm_bytes).sum();
             let outcome = collect_outcome(
-                &self.cfg,
-                &self.mem,
-                &mut self.control,
+                &self.card.cfg,
+                &self.card.mem,
+                &mut self.card.control,
                 prep,
                 &engines[range.clone()],
                 slots,
@@ -1656,6 +1682,7 @@ impl Coordinator {
             let waiting_since = pending.waiting_since;
             let span = |stage: StageKind, start: f64, end: f64, ports: Vec<usize>| {
                 Event::Stage(StageSpan {
+                    card: self.card.id,
                     job: job_id,
                     client,
                     kind: kind_name,
@@ -1677,6 +1704,7 @@ impl Coordinator {
                 });
                 self.tracer.record(|| {
                     Event::Transfer(TransferSpan {
+                        card: self.card.id,
                         job: job_id,
                         dir: Dir::In,
                         bytes: b,
@@ -1703,7 +1731,7 @@ impl Coordinator {
                     pending.waiting_since = run_end;
                 }
                 RoundOutcome::Complete { output, out_bytes } => {
-                    let copy_out = self.link.transfer_time(out_bytes, n_out);
+                    let copy_out = self.card.link.transfer_time(out_bytes, n_out);
                     copy_out_phase = copy_out_phase.max(copy_out);
                     pending.record.copy_out += copy_out;
                     pending.record.finish_time =
@@ -1713,6 +1741,7 @@ impl Coordinator {
                     });
                     self.tracer.record(|| {
                         Event::Transfer(TransferSpan {
+                            card: self.card.id,
                             job: job_id,
                             dir: Dir::Out,
                             bytes: out_bytes,

@@ -17,11 +17,20 @@
 //! recording the continuous-vs-barrier comparison, so successive PRs can
 //! track the performance trajectory (CI asserts continuous ≥ barrier on
 //! throughput and ≤ on p99 latency for every policy).
+//!
+//! With `--cards N` the harness additionally replays the workloads
+//! through a [`Fleet`]: the uniform analytics mix measures scaling
+//! efficiency against a single-card run of the identical jobs
+//! (bit-identity asserted), and a cache-pressured **skewed-tenant** mix
+//! ([`skewed_workload`]) pits affinity routing against round-robin — the
+//! `fleet` block of `BENCH_coordinator.json` records both (CI asserts
+//! near-linear scaling and affinity > round-robin on the skewed mix).
 
 use super::job::{ColumnKey, JobKind, JobOutput, JobSpec};
 use super::policy::Policy;
 use super::scheduler::{Coordinator, CoordinatorStats};
 use crate::engines::sgd::{GlmTask, SgdHyperParams};
+use crate::fleet::{Fleet, RouterKind};
 use crate::hbm::HbmConfig;
 use crate::trace::{Event, Histogram, MetricsRegistry};
 use crate::util::rng::Xoshiro256;
@@ -335,6 +344,295 @@ pub fn run_traced_jobs(
     (events, coord.into_stats())
 }
 
+/// Tenants in the skewed fleet mix: enough that no card can hold every
+/// tenant's column under the pressured cache budget, few enough that an
+/// affinity-partitioned quarter of them fits.
+pub const SKEW_TENANTS: usize = 16;
+
+/// Cache budget for the skewed fleet benchmark: 8 tenant columns per
+/// card. An affinity router keeps each card's tenant subset (~4–6 of
+/// [`SKEW_TENANTS`]) fully resident; round-robin spreads every tenant
+/// over every card (~all 16 in each working set), so the same budget
+/// thrashes — the contrast the `fleet.skewed` JSON block measures.
+pub fn skewed_cache_bytes(spec: &ServeSpec) -> u64 {
+    8 * spec.rows as u64 * 4
+}
+
+/// The skewed-tenant fleet mix: selection-only queries over
+/// [`SKEW_TENANTS`] per-tenant columns, with a quadratically skewed
+/// tenant draw (tenant 0 hottest, ~1/√t density) — the multi-tenant
+/// traffic shape affinity routing wins on.
+pub fn skewed_workload(spec: &ServeSpec) -> Vec<JobSpec> {
+    let mut rng = Xoshiro256::new(spec.seed ^ 0x7E4A);
+    let mut jobs = Vec::with_capacity(spec.queries);
+    for q in 0..spec.queries {
+        let client = q % spec.clients.max(1);
+        let r = rng.next_f64();
+        let tenant = ((r * r) * SKEW_TENANTS as f64) as usize % SKEW_TENANTS;
+        let key = ColumnKey::new(format!("tenant{tenant}"), "v");
+        let data = select_column(spec, &key);
+        let span = (u32::MAX / 10) * (1 + rng.next_u32() % 5);
+        let lo = rng.next_u32().saturating_sub(span) / 2;
+        let hi = lo.saturating_add(span);
+        jobs.push(
+            JobSpec::new(JobKind::Selection { data: data.into(), lo, hi })
+                .with_keys(vec![Some(key)])
+                .with_client(client),
+        );
+    }
+    jobs
+}
+
+/// One card's slice of a fleet outcome.
+#[derive(Debug, Clone)]
+pub struct CardOutcome {
+    pub card: usize,
+    pub jobs: usize,
+    /// This card's clock when the fleet drained.
+    pub seconds: f64,
+    pub slot_utilization: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Summary of one fleet replay of a workload.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub router: RouterKind,
+    pub cards: usize,
+    /// The slowest card's clock — fleet completion time.
+    pub makespan: f64,
+    pub qps: f64,
+    /// `single-card seconds / (cards × makespan)`: 1.0 is perfectly
+    /// linear scale-out of the identical workload.
+    pub scaling_efficiency: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub per_card: Vec<CardOutcome>,
+}
+
+/// Replay `jobs` on a fleet of `cards` under `router`, and on one card
+/// for reference. Asserts every job's fleet output is **bit-identical**
+/// to the single-card run (placement and ingress sharing may only move
+/// timing, never results), then returns the fleet outputs keyed by
+/// submission ticket and the scaling summary.
+pub fn run_fleet(
+    cfg: &HbmConfig,
+    policy: Policy,
+    spec: &ServeSpec,
+    cards: usize,
+    router: RouterKind,
+    host_bandwidth: f64,
+    jobs: Vec<JobSpec>,
+) -> (Vec<(usize, JobOutput)>, FleetOutcome) {
+    let fleet_jobs = jobs.clone();
+    // Single-card reference: submission ids coincide with fleet tickets
+    // (both number jobs 0..n in submission order).
+    let mut solo = Coordinator::new(cfg.clone())
+        .with_policy(policy)
+        .with_cache_bytes(spec.cache_bytes);
+    for job in jobs {
+        solo.submit(job);
+    }
+    let reference: std::collections::BTreeMap<usize, JobOutput> =
+        solo.run().into_iter().collect();
+    let single_seconds = solo.simulated_time();
+
+    let mut fleet = Fleet::new(cfg.clone(), cards)
+        .with_policy(policy)
+        .with_cache_bytes(spec.cache_bytes)
+        .with_router(router)
+        .with_host_bandwidth(host_bandwidth);
+    for job in fleet_jobs {
+        fleet.submit(job);
+    }
+    let outputs = fleet.run();
+    assert_eq!(
+        outputs.len(),
+        reference.len(),
+        "fleet must complete the same jobs as the single card"
+    );
+    for (ticket, out) in &outputs {
+        let Some(expected) = reference.get(ticket) else {
+            panic!("ticket {ticket} missing from the single-card reference");
+        };
+        assert!(
+            outputs_identical(out, expected),
+            "ticket {ticket}: fleet output diverged from the single-card run"
+        );
+    }
+
+    let makespan = fleet.makespan();
+    let completed = outputs.len();
+    let n_cards = fleet.card_count();
+    let stats = fleet.into_stats();
+    let per_card: Vec<CardOutcome> = stats
+        .iter()
+        .enumerate()
+        .map(|(card, s)| CardOutcome {
+            card,
+            jobs: s.completed(),
+            seconds: s.simulated_time,
+            slot_utilization: s.slot_utilization(),
+            cache_hits: s.cache.hits,
+            cache_misses: s.cache.misses,
+        })
+        .collect();
+    let outcome = FleetOutcome {
+        router,
+        cards: n_cards,
+        makespan,
+        qps: if makespan > 0.0 { completed as f64 / makespan } else { 0.0 },
+        scaling_efficiency: if makespan > 0.0 {
+            single_seconds / (n_cards as f64 * makespan)
+        } else {
+            0.0
+        },
+        cache_hits: per_card.iter().map(|c| c.cache_hits).sum(),
+        cache_misses: per_card.iter().map(|c| c.cache_misses).sum(),
+        per_card,
+    };
+    (outputs, outcome)
+}
+
+/// Replay the spec's mixed workload on a traced fleet: one event stream
+/// and one accounting **per card** (streams are never merged across card
+/// clocks). The input for `hbmctl trace --cards N` and
+/// [`crate::trace::validate_cards`].
+pub fn run_fleet_traced(
+    cfg: &HbmConfig,
+    policy: Policy,
+    spec: &ServeSpec,
+    cards: usize,
+    router: RouterKind,
+) -> (Vec<Vec<Event>>, Vec<CoordinatorStats>) {
+    let mut fleet = Fleet::new(cfg.clone(), cards)
+        .with_policy(policy)
+        .with_cache_bytes(spec.cache_bytes)
+        .with_router(router);
+    fleet.set_tracing(true);
+    for job in mixed_workload(spec) {
+        fleet.submit(job);
+    }
+    fleet.run();
+    let traces = fleet.take_traces();
+    (traces, fleet.into_stats())
+}
+
+/// The fleet section of the benchmark report: uniform-mix scaling for
+/// both routers plus the cache-pressured skewed-tenant comparison.
+#[derive(Debug, Clone)]
+pub struct FleetBench {
+    pub cards: usize,
+    /// The serving router — its uniform-mix efficiency is the headline
+    /// `fleet.scaling_efficiency` CI asserts on.
+    pub router: RouterKind,
+    pub host_bandwidth: f64,
+    /// Uniform analytics mix, one outcome per router kind.
+    pub uniform: Vec<FleetOutcome>,
+    /// Skewed-tenant mix under the pressured cache budget.
+    pub skewed: Vec<FleetOutcome>,
+    pub skewed_tenants: usize,
+    pub skewed_cache_bytes: u64,
+}
+
+impl FleetBench {
+    fn outcome(pool: &[FleetOutcome], router: RouterKind) -> Option<&FleetOutcome> {
+        pool.iter().find(|o| o.router == router)
+    }
+
+    /// The serving router's uniform-mix scaling efficiency.
+    pub fn scaling_efficiency(&self) -> f64 {
+        Self::outcome(&self.uniform, self.router)
+            .map(|o| o.scaling_efficiency)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Run the full fleet benchmark: the uniform mix and the skewed-tenant
+/// mix, each under both routers. Every replay re-asserts bit-identity
+/// against its single-card reference.
+pub fn run_fleet_bench(
+    cfg: &HbmConfig,
+    policy: Policy,
+    spec: &ServeSpec,
+    cards: usize,
+    router: RouterKind,
+    host_bandwidth: f64,
+) -> FleetBench {
+    let routers = [RouterKind::Affinity, RouterKind::RoundRobin];
+    let uniform: Vec<FleetOutcome> = routers
+        .iter()
+        .map(|&r| {
+            run_fleet(cfg, policy, spec, cards, r, host_bandwidth, mixed_workload(spec)).1
+        })
+        .collect();
+    // The skewed mix runs under cache pressure: the budget is the lever
+    // that turns placement quality into measurable copy-in traffic.
+    let pressured =
+        ServeSpec { cache_bytes: skewed_cache_bytes(spec), ..spec.clone() };
+    let skewed: Vec<FleetOutcome> = routers
+        .iter()
+        .map(|&r| {
+            run_fleet(
+                cfg,
+                policy,
+                &pressured,
+                cards,
+                r,
+                host_bandwidth,
+                skewed_workload(&pressured),
+            )
+            .1
+        })
+        .collect();
+    FleetBench {
+        cards,
+        router,
+        host_bandwidth,
+        uniform,
+        skewed,
+        skewed_tenants: SKEW_TENANTS,
+        skewed_cache_bytes: skewed_cache_bytes(spec),
+    }
+}
+
+/// Render the fleet comparison table: per mix × router, with per-card
+/// job counts.
+pub fn render_fleet(bench: &FleetBench) -> String {
+    let mut t = Table::new(
+        "fleet serve: affinity vs round-robin routing \
+         (simulated device time, shared host ingress)",
+        &[
+            "mix",
+            "router",
+            "cards",
+            "makespan",
+            "qps",
+            "scale-eff",
+            "hit/miss",
+            "jobs/card",
+        ],
+    );
+    for (mix, pool) in [("uniform", &bench.uniform), ("skewed", &bench.skewed)] {
+        for o in pool.iter() {
+            let per_card: Vec<String> =
+                o.per_card.iter().map(|c| c.jobs.to_string()).collect();
+            t.row(vec![
+                mix.to_string(),
+                o.router.name().to_string(),
+                o.cards.to_string(),
+                format!("{:.3} ms", o.makespan * 1e3),
+                format!("{:.0}", o.qps),
+                format!("{:.2}", o.scaling_efficiency),
+                format!("{}/{}", o.cache_hits, o.cache_misses),
+                per_card.join("+"),
+            ]);
+        }
+    }
+    t.render()
+}
+
 /// Render the per-policy comparison table: continuous scheduling next to
 /// its round-barrier baseline.
 pub fn render_outcomes(outcomes: &[PolicyOutcome]) -> String {
@@ -456,10 +754,98 @@ fn stats_registry(stats: &CoordinatorStats) -> MetricsRegistry {
     reg
 }
 
+/// JSON object key for a router: underscore form (`round_robin`), so jq
+/// paths need no quoting.
+fn router_json_key(router: RouterKind) -> &'static str {
+    match router {
+        RouterKind::Affinity => "affinity",
+        RouterKind::RoundRobin => "round_robin",
+    }
+}
+
+/// One fleet outcome's stat block.
+fn fleet_outcome_json(out: &mut String, indent: &str, o: &FleetOutcome) {
+    out.push_str(&format!("{indent}\"cards\": {},\n", o.cards));
+    out.push_str(&format!("{indent}\"makespan_s\": {},\n", json_f(o.makespan)));
+    out.push_str(&format!("{indent}\"qps\": {},\n", json_f(o.qps)));
+    out.push_str(&format!(
+        "{indent}\"scaling_efficiency\": {},\n",
+        json_f(o.scaling_efficiency)
+    ));
+    out.push_str(&format!("{indent}\"cache_hits\": {},\n", o.cache_hits));
+    out.push_str(&format!("{indent}\"cache_misses\": {},\n", o.cache_misses));
+    out.push_str(&format!("{indent}\"per_card\": [\n"));
+    for (i, c) in o.per_card.iter().enumerate() {
+        out.push_str(&format!(
+            "{indent}  {{ \"card\": {}, \"jobs\": {}, \"seconds\": {}, \
+             \"slot_utilization\": {}, \"cache_hits\": {}, \
+             \"cache_misses\": {} }}{}\n",
+            c.card,
+            c.jobs,
+            json_f(c.seconds),
+            json_f(c.slot_utilization),
+            c.cache_hits,
+            c.cache_misses,
+            if i + 1 == o.per_card.len() { "" } else { "," }
+        ));
+    }
+    out.push_str(&format!("{indent}]\n"));
+}
+
+/// The `fleet` block of `BENCH_coordinator.json`. The jq paths CI asserts
+/// on: `.fleet.scaling_efficiency` (serving router, uniform mix) and
+/// `.fleet.skewed.affinity.qps > .fleet.skewed.round_robin.qps`.
+fn fleet_json(out: &mut String, bench: &FleetBench) {
+    out.push_str("  \"fleet\": {\n");
+    out.push_str(&format!("    \"cards\": {},\n", bench.cards));
+    out.push_str(&format!("    \"router\": \"{}\",\n", bench.router.name()));
+    out.push_str(&format!(
+        "    \"host_bandwidth\": {},\n",
+        json_f(bench.host_bandwidth)
+    ));
+    out.push_str(&format!(
+        "    \"scaling_efficiency\": {},\n",
+        json_f(bench.scaling_efficiency())
+    ));
+    out.push_str("    \"uniform\": {\n");
+    for (i, o) in bench.uniform.iter().enumerate() {
+        out.push_str(&format!("      \"{}\": {{\n", router_json_key(o.router)));
+        fleet_outcome_json(out, "        ", o);
+        out.push_str(if i + 1 == bench.uniform.len() {
+            "      }\n"
+        } else {
+            "      },\n"
+        });
+    }
+    out.push_str("    },\n");
+    out.push_str("    \"skewed\": {\n");
+    out.push_str(&format!("      \"tenants\": {},\n", bench.skewed_tenants));
+    out.push_str(&format!(
+        "      \"cache_bytes\": {},\n",
+        bench.skewed_cache_bytes
+    ));
+    for (i, o) in bench.skewed.iter().enumerate() {
+        out.push_str(&format!("      \"{}\": {{\n", router_json_key(o.router)));
+        fleet_outcome_json(out, "        ", o);
+        out.push_str(if i + 1 == bench.skewed.len() {
+            "      }\n"
+        } else {
+            "      },\n"
+        });
+    }
+    out.push_str("    }\n");
+    out.push_str("  }\n");
+}
+
 /// Machine-readable benchmark report (hand-rolled JSON: the offline crate
 /// set has no serde). Per policy: a `continuous` block, a `round_barrier`
-/// baseline block, and the ratios CI asserts on.
-pub fn bench_json(spec: &ServeSpec, outcomes: &[PolicyOutcome]) -> String {
+/// baseline block, and the ratios CI asserts on. With `fleet`, the
+/// multi-card scaling section rides along under the `fleet` key.
+pub fn bench_json(
+    spec: &ServeSpec,
+    outcomes: &[PolicyOutcome],
+    fleet: Option<&FleetBench>,
+) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"coordinator_serve\",\n");
@@ -521,7 +907,14 @@ pub fn bench_json(spec: &ServeSpec, outcomes: &[PolicyOutcome]) -> String {
         ));
         out.push_str(if i + 1 == outcomes.len() { "    }\n" } else { "    },\n" });
     }
-    out.push_str("  ]\n}\n");
+    match fleet {
+        Some(bench) => {
+            out.push_str("  ],\n");
+            fleet_json(&mut out, bench);
+            out.push_str("}\n");
+        }
+        None => out.push_str("  ]\n}\n"),
+    }
     out
 }
 
@@ -607,7 +1000,7 @@ mod tests {
         assert!(outcome.throughput_qps() > 0.0);
         assert!(outcome.p50_latency() > 0.0);
         assert!(outcome.p99_latency() >= outcome.p50_latency());
-        let json = bench_json(&spec, &[outcome]);
+        let json = bench_json(&spec, &[outcome], None);
         assert!(json.contains("\"throughput_qps\""));
         assert!(json.contains("\"fair-share\""));
         assert!(json.contains("\"continuous\""));
@@ -637,6 +1030,106 @@ mod tests {
             assert!(v.passed(), "barrier={barrier}: {}", v.summary());
             assert_eq!(v.jobs_checked, stats.completed());
         }
+    }
+
+    #[test]
+    fn skewed_workload_is_deterministic_selection_only_and_skewed() {
+        let spec = ServeSpec { queries: 64, ..tiny_spec() };
+        let a = skewed_workload(&spec);
+        let b = skewed_workload(&spec);
+        assert_eq!(a.len(), 64);
+        let mut counts = std::collections::BTreeMap::new();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.kind.name(), "selection");
+            assert_eq!(x.kind.input_bytes(), y.kind.input_bytes());
+            assert_eq!(x.inputs[0].key, y.inputs[0].key);
+            assert_eq!(x.client, y.client);
+            let key = x.inputs[0].key.clone().expect("skewed jobs are keyed");
+            assert!(key.table.starts_with("tenant"));
+            *counts.entry(key.table).or_insert(0usize) += 1;
+        }
+        // Quadratic skew: the hottest tenant must draw well above the
+        // uniform share, while the tail still spreads over many tenants.
+        let hottest = counts.values().copied().max().unwrap_or(0);
+        assert!(hottest > 64 / SKEW_TENANTS, "mix must be skewed: {counts:?}");
+        assert!(counts.len() >= 6, "tail must still spread: {counts:?}");
+    }
+
+    #[test]
+    fn fleet_run_matches_single_card_and_reports_a_sane_outcome() {
+        // run_fleet asserts bit-identity against the single-card
+        // reference internally; this exercises it end to end.
+        let spec = tiny_spec();
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let (outputs, o) = run_fleet(
+            &cfg,
+            Policy::FairShare,
+            &spec,
+            2,
+            RouterKind::Affinity,
+            crate::fleet::DEFAULT_HOST_BANDWIDTH,
+            mixed_workload(&spec),
+        );
+        assert_eq!(outputs.len(), spec.queries);
+        assert_eq!(o.cards, 2);
+        assert!(o.makespan > 0.0);
+        assert!(o.qps > 0.0);
+        assert!(
+            o.scaling_efficiency > 0.2 && o.scaling_efficiency <= 1.1,
+            "efficiency out of range: {}",
+            o.scaling_efficiency
+        );
+        assert_eq!(
+            o.per_card.iter().map(|c| c.jobs).sum::<usize>(),
+            spec.queries,
+            "every job lands on exactly one card"
+        );
+    }
+
+    #[test]
+    fn fleet_traces_validate_per_card() {
+        let spec = tiny_spec();
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let (traces, stats) =
+            run_fleet_traced(&cfg, Policy::FairShare, &spec, 2, RouterKind::Affinity);
+        assert_eq!(traces.len(), 2);
+        assert_eq!(stats.len(), 2);
+        let reports = crate::trace::validate_cards(
+            traces.iter().zip(&stats).map(|(t, s)| (t.as_slice(), s.view())),
+        );
+        for (card, v) in reports.iter().enumerate() {
+            assert!(v.passed(), "card {card}: {}", v.summary());
+        }
+    }
+
+    #[test]
+    fn fleet_bench_json_carries_the_ci_paths() {
+        let spec = tiny_spec();
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let bench = run_fleet_bench(
+            &cfg,
+            Policy::FairShare,
+            &spec,
+            2,
+            RouterKind::Affinity,
+            crate::fleet::DEFAULT_HOST_BANDWIDTH,
+        );
+        assert_eq!(bench.uniform.len(), 2);
+        assert_eq!(bench.skewed.len(), 2);
+        assert!(bench.scaling_efficiency() > 0.0);
+        let (_, outcome) =
+            run_policy(&cfg, Policy::FairShare, &spec, mixed_workload(&spec));
+        let json = bench_json(&spec, &[outcome], Some(&bench));
+        assert!(json.contains("\"fleet\""));
+        assert!(json.contains("\"scaling_efficiency\""));
+        assert!(json.contains("\"round_robin\""));
+        assert!(json.contains("\"per_card\""));
+        assert!(json.contains("\"tenants\""));
+        assert!(!json.contains("null"), "fleet stats must be finite");
+        let table = render_fleet(&bench);
+        assert!(table.contains("affinity"));
+        assert!(table.contains("round-robin"));
+        assert!(table.contains("skewed"));
     }
 
     #[test]

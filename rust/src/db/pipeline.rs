@@ -58,6 +58,7 @@ use crate::coordinator::{
     ColumnKey, Coordinator, CoordinatorError, DepExpr, DepInput, JobKind,
     JobOutput, JobRecord, JobSpec,
 };
+use crate::fleet::RouteQuery;
 use crate::hbm::shim::ENGINE_PORTS;
 
 /// Why a plan could not be lowered into (or submitted as) a pipeline.
@@ -736,7 +737,21 @@ impl FpgaAccelerator {
         }
         let PipelineRequest { stages, finish, engines: cap, client } = request;
         let engines = cap.unwrap_or(self.engines).clamp(1, ENGINE_PORTS);
-        let coord_arc = self.coord_arc();
+        // Route the whole DAG as one unit: score the plan's keyed host
+        // columns like a single job's inputs and keep every stage on the
+        // chosen card, so dependency edges (and pinned intermediates)
+        // never cross card boundaries.
+        let mut query = RouteQuery::default();
+        for stage in &stages {
+            for input in &stage.inputs {
+                if let StageInput::Host { data, key } = input {
+                    let bytes = data.len() as u64 * 4;
+                    query.keyed.push((key.clone(), bytes));
+                    query.input_bytes += bytes;
+                }
+            }
+        }
+        let coord_arc = self.route_plan_arc(&query);
         let mut coord = lock_coord(&coord_arc);
         self.sync_card(&mut coord);
         let mut ids: Vec<usize> = Vec::with_capacity(stages.len());

@@ -57,6 +57,7 @@ use super::request::{OffloadRequest, RequestError};
 use crate::coordinator::{
     Coordinator, CoordinatorError, CoordinatorStats, JobOutput, JobRecord, Policy,
 };
+use crate::fleet::{CardView, RouteQuery, Router, RouterKind};
 use crate::hbm::shim::ENGINE_PORTS;
 use crate::hbm::HbmConfig;
 use crate::interconnect::opencapi::OpenCapiLink;
@@ -107,6 +108,11 @@ pub struct FpgaAccelerator {
     /// (≤ 14 for selection/SGD; joins are further clamped to ≤ 7).
     pub engines: usize,
     coord: Arc<Mutex<Coordinator>>,
+    /// Every card of the deployment; `cards[0]` *is* `coord`. One entry
+    /// unless [`with_cards`](FpgaAccelerator::with_cards) scaled out.
+    cards: Vec<Arc<Mutex<Coordinator>>>,
+    /// Routes each submission to a card (trivial on one card).
+    router: Router,
 }
 
 impl FpgaAccelerator {
@@ -114,11 +120,14 @@ impl FpgaAccelerator {
         // Fair-share by default so in-flight jobs genuinely co-run; a
         // lone job still gets the full engine fleet.
         let coord = Coordinator::new(cfg.clone()).with_policy(Policy::FairShare);
+        let coord = Arc::new(Mutex::new(coord));
         Self {
             cfg,
             link: OpenCapiLink::default(),
             engines: ENGINE_PORTS,
-            coord: Arc::new(Mutex::new(coord)),
+            cards: vec![Arc::clone(&coord)],
+            coord,
+            router: Router::new(RouterKind::Affinity),
         }
     }
 
@@ -128,20 +137,42 @@ impl FpgaAccelerator {
         self
     }
 
-    /// Engine-slot policy for co-scheduling in-flight jobs.
-    pub fn with_policy(self, policy: Policy) -> Self {
-        self.coord().set_policy(policy);
+    /// Scale the accelerator out to `cards` simulated cards behind a
+    /// fleet `router` ([`crate::fleet`]): every submission — single
+    /// offloads and whole plan DAGs alike — is placed on one card by
+    /// column-cache affinity (or round-robin), and its handle drives
+    /// that card. Call at construction time, before submitting work
+    /// (shrinking discards the dropped cards' state).
+    pub fn with_cards(mut self, cards: usize, router: RouterKind) -> Self {
+        let cards = cards.max(1);
+        while self.cards.len() < cards {
+            let id = self.cards.len();
+            let card = Coordinator::new(self.cfg.clone())
+                .with_policy(Policy::FairShare)
+                .with_card_id(id);
+            self.cards.push(Arc::new(Mutex::new(card)));
+        }
+        self.cards.truncate(cards);
+        self.router = Router::new(router);
         self
+    }
+
+    /// Engine-slot policy for co-scheduling in-flight jobs (applied to
+    /// every card of the deployment).
+    pub fn with_policy(self, policy: Policy) -> Self {
+        for card in &self.cards {
+            super::pipeline::lock_coord(card).set_policy(policy);
+        }
+        self
+    }
+
+    /// Number of simulated cards behind this accelerator.
+    pub fn card_count(&self) -> usize {
+        self.cards.len()
     }
 
     fn coord(&self) -> MutexGuard<'_, Coordinator> {
         super::pipeline::lock_coord(&self.coord)
-    }
-
-    /// Shared handle on the card's coordinator, for the pipeline layer
-    /// (`submit_plan` submits whole stage DAGs under one lock).
-    pub(crate) fn coord_arc(&self) -> Arc<Mutex<Coordinator>> {
-        Arc::clone(&self.coord)
     }
 
     /// Sync the public `cfg`/`link` knobs into the coordinator — done
@@ -170,17 +201,55 @@ impl FpgaAccelerator {
         request: OffloadRequest,
     ) -> Result<JobHandle, RequestError> {
         let spec = request.into_spec(self.engines)?;
-        let mut coord = self.coord();
+        let card = self.route_query_card(&RouteQuery::from_spec(&spec));
+        let arc = Arc::clone(&self.cards[card]);
+        let mut coord = super::pipeline::lock_coord(&arc);
         // The public `cfg`/`link` knobs stay live across offloads: sync
         // them into the coordinator before every submission.
         self.sync_card(&mut coord);
         let id = coord.submit(spec);
         drop(coord);
-        Ok(JobHandle {
-            id,
-            coord: Arc::clone(&self.coord),
-            cached: None,
-        })
+        Ok(JobHandle { id, coord: arc, cached: None })
+    }
+
+    /// The card a submission lands on: snapshot each card's residency of
+    /// the query's keys and its outstanding load under a brief lock, then
+    /// ask the router ([`Router::route_query`]). Trivially card 0 on a
+    /// single-card deployment.
+    fn route_query_card(&mut self, query: &RouteQuery) -> usize {
+        if self.cards.len() <= 1 {
+            return 0;
+        }
+        let views: Vec<CardView> = self
+            .cards
+            .iter()
+            .map(|card| {
+                let coord = super::pipeline::lock_coord(card);
+                CardView {
+                    resident_bytes: query
+                        .keyed
+                        .iter()
+                        .filter(|(key, _)| coord.cache().contains(key))
+                        .map(|(_, bytes)| *bytes)
+                        .sum(),
+                    outstanding_bytes: coord.outstanding_input_bytes(),
+                }
+            })
+            .collect();
+        self.router.route_query(query, &views)
+    }
+
+    /// The card a whole pipeline DAG lands on (used by
+    /// [`try_submit_plan`](FpgaAccelerator::try_submit_plan)): the router
+    /// scores the plan's keyed host columns exactly like a single job's
+    /// inputs, and the entire DAG stays on the chosen card, so dependency
+    /// edges never cross card boundaries.
+    pub(crate) fn route_plan_arc(
+        &mut self,
+        query: &RouteQuery,
+    ) -> Arc<Mutex<Coordinator>> {
+        let card = self.route_query_card(query);
+        Arc::clone(&self.cards[card])
     }
 
     /// Drive the card until every in-flight job has completed. Results
@@ -194,40 +263,78 @@ impl FpgaAccelerator {
 
     /// Non-panicking [`wait_all`](FpgaAccelerator::wait_all).
     pub fn try_wait_all(&mut self) -> Result<(), CoordinatorError> {
-        let mut coord = self.coord();
-        while coord.pending() > 0 {
-            coord.step()?;
+        for card in &self.cards {
+            let mut coord = super::pipeline::lock_coord(card);
+            while coord.pending() > 0 {
+                coord.step()?;
+            }
         }
         Ok(())
     }
 
-    /// Jobs submitted but not yet completed.
+    /// Jobs submitted but not yet completed, across every card.
     pub fn in_flight(&self) -> usize {
-        self.coord().pending()
+        self.cards
+            .iter()
+            .map(|card| super::pipeline::lock_coord(card).pending())
+            .sum()
     }
 
-    /// Snapshot of the card's accounting: per-job records, cache hit
-    /// rates, simulated card time. This clones the records once (the
-    /// snapshot must escape the coordinator lock); drivers that only need
-    /// summary numbers and hold the `Coordinator` directly use its
-    /// borrowed `stats()` view instead.
+    /// Snapshot of the deployment's accounting: per-job records, cache
+    /// hit rates, simulated card time. On one card this is that card's
+    /// snapshot; on a fleet the records and cache/byte/busy counters are
+    /// summed across cards and `simulated_time` is the *makespan* (each
+    /// card keeps its own clock — see [`crate::fleet`]), so busy-seconds
+    /// ratios against it are fleet-wide averages. Per-card snapshots come
+    /// from [`card_stats`](FpgaAccelerator::card_stats). This clones the
+    /// records once (the snapshot must escape the coordinator lock);
+    /// drivers that only need summary numbers and hold the `Coordinator`
+    /// directly use its borrowed `stats()` view instead.
     pub fn stats(&self) -> CoordinatorStats {
-        self.coord().stats().snapshot()
+        let mut merged = self.coord().stats().snapshot();
+        for card in &self.cards[1..] {
+            let s = super::pipeline::lock_coord(card).stats().snapshot();
+            merged.records.extend(s.records);
+            merged.cache.hits += s.cache.hits;
+            merged.cache.misses += s.cache.misses;
+            merged.cache.evictions += s.cache.evictions;
+            merged.cache.hit_bytes += s.cache.hit_bytes;
+            merged.cache.miss_bytes += s.cache.miss_bytes;
+            merged.simulated_time = merged.simulated_time.max(s.simulated_time);
+            merged.hbm_bytes += s.hbm_bytes;
+            merged.host_write_bytes += s.host_write_bytes;
+            merged.engine_busy_port_seconds += s.engine_busy_port_seconds;
+            merged.link_busy_seconds += s.link_busy_seconds;
+            merged.overlap_seconds += s.overlap_seconds;
+        }
+        merged
     }
 
-    /// Toggle parallel functional execution on the card's simulator
+    /// One [`CoordinatorStats`] snapshot per card, in card-id order.
+    pub fn card_stats(&self) -> Vec<CoordinatorStats> {
+        self.cards
+            .iter()
+            .map(|card| super::pipeline::lock_coord(card).stats().snapshot())
+            .collect()
+    }
+
+    /// Toggle parallel functional execution on every card's simulator
     /// (on by default). Results are bit-identical either way; only host
     /// wall-clock changes — `hbmctl bench-host` measures the delta.
     pub fn set_parallel_functional(&self, on: bool) {
-        self.coord().set_parallel_functional(on);
+        for card in &self.cards {
+            super::pipeline::lock_coord(card).set_parallel_functional(on);
+        }
     }
 
-    /// Toggle the coordinator's card-clock tracer (off by default — see
+    /// Toggle the card-clock tracer on every card (off by default — see
     /// `trace` module docs for the zero-overhead contract). Enable
     /// *before* submitting work: the validator rejects streams whose
     /// completed jobs predate the first event.
     pub fn set_tracing(&self, on: bool) {
-        self.coord().set_tracing(on);
+        for card in &self.cards {
+            super::pipeline::lock_coord(card).set_tracing(on);
+        }
     }
 
     /// Drain the trace recorded so far (typed [`crate::trace::Event`]s on
@@ -235,18 +342,42 @@ impl FpgaAccelerator {
     /// Feed the stream to [`crate::trace::chrome_trace`],
     /// [`crate::trace::MetricsRegistry::from_events`], or
     /// [`crate::trace::validate`].
+    ///
+    /// On a multi-card deployment this drains **card 0 only** — each card
+    /// runs its own clock, and interleaving streams would break the
+    /// tracer's monotonic-time contract. Use
+    /// [`take_card_traces`](FpgaAccelerator::take_card_traces) (one
+    /// stream per card, validated per card via
+    /// [`crate::trace::validate_cards`]) for fleet traces.
     pub fn take_trace(&self) -> Vec<crate::trace::Event> {
         self.coord().take_trace()
     }
 
-    /// How the card's engine dispatches actually executed their
+    /// Drain every card's trace, one stream per card in card-id order.
+    /// Streams are never merged: per-card clocks are mutually
+    /// incomparable (see [`take_trace`](FpgaAccelerator::take_trace)).
+    pub fn take_card_traces(&self) -> Vec<Vec<crate::trace::Event>> {
+        self.cards
+            .iter()
+            .map(|card| super::pipeline::lock_coord(card).take_trace())
+            .collect()
+    }
+
+    /// How the deployment's engine dispatches actually executed their
     /// functional passes: `(parallel, serial)` dispatch counts since the
-    /// accelerator was created. This is the ground truth the static
-    /// analyzer's parallelism pass predicts: a plan that lints clean on
-    /// that pass must not grow the serial count (see
+    /// accelerator was created, summed across cards. This is the ground
+    /// truth the static analyzer's parallelism pass predicts: a plan that
+    /// lints clean on that pass must not grow the serial count (see
     /// [`crate::analyze`]).
     pub fn functional_dispatches(&self) -> (u64, u64) {
-        self.coord().functional_dispatches()
+        let mut parallel = 0;
+        let mut serial = 0;
+        for card in &self.cards {
+            let (p, s) = super::pipeline::lock_coord(card).functional_dispatches();
+            parallel += p;
+            serial += s;
+        }
+        (parallel, serial)
     }
 }
 
@@ -534,5 +665,40 @@ mod tests {
         let err = acc.try_submit(OffloadRequest::select(0, 1)).unwrap_err();
         assert!(matches!(err, RequestError::MissingData(_)));
         assert_eq!(acc.in_flight(), 0, "rejected request must not enqueue");
+    }
+
+    #[test]
+    fn multi_card_offloads_route_and_still_match_cpu() {
+        let mut acc = acc().with_cards(2, RouterKind::Affinity);
+        assert_eq!(acc.card_count(), 2);
+        let a = SelectionWorkload::uniform(80_000, 0.1, 21);
+        let b = SelectionWorkload::uniform(80_000, 0.1, 22);
+        let ha = acc.submit(OffloadRequest::select(a.lo, a.hi).on(&a.data).key("ta", "v"));
+        let hb = acc.submit(OffloadRequest::select(b.lo, b.hi).on(&b.data).key("tb", "v"));
+        let (ra, _) = ha.wait_selection();
+        let (rb, _) = hb.wait_selection();
+        for (w, got) in [(&a, &ra), (&b, &rb)] {
+            let mut cpu = cpu::selection::range_select(&w.data, w.lo, w.hi, 4);
+            cpu.sort_unstable();
+            assert_eq!(got[..], cpu[..]);
+        }
+        acc.wait_all();
+        assert_eq!(acc.in_flight(), 0);
+        let stats = acc.stats();
+        assert_eq!(stats.completed(), 2, "merged stats must see both cards' jobs");
+        assert_eq!(acc.card_stats().len(), 2);
+    }
+
+    #[test]
+    fn multi_card_repeat_key_routes_back_to_the_warm_card() {
+        let w = SelectionWorkload::uniform(100_000, 0.05, 23);
+        let mut acc = acc().with_cards(4, RouterKind::Affinity);
+        let req = || OffloadRequest::select(w.lo, w.hi).on(&w.data).key("lineitem", "qty");
+        let (r1, t1) = acc.submit(req()).wait_selection();
+        let (r2, t2) = acc.submit(req()).wait_selection();
+        assert_eq!(r1, r2);
+        assert!(t1.copy_in > 0.0, "first touch pays the copy");
+        assert_eq!(t2.copy_in, 0.0, "affinity must route the repeat to the warm card");
+        assert_eq!(acc.stats().cache.hits, 1);
     }
 }

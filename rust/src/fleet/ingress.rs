@@ -1,0 +1,128 @@
+//! Shared host-ingress bandwidth: one fleet-level fluid segment.
+//!
+//! Every card in a fleet reaches host DRAM through the same memory
+//! controllers, so the sum of all cards' OpenCAPI transfer rates is
+//! capped by the host's DRAM bandwidth — a single shared segment, solved
+//! with exactly the max-min water-filling principle the on-card fluid
+//! solver applies per crossbar segment ([`crate::hbm::fluid`]). A card
+//! demanding less than its fair share keeps what it asked for; the slack
+//! is redistributed among the unsatisfied cards until the cap is spent
+//! or everyone is satisfied.
+//!
+//! The fleet re-solves this segment every scheduling step over the cards
+//! that currently hold work and binds each card's share as its link rate
+//! ([`crate::coordinator::Coordinator::set_link`]); in-flight transfers
+//! see the new rate from their next event on, the same whole-card fluid
+//! approximation the on-card solver makes when group membership changes.
+
+/// Exact max-min (water-filling) split of `cap` over `demands`.
+///
+/// Returns one share per demand with the classic max-min properties:
+///
+/// * no share exceeds its demand,
+/// * the shares sum to at most `cap` (exactly `cap` when the total
+///   demand reaches it),
+/// * any two unsatisfied demands receive equal shares — no share can be
+///   raised without lowering a smaller one.
+///
+/// Non-positive or non-finite demands get 0. A non-positive cap grants
+/// nothing.
+pub fn max_min_share(demands: &[f64], cap: f64) -> Vec<f64> {
+    let mut shares = vec![0.0; demands.len()];
+    if demands.is_empty() || !cap.is_finite() || cap <= 0.0 {
+        return shares;
+    }
+    // Ascending by demand: once the smallest demand is granted, the
+    // remaining capacity splits over one fewer claimant, so the running
+    // `remaining / left` water level only ever rises.
+    let mut order: Vec<usize> = (0..demands.len()).collect();
+    order.sort_by(|&a, &b| {
+        demands[a]
+            .partial_cmp(&demands[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut remaining = cap;
+    let mut left = order.len();
+    for &i in &order {
+        let level = remaining / left as f64;
+        let demand = if demands[i].is_finite() { demands[i].max(0.0) } else { 0.0 };
+        let grant = demand.min(level);
+        shares[i] = grant;
+        remaining -= grant;
+        left -= 1;
+    }
+    shares
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn unconstrained_demands_are_granted_in_full() {
+        let shares = max_min_share(&[2.0, 3.0, 1.0], 100.0);
+        assert_eq!(shares, vec![2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn equal_demands_split_the_cap_evenly() {
+        let shares = max_min_share(&[10.0, 10.0, 10.0, 10.0], 20.0);
+        for s in &shares {
+            assert!((s - 5.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn small_demand_keeps_its_ask_and_frees_slack() {
+        // Cap 12 over demands [2, 10, 10]: the small flow keeps 2, the
+        // remaining 10 splits 5/5 — not the naive 4/4/4.
+        let shares = max_min_share(&[2.0, 10.0, 10.0], 12.0);
+        assert!((shares[0] - 2.0).abs() < 1e-12);
+        assert!((shares[1] - 5.0).abs() < 1e-12);
+        assert!((shares[2] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_grant_nothing() {
+        assert!(max_min_share(&[], 10.0).is_empty());
+        assert_eq!(max_min_share(&[5.0], 0.0), vec![0.0]);
+        assert_eq!(max_min_share(&[5.0], -1.0), vec![0.0]);
+        let shares = max_min_share(&[-3.0, f64::NAN, 4.0], 10.0);
+        assert_eq!(shares[0], 0.0);
+        assert_eq!(shares[1], 0.0);
+        assert!((shares[2] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn randomized_shares_satisfy_the_max_min_properties() {
+        let mut rng = Xoshiro256::new(0xF1EE7);
+        for _ in 0..200 {
+            let n = 1 + rng.gen_range_usize(8);
+            let demands: Vec<f64> =
+                (0..n).map(|_| rng.next_f64() * 20.0).collect();
+            let cap = rng.next_f64() * 40.0 + 1e-3;
+            let shares = max_min_share(&demands, cap);
+            let total: f64 = shares.iter().sum();
+            let demand_total: f64 = demands.iter().sum();
+            assert!(total <= cap + 1e-9, "over cap: {total} > {cap}");
+            if demand_total <= cap {
+                assert!((total - demand_total).abs() < 1e-9);
+            } else {
+                assert!((total - cap).abs() < 1e-9, "cap not exhausted");
+            }
+            for (i, (&s, &d)) in shares.iter().zip(&demands).enumerate() {
+                assert!(s <= d + 1e-9, "share {i} exceeds demand");
+                // Max-min fairness: an unsatisfied flow's share must not
+                // be smaller than any other flow's share.
+                if s < d - 1e-9 {
+                    for &other in &shares {
+                        assert!(other <= s + 1e-9, "unfair split");
+                    }
+                }
+            }
+        }
+    }
+}

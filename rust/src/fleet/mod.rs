@@ -1,0 +1,387 @@
+//! L3.5 fleet: multi-card scale-out with affinity routing and shared
+//! host ingress.
+//!
+//! One AD9H7 card holds 8 GiB of HBM and tops out at the crossbar's
+//! aggregate bandwidth; an analytics deployment racks several cards
+//! behind one POWER9 host. This module is that deployment model, grown
+//! from the single-card [`Coordinator`] without forking it:
+//!
+//! * [`Card`](crate::coordinator::Card) (in the coordinator layer) owns
+//!   everything per-card — config, link, memory, shim, control, column
+//!   cache, resident layout, sim session — so a `Coordinator` is a
+//!   per-card scheduler the fleet holds N of, each on its **own card
+//!   clock**;
+//! * [`router`] scores each submission by column-cache affinity and
+//!   falls back to a [`Partitioner`] with bounded load for cold data —
+//!   repeat queries land where their columns are resident and skip the
+//!   host copy entirely (the paper's residency observation, scaled out);
+//! * [`ingress`] models the host side: all cards' OpenCAPI transfers
+//!   draw from one shared host-DRAM bandwidth cap, split max-min — the
+//!   same fluid-segment principle as [`crate::hbm::fluid`], lifted to
+//!   fleet scope.
+//!
+//! The fleet advances whichever busy card is furthest behind in
+//! simulated time, so the per-card clocks stay close while each card
+//! keeps its continuous event-driven timeline. Ingress shares re-solve
+//! at every such step and bind as link rates; in-flight transfers see a
+//! changed rate from their next event on (per-step share granularity —
+//! the fleet-level analogue of the on-card solver's whole-phase fluid
+//! approximation). Functional outputs never depend on timing or
+//! placement, so a fleet run is bit-identical to replaying the same
+//! submissions on one card — property-tested in
+//! `tests/fleet_equivalence.rs`.
+//!
+//! Traces stay **per card**: [`Fleet::take_traces`] returns one stream
+//! per card, each monotone on its own clock, and
+//! [`crate::trace::fleet_chrome_trace`] renders them as one Perfetto
+//! track group per card. Merging streams across cards would interleave
+//! unrelated clocks — nothing in this module ever does.
+
+// Same layer invariant as the coordinator: no `unwrap`/`expect` in
+// non-test code (see clippy.toml).
+#![deny(clippy::disallowed_methods)]
+
+pub mod ingress;
+pub mod router;
+
+pub use ingress::max_min_share;
+pub use router::{CardView, Partitioner, RouteQuery, Router, RouterKind};
+
+use crate::coordinator::job::{JobOutput, JobSpec};
+use crate::coordinator::policy::Policy;
+use crate::coordinator::scheduler::{
+    Coordinator, CoordinatorError, CoordinatorStats,
+};
+use crate::interconnect::opencapi::OpenCapiLink;
+use crate::trace::Event;
+
+/// Default shared host-DRAM ingress bandwidth, bytes/s. A POWER9-class
+/// host sustains well over 100 GB/s of DRAM bandwidth, but the ingress
+/// path the cards share (datamover traffic next to the CPU's own
+/// accesses) is budgeted conservatively; 64 GB/s leaves a four-card
+/// fleet (4 × 11.6 GB/s) unconstrained while `--host-gbs` can model a
+/// contended host.
+pub const DEFAULT_HOST_BANDWIDTH: f64 = 64e9;
+
+/// A fleet of simulated HBM-FPGA cards behind one routing front-end and
+/// one shared host-ingress budget.
+pub struct Fleet {
+    cards: Vec<Coordinator>,
+    router: Router,
+    /// Per-card nominal link; ingress shares only ever cap it downward.
+    nominal_link: OpenCapiLink,
+    host_bandwidth: f64,
+    /// Submission tickets: global submission index → (card, per-card job
+    /// id). Job ids are per-coordinator, so the ticket index is the only
+    /// fleet-wide job identity.
+    tickets: Vec<(usize, usize)>,
+    /// Tickets already returned by a previous [`run`](Fleet::run).
+    drained: usize,
+}
+
+impl Fleet {
+    /// A fleet of `cards` identical cards (at least 1), affinity-routed.
+    pub fn new(cfg: crate::hbm::HbmConfig, cards: usize) -> Self {
+        let n = cards.max(1);
+        let cards = (0..n)
+            .map(|id| Coordinator::new(cfg.clone()).with_card_id(id))
+            .collect();
+        Self {
+            cards,
+            router: Router::new(RouterKind::Affinity),
+            nominal_link: OpenCapiLink::default(),
+            host_bandwidth: DEFAULT_HOST_BANDWIDTH,
+            tickets: Vec::new(),
+            drained: 0,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        for card in &mut self.cards {
+            card.set_policy(policy);
+        }
+        self
+    }
+
+    pub fn with_cache_bytes(mut self, bytes: u64) -> Self {
+        self.cards =
+            self.cards.into_iter().map(|c| c.with_cache_bytes(bytes)).collect();
+        self
+    }
+
+    pub fn with_router(mut self, kind: RouterKind) -> Self {
+        self.router = Router::new(kind).with_partitioner(self.router.partitioner());
+        self
+    }
+
+    pub fn with_partitioner(mut self, partitioner: Partitioner) -> Self {
+        self.router = Router::new(self.router.kind()).with_partitioner(partitioner);
+        self
+    }
+
+    /// Set the shared host-ingress cap (bytes/s; must be positive and
+    /// finite).
+    pub fn with_host_bandwidth(mut self, bytes_per_sec: f64) -> Self {
+        assert!(
+            bytes_per_sec.is_finite() && bytes_per_sec > 0.0,
+            "host ingress bandwidth must be positive and finite"
+        );
+        self.host_bandwidth = bytes_per_sec;
+        self
+    }
+
+    pub fn host_bandwidth(&self) -> f64 {
+        self.host_bandwidth
+    }
+
+    pub fn router_kind(&self) -> RouterKind {
+        self.router.kind()
+    }
+
+    pub fn card_count(&self) -> usize {
+        self.cards.len()
+    }
+
+    pub fn cards(&self) -> &[Coordinator] {
+        &self.cards
+    }
+
+    /// Enable or disable tracing on every card.
+    pub fn set_tracing(&mut self, on: bool) {
+        for card in &mut self.cards {
+            card.set_tracing(on);
+        }
+    }
+
+    /// Route and enqueue one independent job; returns its fleet-wide
+    /// submission ticket (the index results are keyed by).
+    ///
+    /// Dependency-linked specs are not routable — a DAG's intermediates
+    /// live on one card, so whole pipelines go through
+    /// `db::FpgaAccelerator::submit_plan`, which pins the DAG to a single
+    /// routed card.
+    pub fn submit(&mut self, spec: JobSpec) -> usize {
+        debug_assert!(
+            spec.parent_ids().is_empty() && spec.deps.is_empty(),
+            "fleet routes independent jobs; submit DAGs via db::submit_plan"
+        );
+        let card = self.router.route(&spec, &self.cards);
+        let id = self.cards[card].submit(spec);
+        self.tickets.push((card, id));
+        self.tickets.len() - 1
+    }
+
+    /// Which card the router chose for ticket `index` (test/introspection
+    /// hook; `None` for unknown tickets).
+    pub fn routed_card(&self, index: usize) -> Option<usize> {
+        self.tickets.get(index).map(|&(card, _)| card)
+    }
+
+    /// Drive every card to completion under the shared-ingress model.
+    /// Returns `(ticket, output)` pairs for the jobs completing during
+    /// this call, in ticket order. Panics on a scheduling error — use
+    /// [`try_run`](Fleet::try_run) to handle [`CoordinatorError`].
+    pub fn run(&mut self) -> Vec<(usize, JobOutput)> {
+        self.try_run()
+            .unwrap_or_else(|e| panic!("fleet cannot make progress: {e}"))
+    }
+
+    /// Non-panicking [`run`](Fleet::run).
+    ///
+    /// Each iteration re-solves the ingress segment over the cards that
+    /// still hold work (every busy card demands its nominal link rate),
+    /// binds the shares as link rates, then advances the busy card whose
+    /// clock is furthest behind to its next completion event. Nominal
+    /// link rates are restored once the fleet drains.
+    pub fn try_run(
+        &mut self,
+    ) -> Result<Vec<(usize, JobOutput)>, CoordinatorError> {
+        loop {
+            let busy: Vec<usize> = (0..self.cards.len())
+                .filter(|&i| self.cards[i].pending() > 0)
+                .collect();
+            if busy.is_empty() {
+                break;
+            }
+            let demands = vec![self.nominal_link.bandwidth; busy.len()];
+            let shares = max_min_share(&demands, self.host_bandwidth);
+            for (&card, &share) in busy.iter().zip(&shares) {
+                let mut link = self.nominal_link.clone();
+                link.bandwidth = share.min(self.nominal_link.bandwidth);
+                self.cards[card].set_link(link);
+            }
+            // First minimum wins ties: lowest card id, deterministically.
+            let mut lagging = busy[0];
+            for &card in &busy[1..] {
+                if self.cards[card].simulated_time()
+                    < self.cards[lagging].simulated_time()
+                {
+                    lagging = card;
+                }
+            }
+            self.cards[lagging].step()?;
+        }
+        for card in &mut self.cards {
+            card.set_link(self.nominal_link.clone());
+        }
+        let mut outputs = Vec::with_capacity(self.tickets.len() - self.drained);
+        for ticket in self.drained..self.tickets.len() {
+            let (card, id) = self.tickets[ticket];
+            // Abandoned jobs (e.g. zero-match selections a policy chose
+            // to drop) produce no output; their ticket is skipped, same
+            // as `Coordinator::run` omitting them.
+            if let Some((output, _record)) = self.cards[card].take_result(id) {
+                outputs.push((ticket, output));
+            }
+        }
+        self.drained = self.tickets.len();
+        Ok(outputs)
+    }
+
+    /// The fleet's makespan: the furthest card clock (seconds of card
+    /// time). Per-card clocks advance independently, so this is the
+    /// *slowest* card — the number scaling efficiency divides by.
+    pub fn makespan(&self) -> f64 {
+        self.cards
+            .iter()
+            .map(|c| c.simulated_time())
+            .fold(0.0, f64::max)
+    }
+
+    /// Drain every card's trace: one stream per card, index = card id.
+    /// Streams are never merged — each is monotone on its own card clock
+    /// (see [`Coordinator::take_trace`]); render them with
+    /// [`crate::trace::fleet_chrome_trace`] and validate them per card
+    /// with [`crate::trace::validate_cards`].
+    pub fn take_traces(&mut self) -> Vec<Vec<Event>> {
+        self.cards.iter_mut().map(|c| c.take_trace()).collect()
+    }
+
+    /// Consume the fleet into per-card accountings, index = card id.
+    pub fn into_stats(self) -> Vec<CoordinatorStats> {
+        self.cards.into_iter().map(|c| c.into_stats()).collect()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{ColumnKey, JobKind};
+    use crate::hbm::config::FabricClock;
+    use crate::hbm::HbmConfig;
+
+    fn sel_job(table: &str, rows: u32, lo: u32, hi: u32) -> JobSpec {
+        let data: Vec<u32> = (0..rows).map(|i| i.wrapping_mul(2654435761)).collect();
+        JobSpec::new(JobKind::Selection { data: data.into(), lo, hi })
+            .with_keys(vec![Some(ColumnKey::new(table, "v"))])
+    }
+
+    fn cfg() -> HbmConfig {
+        HbmConfig::at_clock(FabricClock::Mhz200)
+    }
+
+    #[test]
+    fn single_card_fleet_matches_a_plain_coordinator() {
+        let jobs: Vec<JobSpec> = (0..6)
+            .map(|i| sel_job(&format!("t{}", i % 3), 4096, 0, u32::MAX / 3))
+            .collect();
+        let mut fleet = Fleet::new(cfg(), 1);
+        let mut solo = Coordinator::new(cfg());
+        for job in &jobs {
+            fleet.submit(job.clone());
+            solo.submit(job.clone());
+        }
+        let fleet_out = fleet.run();
+        let solo_out = solo.run();
+        assert_eq!(fleet_out.len(), jobs.len());
+        let by_id: std::collections::BTreeMap<usize, JobOutput> =
+            solo_out.into_iter().collect();
+        for (ticket, out) in fleet_out {
+            let reference = by_id[&ticket].clone();
+            assert_eq!(
+                out.expect_selection(),
+                reference.expect_selection(),
+                "ticket {ticket} diverged"
+            );
+        }
+        assert!((fleet.makespan() - fleet.cards()[0].simulated_time()).abs() == 0.0);
+    }
+
+    #[test]
+    fn affinity_converges_repeats_onto_one_card() {
+        let mut fleet = Fleet::new(cfg(), 4);
+        for _ in 0..8 {
+            fleet.submit(sel_job("hot", 4096, 0, u32::MAX / 2));
+        }
+        let card = fleet.routed_card(0).expect("ticket 0 exists");
+        for ticket in 1..8 {
+            assert_eq!(
+                fleet.routed_card(ticket),
+                Some(card),
+                "repeat keys must co-locate"
+            );
+        }
+        let out = fleet.run();
+        assert_eq!(out.len(), 8);
+        // One compulsory miss, seven hits — all on the routed card.
+        let stats = fleet.cards()[card].cache().stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 7);
+        for (other, coord) in fleet.cards().iter().enumerate() {
+            if other != card {
+                assert_eq!(coord.cache().stats().accesses(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_and_still_completes() {
+        let mut fleet = Fleet::new(cfg(), 3).with_router(RouterKind::RoundRobin);
+        for _ in 0..6 {
+            fleet.submit(sel_job("hot", 4096, 0, u32::MAX / 2));
+        }
+        for ticket in 0..6 {
+            assert_eq!(fleet.routed_card(ticket), Some(ticket % 3));
+        }
+        assert_eq!(fleet.run().len(), 6);
+        // Every card paid its own compulsory miss for the same column.
+        let total_misses: u64 =
+            fleet.cards().iter().map(|c| c.cache().stats().misses).sum();
+        assert_eq!(total_misses, 3);
+    }
+
+    #[test]
+    fn ingress_cap_stretches_the_makespan() {
+        let run_with = |host_bw: f64| {
+            let mut fleet = Fleet::new(cfg(), 2)
+                .with_router(RouterKind::RoundRobin)
+                .with_host_bandwidth(host_bw);
+            for i in 0..4 {
+                // Distinct keys: every job pays a copy-in.
+                fleet.submit(sel_job(&format!("cold{i}"), 65_536, 0, 1000));
+            }
+            assert_eq!(fleet.run().len(), 4);
+            fleet.makespan()
+        };
+        let unconstrained = run_with(DEFAULT_HOST_BANDWIDTH);
+        // A cap of half one link's rate makes two concurrent copy-ins
+        // share a quarter each — transfers must take visibly longer.
+        let capped = run_with(crate::interconnect::opencapi::OPENCAPI_EFFECTIVE_BW / 2.0);
+        assert!(
+            capped > unconstrained * 1.05,
+            "capped ingress must stretch the makespan: {capped} vs {unconstrained}"
+        );
+    }
+
+    #[test]
+    fn second_run_returns_only_new_tickets() {
+        let mut fleet = Fleet::new(cfg(), 2);
+        fleet.submit(sel_job("a", 4096, 0, 1000));
+        assert_eq!(fleet.run().len(), 1);
+        let t = fleet.submit(sel_job("b", 4096, 0, 1000));
+        let out = fleet.run();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, t, "second run must return the new ticket only");
+    }
+}

@@ -1,0 +1,464 @@
+//! Affinity routing of offload requests onto fleet cards.
+//!
+//! The router answers one question per submitted job: *which card should
+//! run it?* The decision is scored on **column-cache affinity**: a job
+//! whose keyed input columns are already HBM-resident on (or promised
+//! to) some card goes to that card and skips the host copy-in entirely —
+//! the multi-card generalization of the paper's "subsequent queries run
+//! directly against the resident data". Cold keys fall back to a
+//! pluggable [`Partitioner`] (hash or range on the key column), bounded
+//! by load: when the preferred card's outstanding work exceeds the
+//! least-loaded card's by more than a spill threshold, the job (and its
+//! keys' future affinity) moves to the least-loaded card instead —
+//! consistent placement *with bounded loads*, so a skewed tenant mix
+//! cannot pile onto one card unchecked.
+//!
+//! Routing reads scheduler state but never mutates it, and depends only
+//! on submission history — never on event timing — so a fleet replay of
+//! a workload is placement-deterministic.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::job::{ColumnKey, JobSpec};
+use crate::coordinator::Coordinator;
+
+/// Routing discipline for a fleet front-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Residency-scored routing with partitioned, load-bounded cold
+    /// placement — the serving configuration.
+    Affinity,
+    /// Cycle through the cards ignoring residency — the baseline the
+    /// skewed-tenant benchmark beats.
+    RoundRobin,
+}
+
+impl RouterKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::Affinity => "affinity",
+            RouterKind::RoundRobin => "round-robin",
+        }
+    }
+
+    /// Parse a CLI spelling. Accepts the canonical names plus common
+    /// short forms (`aff`, `rr`).
+    pub fn parse(s: &str) -> Option<RouterKind> {
+        match s {
+            "affinity" | "aff" => Some(RouterKind::Affinity),
+            "round-robin" | "roundrobin" | "rr" => Some(RouterKind::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RouterKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Deterministic key-column → card map for cold data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioner {
+    /// FNV-1a hash of `(table, column)` modulo the card count.
+    Hash,
+    /// Contiguous slabs of the key space in lexicographic order: the
+    /// key's 8-byte big-endian prefix picks the slab. Keeps
+    /// lexicographically adjacent tables co-located (range scans across
+    /// tenant tables touch one card).
+    Range,
+}
+
+/// FNV-1a over `table`, a separator, then `column`. The separator keeps
+/// `("ab", "c")` and `("a", "bc")` distinct.
+fn fnv1a64(key: &ColumnKey) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in key
+        .table
+        .bytes()
+        .chain(std::iter::once(0xFFu8))
+        .chain(key.column.bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl Partitioner {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::Hash => "hash",
+            Partitioner::Range => "range",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Partitioner> {
+        match s {
+            "hash" => Some(Partitioner::Hash),
+            "range" => Some(Partitioner::Range),
+            _ => None,
+        }
+    }
+
+    /// The home card for `key` in a fleet of `cards`. Total and
+    /// deterministic; `cards` of 0 is treated as 1.
+    pub fn card_for(&self, key: &ColumnKey, cards: usize) -> usize {
+        let n = cards.max(1) as u64;
+        match self {
+            Partitioner::Hash => (fnv1a64(key) % n) as usize,
+            Partitioner::Range => {
+                // Big-endian 8-byte prefix of "table\xffcolumn" as a
+                // position in [0, 2^64), mapped onto n equal slabs.
+                let mut prefix = [0u8; 8];
+                for (slot, b) in prefix.iter_mut().zip(
+                    key.table
+                        .bytes()
+                        .chain(std::iter::once(0xFFu8))
+                        .chain(key.column.bytes()),
+                ) {
+                    *slot = b;
+                }
+                let pos = u64::from_be_bytes(prefix);
+                ((pos as u128 * n as u128) >> 64) as usize
+            }
+        }
+    }
+}
+
+/// Spill threshold multiplier for bounded-load placement: the preferred
+/// card is overridden when its outstanding input bytes exceed the
+/// least-loaded card's by more than this many multiples of the job's own
+/// input size. Calibrated on the serve mixes: 2 keeps the uniform
+/// analytics mix within ~5% of perfect balance while leaving skewed
+/// tenant groups intact enough to preserve their cache affinity.
+const SPILL_FACTOR: u64 = 2;
+
+/// Scores one [`JobSpec`] against the fleet's cards — see the module
+/// docs for the decision order.
+#[derive(Debug)]
+pub struct Router {
+    kind: RouterKind,
+    partitioner: Partitioner,
+    /// Where each key's affinity currently lives: set on first (cold)
+    /// placement, moved when bounded load spills the key elsewhere.
+    /// Affinity decisions score this *promise* alongside actual cache
+    /// residency, so a burst of submissions against a cold cache still
+    /// co-locates repeated keys.
+    assignments: BTreeMap<ColumnKey, usize>,
+    /// Next card for keyless jobs (and the round-robin discipline).
+    next: usize,
+}
+
+/// A routing digest for work that is not a single [`JobSpec`] — e.g. a
+/// whole pipeline DAG routed as one unit: every keyed host column with
+/// its bytes, plus the total host-input bytes the load bound weighs.
+#[derive(Debug, Clone, Default)]
+pub struct RouteQuery {
+    /// `(key, bytes)` per keyed host input, in slot order.
+    pub keyed: Vec<(ColumnKey, u64)>,
+    /// Total host-input bytes (keyed and anonymous).
+    pub input_bytes: u64,
+}
+
+impl RouteQuery {
+    pub fn from_spec(spec: &JobSpec) -> Self {
+        Self {
+            keyed: spec
+                .inputs
+                .iter()
+                .filter_map(|input| {
+                    input.key.clone().map(|key| (key, input.bytes))
+                })
+                .collect(),
+            input_bytes: spec.kind.input_bytes(),
+        }
+    }
+}
+
+/// One card's routing inputs, snapshotted by callers that cannot hand
+/// the router the coordinators directly (e.g. `db`'s mutex-held cards).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CardView {
+    /// Σ bytes of the candidate job's keyed inputs resident in this
+    /// card's column cache.
+    pub resident_bytes: u64,
+    /// The card's total queued + in-flight host-input bytes
+    /// ([`Coordinator::outstanding_input_bytes`]).
+    pub outstanding_bytes: u64,
+}
+
+impl Router {
+    pub fn new(kind: RouterKind) -> Self {
+        Self {
+            kind,
+            partitioner: Partitioner::Hash,
+            assignments: BTreeMap::new(),
+            next: 0,
+        }
+    }
+
+    pub fn with_partitioner(mut self, partitioner: Partitioner) -> Self {
+        self.partitioner = partitioner;
+        self
+    }
+
+    pub fn kind(&self) -> RouterKind {
+        self.kind
+    }
+
+    pub fn partitioner(&self) -> Partitioner {
+        self.partitioner
+    }
+
+    /// Route `spec` across `cards`, snapshotting residency and load from
+    /// the coordinators themselves.
+    pub fn route(&mut self, spec: &JobSpec, cards: &[Coordinator]) -> usize {
+        let views: Vec<CardView> = cards
+            .iter()
+            .map(|card| CardView {
+                resident_bytes: spec
+                    .inputs
+                    .iter()
+                    .filter(|input| {
+                        input
+                            .key
+                            .as_ref()
+                            .is_some_and(|key| card.cache().contains(key))
+                    })
+                    .map(|input| input.bytes)
+                    .sum(),
+                outstanding_bytes: card.outstanding_input_bytes(),
+            })
+            .collect();
+        self.route_views(spec, &views)
+    }
+
+    /// Route `spec` given per-card snapshots. Decision order (affinity):
+    ///
+    /// 1. **Affinity score** per card: the snapshot's resident bytes plus
+    ///    the bytes of keyed inputs this router has already assigned to
+    ///    the card. Highest positive score wins (lowest card id on ties).
+    /// 2. Cold jobs go to the [`Partitioner`] home of their first keyed
+    ///    input; keyless jobs cycle round-robin.
+    /// 3. **Bounded load**: if the winner's outstanding bytes exceed the
+    ///    least-loaded card's by more than [`SPILL_FACTOR`] × the job's
+    ///    input size, the job — and its keys' future affinity — moves to
+    ///    the least-loaded card.
+    pub fn route_views(&mut self, spec: &JobSpec, views: &[CardView]) -> usize {
+        self.route_query(&RouteQuery::from_spec(spec), views)
+    }
+
+    /// [`route_views`](Router::route_views) over a pre-built digest — the
+    /// entry for routing a whole pipeline DAG as one unit.
+    pub fn route_query(&mut self, query: &RouteQuery, views: &[CardView]) -> usize {
+        let n = views.len();
+        if n <= 1 {
+            return 0;
+        }
+        let chosen = match self.kind {
+            RouterKind::RoundRobin => {
+                let card = self.next % n;
+                self.next = (self.next + 1) % n;
+                return card;
+            }
+            RouterKind::Affinity => {
+                let mut scores: Vec<u64> =
+                    views.iter().map(|v| v.resident_bytes).collect();
+                for (key, bytes) in &query.keyed {
+                    if let Some(&card) = self.assignments.get(key) {
+                        if card < n {
+                            scores[card] += bytes;
+                        }
+                    }
+                }
+                let preferred = match argmax_positive(&scores) {
+                    Some(card) => card,
+                    None => match query.keyed.first() {
+                        Some((key, _)) => self.partitioner.card_for(key, n),
+                        None => {
+                            let card = self.next % n;
+                            self.next = (self.next + 1) % n;
+                            return card;
+                        }
+                    },
+                };
+                let min_card = argmin(views, |v| v.outstanding_bytes);
+                let min_load = views[min_card].outstanding_bytes;
+                let spill = views[preferred].outstanding_bytes
+                    > min_load + SPILL_FACTOR * query.input_bytes.max(1);
+                if spill {
+                    min_card
+                } else {
+                    preferred
+                }
+            }
+        };
+        for (key, _) in &query.keyed {
+            self.assignments.insert(key.clone(), chosen);
+        }
+        chosen
+    }
+}
+
+/// Index of the largest strictly-positive value; `None` when all are 0.
+/// Ties break on the lowest index.
+fn argmax_positive(scores: &[u64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &s) in scores.iter().enumerate() {
+        if s == 0 {
+            continue;
+        }
+        match best {
+            Some(b) if scores[b] >= s => {}
+            _ => best = Some(i),
+        }
+    }
+    best
+}
+
+/// Index of the minimum (first minimum wins ties — deterministic,
+/// lowest-id preference; `Iterator::min_by_key` would keep the *last*).
+fn argmin<T, F: Fn(&T) -> u64>(items: &[T], f: F) -> usize {
+    let mut best = 0;
+    for (i, item) in items.iter().enumerate().skip(1) {
+        if f(item) < f(&items[best]) {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobKind;
+
+    fn sel_spec(table: &str, rows: usize) -> JobSpec {
+        let data: Vec<u32> = (0..rows as u32).collect();
+        JobSpec::new(JobKind::Selection { data: data.into(), lo: 0, hi: 10 })
+            .with_keys(vec![Some(ColumnKey::new(table, "v"))])
+    }
+
+    fn keyless_spec(rows: usize) -> JobSpec {
+        let data: Vec<u32> = (0..rows as u32).collect();
+        JobSpec::new(JobKind::Selection { data: data.into(), lo: 0, hi: 10 })
+    }
+
+    #[test]
+    fn partitioners_are_deterministic_and_total() {
+        for partitioner in [Partitioner::Hash, Partitioner::Range] {
+            for cards in 1..=8 {
+                for t in 0..32 {
+                    let key = ColumnKey::new(format!("tab{t}"), "col");
+                    let a = partitioner.card_for(&key, cards);
+                    assert_eq!(a, partitioner.card_for(&key, cards));
+                    assert!(a < cards, "{partitioner:?} out of range");
+                }
+            }
+        }
+        // The separator distinguishes table/column splits of equal bytes.
+        let h = |t: &str, c: &str| fnv1a64(&ColumnKey::new(t, c));
+        assert_ne!(h("ab", "c"), h("a", "bc"));
+    }
+
+    #[test]
+    fn hash_partitioner_spreads_the_serve_key_pool() {
+        // The serve mix's 14 key groups must not collapse onto few cards.
+        let mut counts = [0usize; 4];
+        for t in 0..8 {
+            counts[Partitioner::Hash
+                .card_for(&ColumnKey::new(format!("sel{t}"), "v"), 4)] += 1;
+        }
+        for t in 0..4 {
+            counts[Partitioner::Hash
+                .card_for(&ColumnKey::new(format!("dim{t}"), "pk"), 4)] += 1;
+        }
+        for d in 0..2 {
+            counts[Partitioner::Hash
+                .card_for(&ColumnKey::new("ml", format!("ds{d}")), 4)] += 1;
+        }
+        assert!(
+            counts.iter().all(|&c| c >= 2),
+            "serve pool unbalanced across cards: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn range_partitioner_is_monotone_in_the_key_prefix() {
+        // Lexicographically ordered tables map to non-decreasing cards.
+        let cards: Vec<usize> = ["aaa", "ggg", "nnn", "ttt", "zzz"]
+            .iter()
+            .map(|t| Partitioner::Range.card_for(&ColumnKey::new(*t, "v"), 4))
+            .collect();
+        for pair in cards.windows(2) {
+            assert!(pair[0] <= pair[1], "range map not monotone: {cards:?}");
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_regardless_of_keys() {
+        let mut router = Router::new(RouterKind::RoundRobin);
+        let views = vec![CardView::default(); 3];
+        let picks: Vec<usize> = (0..6)
+            .map(|_| router.route_views(&sel_spec("t", 64), &views))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn affinity_prefers_the_card_with_resident_bytes() {
+        let mut router = Router::new(RouterKind::Affinity);
+        let spec = sel_spec("hot", 64);
+        let mut views = vec![CardView::default(); 4];
+        views[2].resident_bytes = spec.kind.input_bytes();
+        assert_eq!(router.route_views(&spec, &views), 2);
+        // Residency scoring outranks the partitioner home even when
+        // another card is idle.
+        views[2].outstanding_bytes = spec.kind.input_bytes();
+        assert_eq!(router.route_views(&spec, &views), 2);
+    }
+
+    #[test]
+    fn affinity_sticks_to_its_first_cold_placement() {
+        let mut router = Router::new(RouterKind::Affinity);
+        let spec = sel_spec("cold", 64);
+        let views = vec![CardView::default(); 4];
+        let home = router.route_views(&spec, &views);
+        assert_eq!(home, Partitioner::Hash.card_for(&ColumnKey::new("cold", "v"), 4));
+        // Repeats follow the assignment even with zero resident bytes.
+        for _ in 0..3 {
+            assert_eq!(router.route_views(&sel_spec("cold", 64), &views), home);
+        }
+    }
+
+    #[test]
+    fn bounded_load_spills_to_the_least_loaded_card() {
+        let mut router = Router::new(RouterKind::Affinity);
+        let spec = sel_spec("busy", 64);
+        let bytes = spec.kind.input_bytes();
+        let home = Partitioner::Hash.card_for(&ColumnKey::new("busy", "v"), 4);
+        let mut views = vec![CardView::default(); 4];
+        // Load the home card just past the spill threshold.
+        views[home].outstanding_bytes = 2 * bytes + bytes;
+        let spilled = router.route_views(&spec, &views);
+        assert_ne!(spilled, home, "overloaded home must spill");
+        // The key's affinity moved with it: with loads equalized, repeats
+        // stay on the spill target, not the partitioner home.
+        let views = vec![CardView::default(); 4];
+        assert_eq!(router.route_views(&sel_spec("busy", 64), &views), spilled);
+    }
+
+    #[test]
+    fn keyless_jobs_cycle_and_single_card_short_circuits() {
+        let mut router = Router::new(RouterKind::Affinity);
+        let views = vec![CardView::default(); 3];
+        let picks: Vec<usize> = (0..4)
+            .map(|_| router.route_views(&keyless_spec(64), &views))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0]);
+        assert_eq!(router.route_views(&sel_spec("t", 64), &[CardView::default()]), 0);
+    }
+}

@@ -40,6 +40,12 @@
 //!   *physically* resident (repeat queries skip the host→HBM writes) —
 //!   all bit-identical to serial execution and measured by
 //!   `hbmctl bench-host` (DESIGN.md "Host performance model").
+//! * **L3.5 fleet** — multi-card scale-out ([`fleet`]): N coordinators
+//!   (one simulated card each) behind a routing front-end that scores
+//!   submissions by column-cache affinity with partitioned, load-bounded
+//!   cold placement, while every card's OpenCAPI transfers draw from one
+//!   shared host-DRAM ingress budget split max-min (`hbmctl serve
+//!   --cards N --router affinity`).
 //! * **L2/L1 (python/compile)** — the JAX SGD model and Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
 //!   [`runtime`] — Python never runs at request time.
@@ -57,6 +63,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod db;
 pub mod engines;
+pub mod fleet;
 pub mod floorplan;
 pub mod hbm;
 pub mod interconnect;

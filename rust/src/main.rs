@@ -36,6 +36,7 @@ use hbm_analytics::bench::figures::{self, FigureCtx};
 use hbm_analytics::coordinator::{self, Policy, ServeSpec};
 use hbm_analytics::db::{Catalog, Column, Executor, FpgaAccelerator, Plan, Table};
 use hbm_analytics::engines::sgd::{GlmTask, SgdHyperParams};
+use hbm_analytics::fleet::RouterKind;
 use hbm_analytics::hbm::shim::ENGINE_PORTS;
 use hbm_analytics::hbm::{fig2_sweep, FabricClock, HbmConfig};
 use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
@@ -118,6 +119,10 @@ fn usage() {
          \u{20}          the moved-bytes savings and the analyzer's predicted\n\
          \u{20}          copy-in bytes next to the measured total\n\
          check      --rows <n> --seed <s> --fixture <analytics|broken> --out <file.json>\n\
+         \u{20}          --cards <n> --partitioner <hash|range>\n\
+         \u{20}          with --cards > 1, lints each plan against the fleet\n\
+         \u{20}          card the cold router would choose (the route diagnostic\n\
+         \u{20}          names the card id)\n\
          \u{20}          runs the five static-analysis passes (graph, capacity,\n\
          \u{20}          parallelism, floorplan, cost bounds) over the analytics\n\
          \u{20}          plan mix — or the intentionally broken fixture — without\n\
@@ -125,16 +130,24 @@ fn usage() {
          \u{20}          CHECK_report.json\n\
          serve      --clients <n> --queries <m> --policy <fifo|fair|bandwidth|all>\n\
          \u{20}          --rows <n> --seed <s> --cache-mib <n> --out <file.json>\n\
+         \u{20}          --cards <n> --router <affinity|round-robin> --host-gbs <f>\n\
          \u{20}          replays a mixed selection/join/SGD workload through the\n\
          \u{20}          L3 coordinator, once continuously and once under the\n\
          \u{20}          round-barrier baseline (results verified identical),\n\
-         \u{20}          and writes the comparison to BENCH_coordinator.json\n\
+         \u{20}          and writes the comparison to BENCH_coordinator.json;\n\
+         \u{20}          with --cards > 1 the uniform and skewed-tenant mixes\n\
+         \u{20}          additionally replay through an N-card fleet (affinity\n\
+         \u{20}          vs round-robin routing, shared host ingress), appending\n\
+         \u{20}          the fleet scaling block to the artifact\n\
          trace      --rows <n> --repeat <r> --queries <m> --seed <s> --out <file.json>\n\
+         \u{20}          --cards <n> --router <r> --fleet-out <file.json>\n\
          \u{20}          runs the analytics plan mix with the card-clock tracer\n\
          \u{20}          on (repeats warm the column cache), validates the span\n\
          \u{20}          stream against the scheduler's accounting for every\n\
          \u{20}          policy in both scheduling modes, and writes the\n\
-         \u{20}          Perfetto-loadable TRACE_serve.json\n\
+         \u{20}          Perfetto-loadable TRACE_serve.json; with --cards > 1\n\
+         \u{20}          also traces a fleet run (one track group and one\n\
+         \u{20}          validation per card) into TRACE_fleet.json\n\
          bench-host --rows <n> --seed <s> --out <file.json>\n\
          \u{20}          measures the simulator's own wall-clock throughput on\n\
          \u{20}          the analytics plan mix (serial vs parallel functional\n\
@@ -520,11 +533,22 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
 fn cmd_check(args: &Args) -> anyhow::Result<()> {
     use hbm_analytics::analyze::{self, fixtures, CardSpec, Severity};
     use hbm_analytics::db::PipelineRequest;
+    use hbm_analytics::fleet::Partitioner;
     use hbm_analytics::workloads::analytics;
 
     let fixture = args.get_str("fixture", "analytics");
     let out_path = args.get_str("out", "CHECK_report.json");
     let card = CardSpec::default();
+    // --cards N lints each plan against the fleet card the cold router
+    // would place it on (partitioner home of its first keyed column);
+    // the route diagnostic names the card.
+    let cards: usize = args.get_parsed("cards", 1usize)?;
+    anyhow::ensure!(cards >= 1, "--cards must be positive");
+    let partitioner_name = args.get_str("partitioner", "hash");
+    let partitioner = Partitioner::parse(&partitioner_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown partitioner '{partitioner_name}' (hash|range)")
+    })?;
+    let fleet_specs: Vec<CardSpec> = vec![card.clone(); cards];
 
     let mut json = String::new();
     json.push_str("{\n");
@@ -548,12 +572,21 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
             json.push_str("  \"plans\": [\n");
             for (pi, (name, plan)) in plans.iter().enumerate() {
                 let req = PipelineRequest::from_plan(plan, &cat)?;
-                let report = analyze::analyze_request(&req, &card);
+                let (routed, report) = if cards > 1 {
+                    analyze::analyze_request_fleet(&req, &fleet_specs, partitioner)
+                } else {
+                    (0, analyze::analyze_request(&req, &card))
+                };
                 errors += report.errors();
                 warnings += report.warnings();
                 println!(
-                    "  {name}: {} error(s), {} warning(s), {} info(s); \
+                    "  {name}{}: {} error(s), {} warning(s), {} info(s); \
                      predicted copy-in {} B (cold card)",
+                    if cards > 1 {
+                        format!(" [card {routed}/{cards}]")
+                    } else {
+                        String::new()
+                    },
                     report.errors(),
                     report.warnings(),
                     report.count(Severity::Info),
@@ -562,7 +595,9 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
                 for d in &report.diagnostics {
                     println!("    {d}");
                 }
-                json.push_str(&format!("    {{\"name\": \"{name}\", \"analysis\": "));
+                json.push_str(&format!(
+                    "    {{\"name\": \"{name}\", \"card\": {routed}, \"analysis\": "
+                ));
                 json.push_str(&report.to_json("    "));
                 json.push('}');
                 json.push_str(if pi + 1 == plans.len() { "\n" } else { ",\n" });
@@ -662,6 +697,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         })?]
     };
 
+    let cards: usize = args.get_parsed("cards", 1usize)?;
+    anyhow::ensure!(cards >= 1, "--cards must be positive");
+    let router_name = args.get_str("router", "affinity");
+    let router = RouterKind::parse(&router_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown router '{router_name}' (affinity|round-robin)")
+    })?;
+    let host_gbs: f64 =
+        args.get_parsed("host-gbs", hbm_analytics::fleet::DEFAULT_HOST_BANDWIDTH / 1e9)?;
+    anyhow::ensure!(host_gbs > 0.0, "--host-gbs must be positive");
+    // The fleet bench replays one policy; honor a single --policy choice
+    // and default to fair-share under --policy all.
+    let fleet_policy =
+        if policies.len() == 1 { policies[0] } else { Policy::FairShare };
+
     let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
     println!(
         "serving {} queries from {} clients ({} rows/column, seed {:#x})",
@@ -696,8 +745,41 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     println!("\n{}", coordinator::render_outcomes(&outcomes));
 
+    // Fleet scale-out: replay the uniform mix and the skewed-tenant mix
+    // through N cards under both routers (every replay re-verified
+    // bit-identical to its single-card reference), and ride the results
+    // along in the same JSON artifact under the `fleet` key.
+    let fleet_bench = if cards > 1 {
+        println!(
+            "\nfleet: {cards} cards, {} router, {} policy, shared host \
+             ingress {host_gbs:.1} GB/s",
+            router.name(),
+            fleet_policy.name()
+        );
+        let bench = coordinator::run_fleet_bench(
+            &cfg,
+            fleet_policy,
+            &spec,
+            cards,
+            router,
+            host_gbs * 1e9,
+        );
+        println!("{}", coordinator::render_fleet(&bench));
+        println!(
+            "uniform-mix scaling efficiency ({}): {:.3}",
+            router.name(),
+            bench.scaling_efficiency()
+        );
+        Some(bench)
+    } else {
+        None
+    };
+
     let out_path = args.get_str("out", "BENCH_coordinator.json");
-    std::fs::write(&out_path, coordinator::bench_json(&spec, &outcomes))?;
+    std::fs::write(
+        &out_path,
+        coordinator::bench_json(&spec, &outcomes, fleet_bench.as_ref()),
+    )?;
     println!("wrote {out_path}");
     Ok(())
 }
@@ -907,5 +989,45 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     let out_path = args.get_str("out", "TRACE_serve.json");
     std::fs::write(&out_path, json)?;
     println!("wrote {out_path} (load it in Perfetto / chrome://tracing)");
+
+    // 3. Fleet traces: one event stream per card, each on its own card
+    // clock, rendered as one Perfetto track group per card and validated
+    // card-by-card against that card's own accounting.
+    let cards: usize = args.get_parsed("cards", 1usize)?;
+    anyhow::ensure!(cards >= 1, "--cards must be positive");
+    if cards > 1 {
+        let router_name = args.get_str("router", "affinity");
+        let router = RouterKind::parse(&router_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown router '{router_name}' (affinity|round-robin)")
+        })?;
+        println!(
+            "fleet trace: {} queries over {cards} cards ({} router)",
+            spec.queries,
+            router.name()
+        );
+        let (streams, fleet_stats) = coordinator::run_fleet_traced(
+            &cfg,
+            Policy::FairShare,
+            &spec,
+            cards,
+            router,
+        );
+        let reports = trace::validate_cards(
+            streams
+                .iter()
+                .zip(&fleet_stats)
+                .map(|(events, stats)| (events.as_slice(), stats.view())),
+        );
+        for (card, v) in reports.iter().enumerate() {
+            println!("  card {card}: {}", v.summary());
+            anyhow::ensure!(
+                v.passed(),
+                "fleet trace validation failed on card {card}"
+            );
+        }
+        let fleet_path = args.get_str("fleet-out", "TRACE_fleet.json");
+        std::fs::write(&fleet_path, trace::fleet_chrome_trace(&streams))?;
+        println!("wrote {fleet_path} ({cards} per-card track groups)");
+    }
     Ok(())
 }

@@ -15,6 +15,13 @@
 //!   Running → CopyOut lifecycle spans plus admission instants.
 //! * **pid 4 "cache"** — access/evict/pin instants.
 //!
+//! A fleet trace renders one such **track group per card**
+//! ([`fleet_trace_events_json`]): card `c`'s tracks live at pids
+//! `c*10 + 1..4` with `card c · `-prefixed process names, so Perfetto
+//! groups them visually. Card streams must stay separate — each card has
+//! its own clock, and timestamps are only meaningful within one group.
+//! Span events additionally carry their `card` id in `args`.
+//!
 //! Timestamps are microseconds of *card time* (`ts = seconds × 1e6`), so
 //! a trace of a 2 ms serve window renders as 2000 µs — zoom in, the
 //! simulated timeline is sub-millisecond.
@@ -27,6 +34,9 @@ const PID_PORTS: u32 = 1;
 const PID_LINK: u32 = 2;
 const PID_JOBS: u32 = 3;
 const PID_CACHE: u32 = 4;
+
+/// Pid stride between one card's track group and the next.
+const PID_CARD_STRIDE: u32 = 10;
 
 fn us(t: f64) -> f64 {
     t * 1e6
@@ -114,17 +124,62 @@ fn process_name(pid: u32, name: &str) -> String {
     )
 }
 
-/// Render the `traceEvents` JSON **array** for `events`. Embed it in a
-/// document (e.g. with extra metadata keys) or use [`chrome_trace`] for
-/// a standalone loadable file.
+/// Render the `traceEvents` JSON **array** for one card's stream (track
+/// group of card 0). Embed it in a document (e.g. with extra metadata
+/// keys) or use [`chrome_trace`] for a standalone loadable file. For a
+/// fleet's per-card streams use [`fleet_trace_events_json`].
 pub fn trace_events_json(events: &[Event]) -> String {
-    let mut out: Vec<String> = vec![
-        process_name(PID_PORTS, "engine ports"),
-        process_name(PID_LINK, "host link"),
-        process_name(PID_JOBS, "jobs"),
-        process_name(PID_CACHE, "cache"),
-        thread_name(PID_CACHE, 0, "events"),
-    ];
+    let mut out: Vec<String> = Vec::new();
+    render_stream(0, events, &mut out);
+    join_events(&out)
+}
+
+/// Render the `traceEvents` array for a fleet: `streams[c]` is card
+/// `c`'s own trace stream (see `fleet::Fleet::take_traces`), rendered as
+/// its own track group at pids `c*10 + 1..4`. Streams are kept separate
+/// because each card advances its own clock — lane packing, member→port
+/// bindings and counters never mix across cards.
+pub fn fleet_trace_events_json(streams: &[Vec<Event>]) -> String {
+    let mut out: Vec<String> = Vec::new();
+    for (card, events) in streams.iter().enumerate() {
+        render_stream(card, events, &mut out);
+    }
+    join_events(&out)
+}
+
+fn join_events(out: &[String]) -> String {
+    let mut json = String::from("[");
+    for (i, e) in out.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str("\n  ");
+        json.push_str(e);
+    }
+    json.push_str("\n]");
+    json
+}
+
+/// Append one card's track group to `out`. Card 0 keeps the bare
+/// process names ("engine ports", …) so single-card traces render
+/// exactly as before fleets existed; other cards get a `card N · `
+/// prefix and their own pid block.
+fn render_stream(card: usize, events: &[Event], out: &mut Vec<String>) {
+    let base = card as u32 * PID_CARD_STRIDE;
+    let (pid_ports, pid_link, pid_jobs, pid_cache) =
+        (base + PID_PORTS, base + PID_LINK, base + PID_JOBS, base + PID_CACHE);
+    let label = |name: &str| {
+        if card == 0 {
+            name.to_string()
+        } else {
+            format!("card {card} · {name}")
+        }
+    };
+    out.push(process_name(pid_ports, &label("engine ports")));
+    out.push(process_name(pid_link, &label("host link")));
+    out.push(process_name(pid_jobs, &label("jobs")));
+    out.push(process_name(pid_cache, &label("cache")));
+    out.push(thread_name(pid_cache, 0, "events"));
     // Live member→port bindings (member ids are recycled between jobs).
     let mut member_port: BTreeMap<usize, usize> = BTreeMap::new();
     // Greedy lane packing for concurrent link transfers: lane i is free
@@ -138,12 +193,12 @@ pub fn trace_events_json(events: &[Event]) -> String {
                 let tid = *job as u64;
                 if !named_jobs.contains(&tid) {
                     named_jobs.push(tid);
-                    out.push(thread_name(PID_JOBS, tid, &format!("job {job} ({kind})")));
+                    out.push(thread_name(pid_jobs, tid, &format!("job {job} ({kind})")));
                 }
                 out.push(instant_event(
                     "submitted",
                     "lifecycle",
-                    PID_JOBS,
+                    pid_jobs,
                     tid,
                     *t,
                     &format!("\"job\":{job},\"client\":{client}"),
@@ -151,13 +206,13 @@ pub fn trace_events_json(events: &[Event]) -> String {
             }
             Event::Stage(span) => {
                 let args = format!(
-                    "\"job\":{},\"client\":{},\"policy\":\"{}\"",
-                    span.job, span.client, span.policy
+                    "\"job\":{},\"client\":{},\"card\":{},\"policy\":\"{}\"",
+                    span.job, span.client, span.card, span.policy
                 );
                 out.push(complete_event(
                     &format!("{} job {}", span.stage.name(), span.job),
                     "lifecycle",
-                    PID_JOBS,
+                    pid_jobs,
                     span.job as u64,
                     span.start,
                     span.end,
@@ -168,12 +223,12 @@ pub fn trace_events_json(events: &[Event]) -> String {
                         let tid = port as u64;
                         if !named_ports.contains(&tid) {
                             named_ports.push(tid);
-                            out.push(thread_name(PID_PORTS, tid, &format!("port {port}")));
+                            out.push(thread_name(pid_ports, tid, &format!("port {port}")));
                         }
                         out.push(complete_event(
                             &format!("job {} ({})", span.job, span.kind),
                             "running",
-                            PID_PORTS,
+                            pid_ports,
                             tid,
                             span.start,
                             span.end,
@@ -194,18 +249,21 @@ pub fn trace_events_json(events: &[Event]) -> String {
                 out.push(complete_event(
                     &format!("{} job {}", span.dir.name(), span.job),
                     "link",
-                    PID_LINK,
+                    pid_link,
                     lane as u64 + 1,
                     span.start,
                     span.end,
-                    &format!("\"job\":{},\"bytes\":{}", span.job, span.bytes),
+                    &format!(
+                        "\"job\":{},\"bytes\":{},\"card\":{}",
+                        span.job, span.bytes, span.card
+                    ),
                 ));
             }
             Event::Admitted { t, job, policy, ports, .. } => {
                 out.push(instant_event(
                     &format!("admitted ({} ports)", ports.len()),
                     "admission",
-                    PID_JOBS,
+                    pid_jobs,
                     *job as u64,
                     *t,
                     &format!(
@@ -218,7 +276,7 @@ pub fn trace_events_json(events: &[Event]) -> String {
                 out.push(instant_event(
                     "skipped by policy",
                     "admission",
-                    PID_JOBS,
+                    pid_jobs,
                     *job as u64,
                     *t,
                     &format!("\"job\":{job},\"policy\":\"{policy}\""),
@@ -228,7 +286,7 @@ pub fn trace_events_json(events: &[Event]) -> String {
                 out.push(instant_event(
                     &format!("{} {}", if *hit { "hit" } else { "miss" }, key),
                     "cache",
-                    PID_CACHE,
+                    pid_cache,
                     0,
                     *t,
                     &format!("\"job\":{job},\"bytes\":{bytes},\"hit\":{hit}"),
@@ -238,20 +296,20 @@ pub fn trace_events_json(events: &[Event]) -> String {
                 out.push(instant_event(
                     &format!("evict {key}"),
                     "cache",
-                    PID_CACHE,
+                    pid_cache,
                     0,
                     *t,
                     "",
                 ));
             }
             Event::CachePin { t, key } => {
-                out.push(instant_event(&format!("pin {key}"), "cache", PID_CACHE, 0, *t, ""));
+                out.push(instant_event(&format!("pin {key}"), "cache", pid_cache, 0, *t, ""));
             }
             Event::CacheUnpin { t, key } => {
                 out.push(instant_event(
                     &format!("unpin {key}"),
                     "cache",
-                    PID_CACHE,
+                    pid_cache,
                     0,
                     *t,
                     "",
@@ -262,34 +320,24 @@ pub fn trace_events_json(events: &[Event]) -> String {
             }
             Event::MemberFreed { t, member } => {
                 if let Some(port) = member_port.remove(member) {
-                    out.push(counter_event(&format!("port {port} GB/s"), PID_PORTS, *t, 0.0));
+                    out.push(counter_event(&format!("port {port} GB/s"), pid_ports, *t, 0.0));
                 }
             }
             Event::Bandwidth { t, member, bytes_per_sec, .. } => {
                 if let Some(&port) = member_port.get(member) {
                     out.push(counter_event(
                         &format!("port {port} GB/s"),
-                        PID_PORTS,
+                        pid_ports,
                         *t,
                         bytes_per_sec / 1e9,
                     ));
                 }
             }
             Event::LinkRate { t, bytes_per_sec, .. } => {
-                out.push(counter_event("link GB/s", PID_LINK, *t, bytes_per_sec / 1e9));
+                out.push(counter_event("link GB/s", pid_link, *t, bytes_per_sec / 1e9));
             }
         }
     }
-    let mut json = String::from("[");
-    for (i, e) in out.iter().enumerate() {
-        if i > 0 {
-            json.push(',');
-        }
-        json.push_str("\n  ");
-        json.push_str(e);
-    }
-    json.push_str("\n]");
-    json
 }
 
 /// A standalone Chrome trace document: load the returned string (saved
@@ -301,6 +349,15 @@ pub fn chrome_trace(events: &[Event]) -> String {
     )
 }
 
+/// A standalone Chrome trace document for a fleet's per-card streams:
+/// one track group per card (see [`fleet_trace_events_json`]).
+pub fn fleet_chrome_trace(streams: &[Vec<Event>]) -> String {
+    format!(
+        "{{\n\"displayTimeUnit\": \"ms\",\n\"traceEvents\": {}\n}}\n",
+        fleet_trace_events_json(streams)
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,6 +365,7 @@ mod tests {
 
     fn running(job: usize, start: f64, end: f64, ports: Vec<usize>) -> Event {
         Event::Stage(StageSpan {
+            card: 0,
             job,
             client: 0,
             kind: "selection",
@@ -340,6 +398,7 @@ mod tests {
     fn concurrent_transfers_get_distinct_lanes() {
         let t = |job, start: f64, end: f64| {
             Event::Transfer(TransferSpan {
+                card: 0,
                 job,
                 dir: Dir::In,
                 bytes: 10,
@@ -386,5 +445,22 @@ mod tests {
         assert!(doc.starts_with("{\n\"displayTimeUnit\""));
         assert!(doc.contains("\"traceEvents\": ["));
         assert!(doc.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn fleet_streams_render_separate_track_groups() {
+        let streams = vec![
+            vec![running(0, 0.0, 1.0, vec![2])],
+            vec![running(0, 0.0, 1.0, vec![2])],
+        ];
+        let json = fleet_trace_events_json(&streams);
+        // Card 0 keeps the bare single-card names and pids.
+        assert!(json.contains("\"name\":\"jobs\""));
+        assert!(json.contains("\"pid\":3,\"tid\":0"));
+        // Card 1's group lives at the strided pids with prefixed names.
+        assert!(json.contains("card 1 · jobs"));
+        assert!(json.contains("card 1 · engine ports"));
+        assert!(json.contains("\"pid\":13,\"tid\":0"));
+        assert!(json.contains("\"pid\":11,\"tid\":2"));
     }
 }

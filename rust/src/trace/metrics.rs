@@ -279,6 +279,7 @@ mod tests {
                 hit: false,
             },
             Event::Transfer(TransferSpan {
+                card: 0,
                 job: 0,
                 dir: Dir::In,
                 bytes: 64,
@@ -287,6 +288,7 @@ mod tests {
                 barrier_round: None,
             }),
             Event::Stage(StageSpan {
+                card: 0,
                 job: 0,
                 client: 0,
                 kind: "selection",

@@ -45,10 +45,14 @@ pub mod metrics;
 pub mod span;
 pub mod validate;
 
-pub use chrome::{chrome_trace, trace_events_json};
+pub use chrome::{
+    chrome_trace, fleet_chrome_trace, fleet_trace_events_json, trace_events_json,
+};
 pub use metrics::{Histogram, MetricsRegistry};
 pub use span::{Dir, Event, StageKind, StageSpan, TransferSpan};
-pub use validate::{job_breakdown, validate, JobBreakdown, Validation};
+pub use validate::{
+    job_breakdown, validate, validate_cards, JobBreakdown, Validation,
+};
 
 /// Event recorder on the simulated card clock. Held by the coordinator;
 /// off by default (see the module docs for the zero-overhead contract).

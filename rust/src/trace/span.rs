@@ -59,6 +59,10 @@ impl Dir {
 /// One closed interval of a job's lifecycle, with scheduling attribution.
 #[derive(Debug, Clone)]
 pub struct StageSpan {
+    /// The card whose clock this span is on (0 for a lone card). In a
+    /// fleet each coordinator stamps its own card id, and timestamps are
+    /// only comparable *within* one card's stream.
+    pub card: usize,
     pub job: usize,
     /// Submitting client (reporting tag).
     pub client: usize,
@@ -88,6 +92,8 @@ impl StageSpan {
 /// One host-link transfer with its byte count.
 #[derive(Debug, Clone)]
 pub struct TransferSpan {
+    /// The card whose link carried the transfer (see [`StageSpan::card`]).
+    pub card: usize,
     pub job: usize,
     pub dir: Dir,
     pub bytes: u64,
@@ -167,6 +173,36 @@ impl Event {
             Event::Transfer(s) => s.start,
         }
     }
+
+    /// Card-clock timestamp at which the event was *emitted* — for spans
+    /// the **end**, since spans are recorded closed at the transition
+    /// that ends them; instants emit at their own time.
+    ///
+    /// On the continuous timeline a single card's stream is monotone
+    /// non-decreasing in emission time (the fleet equivalence suite
+    /// asserts this per card); under the barrier baseline `run_round`
+    /// synthesizes each job's spans together at round end, so emission
+    /// times are only monotone *per round*, not across a round's jobs.
+    /// Timestamps from different cards live on different clocks and must
+    /// never be compared — keep fleet streams separate per card.
+    pub fn emit_time(&self) -> f64 {
+        match self {
+            Event::Stage(s) => s.end,
+            Event::Transfer(s) => s.end,
+            other => other.time(),
+        }
+    }
+
+    /// The card this event was recorded on, when the event carries the
+    /// attribution (spans do; instants live implicitly on the stream's
+    /// card — a fleet keeps one stream per card).
+    pub fn card(&self) -> Option<usize> {
+        match self {
+            Event::Stage(s) => Some(s.card),
+            Event::Transfer(s) => Some(s.card),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +222,7 @@ mod tests {
     #[test]
     fn event_time_reports_span_starts() {
         let span = StageSpan {
+            card: 0,
             job: 3,
             client: 0,
             kind: "selection",

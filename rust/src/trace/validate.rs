@@ -141,6 +141,20 @@ fn may_follow(prev: StageKind, next: StageKind) -> bool {
 pub fn validate(events: &[Event], stats: StatsView<'_>) -> Validation {
     let mut errors: Vec<String> = Vec::new();
 
+    // A stream is one card's clock. Spans from different cards must
+    // never be validated together — their timestamps are not comparable
+    // and every interval identity below would silently mix clocks. Fleet
+    // callers keep one stream per card and use [`validate_cards`].
+    let mut cards: Vec<usize> = events.iter().filter_map(Event::card).collect();
+    cards.sort_unstable();
+    cards.dedup();
+    if cards.len() > 1 {
+        errors.push(format!(
+            "stream mixes spans from cards {cards:?}; validate each card's \
+             stream against that card's stats"
+        ));
+    }
+
     // Partition the stream.
     let mut submitted: BTreeMap<usize, f64> = BTreeMap::new();
     let mut stage_spans: BTreeMap<usize, Vec<&StageSpan>> = BTreeMap::new();
@@ -339,6 +353,21 @@ pub fn validate(events: &[Event], stats: StatsView<'_>) -> Validation {
         max_latency_error,
         errors,
     }
+}
+
+/// Run [`validate`] once per card: pair each card's own trace stream
+/// (`fleet::Fleet::take_traces` keeps them separate) with that card's
+/// own stats view. Returns the validations in card order — every
+/// invariant of the single-card pass holds per card; nothing is checked
+/// *across* cards because their clocks are unrelated.
+pub fn validate_cards<'a, I>(cards: I) -> Vec<Validation>
+where
+    I: IntoIterator<Item = (&'a [Event], StatsView<'a>)>,
+{
+    cards
+        .into_iter()
+        .map(|(events, stats)| validate(events, stats))
+        .collect()
 }
 
 /// Per-stage time breakdown of one job, summed from its spans — what the

@@ -1,0 +1,238 @@
+#![allow(clippy::disallowed_methods)]
+
+//! Fleet ≡ single-card equivalence and per-card trace invariants.
+//!
+//! The fleet layer's core contract: routing and shared-ingress contention
+//! change *when* jobs run and *where* their columns land, never *what*
+//! they compute. A fleet run must be bit-identical, ticket by ticket, to
+//! replaying the same submissions on one card — for both routers and all
+//! three engine-slot policies. Property-tested here with the in-tree
+//! miniature proptest harness (randomized workloads, seeded, shrinking).
+//!
+//! The trace contract rides along: each card keeps its own clock, so a
+//! fleet trace is one stream per card, each monotone in emission time,
+//! and each passing the self-validation pass against its own card's
+//! accounting — never a merged stream mixing clocks.
+
+use std::collections::BTreeMap;
+
+use hbm_analytics::coordinator::{
+    ColumnKey, Coordinator, JobKind, JobOutput, JobSpec, Policy,
+};
+use hbm_analytics::fleet::{Fleet, Partitioner, RouterKind};
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::trace::validate_cards;
+use hbm_analytics::util::proptest::{check, U64Range};
+use hbm_analytics::util::rng::Xoshiro256;
+use hbm_analytics::workloads::JoinWorkload;
+
+const ROUTERS: [RouterKind; 2] = [RouterKind::Affinity, RouterKind::RoundRobin];
+
+fn cfg() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+/// Bit-exact output comparison (f32 models compared by bits).
+fn same_output(a: &JobOutput, b: &JobOutput) -> bool {
+    match (a, b) {
+        (JobOutput::Selection(x), JobOutput::Selection(y)) => x == y,
+        (JobOutput::Join(x), JobOutput::Join(y)) => x == y,
+        (JobOutput::Sgd(x), JobOutput::Sgd(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y.iter()).all(|(mx, my)| {
+                    mx.len() == my.len()
+                        && mx
+                            .iter()
+                            .zip(my.iter())
+                            .all(|(p, q)| p.to_bits() == q.to_bits())
+                })
+        }
+        _ => false,
+    }
+}
+
+/// A randomized batch of independent selections: small table pool so
+/// affinity routing sees genuine repeats, a keyless slot so the router's
+/// fallback arm runs, and random predicates over random columns.
+fn workload_from_seed(seed: u64) -> Vec<JobSpec> {
+    let mut rng = Xoshiro256::new(seed);
+    let n = 3 + rng.gen_range_usize(4); // 3..=6 jobs
+    (0..n)
+        .map(|_| {
+            let rows = 1_024 + rng.gen_range_usize(3_072);
+            let data: Vec<u32> = (0..rows).map(|_| rng.next_u32()).collect();
+            let a = rng.next_u32();
+            let b = rng.next_u32();
+            let (lo, hi) = (a.min(b), a.max(b));
+            let key = match rng.gen_range_usize(4) {
+                0 => None,
+                t => Some(ColumnKey::new(format!("t{t}"), "v")),
+            };
+            JobSpec::new(JobKind::Selection { data: data.into(), lo, hi })
+                .with_keys(vec![key])
+        })
+        .collect()
+}
+
+/// Replay `jobs` on one plain coordinator; submission index → output.
+fn single_card_outputs(
+    policy: Policy,
+    jobs: &[JobSpec],
+) -> BTreeMap<usize, JobOutput> {
+    let mut solo = Coordinator::new(cfg()).with_policy(policy);
+    for job in jobs {
+        solo.submit(job.clone());
+    }
+    solo.run().into_iter().collect()
+}
+
+fn fleet_matches_reference(
+    jobs: &[JobSpec],
+    cards: usize,
+    router: RouterKind,
+    policy: Policy,
+    reference: &BTreeMap<usize, JobOutput>,
+) -> bool {
+    let mut fleet =
+        Fleet::new(cfg(), cards).with_policy(policy).with_router(router);
+    for job in jobs {
+        fleet.submit(job.clone());
+    }
+    let outputs = fleet.run();
+    outputs.len() == reference.len()
+        && outputs.iter().all(|(ticket, out)| {
+            reference.get(ticket).is_some_and(|r| same_output(out, r))
+        })
+}
+
+// ---------------------------------------------------------------------
+// Property: fleet ≡ single card, both routers × all three policies.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_is_bit_identical_to_single_card_for_all_routers_and_policies() {
+    check("fleet == single card", &U64Range(0, u64::MAX / 2), |&seed| {
+        let jobs = workload_from_seed(seed);
+        Policy::all().into_iter().all(|policy| {
+            let reference = single_card_outputs(policy, &jobs);
+            ROUTERS.into_iter().all(|router| {
+                fleet_matches_reference(&jobs, 3, router, policy, &reference)
+            })
+        })
+    });
+}
+
+// ---------------------------------------------------------------------
+// Deterministic multi-kind batch: joins and repeated-key selections mixed,
+// both partitioners, on a fleet under ingress pressure.
+// ---------------------------------------------------------------------
+
+#[test]
+fn mixed_kind_batch_survives_routing_and_a_tight_ingress_cap() {
+    let jw = JoinWorkload::generate(30_000, 400, true, false, 77);
+    let mut jobs = workload_from_seed(0x5EED);
+    jobs.push(
+        JobSpec::new(JobKind::Join {
+            s: jw.s.clone().into(),
+            l: jw.l.clone().into(),
+            handle_collisions: true,
+        })
+        .with_keys(vec![
+            Some(ColumnKey::new("join_s", "k")),
+            Some(ColumnKey::new("join_l", "k")),
+        ]),
+    );
+    // Repeat the first keyed selection so affinity has a warm target.
+    let repeat = jobs
+        .iter()
+        .find(|j| j.inputs.iter().any(|i| i.key.is_some()))
+        .cloned();
+    if let Some(repeat) = repeat {
+        jobs.push(repeat);
+    }
+    let reference = single_card_outputs(Policy::FairShare, &jobs);
+    for partitioner in [Partitioner::Hash, Partitioner::Range] {
+        for router in ROUTERS {
+            let mut fleet = Fleet::new(cfg(), 4)
+                .with_policy(Policy::FairShare)
+                .with_router(router)
+                .with_partitioner(partitioner)
+                .with_host_bandwidth(6e9); // well under 4 × link rate
+            for job in &jobs {
+                fleet.submit(job.clone());
+            }
+            let outputs = fleet.run();
+            assert_eq!(outputs.len(), reference.len());
+            for (ticket, out) in &outputs {
+                assert!(
+                    same_output(out, &reference[ticket]),
+                    "{router:?}/{partitioner:?}: ticket {ticket} diverged"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace contract: one stream per card, monotone on its own clock,
+// self-validating against that card's accounting.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_traces_stay_monotone_per_card_and_validate() {
+    let mut fleet = Fleet::new(cfg(), 3).with_router(RouterKind::RoundRobin);
+    fleet.set_tracing(true);
+    let jobs = workload_from_seed(0xDECAF);
+    for job in &jobs {
+        fleet.submit(job.clone());
+    }
+    let completed = fleet.run().len();
+    assert!(completed > 0);
+
+    let traces = fleet.take_traces();
+    assert_eq!(traces.len(), 3, "one stream per card, never merged");
+    assert!(
+        traces.iter().filter(|t| !t.is_empty()).count() >= 2,
+        "round-robin over 3+ jobs must touch at least two cards"
+    );
+    for (card, stream) in traces.iter().enumerate() {
+        let mut last = f64::NEG_INFINITY;
+        for event in stream {
+            assert!(
+                event.emit_time() >= last,
+                "card {card}: events interleave foreign card clocks"
+            );
+            last = event.emit_time();
+        }
+    }
+
+    let stats = fleet.into_stats();
+    let validations = validate_cards(
+        traces
+            .iter()
+            .map(|t| t.as_slice())
+            .zip(stats.iter().map(|s| s.view())),
+    );
+    assert_eq!(validations.len(), 3);
+    for (card, v) in validations.iter().enumerate() {
+        assert!(v.passed(), "card {card} failed validation: {}", v.summary());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Partitioner determinism: same key, same home, always in range — both
+// partitioners, any card count.
+// ---------------------------------------------------------------------
+
+#[test]
+fn partitioner_homes_are_deterministic_and_in_range() {
+    check("partitioner home", &U64Range(0, 1 << 48), |&seed| {
+        let key =
+            ColumnKey::new(format!("t{}", seed % 97), format!("c{}", seed % 31));
+        let cards = 1 + (seed % 7) as usize;
+        [Partitioner::Hash, Partitioner::Range].into_iter().all(|p| {
+            let home = p.card_for(&key, cards);
+            home < cards && home == p.card_for(&key, cards)
+        })
+    });
+}
