@@ -16,6 +16,7 @@ use std::collections::BTreeSet;
 use super::cache::{ColumnCache, ResidentLayout, DEFAULT_CACHE_BYTES};
 use crate::engines::control::ControlUnit;
 use crate::engines::sim::SimSession;
+use crate::fault::ArmedFaults;
 use crate::hbm::shim::{Shim, ENGINE_PORTS};
 use crate::hbm::{HbmConfig, HbmMemory};
 use crate::interconnect::opencapi::OpenCapiLink;
@@ -48,6 +49,10 @@ pub struct Card {
     pub session: SimSession,
     /// Engine ports not held by any in-flight job.
     pub free_ports: BTreeSet<usize>,
+    /// Armed fault schedule, if any ([`Card::inject`]). `None` — the
+    /// default — is the zero-overhead path: the scheduler consults this
+    /// once per step and takes no chaos branch when unarmed.
+    pub faults: Option<ArmedFaults>,
 }
 
 impl Card {
@@ -67,7 +72,17 @@ impl Card {
             layout: ResidentLayout::new(),
             session,
             free_ports: (0..ENGINE_PORTS).collect(),
+            faults: None,
         }
+    }
+
+    /// Arm a fault schedule on this card. The armed state captures the
+    /// card's current (nominal) link rate so later fleet ingress grants
+    /// and injected degrades compose via `min`, never by multiplying
+    /// each other. Injecting again replaces the previous schedule.
+    pub fn inject(&mut self, mut armed: ArmedFaults) {
+        armed.set_nominal_link(self.link.bandwidth);
+        self.faults = Some(armed);
     }
 
     /// Swap the card's timing configuration. The shim allocator is

@@ -228,12 +228,28 @@ pub struct JobSpec {
     /// at install time from the concrete column (it was unknowable at
     /// submission).
     pub deps: Vec<DepInput>,
+    /// Completion budget in card-clock seconds, measured from
+    /// submission. The scheduler is non-preemptive: the budget is
+    /// checked at scheduling points (admission attempts, retries after
+    /// a fault, SGD batch boundaries), so a job whose budget expires
+    /// while *waiting* fails with
+    /// [`CoordinatorError::DeadlineExceeded`](super::CoordinatorError::DeadlineExceeded);
+    /// a dispatched stage always runs to its next event. `None` (the
+    /// default) disables the check entirely.
+    pub deadline: Option<f64>,
 }
 
 impl JobSpec {
     pub fn new(kind: JobKind) -> Self {
         let inputs = kind.default_inputs();
-        Self { client: 0, kind, inputs, max_engines: ENGINE_PORTS, deps: Vec::new() }
+        Self {
+            client: 0,
+            kind,
+            inputs,
+            max_engines: ENGINE_PORTS,
+            deps: Vec::new(),
+            deadline: None,
+        }
     }
 
     /// Attach cache keys to the inputs, in payload order. Shorter lists
@@ -258,6 +274,14 @@ impl JobSpec {
     /// Declare dependency-fed payload slots (see [`JobSpec::deps`]).
     pub fn with_deps(mut self, deps: Vec<DepInput>) -> Self {
         self.deps = deps;
+        self
+    }
+
+    /// Attach a completion budget in card-clock seconds (see
+    /// [`JobSpec::deadline`]). Non-finite or non-positive budgets are
+    /// treated as already expired at the first scheduling point.
+    pub fn with_deadline(mut self, budget: Option<f64>) -> Self {
+        self.deadline = budget;
         self
     }
 
@@ -364,6 +388,15 @@ pub struct JobRecord {
     pub cache_misses: u32,
     /// HBM bytes its engines moved across all rounds.
     pub hbm_bytes: u64,
+    /// Times this job was aborted by an injected fault and re-entered
+    /// admission (0 on a fault-free run). Attempt `n` backs off
+    /// `fault::backoff_delay(n)` card-clock seconds before
+    /// re-admission; at [`fault::MAX_ATTEMPTS`](crate::fault::MAX_ATTEMPTS)
+    /// the job fails terminally with
+    /// [`CoordinatorError::Faulted`](super::CoordinatorError::Faulted).
+    ///
+    /// [`fault::backoff_delay`]: crate::fault::backoff_delay
+    pub attempts: u32,
 }
 
 impl JobRecord {

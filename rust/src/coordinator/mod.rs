@@ -38,7 +38,13 @@
 //!   ([`Coordinator::run`]) or one completion at a time
 //!   ([`Coordinator::step`] + [`Coordinator::take_result`]) — the
 //!   primitive behind the public async `JobHandle`; scheduling failures
-//!   surface as typed [`CoordinatorError`]s. A job only dispatches once
+//!   surface as typed [`CoordinatorError`]s. With a [`crate::fault`]
+//!   schedule armed ([`Coordinator::arm_faults`]) the same timeline
+//!   carries injected engine faults, link degrades and outage windows:
+//!   aborted attempts retry under capped exponential backoff, per-job
+//!   deadlines ([`JobSpec::with_deadline`]) expire while queued, and
+//!   terminal failures surface as typed errors through
+//!   [`Coordinator::take_failure`]. A job only dispatches once
 //!   its dependency parents completed; a completed parent with
 //!   dependents publishes its output as a pinned transient cache entry,
 //!   so dependent stages skip copy-in entirely. The historical lock-step
@@ -85,8 +91,10 @@ pub use scheduler::{
     intermediate_key, Coordinator, CoordinatorError, CoordinatorStats, StatsView,
 };
 pub use serve::{
-    bench_json, mixed_workload, render_fleet, render_outcomes, run_fleet,
-    run_fleet_bench, run_fleet_traced, run_policy, run_traced, run_traced_jobs,
-    skewed_cache_bytes, skewed_workload, CardOutcome, FleetBench, FleetOutcome,
-    PolicyOutcome, ServeSpec, SKEW_TENANTS,
+    bench_json, chaos_json, mixed_workload, render_chaos, render_fleet,
+    render_outcomes, run_chaos, run_chaos_db, run_fleet, run_fleet_bench,
+    run_fleet_traced, run_policy, run_traced, run_traced_jobs,
+    skewed_cache_bytes, skewed_workload, CardOutcome, ChaosDbOutcome,
+    ChaosOutcome, FleetBench, FleetOutcome, PolicyOutcome, ServeSpec,
+    SKEW_TENANTS,
 };

@@ -53,6 +53,7 @@ use crate::engines::selection::{compact_results, SelectionEngine, SelectionJob};
 use crate::engines::sgd::{SgdEngine, SgdJob};
 use crate::engines::sim::SimEvent;
 use crate::engines::{sim, Engine};
+use crate::fault::{backoff_delay, ArmedFaults, Fault, FaultPlan, MAX_ATTEMPTS};
 use crate::hbm::shim::{Shim, ENGINE_PORTS, PORT_HOME_BYTES, STACK_OFFSET};
 use crate::hbm::{HbmConfig, HbmMemory};
 use crate::interconnect::opencapi::OpenCapiLink;
@@ -81,6 +82,11 @@ struct Pending {
     /// Card time at which the job last entered `Waiting` (submission, or
     /// an SGD batch boundary) — the start of its next Waiting trace span.
     waiting_since: f64,
+    /// Earliest card time this job may be admitted again: the capped
+    /// exponential backoff after a fault-aborted attempt, or the end of
+    /// the outage that killed it. 0 (always admissible) on the clean
+    /// path.
+    not_before: f64,
     /// Where the job is on the continuous timeline (always `Waiting`
     /// under the round-barrier baseline, which tracks progress per
     /// round instead).
@@ -145,6 +151,21 @@ pub enum CoordinatorError {
     /// it forever and end in a
     /// [`DependencyStall`](CoordinatorError::DependencyStall).
     UnknownParents { unknown: Vec<usize>, released: Vec<usize> },
+    /// Injected faults aborted the job [`MAX_ATTEMPTS`] times; the card
+    /// gives up on it. The layer above decides the rescue: a fleet
+    /// re-routes the spec to another card
+    /// ([`take_failure`](Coordinator::take_failure) returns it for
+    /// dependency-free jobs), the db executor finishes the stage on the
+    /// CPU path.
+    Faulted { job: usize, attempts: u32 },
+    /// The job was still waiting for admission when its
+    /// [`deadline`](JobSpec::deadline) budget expired. Deadlines are
+    /// non-preemptive: a job already copying or computing always runs to
+    /// completion and delivers late instead.
+    DeadlineExceeded { job: usize },
+    /// A dependency-gated job's parent failed terminally, so its inputs
+    /// can never be installed; the failure cascades down the DAG.
+    ParentFailed { job: usize, parent: usize },
 }
 
 impl std::fmt::Display for CoordinatorError {
@@ -171,11 +192,41 @@ impl std::fmt::Display for CoordinatorError {
                 }
                 Ok(())
             }
+            CoordinatorError::Faulted { job, attempts } => write!(
+                f,
+                "job {job} aborted by injected faults {attempts} times and \
+                 failed terminally"
+            ),
+            CoordinatorError::DeadlineExceeded { job } => {
+                write!(f, "job {job} missed its deadline while still queued")
+            }
+            CoordinatorError::ParentFailed { job, parent } => write!(
+                f,
+                "job {job} can never dispatch: its parent {parent} failed \
+                 terminally"
+            ),
         }
     }
 }
 
 impl std::error::Error for CoordinatorError {}
+
+impl CoordinatorError {
+    /// The failed job's id when this is a *per-job* terminal failure
+    /// (faulted out, deadline missed, parent failed) — the kinds the
+    /// layer above can rescue by re-routing or finishing on the CPU.
+    /// `None` for scheduler-wide conditions (stalls, bad submissions),
+    /// which no fallback can repair.
+    pub fn failed_job(&self) -> Option<usize> {
+        match self {
+            CoordinatorError::Faulted { job, .. }
+            | CoordinatorError::DeadlineExceeded { job }
+            | CoordinatorError::ParentFailed { job, .. } => Some(*job),
+            CoordinatorError::DependencyStall { .. }
+            | CoordinatorError::UnknownParents { .. } => None,
+        }
+    }
+}
 
 /// Aggregate report of everything the coordinator has served — the
 /// *owned* snapshot form, for callers that must outlive the coordinator
@@ -234,7 +285,7 @@ impl CoordinatorStats {
     pub fn view(&self) -> StatsView<'_> {
         StatsView {
             records: &self.records,
-            cache: &self.card.cache,
+            cache: &self.cache,
             simulated_time: self.simulated_time,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
@@ -293,7 +344,7 @@ impl StatsView<'_> {
     pub fn snapshot(&self) -> CoordinatorStats {
         CoordinatorStats {
             records: self.records.to_vec(),
-            cache: self.card.cache.clone(),
+            cache: self.cache.clone(),
             simulated_time: self.simulated_time,
             hbm_bytes: self.hbm_bytes,
             host_write_bytes: self.host_write_bytes,
@@ -403,6 +454,23 @@ pub struct Coordinator {
     ///
     /// [`abandon`]: Coordinator::abandon
     abandoned: BTreeSet<usize>,
+    /// Terminally-failed jobs not yet claimed through [`take_failure`]:
+    /// the typed error plus, for dependency-free specs, the spec itself
+    /// so a fleet can re-route the job to another card.
+    ///
+    /// [`take_failure`]: Coordinator::take_failure
+    failed: BTreeMap<usize, (CoordinatorError, Option<JobSpec>)>,
+    /// Fault-aborted attempts that actually re-entered admission
+    /// (terminal aborts are not retries).
+    retries: u64,
+    /// Jobs whose stage the db executor finished on the CPU after their
+    /// offload failed terminally ([`record_downgrade`]).
+    ///
+    /// [`record_downgrade`]: Coordinator::record_downgrade
+    downgrades: u64,
+    /// At least one submitted job carried a deadline; gates the per-step
+    /// expiry scan so deadline-free workloads pay nothing for it.
+    has_deadlines: bool,
     /// Completed parents' outputs retained (HBM-resident, pinned) until
     /// every dependent job has consumed them, with the remaining consumer
     /// count.
@@ -447,6 +515,10 @@ impl Coordinator {
             records: Vec::new(),
             finished: BTreeMap::new(),
             abandoned: BTreeSet::new(),
+            failed: BTreeMap::new(),
+            retries: 0,
+            downgrades: 0,
+            has_deadlines: false,
             dep_outputs: BTreeMap::new(),
             dependent_refs: BTreeMap::new(),
             hbm_bytes: 0,
@@ -509,6 +581,10 @@ impl Coordinator {
         assert!(
             self.queue.is_empty(),
             "cannot switch scheduling mode with jobs in flight"
+        );
+        assert!(
+            !(on && self.card.faults.is_some()),
+            "fault schedules only run on the continuous timeline"
         );
         self.round_barrier = on;
     }
@@ -666,6 +742,9 @@ impl Coordinator {
     pub fn submit(&mut self, spec: JobSpec) -> usize {
         let id = self.next_id;
         self.next_id += 1;
+        if spec.deadline.is_some() {
+            self.has_deadlines = true;
+        }
         let parents = spec.parent_ids();
         for &p in &parents {
             // Only live (still-queued) parents are registered as
@@ -725,6 +804,7 @@ impl Coordinator {
             deferred_copy_bytes: 0,
             pinned_keys,
             waiting_since: t_submit,
+            not_before: 0.0,
             stage: Stage::Waiting,
         };
         // Deps that reference no parent jobs (pure column/gather
@@ -803,6 +883,14 @@ impl Coordinator {
     /// round-barrier baseline this advances exactly one lock-step round
     /// instead.
     ///
+    /// With faults armed ([`arm_faults`](Coordinator::arm_faults)) or
+    /// deadlines set, the returned ids also include jobs that just
+    /// *failed terminally* — their typed errors wait in
+    /// [`take_failure`](Coordinator::take_failure) instead of
+    /// [`take_result`]. A step may also return no ids at all when an
+    /// injected outage opened (the caller — a fleet — gets control to
+    /// re-route the queue); stepping again makes progress.
+    ///
     /// Returns [`CoordinatorError::DependencyStall`] when every queued
     /// job is dependency-gated and nothing is in flight.
     ///
@@ -821,17 +909,49 @@ impl Coordinator {
             self.card.session.sync_now(self.clock);
         }
         let mut finished: Vec<(usize, JobOutput)> = Vec::new();
-        while finished.is_empty() {
+        let mut failed_now: Vec<usize> = Vec::new();
+        while finished.is_empty() && failed_now.is_empty() {
+            // Chaos branches first, both gated so the unarmed,
+            // deadline-free path takes two never-taken checks and the
+            // event math below is untouched.
+            if self.card.faults.is_some() {
+                let went_down = self.apply_due_faults(&mut failed_now);
+                if went_down {
+                    // Hand control back so a fleet observes the outage
+                    // (and re-routes the queue) before more work runs;
+                    // a lone card simply steps again and fast-forwards
+                    // past the window below.
+                    break;
+                }
+            }
+            if self.has_deadlines {
+                self.expire_deadlines(&mut failed_now);
+                if !failed_now.is_empty() {
+                    break;
+                }
+            }
             self.admit_ready();
             self.clock = self.card.session.now();
             if self.card.session.idle() {
                 if self.queue.is_empty() {
                     break;
                 }
-                // Nothing running and nothing admissible: every queued
-                // job is waiting on a parent that can never complete.
-                let stalled: Vec<usize> = self.queue.iter().map(|p| p.id).collect();
-                return Err(CoordinatorError::DependencyStall { stalled });
+                // Nothing running and nothing admissible right now. If a
+                // backoff release, a fault transition or a deadline lies
+                // ahead, fast-forward the idle card to it; otherwise
+                // every queued job is waiting on a parent that can never
+                // complete.
+                match self.next_wake() {
+                    Some(t) => {
+                        self.card.session.sync_now(t);
+                        self.clock = t;
+                        continue;
+                    }
+                    None => {
+                        let stalled: Vec<usize> = self.queue.iter().map(|p| p.id).collect();
+                        return Err(CoordinatorError::DependencyStall { stalled });
+                    }
+                }
             }
             let events =
                 self.card.session.advance_traced(&mut self.card.mem, &mut self.tracer);
@@ -845,7 +965,9 @@ impl Coordinator {
                 }
             }
         }
-        Ok(self.publish_finished(finished))
+        let mut ids = self.publish_finished(finished);
+        ids.extend(failed_now);
+        Ok(ids)
     }
 
     /// Publish completed jobs' intermediates (pinned transient cache
@@ -882,6 +1004,13 @@ impl Coordinator {
     /// Ask the policy for an incremental admission over the currently
     /// free ports and start every admitted job at the present time.
     fn admit_ready(&mut self) {
+        let now = self.card.session.now();
+        // A down card admits nothing until its outage window closes.
+        if let Some(armed) = self.card.faults.as_mut() {
+            if armed.is_down(now) {
+                return;
+            }
+        }
         let ready: Vec<usize> = self
             .queue
             .iter()
@@ -890,6 +1019,7 @@ impl Coordinator {
                 matches!(p.stage, Stage::Waiting)
                     && p.unresolved.is_empty()
                     && p.spec.deps.is_empty()
+                    && p.not_before <= now
             })
             .map(|(i, _)| i)
             .collect();
@@ -1310,6 +1440,398 @@ impl Coordinator {
         }
     }
 
+    /// Pop and apply every armed fault due at or before the current
+    /// session time. Faults quantize to the scheduler's event loop: one
+    /// scheduled between events fires at the first loop iteration at or
+    /// after its time (see [`crate::fault`] on why that keeps chaos runs
+    /// reproducible). Returns whether a [`Fault::CardDown`] opened, so
+    /// the caller hands control back to the fleet before admitting more
+    /// work onto a dead card.
+    fn apply_due_faults(&mut self, failed_now: &mut Vec<usize>) -> bool {
+        let now = self.card.session.now();
+        let card_id = self.card.id;
+        let mut went_down = false;
+        loop {
+            let due = match self.card.faults.as_mut() {
+                Some(armed) => armed.pop_due(now),
+                None => return went_down,
+            };
+            let Some(fault) = due else { break };
+            let fault_name = fault.name();
+            match fault {
+                Fault::LinkDegrade { factor, window } => {
+                    if let Some(armed) = self.card.faults.as_mut() {
+                        armed.open_degrade(now, factor, window);
+                    }
+                    self.tracer.record(|| Event::FaultInjected {
+                        t: now,
+                        card: card_id,
+                        fault: fault_name,
+                        job: None,
+                        port: None,
+                    });
+                }
+                Fault::EngineFault { port } => {
+                    let victim = self.queue.iter().position(|p| {
+                        matches!(&p.stage, Stage::Running { ports, .. }
+                            if ports.contains(&port))
+                    });
+                    let job = victim.map(|qi| self.queue[qi].id);
+                    self.tracer.record(|| Event::FaultInjected {
+                        t: now,
+                        card: card_id,
+                        fault: fault_name,
+                        job,
+                        port: Some(port),
+                    });
+                    if let Some(qi) = victim {
+                        self.abort_running(qi);
+                        self.bump_attempts(qi, now, failed_now);
+                    }
+                }
+                Fault::CardDown { window } => {
+                    if let Some(armed) = self.card.faults.as_mut() {
+                        armed.open_down(now, window);
+                    }
+                    went_down = true;
+                    self.tracer.record(|| Event::FaultInjected {
+                        t: now,
+                        card: card_id,
+                        fault: fault_name,
+                        job: None,
+                        port: None,
+                    });
+                    self.kill_in_flight(failed_now);
+                }
+            }
+        }
+        // Re-derive the effective link rate every armed iteration: the
+        // granted (fleet-share or nominal) rate capped by any open
+        // degrade window. `min` with `+∞` outside a window restores the
+        // granted rate the moment the window closes — and composes with
+        // a fleet's ingress share instead of multiplying into it.
+        let cap = match self.card.faults.as_mut() {
+            Some(armed) => armed.degrade_cap(now),
+            None => f64::INFINITY,
+        };
+        self.card.session.set_link_bandwidth(self.card.link.bandwidth.min(cap));
+        went_down
+    }
+
+    /// Abort a job's in-flight compute batch at the current event (an
+    /// injected fault hit it): emit the truncated Running span, abort
+    /// every session member — partial HBM traffic stays accounted, so
+    /// chaos statistics see the wasted work — free the ports and return
+    /// the job to `Waiting`. The batch's functional results are
+    /// discarded; a retry re-dispatches it from scratch. SGD models from
+    /// *earlier* batches live in `sgd_models` and survive, so a retried
+    /// SGD job resumes its grid exactly where the last completed batch
+    /// left it.
+    fn abort_running(&mut self, qi: usize) {
+        let now = self.card.session.now();
+        let stage = std::mem::replace(&mut self.queue[qi].stage, Stage::Waiting);
+        let Stage::Running { members, ports, started, .. } = stage else {
+            unreachable!("abort_running on a non-running job");
+        };
+        let exec = now - started;
+        {
+            let pending = &self.queue[qi];
+            let (job_id, client, kind_name) =
+                (pending.id, pending.spec.client, pending.spec.kind.name());
+            let policy_name = self.policy.name();
+            self.tracer.record(|| {
+                Event::Stage(StageSpan {
+                    card: self.card.id,
+                    job: job_id,
+                    client,
+                    kind: kind_name,
+                    policy: policy_name,
+                    stage: StageKind::Running,
+                    start: started,
+                    end: now,
+                    ports: ports.clone(),
+                    barrier_round: None,
+                })
+            });
+        }
+        let mut job_hbm = 0u64;
+        for &m in &members {
+            let stats = self.card.session.abort_engine(m);
+            job_hbm += stats.hbm_bytes;
+            self.tracer.record(|| Event::MemberFreed { t: now, member: m });
+        }
+        // The truncated span is real occupancy: the trace validator's
+        // engine-busy identity sums *every* Running span, aborted ones
+        // included, so the accumulator must too.
+        self.engine_busy_port_seconds += ports.len() as f64 * exec;
+        for p in ports {
+            self.card.free_ports.insert(p);
+        }
+        self.hbm_bytes += job_hbm;
+        let pending = &mut self.queue[qi];
+        pending.record.exec += exec;
+        pending.record.hbm_bytes += job_hbm;
+        pending.waiting_since = now;
+    }
+
+    /// Abort a job's in-flight copy-in at the current event (the card
+    /// went down under it): the transfer stops sharing the link and
+    /// never lands, the truncated CopyIn/Transfer spans close here, and
+    /// the job returns to `Waiting` *warm* — its copy-in stays charged
+    /// (`copied_in` holds), so the retry re-dispatches straight to its
+    /// engines, exactly like a resident re-admission.
+    fn abort_copyin(&mut self, qi: usize) {
+        let now = self.card.session.now();
+        let stage = std::mem::replace(&mut self.queue[qi].stage, Stage::Waiting);
+        let Stage::CopyIn { transfer, started, ports, bytes } = stage else {
+            unreachable!("abort_copyin on a non-copying job");
+        };
+        self.card.session.abort_transfer(transfer);
+        {
+            let pending = &self.queue[qi];
+            let (job_id, client, kind_name) =
+                (pending.id, pending.spec.client, pending.spec.kind.name());
+            let policy_name = self.policy.name();
+            self.tracer.record(|| {
+                Event::Stage(StageSpan {
+                    card: self.card.id,
+                    job: job_id,
+                    client,
+                    kind: kind_name,
+                    policy: policy_name,
+                    stage: StageKind::CopyIn,
+                    start: started,
+                    end: now,
+                    ports: Vec::new(),
+                    barrier_round: None,
+                })
+            });
+            self.tracer.record(|| {
+                Event::Transfer(TransferSpan {
+                    card: self.card.id,
+                    job: job_id,
+                    dir: Dir::In,
+                    bytes,
+                    start: started,
+                    end: now,
+                    barrier_round: None,
+                })
+            });
+        }
+        for p in ports {
+            self.card.free_ports.insert(p);
+        }
+        let pending = &mut self.queue[qi];
+        pending.record.copy_in += now - started;
+        pending.waiting_since = now;
+    }
+
+    /// A [`Fault::CardDown`] opened: kill every in-flight admission.
+    /// Copy-ins and running batches abort and re-enter admission gated
+    /// past the outage window; results already crossing back to the
+    /// host (`CopyOut`) complete — the card's duty to them is done (the
+    /// *warm reset* of [`crate::fault`]).
+    fn kill_in_flight(&mut self, failed_now: &mut Vec<usize>) {
+        let floor = match self.card.faults.as_mut() {
+            Some(armed) => armed.down_until().unwrap_or(0.0),
+            None => 0.0,
+        };
+        loop {
+            let Some(qi) = self.queue.iter().position(|p| {
+                matches!(p.stage, Stage::CopyIn { .. } | Stage::Running { .. })
+            }) else {
+                break;
+            };
+            match self.queue[qi].stage {
+                Stage::CopyIn { .. } => self.abort_copyin(qi),
+                Stage::Running { .. } => self.abort_running(qi),
+                _ => unreachable!("position matched an in-flight stage"),
+            }
+            self.bump_attempts(qi, floor, failed_now);
+        }
+    }
+
+    /// Account one fault-aborted attempt for the (now `Waiting`) job at
+    /// `qi`: terminal after [`MAX_ATTEMPTS`] — the job fails with
+    /// [`CoordinatorError::Faulted`] — otherwise it re-enters admission
+    /// after a capped exponential backoff on the card clock, never
+    /// before `floor` (a down card's outage end).
+    fn bump_attempts(&mut self, qi: usize, floor: f64, failed_now: &mut Vec<usize>) {
+        let now = self.card.session.now();
+        let (id, attempts) = {
+            let pending = &mut self.queue[qi];
+            pending.record.attempts += 1;
+            (pending.id, pending.record.attempts)
+        };
+        if attempts >= MAX_ATTEMPTS {
+            self.fail_job(
+                qi,
+                CoordinatorError::Faulted { job: id, attempts },
+                failed_now,
+            );
+            return;
+        }
+        let backoff = backoff_delay(attempts);
+        self.queue[qi].not_before = (now + backoff).max(floor);
+        self.retries += 1;
+        self.tracer.record(|| Event::Retry { t: now, job: id, attempts, backoff });
+    }
+
+    /// Retire the `Waiting` job at `qi` as terminally failed: release
+    /// everything it holds (cache pins, references on parents it will
+    /// never consume — the pinned-intermediate release that keeps
+    /// abandoned pipelines from leaking), cascade the failure to queued
+    /// children before a resolution pass could reach for the missing
+    /// output, and surface the typed error through
+    /// [`take_failure`](Coordinator::take_failure). Dependency-free
+    /// specs are retained alongside the error so a fleet can re-route
+    /// them to another card.
+    fn fail_job(
+        &mut self,
+        qi: usize,
+        err: CoordinatorError,
+        failed_now: &mut Vec<usize>,
+    ) {
+        let now = self.card.session.now();
+        let Some(mut pending) = self.queue.remove(qi) else {
+            unreachable!("failed job was in the queue");
+        };
+        debug_assert!(
+            matches!(pending.stage, Stage::Waiting),
+            "only waiting jobs fail terminally"
+        );
+        let id = pending.id;
+        for key in pending.pinned_keys.drain(..) {
+            self.card.cache.unpin(&key);
+            self.tracer
+                .record(|| Event::CacheUnpin { t: now, key: key.to_string() });
+        }
+        // Parent references this job will never consume. Deps still
+        // uninstalled (`spec.deps` non-empty) hold one reference per
+        // unique parent; installed deps already consumed theirs in
+        // `resolve_ready_children`.
+        if !pending.spec.deps.is_empty() {
+            for p in pending.spec.parent_ids() {
+                let Some(refs) = self.dependent_refs.get_mut(&p) else {
+                    // Dangling parent id: never registered.
+                    continue;
+                };
+                *refs -= 1;
+                let emptied = *refs == 0;
+                if self.dep_outputs.contains_key(&p) {
+                    // The parent already published for this consumer:
+                    // drop the pin it was holding on our behalf.
+                    let key = intermediate_key(p);
+                    self.card.cache.unpin(&key);
+                    self.tracer.record(|| Event::CacheUnpin {
+                        t: now,
+                        key: key.to_string(),
+                    });
+                }
+                if emptied {
+                    self.dependent_refs.remove(&p);
+                    if self.dep_outputs.remove(&p).is_some() {
+                        let key = intermediate_key(p);
+                        self.card.cache.remove(&key);
+                        release_key_spans(
+                            &mut self.card.layout,
+                            &mut self.card.mem,
+                            &key,
+                        );
+                    }
+                }
+            }
+        }
+        // Children gated on this job can never resolve: fail them too
+        // (recursively down the DAG). Each child's own fail releases its
+        // reference on us, so a failed parent's already-published
+        // intermediate is dropped with its last would-be consumer.
+        loop {
+            let Some(ci) = self.queue.iter().position(|p| p.unresolved.contains(&id))
+            else {
+                break;
+            };
+            let child = self.queue[ci].id;
+            self.fail_job(
+                ci,
+                CoordinatorError::ParentFailed { job: child, parent: id },
+                failed_now,
+            );
+        }
+        failed_now.push(id);
+        if !self.abandoned.remove(&id) {
+            let spec = (pending.spec.deps.is_empty()
+                && pending.unresolved.is_empty())
+            .then_some(pending.spec);
+            self.failed.insert(id, (err, spec));
+        }
+    }
+
+    /// Fail every `Waiting` job whose deadline instant has passed. Jobs
+    /// already copying or computing are never preempted — a deadline
+    /// bounds *queueing*, not service: once dispatched, the job
+    /// completes and delivers late. An SGD job between batches is
+    /// waiting, so an expiring deadline does cut a half-trained grid.
+    fn expire_deadlines(&mut self, failed_now: &mut Vec<usize>) {
+        let now = self.card.session.now();
+        loop {
+            let Some(qi) = self.queue.iter().position(|p| {
+                if !matches!(p.stage, Stage::Waiting) {
+                    return false;
+                }
+                match p.spec.deadline {
+                    Some(budget) => p.record.submit_time + budget <= now,
+                    None => false,
+                }
+            }) else {
+                break;
+            };
+            let id = self.queue[qi].id;
+            self.fail_job(
+                qi,
+                CoordinatorError::DeadlineExceeded { job: id },
+                failed_now,
+            );
+        }
+    }
+
+    /// Earliest *future* instant at which a sleeping card must act: the
+    /// next armed-fault transition (a scheduled fault or an open
+    /// window's end), the earliest retry-backoff release of a ready
+    /// job, or the earliest live deadline. `None` when nothing ahead
+    /// can unblock the queue — the genuine dependency stall.
+    fn next_wake(&mut self) -> Option<f64> {
+        let now = self.card.session.now();
+        let mut wake = f64::INFINITY;
+        if let Some(armed) = self.card.faults.as_ref() {
+            if let Some(t) = armed.next_change() {
+                if t > now {
+                    wake = wake.min(t);
+                }
+            }
+        }
+        for p in &self.queue {
+            if !matches!(p.stage, Stage::Waiting) {
+                continue;
+            }
+            if p.unresolved.is_empty()
+                && p.spec.deps.is_empty()
+                && p.not_before > now
+            {
+                wake = wake.min(p.not_before);
+            }
+            if self.has_deadlines {
+                if let Some(budget) = p.spec.deadline {
+                    let instant = p.record.submit_time + budget;
+                    if instant > now {
+                        wake = wake.min(instant);
+                    }
+                }
+            }
+        }
+        wake.is_finite().then_some(wake)
+    }
+
     /// Strike `completed` off every queued job's unresolved-parent set;
     /// jobs whose last parent just completed get their dependency
     /// expressions evaluated against the published (HBM-resident) outputs
@@ -1378,10 +1900,143 @@ impl Coordinator {
     /// buffered, or discarded at completion instead of buffered, so
     /// fire-and-forget submission cannot accumulate unclaimed results.
     pub fn abandon(&mut self, id: usize) {
+        if self.failed.remove(&id).is_some() {
+            return;
+        }
         if self.finished.remove(&id).is_none() && self.queue.iter().any(|p| p.id == id)
         {
             self.abandoned.insert(id);
         }
+    }
+
+    /// Arm `plan`'s faults for this card: its share of the schedule
+    /// starts firing at scheduler events from the card's *current* clock
+    /// on (see [`crate::fault`] for the quantization and determinism
+    /// contract). Arming replaces any previous schedule; an empty plan
+    /// is indistinguishable from not arming. Panics under the
+    /// round-barrier baseline — faults fire on the continuous timeline
+    /// only.
+    pub fn arm_faults(&mut self, plan: &FaultPlan) {
+        assert!(
+            !self.round_barrier,
+            "fault injection runs on the continuous timeline only"
+        );
+        let armed = ArmedFaults::new(plan, self.card.id);
+        self.card.inject(armed);
+    }
+
+    /// Claim a terminally-failed job's typed error — the failure-path
+    /// analogue of [`take_result`](Coordinator::take_result). For
+    /// dependency-free specs the spec rides along so a fleet can
+    /// re-submit the job on another card; DAG members return `None`
+    /// there (their intermediates died with this card's queue).
+    pub fn take_failure(
+        &mut self,
+        id: usize,
+    ) -> Option<(CoordinatorError, Option<JobSpec>)> {
+        self.failed.remove(&id)
+    }
+
+    /// Whether the card is inside an injected outage window at its
+    /// current clock (`&mut`: expired windows are dropped as observed).
+    /// What a fleet polls after each step to trigger failover.
+    pub fn is_down(&mut self) -> bool {
+        let now = self.card.session.now();
+        match self.card.faults.as_mut() {
+            Some(armed) => armed.is_down(now),
+            None => false,
+        }
+    }
+
+    /// Faults that have actually fired on this card so far.
+    pub fn faults_injected(&self) -> u64 {
+        self.card.faults.as_ref().map_or(0, |a| a.injected)
+    }
+
+    /// Bytes of resident cache entries currently pinned (transient
+    /// intermediates awaiting dependent consumption). Must drain back to
+    /// zero once every DAG retires — including DAGs whose members failed
+    /// terminally — or the card is leaking pins; the chaos regression
+    /// tests assert exactly that.
+    pub fn pinned_cache_bytes(&self) -> u64 {
+        self.card.cache.pinned_bytes()
+    }
+
+    /// Fault-aborted attempts that re-entered admission (terminal
+    /// failures are not retries).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Record that the layer above finished `job`'s stage on the CPU
+    /// after its offload failed terminally: bumps the downgrade counter
+    /// and stamps [`Event::Downgraded`] at the card's current clock. The
+    /// db executor calls this from its graceful-degradation path.
+    pub fn record_downgrade(&mut self, job: usize) {
+        self.downgrades += 1;
+        let t = self.clock;
+        self.tracer.record(|| Event::Downgraded { t, job });
+    }
+
+    /// Jobs whose stages were finished on the CPU after terminal offload
+    /// failure (see [`record_downgrade`](Coordinator::record_downgrade)).
+    pub fn downgrades(&self) -> u64 {
+        self.downgrades
+    }
+
+    /// The fraction of its nominal rate an open degrade window leaves
+    /// this card's link at the current clock (1.0 clean). A fleet's
+    /// ingress solver scales the card's *demand* by this, so the shared
+    /// host cap and the degrade compose through one `min` instead of
+    /// scaling twice.
+    pub fn link_demand_factor(&mut self) -> f64 {
+        let now = self.card.session.now();
+        match self.card.faults.as_mut() {
+            Some(armed) => armed.link_factor(now),
+            None => 1.0,
+        }
+    }
+
+    /// Pull every re-routable job out of the queue: `Waiting`,
+    /// dependency-free, with no queued children and a live claimant.
+    /// Their cache pins release here; the returned `(id, spec)` pairs
+    /// are what the fleet re-submits on surviving cards when this one
+    /// goes down. Jobs tied into a DAG (either direction) stay — their
+    /// intermediates live on this card — and ride the outage out on
+    /// local retry.
+    pub fn drain_reroutable(&mut self) -> Vec<(usize, JobSpec)> {
+        let now = self.card.session.now();
+        let mut drained = Vec::new();
+        loop {
+            let Some(qi) = self.queue.iter().position(|p| {
+                matches!(p.stage, Stage::Waiting)
+                    && p.unresolved.is_empty()
+                    && p.spec.deps.is_empty()
+                    && !self.dependent_refs.contains_key(&p.id)
+                    && !self.abandoned.contains(&p.id)
+            }) else {
+                break;
+            };
+            let Some(mut pending) = self.queue.remove(qi) else {
+                unreachable!("drained job was in the queue")
+            };
+            for key in pending.pinned_keys.drain(..) {
+                self.card.cache.unpin(&key);
+                self.tracer
+                    .record(|| Event::CacheUnpin { t: now, key: key.to_string() });
+            }
+            drained.push((pending.id, pending.spec));
+        }
+        drained
+    }
+
+    /// Record that the fleet moved `job` off this card onto `to_card`
+    /// (trace attribution only — the job restarts under a new id on the
+    /// destination card's own clock).
+    pub fn record_failover(&mut self, job: usize, to_card: usize) {
+        let t = self.clock;
+        let from_card = self.card.id;
+        self.tracer.record(|| Event::Failover { t, job, from_card, to_card });
     }
 
     /// Claim a completed job's buffered output and its accounting record.
@@ -1398,10 +2053,13 @@ impl Coordinator {
         Some((output, record.clone()))
     }
 
-    /// Whether a job is anywhere in the coordinator: queued, running, or
-    /// completed with its output unclaimed.
+    /// Whether a job is anywhere in the coordinator: queued, running,
+    /// completed with its output unclaimed, or terminally failed with
+    /// its error unclaimed.
     pub fn is_in_flight(&self, id: usize) -> bool {
-        self.finished.contains_key(&id) || self.queue.iter().any(|p| p.id == id)
+        self.finished.contains_key(&id)
+            || self.failed.contains_key(&id)
+            || self.queue.iter().any(|p| p.id == id)
     }
 
     /// Submit one job and serve it immediately — the blocking
@@ -2884,5 +3542,155 @@ mod tests {
             single_out.expect_selection(),
             "same workload must give the same candidates"
         );
+    }
+
+    // ------------------------------------------------------------------
+    // Chaos: injected faults, retry/backoff, deadlines, terminal failure.
+    // ------------------------------------------------------------------
+
+    use crate::fault::ScheduledFault;
+
+    /// One `EngineFault` per port at `at`, all on card 0.
+    fn all_port_faults(at: f64) -> Vec<ScheduledFault> {
+        (0..ENGINE_PORTS)
+            .map(|port| ScheduledFault {
+                at,
+                card: 0,
+                fault: Fault::EngineFault { port },
+            })
+            .collect()
+    }
+
+    fn custom_plan(faults: Vec<ScheduledFault>) -> FaultPlan {
+        FaultPlan { mix: "custom", seed: 0, cards: 1, faults }
+    }
+
+    #[test]
+    fn engine_fault_retries_and_matches_the_fault_free_output() {
+        let w = SelectionWorkload::uniform(120_000, 0.2, 11);
+        let mut clean = Coordinator::new(cfg());
+        let (want, clean_rec) = clean.run_single(selection_spec(&w));
+
+        let mut coord = Coordinator::new(cfg());
+        coord.set_tracing(true);
+        // One fault per port just after t=0: whichever ports the job is
+        // granted, its first dispatch aborts, then the retry runs clean.
+        coord.arm_faults(&custom_plan(all_port_faults(1e-9)));
+        let (out, rec) = coord.run_single(selection_spec(&w));
+        assert_eq!(out.expect_selection(), want.expect_selection());
+        assert_eq!(rec.attempts, 1, "exactly one aborted attempt");
+        assert!(
+            rec.latency() > clean_rec.latency(),
+            "the aborted attempt and backoff must cost card time"
+        );
+        assert_eq!(coord.retries(), 1);
+        assert_eq!(coord.faults_injected(), ENGINE_PORTS as u64);
+        // The retried job's spans still satisfy every trace identity:
+        // the truncated Running span, the re-opened Waiting span and the
+        // warm re-dispatch all reconcile against the stats accumulators.
+        let events = coord.take_trace();
+        let report = crate::trace::validate(&events, coord.stats());
+        assert!(report.passed(), "chaos trace must validate: {:?}", report.errors);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, Event::FaultInjected { job: Some(_), .. })));
+        assert!(events.iter().any(|e| matches!(e, Event::Retry { attempts: 1, .. })));
+    }
+
+    #[test]
+    fn dense_faults_exhaust_attempts_into_a_typed_terminal_failure() {
+        let w = SelectionWorkload::uniform(120_000, 0.2, 11);
+        let mut coord = Coordinator::new(cfg());
+        // A fault on every port every 1 µs: each dispatch is aborted at
+        // its first session event, so the job burns all its attempts.
+        let mut faults = Vec::new();
+        for k in 0..2000u32 {
+            faults.extend(all_port_faults(f64::from(k) * 1e-6));
+        }
+        coord.arm_faults(&custom_plan(faults));
+        let id = coord.submit(selection_spec(&w));
+        let outputs = coord.try_run().expect("terminal failure is typed, not a stall");
+        assert!(outputs.is_empty(), "the job can never complete");
+        let (err, spec) = coord.take_failure(id).expect("failure is claimable");
+        assert_eq!(err, CoordinatorError::Faulted { job: id, attempts: MAX_ATTEMPTS });
+        assert!(spec.is_some(), "dependency-free specs ride along for re-routing");
+        assert_eq!(coord.retries(), u64::from(MAX_ATTEMPTS) - 1);
+        assert!(!coord.is_in_flight(id), "claimed failures leave the coordinator");
+        assert_eq!(coord.stats().completed(), 0);
+    }
+
+    #[test]
+    fn queued_deadline_expires_with_a_typed_error() {
+        let w = SelectionWorkload::uniform(400_000, 0.2, 11);
+        let mut coord = Coordinator::new(cfg()).with_policy(Policy::Fifo);
+        let first = coord.submit(selection_spec(&w));
+        // FIFO serializes: the second job waits behind the first, whose
+        // copy-in alone outlives this budget.
+        let doomed = coord.submit(selection_spec(&w).with_deadline(Some(1e-6)));
+        let outputs = coord.try_run().expect("deadline misses are typed");
+        assert_eq!(outputs.len(), 1);
+        assert_eq!(outputs[0].0, first);
+        let (err, spec) = coord.take_failure(doomed).expect("expiry must be claimable");
+        assert_eq!(err, CoordinatorError::DeadlineExceeded { job: doomed });
+        assert!(spec.is_some());
+    }
+
+    #[test]
+    fn lone_card_rides_out_an_outage_on_local_retry() {
+        let w = SelectionWorkload::uniform(120_000, 0.2, 11);
+        let mut clean = Coordinator::new(cfg());
+        let (want, _) = clean.run_single(selection_spec(&w));
+
+        let window = 400e-6;
+        let mut coord = Coordinator::new(cfg());
+        coord.arm_faults(&custom_plan(vec![ScheduledFault {
+            at: 1e-9,
+            card: 0,
+            fault: Fault::CardDown { window },
+        }]));
+        let id = coord.submit(selection_spec(&w));
+        let mut outputs = coord.try_run().expect("the lone card survives");
+        assert_eq!(outputs.len(), 1);
+        let (got_id, got) = outputs.pop().expect("one completed job");
+        assert_eq!(got_id, id);
+        assert_eq!(got.expect_selection(), want.expect_selection());
+        let stats = coord.stats();
+        assert_eq!(stats.records[0].attempts, 1, "the outage killed one attempt");
+        assert!(
+            stats.records[0].latency() >= window,
+            "the job waited out the whole down window"
+        );
+    }
+
+    #[test]
+    fn drain_reroutable_returns_waiting_specs_and_empties_the_queue() {
+        let w = SelectionWorkload::uniform(60_000, 0.2, 7);
+        let mut coord = Coordinator::new(cfg());
+        let a = coord.submit(selection_spec(&w));
+        let b = coord.submit(selection_spec(&w));
+        let drained = coord.drain_reroutable();
+        let ids: Vec<usize> = drained.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![a, b]);
+        assert_eq!(coord.pending(), 0);
+        assert!(!coord.is_in_flight(a) && !coord.is_in_flight(b));
+        // The drained specs re-submit and run normally elsewhere.
+        let mut other = Coordinator::new(cfg());
+        for (_, spec) in drained {
+            other.submit(spec);
+        }
+        assert_eq!(other.run().len(), 2);
+    }
+
+    #[test]
+    fn unarmed_coordinator_reports_a_quiet_chaos_surface() {
+        let w = SelectionWorkload::uniform(60_000, 0.2, 7);
+        let mut coord = Coordinator::new(cfg());
+        let (_, rec) = coord.run_single(selection_spec(&w));
+        assert_eq!(rec.attempts, 0);
+        assert_eq!(coord.retries(), 0);
+        assert_eq!(coord.faults_injected(), 0);
+        assert!(!coord.is_down());
+        assert_eq!(coord.link_demand_factor(), 1.0);
+        assert!(coord.take_failure(0).is_none());
     }
 }

@@ -30,6 +30,7 @@ use super::job::{ColumnKey, JobKind, JobOutput, JobSpec};
 use super::policy::Policy;
 use super::scheduler::{Coordinator, CoordinatorStats};
 use crate::engines::sgd::{GlmTask, SgdHyperParams};
+use crate::fault::FaultPlan;
 use crate::fleet::{Fleet, RouterKind};
 use crate::hbm::HbmConfig;
 use crate::trace::{Event, Histogram, MetricsRegistry};
@@ -597,6 +598,295 @@ pub fn run_fleet_bench(
     }
 }
 
+/// Summary of one chaos replay: the mixed workload on an N-card fleet
+/// with a fault schedule armed, reconciled ticket-by-ticket against a
+/// fault-free single-card reference and a fault-free fleet twin.
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    pub mix: &'static str,
+    /// Seed of the fault schedule (the workload keeps its own seed, so
+    /// `--faults none` replays exactly the serve fleet run).
+    pub seed: u64,
+    pub cards: usize,
+    pub router: RouterKind,
+    pub submitted: usize,
+    /// Tickets that produced an output.
+    pub completed: usize,
+    /// Outputs that diverged bitwise from the fault-free reference — the
+    /// recovery machinery's one unforgivable outcome (CI asserts 0).
+    pub wrong: usize,
+    /// Tickets with neither an output nor a typed failure (CI asserts 0:
+    /// a fault may slow a job down or fail it *typed*, never drop it).
+    pub lost: usize,
+    /// Tickets surfaced as typed terminal failures
+    /// ([`Fleet::take_failure`]): deadline misses, and faulted jobs with
+    /// no live card left.
+    pub failed: usize,
+    pub faults_injected: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub makespan: f64,
+    /// Completed tickets over the chaos makespan — throughput net of
+    /// everything the faults cost (aborted attempts, backoff, failover
+    /// re-copies).
+    pub goodput_qps: f64,
+    pub p99_latency: f64,
+    /// The identical workload on an identical fleet with nothing armed.
+    pub fault_free_makespan: f64,
+    pub fault_free_qps: f64,
+    pub fault_free_p99: f64,
+}
+
+/// p99 latency across a fleet's per-card accountings (one histogram over
+/// the union of all cards' per-job latencies).
+fn fleet_p99(stats: &[CoordinatorStats]) -> f64 {
+    let latencies: Vec<f64> = stats.iter().flat_map(|s| s.latencies()).collect();
+    Histogram::from_samples(&latencies).percentile(99.0)
+}
+
+/// Replay the spec's mixed workload on a fleet with `plan` armed, next to
+/// two fault-free witnesses: a single-card reference (whose submission
+/// ids coincide with fleet tickets) that every surviving output must
+/// match bit-for-bit, and a fleet twin whose makespan/qps/p99 the chaos
+/// numbers are judged against. Faults may stretch the timeline or fail
+/// individual tickets with a typed, claimable error — `wrong` and `lost`
+/// count the two outcomes recovery must never produce, and CI asserts
+/// both stay 0. Panics only on scheduler-wide errors (stalls, bad
+/// submissions), exactly like [`Fleet::run`].
+pub fn run_chaos(
+    cfg: &HbmConfig,
+    policy: Policy,
+    spec: &ServeSpec,
+    cards: usize,
+    router: RouterKind,
+    host_bandwidth: f64,
+    plan: &FaultPlan,
+) -> ChaosOutcome {
+    let jobs = mixed_workload(spec);
+    let submitted = jobs.len();
+
+    // Fault-free single-card reference: submission ids == fleet tickets.
+    let mut solo = Coordinator::new(cfg.clone())
+        .with_policy(policy)
+        .with_cache_bytes(spec.cache_bytes);
+    for job in jobs.clone() {
+        solo.submit(job);
+    }
+    let reference: std::collections::BTreeMap<usize, JobOutput> =
+        solo.run().into_iter().collect();
+
+    let build = |armed: &FaultPlan| {
+        let mut fleet = Fleet::new(cfg.clone(), cards)
+            .with_policy(policy)
+            .with_cache_bytes(spec.cache_bytes)
+            .with_router(router)
+            .with_host_bandwidth(host_bandwidth)
+            .with_faults(armed);
+        for job in jobs.clone() {
+            fleet.submit(job);
+        }
+        fleet
+    };
+
+    // Fault-free fleet twin: the baseline the chaos run is judged against.
+    let mut clean = build(&FaultPlan::none());
+    let clean_out = clean.run();
+    assert_eq!(
+        clean_out.len(),
+        reference.len(),
+        "the fault-free fleet must complete the whole workload"
+    );
+    let fault_free_makespan = clean.makespan();
+    let fault_free_qps = if fault_free_makespan > 0.0 {
+        clean_out.len() as f64 / fault_free_makespan
+    } else {
+        0.0
+    };
+    let fault_free_p99 = fleet_p99(&clean.into_stats());
+
+    // The chaos run.
+    let mut fleet = build(plan);
+    let outputs = fleet.run();
+    let completed = outputs.len();
+    let makespan = fleet.makespan();
+    let faults_injected = fleet.faults_injected();
+    let retries = fleet.retries();
+    let failovers = fleet.failovers();
+
+    let mut wrong = 0usize;
+    let mut seen = vec![false; submitted];
+    for (ticket, out) in &outputs {
+        seen[*ticket] = true;
+        match reference.get(ticket) {
+            Some(expected) if outputs_identical(out, expected) => {}
+            _ => wrong += 1,
+        }
+    }
+    let (mut failed, mut lost) = (0usize, 0usize);
+    for (ticket, done) in seen.iter().enumerate() {
+        if *done {
+            continue;
+        }
+        if fleet.take_failure(ticket).is_some() {
+            failed += 1;
+        } else if reference.contains_key(&ticket) {
+            // In the reference but neither completed nor typed-failed:
+            // the recovery machinery dropped it on the floor.
+            lost += 1;
+        }
+    }
+    let p99_latency = fleet_p99(&fleet.into_stats());
+
+    ChaosOutcome {
+        mix: plan.mix,
+        seed: plan.seed,
+        cards,
+        router,
+        submitted,
+        completed,
+        wrong,
+        lost,
+        failed,
+        faults_injected,
+        retries,
+        failovers,
+        makespan,
+        goodput_qps: if makespan > 0.0 {
+            completed as f64 / makespan
+        } else {
+            0.0
+        },
+        p99_latency,
+        fault_free_makespan,
+        fault_free_qps,
+        fault_free_p99,
+    }
+}
+
+/// Outcome of the single-card graceful-degradation probe behind the `db`
+/// block of `BENCH_chaos.json`.
+#[derive(Debug, Clone)]
+pub struct ChaosDbOutcome {
+    pub queries: usize,
+    pub downgrades: u64,
+    pub retries: u64,
+    pub faults_injected: u64,
+    /// Every degraded result compared bit-identical to the CPU executor.
+    pub matches_cpu: bool,
+}
+
+/// Drive the `db::Executor` degradation path under chaos: for any mix but
+/// `none`, a dense engine-killing schedule makes every offload fail
+/// terminally, so the executor must finish each query on the CPU —
+/// bit-identical — recording one downgrade per query. The fleet path
+/// above never degrades (it fails over to another card instead), so this
+/// probe is where the chaos artifact's `downgrades` comes from.
+pub fn run_chaos_db(cfg: &HbmConfig, mix: &str) -> ChaosDbOutcome {
+    use crate::db::{Catalog, Column, Executor, FpgaAccelerator, Plan, Table};
+    use crate::fault::{Fault, ScheduledFault};
+    use crate::hbm::shim::ENGINE_PORTS;
+
+    let mut cat = Catalog::new();
+    cat.register(Table::new(
+        "chaos",
+        vec![Column::u32("v", (0..300_000).collect())],
+    ));
+    let plans = vec![
+        Plan::scan("chaos", "v").select(10_000, 250_000),
+        Plan::scan("chaos", "v")
+            .project(Plan::scan("chaos", "v").select(40_000, 90_000)),
+    ];
+
+    let armed = if mix == "none" {
+        FaultPlan::none()
+    } else {
+        // Kill every engine port on a 1 µs grid: no attempt can hold an
+        // engine long enough, so each query burns its retry budget and
+        // the executor must degrade.
+        let mut faults = Vec::new();
+        for step in 0..8_000u32 {
+            for port in 0..ENGINE_PORTS {
+                faults.push(ScheduledFault {
+                    at: 1e-9 + f64::from(step) * 1e-6,
+                    card: 0,
+                    fault: Fault::EngineFault { port },
+                });
+            }
+        }
+        FaultPlan { mix: "db-dense", seed: 0, cards: 1, faults }
+    };
+
+    let mut acc = FpgaAccelerator::new(cfg.clone());
+    acc.arm_faults(&armed);
+    let mut matches_cpu = true;
+    for plan in &plans {
+        let cpu = Executor::cpu(&cat, 2).run(plan);
+        let degraded = Executor::accelerated(&cat, 2, &mut acc).run(plan);
+        matches_cpu &= cpu == degraded;
+    }
+    ChaosDbOutcome {
+        queries: plans.len(),
+        downgrades: acc.downgrades(),
+        retries: acc.retries(),
+        faults_injected: acc.faults_injected(),
+        matches_cpu,
+    }
+}
+
+/// Render the chaos summary: chaos-run numbers next to the fault-free
+/// twin's.
+pub fn render_chaos(o: &ChaosOutcome, db: &ChaosDbOutcome) -> String {
+    let mut t = Table::new(
+        "chaos: seeded fault injection over the fleet \
+         (simulated device time)",
+        &["metric", "chaos", "fault-free"],
+    );
+    t.row(vec![
+        "completed".to_string(),
+        format!("{}/{}", o.completed, o.submitted),
+        format!("{}/{}", o.submitted, o.submitted),
+    ]);
+    t.row(vec!["wrong".to_string(), o.wrong.to_string(), "0".to_string()]);
+    t.row(vec!["lost".to_string(), o.lost.to_string(), "0".to_string()]);
+    t.row(vec![
+        "failed (typed)".to_string(),
+        o.failed.to_string(),
+        "0".to_string(),
+    ]);
+    t.row(vec![
+        "faults injected".to_string(),
+        o.faults_injected.to_string(),
+        "0".to_string(),
+    ]);
+    t.row(vec!["retries".to_string(), o.retries.to_string(), "0".to_string()]);
+    t.row(vec![
+        "failovers".to_string(),
+        o.failovers.to_string(),
+        "0".to_string(),
+    ]);
+    t.row(vec![
+        "downgrades (db)".to_string(),
+        db.downgrades.to_string(),
+        "0".to_string(),
+    ]);
+    t.row(vec![
+        "makespan".to_string(),
+        format!("{:.3} ms", o.makespan * 1e3),
+        format!("{:.3} ms", o.fault_free_makespan * 1e3),
+    ]);
+    t.row(vec![
+        "goodput".to_string(),
+        format!("{:.0} qps", o.goodput_qps),
+        format!("{:.0} qps", o.fault_free_qps),
+    ]);
+    t.row(vec![
+        "p99 latency".to_string(),
+        format!("{:.3} ms", o.p99_latency * 1e3),
+        format!("{:.3} ms", o.fault_free_p99 * 1e3),
+    ]);
+    t.render()
+}
+
 /// Render the fleet comparison table: per mix × router, with per-card
 /// job counts.
 pub fn render_fleet(bench: &FleetBench) -> String {
@@ -835,6 +1125,83 @@ fn fleet_json(out: &mut String, bench: &FleetBench) {
     }
     out.push_str("    }\n");
     out.push_str("  }\n");
+}
+
+/// Machine-readable chaos artifact (`BENCH_chaos.json`, hand-rolled
+/// JSON). The jq paths CI asserts on: `.chaos.lost == 0`,
+/// `.chaos.wrong == 0`, `.chaos.failovers`, `.chaos.downgrades`,
+/// `.chaos.goodput_qps`, and the fault-free baseline under
+/// `.chaos.fault_free.qps`.
+pub fn chaos_json(
+    spec: &ServeSpec,
+    policy: Policy,
+    host_bandwidth: f64,
+    o: &ChaosOutcome,
+    db: &ChaosDbOutcome,
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"chaos\",\n");
+    out.push_str(&format!("  \"mix\": \"{}\",\n", o.mix));
+    out.push_str(&format!("  \"seed\": {},\n", o.seed));
+    out.push_str(&format!("  \"cards\": {},\n", o.cards));
+    out.push_str(&format!("  \"router\": \"{}\",\n", o.router.name()));
+    out.push_str(&format!("  \"policy\": \"{}\",\n", policy.name()));
+    out.push_str(&format!("  \"clients\": {},\n", spec.clients));
+    out.push_str(&format!("  \"queries\": {},\n", spec.queries));
+    out.push_str(&format!("  \"rows\": {},\n", spec.rows));
+    out.push_str(&format!("  \"workload_seed\": {},\n", spec.seed));
+    out.push_str(&format!("  \"cache_bytes\": {},\n", spec.cache_bytes));
+    out.push_str(&format!(
+        "  \"host_bandwidth\": {},\n",
+        json_f(host_bandwidth)
+    ));
+    out.push_str("  \"chaos\": {\n");
+    out.push_str(&format!("    \"submitted\": {},\n", o.submitted));
+    out.push_str(&format!("    \"completed\": {},\n", o.completed));
+    out.push_str(&format!("    \"wrong\": {},\n", o.wrong));
+    out.push_str(&format!("    \"lost\": {},\n", o.lost));
+    out.push_str(&format!("    \"failed\": {},\n", o.failed));
+    out.push_str(&format!(
+        "    \"faults_injected\": {},\n",
+        o.faults_injected
+    ));
+    out.push_str(&format!("    \"retries\": {},\n", o.retries));
+    out.push_str(&format!("    \"failovers\": {},\n", o.failovers));
+    out.push_str(&format!("    \"downgrades\": {},\n", db.downgrades));
+    out.push_str(&format!("    \"makespan_s\": {},\n", json_f(o.makespan)));
+    out.push_str(&format!(
+        "    \"goodput_qps\": {},\n",
+        json_f(o.goodput_qps)
+    ));
+    out.push_str(&format!(
+        "    \"p99_latency_s\": {},\n",
+        json_f(o.p99_latency)
+    ));
+    out.push_str("    \"fault_free\": {\n");
+    out.push_str(&format!(
+        "      \"makespan_s\": {},\n",
+        json_f(o.fault_free_makespan)
+    ));
+    out.push_str(&format!("      \"qps\": {},\n", json_f(o.fault_free_qps)));
+    out.push_str(&format!(
+        "      \"p99_latency_s\": {}\n",
+        json_f(o.fault_free_p99)
+    ));
+    out.push_str("    }\n");
+    out.push_str("  },\n");
+    out.push_str("  \"db\": {\n");
+    out.push_str(&format!("    \"queries\": {},\n", db.queries));
+    out.push_str(&format!("    \"downgrades\": {},\n", db.downgrades));
+    out.push_str(&format!("    \"retries\": {},\n", db.retries));
+    out.push_str(&format!(
+        "    \"faults_injected\": {},\n",
+        db.faults_injected
+    ));
+    out.push_str(&format!("    \"matches_cpu\": {}\n", db.matches_cpu));
+    out.push_str("  }\n");
+    out.push_str("}\n");
+    out
 }
 
 /// Machine-readable benchmark report (hand-rolled JSON: the offline crate
@@ -1130,6 +1497,100 @@ mod tests {
         assert!(table.contains("affinity"));
         assert!(table.contains("round-robin"));
         assert!(table.contains("skewed"));
+    }
+
+    #[test]
+    fn chaos_run_recovers_every_ticket_under_injected_outages() {
+        use crate::fault::{Fault, ScheduledFault};
+        use crate::hbm::shim::ENGINE_PORTS;
+        let spec = tiny_spec();
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        // Dense engine kills on card 0 plus an early outage window: half
+        // the round-robin placements must fail over to card 1.
+        let mut faults: Vec<ScheduledFault> = (0..400u32)
+            .flat_map(|step| {
+                (0..ENGINE_PORTS).map(move |port| ScheduledFault {
+                    at: 1e-9 + f64::from(step) * 1e-6,
+                    card: 0,
+                    fault: Fault::EngineFault { port },
+                })
+            })
+            .collect();
+        faults.push(ScheduledFault {
+            at: 5e-6,
+            card: 0,
+            fault: Fault::CardDown { window: 400e-6 },
+        });
+        let plan = FaultPlan { mix: "custom", seed: 7, cards: 2, faults };
+        let o = run_chaos(
+            &cfg,
+            Policy::FairShare,
+            &spec,
+            2,
+            RouterKind::RoundRobin,
+            crate::fleet::DEFAULT_HOST_BANDWIDTH,
+            &plan,
+        );
+        assert_eq!(o.submitted, spec.queries);
+        assert_eq!(o.wrong, 0, "no surviving output may diverge");
+        assert_eq!(o.lost, 0, "every ticket completes or fails typed");
+        assert_eq!(o.completed + o.failed, o.submitted);
+        assert!(o.faults_injected > 0, "the outage must actually fire");
+        assert!(o.failovers > 0, "the down card's queue must move");
+        let db = run_chaos_db(&cfg, "standard");
+        assert!(db.matches_cpu, "degraded results must stay bit-identical");
+        assert_eq!(
+            db.downgrades,
+            db.queries as u64,
+            "every probed query must degrade to the CPU"
+        );
+        assert!(db.retries > 0);
+        let json = chaos_json(
+            &spec,
+            Policy::FairShare,
+            crate::fleet::DEFAULT_HOST_BANDWIDTH,
+            &o,
+            &db,
+        );
+        assert!(json.contains("\"bench\": \"chaos\""));
+        assert!(json.contains("\"goodput_qps\""));
+        assert!(json.contains("\"fault_free\""));
+        assert!(json.contains("\"downgrades\""));
+        assert!(json.contains("\"matches_cpu\": true"));
+        assert!(!json.contains("null"), "chaos stats must be finite");
+        let table = render_chaos(&o, &db);
+        assert!(table.contains("failovers"));
+        assert!(table.contains("goodput"));
+    }
+
+    #[test]
+    fn chaos_with_no_faults_matches_the_fault_free_twin_exactly() {
+        let spec = tiny_spec();
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let o = run_chaos(
+            &cfg,
+            Policy::FairShare,
+            &spec,
+            2,
+            RouterKind::Affinity,
+            crate::fleet::DEFAULT_HOST_BANDWIDTH,
+            &FaultPlan::none(),
+        );
+        assert_eq!(o.completed, o.submitted);
+        assert_eq!((o.wrong, o.lost, o.failed), (0, 0, 0));
+        assert_eq!(o.faults_injected, 0);
+        assert_eq!(o.retries, 0);
+        assert_eq!(o.failovers, 0);
+        assert_eq!(
+            o.makespan, o.fault_free_makespan,
+            "an unarmed chaos run is the fault-free run, bit for bit"
+        );
+        assert_eq!(o.goodput_qps, o.fault_free_qps);
+        assert_eq!(o.p99_latency, o.fault_free_p99);
+        let db = run_chaos_db(&cfg, "none");
+        assert_eq!(db.downgrades, 0);
+        assert_eq!(db.faults_injected, 0);
+        assert!(db.matches_cpu);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use super::ops::{self, AggKind, AggResult};
 use super::pipeline::{PipelineError, PipelineRequest};
 use super::request::OffloadRequest;
 use super::udf::FpgaAccelerator;
-use crate::coordinator::ColumnKey;
+use crate::coordinator::{ColumnKey, JobOutput};
 
 /// Logical plan nodes (tree; children boxed).
 #[derive(Debug, Clone)]
@@ -268,6 +268,14 @@ impl<'a> Executor<'a> {
     }
 
     /// Execute `plan`, returning the root intermediate or a typed error.
+    ///
+    /// Offload failure is not an error: when an injected fault schedule
+    /// (or a deadline) kills a stage terminally, the executor degrades
+    /// gracefully — it records the downgrade on the card (stats counter
+    /// plus a `Downgraded` trace event) and finishes the plan with the
+    /// CPU operators, bit-identical to the accelerated result. Only
+    /// scheduler-wide conditions (stalls, bad submissions) still panic,
+    /// exactly as the blocking `wait` always has.
     pub fn run(&mut self, plan: &Plan) -> Result<Intermediate, ExecError> {
         if !self.pipelined || self.accelerator.is_none() {
             return self.run_walk(plan);
@@ -277,7 +285,25 @@ impl<'a> Executor<'a> {
             unreachable!("accelerator presence checked above")
         };
         let mut handle = acc.try_submit_plan(request)?;
-        Ok(handle.wait())
+        match handle.try_wait() {
+            Ok(result) => Ok(result),
+            Err(err) if err.failed_job().is_some() => {
+                handle.record_downgrade();
+                drop(handle);
+                self.run_on_cpu(plan)
+            }
+            Err(err) => panic!("card cannot make progress: {err}"),
+        }
+    }
+
+    /// Finish `plan` with the CPU operators regardless of an attached
+    /// accelerator — the graceful-degradation tail of [`run`] and of the
+    /// operator-at-a-time offload arms.
+    fn run_on_cpu(&mut self, plan: &Plan) -> Result<Intermediate, ExecError> {
+        let acc = self.accelerator.take();
+        let result = self.run_walk(plan);
+        self.accelerator = acc;
+        result
     }
 
     /// The materializing tree walk: CPU operators, or (without
@@ -315,7 +341,21 @@ impl<'a> Executor<'a> {
                         let req = OffloadRequest::select(*lo, *hi)
                             .on_shared(shared)
                             .keyed(key);
-                        acc.submit(req).wait_selection().0
+                        let mut handle = acc.submit(req);
+                        match handle.try_wait() {
+                            Ok((JobOutput::Selection(v), _)) => v,
+                            Ok((other, _)) => {
+                                unreachable!("selection returned {other:?}")
+                            }
+                            Err(err) if err.failed_job().is_some() => {
+                                handle.record_downgrade();
+                                ops::range_select(&col, *lo, *hi, self.threads)
+                                    .into()
+                            }
+                            Err(err) => {
+                                panic!("card cannot make progress: {err}")
+                            }
+                        }
                     }
                     None => ops::range_select(&col, *lo, *hi, self.threads).into(),
                 };
@@ -349,7 +389,21 @@ impl<'a> Executor<'a> {
                         let req = OffloadRequest::join_shared(build_shared, probe_shared)
                             .keyed(s_key)
                             .probe_keyed(l_key);
-                        acc.submit(req).wait_join().0
+                        let mut handle = acc.submit(req);
+                        match handle.try_wait() {
+                            Ok((JobOutput::Join(pairs), _)) => pairs,
+                            Ok((other, _)) => {
+                                unreachable!("join returned {other:?}")
+                            }
+                            Err(err) if err.failed_job().is_some() => {
+                                handle.record_downgrade();
+                                ops::hash_join(&build, &probe, self.threads)
+                                    .into()
+                            }
+                            Err(err) => {
+                                panic!("card cannot make progress: {err}")
+                            }
+                        }
                     }
                     None => ops::hash_join(&build, &probe, self.threads).into(),
                 };
@@ -478,6 +532,58 @@ mod tests {
         let want = norm(cpu);
         assert_eq!(norm(piped), want);
         assert_eq!(norm(blocking), want);
+    }
+
+    #[test]
+    fn executor_degrades_to_cpu_after_terminal_faults() {
+        use crate::fault::{Fault, FaultPlan, ScheduledFault};
+        use crate::hbm::shim::ENGINE_PORTS;
+
+        let mut cat = Catalog::new();
+        cat.register(Table::new(
+            "big",
+            vec![Column::u32("okey", (0..400_000).collect())],
+        ));
+        let plan = Plan::scan("big", "okey").select(10_000, 350_000);
+        let want = Executor::cpu(&cat, 2).run(&plan).unwrap();
+
+        // Kill every engine port on a 1 µs grid from t = 0: the offload
+        // can never hold an engine long enough, so it faults out after
+        // MAX_ATTEMPTS and the executor must finish on the CPU.
+        let mut faults = Vec::new();
+        for step in 0..4_000u32 {
+            for port in 0..ENGINE_PORTS {
+                faults.push(ScheduledFault {
+                    at: 1e-9 + f64::from(step) * 1e-6,
+                    card: 0,
+                    fault: Fault::EngineFault { port },
+                });
+            }
+        }
+        let armed = FaultPlan { mix: "custom", seed: 0, cards: 1, faults };
+
+        for pipelined in [true, false] {
+            let mut acc = FpgaAccelerator::new(crate::hbm::HbmConfig::default());
+            acc.set_tracing(true);
+            acc.arm_faults(&armed);
+            let mut ex = Executor::accelerated(&cat, 2, &mut acc);
+            if !pipelined {
+                ex = ex.operator_at_a_time();
+            }
+            let got = ex.run(&plan).unwrap();
+            assert_eq!(got, want, "degraded result must stay bit-identical");
+            assert_eq!(acc.downgrades(), 1, "pipelined={pipelined}");
+            assert_eq!(
+                acc.retries(),
+                u64::from(crate::fault::MAX_ATTEMPTS - 1),
+                "terminal failure retries all but the last attempt"
+            );
+            let downgraded = acc
+                .take_trace()
+                .into_iter()
+                .any(|e| matches!(e, crate::trace::Event::Downgraded { .. }));
+            assert!(downgraded, "degradation must reach the trace");
+        }
     }
 
     #[test]

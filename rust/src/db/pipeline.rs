@@ -209,6 +209,7 @@ pub struct PipelineRequest {
     finish: Finish,
     engines: Option<usize>,
     client: usize,
+    deadline: Option<f64>,
 }
 
 impl PipelineRequest {
@@ -222,6 +223,7 @@ impl PipelineRequest {
             finish,
             engines: None,
             client: 0,
+            deadline: None,
         })
     }
 
@@ -239,6 +241,18 @@ impl PipelineRequest {
     /// Tag the submitting client (reporting only).
     pub fn client(mut self, id: usize) -> Self {
         self.client = id;
+        self
+    }
+
+    /// Give every stage a queueing budget of `budget` card-seconds from
+    /// submission. Deadlines are non-preemptive: a stage still *waiting*
+    /// when its budget expires fails with
+    /// [`CoordinatorError::DeadlineExceeded`] (and the failure cascades
+    /// down the DAG), while a stage already copying or computing runs to
+    /// completion and delivers late instead. A non-finite or non-positive
+    /// budget is already expired.
+    pub fn deadline(mut self, budget: f64) -> Self {
+        self.deadline = Some(budget);
         self
     }
 
@@ -625,6 +639,7 @@ fn stage_to_spec(
     ids: &[usize],
     engines: usize,
     client: usize,
+    deadline: Option<f64>,
 ) -> JobSpec {
     let mut deps: Vec<DepInput> = Vec::new();
     let mut inputs = stage.inputs.into_iter();
@@ -639,6 +654,7 @@ fn stage_to_spec(
                 .with_deps(deps)
                 .with_max_engines(engines)
                 .with_client(client)
+                .with_deadline(deadline)
         }
         StageOp::Join => {
             let (Some(s_input), Some(l_input)) = (inputs.next(), inputs.next())
@@ -661,6 +677,7 @@ fn stage_to_spec(
                 .with_deps(deps)
                 .with_max_engines(engines.min(super::request::MAX_JOIN_ENGINES))
                 .with_client(client)
+                .with_deadline(deadline)
         }
     }
 }
@@ -735,7 +752,7 @@ impl FpgaAccelerator {
         if analysis.is_rejected() {
             return Err(PipelineError::Rejected(analysis.error_diagnostics()));
         }
-        let PipelineRequest { stages, finish, engines: cap, client } = request;
+        let PipelineRequest { stages, finish, engines: cap, client, deadline } = request;
         let engines = cap.unwrap_or(self.engines).clamp(1, ENGINE_PORTS);
         // Route the whole DAG as one unit: score the plan's keyed host
         // columns like a single job's inputs and keep every stage on the
@@ -756,7 +773,7 @@ impl FpgaAccelerator {
         self.sync_card(&mut coord);
         let mut ids: Vec<usize> = Vec::with_capacity(stages.len());
         for stage in stages {
-            let spec = stage_to_spec(stage, &ids, engines, client);
+            let spec = stage_to_spec(stage, &ids, engines, client, deadline);
             match coord.try_submit(spec) {
                 Ok(id) => ids.push(id),
                 // The graph pass proved every parent is an earlier stage
@@ -772,6 +789,7 @@ impl FpgaAccelerator {
             outputs: BTreeMap::new(),
             records: BTreeMap::new(),
             result: None,
+            failed: None,
         })
     }
 }
@@ -870,6 +888,9 @@ pub struct PipelineHandle {
     outputs: BTreeMap<usize, JobOutput>,
     records: BTreeMap<usize, JobRecord>,
     result: Option<Intermediate>,
+    /// First terminal stage failure, cached so repeat waits stay
+    /// idempotent on the failure path too.
+    failed: Option<CoordinatorError>,
 }
 
 impl std::fmt::Debug for PipelineHandle {
@@ -920,22 +941,34 @@ impl PipelineHandle {
 
     /// Drive the card until every stage completed (co-scheduled jobs
     /// from other pipelines progress too), then evaluate the host-side
-    /// finisher. Scheduling failures surface as typed errors.
+    /// finisher. Scheduling failures surface as typed errors; a terminal
+    /// per-job failure (faulted out, deadline missed, cascaded parent
+    /// failure) ends the wait with that stage's error, cached so repeat
+    /// waits return it again.
     fn drive_to_completion(&mut self) -> Result<(), CoordinatorError> {
         loop {
             self.try_claim();
             if self.complete() {
                 break;
             }
+            if let Some(err) = &self.failed {
+                return Err(err.clone());
+            }
             let coord = Arc::clone(&self.coord);
             let mut coord = lock_coord(&coord);
             for (si, &id) in self.stage_ids.iter().enumerate() {
-                if !self.outputs.contains_key(&si) {
-                    assert!(
-                        coord.is_in_flight(id),
-                        "pipeline stage job {id} vanished without completing"
-                    );
+                if self.outputs.contains_key(&si) {
+                    continue;
                 }
+                if let Some((err, _spec)) = coord.take_failure(id) {
+                    drop(coord);
+                    self.failed = Some(err.clone());
+                    return Err(err);
+                }
+                assert!(
+                    coord.is_in_flight(id),
+                    "pipeline stage job {id} vanished without completing"
+                );
             }
             coord.step()?;
         }
@@ -943,6 +976,15 @@ impl PipelineHandle {
             self.result = Some(eval_finish(&self.finish, &self.outputs));
         }
         Ok(())
+    }
+
+    /// Record the cached terminal failure as a CPU downgrade on the
+    /// card's clock — the db executor calls this right before finishing
+    /// the plan with CPU operators (graceful degradation).
+    pub(crate) fn record_downgrade(&self) {
+        if let Some(job) = self.failed.as_ref().and_then(|e| e.failed_job()) {
+            lock_coord(&self.coord).record_downgrade(job);
+        }
     }
 
     /// Block until the whole plan completes; returns the root
@@ -1208,6 +1250,101 @@ mod tests {
         }
         // An untraced job id yields None, not a zeroed breakdown.
         assert!(crate::trace::job_breakdown(&events, 10_000).is_none());
+    }
+
+    #[test]
+    fn faulted_pipeline_releases_intermediate_pins_even_when_abandoned() {
+        use crate::fault::{Fault, FaultPlan, ScheduledFault};
+
+        let mut cat = Catalog::new();
+        cat.register(Table::new(
+            "big",
+            vec![
+                Column::u32("okey", (0..200_000).collect()),
+                Column::u32("cust", (0..200_000).map(|i| i % 1024).collect()),
+            ],
+        ));
+        cat.register(Table::new(
+            "dim",
+            vec![Column::u32("ckey", (0..1024).collect())],
+        ));
+        // The join's build side gathers `cust` at the select's output, so
+        // stage 1 consumes stage 0's candidates card-side — the pinned
+        // transient intermediate whose release this test guards.
+        let plan = Plan::scan("big", "cust")
+            .project(Plan::scan("big", "okey").select(10_000, 150_000))
+            .join(Plan::scan("dim", "ckey"));
+        let request = PipelineRequest::from_plan(&plan, &cat).unwrap();
+        assert_eq!(request.n_stages(), 2);
+
+        // Fault-free probe: when does the parent stage retire? The
+        // simulation is deterministic, so the chaos run below hits the
+        // same instant.
+        let mut acc = FpgaAccelerator::new(HbmConfig::default());
+        let t_parent = {
+            let mut h = acc.submit_plan(request.clone());
+            h.wait();
+            h.report().unwrap().stages[0].finish_time
+        };
+
+        // Chaos run: from just after the parent retires, kill every
+        // engine port on a 1 µs grid long enough to exhaust the join
+        // stage's attempts.
+        let t0 = t_parent + 1e-9;
+        let mut faults = Vec::new();
+        for step in 0..2_000u32 {
+            for port in 0..ENGINE_PORTS {
+                faults.push(ScheduledFault {
+                    at: t0 + f64::from(step) * 1e-6,
+                    card: 0,
+                    fault: Fault::EngineFault { port },
+                });
+            }
+        }
+        let armed = FaultPlan { mix: "custom", seed: 0, cards: 1, faults };
+        let mut acc = FpgaAccelerator::new(HbmConfig::default());
+        acc.arm_faults(&armed);
+        let mut handle = acc.try_submit_plan(request).unwrap();
+        let err = handle.try_wait().unwrap_err();
+        assert!(
+            matches!(
+                err,
+                CoordinatorError::Faulted { .. }
+                    | CoordinatorError::ParentFailed { .. }
+            ),
+            "{err}"
+        );
+        let coord = Arc::clone(&handle.coord);
+        drop(handle); // abandoned mid-flight, like a client giving up
+        assert_eq!(
+            lock_coord(&coord).pinned_cache_bytes(),
+            0,
+            "dead DAG must release its pinned intermediate"
+        );
+    }
+
+    #[test]
+    fn pipeline_deadline_expires_queued_stages_with_a_typed_error() {
+        let cat = catalog();
+        let mut acc = FpgaAccelerator::new(HbmConfig::default());
+        let plan = Plan::scan("orders", "cust")
+            .project(Plan::scan("orders", "okey").select(10, 40))
+            .join(Plan::scan("customers", "ckey"));
+        let request = PipelineRequest::from_plan(&plan, &cat)
+            .unwrap()
+            .deadline(1e-9);
+        let mut handle = acc.try_submit_plan(request).unwrap();
+        let child = handle.ids()[1];
+        // The select admits at submission time (its budget has not
+        // elapsed yet), but the dependent join is still queued when the
+        // clock first moves past the budget.
+        let err = handle.try_wait().unwrap_err();
+        assert_eq!(err, CoordinatorError::DeadlineExceeded { job: child });
+        // Idempotent on the failure path, like the success path.
+        assert_eq!(
+            handle.try_wait().unwrap_err(),
+            CoordinatorError::DeadlineExceeded { job: child }
+        );
     }
 
     #[test]

@@ -104,6 +104,9 @@ pub struct OffloadRequest {
     /// Engine cap; `None` inherits the accelerator's default.
     engines: Option<usize>,
     client: usize,
+    /// Card-seconds this job may spend *queued* before the coordinator
+    /// expires it (see `JobSpec::deadline`); `None` disables the check.
+    deadline: Option<f64>,
 }
 
 impl OffloadRequest {
@@ -114,6 +117,7 @@ impl OffloadRequest {
             payload: Payload::Select { data: None, lo, hi, key: None },
             engines: None,
             client: 0,
+            deadline: None,
         }
     }
 
@@ -139,6 +143,7 @@ impl OffloadRequest {
             },
             engines: None,
             client: 0,
+            deadline: None,
         }
     }
 
@@ -165,6 +170,7 @@ impl OffloadRequest {
             payload: Payload::Sgd { features, labels, n_features, grid, key: None },
             engines: None,
             client: 0,
+            deadline: None,
         }
     }
 
@@ -254,6 +260,18 @@ impl OffloadRequest {
         self
     }
 
+    /// Expire the job if it is still *queued* `budget` card-seconds after
+    /// submission: the handle's wait then returns
+    /// [`CoordinatorError::DeadlineExceeded`](crate::coordinator::CoordinatorError)
+    /// instead of blocking. Dispatch is non-preemptive — a job that made
+    /// it onto engines always runs its stage to the next event — and a
+    /// non-finite or non-positive budget is already expired at the first
+    /// scheduling point.
+    pub fn deadline(mut self, budget: f64) -> Self {
+        self.deadline = Some(budget);
+        self
+    }
+
     /// The workload kind this request describes.
     pub fn kind_name(&self) -> &'static str {
         payload_name(&self.payload)
@@ -323,7 +341,8 @@ impl OffloadRequest {
         Ok(JobSpec::new(kind)
             .with_keys(keys)
             .with_max_engines(engines)
-            .with_client(self.client))
+            .with_client(self.client)
+            .with_deadline(self.deadline))
     }
 }
 
@@ -415,6 +434,18 @@ mod tests {
             .into_spec(4)
             .unwrap();
         assert_eq!(spec.max_engines, 4);
+    }
+
+    #[test]
+    fn deadline_rides_through_to_the_spec() {
+        let spec = OffloadRequest::select(0, 1)
+            .on(&[1])
+            .deadline(2e-3)
+            .into_spec(4)
+            .unwrap();
+        assert_eq!(spec.deadline, Some(2e-3));
+        let spec = OffloadRequest::select(0, 1).on(&[1]).into_spec(4).unwrap();
+        assert_eq!(spec.deadline, None);
     }
 
     #[test]

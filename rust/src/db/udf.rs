@@ -209,7 +209,7 @@ impl FpgaAccelerator {
         self.sync_card(&mut coord);
         let id = coord.submit(spec);
         drop(coord);
-        Ok(JobHandle { id, coord: arc, cached: None })
+        Ok(JobHandle { id, coord: arc, cached: None, failed: None })
     }
 
     /// The card a submission lands on: snapshot each card's residency of
@@ -379,6 +379,46 @@ impl FpgaAccelerator {
         }
         (parallel, serial)
     }
+
+    /// Arm a deterministic fault schedule on every card. Each card draws
+    /// its own share of `plan` (see [`crate::fault`]); an empty plan is a
+    /// no-op, leaving the zero-overhead unarmed path intact. Arm *before*
+    /// submitting work — faults fire from each card's current clock on.
+    pub fn arm_faults(&self, plan: &crate::fault::FaultPlan) {
+        if plan.is_empty() {
+            return;
+        }
+        for card in &self.cards {
+            super::pipeline::lock_coord(card).arm_faults(plan);
+        }
+    }
+
+    /// Faults the deployment's cards have injected so far, summed.
+    pub fn faults_injected(&self) -> u64 {
+        self.cards
+            .iter()
+            .map(|card| super::pipeline::lock_coord(card).faults_injected())
+            .sum()
+    }
+
+    /// Fault-aborted attempts that re-entered admission, summed across
+    /// cards (terminal failures are not retries).
+    pub fn retries(&self) -> u64 {
+        self.cards
+            .iter()
+            .map(|card| super::pipeline::lock_coord(card).retries())
+            .sum()
+    }
+
+    /// Stages the db executor finished on the CPU after their offload
+    /// failed terminally, summed across cards (graceful degradation —
+    /// see [`Executor`](super::exec::Executor)).
+    pub fn downgrades(&self) -> u64 {
+        self.cards
+            .iter()
+            .map(|card| super::pipeline::lock_coord(card).downgrades())
+            .sum()
+    }
 }
 
 /// An in-flight offload. Obtained from [`FpgaAccelerator::submit`]; holds
@@ -407,6 +447,9 @@ pub struct JobHandle {
     id: usize,
     coord: Arc<Mutex<Coordinator>>,
     cached: Option<(JobOutput, OffloadTiming)>,
+    /// Terminal failure already claimed from the coordinator — kept so
+    /// repeated waits stay idempotent on the failure path too.
+    failed: Option<CoordinatorError>,
 }
 
 impl std::fmt::Debug for JobHandle {
@@ -446,14 +489,25 @@ impl JobHandle {
     }
 
     /// Drive the card until the job completes (so co-scheduled jobs
-    /// progress too), surfacing scheduling failures as typed errors.
+    /// progress too), surfacing scheduling failures — and, with a fault
+    /// schedule or deadline in play, this job's own *terminal* failure —
+    /// as typed errors. A claimed failure is cached so repeated waits
+    /// keep returning it instead of tripping the vanished-job assert.
     fn claim_blocking(&mut self) -> Result<(), CoordinatorError> {
         loop {
             self.try_claim();
             if self.cached.is_some() {
                 return Ok(());
             }
+            if let Some(err) = &self.failed {
+                return Err(err.clone());
+            }
             let mut coord = self.coord();
+            if let Some((err, _spec)) = coord.take_failure(self.id) {
+                drop(coord);
+                self.failed = Some(err.clone());
+                return Err(err);
+            }
             assert!(
                 coord.is_in_flight(self.id),
                 "job {} vanished from the coordinator without completing",
@@ -516,6 +570,15 @@ impl JobHandle {
     pub fn wait_sgd(self) -> (Arc<[Vec<f32>]>, OffloadTiming) {
         let (output, timing) = self.take();
         (output.expect_sgd(), timing)
+    }
+
+    /// Record the cached terminal failure as a CPU downgrade on the
+    /// card's clock — the db executor calls this right before finishing
+    /// the stage with CPU operators (graceful degradation).
+    pub(crate) fn record_downgrade(&self) {
+        if let Some(job) = self.failed.as_ref().and_then(|e| e.failed_job()) {
+            self.coord().record_downgrade(job);
+        }
     }
 }
 

@@ -274,6 +274,44 @@ impl SimSession {
         (engine, m.stats.clone())
     }
 
+    /// Abort a member's engine at the current time (fault injection):
+    /// the in-flight phase, if any, is dropped on the floor and the
+    /// engine box is discarded — its partial functional results are
+    /// unrecoverable by design, a retry re-dispatches from scratch.
+    /// HBM bytes the aborted phase already moved stay accounted
+    /// (pro-rated on `done_bytes`), so chaos statistics see the wasted
+    /// traffic. The member slot frees for reuse and no further event is
+    /// emitted for it. Also accepts members whose engine already
+    /// finished but was not yet taken (a killed job's done co-members).
+    /// Panics if the engine was already taken.
+    pub fn abort_engine(&mut self, member: usize) -> EngineStats {
+        let m = &mut self.members[member];
+        assert!(m.engine.is_some(), "cannot abort a taken engine");
+        if let Some(ap) = m.active.take() {
+            let per_unit_total: f64 = ap.phase.flows.iter().map(|f| f.per_unit).sum();
+            m.stats.hbm_bytes += (ap.done_bytes * per_unit_total).round() as u64;
+        }
+        m.engine = None;
+        m.stats.finish_time = self.now;
+        let stats = m.stats.clone();
+        self.free_members.push(member);
+        stats
+    }
+
+    /// Abort an in-flight transfer at the current time (fault
+    /// injection): it stops consuming link bandwidth from the next
+    /// event on and never emits [`SimEvent::TransferDone`]. Link-busy
+    /// and overlap seconds accrued while it ran stay accounted — they
+    /// accrue per inter-event interval, so a truncated transfer span
+    /// covering exactly its active window keeps the trace validator's
+    /// link-busy union identity. Panics if the transfer already
+    /// completed.
+    pub fn abort_transfer(&mut self, transfer: usize) {
+        let t = &mut self.transfers[transfer];
+        assert!(!t.done, "cannot abort a finished transfer");
+        t.done = true;
+    }
+
     /// Advance to the next completion event(s). Returns every
     /// [`SimEvent`] landing at the new `now` — at least one, unless the
     /// session is idle (empty return). Internal phase hand-offs of
@@ -1084,6 +1122,59 @@ mod tests {
         let events = session.advance(&mut mem);
         assert_eq!(events, vec![SimEvent::TransferDone { transfer: t2 }]);
         assert!((session.now() - (expect + 2e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aborted_engine_frees_its_slot_and_keeps_partial_bytes() {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let mut mem = HbmMemory::new();
+        let mut session = SimSession::new(cfg.clone());
+        let total = 256 * MIB;
+        // Two engines on separate segments; the second finishes first
+        // because it is half the size.
+        let (a, _) = session.add_engine(streamer(0, total, f64::INFINITY), &mut mem);
+        let (b, _) = session.add_engine(streamer(256 * MIB, total / 2, f64::INFINITY), &mut mem);
+        let events = session.advance(&mut mem);
+        assert_eq!(events, vec![SimEvent::EngineDone { member: b }]);
+        // Abort the still-running engine mid-phase: the session must go
+        // idle (no dangling phase) and the partial bytes must be about
+        // half the footprint (b finished at total/2 port-rate seconds).
+        let stats = session.abort_engine(a);
+        session.take_engine(b);
+        assert!(session.idle(), "aborted phase must not stay active");
+        let half = (total / 2) as f64;
+        assert!(
+            (stats.hbm_bytes as f64 - half).abs() / half < 1e-6,
+            "partial HBM bytes pro-rated: got {}",
+            stats.hbm_bytes
+        );
+        // The freed slot is recycled by the next join.
+        let (c, _) = session.add_engine(streamer(0, MIB, f64::INFINITY), &mut mem);
+        assert!(c == a || c == b, "aborted member slot must be reusable");
+        let events = session.advance(&mut mem);
+        assert_eq!(events, vec![SimEvent::EngineDone { member: c }]);
+    }
+
+    #[test]
+    fn aborted_transfer_never_completes_and_frees_the_link() {
+        let cfg = HbmConfig::default();
+        let mut mem = HbmMemory::new();
+        let mut session = SimSession::new(cfg);
+        let bw = 1e9;
+        session.set_link_bandwidth(bw);
+        let bytes = 1u64 << 30;
+        let doomed = session.add_transfer(bytes, 0.0);
+        let survivor = session.add_transfer(bytes, 0.0);
+        session.abort_transfer(doomed);
+        // Only the survivor remains: it gets the whole link to itself.
+        let events = session.advance(&mut mem);
+        assert_eq!(events, vec![SimEvent::TransferDone { transfer: survivor }]);
+        let expect = bytes as f64 / bw;
+        assert!(
+            (session.now() / expect - 1.0).abs() < 1e-9,
+            "aborted transfer must stop sharing the link"
+        );
+        assert!(session.idle());
     }
 
     #[test]

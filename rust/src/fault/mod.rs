@@ -1,0 +1,452 @@
+//! Deterministic fault injection for the simulated fleet.
+//!
+//! Wang et al. ("Benchmarking High Bandwidth Memory on FPGAs") show that
+//! effective HBM bandwidth is a runtime condition, not a constant — and a
+//! production offload path additionally sees transient engine faults and
+//! whole-card resets. This module gives the simulator a *seeded* model of
+//! exactly those three hazards, scheduled on the simulated card clock:
+//!
+//! - [`Fault::LinkDegrade`] — the card's OpenCAPI rate is scaled by
+//!   `factor` for `window` simulated seconds (the coordinator applies the
+//!   factor to whatever link the fleet ingress granted it);
+//! - [`Fault::EngineFault`] — the job running on `port` at the fault
+//!   event aborts its compute phase and re-enters admission with capped
+//!   exponential backoff ([`backoff_delay`]);
+//! - [`Fault::CardDown`] — the card rejects new admissions for `window`
+//!   seconds and kills its in-flight copy-ins and compute batches (a
+//!   *warm* reset: HBM residency and cache accounting survive, results
+//!   already crossing back to the host complete).
+//!
+//! # Determinism contract
+//!
+//! A [`FaultPlan`] is a pure function of `(mix, seed, cards)`: the same
+//! triple always yields the same schedule. Faults *take effect at the
+//! first scheduler event at or after* their scheduled time — the card
+//! clock is event-driven, so this quantization is what makes an entire
+//! chaos run reproducible: same seed → same fault schedule → same event
+//! interleaving → same stats, and (via retry/failover/CPU degradation)
+//! functional outputs that stay bit-identical to the fault-free run.
+//!
+//! With no plan armed the scheduler takes none of these paths: the event
+//! math of every existing benchmark (`serve`, `plan`, `bench-host`, the
+//! Fig. 2 anchors) is untouched.
+
+#![deny(clippy::disallowed_methods)]
+
+use std::collections::VecDeque;
+
+use crate::hbm::shim::ENGINE_PORTS;
+use crate::util::rng::Xoshiro256;
+
+/// Attempts a job gets on the card before it fails terminally
+/// ([`CoordinatorError::Faulted`](crate::coordinator::CoordinatorError))
+/// and the layer above must rescue it: the fleet by re-routing the spec
+/// to another card, the [`Executor`](crate::db::Executor) by finishing
+/// the stage on the CPU path.
+pub const MAX_ATTEMPTS: u32 = 3;
+
+/// First retry delay, in simulated card seconds.
+pub const BACKOFF_BASE: f64 = 20e-6;
+
+/// Ceiling on the exponential backoff, in simulated card seconds.
+pub const BACKOFF_CAP: f64 = 320e-6;
+
+/// Capped exponential backoff before attempt `attempts + 1`, in card
+/// seconds: `BACKOFF_BASE × 2^(attempts-1)`, clamped to [`BACKOFF_CAP`].
+pub fn backoff_delay(attempts: u32) -> f64 {
+    let exp = attempts.saturating_sub(1).min(16);
+    (BACKOFF_BASE * f64::from(1u32 << exp)).min(BACKOFF_CAP)
+}
+
+/// One typed fault, as it lands on a card.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Scale the card's host-link rate by `factor` for `window` seconds.
+    LinkDegrade { factor: f64, window: f64 },
+    /// Abort the compute batch running on `port` (no-op if the port is
+    /// idle at the fault event).
+    EngineFault { port: usize },
+    /// Reject admissions for `window` seconds and kill in-flight work.
+    CardDown { window: f64 },
+}
+
+impl Fault {
+    /// Short label for trace events and JSON reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fault::LinkDegrade { .. } => "link-degrade",
+            Fault::EngineFault { .. } => "engine-fault",
+            Fault::CardDown { .. } => "card-down",
+        }
+    }
+}
+
+/// A fault pinned to a card and a card-clock time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledFault {
+    /// Card-clock seconds; the fault fires at the first scheduler event
+    /// at or after this time.
+    pub at: f64,
+    /// Fleet card the fault lands on (0 for a lone coordinator).
+    pub card: usize,
+    pub fault: Fault,
+}
+
+/// A seeded, fleet-wide fault schedule — the single source every armed
+/// card filters its own share from ([`ArmedFaults::new`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Mix name this plan was generated from (`none`, `standard`,
+    /// `heavy`).
+    pub mix: &'static str,
+    pub seed: u64,
+    pub cards: usize,
+    /// Time-ordered schedule (ties keep generation order).
+    pub faults: Vec<ScheduledFault>,
+}
+
+impl FaultPlan {
+    /// The empty plan: arming it is indistinguishable from not arming
+    /// anything.
+    pub fn none() -> Self {
+        FaultPlan { mix: "none", seed: 0, cards: 0, faults: Vec::new() }
+    }
+
+    /// Whether this plan schedules any fault at all.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Number of scheduled [`Fault::CardDown`] events.
+    pub fn card_down_events(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f.fault, Fault::CardDown { .. }))
+            .count()
+    }
+
+    /// Resolve a named mix into a concrete seeded plan. Valid names:
+    /// `none`, `standard` (the acceptance mix: engine faults + link
+    /// degradation + two card outages), `heavy` (dense engine faults
+    /// that exhaust [`MAX_ATTEMPTS`] and force CPU downgrades). Returns
+    /// the unknown name on failure so CLI errors can echo it.
+    pub fn parse_mix(name: &str, seed: u64, cards: usize) -> Result<Self, String> {
+        match name {
+            "none" => Ok(Self::none()),
+            "standard" => Ok(Self::standard(seed, cards)),
+            "heavy" => Ok(Self::heavy(seed, cards)),
+            other => Err(other.to_string()),
+        }
+    }
+
+    /// The standard chaos mix: per card, periodic engine faults with
+    /// seeded port/jitter draws and occasional link-degrade windows;
+    /// fleet-wide, two card outages. Dense from t = 0 so any workload
+    /// long enough to schedule at all takes hits; events past the
+    /// workload's makespan simply never fire.
+    pub fn standard(seed: u64, cards: usize) -> Self {
+        let cards = cards.max(1);
+        let mut rng = Xoshiro256::new(seed ^ 0xFA17);
+        let mut faults = Vec::new();
+        for card in 0..cards {
+            // Engine faults: one every ~150 µs for 30 ms of card time.
+            for k in 0..200u32 {
+                let jitter = 30e-6 * rng.next_f64();
+                faults.push(ScheduledFault {
+                    at: f64::from(k) * 150e-6 + jitter,
+                    card,
+                    fault: Fault::EngineFault {
+                        port: rng.next_u32() as usize % ENGINE_PORTS,
+                    },
+                });
+            }
+            // Link degradation: ~300 µs windows at 30–70% rate.
+            for k in 0..40u32 {
+                let jitter = 100e-6 * rng.next_f64();
+                faults.push(ScheduledFault {
+                    at: f64::from(k) * 750e-6 + jitter,
+                    card,
+                    fault: Fault::LinkDegrade {
+                        factor: 0.3 + 0.4 * rng.next_f64(),
+                        window: 300e-6,
+                    },
+                });
+            }
+        }
+        // Two whole-card outages on seeded cards (a lone card takes both
+        // and rides them out on local retry after the window). The first
+        // lands ~30–50 µs in — a queued copy-in alone takes longer, so
+        // any multi-card replay that schedules at all still holds work on
+        // the down card and must exercise failover.
+        for k in 0..2u32 {
+            faults.push(ScheduledFault {
+                at: 30e-6 + f64::from(k) * 1.7e-3 + 20e-6 * rng.next_f64(),
+                card: rng.next_u32() as usize % cards,
+                fault: Fault::CardDown { window: 400e-6 },
+            });
+        }
+        sort_by_time(&mut faults);
+        FaultPlan { mix: "standard", seed, cards, faults }
+    }
+
+    /// The heavy mix: engine faults every ~20 µs sweeping all ports, so
+    /// any non-trivial job is hit more than [`MAX_ATTEMPTS`] times and
+    /// fails terminally — the mix that exercises fleet re-routing of
+    /// failed specs and the [`Executor`](crate::db::Executor) CPU
+    /// degradation ladder.
+    pub fn heavy(seed: u64, cards: usize) -> Self {
+        let cards = cards.max(1);
+        let mut rng = Xoshiro256::new(seed ^ 0x0EA5F);
+        let mut faults = Vec::new();
+        for card in 0..cards {
+            for k in 0..1500u32 {
+                let jitter = 8e-6 * rng.next_f64();
+                faults.push(ScheduledFault {
+                    at: f64::from(k) * 20e-6 + jitter,
+                    card,
+                    fault: Fault::EngineFault {
+                        port: (k as usize * 5 + rng.next_u32() as usize)
+                            % ENGINE_PORTS,
+                    },
+                });
+            }
+        }
+        sort_by_time(&mut faults);
+        FaultPlan { mix: "heavy", seed, cards, faults }
+    }
+}
+
+fn sort_by_time(faults: &mut [ScheduledFault]) {
+    faults.sort_by(|a, b| a.at.total_cmp(&b.at));
+}
+
+/// One card's armed share of a [`FaultPlan`], plus the card-local fault
+/// state the scheduler consults at every event: the still-pending
+/// schedule, the active degrade/down windows, and the injection counter.
+#[derive(Debug, Clone)]
+pub struct ArmedFaults {
+    /// This card's faults, time-ordered, still to fire.
+    schedule: VecDeque<(f64, Fault)>,
+    /// Active link-degrade window: `(until, factor)`.
+    degrade: Option<(f64, f64)>,
+    /// End of the active down window, if the card is down.
+    down_until: Option<f64>,
+    /// The card's undegraded link rate, captured at arm time
+    /// ([`Card::inject`](crate::coordinator::Card::inject)). A degrade
+    /// caps the effective rate at `nominal_link × factor` even when a
+    /// fleet ingress grant rebinds the card's link between events.
+    nominal_link: f64,
+    /// Faults that actually fired so far.
+    pub injected: u64,
+}
+
+impl ArmedFaults {
+    /// Filter `plan` down to `card`'s schedule.
+    pub fn new(plan: &FaultPlan, card: usize) -> Self {
+        ArmedFaults {
+            schedule: plan
+                .faults
+                .iter()
+                .filter(|f| f.card == card)
+                .map(|f| (f.at, f.fault.clone()))
+                .collect(),
+            degrade: None,
+            down_until: None,
+            nominal_link: f64::INFINITY,
+            injected: 0,
+        }
+    }
+
+    /// Record the card's undegraded link rate (called once at arm time).
+    pub fn set_nominal_link(&mut self, bytes_per_sec: f64) {
+        self.nominal_link = bytes_per_sec;
+    }
+
+    /// Ceiling a degrade puts on the card's effective link rate at
+    /// `now`: `nominal × factor` inside a window, `+∞` otherwise. The
+    /// scheduler applies `min(granted, degrade_cap)` so a fleet's
+    /// ingress share and an injected degrade compose without double
+    /// scaling.
+    pub fn degrade_cap(&mut self, now: f64) -> f64 {
+        let factor = self.link_factor(now);
+        if factor < 1.0 {
+            self.nominal_link * factor
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Pop the next fault scheduled at or before `now` (quantization to
+    /// the current event), counting it as injected.
+    pub fn pop_due(&mut self, now: f64) -> Option<Fault> {
+        let due = self.schedule.front().is_some_and(|&(at, _)| at <= now);
+        if !due {
+            return None;
+        }
+        self.injected += 1;
+        self.schedule.pop_front().map(|(_, f)| f)
+    }
+
+    /// Open a link-degrade window ending at `now + window`. Overlapping
+    /// windows keep the later end and the newer factor.
+    pub fn open_degrade(&mut self, now: f64, factor: f64, window: f64) {
+        let until = now + window;
+        let end = match self.degrade {
+            Some((prev, _)) => prev.max(until),
+            None => until,
+        };
+        self.degrade = Some((end, factor));
+    }
+
+    /// Open a down window ending at `now + window` (later end wins).
+    pub fn open_down(&mut self, now: f64, window: f64) {
+        let until = now + window;
+        self.down_until =
+            Some(self.down_until.map_or(until, |prev| prev.max(until)));
+    }
+
+    /// The card's current link scale: degrade factor inside an active
+    /// window, 1.0 otherwise (expired windows are dropped here).
+    pub fn link_factor(&mut self, now: f64) -> f64 {
+        match self.degrade {
+            Some((until, factor)) if now < until => factor,
+            Some(_) => {
+                self.degrade = None;
+                1.0
+            }
+            None => 1.0,
+        }
+    }
+
+    /// Whether the card rejects admissions at `now` (expired windows are
+    /// dropped here).
+    pub fn is_down(&mut self, now: f64) -> bool {
+        match self.down_until {
+            Some(until) if now < until => true,
+            Some(_) => {
+                self.down_until = None;
+                false
+            }
+            None => false,
+        }
+    }
+
+    /// End of the active down window, if any.
+    pub fn down_until(&self) -> Option<f64> {
+        self.down_until
+    }
+
+    /// Earliest time anything armed here changes state on an idle card:
+    /// the next scheduled fault, a window expiry — the fast-forward
+    /// target when the session has nothing else to do.
+    pub fn next_change(&self) -> Option<f64> {
+        let mut t: Option<f64> = self.schedule.front().map(|&(at, _)| at);
+        for cand in
+            [self.degrade.map(|(until, _)| until), self.down_until].into_iter().flatten()
+        {
+            t = Some(t.map_or(cand, |cur| cur.min(cand)));
+        }
+        t
+    }
+
+    /// Nothing left: no fault still scheduled, no window still open.
+    pub fn exhausted(&self) -> bool {
+        self.schedule.is_empty() && self.degrade.is_none() && self.down_until.is_none()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_pure_functions_of_mix_seed_and_cards() {
+        for mix in ["none", "standard", "heavy"] {
+            let a = FaultPlan::parse_mix(mix, 7, 4).unwrap();
+            let b = FaultPlan::parse_mix(mix, 7, 4).unwrap();
+            assert_eq!(a, b, "{mix}: same triple must reproduce the schedule");
+            if mix != "none" {
+                let c = FaultPlan::parse_mix(mix, 8, 4).unwrap();
+                assert_ne!(a, c, "{mix}: a different seed must move the schedule");
+            }
+        }
+        assert!(FaultPlan::parse_mix("bogus", 7, 4).is_err());
+    }
+
+    #[test]
+    fn standard_mix_covers_every_fault_kind_and_is_time_ordered() {
+        let plan = FaultPlan::standard(7, 4);
+        assert!(plan.faults.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(plan.faults.iter().all(|f| f.card < 4 && f.at >= 0.0));
+        for name in ["engine-fault", "link-degrade", "card-down"] {
+            assert!(
+                plan.faults.iter().any(|f| f.fault.name() == name),
+                "standard mix must schedule {name}"
+            );
+        }
+        assert_eq!(plan.card_down_events(), 2);
+        for f in &plan.faults {
+            match &f.fault {
+                Fault::EngineFault { port } => assert!(*port < ENGINE_PORTS),
+                Fault::LinkDegrade { factor, window } => {
+                    assert!(*factor > 0.0 && *factor < 1.0 && *window > 0.0);
+                }
+                Fault::CardDown { window } => assert!(*window > 0.0),
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        assert_eq!(backoff_delay(1), BACKOFF_BASE);
+        assert_eq!(backoff_delay(2), 2.0 * BACKOFF_BASE);
+        assert_eq!(backoff_delay(3), 4.0 * BACKOFF_BASE);
+        assert_eq!(backoff_delay(30), BACKOFF_CAP);
+        assert!(backoff_delay(0) <= BACKOFF_BASE);
+    }
+
+    #[test]
+    fn armed_faults_quantize_windows_on_the_card_clock() {
+        let plan = FaultPlan {
+            mix: "standard",
+            seed: 0,
+            cards: 2,
+            faults: vec![
+                ScheduledFault {
+                    at: 1e-3,
+                    card: 0,
+                    fault: Fault::LinkDegrade { factor: 0.5, window: 1e-3 },
+                },
+                ScheduledFault {
+                    at: 5e-3,
+                    card: 1,
+                    fault: Fault::CardDown { window: 2e-3 },
+                },
+            ],
+        };
+        let mut armed = ArmedFaults::new(&plan, 0);
+        assert!(armed.pop_due(0.5e-3).is_none(), "nothing due yet");
+        assert_eq!(armed.next_change(), Some(1e-3));
+        // Quantized: the event at 1.4 ms picks up the 1 ms fault.
+        let Some(Fault::LinkDegrade { factor, window }) = armed.pop_due(1.4e-3)
+        else {
+            panic!("due fault must pop");
+        };
+        armed.open_degrade(1.4e-3, factor, window);
+        assert_eq!(armed.link_factor(2.0e-3), 0.5);
+        assert_eq!(armed.link_factor(2.5e-3), 1.0, "window expired");
+        assert_eq!(armed.injected, 1);
+        assert!(armed.exhausted(), "card 1's fault is not card 0's");
+
+        let mut other = ArmedFaults::new(&plan, 1);
+        let Some(Fault::CardDown { window }) = other.pop_due(5e-3) else {
+            panic!("card 1 must see its outage");
+        };
+        other.open_down(5e-3, window);
+        assert!(other.is_down(6e-3));
+        assert_eq!(other.down_until(), Some(7e-3));
+        assert!(!other.is_down(7.1e-3));
+        assert!(other.exhausted());
+    }
+}

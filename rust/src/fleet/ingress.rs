@@ -25,11 +25,20 @@
 /// * any two unsatisfied demands receive equal shares — no share can be
 ///   raised without lowering a smaller one.
 ///
-/// Non-positive or non-finite demands get 0. A non-positive cap grants
-/// nothing.
+/// Non-positive or non-finite demands get 0. A NaN or non-positive cap
+/// grants nothing; an *infinite* cap grants every finite demand in full
+/// (an uncapped host must never starve the fleet into a stall — the CLI
+/// rejects non-finite `--host-gbs` before it gets here, but the solver
+/// stays total anyway).
 pub fn max_min_share(demands: &[f64], cap: f64) -> Vec<f64> {
     let mut shares = vec![0.0; demands.len()];
-    if demands.is_empty() || !cap.is_finite() || cap <= 0.0 {
+    if demands.is_empty() || cap.is_nan() || cap <= 0.0 {
+        return shares;
+    }
+    if cap.is_infinite() {
+        for (share, &demand) in shares.iter_mut().zip(demands) {
+            *share = if demand.is_finite() { demand.max(0.0) } else { 0.0 };
+        }
         return shares;
     }
     // Ascending by demand: once the smallest demand is granted, the
@@ -90,10 +99,17 @@ mod tests {
         assert!(max_min_share(&[], 10.0).is_empty());
         assert_eq!(max_min_share(&[5.0], 0.0), vec![0.0]);
         assert_eq!(max_min_share(&[5.0], -1.0), vec![0.0]);
+        assert_eq!(max_min_share(&[5.0], f64::NAN), vec![0.0]);
         let shares = max_min_share(&[-3.0, f64::NAN, 4.0], 10.0);
         assert_eq!(shares[0], 0.0);
         assert_eq!(shares[1], 0.0);
         assert!((shares[2] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infinite_cap_grants_finite_demands_in_full() {
+        let shares = max_min_share(&[2.0, f64::INFINITY, -1.0], f64::INFINITY);
+        assert_eq!(shares, vec![2.0, 0.0, 0.0]);
     }
 
     #[test]

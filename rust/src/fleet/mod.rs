@@ -18,7 +18,18 @@
 //! * [`ingress`] models the host side: all cards' OpenCAPI transfers
 //!   draw from one shared host-DRAM bandwidth cap, split max-min — the
 //!   same fluid-segment principle as [`crate::hbm::fluid`], lifted to
-//!   fleet scope.
+//!   fleet scope;
+//! * **failover** ([`Fleet::with_faults`]): with a [`crate::fault`]
+//!   schedule armed, a card entering an injected outage window has its
+//!   re-routable queue drained and re-submitted on live cards through
+//!   [`Router::route_masked`] — the down card is never chosen and no
+//!   sticky affinity is written, so placements heal the moment the card
+//!   returns — while jobs that burned their retry budget restart
+//!   elsewhere under a fresh one. A degraded card's link demand shrinks
+//!   by its injected factor, so the shared-ingress grant and the on-card
+//!   degrade cap compose through one `min`. Deadline misses are never
+//!   re-routed (the budget is a client contract) and surface per ticket
+//!   through [`Fleet::take_failure`].
 //!
 //! The fleet advances whichever busy card is furthest behind in
 //! simulated time, so the per-card clocks stay close while each card
@@ -47,11 +58,14 @@ pub mod router;
 pub use ingress::max_min_share;
 pub use router::{CardView, Partitioner, RouteQuery, Router, RouterKind};
 
+use std::collections::BTreeMap;
+
 use crate::coordinator::job::{JobOutput, JobSpec};
 use crate::coordinator::policy::Policy;
 use crate::coordinator::scheduler::{
     Coordinator, CoordinatorError, CoordinatorStats,
 };
+use crate::fault::FaultPlan;
 use crate::interconnect::opencapi::OpenCapiLink;
 use crate::trace::Event;
 
@@ -73,10 +87,16 @@ pub struct Fleet {
     host_bandwidth: f64,
     /// Submission tickets: global submission index → (card, per-card job
     /// id). Job ids are per-coordinator, so the ticket index is the only
-    /// fleet-wide job identity.
+    /// fleet-wide job identity. Failover rewrites a ticket's entry when
+    /// the job restarts on another card.
     tickets: Vec<(usize, usize)>,
     /// Tickets already returned by a previous [`run`](Fleet::run).
     drained: usize,
+    /// Terminal failures by ticket (claim with [`Fleet::take_failure`]):
+    /// deadline misses, and faulted jobs with nowhere left to go.
+    failures: BTreeMap<usize, CoordinatorError>,
+    /// Jobs moved off a down or terminally-faulting card onto another.
+    failovers: u64,
 }
 
 impl Fleet {
@@ -93,6 +113,8 @@ impl Fleet {
             host_bandwidth: DEFAULT_HOST_BANDWIDTH,
             tickets: Vec::new(),
             drained: 0,
+            failures: BTreeMap::new(),
+            failovers: 0,
         }
     }
 
@@ -132,6 +154,49 @@ impl Fleet {
 
     pub fn host_bandwidth(&self) -> f64 {
         self.host_bandwidth
+    }
+
+    /// Arm `plan` on every card: each coordinator takes its own share of
+    /// the schedule (faults carry a card id) on its own clock. With a
+    /// plan armed, [`try_run`](Fleet::try_run) also performs **failover**:
+    /// jobs stranded on a card inside an outage window, and jobs that
+    /// failed terminally with their spec intact, are re-routed onto live
+    /// cards under fresh retry budgets (see the module docs). An empty
+    /// plan arms nothing.
+    pub fn with_faults(mut self, plan: &FaultPlan) -> Self {
+        if !plan.is_empty() {
+            for card in &mut self.cards {
+                card.arm_faults(plan);
+            }
+        }
+        self
+    }
+
+    /// Jobs the fleet moved off a down (or terminally-faulting) card.
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    /// Fault-aborted attempts that re-entered admission, fleet-wide.
+    pub fn retries(&self) -> u64 {
+        self.cards.iter().map(|c| c.retries()).sum()
+    }
+
+    /// Faults that actually fired across all cards.
+    pub fn faults_injected(&self) -> u64 {
+        self.cards.iter().map(|c| c.faults_injected()).sum()
+    }
+
+    /// Claim ticket `index`'s terminal failure, if it had one. Tickets
+    /// that failed produce no output from [`run`](Fleet::run); everything
+    /// else about the run (other tickets, ordering) is unaffected.
+    pub fn take_failure(&mut self, index: usize) -> Option<CoordinatorError> {
+        self.failures.remove(&index)
+    }
+
+    /// How many tickets have an unclaimed terminal failure.
+    pub fn failure_count(&self) -> usize {
+        self.failures.len()
     }
 
     pub fn router_kind(&self) -> RouterKind {
@@ -203,7 +268,16 @@ impl Fleet {
             if busy.is_empty() {
                 break;
             }
-            let demands = vec![self.nominal_link.bandwidth; busy.len()];
+            // A card inside an injected link-degrade window demands only
+            // its degraded rate; the solver's grant and the card's own
+            // degrade cap then compose through one `min` instead of
+            // scaling twice.
+            let nominal = self.nominal_link.bandwidth;
+            let cards = &mut self.cards;
+            let demands: Vec<f64> = busy
+                .iter()
+                .map(|&i| nominal * cards[i].link_demand_factor())
+                .collect();
             let shares = max_min_share(&demands, self.host_bandwidth);
             for (&card, &share) in busy.iter().zip(&shares) {
                 let mut link = self.nominal_link.clone();
@@ -219,7 +293,23 @@ impl Fleet {
                     lagging = card;
                 }
             }
-            self.cards[lagging].step()?;
+            let ids = self.cards[lagging].step()?;
+            // Terminal failures: re-route the spec when it survived and a
+            // live card exists, otherwise surface the typed error on the
+            // ticket.
+            for id in ids {
+                if let Some((err, spec)) = self.cards[lagging].take_failure(id) {
+                    self.note_failure(lagging, id, err, spec);
+                }
+            }
+            // Outage failover: everything still re-routable on a down
+            // card restarts elsewhere; DAG-tied jobs stay and ride the
+            // window out on local retry.
+            if self.cards.len() > 1 && self.cards[lagging].is_down() {
+                for (old_id, spec) in self.cards[lagging].drain_reroutable() {
+                    self.reroute(lagging, old_id, spec);
+                }
+            }
         }
         for card in &mut self.cards {
             card.set_link(self.nominal_link.clone());
@@ -236,6 +326,54 @@ impl Fleet {
         }
         self.drained = self.tickets.len();
         Ok(outputs)
+    }
+
+    /// The fleet-wide ticket backing card `card`'s job `id`, if the job
+    /// was submitted through [`Fleet::submit`] (per-card ids never repeat,
+    /// so the pair is unique).
+    fn ticket_of(&self, card: usize, id: usize) -> Option<usize> {
+        self.tickets.iter().position(|&t| t == (card, id))
+    }
+
+    /// Handle one terminal failure `card` just surfaced: a faulted job
+    /// whose spec rode along restarts on another card under a fresh retry
+    /// budget; a deadline miss (the budget is a client contract, not
+    /// transferable) or a faulted job with no live card left becomes the
+    /// ticket's typed failure.
+    fn note_failure(
+        &mut self,
+        card: usize,
+        old_id: usize,
+        err: CoordinatorError,
+        spec: Option<JobSpec>,
+    ) {
+        match (err, spec) {
+            (CoordinatorError::Faulted { .. }, Some(spec))
+                if self.cards.len() > 1 =>
+            {
+                self.reroute(card, old_id, spec);
+            }
+            (err, _) => {
+                if let Some(ticket) = self.ticket_of(card, old_id) {
+                    self.failures.insert(ticket, err);
+                }
+            }
+        }
+    }
+
+    /// Move one drained job off down card `from`: masked routing (the
+    /// down card is never chosen and no sticky affinity is written, so
+    /// placements heal when the card returns), a `Failover` trace event
+    /// on the source card, and a ticket rewrite to the new identity.
+    fn reroute(&mut self, from: usize, old_id: usize, spec: JobSpec) {
+        let Some(ticket) = self.ticket_of(from, old_id) else {
+            return;
+        };
+        let to = self.router.route_masked(&spec, &self.cards, from);
+        self.cards[from].record_failover(old_id, to);
+        let new_id = self.cards[to].submit(spec);
+        self.tickets[ticket] = (to, new_id);
+        self.failovers += 1;
     }
 
     /// The fleet's makespan: the furthest card clock (seconds of card
@@ -372,6 +510,94 @@ mod tests {
             capped > unconstrained * 1.05,
             "capped ingress must stretch the makespan: {capped} vs {unconstrained}"
         );
+    }
+
+    #[test]
+    fn card_down_fails_over_and_matches_the_fault_free_fleet() {
+        use crate::fault::{Fault, FaultPlan, ScheduledFault};
+        let jobs: Vec<JobSpec> = (0..8)
+            .map(|i| sel_job(&format!("t{i}"), 8192, 0, u32::MAX / 2))
+            .collect();
+
+        let mut clean = Fleet::new(cfg(), 2).with_router(RouterKind::RoundRobin);
+        for job in &jobs {
+            clean.submit(job.clone());
+        }
+        let clean_out = clean.run();
+
+        // Card 0 drops early, for long enough that everything it held
+        // must fail over to card 1.
+        let plan = FaultPlan {
+            mix: "custom",
+            seed: 0,
+            cards: 2,
+            faults: vec![ScheduledFault {
+                at: 2e-6,
+                card: 0,
+                fault: Fault::CardDown { window: 1.0 },
+            }],
+        };
+        let mut fleet = Fleet::new(cfg(), 2)
+            .with_router(RouterKind::RoundRobin)
+            .with_faults(&plan);
+        for job in &jobs {
+            fleet.submit(job.clone());
+        }
+        let out = fleet.run();
+        assert_eq!(out.len(), jobs.len(), "no ticket may be lost");
+        assert_eq!(fleet.failure_count(), 0);
+        assert!(fleet.failovers() >= 1, "card 0's queue must move");
+        assert_eq!(fleet.faults_injected(), 1);
+        let mut by_ticket: std::collections::BTreeMap<usize, JobOutput> =
+            clean_out.into_iter().collect();
+        for (ticket, output) in out {
+            let want = by_ticket
+                .remove(&ticket)
+                .expect("every ticket has a fault-free twin");
+            assert_eq!(
+                output.expect_selection(),
+                want.expect_selection(),
+                "ticket {ticket} diverged under failover"
+            );
+        }
+    }
+
+    #[test]
+    fn armed_but_quiet_plan_leaves_timing_bit_identical() {
+        use crate::fault::{Fault, FaultPlan, ScheduledFault};
+        let run = |plan: Option<FaultPlan>| {
+            let mut fleet = Fleet::new(cfg(), 2);
+            if let Some(plan) = plan {
+                fleet = fleet.with_faults(&plan);
+            }
+            for i in 0..4 {
+                fleet.submit(sel_job(&format!("t{i}"), 4096, 0, 1000));
+            }
+            let n = fleet.run().len();
+            (n, fleet.makespan())
+        };
+        let (clean_n, clean_makespan) = run(None);
+        // A schedule whose only fault lies far beyond the run: the chaos
+        // branches are armed on every step but nothing ever fires.
+        let quiet = FaultPlan {
+            mix: "custom",
+            seed: 0,
+            cards: 2,
+            faults: vec![ScheduledFault {
+                at: 1_000.0,
+                card: 0,
+                fault: Fault::LinkDegrade { factor: 0.5, window: 1.0 },
+            }],
+        };
+        let (armed_n, armed_makespan) = run(Some(quiet));
+        assert_eq!(clean_n, armed_n);
+        assert_eq!(
+            clean_makespan, armed_makespan,
+            "an armed-but-quiet plan must not perturb the timeline"
+        );
+        // And an empty plan arms nothing at all.
+        let (none_n, none_makespan) = run(Some(FaultPlan::none()));
+        assert_eq!((none_n, none_makespan), (clean_n, clean_makespan));
     }
 
     #[test]

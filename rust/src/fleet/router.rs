@@ -300,6 +300,113 @@ impl Router {
         }
         chosen
     }
+
+    /// Route `spec` while card `down` is masked out (failover placement):
+    /// the down card can never be chosen, and — unlike
+    /// [`route`](Router::route) — the decision writes **no** sticky
+    /// assignments, so keys spilled off a down card return to their home
+    /// the moment it heals. With one live card the choice is forced.
+    pub fn route_masked(
+        &mut self,
+        spec: &JobSpec,
+        cards: &[Coordinator],
+        down: usize,
+    ) -> usize {
+        let views: Vec<CardView> = cards
+            .iter()
+            .map(|card| CardView {
+                resident_bytes: spec
+                    .inputs
+                    .iter()
+                    .filter(|input| {
+                        input
+                            .key
+                            .as_ref()
+                            .is_some_and(|key| card.cache().contains(key))
+                    })
+                    .map(|input| input.bytes)
+                    .sum(),
+                outstanding_bytes: card.outstanding_input_bytes(),
+            })
+            .collect();
+        self.route_query_masked(&RouteQuery::from_spec(spec), &views, down)
+    }
+
+    /// [`route_masked`](Router::route_masked) over pre-built snapshots.
+    pub fn route_query_masked(
+        &mut self,
+        query: &RouteQuery,
+        views: &[CardView],
+        down: usize,
+    ) -> usize {
+        let n = views.len();
+        let live: Vec<usize> = (0..n).filter(|&c| c != down).collect();
+        let Some(&first_live) = live.first() else {
+            // Masking the only card leaves nowhere else to go.
+            return 0;
+        };
+        if live.len() == 1 {
+            return first_live;
+        }
+        match self.kind {
+            RouterKind::RoundRobin => {
+                let mut card = self.next % n;
+                self.next = (self.next + 1) % n;
+                if card == down {
+                    card = self.next % n;
+                    self.next = (self.next + 1) % n;
+                }
+                card
+            }
+            RouterKind::Affinity => {
+                let mut scores: Vec<u64> =
+                    views.iter().map(|v| v.resident_bytes).collect();
+                for (key, bytes) in &query.keyed {
+                    if let Some(&card) = self.assignments.get(key) {
+                        if card < n {
+                            scores[card] += bytes;
+                        }
+                    }
+                }
+                // Residency on the down card cannot be reached.
+                scores[down] = 0;
+                let preferred = match argmax_positive(&scores) {
+                    Some(card) => card,
+                    None => {
+                        let home = match query.keyed.first() {
+                            Some((key, _)) => self.partitioner.card_for(key, n),
+                            None => {
+                                let card = self.next % n;
+                                self.next = (self.next + 1) % n;
+                                card
+                            }
+                        };
+                        // First live card at or after the home slot —
+                        // deterministic, and the home itself when alive.
+                        live.iter().copied().find(|&c| c >= home).unwrap_or(first_live)
+                    }
+                };
+                let mut min_card = first_live;
+                for &card in &live {
+                    if views[card].outstanding_bytes
+                        < views[min_card].outstanding_bytes
+                    {
+                        min_card = card;
+                    }
+                }
+                let spill = views[preferred].outstanding_bytes
+                    > views[min_card].outstanding_bytes
+                        + SPILL_FACTOR * query.input_bytes.max(1);
+                if spill {
+                    min_card
+                } else {
+                    preferred
+                }
+            }
+        }
+        // Note: no `assignments` write on either path — masked placements
+        // are temporary by design.
+    }
 }
 
 /// Index of the largest strictly-positive value; `None` when all are 0.
@@ -449,6 +556,43 @@ mod tests {
         // stay on the spill target, not the partitioner home.
         let views = vec![CardView::default(); 4];
         assert_eq!(router.route_views(&sel_spec("busy", 64), &views), spilled);
+    }
+
+    #[test]
+    fn masked_routing_avoids_the_down_card_and_writes_no_affinity() {
+        let mut router = Router::new(RouterKind::Affinity);
+        let views = vec![CardView::default(); 4];
+        let spec = sel_spec("cold", 64);
+        let home = Partitioner::Hash.card_for(&ColumnKey::new("cold", "v"), 4);
+        let masked =
+            router.route_query_masked(&RouteQuery::from_spec(&spec), &views, home);
+        assert_ne!(masked, home, "the down card must never be chosen");
+        assert!(masked < 4);
+        // No sticky assignment was written: once the card heals, the key
+        // routes straight back to its partitioner home.
+        assert_eq!(router.route_views(&spec, &views), home);
+        // An existing assignment on the down card is ignored, not moved.
+        let rerouted =
+            router.route_query_masked(&RouteQuery::from_spec(&spec), &views, home);
+        assert_ne!(rerouted, home);
+        assert_eq!(router.route_views(&spec, &views), home, "affinity healed");
+    }
+
+    #[test]
+    fn masked_round_robin_skips_the_down_card() {
+        let mut router = Router::new(RouterKind::RoundRobin);
+        let views = vec![CardView::default(); 3];
+        let picks: Vec<usize> = (0..6)
+            .map(|_| router.route_query_masked(&RouteQuery::default(), &views, 1))
+            .collect();
+        assert!(picks.iter().all(|&c| c != 1), "down card picked: {picks:?}");
+        // Masking the only other option forces the lone live card.
+        let two = vec![CardView::default(); 2];
+        assert_eq!(router.route_query_masked(&RouteQuery::default(), &two, 0), 1);
+        assert_eq!(
+            router.route_query_masked(&RouteQuery::default(), &[CardView::default()], 0),
+            0
+        );
     }
 
     #[test]

@@ -45,7 +45,13 @@
 //!   submissions by column-cache affinity with partitioned, load-bounded
 //!   cold placement, while every card's OpenCAPI transfers draw from one
 //!   shared host-DRAM ingress budget split max-min (`hbmctl serve
-//!   --cards N --router affinity`).
+//!   --cards N --router affinity`). A deterministic chaos layer
+//!   ([`fault`]) injects seeded link-degrade / engine-fault / card-down
+//!   schedules on the card clock; recovery is layered — capped-backoff
+//!   retry on the card, masked-routing failover across the fleet,
+//!   end-to-end deadlines, and graceful CPU degradation in the DBMS
+//!   executor — with every surviving result bit-identical to the
+//!   fault-free run (`hbmctl chaos --cards N --seed S --faults standard`).
 //! * **L2/L1 (python/compile)** — the JAX SGD model and Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
 //!   [`runtime`] — Python never runs at request time.
@@ -63,6 +69,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod db;
 pub mod engines;
+pub mod fault;
 pub mod fleet;
 pub mod floorplan;
 pub mod hbm;

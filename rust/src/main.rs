@@ -9,6 +9,8 @@
 //!   plan        whole-plan pipelines vs operator-at-a-time offload
 //!   check       static plan analysis (lint a workload, no execution)
 //!   serve       multi-client mixed workload through the L3 coordinator
+//!   chaos       seeded fault injection over the fleet: retry, failover,
+//!               deadlines, graceful CPU degradation
 //!   trace       card-clock trace of the analytics mix + validation matrix
 //!   bench-host  simulator wall-clock throughput: serial vs parallel,
 //!               cold vs physically-resident
@@ -22,6 +24,7 @@
 //!   hbmctl check --rows 200000
 //!   hbmctl check --fixture broken
 //!   hbmctl serve --clients 4 --queries 64 --policy all
+//!   hbmctl chaos --cards 4 --seed 7 --faults standard
 //!   hbmctl trace --rows 100000 --repeat 2
 //!   hbmctl bench-host --rows 400000
 
@@ -55,6 +58,7 @@ fn main() -> ExitCode {
         Some("plan") => cmd_plan(&args),
         Some("check") => cmd_check(&args),
         Some("serve") => cmd_serve(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("trace") => cmd_trace(&args),
         Some("bench-host") => cmd_bench_host(&args),
         Some("help") => {
@@ -93,6 +97,8 @@ fn subcommand_list() -> &'static str {
      \u{20} plan        whole-plan pipelines vs operator-at-a-time offload\n\
      \u{20} check       static plan analysis: lint a workload without executing it\n\
      \u{20} serve       multi-client mixed workload through the L3 coordinator\n\
+     \u{20} chaos       seeded fault injection over the fleet: retry, failover,\n\
+     \u{20}             deadlines, graceful CPU degradation\n\
      \u{20} trace       card-clock trace of the analytics mix (Perfetto JSON)\n\
      \u{20}             plus the trace-vs-stats validation matrix\n\
      \u{20} bench-host  simulator wall-clock throughput benchmark\n\
@@ -101,7 +107,7 @@ fn subcommand_list() -> &'static str {
 
 fn usage() {
     eprintln!(
-        "usage: hbmctl <figures|microbench|resources|train|query|plan|check|serve|trace|bench-host|help> [options]\n\
+        "usage: hbmctl <figures|microbench|resources|train|query|plan|check|serve|chaos|trace|bench-host|help> [options]\n\
          \n\
          figures    --fig <id|all> --scale <f> --out <dir> --artifacts <dir>\n\
          microbench --ports <list> --separations <list> --clock <200|300|400>\n\
@@ -139,6 +145,18 @@ fn usage() {
          \u{20}          additionally replay through an N-card fleet (affinity\n\
          \u{20}          vs round-robin routing, shared host ingress), appending\n\
          \u{20}          the fleet scaling block to the artifact\n\
+         chaos      --cards <n> --seed <s> --faults <none|standard|heavy>\n\
+         \u{20}          --clients <n> --queries <m> --rows <n> --router <r>\n\
+         \u{20}          --policy <p> --host-gbs <f> --out <file.json>\n\
+         \u{20}          replays the serve fleet workload with a seeded fault\n\
+         \u{20}          schedule armed (--seed seeds the faults; the workload\n\
+         \u{20}          keeps its own seed, so --faults none reproduces the\n\
+         \u{20}          fault-free fleet run), reconciles every ticket against\n\
+         \u{20}          a fault-free reference (bit-identical or typed\n\
+         \u{20}          failure, never lost), drives the DBMS executor's\n\
+         \u{20}          graceful CPU degradation, and writes BENCH_chaos.json\n\
+         \u{20}          (goodput, retries, failovers, downgrades, p99 vs the\n\
+         \u{20}          fault-free twin)\n\
          trace      --rows <n> --repeat <r> --queries <m> --seed <s> --out <file.json>\n\
          \u{20}          --cards <n> --router <r> --fleet-out <file.json>\n\
          \u{20}          runs the analytics plan mix with the card-clock tracer\n\
@@ -679,15 +697,16 @@ fn cmd_bench_host(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    // Counts and capacities go through the validating accessors: `--cards
+    // 0`, `--host-gbs 0` / `inf` / `NaN` all *parse* but poison the fleet
+    // solvers downstream, so they are typed CLI errors here.
     let spec = ServeSpec {
-        clients: args.get_parsed("clients", 4usize)?,
-        queries: args.get_parsed("queries", 64usize)?,
+        clients: args.get_count("clients", 4)?,
+        queries: args.get_count("queries", 64)?,
         seed: args.get_parsed("seed", 0xC0FFEEu64)?,
-        rows: args.get_parsed("rows", 48_000usize)?,
+        rows: args.get_count("rows", 48_000)?,
         cache_bytes: args.get_parsed("cache-mib", 4096u64)? * MIB,
     };
-    anyhow::ensure!(spec.clients > 0, "--clients must be positive");
-    anyhow::ensure!(spec.queries > 0, "--queries must be positive");
     let which = args.get_str("policy", "all");
     let policies: Vec<Policy> = if which == "all" {
         Policy::all().to_vec()
@@ -697,15 +716,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         })?]
     };
 
-    let cards: usize = args.get_parsed("cards", 1usize)?;
-    anyhow::ensure!(cards >= 1, "--cards must be positive");
+    let cards = args.get_count("cards", 1)?;
     let router_name = args.get_str("router", "affinity");
     let router = RouterKind::parse(&router_name).ok_or_else(|| {
         anyhow::anyhow!("unknown router '{router_name}' (affinity|round-robin)")
     })?;
-    let host_gbs: f64 =
-        args.get_parsed("host-gbs", hbm_analytics::fleet::DEFAULT_HOST_BANDWIDTH / 1e9)?;
-    anyhow::ensure!(host_gbs > 0.0, "--host-gbs must be positive");
+    let host_gbs = args.get_positive_f64(
+        "host-gbs",
+        hbm_analytics::fleet::DEFAULT_HOST_BANDWIDTH / 1e9,
+    )?;
     // The fleet bench replays one policy; honor a single --policy choice
     // and default to fair-share under --policy all.
     let fleet_policy =
@@ -779,6 +798,92 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     std::fs::write(
         &out_path,
         coordinator::bench_json(&spec, &outcomes, fleet_bench.as_ref()),
+    )?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    use hbm_analytics::fault::FaultPlan;
+
+    // The workload shape mirrors the CI fleet smoke (`serve --clients 4
+    // --queries 128 --rows 24000 --cards 4 --router affinity`), and
+    // `--seed` seeds only the fault schedule: with `--faults none` this
+    // replays exactly the serve fleet run, so its goodput is directly
+    // comparable to the serve artifact's fleet qps.
+    let spec = ServeSpec {
+        clients: args.get_count("clients", 4)?,
+        queries: args.get_count("queries", 128)?,
+        seed: args.get_parsed("workload-seed", 0xC0FFEEu64)?,
+        rows: args.get_count("rows", 24_000)?,
+        cache_bytes: args.get_parsed("cache-mib", 4096u64)? * MIB,
+    };
+    let cards = args.get_count("cards", 4)?;
+    let seed: u64 = args.get_parsed("seed", 7u64)?;
+    let mix = args.get_str("faults", "standard");
+    let plan = FaultPlan::parse_mix(&mix, seed, cards).map_err(|e| anyhow::anyhow!(e))?;
+    let router_name = args.get_str("router", "affinity");
+    let router = RouterKind::parse(&router_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown router '{router_name}' (affinity|round-robin)")
+    })?;
+    let policy_name = args.get_str("policy", "fair");
+    let policy = Policy::parse(&policy_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown policy '{policy_name}' (fifo|fair|bandwidth)")
+    })?;
+    let host_gbs = args.get_positive_f64(
+        "host-gbs",
+        hbm_analytics::fleet::DEFAULT_HOST_BANDWIDTH / 1e9,
+    )?;
+
+    let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+    println!(
+        "chaos: {} queries on {cards} cards, '{}' fault mix (seed {seed:#x}, \
+         {} scheduled faults), {} router, {} policy",
+        spec.queries,
+        plan.mix,
+        plan.faults.len(),
+        router.name(),
+        policy.name()
+    );
+    let outcome = coordinator::run_chaos(
+        &cfg,
+        policy,
+        &spec,
+        cards,
+        router,
+        host_gbs * 1e9,
+        &plan,
+    );
+    let db = coordinator::run_chaos_db(&cfg, &mix);
+    println!("{}", coordinator::render_chaos(&outcome, &db));
+    anyhow::ensure!(
+        outcome.wrong == 0,
+        "{} surviving output(s) diverged from the fault-free reference",
+        outcome.wrong
+    );
+    anyhow::ensure!(
+        outcome.lost == 0,
+        "{} ticket(s) vanished without a typed failure",
+        outcome.lost
+    );
+    anyhow::ensure!(
+        db.matches_cpu,
+        "a degraded query diverged from the CPU executor"
+    );
+    println!(
+        "chaos goodput {:.0} qps vs fault-free {:.0} qps \
+         ({} retries, {} failovers, {} downgrades); every surviving \
+         result bit-identical ✓",
+        outcome.goodput_qps,
+        outcome.fault_free_qps,
+        outcome.retries,
+        outcome.failovers,
+        db.downgrades
+    );
+    let out_path = args.get_str("out", "BENCH_chaos.json");
+    std::fs::write(
+        &out_path,
+        coordinator::chaos_json(&spec, policy, host_gbs * 1e9, &outcome, &db),
     )?;
     println!("wrote {out_path}");
     Ok(())

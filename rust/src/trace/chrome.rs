@@ -336,6 +336,61 @@ fn render_stream(card: usize, events: &[Event], out: &mut Vec<String>) {
             Event::LinkRate { t, bytes_per_sec, .. } => {
                 out.push(counter_event("link GB/s", pid_link, *t, bytes_per_sec / 1e9));
             }
+            Event::FaultInjected { t, card, fault, job, port } => {
+                let tid = job.map_or(0, |j| j as u64);
+                let mut args = format!("\"card\":{card},\"fault\":\"{fault}\"");
+                if let Some(j) = job {
+                    args.push_str(&format!(",\"job\":{j}"));
+                }
+                if let Some(p) = port {
+                    args.push_str(&format!(",\"port\":{p}"));
+                }
+                out.push(instant_event(
+                    &format!("fault: {fault}"),
+                    "chaos",
+                    pid_jobs,
+                    tid,
+                    *t,
+                    &args,
+                ));
+            }
+            Event::Retry { t, job, attempts, backoff } => {
+                out.push(instant_event(
+                    &format!("retry #{attempts} job {job}"),
+                    "chaos",
+                    pid_jobs,
+                    *job as u64,
+                    *t,
+                    &format!(
+                        "\"job\":{job},\"attempts\":{attempts},\
+                         \"backoff_us\":{:.3}",
+                        backoff * 1e6
+                    ),
+                ));
+            }
+            Event::Failover { t, job, from_card, to_card } => {
+                out.push(instant_event(
+                    &format!("failover job {job} → card {to_card}"),
+                    "chaos",
+                    pid_jobs,
+                    *job as u64,
+                    *t,
+                    &format!(
+                        "\"job\":{job},\"from_card\":{from_card},\
+                         \"to_card\":{to_card}"
+                    ),
+                ));
+            }
+            Event::Downgraded { t, job } => {
+                out.push(instant_event(
+                    &format!("cpu downgrade job {job}"),
+                    "chaos",
+                    pid_jobs,
+                    *job as u64,
+                    *t,
+                    &format!("\"job\":{job}"),
+                ));
+            }
         }
     }
 }

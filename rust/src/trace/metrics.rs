@@ -161,6 +161,10 @@ impl MetricsRegistry {
                 Event::LinkRate { bytes_per_sec, .. } => {
                     reg.observe("link_gbps", bytes_per_sec / 1e9);
                 }
+                Event::FaultInjected { .. } => reg.inc("faults_injected", 1),
+                Event::Retry { .. } => reg.inc("retries", 1),
+                Event::Failover { .. } => reg.inc("failovers", 1),
+                Event::Downgraded { .. } => reg.inc("downgrades", 1),
             }
         }
         for (job, end) in finished {

@@ -152,6 +152,26 @@ pub enum Event {
     /// Host-link allocation sample over `[t, t + dt]`: active transfer
     /// count and their aggregate bytes/s.
     LinkRate { t: f64, dt: f64, transfers: usize, bytes_per_sec: f64 },
+    /// An armed [`fault`](crate::fault) fired on this card's clock.
+    /// `job`/`port` carry the victim when the fault had one (an
+    /// engine fault on an idle port injects with no victim).
+    FaultInjected {
+        t: f64,
+        card: usize,
+        fault: &'static str,
+        job: Option<usize>,
+        port: Option<usize>,
+    },
+    /// A faulted job was kicked back to the admission queue; it becomes
+    /// admissible again `backoff` card-seconds later.
+    Retry { t: f64, job: usize, attempts: u32, backoff: f64 },
+    /// The fleet re-routed a job off a down (or terminally failing)
+    /// card. `t` is on `from_card`'s clock; the job restarts under a
+    /// new id on `to_card`'s own timeline.
+    Failover { t: f64, job: usize, from_card: usize, to_card: usize },
+    /// The executor finished this job's stage on the CPU path after the
+    /// offload failed terminally.
+    Downgraded { t: f64, job: usize },
 }
 
 impl Event {
@@ -168,7 +188,11 @@ impl Event {
             | Event::MemberBound { t, .. }
             | Event::MemberFreed { t, .. }
             | Event::Bandwidth { t, .. }
-            | Event::LinkRate { t, .. } => *t,
+            | Event::LinkRate { t, .. }
+            | Event::FaultInjected { t, .. }
+            | Event::Retry { t, .. }
+            | Event::Failover { t, .. }
+            | Event::Downgraded { t, .. } => *t,
             Event::Stage(s) => s.start,
             Event::Transfer(s) => s.start,
         }
@@ -200,6 +224,8 @@ impl Event {
         match self {
             Event::Stage(s) => Some(s.card),
             Event::Transfer(s) => Some(s.card),
+            Event::FaultInjected { card, .. } => Some(*card),
+            Event::Failover { from_card, .. } => Some(*from_card),
             _ => None,
         }
     }

@@ -124,13 +124,18 @@ fn intersection_measure(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
     total
 }
 
-/// Legal stage successors within one job's lifecycle.
+/// Legal stage successors within one job's lifecycle. `Running →
+/// Waiting` covers both SGD batch boundaries and fault-aborted compute
+/// batches re-entering admission; `CopyIn → Waiting` is a copy-in
+/// killed by an injected `CardDown` (the truncated span ends at the
+/// kill, the retry redispatches warm).
 fn may_follow(prev: StageKind, next: StageKind) -> bool {
     matches!(
         (prev, next),
         (StageKind::Waiting, StageKind::CopyIn)
             | (StageKind::Waiting, StageKind::Running)
             | (StageKind::CopyIn, StageKind::Running)
+            | (StageKind::CopyIn, StageKind::Waiting)
             | (StageKind::Running, StageKind::Waiting)
             | (StageKind::Running, StageKind::CopyOut)
     )
@@ -437,6 +442,7 @@ mod tests {
         assert!(may_follow(StageKind::Waiting, StageKind::Running));
         assert!(may_follow(StageKind::Running, StageKind::Waiting));
         assert!(may_follow(StageKind::Running, StageKind::CopyOut));
+        assert!(may_follow(StageKind::CopyIn, StageKind::Waiting), "CardDown kill");
         assert!(!may_follow(StageKind::CopyOut, StageKind::Waiting));
         assert!(!may_follow(StageKind::CopyIn, StageKind::CopyOut));
         assert!(!may_follow(StageKind::Running, StageKind::CopyIn));

@@ -129,6 +129,41 @@ impl Args {
             _ => true,
         }
     }
+
+    /// [`get_parsed`](Args::get_parsed) for physical quantities
+    /// (bandwidths, scale factors): the value must additionally be
+    /// finite and strictly positive. `--host-gbs 0`, `inf`, and `NaN`
+    /// all *parse* as `f64`, but a zero or non-finite capacity poisons
+    /// the solvers downstream (the fleet's max–min ingress share
+    /// divides by it), so they are rejected here as typed CLI errors.
+    pub fn get_positive_f64(
+        &self,
+        key: &str,
+        default: f64,
+    ) -> Result<f64, CliError> {
+        let v = self.get_parsed(key, default)?;
+        if v.is_finite() && v > 0.0 {
+            Ok(v)
+        } else {
+            Err(CliError::Invalid(key.to_string(), format!("{v}")))
+        }
+    }
+
+    /// [`get_parsed`](Args::get_parsed) for counts that must be at
+    /// least 1 (`--cards 0` would build an empty fleet and stall every
+    /// submission).
+    pub fn get_count(
+        &self,
+        key: &str,
+        default: usize,
+    ) -> Result<usize, CliError> {
+        let v: usize = self.get_parsed(key, default)?;
+        if v == 0 {
+            Err(CliError::Invalid(key.to_string(), "0".to_string()))
+        } else {
+            Ok(v)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +207,25 @@ mod tests {
         let a = parse("x --threads 1,2,4");
         assert_eq!(a.get_list("threads", &[9u32]).unwrap(), vec![1, 2, 4]);
         assert_eq!(a.get_list("other", &[9u32]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn degenerate_quantities_are_typed_errors() {
+        for bad in ["0", "-3", "inf", "-inf", "NaN", "x"] {
+            let a = parse(&format!("serve --host-gbs {bad}"));
+            assert!(
+                a.get_positive_f64("host-gbs", 64.0).is_err(),
+                "--host-gbs {bad} must be rejected"
+            );
+        }
+        let a = parse("serve --host-gbs 12.5");
+        assert_eq!(a.get_positive_f64("host-gbs", 64.0).unwrap(), 12.5);
+        assert_eq!(parse("serve").get_positive_f64("host-gbs", 64.0).unwrap(), 64.0);
+
+        assert!(parse("serve --cards 0").get_count("cards", 4).is_err());
+        assert!(parse("serve --cards -1").get_count("cards", 4).is_err());
+        assert_eq!(parse("serve --cards 3").get_count("cards", 4).unwrap(), 3);
+        assert_eq!(parse("serve").get_count("cards", 4).unwrap(), 4);
     }
 
     #[test]

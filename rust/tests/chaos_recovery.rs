@@ -1,0 +1,369 @@
+#![allow(clippy::disallowed_methods)]
+
+//! Chaos-layer recovery invariants: seeded fault injection over randomized
+//! workloads, reconciled against fault-free references.
+//!
+//! The recovery contract has exactly two permitted outcomes per ticket —
+//! an output bit-identical to the fault-free run, or a typed, claimable
+//! failure. Never a corrupted result, never a silently dropped ticket.
+//! Property-tested here with the in-tree miniature proptest harness for
+//! every engine-slot policy and both routers, plus deterministic probes
+//! for the pieces the random walk cannot guarantee to exercise: terminal
+//! failure under an engine storm, queued-deadline expiry, same-seed
+//! determinism, and the db executor's graceful CPU degradation.
+
+use std::collections::BTreeMap;
+
+use hbm_analytics::coordinator::{
+    run_chaos, run_chaos_db, ColumnKey, Coordinator, CoordinatorError, JobKind,
+    JobOutput, JobSpec, Policy, ServeSpec,
+};
+use hbm_analytics::fault::{Fault, FaultPlan, ScheduledFault, MAX_ATTEMPTS};
+use hbm_analytics::fleet::{Fleet, RouterKind, DEFAULT_HOST_BANDWIDTH};
+use hbm_analytics::hbm::shim::ENGINE_PORTS;
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::util::proptest::{check, U64Range};
+use hbm_analytics::util::rng::Xoshiro256;
+
+const ROUTERS: [RouterKind; 2] = [RouterKind::Affinity, RouterKind::RoundRobin];
+
+fn cfg() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+/// Bit-exact output comparison (f32 models compared by bits).
+fn same_output(a: &JobOutput, b: &JobOutput) -> bool {
+    match (a, b) {
+        (JobOutput::Selection(x), JobOutput::Selection(y)) => x == y,
+        (JobOutput::Join(x), JobOutput::Join(y)) => x == y,
+        (JobOutput::Sgd(x), JobOutput::Sgd(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y.iter()).all(|(mx, my)| {
+                    mx.len() == my.len()
+                        && mx
+                            .iter()
+                            .zip(my.iter())
+                            .all(|(p, q)| p.to_bits() == q.to_bits())
+                })
+        }
+        _ => false,
+    }
+}
+
+/// A randomized batch of independent keyed selections, the same shape the
+/// fleet-equivalence suite uses: small table pool so affinity routing sees
+/// repeats, a keyless slot for the router's fallback arm.
+fn workload_from_seed(seed: u64) -> Vec<JobSpec> {
+    let mut rng = Xoshiro256::new(seed);
+    let n = 3 + rng.gen_range_usize(4); // 3..=6 jobs
+    (0..n)
+        .map(|_| {
+            let rows = 1_024 + rng.gen_range_usize(3_072);
+            let data: Vec<u32> = (0..rows).map(|_| rng.next_u32()).collect();
+            let a = rng.next_u32();
+            let b = rng.next_u32();
+            let (lo, hi) = (a.min(b), a.max(b));
+            let key = match rng.gen_range_usize(4) {
+                0 => None,
+                t => Some(ColumnKey::new(format!("t{t}"), "v")),
+            };
+            JobSpec::new(JobKind::Selection { data: data.into(), lo, hi })
+                .with_keys(vec![key])
+        })
+        .collect()
+}
+
+/// Replay `jobs` on one plain fault-free coordinator; id → output.
+fn single_card_outputs(policy: Policy, jobs: &[JobSpec]) -> BTreeMap<usize, JobOutput> {
+    let mut solo = Coordinator::new(cfg()).with_policy(policy);
+    for job in jobs {
+        solo.submit(job.clone());
+    }
+    solo.run().into_iter().collect()
+}
+
+/// An engine-killing storm on card 0 (1 µs grid across every port) plus
+/// one outage window — guaranteed to force retries, terminal failures and
+/// (on a multi-card fleet) failover, whatever the workload.
+fn storm_plan(cards: usize, steps: u32) -> FaultPlan {
+    let mut faults: Vec<ScheduledFault> = (0..steps)
+        .flat_map(|step| {
+            (0..ENGINE_PORTS).map(move |port| ScheduledFault {
+                at: 1e-9 + f64::from(step) * 1e-6,
+                card: 0,
+                fault: Fault::EngineFault { port },
+            })
+        })
+        .collect();
+    faults.push(ScheduledFault {
+        at: 5e-6,
+        card: 0,
+        fault: Fault::CardDown { window: 400e-6 },
+    });
+    FaultPlan { mix: "storm", seed: 0, cards, faults }
+}
+
+// ---------------------------------------------------------------------
+// Property: under the standard seeded mix, every ticket either matches
+// the fault-free reference bit-for-bit or fails typed — all three
+// policies, both routers.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_fleet_never_corrupts_or_drops_a_ticket() {
+    check("chaos == reference or typed", &U64Range(0, u64::MAX / 2), |&seed| {
+        let jobs = workload_from_seed(seed);
+        let plan = FaultPlan::standard(seed, 2);
+        Policy::all().into_iter().all(|policy| {
+            let reference = single_card_outputs(policy, &jobs);
+            ROUTERS.into_iter().all(|router| {
+                let mut fleet = Fleet::new(cfg(), 2)
+                    .with_policy(policy)
+                    .with_router(router)
+                    .with_faults(&plan);
+                for job in &jobs {
+                    fleet.submit(job.clone());
+                }
+                let done: BTreeMap<usize, JobOutput> =
+                    fleet.run().into_iter().collect();
+                let outputs_match = done.iter().all(|(ticket, out)| {
+                    reference.get(ticket).is_some_and(|r| same_output(out, r))
+                });
+                let accounted = (0..jobs.len()).all(|ticket| {
+                    done.contains_key(&ticket)
+                        || fleet.take_failure(ticket).is_some()
+                });
+                outputs_match && accounted
+            })
+        })
+    });
+}
+
+// ---------------------------------------------------------------------
+// Determinism: the same seed replays the same schedule, the same outputs,
+// the same counters, the same makespan — bit for bit.
+// ---------------------------------------------------------------------
+
+#[test]
+fn same_seed_replays_identically() {
+    // The schedule itself is a pure function of (seed, cards).
+    let (a, b) = (FaultPlan::standard(9, 3), FaultPlan::standard(9, 3));
+    assert_eq!(a.faults.len(), b.faults.len());
+    for (x, y) in a.faults.iter().zip(b.faults.iter()) {
+        assert_eq!(x.at.to_bits(), y.at.to_bits());
+        assert_eq!(x.card, y.card);
+        assert_eq!(x.fault.name(), y.fault.name());
+    }
+    assert_ne!(
+        FaultPlan::standard(9, 3).faults[0].at.to_bits(),
+        FaultPlan::standard(10, 3).faults[0].at.to_bits(),
+        "different seeds must jitter the schedule differently"
+    );
+
+    // And so is the whole replay under it.
+    let jobs = workload_from_seed(0xD15EA5E);
+    let plan = storm_plan(2, 400);
+    let replay = || {
+        let mut fleet = Fleet::new(cfg(), 2)
+            .with_policy(Policy::FairShare)
+            .with_router(RouterKind::RoundRobin)
+            .with_faults(&plan);
+        for job in &jobs {
+            fleet.submit(job.clone());
+        }
+        let outputs = fleet.run();
+        (
+            outputs,
+            fleet.makespan(),
+            fleet.faults_injected(),
+            fleet.retries(),
+            fleet.failovers(),
+            fleet.failure_count(),
+        )
+    };
+    let (out1, mk1, f1, r1, fo1, fail1) = replay();
+    let (out2, mk2, f2, r2, fo2, fail2) = replay();
+    assert!(f1 > 0, "the storm plan must actually fire");
+    assert_eq!((f1, r1, fo1, fail1), (f2, r2, fo2, fail2));
+    assert_eq!(mk1.to_bits(), mk2.to_bits(), "makespan must replay exactly");
+    assert_eq!(out1.len(), out2.len());
+    for ((t1, o1), (t2, o2)) in out1.iter().zip(out2.iter()) {
+        assert_eq!(t1, t2);
+        assert!(same_output(o1, o2), "ticket {t1} diverged between replays");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Single card, nowhere to fail over: an engine storm must end every job
+// either complete-and-identical or terminally Faulted after exactly
+// MAX_ATTEMPTS — for all three policies.
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_card_storm_completes_or_fails_typed_for_every_policy() {
+    // Big enough that no attempt fits between two storm ticks.
+    let mut rng = Xoshiro256::new(0xBAD5EED);
+    let jobs: Vec<JobSpec> = (0..3)
+        .map(|_| {
+            let data: Vec<u32> = (0..300_000).map(|_| rng.next_u32()).collect();
+            JobSpec::new(JobKind::Selection {
+                data: data.into(),
+                lo: 0,
+                hi: u32::MAX / 2,
+            })
+        })
+        .collect();
+    // Engine kills only — an outage on the sole card has no failover
+    // target and would just stretch the timeline.
+    let mut plan = storm_plan(1, 4_000);
+    plan.faults.retain(|f| matches!(f.fault, Fault::EngineFault { .. }));
+
+    for policy in Policy::all() {
+        let reference = single_card_outputs(policy, &jobs);
+        let mut card = Coordinator::new(cfg()).with_policy(policy);
+        card.arm_faults(&plan);
+        for job in &jobs {
+            card.submit(job.clone());
+        }
+        let done: BTreeMap<usize, JobOutput> = card.run().into_iter().collect();
+        assert!(card.faults_injected() > 0, "{policy:?}: storm never fired");
+        for ticket in 0..jobs.len() {
+            match done.get(&ticket) {
+                Some(out) => assert!(
+                    same_output(out, &reference[&ticket]),
+                    "{policy:?}: ticket {ticket} survived but diverged"
+                ),
+                None => {
+                    let Some((err, spec)) = card.take_failure(ticket) else {
+                        panic!("{policy:?}: ticket {ticket} was lost");
+                    };
+                    assert!(
+                        matches!(
+                            err,
+                            CoordinatorError::Faulted {
+                                attempts: MAX_ATTEMPTS,
+                                ..
+                            }
+                        ),
+                        "{policy:?}: wrong terminal error: {err}"
+                    );
+                    assert!(
+                        spec.is_some(),
+                        "dependency-free specs ride along for re-routing"
+                    );
+                }
+            }
+        }
+        assert!(
+            done.len() < jobs.len(),
+            "{policy:?}: a 1 µs all-port kill grid must defeat some job"
+        );
+        assert!(card.retries() > 0, "{policy:?}: aborts must retry first");
+        assert_eq!(
+            card.pinned_cache_bytes(),
+            0,
+            "{policy:?}: terminal failures must drain their pins"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deadlines: a job still queued when its budget expires fails typed as
+// DeadlineExceeded and is never re-routed — a deadline is a client
+// contract, not a card fault.
+// ---------------------------------------------------------------------
+
+#[test]
+fn queued_deadline_expires_typed_and_is_never_rerouted() {
+    let mut rng = Xoshiro256::new(0x7EA);
+    let blockers: Vec<JobSpec> = (0..8)
+        .map(|_| {
+            let data: Vec<u32> = (0..32_768).map(|_| rng.next_u32()).collect();
+            JobSpec::new(JobKind::Selection {
+                data: data.into(),
+                lo: 0,
+                hi: u32::MAX,
+            })
+        })
+        .collect();
+    let reference = single_card_outputs(Policy::FairShare, &blockers);
+
+    // Round-robin over 2 cards: 4 blockers per card fill every engine
+    // slot, so the deadlined ticket must wait — and expire.
+    let mut fleet = Fleet::new(cfg(), 2)
+        .with_policy(Policy::FairShare)
+        .with_router(RouterKind::RoundRobin);
+    for job in &blockers {
+        fleet.submit(job.clone());
+    }
+    let doomed = fleet.submit(
+        JobSpec::new(JobKind::Selection {
+            data: vec![1u32, 2, 3].into(),
+            lo: 0,
+            hi: 10,
+        })
+        .with_deadline(Some(1e-9)),
+    );
+    let done: BTreeMap<usize, JobOutput> = fleet.run().into_iter().collect();
+
+    assert_eq!(done.len(), blockers.len(), "every blocker completes");
+    for (ticket, out) in &done {
+        assert!(same_output(out, &reference[ticket]));
+    }
+    assert!(!done.contains_key(&doomed));
+    assert!(
+        matches!(
+            fleet.take_failure(doomed),
+            Some(CoordinatorError::DeadlineExceeded { .. })
+        ),
+        "the queued deadline must expire typed"
+    );
+    assert_eq!(
+        fleet.failovers(),
+        0,
+        "a deadline miss is the client's contract, never re-routed"
+    );
+}
+
+// ---------------------------------------------------------------------
+// End-to-end acceptance shape: the standard mix on a 4-card fleet via
+// run_chaos — nothing wrong, nothing lost, and the db executor degrades
+// to the CPU bit-identically.
+// ---------------------------------------------------------------------
+
+#[test]
+fn standard_mix_on_four_cards_recovers_end_to_end() {
+    let spec = ServeSpec {
+        clients: 2,
+        queries: 24,
+        seed: 0xC0FFEE,
+        rows: 8_000,
+        cache_bytes: 256 << 20,
+    };
+    let plan = FaultPlan::standard(7, 4);
+    let outcome = run_chaos(
+        &cfg(),
+        Policy::FairShare,
+        &spec,
+        4,
+        RouterKind::Affinity,
+        DEFAULT_HOST_BANDWIDTH,
+        &plan,
+    );
+    assert_eq!(outcome.submitted, spec.queries);
+    assert_eq!(outcome.wrong, 0, "no surviving output may diverge");
+    assert_eq!(outcome.lost, 0, "no ticket may vanish untyped");
+    assert_eq!(outcome.completed + outcome.failed, outcome.submitted);
+    assert!(outcome.faults_injected > 0, "the standard mix must fire");
+    assert!(outcome.goodput_qps > 0.0);
+
+    let db = run_chaos_db(&cfg(), "standard");
+    assert!(db.matches_cpu, "degraded results must equal the CPU path");
+    assert_eq!(db.downgrades, db.queries as u64);
+    assert!(db.retries > 0);
+
+    let clean = run_chaos_db(&cfg(), "none");
+    assert!(clean.matches_cpu);
+    assert_eq!(clean.downgrades, 0);
+    assert_eq!(clean.faults_injected, 0);
+}
