@@ -86,15 +86,15 @@ pub use job::{
     ColumnKey, DepExpr, DepInput, InputColumn, JobKind, JobOutput, JobRecord,
     JobSpec,
 };
-pub use policy::{plan_admission, Policy, MAX_CORUNNERS};
+pub use policy::{plan_admission, Policy, QueuedJob, MAX_CORUNNERS};
 pub use scheduler::{
     intermediate_key, Coordinator, CoordinatorError, CoordinatorStats, StatsView,
 };
 pub use serve::{
-    bench_json, chaos_json, mixed_workload, render_chaos, render_fleet,
-    render_outcomes, run_chaos, run_chaos_db, run_fleet, run_fleet_bench,
-    run_fleet_traced, run_policy, run_traced, run_traced_jobs,
-    skewed_cache_bytes, skewed_workload, CardOutcome, ChaosDbOutcome,
-    ChaosOutcome, FleetBench, FleetOutcome, PolicyOutcome, ServeSpec,
-    SKEW_TENANTS,
+    bench_json, chaos_json, mixed_workload, outputs_identical, render_chaos,
+    render_fleet, render_outcomes, run_chaos, run_chaos_db, run_fleet,
+    run_fleet_bench, run_fleet_traced, run_policy, run_traced,
+    run_traced_jobs, skewed_cache_bytes, skewed_workload, CardOutcome,
+    ChaosDbOutcome, ChaosOutcome, FleetBench, FleetOutcome, PolicyOutcome,
+    ServeSpec, SKEW_TENANTS,
 };

@@ -18,6 +18,13 @@
 //! * [`Policy::BandwidthAware`] — co-runs like fair-share but sizes each
 //!   grant by the job's estimated HBM traffic, so a 3-pass join is not
 //!   starved by a small selection.
+//! * [`Policy::Slo`] — co-runs like fair-share but admits in
+//!   earliest-deadline-first order with per-tenant interleaving, so a
+//!   request about to blow its SLO budget jumps the arrival order and no
+//!   single tenant monopolises the admission slots. Jobs without a
+//!   deadline sort last, in arrival order. This is the serving-side
+//!   policy the open-loop sweep (`hbmctl sweep`) exercises; the paper's
+//!   three closed-loop policies above stay [`Policy::all`].
 //!
 //! Ports granted to one job are disjoint from other jobs' — the
 //! ideal-partitioning discipline of §IV; contention between co-runners
@@ -52,6 +59,7 @@ pub enum Policy {
     Fifo,
     FairShare,
     BandwidthAware,
+    Slo,
 }
 
 impl Policy {
@@ -60,11 +68,21 @@ impl Policy {
             Policy::Fifo => "fifo",
             Policy::FairShare => "fair-share",
             Policy::BandwidthAware => "bandwidth-aware",
+            Policy::Slo => "slo",
         }
     }
 
+    /// The paper's three closed-loop policies — the set every benchmark
+    /// figure iterates. [`Policy::Slo`] is serving-specific and joins via
+    /// [`Policy::with_slo`].
     pub fn all() -> [Policy; 3] {
         [Policy::Fifo, Policy::FairShare, Policy::BandwidthAware]
+    }
+
+    /// The serving sweep's policy set: the three baselines plus the
+    /// SLO-aware scheduler.
+    pub fn with_slo() -> [Policy; 4] {
+        [Policy::Fifo, Policy::FairShare, Policy::BandwidthAware, Policy::Slo]
     }
 
     pub fn parse(s: &str) -> Option<Policy> {
@@ -72,6 +90,7 @@ impl Policy {
             "fifo" => Some(Policy::Fifo),
             "fair" | "fair-share" | "fairshare" => Some(Policy::FairShare),
             "bandwidth" | "bandwidth-aware" | "bw" => Some(Policy::BandwidthAware),
+            "slo" | "slo-aware" | "edf" => Some(Policy::Slo),
             _ => None,
         }
     }
@@ -92,6 +111,55 @@ pub struct QueuedJob {
     pub max_ports: usize,
     /// Estimated total HBM traffic, the bandwidth-aware weight.
     pub est_bytes: u64,
+    /// Absolute card-clock instant the job's deadline budget expires
+    /// (`submit_time + budget`); `None` when the job has no SLO. Only
+    /// [`Policy::Slo`] reads it.
+    pub deadline: Option<f64>,
+    /// Submitting tenant, the [`Policy::Slo`] fairness key.
+    pub client: usize,
+}
+
+impl QueuedJob {
+    /// A deadline-free, client-0 job — the shape every non-serving call
+    /// site wants.
+    pub fn new(ports_per_engine: usize, max_ports: usize, est_bytes: u64) -> Self {
+        Self { ports_per_engine, max_ports, est_bytes, deadline: None, client: 0 }
+    }
+}
+
+/// [`Policy::Slo`] admission order over the ready set: tenants take
+/// turns (round-robin over clients ordered by their most urgent job),
+/// and within each tenant jobs go earliest-deadline-first; deadline-free
+/// jobs sort last in arrival order. Returns indices into `queue`.
+/// Deterministic: ties break on arrival (queue) order.
+fn slo_order(queue: &[QueuedJob]) -> Vec<usize> {
+    // Per-client EDF queues, clients keyed by their most urgent entry.
+    let mut by_client: Vec<(usize, Vec<usize>)> = Vec::new();
+    let mut order: Vec<usize> = (0..queue.len()).collect();
+    order.sort_by(|&a, &b| {
+        let da = queue[a].deadline.unwrap_or(f64::INFINITY);
+        let db = queue[b].deadline.unwrap_or(f64::INFINITY);
+        da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    for idx in order {
+        let client = queue[idx].client;
+        match by_client.iter_mut().find(|(c, _)| *c == client) {
+            Some((_, v)) => v.push(idx),
+            None => by_client.push((client, vec![idx])),
+        }
+    }
+    // Interleave: one job per tenant per pass, tenants in urgency order.
+    let mut out = Vec::with_capacity(queue.len());
+    let mut cursor = vec![0usize; by_client.len()];
+    while out.len() < queue.len() {
+        for (ci, (_, jobs)) in by_client.iter().enumerate() {
+            if cursor[ci] < jobs.len() {
+                out.push(jobs[cursor[ci]]);
+                cursor[ci] += 1;
+            }
+        }
+    }
+    out
 }
 
 /// One admitted job for the upcoming round: queue position + port grant.
@@ -106,24 +174,31 @@ pub struct Admission {
 /// multiples of the job's ports-per-engine.
 pub fn plan_round(policy: Policy, queue: &[QueuedJob]) -> Vec<Admission> {
     assert!(!queue.is_empty(), "plan_round on an empty queue");
+    // Admission order: queue order for the closed-loop policies, EDF with
+    // tenant interleave for SLO. `order[k]` is an index into `queue`.
+    let order: Vec<usize> = match policy {
+        Policy::Slo => slo_order(queue),
+        _ => (0..queue.len()).collect(),
+    };
+    let n = queue.len().min(MAX_CORUNNERS);
     let grants: Vec<usize> = match policy {
-        Policy::Fifo => vec![clamp_grant(&queue[0], ENGINE_PORTS)],
-        Policy::FairShare => {
-            let n = queue.len().min(MAX_CORUNNERS);
+        Policy::Fifo => vec![clamp_grant(&queue[order[0]], ENGINE_PORTS)],
+        Policy::FairShare | Policy::Slo => {
             let share = ENGINE_PORTS / n;
-            queue[..n].iter().map(|j| clamp_grant(j, share)).collect()
+            order[..n].iter().map(|&i| clamp_grant(&queue[i], share)).collect()
         }
         Policy::BandwidthAware => {
-            let n = queue.len().min(MAX_CORUNNERS);
-            proportional_grants(&queue[..n])
+            let picked: Vec<QueuedJob> =
+                order[..n].iter().map(|&i| queue[i].clone()).collect();
+            proportional_grants(&picked)
         }
     };
 
     let mut next_port = 0usize;
     grants
         .into_iter()
-        .enumerate()
-        .map(|(queue_idx, grant)| {
+        .zip(order)
+        .map(|(grant, queue_idx)| {
             let ports: Vec<usize> = (next_port..next_port + grant).collect();
             next_port += grant;
             assert!(next_port <= ENGINE_PORTS, "port pool oversubscribed");
@@ -157,32 +232,39 @@ pub fn plan_admission(
             }
             1
         }
-        Policy::FairShare | Policy::BandwidthAware => {
+        Policy::FairShare | Policy::BandwidthAware | Policy::Slo => {
             if in_flight >= MAX_CORUNNERS {
                 return Vec::new();
             }
             MAX_CORUNNERS - in_flight
         }
     };
+    // Admission order (indices into `queue`): queue order for the
+    // closed-loop policies, EDF with tenant interleave for SLO.
+    let order: Vec<usize> = match policy {
+        Policy::Slo => slo_order(queue),
+        _ => (0..queue.len()).collect(),
+    };
     let admitted = queue.len().min(slots);
-    let candidates = &queue[..admitted];
+    let chosen = &order[..admitted];
+    let candidates: Vec<QueuedJob> = chosen.iter().map(|&i| queue[i].clone()).collect();
 
     // Target grants over the free pool.
     let grants: Vec<usize> = match policy {
         Policy::Fifo => vec![clamp_grant(&candidates[0], free_ports.len())],
-        Policy::FairShare => {
+        Policy::FairShare | Policy::Slo => {
             let share = free_ports.len() / admitted;
             candidates.iter().map(|j| clamp_grant(j, share.max(1))).collect()
         }
-        Policy::BandwidthAware => proportional_pool(candidates, free_ports.len()),
+        Policy::BandwidthAware => proportional_pool(&candidates, free_ports.len()),
     };
 
-    // Hand out the actual free ports, head-of-queue first; a job whose
+    // Hand out the actual free ports in admission order; a job whose
     // minimum grant no longer fits is skipped (a later 1-port selection
     // can still slip in behind a 2-port join).
     let mut next = 0usize;
     let mut admissions = Vec::new();
-    for (queue_idx, (job, grant)) in candidates.iter().zip(grants).enumerate() {
+    for ((&queue_idx, job), grant) in chosen.iter().zip(&candidates).zip(grants) {
         let remaining = free_ports.len() - next;
         let grant = grant.min((remaining / job.ports_per_engine) * job.ports_per_engine);
         if grant < job.ports_per_engine {
@@ -295,11 +377,15 @@ mod tests {
     use super::*;
 
     fn sel(est: u64) -> QueuedJob {
-        QueuedJob { ports_per_engine: 1, max_ports: ENGINE_PORTS, est_bytes: est }
+        QueuedJob::new(1, ENGINE_PORTS, est)
     }
 
     fn join(est: u64) -> QueuedJob {
-        QueuedJob { ports_per_engine: 2, max_ports: ENGINE_PORTS, est_bytes: est }
+        QueuedJob::new(2, ENGINE_PORTS, est)
+    }
+
+    fn slo_job(client: usize, deadline: Option<f64>) -> QueuedJob {
+        QueuedJob { deadline, client, ..QueuedJob::new(1, ENGINE_PORTS, 100) }
     }
 
     fn total_ports(adm: &[Admission]) -> usize {
@@ -450,11 +536,55 @@ mod tests {
 
     #[test]
     fn parse_and_names_roundtrip() {
-        for p in Policy::all() {
+        for p in Policy::with_slo() {
             assert_eq!(Policy::parse(p.name()), Some(p));
         }
         assert_eq!(Policy::parse("fair"), Some(Policy::FairShare));
         assert_eq!(Policy::parse("bw"), Some(Policy::BandwidthAware));
+        assert_eq!(Policy::parse("edf"), Some(Policy::Slo));
         assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn slo_admits_most_urgent_first_with_tenant_interleave() {
+        // Tenant 0 holds the two most urgent jobs; tenant 1's job must
+        // still land in the first tenant pass, ahead of tenant 0's
+        // second-most-urgent.
+        let q = vec![
+            slo_job(0, Some(5.0)),
+            slo_job(0, Some(1.0)),
+            slo_job(1, Some(9.0)),
+            slo_job(0, None),
+        ];
+        assert_eq!(slo_order(&q), vec![1, 2, 0, 3]);
+
+        let free: Vec<usize> = (0..ENGINE_PORTS).collect();
+        let adm = plan_admission(Policy::Slo, &q, &free, 0);
+        assert_eq!(adm.len(), 4);
+        assert_eq!(adm[0].queue_idx, 1, "EDF head admitted first");
+        assert_eq!(adm[1].queue_idx, 2, "other tenant interleaved");
+        assert!(disjoint(&adm));
+        assert!(total_ports(&adm) <= ENGINE_PORTS);
+    }
+
+    #[test]
+    fn slo_without_deadlines_degenerates_to_fair_share() {
+        let q = vec![sel(1), join(1), sel(1), sel(1), sel(1)];
+        let fair = plan_round(Policy::FairShare, &q);
+        let slo = plan_round(Policy::Slo, &q);
+        assert_eq!(fair.len(), slo.len());
+        for (a, b) in fair.iter().zip(&slo) {
+            assert_eq!(a.queue_idx, b.queue_idx);
+            assert_eq!(a.ports, b.ports);
+        }
+    }
+
+    #[test]
+    fn slo_respects_corunner_budget_and_free_ports() {
+        let q = vec![slo_job(0, Some(1.0)), slo_job(1, Some(2.0))];
+        assert!(plan_admission(Policy::Slo, &q, &[3, 4], MAX_CORUNNERS).is_empty());
+        let adm = plan_admission(Policy::Slo, &q, &[3, 4], 1);
+        assert!(!adm.is_empty());
+        assert!(adm.iter().flat_map(|a| a.ports.iter()).all(|p| [3, 4].contains(p)));
     }
 }

@@ -721,6 +721,20 @@ impl Coordinator {
         self.clock
     }
 
+    /// Fast-forward a *fully idle* card (no queued or in-flight work) to
+    /// card time `t` and return `true`; a busy card or a past instant is
+    /// a no-op returning `false`. Open-loop drivers use this to move the
+    /// clock to the next arrival instead of spinning: the card simply has
+    /// nothing to do until then, so jumping is exact, not approximate.
+    pub fn advance_idle_to(&mut self, t: f64) -> bool {
+        if t <= self.clock || !self.queue.is_empty() || !self.card.session.idle() {
+            return false;
+        }
+        self.card.session.sync_now(t);
+        self.clock = t;
+        true
+    }
+
     /// Enqueue a job; returns its id. Work happens in [`run`].
     ///
     /// A spec with [`deps`](JobSpec::deps) is dependency-gated: it will
@@ -2560,6 +2574,11 @@ fn queued_view(pending: &Pending) -> QueuedJob {
         ports_per_engine: ppe,
         max_ports: engine_cap * ppe,
         est_bytes: pending.spec.kind.estimated_hbm_bytes(),
+        // Absolute expiry instant: deadline budgets count from submit
+        // (the serving front-end pre-charges queue wait by shrinking the
+        // budget at dispatch, so this stays the job's true SLO point).
+        deadline: pending.spec.deadline.map(|b| pending.record.submit_time + b),
+        client: pending.spec.client,
     }
 }
 

@@ -238,8 +238,10 @@ impl PolicyOutcome {
 }
 
 /// Two job outputs carry bit-identical payloads (floats compared by bit
-/// pattern — "functionally identical" admits no tolerance here).
-fn outputs_identical(a: &JobOutput, b: &JobOutput) -> bool {
+/// pattern — "functionally identical" admits no tolerance here). Shared
+/// with the serving front-end's closed-loop replay check
+/// ([`crate::serve_front`]).
+pub fn outputs_identical(a: &JobOutput, b: &JobOutput) -> bool {
     match (a, b) {
         (JobOutput::Selection(x), JobOutput::Selection(y)) => x == y,
         (JobOutput::Join(x), JobOutput::Join(y)) => x == y,

@@ -53,6 +53,11 @@ pub enum RequestError {
     EmptyGrid,
     /// Payload dimensions are inconsistent.
     BadShape(String),
+    /// The accelerator's bounded admission window is full: `in_flight`
+    /// jobs already queued or running against a bound of `bound`
+    /// (`FpgaAccelerator::with_admission_bound`). Backpressure, not a
+    /// validation error — retry after draining completed work.
+    Overloaded { in_flight: usize, bound: usize },
 }
 
 impl std::fmt::Display for RequestError {
@@ -63,6 +68,11 @@ impl std::fmt::Display for RequestError {
                 write!(f, "sgd request needs a non-empty hyperparameter grid")
             }
             RequestError::BadShape(why) => write!(f, "bad payload shape: {why}"),
+            RequestError::Overloaded { in_flight, bound } => write!(
+                f,
+                "accelerator overloaded: {in_flight} jobs in flight \
+                 against an admission bound of {bound}"
+            ),
         }
     }
 }

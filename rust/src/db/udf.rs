@@ -113,6 +113,11 @@ pub struct FpgaAccelerator {
     cards: Vec<Arc<Mutex<Coordinator>>>,
     /// Routes each submission to a card (trivial on one card).
     router: Router,
+    /// Bounded-admission window: most jobs allowed in flight across the
+    /// deployment before [`try_submit`](FpgaAccelerator::try_submit)
+    /// answers [`RequestError::Overloaded`]. `None` = unbounded (the
+    /// closed-loop default).
+    admission_bound: Option<usize>,
 }
 
 impl FpgaAccelerator {
@@ -128,7 +133,20 @@ impl FpgaAccelerator {
             cards: vec![Arc::clone(&coord)],
             coord,
             router: Router::new(RouterKind::Affinity),
+            admission_bound: None,
         }
+    }
+
+    /// Bound the deployment-wide in-flight window: once `bound` jobs are
+    /// queued or running, [`try_submit`](FpgaAccelerator::try_submit)
+    /// refuses further work with the typed
+    /// [`RequestError::Overloaded`] until completions drain — explicit
+    /// backpressure instead of an unbounded card queue. `bound` must be
+    /// at least 1.
+    pub fn with_admission_bound(mut self, bound: usize) -> Self {
+        assert!(bound >= 1, "admission bound must admit at least one job");
+        self.admission_bound = Some(bound);
+        self
     }
 
     /// Default engine cap for subsequent requests.
@@ -200,6 +218,12 @@ impl FpgaAccelerator {
         &mut self,
         request: OffloadRequest,
     ) -> Result<JobHandle, RequestError> {
+        if let Some(bound) = self.admission_bound {
+            let in_flight = self.in_flight();
+            if in_flight >= bound {
+                return Err(RequestError::Overloaded { in_flight, bound });
+            }
+        }
         let spec = request.into_spec(self.engines)?;
         let card = self.route_query_card(&RouteQuery::from_spec(&spec));
         let arc = Arc::clone(&self.cards[card]);
@@ -620,6 +644,35 @@ mod tests {
         cpu.sort_unstable();
         assert_eq!(fpga[..], cpu[..]);
         assert!(t.exec > 0.0 && t.copy_in > 0.0 && t.copy_out > 0.0);
+    }
+
+    #[test]
+    fn admission_bound_backpressures_with_typed_overloaded() {
+        let w = SelectionWorkload::uniform(50_000, 0.1, 5);
+        let mut acc = acc().with_admission_bound(2);
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            handles.push(
+                acc.try_submit(OffloadRequest::select(w.lo, w.hi).on(&w.data))
+                    .expect("window has room"),
+            );
+        }
+        // Third submission hits the bound: typed backpressure, nothing
+        // enqueued.
+        match acc.try_submit(OffloadRequest::select(w.lo, w.hi).on(&w.data)) {
+            Err(RequestError::Overloaded { in_flight, bound }) => {
+                assert_eq!((in_flight, bound), (2, 2));
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(acc.in_flight(), 2);
+        // Draining completions reopens the window.
+        for h in &mut handles {
+            h.wait_selection();
+        }
+        assert!(acc
+            .try_submit(OffloadRequest::select(w.lo, w.hi).on(&w.data))
+            .is_ok());
     }
 
     #[test]

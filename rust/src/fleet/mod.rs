@@ -60,7 +60,7 @@ pub use router::{CardView, Partitioner, RouteQuery, Router, RouterKind};
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::job::{JobOutput, JobSpec};
+use crate::coordinator::job::{JobOutput, JobRecord, JobSpec};
 use crate::coordinator::policy::Policy;
 use crate::coordinator::scheduler::{
     Coordinator, CoordinatorError, CoordinatorStats,
@@ -261,71 +261,115 @@ impl Fleet {
     pub fn try_run(
         &mut self,
     ) -> Result<Vec<(usize, JobOutput)>, CoordinatorError> {
-        loop {
-            let busy: Vec<usize> = (0..self.cards.len())
-                .filter(|&i| self.cards[i].pending() > 0)
-                .collect();
-            if busy.is_empty() {
-                break;
-            }
-            // A card inside an injected link-degrade window demands only
-            // its degraded rate; the solver's grant and the card's own
-            // degrade cap then compose through one `min` instead of
-            // scaling twice.
-            let nominal = self.nominal_link.bandwidth;
-            let cards = &mut self.cards;
-            let demands: Vec<f64> = busy
-                .iter()
-                .map(|&i| nominal * cards[i].link_demand_factor())
-                .collect();
-            let shares = max_min_share(&demands, self.host_bandwidth);
-            for (&card, &share) in busy.iter().zip(&shares) {
-                let mut link = self.nominal_link.clone();
-                link.bandwidth = share.min(self.nominal_link.bandwidth);
-                self.cards[card].set_link(link);
-            }
-            // First minimum wins ties: lowest card id, deterministically.
-            let mut lagging = busy[0];
-            for &card in &busy[1..] {
-                if self.cards[card].simulated_time()
-                    < self.cards[lagging].simulated_time()
-                {
-                    lagging = card;
-                }
-            }
-            let ids = self.cards[lagging].step()?;
-            // Terminal failures: re-route the spec when it survived and a
-            // live card exists, otherwise surface the typed error on the
-            // ticket.
-            for id in ids {
-                if let Some((err, spec)) = self.cards[lagging].take_failure(id) {
-                    self.note_failure(lagging, id, err, spec);
-                }
-            }
-            // Outage failover: everything still re-routable on a down
-            // card restarts elsewhere; DAG-tied jobs stay and ride the
-            // window out on local retry.
-            if self.cards.len() > 1 && self.cards[lagging].is_down() {
-                for (old_id, spec) in self.cards[lagging].drain_reroutable() {
-                    self.reroute(lagging, old_id, spec);
-                }
-            }
-        }
-        for card in &mut self.cards {
-            card.set_link(self.nominal_link.clone());
-        }
+        while self.step_once()? {}
         let mut outputs = Vec::with_capacity(self.tickets.len() - self.drained);
         for ticket in self.drained..self.tickets.len() {
             let (card, id) = self.tickets[ticket];
             // Abandoned jobs (e.g. zero-match selections a policy chose
             // to drop) produce no output; their ticket is skipped, same
-            // as `Coordinator::run` omitting them.
+            // as `Coordinator::run` omitting them. Tickets already
+            // claimed incrementally via `try_take` are skipped the same
+            // way.
             if let Some((output, _record)) = self.cards[card].take_result(id) {
                 outputs.push((ticket, output));
             }
         }
         self.drained = self.tickets.len();
         Ok(outputs)
+    }
+
+    /// Advance the fleet by one scheduling step: re-solve the shared
+    /// ingress over the busy cards, step the lagging one to its next
+    /// event, and handle any failures/failover it surfaced. Returns
+    /// `Ok(true)` while some card still holds work, `Ok(false)` — after
+    /// restoring nominal link rates — once the fleet is drained. The
+    /// serving front-end drives this directly, claiming completions
+    /// incrementally with [`Fleet::try_take`]; [`try_run`](Fleet::try_run)
+    /// is this in a loop plus a bulk drain.
+    pub fn step_once(&mut self) -> Result<bool, CoordinatorError> {
+        let busy: Vec<usize> = (0..self.cards.len())
+            .filter(|&i| self.cards[i].pending() > 0)
+            .collect();
+        if busy.is_empty() {
+            for card in &mut self.cards {
+                card.set_link(self.nominal_link.clone());
+            }
+            return Ok(false);
+        }
+        // A card inside an injected link-degrade window demands only
+        // its degraded rate; the solver's grant and the card's own
+        // degrade cap then compose through one `min` instead of
+        // scaling twice.
+        let nominal = self.nominal_link.bandwidth;
+        let cards = &mut self.cards;
+        let demands: Vec<f64> = busy
+            .iter()
+            .map(|&i| nominal * cards[i].link_demand_factor())
+            .collect();
+        let shares = max_min_share(&demands, self.host_bandwidth);
+        for (&card, &share) in busy.iter().zip(&shares) {
+            let mut link = self.nominal_link.clone();
+            link.bandwidth = share.min(self.nominal_link.bandwidth);
+            self.cards[card].set_link(link);
+        }
+        // First minimum wins ties: lowest card id, deterministically.
+        let mut lagging = busy[0];
+        for &card in &busy[1..] {
+            if self.cards[card].simulated_time()
+                < self.cards[lagging].simulated_time()
+            {
+                lagging = card;
+            }
+        }
+        let ids = self.cards[lagging].step()?;
+        // Terminal failures: re-route the spec when it survived and a
+        // live card exists, otherwise surface the typed error on the
+        // ticket.
+        for id in ids {
+            if let Some((err, spec)) = self.cards[lagging].take_failure(id) {
+                self.note_failure(lagging, id, err, spec);
+            }
+        }
+        // Outage failover: everything still re-routable on a down
+        // card restarts elsewhere; DAG-tied jobs stay and ride the
+        // window out on local retry.
+        if self.cards.len() > 1 && self.cards[lagging].is_down() {
+            for (old_id, spec) in self.cards[lagging].drain_reroutable() {
+                self.reroute(lagging, old_id, spec);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Claim ticket `index`'s completed output and record, if it finished.
+    /// Open-loop drivers poll this between [`step_once`](Fleet::step_once)
+    /// calls; a ticket claimed here is simply absent from a later
+    /// [`run`](Fleet::run) drain. The record's timestamps are on the
+    /// *serving card's* clock.
+    pub fn try_take(&mut self, index: usize) -> Option<(JobOutput, JobRecord)> {
+        let &(card, id) = self.tickets.get(index)?;
+        self.cards[card].take_result(id)
+    }
+
+    /// The fleet's ingress frontier: the earliest card clock. The fleet
+    /// always steps its laggard, so every card sits at or ahead of this
+    /// instant; an open-loop driver that stamps arrivals here and keeps
+    /// idle cards advanced ([`advance_idle_to`](Fleet::advance_idle_to))
+    /// never submits into any card's past.
+    pub fn ingress_time(&self) -> f64 {
+        self.cards
+            .iter()
+            .map(|c| c.simulated_time())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Fast-forward every *fully idle* card (nothing queued or running)
+    /// to card time `t`; busy cards are untouched (see
+    /// [`Coordinator::advance_idle_to`]).
+    pub fn advance_idle_to(&mut self, t: f64) {
+        for card in &mut self.cards {
+            card.advance_idle_to(t);
+        }
     }
 
     /// The fleet-wide ticket backing card `card`'s job `id`, if the job

@@ -52,6 +52,18 @@
 //!   end-to-end deadlines, and graceful CPU degradation in the DBMS
 //!   executor — with every surviving result bit-identical to the
 //!   fault-free run (`hbmctl chaos --cards N --seed S --faults standard`).
+//! * **L3.75 serving front-end** — open-loop admission control
+//!   ([`serve_front`]): a declarative workload of clients firing on
+//!   seeded Poisson/burst arrivals regardless of completions, a
+//!   *bounded* admission queue with explicit backpressure and load
+//!   shedding (typed rejection, drop-oldest, drop-over-deadline,
+//!   per-tenant quotas), deadline budgets that start at arrival so
+//!   queue wait counts against them, and an SLO-aware dispatch policy
+//!   (EDF + fair tenant interleave) next to the FIFO/fair/bandwidth
+//!   card policies. `hbmctl sweep` runs the client ladder to
+//!   saturation and writes `BENCH_sweep.json` — throughput vs p99 per
+//!   policy, every offered request accounted
+//!   completed/shed/rejected/expired.
 //! * **L2/L1 (python/compile)** — the JAX SGD model and Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` at build time and executed from
 //!   [`runtime`] — Python never runs at request time.
@@ -75,6 +87,7 @@ pub mod floorplan;
 pub mod hbm;
 pub mod interconnect;
 pub mod runtime;
+pub mod serve_front;
 pub mod trace;
 pub mod util;
 pub mod workloads;

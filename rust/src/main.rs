@@ -9,6 +9,8 @@
 //!   plan        whole-plan pipelines vs operator-at-a-time offload
 //!   check       static plan analysis (lint a workload, no execution)
 //!   serve       multi-client mixed workload through the L3 coordinator
+//!   sweep       open-loop client ladder: bounded admission, load shedding,
+//!               SLO-aware scheduling under overload
 //!   chaos       seeded fault injection over the fleet: retry, failover,
 //!               deadlines, graceful CPU degradation
 //!   trace       card-clock trace of the analytics mix + validation matrix
@@ -43,6 +45,7 @@ use hbm_analytics::fleet::RouterKind;
 use hbm_analytics::hbm::shim::ENGINE_PORTS;
 use hbm_analytics::hbm::{fig2_sweep, FabricClock, HbmConfig};
 use hbm_analytics::runtime::{Runtime, SgdEpochExecutor};
+use hbm_analytics::serve_front;
 use hbm_analytics::util::cli::Args;
 use hbm_analytics::util::units::MIB;
 use hbm_analytics::workloads::datasets::{DatasetSpec, TaskKind};
@@ -58,6 +61,7 @@ fn main() -> ExitCode {
         Some("plan") => cmd_plan(&args),
         Some("check") => cmd_check(&args),
         Some("serve") => cmd_serve(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("chaos") => cmd_chaos(&args),
         Some("trace") => cmd_trace(&args),
         Some("bench-host") => cmd_bench_host(&args),
@@ -97,6 +101,8 @@ fn subcommand_list() -> &'static str {
      \u{20} plan        whole-plan pipelines vs operator-at-a-time offload\n\
      \u{20} check       static plan analysis: lint a workload without executing it\n\
      \u{20} serve       multi-client mixed workload through the L3 coordinator\n\
+     \u{20} sweep       open-loop client ladder: bounded admission, load\n\
+     \u{20}             shedding, SLO-aware scheduling under overload\n\
      \u{20} chaos       seeded fault injection over the fleet: retry, failover,\n\
      \u{20}             deadlines, graceful CPU degradation\n\
      \u{20} trace       card-clock trace of the analytics mix (Perfetto JSON)\n\
@@ -107,7 +113,7 @@ fn subcommand_list() -> &'static str {
 
 fn usage() {
     eprintln!(
-        "usage: hbmctl <figures|microbench|resources|train|query|plan|check|serve|chaos|trace|bench-host|help> [options]\n\
+        "usage: hbmctl <figures|microbench|resources|train|query|plan|check|serve|sweep|chaos|trace|bench-host|help> [options]\n\
          \n\
          figures    --fig <id|all> --scale <f> --out <dir> --artifacts <dir>\n\
          microbench --ports <list> --separations <list> --clock <200|300|400>\n\
@@ -145,6 +151,20 @@ fn usage() {
          \u{20}          additionally replay through an N-card fleet (affinity\n\
          \u{20}          vs round-robin routing, shared host ingress), appending\n\
          \u{20}          the fleet scaling block to the artifact\n\
+         sweep      --clients-max <n> --queries-per-client <m> --queue-depth <d>\n\
+         \u{20}          --arrival-rate <qps> --deadline-ms <f> --rows <n> --seed <s>\n\
+         \u{20}          --cards <n> --cache-mib <n> --out <file.json> --point-dir <dir>\n\
+         \u{20}          runs the open-loop client ladder (1..clients-max, powers\n\
+         \u{20}          of two) per serving policy: seeded Poisson arrivals at a\n\
+         \u{20}          rate calibrated to 2x measured capacity at the top rung,\n\
+         \u{20}          a bounded admission queue with explicit backpressure and\n\
+         \u{20}          load shedding, deadlines charged from arrival, and the\n\
+         \u{20}          SLO-aware (EDF + tenant-fair) policy next to the\n\
+         \u{20}          FIFO/fair/bandwidth baselines; every point is replayed\n\
+         \u{20}          closed-loop to prove accepted results bit-identical and\n\
+         \u{20}          every offered request accounted; writes one JSON per\n\
+         \u{20}          point under --point-dir and the consolidated\n\
+         \u{20}          BENCH_sweep.json with the saturated fifo-vs-slo block\n\
          chaos      --cards <n> --seed <s> --faults <none|standard|heavy>\n\
          \u{20}          --clients <n> --queries <m> --rows <n> --router <r>\n\
          \u{20}          --policy <p> --host-gbs <f> --out <file.json>\n\
@@ -800,6 +820,92 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         coordinator::bench_json(&spec, &outcomes, fleet_bench.as_ref()),
     )?;
     println!("wrote {out_path}");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    // Counts and rates go through the validating accessors: a zero
+    // ladder top or queue bound, or a 0 / NaN / inf arrival rate or
+    // deadline, all *parse* but poison the open-loop pump downstream,
+    // so they are typed CLI errors here.
+    let spec = serve_front::SweepSpec {
+        clients_max: args.get_count("clients-max", 64)?,
+        queries_per_client: args.get_count("queries-per-client", 6)?,
+        queue_depth: args.get_count("queue-depth", 32)?,
+        arrival_rate: if args.has("arrival-rate") {
+            Some(args.get_positive_f64("arrival-rate", 1.0)?)
+        } else {
+            None
+        },
+        deadline: if args.has("deadline-ms") {
+            Some(args.get_positive_f64("deadline-ms", 1.0)? * 1e-3)
+        } else {
+            None
+        },
+        rows: args.get_count("rows", 12_000)?,
+        seed: args.get_parsed("seed", 0xC0FFEEu64)?,
+        cards: args.get_count("cards", 1)?,
+        cache_bytes: args.get_parsed("cache-mib", 4096u64)? * MIB,
+    };
+    let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+    println!(
+        "sweeping open-loop clients 1..{} across serving policies \
+         ({} queries/client/rung, queue bound {}, {} card{}, seed {:#x})",
+        spec.clients_max,
+        spec.queries_per_client,
+        spec.queue_depth,
+        spec.cards,
+        if spec.cards == 1 { "" } else { "s" },
+        spec.seed
+    );
+    let report = serve_front::run_sweep(&cfg, &spec);
+    println!("{}", serve_front::render_sweep(&report));
+    for p in &report.points {
+        anyhow::ensure!(
+            p.accounted,
+            "point clients={} policy={} lost requests (offered {} != \
+             completed {} + shed {} + rejected {} + expired {})",
+            p.clients,
+            p.policy,
+            p.offered,
+            p.completed,
+            p.shed,
+            p.rejected,
+            p.expired
+        );
+        anyhow::ensure!(
+            p.wrong == 0 && p.lost == 0,
+            "point clients={} policy={} failed replay verification \
+             (wrong {}, lost {})",
+            p.clients,
+            p.policy,
+            p.wrong,
+            p.lost
+        );
+        anyhow::ensure!(
+            p.max_queue_depth <= p.queue_bound,
+            "point clients={} policy={} exceeded the admission bound \
+             ({} > {})",
+            p.clients,
+            p.policy,
+            p.max_queue_depth,
+            p.queue_bound
+        );
+    }
+
+    let point_dir = args.get_str("point-dir", "SWEEP");
+    std::fs::create_dir_all(&point_dir)?;
+    for p in &report.points {
+        let path =
+            format!("{point_dir}/point_c{}_{}.json", p.clients, p.policy);
+        std::fs::write(&path, format!("{}\n", serve_front::point_json(p)))?;
+    }
+    let out_path = args.get_str("out", "BENCH_sweep.json");
+    std::fs::write(&out_path, serve_front::sweep_json(&report))?;
+    println!(
+        "wrote {out_path} and {} per-point files under {point_dir}/",
+        report.points.len()
+    );
     Ok(())
 }
 

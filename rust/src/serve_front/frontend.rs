@@ -1,0 +1,967 @@
+//! The open-loop pump: seeded arrivals, bounded admission, deadline
+//! accounting from arrival, and SLO-aware dispatch onto a card or fleet.
+//!
+//! Closed-loop replays (`hbmctl serve`) can never overload the card —
+//! each simulated client waits for its previous query. This module
+//! removes that flow control: a [`WorkloadSpec`] describes clients that
+//! fire on a seeded arrival process *regardless* of completions, and
+//! [`run_open_loop`] drives the offered stream through a bounded
+//! [`AdmissionQueue`] into a [`Coordinator`] (or a [`Fleet`] under
+//! `cards > 1`). Every offered request ends in exactly one
+//! [`Disposition`] — completed, shed, rejected, or expired — and the
+//! report proves the partition ([`ServeReport::accounted`]).
+//!
+//! Deadline accounting starts at **arrival**, not dispatch: a request
+//! that waits in the admission queue burns its budget there, expires
+//! with a typed [`CoordinatorError::DeadlineExceeded`] without ever
+//! being dispatched, and a request that does dispatch carries only its
+//! *remaining* budget onto the card ([`JobSpec::with_deadline`]).
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+
+use crate::coordinator::serve::{
+    mixed_workload, outputs_identical, skewed_workload, ServeSpec,
+};
+use crate::coordinator::{
+    Coordinator, CoordinatorError, CoordinatorStats, JobOutput, JobRecord,
+    JobSpec, Policy, MAX_CORUNNERS,
+};
+use crate::fleet::Fleet;
+use crate::hbm::HbmConfig;
+use crate::trace::{Event, Tracer};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::percentile_nearest_rank;
+
+use super::queue::{
+    AdmissionQueue, DispatchOrder, Offer, OverflowAction, QueuedRequest,
+    ShedPolicy,
+};
+
+/// How arrivals are spaced on the ingress clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival gaps at the
+    /// aggregate rate — the classic open-loop stressor.
+    Poisson,
+    /// Bursty arrivals: epochs are Poisson at `rate / size`, and each
+    /// epoch lands `size` requests at the same instant, so the mean
+    /// rate matches Poisson while the queue sees clustered demand.
+    Burst { size: usize },
+}
+
+/// A declarative open-loop workload: who sends, how fast, and with what
+/// latency budget. Same seed ⇒ bit-identical requests and arrivals.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Simulated tenants; requests round-robin over them (or draw from
+    /// the skewed tenant mix under `skewed`).
+    pub clients: usize,
+    /// Total offered requests.
+    pub queries: usize,
+    pub seed: u64,
+    /// Rows per generated column.
+    pub rows: usize,
+    pub cache_bytes: u64,
+    /// Aggregate arrival rate, requests per simulated second.
+    pub arrival_rate: f64,
+    pub arrivals: ArrivalProcess,
+    /// Per-request latency budget in simulated seconds, measured from
+    /// arrival. `None` = no deadline.
+    pub deadline: Option<f64>,
+    /// Draw tenants from the quadratically skewed fleet mix instead of
+    /// the uniform round-robin mix.
+    pub skewed: bool,
+}
+
+/// One offered request: a job payload plus its open-loop arrival.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Offered-load index (also the id in front-end trace events).
+    pub id: usize,
+    pub client: usize,
+    /// Arrival instant on the ingress clock.
+    pub arrival: f64,
+    /// Absolute expiry instant (`arrival + budget`), if deadlined.
+    pub deadline: Option<f64>,
+    pub spec: JobSpec,
+}
+
+/// Materialize the offered stream: job payloads from the serve-layer
+/// workload generators, arrival instants from [`arrival_times`].
+pub fn requests(wl: &WorkloadSpec) -> Vec<Request> {
+    let spec = ServeSpec {
+        clients: wl.clients,
+        queries: wl.queries,
+        seed: wl.seed,
+        rows: wl.rows,
+        cache_bytes: wl.cache_bytes,
+    };
+    let jobs =
+        if wl.skewed { skewed_workload(&spec) } else { mixed_workload(&spec) };
+    let times = arrival_times(wl);
+    jobs.into_iter()
+        .zip(times)
+        .enumerate()
+        .map(|(id, (spec, arrival))| Request {
+            id,
+            client: spec.client,
+            arrival,
+            deadline: wl.deadline.map(|b| arrival + b),
+            spec,
+        })
+        .collect()
+}
+
+/// Seeded arrival instants for the offered stream, in seconds from 0.
+/// Deterministic in `(seed, arrival_rate, arrivals, queries)`.
+pub fn arrival_times(wl: &WorkloadSpec) -> Vec<f64> {
+    assert!(
+        wl.arrival_rate > 0.0 && wl.arrival_rate.is_finite(),
+        "arrival rate must be positive and finite"
+    );
+    let mut rng = Xoshiro256::new(wl.seed ^ 0xA221_0CE5);
+    let mut times = Vec::with_capacity(wl.queries);
+    let mut t = 0.0;
+    match wl.arrivals {
+        ArrivalProcess::Poisson => {
+            for _ in 0..wl.queries {
+                t += exp_gap(&mut rng, wl.arrival_rate);
+                times.push(t);
+            }
+        }
+        ArrivalProcess::Burst { size } => {
+            let size = size.max(1);
+            while times.len() < wl.queries {
+                t += exp_gap(&mut rng, wl.arrival_rate / size as f64);
+                for _ in 0..size {
+                    if times.len() == wl.queries {
+                        break;
+                    }
+                    times.push(t);
+                }
+            }
+        }
+    }
+    times
+}
+
+/// One exponential inter-arrival gap via inverse CDF. `next_f64` is in
+/// `[0, 1)`, so `1 - u` is in `(0, 1]` and the log is finite.
+fn exp_gap(rng: &mut Xoshiro256, rate: f64) -> f64 {
+    let u = rng.next_f64();
+    -(1.0 - u).ln() / rate
+}
+
+/// Front-end knobs: the queue bound, what to shed, how to order
+/// dispatch, and whether deadlines are enforced at all.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontEndConfig {
+    pub queue_depth: usize,
+    pub shed: ShedPolicy,
+    pub order: DispatchOrder,
+    /// Enforce request deadlines (queue expiry + on-card expiry via the
+    /// remaining budget). Off for the SLO-oblivious baselines, which
+    /// complete everything they admit no matter how late.
+    pub enforce_deadlines: bool,
+    /// Requests allowed in flight on each card (the card's own queue
+    /// plus its co-runners); the pump dispatches only while in-flight
+    /// count is below `dispatch_window × cards`.
+    pub dispatch_window: usize,
+}
+
+/// A named serving policy: the card's engine-slot policy paired with a
+/// front-end configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingPolicy {
+    pub name: &'static str,
+    /// Engine-slot admission policy the card itself runs.
+    pub card_policy: Policy,
+    pub front: FrontEndConfig,
+}
+
+/// The serving ladder's policy roster: the three closed-loop card
+/// policies behind SLO-oblivious front-ends, plus the SLO-aware
+/// configuration (EDF-fair dispatch, per-tenant quota, drop-expired
+/// shedding, deadlines enforced).
+pub fn serving_policies(queue_depth: usize, clients: usize) -> Vec<ServingPolicy> {
+    let window = 2 * MAX_CORUNNERS;
+    let base = |shed: ShedPolicy| FrontEndConfig {
+        queue_depth,
+        shed,
+        order: DispatchOrder::Arrival,
+        enforce_deadlines: false,
+        dispatch_window: window,
+    };
+    // Allow each tenant up to twice its fair share of the queue; with
+    // one tenant the quota never binds, which is correct — a lone
+    // tenant may use the whole queue.
+    let quota = (2 * queue_depth / clients.max(1)).max(1);
+    vec![
+        ServingPolicy {
+            name: "fifo",
+            card_policy: Policy::Fifo,
+            front: base(ShedPolicy::reject()),
+        },
+        ServingPolicy {
+            name: "fair-share",
+            card_policy: Policy::FairShare,
+            front: base(ShedPolicy {
+                on_full: OverflowAction::DropOldest,
+                tenant_quota: None,
+            }),
+        },
+        ServingPolicy {
+            name: "bandwidth-aware",
+            card_policy: Policy::BandwidthAware,
+            front: base(ShedPolicy::reject()),
+        },
+        ServingPolicy {
+            name: "slo",
+            card_policy: Policy::Slo,
+            front: FrontEndConfig {
+                queue_depth,
+                shed: ShedPolicy {
+                    on_full: OverflowAction::DropExpired,
+                    tenant_quota: Some(quota),
+                },
+                order: DispatchOrder::EdfFair,
+                enforce_deadlines: true,
+                dispatch_window: window,
+            },
+        },
+    ]
+}
+
+/// Where one offered request ended — exactly one per request, so
+/// (completed ∪ shed ∪ rejected ∪ expired) partitions the offered load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// Completed on the card; its latency and output are recorded.
+    Completed,
+    /// Shed from the admission queue to make room for newer work.
+    Shed,
+    /// Refused at admission (backpressure: queue full or tenant quota).
+    Rejected,
+    /// Deadline expired — in the queue or on the card — and the request
+    /// carries a typed [`CoordinatorError::DeadlineExceeded`].
+    Expired,
+}
+
+/// Everything one open-loop run produced, with the accounting needed to
+/// prove no request was lost and the queue stayed bounded.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub policy: &'static str,
+    pub offered: usize,
+    /// Per-request disposition, indexed by request id.
+    pub dispositions: Vec<Disposition>,
+    /// `(request id, end-to-end latency)` for completed requests, in
+    /// completion order. Latency runs from *arrival* (queue wait + card
+    /// queue wait + service).
+    pub latencies: Vec<(usize, f64)>,
+    /// `(request id, output)` for completed requests, completion order.
+    pub outputs: Vec<(usize, JobOutput)>,
+    /// Typed failures for expired requests. Front-end queue expiries
+    /// carry `DeadlineExceeded { job: request id }`.
+    pub failures: Vec<(usize, CoordinatorError)>,
+    pub shed: usize,
+    pub rejected: usize,
+    pub expired: usize,
+    /// High-water admission-queue occupancy — provably `<= queue_bound`.
+    pub max_queue_depth: usize,
+    pub queue_bound: usize,
+    /// Ingress clock when the run drained.
+    pub makespan: f64,
+    /// Merged front-end + card event stream (single-card runs with
+    /// tracing on; empty otherwise).
+    pub events: Vec<Event>,
+    /// Card accounting (single-card runs; `None` under a fleet).
+    pub stats: Option<CoordinatorStats>,
+}
+
+impl ServeReport {
+    pub fn completed(&self) -> usize {
+        self.latencies.len()
+    }
+
+    /// The partition proof: every offered request has exactly one fate.
+    pub fn accounted(&self) -> bool {
+        self.completed() + self.shed + self.rejected + self.expired
+            == self.offered
+    }
+
+    /// Completed requests per simulated second.
+    pub fn goodput_qps(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / self.makespan
+        }
+    }
+
+    /// Nearest-rank latency percentile over completed requests (0.0
+    /// when nothing completed).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let v: Vec<f64> = self.latencies.iter().map(|&(_, l)| l).collect();
+        percentile_nearest_rank(&v, p)
+    }
+
+    /// Mean latency over completed requests (0.0 when nothing
+    /// completed).
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.latencies.iter().map(|&(_, l)| l).sum();
+        sum / self.latencies.len() as f64
+    }
+}
+
+/// The execution target behind the admission queue: one card or a
+/// routed fleet, under a uniform submit/step/claim protocol.
+enum Backend {
+    Card(Box<Coordinator>),
+    Fleet(Box<Fleet>),
+}
+
+impl Backend {
+    /// The ingress clock: the card's clock, or the fleet's least
+    /// advanced card (new work lands no earlier than this).
+    fn now(&self) -> f64 {
+        match self {
+            Backend::Card(c) => c.simulated_time(),
+            Backend::Fleet(f) => f.ingress_time(),
+        }
+    }
+
+    /// Fast-forward an idle backend to `t` (the next arrival), so an
+    /// empty card never has to step through dead time. Returns whether
+    /// the ingress clock reached `t`.
+    fn advance_idle_to(&mut self, t: f64) -> bool {
+        match self {
+            Backend::Card(c) => c.advance_idle_to(t) || c.simulated_time() >= t,
+            Backend::Fleet(f) => {
+                f.advance_idle_to(t);
+                f.ingress_time() >= t
+            }
+        }
+    }
+
+    fn submit(&mut self, spec: JobSpec) -> usize {
+        match self {
+            Backend::Card(c) => c.submit(spec),
+            Backend::Fleet(f) => f.submit(spec),
+        }
+    }
+
+    /// Advance to the next completion event somewhere in the backend.
+    fn step(&mut self) -> Result<(), CoordinatorError> {
+        match self {
+            Backend::Card(c) => c.step().map(|_| ()),
+            Backend::Fleet(f) => f.step_once().map(|_| ()),
+        }
+    }
+
+    fn take_result(&mut self, key: usize) -> Option<(JobOutput, JobRecord)> {
+        match self {
+            Backend::Card(c) => c.take_result(key),
+            Backend::Fleet(f) => f.try_take(key),
+        }
+    }
+
+    fn take_failure(&mut self, key: usize) -> Option<CoordinatorError> {
+        match self {
+            Backend::Card(c) => c.take_failure(key).map(|(e, _)| e),
+            Backend::Fleet(f) => f.take_failure(key),
+        }
+    }
+}
+
+/// Drive the offered stream from [`requests`] through the bounded
+/// admission queue into the backend. See [`run_requests`] for the
+/// protocol; this wrapper just materializes the workload.
+pub fn run_open_loop(
+    cfg: &HbmConfig,
+    wl: &WorkloadSpec,
+    policy: &ServingPolicy,
+    cards: usize,
+    tracing: bool,
+) -> ServeReport {
+    let reqs = requests(wl);
+    run_requests(cfg, wl.cache_bytes, &reqs, policy, cards, tracing)
+}
+
+/// The open-loop pump over an explicit request stream (`reqs` must be
+/// id-indexed 0..n with non-decreasing arrivals).
+///
+/// Protocol, repeated until the stream drains:
+/// 1. admit every arrival due by the ingress clock (shed / reject per
+///    policy, with trace events);
+/// 2. expire queued requests whose budget ran out *while waiting* —
+///    typed `DeadlineExceeded`, never dispatched;
+/// 3. dispatch from the queue while the card window has room, handing
+///    each job only its **remaining** budget;
+/// 4. if nothing is in flight, jump the idle backend to the next
+///    arrival; otherwise step to the next completion event and claim
+///    finished or failed requests.
+pub fn run_requests(
+    cfg: &HbmConfig,
+    cache_bytes: u64,
+    reqs: &[Request],
+    policy: &ServingPolicy,
+    cards: usize,
+    tracing: bool,
+) -> ServeReport {
+    let offered = reqs.len();
+    let cards = cards.max(1);
+    let window = policy.front.dispatch_window.max(1) * cards;
+    let mut backend = if cards == 1 {
+        let mut coord = Coordinator::new(cfg.clone())
+            .with_policy(policy.card_policy)
+            .with_cache_bytes(cache_bytes);
+        coord.set_tracing(tracing);
+        Backend::Card(Box::new(coord))
+    } else {
+        Backend::Fleet(Box::new(
+            Fleet::new(cfg.clone(), cards)
+                .with_policy(policy.card_policy)
+                .with_cache_bytes(cache_bytes),
+        ))
+    };
+    let mut queue =
+        AdmissionQueue::new(policy.front.queue_depth, policy.front.shed);
+    let mut tracer = Tracer::disabled();
+    tracer.set_enabled(tracing);
+    let mut served: BTreeMap<usize, u64> = BTreeMap::new();
+
+    let mut disp: Vec<Option<Disposition>> = vec![None; offered];
+    let mut latencies: Vec<(usize, f64)> = Vec::new();
+    let mut outputs: Vec<(usize, JobOutput)> = Vec::new();
+    let mut failures: Vec<(usize, CoordinatorError)> = Vec::new();
+    let (mut shed, mut rejected, mut expired) = (0usize, 0usize, 0usize);
+    // (backend key, request id, dispatch instant, arrival instant)
+    let mut inflight: Vec<(usize, usize, f64, f64)> = Vec::new();
+    let mut next = 0usize;
+
+    loop {
+        let now = backend.now();
+
+        // 1. Admit everything that has arrived by `now`. Open loop: the
+        // workload never waits for capacity — the queue sheds instead.
+        while next < reqs.len() && reqs[next].arrival <= now {
+            let req = &reqs[next];
+            let queued = QueuedRequest {
+                id: req.id,
+                client: req.client,
+                arrival: req.arrival,
+                deadline: req.deadline,
+                spec: req.spec.clone(),
+            };
+            match queue.offer(queued, now) {
+                Offer::Admitted => {
+                    tracer.record(|| Event::Enqueued {
+                        t: now,
+                        request: req.id,
+                        client: req.client,
+                        depth: queue.depth(),
+                    });
+                    tracer.record(|| Event::QueueDepth {
+                        t: now,
+                        depth: queue.depth(),
+                    });
+                }
+                Offer::AdmittedAfterShed { victim, reason } => {
+                    disp[victim.id] = Some(Disposition::Shed);
+                    shed += 1;
+                    tracer.record(|| Event::Shed {
+                        t: now,
+                        request: victim.id,
+                        client: victim.client,
+                        reason,
+                    });
+                    tracer.record(|| Event::Enqueued {
+                        t: now,
+                        request: req.id,
+                        client: req.client,
+                        depth: queue.depth(),
+                    });
+                    tracer.record(|| Event::QueueDepth {
+                        t: now,
+                        depth: queue.depth(),
+                    });
+                }
+                Offer::Rejected { reason } => {
+                    disp[req.id] = Some(Disposition::Rejected);
+                    rejected += 1;
+                    tracer.record(|| Event::Rejected {
+                        t: now,
+                        request: req.id,
+                        client: req.client,
+                        reason,
+                    });
+                }
+            }
+            next += 1;
+        }
+
+        // 2. Queue-wait counts against the budget: anything overdue
+        // fails *here*, typed, without ever reaching the card.
+        if policy.front.enforce_deadlines {
+            for victim in queue.expire(now) {
+                disp[victim.id] = Some(Disposition::Expired);
+                expired += 1;
+                failures.push((
+                    victim.id,
+                    CoordinatorError::DeadlineExceeded { job: victim.id },
+                ));
+                tracer.record(|| Event::Shed {
+                    t: now,
+                    request: victim.id,
+                    client: victim.client,
+                    reason: "deadline-expired",
+                });
+                tracer.record(|| Event::QueueDepth {
+                    t: now,
+                    depth: queue.depth(),
+                });
+            }
+        }
+
+        // 3. Dispatch while the window has room. Each job carries only
+        // its remaining budget — the card's own deadline machinery then
+        // continues the same absolute expiry instant.
+        while inflight.len() < window {
+            let Some(entry) = queue.pop_next(policy.front.order, &mut served)
+            else {
+                break;
+            };
+            let (id, client, arrival) = (entry.id, entry.client, entry.arrival);
+            let mut spec = entry.spec;
+            if policy.front.enforce_deadlines {
+                if let Some(d) = entry.deadline {
+                    let remaining = d - now;
+                    if remaining <= 0.0 {
+                        disp[id] = Some(Disposition::Expired);
+                        expired += 1;
+                        failures.push((
+                            id,
+                            CoordinatorError::DeadlineExceeded { job: id },
+                        ));
+                        tracer.record(|| Event::Shed {
+                            t: now,
+                            request: id,
+                            client,
+                            reason: "deadline-expired",
+                        });
+                        tracer.record(|| Event::QueueDepth {
+                            t: now,
+                            depth: queue.depth(),
+                        });
+                        continue;
+                    }
+                    spec = spec.with_deadline(Some(remaining));
+                }
+            }
+            let key = backend.submit(spec);
+            inflight.push((key, id, now, arrival));
+            tracer
+                .record(|| Event::QueueDepth { t: now, depth: queue.depth() });
+        }
+
+        if next >= reqs.len() && queue.is_empty() && inflight.is_empty() {
+            break;
+        }
+
+        // 4. Idle with future arrivals pending: jump straight to the
+        // next arrival instead of stepping an empty card.
+        if inflight.is_empty() {
+            // After the dispatch loop an empty in-flight set implies an
+            // empty queue, so arrivals must remain.
+            let t = reqs[next].arrival;
+            let advanced = backend.advance_idle_to(t);
+            assert!(
+                advanced,
+                "idle serving backend refused to advance to the next arrival"
+            );
+            continue;
+        }
+
+        if let Err(e) = backend.step() {
+            panic!("serving backend cannot make progress: {e}");
+        }
+
+        let mut i = 0;
+        while i < inflight.len() {
+            let (key, id, dispatch, arrival) = inflight[i];
+            if let Some((out, record)) = backend.take_result(key) {
+                disp[id] = Some(Disposition::Completed);
+                latencies.push((id, (dispatch - arrival) + record.latency()));
+                outputs.push((id, out));
+                inflight.swap_remove(i);
+            } else if let Some(err) = backend.take_failure(key) {
+                match err {
+                    CoordinatorError::DeadlineExceeded { .. } => {
+                        disp[id] = Some(Disposition::Expired);
+                        expired += 1;
+                        failures.push((
+                            id,
+                            CoordinatorError::DeadlineExceeded { job: id },
+                        ));
+                    }
+                    other => {
+                        panic!("request {id} failed on the card: {other}")
+                    }
+                }
+                inflight.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    let makespan = backend.now();
+    let (events, stats) = match backend {
+        Backend::Card(mut coord) => {
+            let mut events = tracer.take();
+            events.extend(coord.take_trace());
+            events.sort_by(|a, b| {
+                a.emit_time()
+                    .partial_cmp(&b.emit_time())
+                    .unwrap_or(Ordering::Equal)
+            });
+            (events, Some(coord.into_stats()))
+        }
+        Backend::Fleet(_) => (tracer.take(), None),
+    };
+
+    let dispositions: Vec<Disposition> = disp
+        .into_iter()
+        .enumerate()
+        .map(|(id, d)| {
+            let Some(d) = d else {
+                panic!("request {id} has no disposition: accounting hole");
+            };
+            d
+        })
+        .collect();
+
+    ServeReport {
+        policy: policy.name,
+        offered,
+        dispositions,
+        latencies,
+        outputs,
+        failures,
+        shed,
+        rejected,
+        expired,
+        max_queue_depth: queue.max_depth(),
+        queue_bound: queue.bound(),
+        makespan,
+        events,
+        stats,
+    }
+}
+
+/// Replay the *accepted* subset closed-loop on a fresh card and compare
+/// bit-for-bit against the open-loop outputs. Returns `(wrong, lost)`:
+/// `wrong` counts completed requests whose replay output differs,
+/// `lost` counts completed requests the replay never produced. Both
+/// must be zero — admission control may drop work, never corrupt it.
+pub fn verify_replay(
+    cfg: &HbmConfig,
+    wl: &WorkloadSpec,
+    policy: &ServingPolicy,
+    report: &ServeReport,
+) -> (usize, usize) {
+    let reqs = requests(wl);
+    verify_replay_requests(cfg, wl.cache_bytes, &reqs, policy, report)
+}
+
+/// [`verify_replay`] over an explicit request stream (for callers that
+/// built their own [`Request`]s).
+pub fn verify_replay_requests(
+    cfg: &HbmConfig,
+    cache_bytes: u64,
+    reqs: &[Request],
+    policy: &ServingPolicy,
+    report: &ServeReport,
+) -> (usize, usize) {
+    let mut completed: Vec<usize> =
+        report.outputs.iter().map(|&(id, _)| id).collect();
+    completed.sort_unstable();
+    let mut coord = Coordinator::new(cfg.clone())
+        .with_policy(policy.card_policy)
+        .with_cache_bytes(cache_bytes);
+    let mut ticket: BTreeMap<usize, usize> = BTreeMap::new();
+    for &rid in &completed {
+        // Replay without deadlines: the check is about output bits, not
+        // timing, and the accepted subset must complete.
+        let job = coord.submit(reqs[rid].spec.clone());
+        ticket.insert(job, rid);
+    }
+    let replayed = coord.run();
+    let by_request: BTreeMap<usize, &JobOutput> =
+        report.outputs.iter().map(|(id, out)| (*id, out)).collect();
+    let mut wrong = 0usize;
+    let mut matched = 0usize;
+    for (job, out) in &replayed {
+        let Some(&rid) = ticket.get(job) else { continue };
+        match by_request.get(&rid) {
+            Some(open) if outputs_identical(open, out) => matched += 1,
+            Some(_) => wrong += 1,
+            None => {}
+        }
+    }
+    let lost = completed.len() - matched - wrong;
+    (wrong, lost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::JobKind;
+    use crate::hbm::{FabricClock, HbmConfig};
+    use crate::trace::validate;
+
+    fn cfg() -> HbmConfig {
+        HbmConfig::at_clock(FabricClock::Mhz200)
+    }
+
+    fn wl(clients: usize, queries: usize, rate: f64) -> WorkloadSpec {
+        WorkloadSpec {
+            clients,
+            queries,
+            seed: 0xC0FFEE,
+            rows: 4_000,
+            cache_bytes: crate::coordinator::DEFAULT_CACHE_BYTES,
+            arrival_rate: rate,
+            arrivals: ArrivalProcess::Poisson,
+            deadline: None,
+            skewed: false,
+        }
+    }
+
+    fn selection_request(
+        id: usize,
+        client: usize,
+        arrival: f64,
+        deadline: Option<f64>,
+    ) -> Request {
+        let data: Vec<u32> = (0..4_000u32).collect();
+        Request {
+            id,
+            client,
+            arrival,
+            deadline,
+            spec: JobSpec::new(JobKind::Selection {
+                data: data.into(),
+                lo: 10,
+                hi: 1_000,
+            })
+            .with_client(client),
+        }
+    }
+
+    /// A single-request serving policy with a window of one, so exactly
+    /// one job occupies the card at a time.
+    fn narrow_slo_policy(queue_depth: usize) -> ServingPolicy {
+        ServingPolicy {
+            name: "slo",
+            card_policy: Policy::Slo,
+            front: FrontEndConfig {
+                queue_depth,
+                shed: ShedPolicy::reject(),
+                order: DispatchOrder::EdfFair,
+                enforce_deadlines: true,
+                dispatch_window: 1,
+            },
+        }
+    }
+
+    #[test]
+    fn arrival_times_are_seeded_monotone_and_rate_scaled() {
+        let spec = wl(2, 64, 1_000.0);
+        let a = arrival_times(&spec);
+        let b = arrival_times(&spec);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // Mean gap should be within 3x of 1/rate on 64 samples.
+        let mean = a[a.len() - 1] / a.len() as f64;
+        assert!(mean > 1e-3 / 3.0 && mean < 3.0e-3, "mean gap {mean}");
+    }
+
+    #[test]
+    fn burst_arrivals_cluster_but_keep_the_count() {
+        let mut spec = wl(2, 40, 1_000.0);
+        spec.arrivals = ArrivalProcess::Burst { size: 8 };
+        let a = arrival_times(&spec);
+        assert_eq!(a.len(), 40);
+        // Bursts land at identical instants: far fewer distinct epochs
+        // than arrivals.
+        let mut distinct = 1;
+        for w in a.windows(2) {
+            if w[1] > w[0] {
+                distinct += 1;
+            }
+        }
+        assert!(distinct <= 40 / 8 + 1, "expected clustering, got {distinct}");
+    }
+
+    #[test]
+    fn overload_partitions_the_offered_load_and_respects_the_bound() {
+        // Aggressive rate into a tiny queue with pure backpressure:
+        // rejections are guaranteed, and every request must land in
+        // exactly one bucket.
+        let spec = wl(3, 48, 200_000.0);
+        let policies = serving_policies(4, spec.clients);
+        let Some(fifo) = policies.iter().find(|p| p.name == "fifo") else {
+            panic!("fifo serving policy missing");
+        };
+        let report = run_open_loop(&cfg(), &spec, fifo, 1, false);
+        assert_eq!(report.offered, 48);
+        assert!(report.accounted(), "offered load not partitioned");
+        assert!(report.rejected > 0, "overload never backpressured");
+        assert!(report.max_queue_depth <= report.queue_bound);
+        assert_eq!(report.dispositions.len(), 48);
+        let (wrong, lost) =
+            verify_replay(&cfg(), &spec, fifo, &report);
+        assert_eq!((wrong, lost), (0, 0));
+    }
+
+    #[test]
+    fn queue_expiry_is_typed_and_never_dispatched() {
+        // Six requests land at t=0 with a window of one. Measure the
+        // no-deadline baseline first to size a budget that outlives the
+        // first dispatch but dies long before the card frees up.
+        let reqs: Vec<Request> =
+            (0..6).map(|i| selection_request(i, 0, 0.0, None)).collect();
+        let policy = narrow_slo_policy(8);
+        let baseline = run_requests(
+            &cfg(),
+            crate::coordinator::DEFAULT_CACHE_BYTES,
+            &reqs,
+            &policy,
+            1,
+            false,
+        );
+        assert_eq!(baseline.completed(), 6);
+        let Some(&(_, first)) = baseline.latencies.first() else {
+            panic!("baseline produced no latencies");
+        };
+        // Budget: half of one service time. The first request dispatches
+        // immediately (full budget intact) and runs to completion —
+        // expiry only fires while waiting — while the other five burn
+        // out in the admission queue.
+        let budget = first / 2.0;
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| selection_request(i, 0, 0.0, Some(budget)))
+            .collect();
+        let report = run_requests(
+            &cfg(),
+            crate::coordinator::DEFAULT_CACHE_BYTES,
+            &reqs,
+            &policy,
+            1,
+            true,
+        );
+        assert_eq!(report.completed(), 1, "only the first request completes");
+        assert_eq!(report.expired, 5);
+        assert!(report.accounted());
+        // Every expiry is typed.
+        assert_eq!(report.failures.len(), 5);
+        for (id, err) in &report.failures {
+            assert!(
+                matches!(err, CoordinatorError::DeadlineExceeded { job } if job == id),
+                "expiry for request {id} is not typed: {err}"
+            );
+        }
+        // "Never dispatched" is witnessed by the card's own trace: one
+        // submission, ever.
+        let submitted = report
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::Submitted { .. }))
+            .count();
+        assert_eq!(submitted, 1, "an expired request reached the card");
+    }
+
+    #[test]
+    fn merged_trace_validates_and_accounts_front_end_events() {
+        // A generous budget: deadline machinery is armed (the slo
+        // policy enforces), but nothing actually expires, so every
+        // submitted job completes and span accounting stays exact.
+        let spec = WorkloadSpec {
+            deadline: Some(10.0),
+            ..wl(3, 32, 100_000.0)
+        };
+        let policies = serving_policies(4, spec.clients);
+        let Some(slo) = policies.iter().find(|p| p.name == "slo") else {
+            panic!("slo serving policy missing");
+        };
+        let report = run_open_loop(&cfg(), &spec, slo, 1, true);
+        assert!(report.accounted());
+        let Some(stats) = report.stats.as_ref() else {
+            panic!("single-card run must carry stats");
+        };
+        // The card validator must accept the merged stream: front-end
+        // events ride along without disturbing span accounting.
+        let validation = validate(&report.events, stats.view());
+        assert!(
+            validation.errors.is_empty(),
+            "merged trace failed validation: {:?}",
+            validation.errors
+        );
+        let enqueued = report
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::Enqueued { .. }))
+            .count();
+        assert!(enqueued > 0, "no admission events recorded");
+        // Timestamps in the merged stream are non-decreasing.
+        assert!(report
+            .events
+            .windows(2)
+            .all(|w| w[0].emit_time() <= w[1].emit_time()));
+    }
+
+    #[test]
+    fn fleet_backend_partitions_and_replays_bit_identically() {
+        let spec = wl(4, 40, 150_000.0);
+        let policies = serving_policies(6, spec.clients);
+        let Some(fair) = policies.iter().find(|p| p.name == "fair-share")
+        else {
+            panic!("fair-share serving policy missing");
+        };
+        let report = run_open_loop(&cfg(), &spec, fair, 2, false);
+        assert!(report.accounted());
+        assert!(report.stats.is_none());
+        let (wrong, lost) = verify_replay(&cfg(), &spec, fair, &report);
+        assert_eq!((wrong, lost), (0, 0));
+    }
+
+    #[test]
+    fn same_seed_runs_are_bit_identical() {
+        let spec = wl(3, 36, 120_000.0);
+        let policies = serving_policies(6, spec.clients);
+        let Some(slo) = policies.iter().find(|p| p.name == "slo") else {
+            panic!("slo serving policy missing");
+        };
+        let mut spec = spec;
+        spec.deadline = Some(3e-4);
+        let a = run_open_loop(&cfg(), &spec, slo, 1, false);
+        let b = run_open_loop(&cfg(), &spec, slo, 1, false);
+        assert_eq!(a.dispositions, b.dispositions);
+        assert_eq!(a.latencies.len(), b.latencies.len());
+        for (x, y) in a.latencies.iter().zip(&b.latencies) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    }
+}

@@ -1,0 +1,65 @@
+//! L3.75 serving front-end: open-loop admission control over the card.
+//!
+//! Everything below this layer is **closed-loop** — `hbmctl serve`'s
+//! simulated clients wait for their previous query before issuing the
+//! next, so offered load can never exceed capacity and overload is
+//! unobservable. Real serving is open-loop: clients fire on their own
+//! schedule, and when demand outruns the card something must give.
+//! This module decides *what* gives, explicitly:
+//!
+//! * [`frontend::WorkloadSpec`] — a declarative open-loop workload:
+//!   client count, seeded Poisson or bursty arrivals on the simulated
+//!   card clock ([`frontend::ArrivalProcess`]), the serve layer's mixed
+//!   query payloads (or the skewed tenant mix), and a per-request
+//!   latency budget measured **from arrival**;
+//! * [`queue::AdmissionQueue`] — a bounded queue in front of the
+//!   [`crate::coordinator::Coordinator`] (or the [`crate::fleet`] under
+//!   `--cards N`). Arrivals beyond the bound are never buffered: they
+//!   are refused as typed rejections or admitted by shedding a queued
+//!   victim under a [`queue::ShedPolicy`] (drop-oldest, drop-expired,
+//!   per-tenant quota). Depth provably never exceeds the bound;
+//! * deadline accounting that starts at arrival: a request that waits
+//!   too long in the queue expires with a typed
+//!   [`crate::coordinator::CoordinatorError::DeadlineExceeded`]
+//!   *without ever dispatching*, and one that does dispatch carries
+//!   only its remaining budget onto the card;
+//! * [`frontend::serving_policies`] — the serving roster: the three
+//!   closed-loop card policies behind SLO-oblivious front-ends, plus
+//!   the SLO-aware configuration (earliest-deadline-first dispatch,
+//!   fair per-tenant interleave, drop-expired shedding, deadlines
+//!   enforced) built on [`crate::coordinator::Policy::Slo`];
+//! * [`sweep`] — the `hbmctl sweep` ladder: client counts 1..N per
+//!   policy, aggregate rate calibrated to 2× measured capacity at the
+//!   top rung, each point replay-verified (accepted results
+//!   bit-identical to a closed-loop replay) and every offered request
+//!   accounted completed/shed/rejected/expired, consolidated into
+//!   `BENCH_sweep.json` with a jq-friendly `saturated` block.
+//!
+//! Every run is deterministic in its spec: same seed, same arrivals,
+//! same sheds, same bits. Front-end decisions are traced as
+//! [`crate::trace::Event`] admission events (`Enqueued` / `Shed` /
+//! `Rejected` / `QueueDepth`) that merge with the card's span stream
+//! and render on a dedicated admission track in the Chrome exporter.
+
+// Serving-layer invariant, same as the scheduler's: no unwrap/expect in
+// non-test code (clippy.toml) — overload must degrade into typed
+// rejections, never aborts.
+#![deny(clippy::disallowed_methods)]
+
+pub mod frontend;
+pub mod queue;
+pub mod sweep;
+
+pub use frontend::{
+    arrival_times, requests, run_open_loop, run_requests, serving_policies,
+    verify_replay, verify_replay_requests, ArrivalProcess, Disposition,
+    FrontEndConfig, Request, ServeReport, ServingPolicy, WorkloadSpec,
+};
+pub use queue::{
+    AdmissionQueue, DispatchOrder, Offer, OverflowAction, QueuedRequest,
+    ShedPolicy,
+};
+pub use sweep::{
+    ladder, point_json, probe_capacity, render_sweep, run_sweep, sweep_json,
+    SweepPoint, SweepReport, SweepSpec, OVERLOAD_FACTOR,
+};

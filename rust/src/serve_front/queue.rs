@@ -1,0 +1,380 @@
+//! The bounded admission queue: explicit backpressure and load shedding.
+//!
+//! Every arrival the open-loop front-end accepts lives here until the
+//! card window has room. The queue is **bounded by construction** — an
+//! arrival that finds it full is either refused (a typed rejection the
+//! client sees immediately) or admitted by shedding a queued victim,
+//! per [`ShedPolicy`]. Depth can never exceed the bound, so overload
+//! degrades into explicit sheds and rejections instead of unbounded
+//! buffering and silent latency growth.
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use crate::coordinator::JobSpec;
+
+/// What the queue does when an arrival finds it at its bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowAction {
+    /// Refuse the arrival with a typed rejection — backpressure the
+    /// client sees immediately instead of queueing into a latency it
+    /// can never meet.
+    Reject,
+    /// Shed the oldest queued request to admit the arrival (classic
+    /// drop-head: under sustained overload the freshest work, with the
+    /// most budget left, is the work worth keeping).
+    DropOldest,
+    /// Shed a queued request whose deadline has already passed — it
+    /// could only ever complete late. If nothing queued has expired,
+    /// the arrival is refused instead.
+    DropExpired,
+}
+
+/// Composable shed policy: the overflow action plus an optional
+/// per-tenant occupancy quota checked on *every* arrival, so one tenant
+/// bursting cannot monopolize the bounded queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedPolicy {
+    pub on_full: OverflowAction,
+    /// Max queued requests per tenant (`None` = unlimited). An arrival
+    /// over quota is refused even when the queue has room.
+    pub tenant_quota: Option<usize>,
+}
+
+impl ShedPolicy {
+    /// Pure backpressure: no quota, refuse when full.
+    pub fn reject() -> Self {
+        Self { on_full: OverflowAction::Reject, tenant_quota: None }
+    }
+}
+
+/// Which queued request dispatches next when the card window has room.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchOrder {
+    /// Strict arrival order (FIFO).
+    Arrival,
+    /// Earliest-deadline-first, fair across tenants: among the tenants
+    /// with queued work, the least-served tenant goes first, and within
+    /// a tenant the most urgent deadline. Ties break by arrival, then
+    /// by request id, so the order is total and deterministic.
+    EdfFair,
+}
+
+/// One admitted request waiting for dispatch.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    /// Offered-load index: stable across the run and used as the trace
+    /// id for front-end events.
+    pub id: usize,
+    pub client: usize,
+    /// Ingress-clock arrival instant.
+    pub arrival: f64,
+    /// Absolute expiry instant (`arrival + budget`), if deadlined. The
+    /// budget starts at *arrival* — time spent queued counts against
+    /// it, which is the whole point of front-end expiry.
+    pub deadline: Option<f64>,
+    pub spec: JobSpec,
+}
+
+/// Outcome of offering one arrival to the queue.
+#[derive(Debug)]
+pub enum Offer {
+    /// Admitted; the queue had room (and the tenant was under quota).
+    Admitted,
+    /// Admitted after shedding `victim` to make room.
+    AdmittedAfterShed { victim: QueuedRequest, reason: &'static str },
+    /// Refused; the queue is unchanged and the arrival was never held.
+    Rejected { reason: &'static str },
+}
+
+/// The bounded queue itself. Tracks the high-water depth so reports can
+/// prove the bound was never exceeded.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    bound: usize,
+    policy: ShedPolicy,
+    entries: VecDeque<QueuedRequest>,
+    max_depth: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(bound: usize, policy: ShedPolicy) -> Self {
+        assert!(bound >= 1, "admission queue bound must be >= 1");
+        Self { bound, policy, entries: VecDeque::new(), max_depth: 0 }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn bound(&self) -> usize {
+        self.bound
+    }
+
+    /// High-water occupancy over the queue's lifetime.
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Offer one arrival at ingress instant `now`. Never grows the
+    /// queue past its bound.
+    pub fn offer(&mut self, req: QueuedRequest, now: f64) -> Offer {
+        if let Some(quota) = self.policy.tenant_quota {
+            let held =
+                self.entries.iter().filter(|e| e.client == req.client).count();
+            if held >= quota {
+                return Offer::Rejected { reason: "tenant-quota" };
+            }
+        }
+        if self.entries.len() < self.bound {
+            self.entries.push_back(req);
+            self.max_depth = self.max_depth.max(self.entries.len());
+            return Offer::Admitted;
+        }
+        match self.policy.on_full {
+            OverflowAction::Reject => Offer::Rejected { reason: "queue-full" },
+            OverflowAction::DropOldest => {
+                let Some(victim) = self.entries.pop_front() else {
+                    // Unreachable: bound >= 1 and the branch above
+                    // requires len >= bound.
+                    return Offer::Rejected { reason: "queue-full" };
+                };
+                self.entries.push_back(req);
+                Offer::AdmittedAfterShed { victim, reason: "drop-oldest" }
+            }
+            OverflowAction::DropExpired => {
+                let idx = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| matches!(e.deadline, Some(d) if d <= now))
+                    .min_by(|(_, a), (_, b)| cmp_deadline(a, b))
+                    .map(|(i, _)| i);
+                match idx.and_then(|i| self.entries.remove(i)) {
+                    Some(victim) => {
+                        self.entries.push_back(req);
+                        Offer::AdmittedAfterShed {
+                            victim,
+                            reason: "drop-expired",
+                        }
+                    }
+                    None => Offer::Rejected { reason: "queue-full" },
+                }
+            }
+        }
+    }
+
+    /// Remove and return every queued request whose deadline has passed
+    /// by `now` — the front-end fails these as typed deadline errors
+    /// without ever dispatching them.
+    pub fn expire(&mut self, now: f64) -> Vec<QueuedRequest> {
+        let mut expired = Vec::new();
+        let mut i = 0;
+        while i < self.entries.len() {
+            let hit = matches!(self.entries[i].deadline, Some(d) if d <= now);
+            if hit {
+                if let Some(e) = self.entries.remove(i) {
+                    expired.push(e);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        expired
+    }
+
+    /// Pop the next request to dispatch under `order`. `served` is the
+    /// per-tenant dispatch tally the EDF-fair order consults (and which
+    /// this call updates), persisting fairness across pops.
+    pub fn pop_next(
+        &mut self,
+        order: DispatchOrder,
+        served: &mut BTreeMap<usize, u64>,
+    ) -> Option<QueuedRequest> {
+        let idx = match order {
+            DispatchOrder::Arrival => {
+                if self.entries.is_empty() {
+                    return None;
+                }
+                0
+            }
+            DispatchOrder::EdfFair => {
+                let mut best: Option<(usize, (u64, f64, f64, usize))> = None;
+                for (i, e) in self.entries.iter().enumerate() {
+                    let tally = served.get(&e.client).copied().unwrap_or(0);
+                    let key = (
+                        tally,
+                        e.deadline.unwrap_or(f64::INFINITY),
+                        e.arrival,
+                        e.id,
+                    );
+                    let better = match &best {
+                        None => true,
+                        Some((_, bk)) => key < *bk,
+                    };
+                    if better {
+                        best = Some((i, key));
+                    }
+                }
+                best?.0
+            }
+        };
+        let req = self.entries.remove(idx)?;
+        *served.entry(req.client).or_insert(0) += 1;
+        Some(req)
+    }
+}
+
+/// Order two queued requests by deadline (`None` = no deadline = last),
+/// breaking ties by id for determinism.
+fn cmp_deadline(a: &QueuedRequest, b: &QueuedRequest) -> Ordering {
+    let da = a.deadline.unwrap_or(f64::INFINITY);
+    let db = b.deadline.unwrap_or(f64::INFINITY);
+    da.partial_cmp(&db).unwrap_or(Ordering::Equal).then(a.id.cmp(&b.id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{JobKind, JobSpec};
+
+    fn req(id: usize, client: usize, arrival: f64, dl: Option<f64>) -> QueuedRequest {
+        let data: Vec<u32> = vec![1, 2, 3, 4];
+        QueuedRequest {
+            id,
+            client,
+            arrival,
+            deadline: dl,
+            spec: JobSpec::new(JobKind::Selection {
+                data: data.into(),
+                lo: 0,
+                hi: 10,
+            }),
+        }
+    }
+
+    #[test]
+    fn bound_is_never_exceeded_and_reject_backpressures() {
+        let mut q = AdmissionQueue::new(2, ShedPolicy::reject());
+        assert!(matches!(q.offer(req(0, 0, 0.0, None), 0.0), Offer::Admitted));
+        assert!(matches!(q.offer(req(1, 0, 0.1, None), 0.1), Offer::Admitted));
+        match q.offer(req(2, 0, 0.2, None), 0.2) {
+            Offer::Rejected { reason } => assert_eq!(reason, "queue-full"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.max_depth(), 2);
+    }
+
+    #[test]
+    fn drop_oldest_sheds_the_head_to_admit_the_arrival() {
+        let policy = ShedPolicy {
+            on_full: OverflowAction::DropOldest,
+            tenant_quota: None,
+        };
+        let mut q = AdmissionQueue::new(2, policy);
+        q.offer(req(0, 0, 0.0, None), 0.0);
+        q.offer(req(1, 0, 0.1, None), 0.1);
+        match q.offer(req(2, 0, 0.2, None), 0.2) {
+            Offer::AdmittedAfterShed { victim, reason } => {
+                assert_eq!(victim.id, 0);
+                assert_eq!(reason, "drop-oldest");
+            }
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn drop_expired_only_sheds_requests_past_their_deadline() {
+        let policy = ShedPolicy {
+            on_full: OverflowAction::DropExpired,
+            tenant_quota: None,
+        };
+        let mut q = AdmissionQueue::new(2, policy);
+        q.offer(req(0, 0, 0.0, Some(5.0)), 0.0);
+        q.offer(req(1, 0, 0.1, Some(1.0)), 0.1);
+        // Nothing expired yet at t=0.5: the arrival is refused.
+        assert!(matches!(
+            q.offer(req(2, 0, 0.5, Some(9.0)), 0.5),
+            Offer::Rejected { reason: "queue-full" }
+        ));
+        // At t=2.0 request 1 (deadline 1.0) has expired — it is the
+        // victim even though request 0 is older.
+        match q.offer(req(3, 0, 2.0, Some(9.0)), 2.0) {
+            Offer::AdmittedAfterShed { victim, reason } => {
+                assert_eq!(victim.id, 1);
+                assert_eq!(reason, "drop-expired");
+            }
+            other => panic!("expected shed of the expired entry, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tenant_quota_rejects_over_quota_even_with_room() {
+        let policy = ShedPolicy {
+            on_full: OverflowAction::Reject,
+            tenant_quota: Some(1),
+        };
+        let mut q = AdmissionQueue::new(8, policy);
+        assert!(matches!(q.offer(req(0, 7, 0.0, None), 0.0), Offer::Admitted));
+        assert!(matches!(
+            q.offer(req(1, 7, 0.1, None), 0.1),
+            Offer::Rejected { reason: "tenant-quota" }
+        ));
+        // A different tenant still gets in.
+        assert!(matches!(q.offer(req(2, 3, 0.2, None), 0.2), Offer::Admitted));
+    }
+
+    #[test]
+    fn expire_removes_exactly_the_overdue_entries() {
+        let mut q = AdmissionQueue::new(4, ShedPolicy::reject());
+        q.offer(req(0, 0, 0.0, Some(1.0)), 0.0);
+        q.offer(req(1, 0, 0.0, None), 0.0);
+        q.offer(req(2, 0, 0.0, Some(3.0)), 0.0);
+        let expired = q.expire(2.0);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, 0);
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn edf_fair_interleaves_tenants_and_honors_deadlines_within_one() {
+        let mut q = AdmissionQueue::new(8, ShedPolicy::reject());
+        // Tenant 0 holds two requests, the later-arriving one more
+        // urgent; tenant 1 holds one lax request.
+        q.offer(req(0, 0, 0.0, Some(5.0)), 0.0);
+        q.offer(req(1, 0, 0.1, Some(1.0)), 0.1);
+        q.offer(req(2, 1, 0.2, Some(9.0)), 0.2);
+        let mut served = BTreeMap::new();
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            q.pop_next(DispatchOrder::EdfFair, &mut served).map(|r| r.id)
+        })
+        .collect();
+        // Most urgent first (1), then tenant 1's only request before
+        // tenant 0's second — least-served tenant goes first.
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn arrival_order_is_fifo() {
+        let mut q = AdmissionQueue::new(4, ShedPolicy::reject());
+        q.offer(req(0, 0, 0.0, None), 0.0);
+        q.offer(req(1, 1, 0.1, None), 0.1);
+        let mut served = BTreeMap::new();
+        assert_eq!(
+            q.pop_next(DispatchOrder::Arrival, &mut served).map(|r| r.id),
+            Some(0)
+        );
+        assert_eq!(
+            q.pop_next(DispatchOrder::Arrival, &mut served).map(|r| r.id),
+            Some(1)
+        );
+        assert!(q.pop_next(DispatchOrder::Arrival, &mut served).is_none());
+    }
+}

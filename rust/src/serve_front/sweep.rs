@@ -1,0 +1,417 @@
+//! `hbmctl sweep` — the open-loop client ladder: throughput vs tail
+//! latency per serving policy, saturation and all.
+//!
+//! The ladder runs client counts 1, 2, 4, … up to `clients_max`, each
+//! point offering a Poisson stream whose aggregate rate scales with the
+//! client count and tops out at [`OVERLOAD_FACTOR`]× the card's
+//! measured closed-loop capacity — so the low rungs are comfortably
+//! under capacity and the top rung is firmly saturated. Every
+//! (clients, policy) point is one [`run_open_loop`] run plus a
+//! closed-loop replay of its accepted subset ([`verify_replay`]), so
+//! each point carries its own wrong/lost proof. The consolidated
+//! artifact (`BENCH_sweep.json`) ends with a `saturated` block
+//! comparing the SLO-aware policy against FIFO at the top rung — p99
+//! dominance and the goodput ratio — in jq-friendly form.
+
+use crate::coordinator::serve::{mixed_workload, ServeSpec};
+use crate::coordinator::{Coordinator, Policy, DEFAULT_CACHE_BYTES};
+use crate::hbm::HbmConfig;
+
+use super::frontend::{
+    run_open_loop, serving_policies, verify_replay, ArrivalProcess,
+    ServeReport, ServingPolicy, WorkloadSpec,
+};
+
+/// Aggregate offered rate at the top of the ladder, as a multiple of
+/// measured closed-loop capacity: 2× is unambiguous overload without
+/// being a degenerate flood.
+pub const OVERLOAD_FACTOR: f64 = 2.0;
+
+/// Declarative sweep: the ladder's top, how much work per rung, the
+/// queue bound, and the calibration overrides.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Top of the client ladder (the saturated point).
+    pub clients_max: usize,
+    /// Offered requests per client at each rung.
+    pub queries_per_client: usize,
+    /// Admission-queue bound shared by every serving policy.
+    pub queue_depth: usize,
+    /// Aggregate arrival rate at the top rung, requests per simulated
+    /// second. `None` = calibrate to [`OVERLOAD_FACTOR`]× measured
+    /// capacity.
+    pub arrival_rate: Option<f64>,
+    /// Per-request budget in simulated seconds. `None` = half the time
+    /// a full queue takes to drain at capacity — tight enough that a
+    /// saturated queue expires work, loose enough that an unsaturated
+    /// one never does.
+    pub deadline: Option<f64>,
+    pub rows: usize,
+    pub seed: u64,
+    pub cards: usize,
+    pub cache_bytes: u64,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        Self {
+            clients_max: 64,
+            queries_per_client: 6,
+            queue_depth: 32,
+            arrival_rate: None,
+            deadline: None,
+            rows: 12_000,
+            seed: 0xC0FFEE,
+            cards: 1,
+            cache_bytes: DEFAULT_CACHE_BYTES,
+        }
+    }
+}
+
+/// The client ladder: powers of two up to and including `clients_max`.
+pub fn ladder(clients_max: usize) -> Vec<usize> {
+    assert!(clients_max >= 1, "the ladder needs at least one client");
+    let mut rungs = Vec::new();
+    let mut c = 1usize;
+    while c < clients_max {
+        rungs.push(c);
+        c = c.saturating_mul(2);
+    }
+    rungs.push(clients_max);
+    rungs
+}
+
+/// Closed-loop capacity probe: saturate one fair-share card with a
+/// mixed batch and measure completed qps — the reference the overload
+/// factor and the default deadline are calibrated against.
+pub fn probe_capacity(cfg: &HbmConfig, spec: &SweepSpec) -> f64 {
+    let probe = ServeSpec {
+        clients: 4,
+        queries: 48,
+        seed: spec.seed,
+        rows: spec.rows,
+        cache_bytes: spec.cache_bytes,
+    };
+    let jobs = mixed_workload(&probe);
+    let mut coord = Coordinator::new(cfg.clone())
+        .with_policy(Policy::FairShare)
+        .with_cache_bytes(spec.cache_bytes);
+    for job in jobs {
+        coord.submit(job);
+    }
+    let n = coord.run().len();
+    let stats = coord.into_stats();
+    if stats.simulated_time <= 0.0 {
+        1.0
+    } else {
+        n as f64 / stats.simulated_time
+    }
+}
+
+/// One (clients, policy) measurement of the ladder.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub clients: usize,
+    pub policy: &'static str,
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub rejected: usize,
+    pub expired: usize,
+    /// `completed + shed + rejected + expired == offered`.
+    pub accounted: bool,
+    /// Completed requests whose closed-loop replay output differed.
+    pub wrong: usize,
+    /// Completed requests the closed-loop replay never produced.
+    pub lost: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub goodput_qps: f64,
+    /// Aggregate offered rate at this rung, requests per second.
+    pub offered_rate_qps: f64,
+    pub makespan_s: f64,
+    pub max_queue_depth: usize,
+    pub queue_bound: usize,
+}
+
+/// The full ladder with its calibration context.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub clients_max: usize,
+    pub queue_depth: usize,
+    pub cards: usize,
+    pub seed: u64,
+    /// Measured closed-loop capacity (completed qps, all cards).
+    pub capacity_qps: f64,
+    /// Per-client arrival rate applied at every rung.
+    pub rate_per_client: f64,
+    /// The per-request budget every rung ran with.
+    pub deadline_s: f64,
+    pub ladder: Vec<usize>,
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepReport {
+    /// The measurement at (`clients`, `policy`), if the ladder ran it.
+    pub fn point(&self, clients: usize, policy: &str) -> Option<&SweepPoint> {
+        self.points
+            .iter()
+            .find(|p| p.clients == clients && p.policy == policy)
+    }
+}
+
+fn point_from(
+    policy: &ServingPolicy,
+    wl: &WorkloadSpec,
+    report: &ServeReport,
+    wrong: usize,
+    lost: usize,
+) -> SweepPoint {
+    SweepPoint {
+        clients: wl.clients,
+        policy: policy.name,
+        offered: report.offered,
+        completed: report.completed(),
+        shed: report.shed,
+        rejected: report.rejected,
+        expired: report.expired,
+        accounted: report.accounted(),
+        wrong,
+        lost,
+        p50_ms: report.latency_percentile(50.0) * 1e3,
+        p99_ms: report.latency_percentile(99.0) * 1e3,
+        mean_ms: report.mean_latency() * 1e3,
+        goodput_qps: report.goodput_qps(),
+        offered_rate_qps: wl.arrival_rate,
+        makespan_s: report.makespan,
+        max_queue_depth: report.max_queue_depth,
+        queue_bound: report.queue_bound,
+    }
+}
+
+/// Run the whole ladder: every rung × every serving policy, each point
+/// replay-verified. Deterministic in `spec` — same spec, same bits.
+pub fn run_sweep(cfg: &HbmConfig, spec: &SweepSpec) -> SweepReport {
+    let cards = spec.cards.max(1);
+    let capacity = probe_capacity(cfg, spec) * cards as f64;
+    let top = spec.clients_max.max(1);
+    let rate_top = match spec.arrival_rate {
+        Some(rate) => rate,
+        None => OVERLOAD_FACTOR * capacity,
+    };
+    let rate_per_client = rate_top / top as f64;
+    let deadline = match spec.deadline {
+        Some(d) => d,
+        None => 0.5 * spec.queue_depth as f64 / capacity,
+    };
+    let rungs = ladder(top);
+    let mut points = Vec::new();
+    for &clients in &rungs {
+        for policy in serving_policies(spec.queue_depth, clients) {
+            let wl = WorkloadSpec {
+                clients,
+                queries: clients * spec.queries_per_client,
+                seed: spec.seed,
+                rows: spec.rows,
+                cache_bytes: spec.cache_bytes,
+                arrival_rate: rate_per_client * clients as f64,
+                arrivals: ArrivalProcess::Poisson,
+                deadline: Some(deadline),
+                skewed: false,
+            };
+            let report = run_open_loop(cfg, &wl, &policy, cards, false);
+            let (wrong, lost) = verify_replay(cfg, &wl, &policy, &report);
+            points.push(point_from(&policy, &wl, &report, wrong, lost));
+        }
+    }
+    SweepReport {
+        clients_max: top,
+        queue_depth: spec.queue_depth,
+        cards,
+        seed: spec.seed,
+        capacity_qps: capacity,
+        rate_per_client,
+        deadline_s: deadline,
+        ladder: rungs,
+        points,
+    }
+}
+
+/// One point as a JSON object (also the per-point artifact bodies).
+pub fn point_json(p: &SweepPoint) -> String {
+    format!(
+        "{{\"clients\": {}, \"policy\": \"{}\", \"offered\": {}, \
+         \"completed\": {}, \"shed\": {}, \"rejected\": {}, \
+         \"expired\": {}, \"accounted\": {}, \"wrong\": {}, \"lost\": {}, \
+         \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_ms\": {:.6}, \
+         \"goodput_qps\": {:.3}, \"offered_rate_qps\": {:.3}, \
+         \"makespan_s\": {:.9}, \"max_queue_depth\": {}, \
+         \"queue_bound\": {}}}",
+        p.clients,
+        p.policy,
+        p.offered,
+        p.completed,
+        p.shed,
+        p.rejected,
+        p.expired,
+        p.accounted,
+        p.wrong,
+        p.lost,
+        p.p50_ms,
+        p.p99_ms,
+        p.mean_ms,
+        p.goodput_qps,
+        p.offered_rate_qps,
+        p.makespan_s,
+        p.max_queue_depth,
+        p.queue_bound,
+    )
+}
+
+/// The consolidated `BENCH_sweep.json`: calibration, every point, and
+/// the `saturated` comparison block the CI smoke jq-asserts.
+pub fn sweep_json(report: &SweepReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"sweep\",\n");
+    out.push_str(&format!("  \"seed\": {},\n", report.seed));
+    out.push_str(&format!("  \"cards\": {},\n", report.cards));
+    out.push_str(&format!("  \"clients_max\": {},\n", report.clients_max));
+    out.push_str(&format!("  \"queue_depth\": {},\n", report.queue_depth));
+    out.push_str(&format!(
+        "  \"capacity_qps\": {:.3},\n",
+        report.capacity_qps
+    ));
+    out.push_str(&format!(
+        "  \"rate_per_client_qps\": {:.3},\n",
+        report.rate_per_client
+    ));
+    out.push_str(&format!("  \"deadline_ms\": {:.6},\n", report.deadline_s * 1e3));
+    let rungs: Vec<String> =
+        report.ladder.iter().map(|c| c.to_string()).collect();
+    out.push_str(&format!("  \"ladder\": [{}],\n", rungs.join(", ")));
+    out.push_str(
+        "  \"policies\": [\"fifo\", \"fair-share\", \"bandwidth-aware\", \
+         \"slo\"],\n",
+    );
+    out.push_str("  \"points\": [\n");
+    for (i, p) in report.points.iter().enumerate() {
+        let sep = if i + 1 == report.points.len() { "" } else { "," };
+        out.push_str(&format!("    {}{}\n", point_json(p), sep));
+    }
+    out.push_str("  ],\n");
+    out.push_str(&saturated_json(report));
+    out.push_str("}\n");
+    out
+}
+
+/// The top-rung FIFO-vs-SLO comparison as a `"saturated"` JSON block.
+fn saturated_json(report: &SweepReport) -> String {
+    let top = report.clients_max;
+    let (Some(fifo), Some(slo)) =
+        (report.point(top, "fifo"), report.point(top, "slo"))
+    else {
+        return String::from("  \"saturated\": null\n");
+    };
+    let goodput_ratio = if fifo.goodput_qps <= 0.0 {
+        f64::INFINITY
+    } else {
+        slo.goodput_qps / fifo.goodput_qps
+    };
+    format!(
+        "  \"saturated\": {{\n    \"clients\": {},\n    \"fifo\": {},\n    \
+         \"slo\": {},\n    \"slo_p99_le_fifo\": {},\n    \
+         \"goodput_ratio\": {:.4},\n    \"goodput_within_5pct\": {}\n  }}\n",
+        top,
+        point_json(fifo),
+        point_json(slo),
+        slo.p99_ms <= fifo.p99_ms,
+        goodput_ratio,
+        goodput_ratio >= 0.95,
+    )
+}
+
+/// Human-readable ladder table for stdout.
+pub fn render_sweep(report: &SweepReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "open-loop ladder: capacity {:.0} qps, {:.0} qps/client offered, \
+         deadline {:.3} ms, queue bound {}\n",
+        report.capacity_qps,
+        report.rate_per_client,
+        report.deadline_s * 1e3,
+        report.queue_depth
+    ));
+    out.push_str(&format!(
+        "{:>8} {:<16} {:>8} {:>10} {:>6} {:>9} {:>8} {:>10} {:>10} {:>6}\n",
+        "clients",
+        "policy",
+        "offered",
+        "completed",
+        "shed",
+        "rejected",
+        "expired",
+        "p99 ms",
+        "goodput",
+        "depth"
+    ));
+    for p in &report.points {
+        out.push_str(&format!(
+            "{:>8} {:<16} {:>8} {:>10} {:>6} {:>9} {:>8} {:>10.3} {:>10.0} \
+             {:>3}/{:<3}\n",
+            p.clients,
+            p.policy,
+            p.offered,
+            p.completed,
+            p.shed,
+            p.rejected,
+            p.expired,
+            p.p99_ms,
+            p.goodput_qps,
+            p.max_queue_depth,
+            p.queue_bound
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hbm::FabricClock;
+
+    #[test]
+    fn ladder_is_powers_of_two_capped_at_the_top() {
+        assert_eq!(ladder(1), vec![1]);
+        assert_eq!(ladder(2), vec![1, 2]);
+        assert_eq!(ladder(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(ladder(48), vec![1, 2, 4, 8, 16, 32, 48]);
+    }
+
+    #[test]
+    fn tiny_sweep_accounts_verifies_and_serializes() {
+        let cfg = HbmConfig::at_clock(FabricClock::Mhz200);
+        let spec = SweepSpec {
+            clients_max: 2,
+            queries_per_client: 3,
+            queue_depth: 4,
+            rows: 2_000,
+            ..SweepSpec::default()
+        };
+        let report = run_sweep(&cfg, &spec);
+        assert_eq!(report.ladder, vec![1, 2]);
+        assert_eq!(report.points.len(), 2 * 4);
+        for p in &report.points {
+            assert!(p.accounted, "point {}x{} lost requests", p.clients, p.policy);
+            assert_eq!((p.wrong, p.lost), (0, 0));
+            assert!(p.max_queue_depth <= p.queue_bound);
+        }
+        let json = sweep_json(&report);
+        assert!(json.contains("\"bench\": \"sweep\""));
+        assert!(json.contains("\"saturated\""));
+        assert!(json.contains("\"slo_p99_le_fifo\""));
+        let rendered = render_sweep(&report);
+        assert!(rendered.contains("fair-share"));
+    }
+}

@@ -14,6 +14,9 @@
 //! * **pid 3 "jobs"** — one track per job: its Waiting → CopyIn →
 //!   Running → CopyOut lifecycle spans plus admission instants.
 //! * **pid 4 "cache"** — access/evict/pin instants.
+//! * **pid 5 "admission"** — serving front-end instants (enqueue / shed /
+//!   reject) plus the `queue depth` counter track; only emitted when the
+//!   stream carries front-end events (closed-loop traces are unchanged).
 //!
 //! A fleet trace renders one such **track group per card**
 //! ([`fleet_trace_events_json`]): card `c`'s tracks live at pids
@@ -34,6 +37,7 @@ const PID_PORTS: u32 = 1;
 const PID_LINK: u32 = 2;
 const PID_JOBS: u32 = 3;
 const PID_CACHE: u32 = 4;
+const PID_QUEUE: u32 = 5;
 
 /// Pid stride between one card's track group and the next.
 const PID_CARD_STRIDE: u32 = 10;
@@ -96,12 +100,19 @@ fn instant_event(name: &str, cat: &str, pid: u32, tid: u64, t: f64, args: &str) 
 }
 
 fn counter_event(name: &str, pid: u32, t: f64, value: f64) -> String {
+    counter_event_unit(name, pid, t, value, "GB/s")
+}
+
+/// Counter sample with an explicit series unit (the bandwidth tracks use
+/// `GB/s`; the admission track counts requests).
+fn counter_event_unit(name: &str, pid: u32, t: f64, value: f64, unit: &str) -> String {
     format!(
         "{{\"name\":\"{}\",\"ph\":\"C\",\"pid\":{},\"ts\":{:.3},\
-         \"args\":{{\"GB/s\":{:.6}}}}}",
+         \"args\":{{\"{}\":{:.6}}}}}",
         esc(name),
         pid,
         us(t),
+        esc(unit),
         value
     )
 }
@@ -166,8 +177,13 @@ fn join_events(out: &[String]) -> String {
 /// prefix and their own pid block.
 fn render_stream(card: usize, events: &[Event], out: &mut Vec<String>) {
     let base = card as u32 * PID_CARD_STRIDE;
-    let (pid_ports, pid_link, pid_jobs, pid_cache) =
-        (base + PID_PORTS, base + PID_LINK, base + PID_JOBS, base + PID_CACHE);
+    let (pid_ports, pid_link, pid_jobs, pid_cache, pid_queue) = (
+        base + PID_PORTS,
+        base + PID_LINK,
+        base + PID_JOBS,
+        base + PID_CACHE,
+        base + PID_QUEUE,
+    );
     let label = |name: &str| {
         if card == 0 {
             name.to_string()
@@ -180,6 +196,16 @@ fn render_stream(card: usize, events: &[Event], out: &mut Vec<String>) {
     out.push(process_name(pid_jobs, &label("jobs")));
     out.push(process_name(pid_cache, &label("cache")));
     out.push(thread_name(pid_cache, 0, "events"));
+    // The admission track group is created lazily on the first serving
+    // front-end event so closed-loop traces keep their exact shape.
+    let mut queue_named = false;
+    let name_queue = |out: &mut Vec<String>, named: &mut bool| {
+        if !*named {
+            *named = true;
+            out.push(process_name(pid_queue, &label("admission")));
+            out.push(thread_name(pid_queue, 0, "requests"));
+        }
+    };
     // Live member→port bindings (member ids are recycled between jobs).
     let mut member_port: BTreeMap<usize, usize> = BTreeMap::new();
     // Greedy lane packing for concurrent link transfers: lane i is free
@@ -391,6 +417,53 @@ fn render_stream(card: usize, events: &[Event], out: &mut Vec<String>) {
                     &format!("\"job\":{job}"),
                 ));
             }
+            Event::Enqueued { t, request, client, depth } => {
+                name_queue(out, &mut queue_named);
+                out.push(instant_event(
+                    &format!("enqueued request {request}"),
+                    "serving",
+                    pid_queue,
+                    0,
+                    *t,
+                    &format!("\"request\":{request},\"client\":{client},\"depth\":{depth}"),
+                ));
+            }
+            Event::Shed { t, request, client, reason } => {
+                name_queue(out, &mut queue_named);
+                out.push(instant_event(
+                    &format!("shed request {request} ({reason})"),
+                    "serving",
+                    pid_queue,
+                    0,
+                    *t,
+                    &format!(
+                        "\"request\":{request},\"client\":{client},\"reason\":\"{reason}\""
+                    ),
+                ));
+            }
+            Event::Rejected { t, request, client, reason } => {
+                name_queue(out, &mut queue_named);
+                out.push(instant_event(
+                    &format!("rejected request {request} ({reason})"),
+                    "serving",
+                    pid_queue,
+                    0,
+                    *t,
+                    &format!(
+                        "\"request\":{request},\"client\":{client},\"reason\":\"{reason}\""
+                    ),
+                ));
+            }
+            Event::QueueDepth { t, depth } => {
+                name_queue(out, &mut queue_named);
+                out.push(counter_event_unit(
+                    "queue depth",
+                    pid_queue,
+                    *t,
+                    *depth as f64,
+                    "requests",
+                ));
+            }
         }
     }
 }
@@ -500,6 +573,26 @@ mod tests {
         assert!(doc.starts_with("{\n\"displayTimeUnit\""));
         assert!(doc.contains("\"traceEvents\": ["));
         assert!(doc.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn front_end_events_render_on_the_admission_track() {
+        let events = vec![
+            Event::Enqueued { t: 0.0, request: 0, client: 1, depth: 1 },
+            Event::QueueDepth { t: 0.0, depth: 1 },
+            Event::Shed { t: 1.0, request: 2, client: 0, reason: "drop-oldest" },
+            Event::Rejected { t: 2.0, request: 3, client: 1, reason: "overloaded" },
+        ];
+        let json = trace_events_json(&events);
+        assert!(json.contains("\"name\":\"admission\""));
+        assert!(json.contains("enqueued request 0"));
+        assert!(json.contains("shed request 2 (drop-oldest)"));
+        assert!(json.contains("rejected request 3 (overloaded)"));
+        assert!(json.contains("\"name\":\"queue depth\""));
+        assert!(json.contains("\"requests\":1.000000"));
+        // Without front-end events, the admission group is absent.
+        let plain = trace_events_json(&[running(0, 0.0, 1.0, vec![0])]);
+        assert!(!plain.contains("\"name\":\"admission\""));
     }
 
     #[test]

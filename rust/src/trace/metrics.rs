@@ -165,6 +165,12 @@ impl MetricsRegistry {
                 Event::Retry { .. } => reg.inc("retries", 1),
                 Event::Failover { .. } => reg.inc("failovers", 1),
                 Event::Downgraded { .. } => reg.inc("downgrades", 1),
+                Event::Enqueued { .. } => reg.inc("requests_enqueued", 1),
+                Event::Shed { .. } => reg.inc("requests_shed", 1),
+                Event::Rejected { .. } => reg.inc("requests_rejected", 1),
+                Event::QueueDepth { depth, .. } => {
+                    reg.observe("queue_depth", *depth as f64);
+                }
             }
         }
         for (job, end) in finished {

@@ -172,6 +172,21 @@ pub enum Event {
     /// The executor finished this job's stage on the CPU path after the
     /// offload failed terminally.
     Downgraded { t: f64, job: usize },
+    /// A serving request entered the bounded admission queue in front of
+    /// the card (front-end event; `t` is on the ingress clock, which
+    /// tracks the backing card's clock). `depth` is the queue occupancy
+    /// *after* the enqueue.
+    Enqueued { t: f64, request: usize, client: usize, depth: usize },
+    /// An admitted request was shed from the queue before dispatch
+    /// (drop-oldest overflow, over-deadline drop, …). `reason` names the
+    /// shed policy decision.
+    Shed { t: f64, request: usize, client: usize, reason: &'static str },
+    /// An arriving request was refused outright with a typed
+    /// `Overloaded`-style error (queue full, tenant over quota).
+    Rejected { t: f64, request: usize, client: usize, reason: &'static str },
+    /// Admission-queue occupancy sample; emitted at every transition so
+    /// the Chrome trace can render a counter track.
+    QueueDepth { t: f64, depth: usize },
 }
 
 impl Event {
@@ -192,7 +207,11 @@ impl Event {
             | Event::FaultInjected { t, .. }
             | Event::Retry { t, .. }
             | Event::Failover { t, .. }
-            | Event::Downgraded { t, .. } => *t,
+            | Event::Downgraded { t, .. }
+            | Event::Enqueued { t, .. }
+            | Event::Shed { t, .. }
+            | Event::Rejected { t, .. }
+            | Event::QueueDepth { t, .. } => *t,
             Event::Stage(s) => s.start,
             Event::Transfer(s) => s.start,
         }

@@ -229,6 +229,37 @@ mod tests {
     }
 
     #[test]
+    fn sweep_knobs_reject_degenerate_values() {
+        // The open-loop ladder's knobs: a zero client top or queue
+        // bound builds a ladder that can never admit anything, and a
+        // 0 / NaN / inf arrival rate or deadline poisons the arrival
+        // process — all parse, all typed errors.
+        assert!(parse("sweep --clients-max 0")
+            .get_count("clients-max", 64)
+            .is_err());
+        assert!(parse("sweep --queue-depth 0")
+            .get_count("queue-depth", 32)
+            .is_err());
+        for bad in ["0", "-1", "inf", "NaN"] {
+            let a = parse(&format!("sweep --arrival-rate {bad}"));
+            assert!(
+                a.get_positive_f64("arrival-rate", 1.0).is_err(),
+                "--arrival-rate {bad} must be rejected"
+            );
+            let d = parse(&format!("sweep --deadline-ms {bad}"));
+            assert!(
+                d.get_positive_f64("deadline-ms", 1.0).is_err(),
+                "--deadline-ms {bad} must be rejected"
+            );
+        }
+        let ok =
+            parse("sweep --clients-max 16 --queue-depth 8 --arrival-rate 1e5");
+        assert_eq!(ok.get_count("clients-max", 64).unwrap(), 16);
+        assert_eq!(ok.get_count("queue-depth", 32).unwrap(), 8);
+        assert_eq!(ok.get_positive_f64("arrival-rate", 1.0).unwrap(), 1e5);
+    }
+
+    #[test]
     fn bool_forms() {
         let a = parse("x --copy=false --quiet");
         assert!(!a.get_bool("copy", true));

@@ -1,0 +1,116 @@
+//! Serving front-end invariants over randomized open-loop configs.
+//!
+//! Three properties, checked across seeds rather than hand-picked
+//! cases:
+//! 1. **partition** — (completed ∪ shed ∪ rejected ∪ expired) is
+//!    exactly the offered load, per-request and in aggregate, and the
+//!    admission queue never exceeds its bound;
+//! 2. **bit-identity** — the accepted subset replayed closed-loop on a
+//!    fresh card produces bit-identical outputs (admission control may
+//!    drop work, never corrupt it);
+//! 3. **determinism** — the same spec yields the same bits, including
+//!    a full `hbmctl sweep` serialized to JSON.
+
+use hbm_analytics::coordinator::DEFAULT_CACHE_BYTES;
+use hbm_analytics::hbm::{FabricClock, HbmConfig};
+use hbm_analytics::serve_front::{
+    run_open_loop, run_sweep, serving_policies, sweep_json, verify_replay,
+    ArrivalProcess, Disposition, SweepSpec, WorkloadSpec,
+};
+use hbm_analytics::util::rng::Xoshiro256;
+
+fn cfg() -> HbmConfig {
+    HbmConfig::at_clock(FabricClock::Mhz200)
+}
+
+#[test]
+fn offered_load_is_exactly_partitioned_and_replays_bit_identically() {
+    let mut rng = Xoshiro256::new(0x5EED_F00D);
+    for trial in 0..8u64 {
+        let clients = 1 + rng.gen_range_usize(5);
+        let queries = 8 + rng.gen_range_usize(25);
+        let depth = 1 + rng.gen_range_usize(8);
+        // 20k..200k offered qps: spans comfortable to heavily
+        // overloaded against a few-thousand-row mixed workload.
+        let rate = 20_000.0 * (1.0 + rng.next_f64() * 9.0);
+        let deadline = if rng.next_f64() < 0.5 {
+            Some(1e-4 + rng.next_f64() * 1e-2)
+        } else {
+            None
+        };
+        let arrivals = if rng.next_f64() < 0.3 {
+            ArrivalProcess::Burst { size: 4 }
+        } else {
+            ArrivalProcess::Poisson
+        };
+        let wl = WorkloadSpec {
+            clients,
+            queries,
+            seed: 0xC0FFEE ^ (trial << 8),
+            rows: 3_000,
+            cache_bytes: DEFAULT_CACHE_BYTES,
+            arrival_rate: rate,
+            arrivals,
+            deadline,
+            skewed: false,
+        };
+        for policy in serving_policies(depth, clients) {
+            let report = run_open_loop(&cfg(), &wl, &policy, 1, false);
+            assert_eq!(report.offered, queries);
+            assert!(
+                report.accounted(),
+                "trial {trial} policy {}: offered {} != completed {} + \
+                 shed {} + rejected {} + expired {}",
+                policy.name,
+                report.offered,
+                report.completed(),
+                report.shed,
+                report.rejected,
+                report.expired
+            );
+            assert!(
+                report.max_queue_depth <= report.queue_bound,
+                "trial {trial} policy {}: queue depth {} exceeded bound {}",
+                policy.name,
+                report.max_queue_depth,
+                report.queue_bound
+            );
+            // The per-request dispositions agree with the tallies.
+            let count = |want: Disposition| {
+                report.dispositions.iter().filter(|&&d| d == want).count()
+            };
+            assert_eq!(count(Disposition::Completed), report.completed());
+            assert_eq!(count(Disposition::Shed), report.shed);
+            assert_eq!(count(Disposition::Rejected), report.rejected);
+            assert_eq!(count(Disposition::Expired), report.expired);
+            // Every expiry carries a typed failure.
+            assert_eq!(report.failures.len(), report.expired);
+            // Accepted work is bit-identical to its closed-loop replay.
+            let (wrong, lost) = verify_replay(&cfg(), &wl, &policy, &report);
+            assert_eq!(
+                (wrong, lost),
+                (0, 0),
+                "trial {trial} policy {}: replay diverged",
+                policy.name
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_sweeps_are_bit_exact() {
+    let spec = SweepSpec {
+        clients_max: 4,
+        queries_per_client: 3,
+        queue_depth: 4,
+        rows: 2_000,
+        ..SweepSpec::default()
+    };
+    let a = run_sweep(&cfg(), &spec);
+    let b = run_sweep(&cfg(), &spec);
+    assert_eq!(
+        sweep_json(&a),
+        sweep_json(&b),
+        "same-seed sweeps must serialize to identical bytes"
+    );
+}
